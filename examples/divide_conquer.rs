@@ -1,0 +1,162 @@
+//! Divide & conquer on the accelerator (paper §2.4 "farm-with-feedback
+//! (i.e. Divide&Conquer)"): quicksort where partition tasks are offloaded
+//! to the farm and the *feedback* path runs through the offloading
+//! thread — each worker either sorts a small range in place or splits it
+//! and returns the halves, which the caller re-offloads. The caller
+//! tracks in-flight tasks and closes the stream when the recursion tree
+//! is exhausted (the termination protocol §3.1 leaves to the programmer).
+
+use std::sync::Arc;
+
+use fastflow::accel::FarmAccel;
+use fastflow::farm::{FarmConfig, SchedPolicy};
+use fastflow::node::{node_fn};
+use fastflow::util::{fmt_duration, num_cpus, timed, XorShift64};
+
+/// A sortable range of the shared buffer. The buffer is shared mutable
+/// state; correctness follows the paper's Bernstein discipline: ranges in
+/// flight are disjoint by construction of quicksort's recursion.
+#[derive(Clone, Copy, Debug)]
+struct RangeTask {
+    lo: usize,
+    hi: usize, // exclusive
+}
+
+/// Worker result: either "sorted in place" or "split at p".
+#[derive(Clone, Copy, Debug)]
+enum Done {
+    Sorted,
+    Split(usize, RangeTask, RangeTask),
+}
+
+struct SharedBuf(std::cell::UnsafeCell<Vec<u64>>);
+// SAFETY: disjoint ranges (see RangeTask docs); caller reads only after
+// the EOS barrier.
+unsafe impl Sync for SharedBuf {}
+unsafe impl Send for SharedBuf {}
+
+const CUTOFF: usize = 2_048;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2_000_000);
+    let workers: usize = args
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| num_cpus().max(2) - 1);
+
+    let mut rng = XorShift64::new(9);
+    let data: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+
+    // Sequential baseline.
+    let mut seq = data.clone();
+    let (_, t_seq) = timed(|| seq.sort_unstable());
+
+    // Accelerated D&C.
+    let buf = Arc::new(SharedBuf(std::cell::UnsafeCell::new(data)));
+    let b2 = buf.clone();
+    let mut acc: FarmAccel<RangeTask, Done> = FarmAccel::run(
+        FarmConfig::default()
+            .workers(workers)
+            .sched(SchedPolicy::OnDemand),
+        move |_| {
+            let buf = b2.clone();
+            node_fn(move |t: RangeTask| {
+                // SAFETY: ranges in flight are disjoint.
+                let v = unsafe { &mut *buf.0.get() };
+                let slice = &mut v[t.lo..t.hi];
+                if slice.len() <= CUTOFF {
+                    slice.sort_unstable();
+                    Done::Sorted
+                } else {
+                    // Hoare-ish partition around a median-of-3 pivot.
+                    let pivot = median3(slice);
+                    let mid = partition(slice, pivot);
+                    // guard against degenerate splits
+                    let mid = mid.clamp(1, slice.len() - 1);
+                    Done::Split(
+                        t.lo + mid,
+                        RangeTask {
+                            lo: t.lo,
+                            hi: t.lo + mid,
+                        },
+                        RangeTask {
+                            lo: t.lo + mid,
+                            hi: t.hi,
+                        },
+                    )
+                }
+            })
+        },
+    );
+
+    let (_, t_par) = timed(|| {
+        // Feedback loop through the offloading thread. Deadlock-freedom:
+        // never block on offload while results are undrained — pending
+        // tasks wait in a local stack when the input channel is full.
+        let mut pending = vec![RangeTask { lo: 0, hi: n }];
+        let mut inflight = 0u64;
+        while inflight > 0 || !pending.is_empty() {
+            while let Some(t) = pending.pop() {
+                match acc.try_offload(t) {
+                    Ok(()) => inflight += 1,
+                    Err((t, _)) => {
+                        pending.push(t);
+                        break;
+                    }
+                }
+            }
+            if inflight > 0 {
+                match acc.load_result().expect("stream open while tasks in flight") {
+                    Done::Sorted => inflight -= 1,
+                    Done::Split(_, l, r) => {
+                        inflight -= 1; // split task consumed…
+                        pending.push(l); // …replaced by its halves
+                        pending.push(r);
+                    }
+                }
+            }
+        }
+        acc.offload_eos();
+    });
+    acc.wait();
+
+    let sorted = Arc::try_unwrap(buf)
+        .unwrap_or_else(|_| panic!("buffer still shared"))
+        .0
+        .into_inner();
+    assert_eq!(sorted, seq, "parallel quicksort result mismatch");
+    println!(
+        "divide_conquer quicksort: {n} u64s | seq sort {} | D&C farm({workers}w) {} | speedup {:.2} [verified]",
+        fmt_duration(t_seq),
+        fmt_duration(t_par),
+        t_seq.as_secs_f64() / t_par.as_secs_f64()
+    );
+}
+
+fn median3(s: &[u64]) -> u64 {
+    let a = s[0];
+    let b = s[s.len() / 2];
+    let c = s[s.len() - 1];
+    a.max(b.min(c)).min(b.max(c))
+}
+
+/// Partition `s` so that elements < pivot precede the returned index.
+fn partition(s: &mut [u64], pivot: u64) -> usize {
+    let mut i = 0usize;
+    let mut j = s.len();
+    loop {
+        while i < j && s[i] < pivot {
+            i += 1;
+        }
+        while j > i && s[j - 1] >= pivot {
+            j -= 1;
+        }
+        if i + 1 >= j {
+            return i;
+        }
+        s.swap(i, j - 1);
+        i += 1;
+        j -= 1;
+    }
+}

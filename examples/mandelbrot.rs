@@ -1,0 +1,96 @@
+//! End-to-end driver (the required full-stack example): the QT-Mandelbrot
+//! workload rendered progressively by the farm accelerator, optionally
+//! executing each row tile through the AOT-compiled JAX/Pallas kernel via
+//! PJRT (`--engine pjrt`), proving L3 (rust skeletons) ∘ L2 (jax graph) ∘
+//! L1 (pallas kernel) compose. Writes a PGM image and prints the per-pass
+//! timing table that EXPERIMENTS.md records.
+//!
+//! ```text
+//! cargo run --release --example mandelbrot -- \
+//!     [--region whole-set] [--width 640] [--height 480] [--passes 4] \
+//!     [--workers N] [--engine scalar|pjrt] [--out mandel.pgm] [--quick]
+//! ```
+
+use fastflow::apps::mandelbrot::{
+    max_iter_for_pass, render_sequential, AcceleratedRenderer, Engine, Region, RenderParams,
+};
+use fastflow::cli::Args;
+use fastflow::metrics::Table;
+use fastflow::runtime::MandelTileKernel;
+use fastflow::util::{fmt_duration, num_cpus, timed};
+
+fn main() {
+    let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let quick = args.has_flag("quick");
+    let region = args
+        .get("region")
+        .and_then(Region::by_name)
+        .unwrap_or(Region::presets()[0]);
+    let width = args.get_usize("width", if quick { 256 } else { 640 });
+    let height = args.get_usize("height", if quick { 192 } else { 480 });
+    let passes = args.get_u32("passes", if quick { 2 } else { 4 });
+    let workers = args.get_usize("workers", num_cpus().max(2) - 1);
+    let engine = match args.get("engine") {
+        Some("pjrt") => Engine::Pjrt,
+        _ => Engine::Scalar,
+    };
+    if engine == Engine::Pjrt && !MandelTileKernel::available() {
+        eprintln!("--engine pjrt requires `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    println!(
+        "mandelbrot: region={} {}x{} passes={} workers={} engine={:?}",
+        region.name, width, height, passes, workers, engine
+    );
+
+    let params = RenderParams {
+        region,
+        width,
+        height,
+    };
+    let mut table = Table::new(&["pass", "max_iter", "seq-time", "ff-time", "speedup", "match"]);
+    let mut renderer = AcceleratedRenderer::new(params, workers, engine);
+    let mut last_frame = None;
+    for pass in 0..passes {
+        let max_iter = max_iter_for_pass(pass);
+        let (seq, t_seq) = timed(|| {
+            render_sequential(&region, width, height, max_iter, None).expect("no abort")
+        });
+        let (frame, t_ff) = timed(|| renderer.render_pass(max_iter, None).expect("no abort"));
+        // PJRT runs in f32; allow tiny count differences at the boundary.
+        let matches = if engine == Engine::Scalar {
+            frame.iters == seq.iters
+        } else {
+            let diff = frame
+                .iters
+                .iter()
+                .zip(&seq.iters)
+                .filter(|(a, b)| a != b)
+                .count();
+            (diff as f64) < 0.02 * frame.iters.len() as f64
+        };
+        table.row(vec![
+            pass.to_string(),
+            max_iter.to_string(),
+            fmt_duration(t_seq),
+            fmt_duration(t_ff),
+            format!("{:.2}", t_seq.as_secs_f64() / t_ff.as_secs_f64()),
+            matches.to_string(),
+        ]);
+        last_frame = Some(frame);
+    }
+    let report = renderer.shutdown();
+    print!("{}", table.render());
+    if args.has_flag("trace") {
+        print!("{}", report.render());
+    }
+
+    let out = args.get("out").unwrap_or("mandelbrot.pgm");
+    let frame = last_frame.expect("passes >= 1");
+    std::fs::write(out, frame.to_pgm()).expect("write pgm");
+    println!(
+        "wrote {out} (interior fraction {:.1}%)",
+        frame.interior_fraction() * 100.0
+    );
+}

@@ -1,0 +1,48 @@
+//! The paper's §4.2 experiment as a runnable example: count N-queens
+//! solutions sequentially (Somers-style bitboard) and with the
+//! collector-less farm accelerator, verifying against OEIS A000170.
+//!
+//! ```text
+//! cargo run --release --example nqueens -- [N] [depth] [workers]
+//! ```
+
+use fastflow::apps::nqueens::{count_parallel, count_sequential, gen_tasks, known_solutions};
+use fastflow::util::{fmt_duration, num_cpus, timed};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: u32 = args.first().and_then(|s| s.parse().ok()).unwrap_or(12);
+    let depth: u32 = args
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4)
+        .clamp(1, n.saturating_sub(1).max(1));
+    let workers: usize = args
+        .get(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| 2 * num_cpus());
+
+    println!("N-queens {n}x{n}, task depth {depth} ({} tasks), {workers} workers",
+        gen_tasks(n, depth).len());
+
+    let (seq, t_seq) = timed(|| count_sequential(n));
+    println!("sequential: {seq} solutions in {}", fmt_duration(t_seq));
+
+    let (run, t_par) = timed(|| count_parallel(n, depth, workers));
+    println!(
+        "accelerated: {} solutions in {} ({} tasks, speedup {:.2})",
+        run.solutions,
+        fmt_duration(t_par),
+        run.tasks,
+        t_seq.as_secs_f64() / t_par.as_secs_f64()
+    );
+
+    assert_eq!(seq, run.solutions, "parallel count differs from sequential!");
+    match known_solutions(n) {
+        Some(k) => {
+            assert_eq!(seq, k, "count differs from OEIS A000170!");
+            println!("verified against OEIS A000170 ✓");
+        }
+        None => println!("(no reference count available for N = {n})"),
+    }
+}

@@ -1,0 +1,72 @@
+"""AOT lowering: jax → stablehlo → XlaComputation → **HLO text**.
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Produces ``mandelbrot_tile.hlo.txt`` and ``matmul.hlo.txt`` plus a
+``manifest.txt`` recording shapes and versions.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    """Lower every model entry point; returns {artifact_name: hlo_text}."""
+    artifacts = {}
+    lowered = jax.jit(model.mandel_tile).lower(*model.mandel_example_args())
+    artifacts["mandelbrot_tile.hlo.txt"] = to_hlo_text(lowered)
+    lowered = jax.jit(model.matmul).lower(*model.matmul_example_args())
+    artifacts["matmul.hlo.txt"] = to_hlo_text(lowered)
+    return artifacts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out-dir",
+        default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+        help="directory to write artifacts into",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    artifacts = lower_all()
+    manifest = [
+        f"jax {jax.__version__}",
+        f"mandel TILE={model.TILE}",
+        f"matmul N={model.MATMUL_N}",
+    ]
+    for name, text in artifacts.items():
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} {len(text)} chars")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: Mandelbrot escape iteration over one tile of points.
+
+The paper's Mandelbrot hot-spot is the per-pixel escape loop inside the QT
+RenderThread. Here it is re-thought for a TPU-style vector unit (see
+DESIGN.md §Hardware-Adaptation): one `(TILE,)` lane vector of complex
+coordinates per kernel invocation, the scalar per-pixel early-exit replaced
+by a *vector* early-exit (`while_loop` runs until every lane escaped or the
+iteration budget is exhausted), state held in VMEM-resident registers.
+
+``interpret=True`` everywhere: real-TPU lowering emits a Mosaic custom
+call that the CPU PJRT plugin cannot execute; interpret mode lowers to
+plain HLO, which is what ``aot.py`` ships to the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane width of one tile. 1024 f32 lanes × 5 live vectors ≈ 20 KB of VMEM —
+# far under budget; raised from 256 in the §Perf pass (EXPERIMENTS.md) to
+# amortize the per-execute PJRT dispatch cost 4× on the rust hot path.
+TILE = 256
+
+
+def _mandel_kernel(cx_ref, cy_ref, max_iter_ref, o_ref):
+    """Pallas kernel body: escape-iteration counts for one tile.
+
+    Semantics match the scalar reference exactly: ``count`` is the number
+    of z-updates applied before ``|z|^2 > 4`` was observed (checked
+    *before* each update), saturating at ``max_iter`` for interior points.
+    """
+    cx = cx_ref[...]
+    cy = cy_ref[...]
+    max_iter = max_iter_ref[0]
+
+    def cond(state):
+        n, _zr, _zi, _count, active = state
+        return jnp.logical_and(n < max_iter, jnp.any(active))
+
+    def body(state):
+        n, zr, zi, count, active = state
+        zr2 = zr * zr
+        zi2 = zi * zi
+        # Lanes whose |z|^2 exceeds 4 *now* freeze their count.
+        still_in = (zr2 + zi2) <= 4.0
+        active = jnp.logical_and(active, still_in)
+        # Masked z-update: frozen lanes keep their last z (their count no
+        # longer changes, so the value is irrelevant — masking avoids
+        # inf/nan propagation).
+        new_zi = jnp.where(active, 2.0 * zr * zi + cy, zi)
+        new_zr = jnp.where(active, zr2 - zi2 + cx, zr)
+        count = count + jnp.where(active, 1, 0).astype(jnp.int32)
+        return n + 1, new_zr, new_zi, count, active
+
+    zeros = jnp.zeros_like(cx)
+    init = (
+        jnp.int32(0),
+        zeros,
+        zeros,
+        jnp.zeros(cx.shape, jnp.int32),
+        jnp.ones(cx.shape, jnp.bool_),
+    )
+    _, _, _, count, _ = jax.lax.while_loop(cond, body, init)
+    o_ref[...] = count
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mandel_tile(cx, cy, max_iter):
+    """Escape counts for a tile.
+
+    Args:
+      cx, cy: f32[TILE] coordinates.
+      max_iter: i32[1] iteration budget (runtime value, not baked into
+        the artifact — the progressive passes reuse one executable).
+
+    Returns:
+      i32[TILE] iteration counts.
+    """
+    return pl.pallas_call(
+        _mandel_kernel,
+        out_shape=jax.ShapeDtypeStruct(cx.shape, jnp.int32),
+        interpret=True,
+    )(cx, cy, max_iter)

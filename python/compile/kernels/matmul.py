@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: blocked matrix multiplication (the Fig. 3 running
+example's hot-spot).
+
+Grid over (i, j) output blocks; each kernel instance contracts a
+(BM, N) row band of A with an (N, BN) column band of B — an MXU-shaped
+``jnp.dot`` per block. BlockSpec expresses the HBM→VMEM schedule that the
+C++ code expressed with its loop nest. ``interpret=True`` as everywhere.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Matrix edge baked into the AOT artifact (must match
+# rust/src/runtime::MATMUL_N).
+N = 128
+# Output block edge: 64×64 f32 blocks keep each instance's VMEM footprint
+# at (64·128 + 128·64 + 64·64)·4 B ≈ 81 KB.
+BLOCK = 64
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul(a, b):
+    """C = A @ B for f32[N, N] operands."""
+    grid = (N // BLOCK, N // BLOCK)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK, N), lambda i, j: (i, 0)),
+            pl.BlockSpec((N, BLOCK), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, BLOCK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, N), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,69 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the specifications the kernels (and, transitively, the Rust
+PJRT path and the scalar Rust renderer) are tested against.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def mandel_ref(cx, cy, max_iter):
+    """Vectorized reference escape counts.
+
+    Same contract as ``kernels.mandelbrot.mandel_tile`` and the Rust
+    ``escape_iters``: count z-updates applied before |z|^2 > 4 (tested
+    before each update), saturating at ``max_iter``.
+    """
+    cx = jnp.asarray(cx, jnp.float32)
+    cy = jnp.asarray(cy, jnp.float32)
+    max_iter = jnp.asarray(max_iter, jnp.int32).reshape(())
+
+    def cond(state):
+        n, _zr, _zi, _count, active = state
+        return jnp.logical_and(n < max_iter, jnp.any(active))
+
+    def body(state):
+        n, zr, zi, count, active = state
+        zr2 = zr * zr
+        zi2 = zi * zi
+        active = jnp.logical_and(active, (zr2 + zi2) <= 4.0)
+        zi = jnp.where(active, 2.0 * zr * zi + cy, zi)
+        zr = jnp.where(active, zr2 - zi2 + cx, zr)
+        count = count + jnp.where(active, 1, 0).astype(jnp.int32)
+        return n + 1, zr, zi, count, active
+
+    zeros = jnp.zeros_like(cx)
+    init = (
+        jnp.int32(0),
+        zeros,
+        zeros,
+        jnp.zeros(cx.shape, jnp.int32),
+        jnp.ones(cx.shape, jnp.bool_),
+    )
+    _, _, _, count, _ = jax.lax.while_loop(cond, body, init)
+    return count
+
+
+def mandel_scalar_ref(cx: float, cy: float, max_iter: int) -> int:
+    """Plain-python scalar oracle (mirrors Rust ``escape_iters``)."""
+    zr = zi = 0.0
+    i = 0
+    while i < max_iter:
+        zr2 = zr * zr
+        zi2 = zi * zi
+        if zr2 + zi2 > 4.0:
+            break
+        zi = 2.0 * zr * zi + cy
+        zr = zr2 - zi2 + cx
+        i += 1
+    return i
+
+
+def matmul_ref(a, b):
+    """f32 matmul oracle."""
+    return jnp.dot(
+        jnp.asarray(a, jnp.float32),
+        jnp.asarray(b, jnp.float32),
+        preferred_element_type=jnp.float32,
+    )

@@ -1,0 +1,45 @@
+"""L2: the jitted entry points AOT-lowered into the Rust-loadable
+artifacts. Fixed shapes (AOT contract with rust/src/runtime/mod.rs):
+
+* ``mandel_tile``: (f32[TILE], f32[TILE], i32[1]) -> i32[TILE]
+* ``matmul``:     (f32[N, N], f32[N, N])          -> f32[N, N]
+
+Both call the L1 Pallas kernels so the kernels lower into the same HLO
+module; nothing here runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import mandelbrot as mandel_kernel
+from compile.kernels import matmul as matmul_kernel
+
+TILE = mandel_kernel.TILE
+MATMUL_N = matmul_kernel.N
+
+
+def mandel_tile(cx, cy, max_iter):
+    """Escape counts for one tile (see kernels.mandelbrot)."""
+    return mandel_kernel.mandel_tile(cx, cy, max_iter)
+
+
+def matmul(a, b):
+    """C = A @ B (see kernels.matmul)."""
+    return matmul_kernel.matmul(a, b)
+
+
+def mandel_example_args():
+    """ShapeDtypeStructs used to lower ``mandel_tile``."""
+    return (
+        jax.ShapeDtypeStruct((TILE,), jnp.float32),
+        jax.ShapeDtypeStruct((TILE,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+    )
+
+
+def matmul_example_args():
+    """ShapeDtypeStructs used to lower ``matmul``."""
+    return (
+        jax.ShapeDtypeStruct((MATMUL_N, MATMUL_N), jnp.float32),
+        jax.ShapeDtypeStruct((MATMUL_N, MATMUL_N), jnp.float32),
+    )

@@ -1,0 +1,52 @@
+"""AOT artifact generation: the HLO text must exist, parse as HLO, and
+declare the shapes the Rust runtime expects."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    return aot.lower_all()
+
+
+def test_lower_all_produces_both(artifacts):
+    assert set(artifacts) == {"mandelbrot_tile.hlo.txt", "matmul.hlo.txt"}
+    for name, text in artifacts.items():
+        assert len(text) > 100, name
+
+
+def test_hlo_text_format(artifacts):
+    for name, text in artifacts.items():
+        assert text.lstrip().startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_mandel_hlo_signature(artifacts):
+    text = artifacts["mandelbrot_tile.hlo.txt"]
+    t = model.TILE
+    assert f"f32[{t}]" in text
+    assert "s32[1]" in text
+    assert f"s32[{t}]" in text  # output counts
+
+
+def test_matmul_hlo_signature(artifacts):
+    text = artifacts["matmul.hlo.txt"]
+    n = model.MATMUL_N
+    assert f"f32[{n},{n}]" in text
+
+
+def test_main_writes_files(tmp_path, monkeypatch):
+    monkeypatch.setattr(
+        "sys.argv", ["aot", "--out-dir", str(tmp_path)]
+    )
+    aot.main()
+    names = sorted(os.listdir(tmp_path))
+    assert "mandelbrot_tile.hlo.txt" in names
+    assert "matmul.hlo.txt" in names
+    assert "manifest.txt" in names
+    manifest = (tmp_path / "manifest.txt").read_text()
+    assert "jax" in manifest

@@ -1,0 +1,37 @@
+"""The DESIGN.md §8 TPU estimates must stay consistent with the shipped
+kernel shapes (so a TILE/BLOCK change forces a re-estimate)."""
+
+from compile import estimate
+from compile.kernels import mandelbrot, matmul
+
+
+def test_mandel_estimate_fits_vmem():
+    e = estimate.mandel_estimate()
+    assert e.vmem_fraction < 0.01, "tile state must be far under VMEM"
+    assert str(mandelbrot.TILE) in e.name
+
+
+def test_mandel_is_compute_bound():
+    e = estimate.mandel_estimate(max_iter=256)
+    # escape iteration reads 12 B/lane and does thousands of flops/lane
+    assert e.arithmetic_intensity > 100
+    assert "VPU" in e.bound
+
+
+def test_matmul_estimate_fits_vmem():
+    e = estimate.matmul_estimate()
+    assert e.vmem_bytes < estimate.VMEM_BYTES
+    assert str(matmul.BLOCK) in e.name
+    assert "MXU" in e.bound
+
+
+def test_report_renders():
+    for e in estimate.all_estimates():
+        text = e.render()
+        assert "VMEM" in text and "bound" in text
+
+
+def test_main_prints(capsys):
+    estimate.main()
+    out = capsys.readouterr().out
+    assert "mandelbrot" in out and "matmul" in out

@@ -1,0 +1,148 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+hypothesis sweeps coordinates, iteration budgets and matrix contents;
+every Pallas kernel must match its pure-jnp oracle exactly (integer
+counts) or to f32 tolerance (matmul).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import mandelbrot, matmul, ref
+
+TILE = mandelbrot.TILE
+
+
+def _tile_from(points):
+    """Pad a point list up to a full tile by repeating the last point."""
+    pts = list(points) or [(0.0, 0.0)]
+    while len(pts) < TILE:
+        pts.append(pts[-1])
+    xs = jnp.asarray([p[0] for p in pts[:TILE]], jnp.float32)
+    ys = jnp.asarray([p[1] for p in pts[:TILE]], jnp.float32)
+    return xs, ys
+
+
+# ------------------------------------------------------------- mandelbrot
+
+
+def test_mandel_known_points():
+    cx, cy = _tile_from([(0.0, 0.0), (2.0, 2.0), (-1.0, 0.0), (0.3, 0.5)])
+    out = np.asarray(mandelbrot.mandel_tile(cx, cy, jnp.asarray([100], jnp.int32)))
+    assert out[0] == 100  # origin: interior
+    assert out[1] <= 1  # far outside: immediate escape
+    assert out[2] == 100  # c = -1: interior (period 2)
+    assert out.shape == (TILE,)
+
+
+def test_mandel_matches_ref_grid():
+    xs = np.linspace(-2.2, 1.2, 16)
+    ys = np.linspace(-1.6, 1.6, 16)
+    pts = [(x, y) for x in xs for y in ys]
+    cx, cy = _tile_from(pts)
+    mi = jnp.asarray([200], jnp.int32)
+    got = np.asarray(mandelbrot.mandel_tile(cx, cy, mi))
+    want = np.asarray(ref.mandel_ref(cx, cy, 200))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mandel_matches_scalar_oracle():
+    pts = [(-0.75, 0.11), (0.0, 1.0), (-1.75, 0.0), (0.25, 0.0)]
+    cx, cy = _tile_from(pts)
+    got = np.asarray(mandelbrot.mandel_tile(cx, cy, jnp.asarray([64], jnp.int32)))
+    for i, (x, y) in enumerate(pts):
+        assert got[i] == ref.mandel_scalar_ref(np.float32(x), np.float32(y), 64), (x, y)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    max_iter=st.integers(1, 300),
+)
+def test_mandel_hypothesis_matches_ref(seed, max_iter):
+    rng = np.random.default_rng(seed)
+    cx = jnp.asarray(rng.uniform(-2.5, 1.5, TILE), jnp.float32)
+    cy = jnp.asarray(rng.uniform(-2.0, 2.0, TILE), jnp.float32)
+    mi = jnp.asarray([max_iter], jnp.int32)
+    got = np.asarray(mandelbrot.mandel_tile(cx, cy, mi))
+    want = np.asarray(ref.mandel_ref(cx, cy, max_iter))
+    np.testing.assert_array_equal(got, want)
+    assert got.min() >= 0 and got.max() <= max_iter
+
+
+def test_mandel_zero_budget():
+    cx, cy = _tile_from([(0.0, 0.0)])
+    out = np.asarray(mandelbrot.mandel_tile(cx, cy, jnp.asarray([0], jnp.int32)))
+    assert (out == 0).all()
+
+
+def test_mandel_budget_monotone():
+    """Counts are monotone in the iteration budget (progressive passes)."""
+    rng = np.random.default_rng(7)
+    cx = jnp.asarray(rng.uniform(-2.0, 1.0, TILE), jnp.float32)
+    cy = jnp.asarray(rng.uniform(-1.5, 1.5, TILE), jnp.float32)
+    prev = None
+    for budget in [16, 64, 256]:
+        out = np.asarray(mandelbrot.mandel_tile(cx, cy, jnp.asarray([budget], jnp.int32)))
+        if prev is not None:
+            assert (out >= prev).all()
+        prev = out
+
+
+# ----------------------------------------------------------------- matmul
+
+
+def test_matmul_identity():
+    n = matmul.N
+    eye = jnp.eye(n, dtype=jnp.float32)
+    a = jnp.arange(n * n, dtype=jnp.float32).reshape(n, n) / 1000.0
+    got = np.asarray(matmul.matmul(a, eye))
+    np.testing.assert_allclose(got, np.asarray(a), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_matmul_hypothesis_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    n = matmul.N
+    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    got = np.asarray(matmul.matmul(a, b))
+    want = np.asarray(ref.matmul_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_zero():
+    n = matmul.N
+    z = jnp.zeros((n, n), jnp.float32)
+    got = np.asarray(matmul.matmul(z, z))
+    assert (got == 0).all()
+
+
+# ------------------------------------------------------------------ model
+
+
+def test_model_shapes_match_runtime_contract():
+    """The Rust runtime hard-codes these shapes (runtime/mod.rs)."""
+    assert model.TILE == 256
+    assert model.MATMUL_N == 128
+    args = model.mandel_example_args()
+    assert args[0].shape == (256,) and str(args[0].dtype) == "float32"
+    assert args[2].shape == (1,) and str(args[2].dtype) == "int32"
+    m_args = model.matmul_example_args()
+    assert m_args[0].shape == (128, 128)
+
+
+def test_model_entry_points_callable():
+    cx = jnp.zeros((model.TILE,), jnp.float32)
+    out = model.mandel_tile(cx, cx, jnp.asarray([3], jnp.int32))
+    assert out.shape == (model.TILE,)
+    a = jnp.zeros((model.MATMUL_N, model.MATMUL_N), jnp.float32)
+    assert model.matmul(a, a).shape == (model.MATMUL_N, model.MATMUL_N)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

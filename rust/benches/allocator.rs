@@ -1,0 +1,126 @@
+//! Ablation (§3.2 "parallel memory allocator"): cost of task allocation
+//! on the offload hot path — fresh `Box` per task (the paper's Fig. 3
+//! `new task_t` / `delete t`) vs the recycling [`TaskPool`], plus the
+//! size-classed [`SlabArena`] vs global malloc for worker scratch space.
+//!
+//! `cargo bench --bench allocator [-- --quick]`
+
+use fastflow::alloc::{SlabArena, TaskPool};
+use fastflow::benchkit::{measure_ns_per_op, BenchOpts, Report};
+use fastflow::metrics::Table;
+use fastflow::spsc::spsc;
+
+/// A Fig. 3-sized task payload.
+struct TaskT {
+    _i: u64,
+    _j: u64,
+    _payload: [u64; 6],
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n: u64 = if quick { 200_000 } else { 1_000_000 };
+
+    let mut table = Table::new(&["strategy", "ns/task"]);
+
+    // Fresh Box per offload, freed by the "worker" (other side of a queue).
+    let boxed = measure_ns_per_op(opts, n, |iters| {
+        let (mut tx, mut rx) = spsc::<Box<TaskT>>(256);
+        let consumer = std::thread::spawn(move || {
+            let mut count = 0u64;
+            while count < iters {
+                if let Some(b) = rx.try_pop() {
+                    drop(b); // delete t
+                    count += 1;
+                } else {
+                    std::thread::yield_now(); // 1-cpu friendliness
+                }
+            }
+        });
+        for i in 0..iters {
+            let b = Box::new(TaskT {
+                _i: i,
+                _j: i,
+                _payload: [i; 6],
+            });
+            let mut b = Some(b);
+            loop {
+                match tx.try_push(b.take().unwrap()) {
+                    Ok(()) => break,
+                    Err(fastflow::spsc::Full(v)) => b = Some(v),
+                }
+                std::thread::yield_now();
+            }
+        }
+        consumer.join().unwrap();
+    });
+    table.row(vec!["Box per task (Fig. 3)".into(), format!("{:.1}", boxed.mean)]);
+
+    // TaskPool recycling through the return channel.
+    let pooled = measure_ns_per_op(opts, n, |iters| {
+        let (mut pool, mut ret) = TaskPool::<TaskT>::new();
+        let (mut tx, mut rx) = spsc::<Box<TaskT>>(256);
+        let consumer = std::thread::spawn(move || {
+            let mut count = 0u64;
+            while count < iters {
+                if let Some(b) = rx.try_pop() {
+                    ret.give(b); // recycle instead of free
+                    count += 1;
+                } else {
+                    std::thread::yield_now(); // 1-cpu friendliness
+                }
+            }
+        });
+        for i in 0..iters {
+            let b = pool.take(TaskT {
+                _i: i,
+                _j: i,
+                _payload: [i; 6],
+            });
+            let mut b = Some(b);
+            loop {
+                match tx.try_push(b.take().unwrap()) {
+                    Ok(()) => break,
+                    Err(fastflow::spsc::Full(v)) => b = Some(v),
+                }
+                std::thread::yield_now();
+            }
+        }
+        consumer.join().unwrap();
+    });
+    table.row(vec!["TaskPool recycle".into(), format!("{:.1}", pooled.mean)]);
+
+    // Worker scratch buffers: malloc vs slab arena.
+    let malloc_scratch = measure_ns_per_op(opts, n, |iters| {
+        for i in 0..iters {
+            let buf = vec![0u8; 1024].into_boxed_slice();
+            std::hint::black_box(&buf[(i % 1024) as usize]);
+        }
+    });
+    table.row(vec![
+        "scratch: malloc 1KB".into(),
+        format!("{:.1}", malloc_scratch.mean),
+    ]);
+
+    let slab_scratch = measure_ns_per_op(opts, n, |iters| {
+        let mut arena = SlabArena::new();
+        for i in 0..iters {
+            let buf = arena.alloc(1024);
+            std::hint::black_box(&buf[(i % 1024) as usize]);
+            arena.free(buf);
+        }
+    });
+    table.row(vec![
+        "scratch: SlabArena 1KB".into(),
+        format!("{:.1}", slab_scratch.mean),
+    ]);
+
+    let mut report = Report::new("allocator", table);
+    report.note(format!(
+        "TaskPool vs Box: {:.2}x | SlabArena vs malloc: {:.2}x",
+        boxed.mean / pooled.mean,
+        malloc_scratch.mean / slab_scratch.mean
+    ));
+    report.emit();
+}

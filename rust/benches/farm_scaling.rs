@@ -1,0 +1,100 @@
+//! Ablation (§2.4 design choices): farm throughput vs worker count ×
+//! scheduling policy × collector configuration. Complements Fig. 4 by
+//! isolating the skeleton from the application.
+//!
+//! `cargo bench --bench farm_scaling [-- --quick]`
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use fastflow::accel::FarmAccel;
+use fastflow::benchkit::{measure, BenchOpts, Report};
+use fastflow::farm::{FarmConfig, SchedPolicy};
+use fastflow::metrics::Table;
+use fastflow::node::node_fn;
+use fastflow::util::num_cpus;
+
+#[inline]
+fn spin_work(iters: u64) -> u64 {
+    let mut acc = 0u64;
+    for i in 0..iters {
+        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+    }
+    std::hint::black_box(acc)
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let tasks: u64 = if quick { 4_000 } else { 20_000 };
+    let grain: u64 = 5_000; // ≈ 5 µs/task
+    let ncpu = num_cpus();
+    let worker_counts: Vec<usize> = if quick {
+        vec![1, 2]
+    } else {
+        vec![1, 2, 4, 8, 16]
+            .into_iter()
+            .filter(|&w| w <= 2 * ncpu.max(1) * 8) // keep sweep even on 1 cpu
+            .collect()
+    };
+
+    let mut table = Table::new(&["workers", "sched", "collector", "tasks/s", "speedup-vs-1w"]);
+    let mut base_rate = None;
+    for &w in &worker_counts {
+        for (sched, sched_name) in [
+            (SchedPolicy::RoundRobin, "rr"),
+            (SchedPolicy::OnDemand, "on-demand"),
+        ] {
+            for collector in [true, false] {
+                let (stats, _) = measure(opts, || {
+                    if collector {
+                        let mut acc: FarmAccel<u64, u64> = FarmAccel::run(
+                            FarmConfig::default().workers(w).sched(sched),
+                            |_| node_fn(move |i: u64| spin_work(grain + (i & 7))),
+                        );
+                        for i in 0..tasks {
+                            acc.offload(i).unwrap();
+                        }
+                        acc.offload_eos();
+                        while acc.load_result().is_some() {}
+                        acc.wait();
+                    } else {
+                        let sink = Arc::new(AtomicU64::new(0));
+                        let s2 = sink.clone();
+                        let mut acc: FarmAccel<u64, ()> = FarmAccel::run_no_collector(
+                            FarmConfig::default().workers(w).sched(sched),
+                            move |_| {
+                                let sink = s2.clone();
+                                node_fn(move |i: u64| {
+                                    sink.fetch_add(spin_work(grain + (i & 7)) & 1, Ordering::Relaxed);
+                                })
+                            },
+                        );
+                        for i in 0..tasks {
+                            acc.offload(i).unwrap();
+                        }
+                        acc.offload_eos();
+                        acc.wait();
+                    }
+                });
+                let rate = tasks as f64 / stats.mean;
+                if base_rate.is_none() {
+                    base_rate = Some(rate);
+                }
+                table.row(vec![
+                    w.to_string(),
+                    sched_name.to_string(),
+                    collector.to_string(),
+                    format!("{rate:.0}"),
+                    format!("{:.2}", rate / base_rate.unwrap()),
+                ]);
+            }
+        }
+    }
+    let mut report = Report::new("farm_scaling", table);
+    report.note(format!(
+        "grain ≈ 5µs, {tasks} tasks, {} cpu(s); paper shape: linear scaling to physical cores",
+        ncpu
+    ));
+    report.emit();
+}

@@ -1,0 +1,65 @@
+//! Regenerates **Fig. 4**: QT-Mandelbrot execution time and speedup for
+//! the four plane regions across worker counts (and, with artifacts
+//! built, the PJRT engine variant).
+//!
+//! Paper shape to reproduce: near-ideal speedup on compute-heavy regions,
+//! Amdahl-limited speedup on cheap regions. On a 1-CPU container the
+//! expected shape is flat (≈1×) — see EXPERIMENTS.md.
+//!
+//! `cargo bench --bench fig4_mandelbrot [-- --quick]`
+
+use fastflow::apps::mandelbrot::Engine;
+use fastflow::benchkit::Report;
+use fastflow::coordinator::{run_fig4, Fig4Opts};
+use fastflow::runtime::MandelTileKernel;
+use fastflow::util::num_cpus;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut opts = Fig4Opts::default();
+    if quick {
+        opts = opts.quick();
+    }
+    println!(
+        "fig4: {}x{} px, {} passes, workers {:?}, {} cpus",
+        opts.width,
+        opts.height,
+        opts.passes,
+        opts.worker_counts,
+        num_cpus()
+    );
+    let (table, rows) = run_fig4(&opts);
+    let mut report = Report::new("fig4_mandelbrot", table);
+    report.note(format!(
+        "paper: near-ideal speedup for heavy regions on 8-core/16HT; this testbed has {} cpu(s)",
+        num_cpus()
+    ));
+    let best = rows
+        .iter()
+        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
+        .unwrap();
+    report.note(format!(
+        "best observed: {} @ {} workers → {:.2}x",
+        best.region, best.workers, best.speedup
+    ));
+    report.emit();
+
+    // PJRT engine variant (one region) — the three-layer configuration.
+    if MandelTileKernel::available() {
+        let pjrt_opts = Fig4Opts {
+            engine: Engine::Pjrt,
+            regions: vec![fastflow::apps::mandelbrot::Region::presets()[0]],
+            worker_counts: vec![num_cpus().max(2) - 1],
+            width: if quick { 128 } else { 256 },
+            height: if quick { 96 } else { 192 },
+            passes: 2,
+            runs: 1,
+        };
+        let (table, _) = run_fig4(&pjrt_opts);
+        let mut r = Report::new("fig4_mandelbrot_pjrt", table);
+        r.note("rows evaluated through the AOT JAX/Pallas kernel via PJRT");
+        r.emit();
+    } else {
+        println!("(pjrt variant skipped: run `make artifacts`)");
+    }
+}

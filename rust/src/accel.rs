@@ -1,0 +1,413 @@
+//! **Self-offloading** (paper §3): wrap a skeleton as a *software
+//! accelerator* — a device with one streaming input channel and one
+//! streaming output channel, dynamically created (and destroyed) from
+//! sequential code, running on the spare cores of the same CPU.
+//!
+//! The API mirrors the paper's Fig. 3 protocol:
+//!
+//! ```no_run
+//! use fastflow::accel::FarmAccel;
+//! use fastflow::farm::FarmConfig;
+//!
+//! // ff::ff_farm<> farm(true /*accel*/); farm.add_workers(w);
+//! let mut acc: FarmAccel<u64, u64> =
+//!     FarmAccel::run_then_freeze(FarmConfig::default().workers(4), |_| fastflow::node::node_fn(|x: u64| x * x));
+//!
+//! // farm.offload(task);
+//! for i in 0..100 {
+//!     acc.offload(i).unwrap();
+//! }
+//! // farm.offload((void*)ff::FF_EOS);
+//! acc.offload_eos();
+//! // pop results from the accelerator output channel
+//! let mut sum = 0;
+//! while let Some(sq) = acc.load_result() {
+//!     sum += sq;
+//! }
+//! acc.wait_freezing(); // frozen: threads OS-suspended, ready for thaw()
+//! acc.thaw();          // next burst…
+//! acc.offload_eos();
+//! acc.wait_freezing();
+//! let report = acc.wait(); // final join
+//! # let _ = (sum, report);
+//! ```
+
+use std::sync::Arc;
+
+use crate::channel::Msg;
+use crate::farm::{launch_farm, FarmConfig, FarmOutput};
+use crate::node::{LifecycleState, Node, RunMode};
+use crate::skeleton::LaunchedSkeleton;
+use crate::trace::TraceReport;
+
+/// Errors surfaced by the offload interface.
+#[derive(Debug, PartialEq, Eq)]
+pub enum AccelError {
+    /// The accelerator's threads are gone (e.g. a worker panicked).
+    Disconnected,
+    /// Input channel full (only from [`Accel::try_offload`]).
+    WouldBlock,
+}
+
+impl std::fmt::Display for AccelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AccelError::Disconnected => write!(f, "accelerator disconnected"),
+            AccelError::WouldBlock => write!(f, "accelerator input full"),
+        }
+    }
+}
+
+impl std::error::Error for AccelError {}
+
+/// A software accelerator wrapping any launched skeleton.
+///
+/// Obtained from [`FarmAccel::run`] / [`FarmAccel::run_then_freeze`] (farm
+/// body) or [`crate::pipeline::Pipeline`]'s accelerator launchers.
+pub struct Accel<I: Send + 'static, O: Send + 'static> {
+    skel: LaunchedSkeleton<I, O>,
+    /// Tasks offloaded in the current run cycle.
+    pub offloaded: u64,
+    /// Results popped in the current run cycle.
+    pub collected: u64,
+    /// EOS offloaded for the current cycle but cycle not yet finished.
+    eos_sent: bool,
+    /// The output stream of the current cycle reached EOS.
+    out_drained: bool,
+}
+
+/// Farm-shaped accelerator (the paper's main configuration).
+pub type FarmAccel<I, O> = Accel<I, O>;
+
+impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
+    /// Wrap an already-launched skeleton as an accelerator.
+    pub fn from_skeleton(skel: LaunchedSkeleton<I, O>) -> Self {
+        Accel {
+            skel,
+            offloaded: 0,
+            collected: 0,
+            eos_sent: false,
+            out_drained: false,
+        }
+    }
+
+    /// Create **and run** a farm accelerator (one-shot: after EOS the
+    /// threads exit; use [`Accel::wait`] to join).
+    pub fn run<W, F>(cfg: FarmConfig, factory: F) -> Self
+    where
+        W: Node<In = I, Out = O> + 'static,
+        F: FnMut(usize) -> W,
+    {
+        Self::from_skeleton(launch_farm(cfg, RunMode::RunToEnd, factory, FarmOutput::Stream))
+    }
+
+    /// Create and run a farm accelerator in **freeze** mode: after each
+    /// EOS the threads park (OS-suspended) and can be [`Accel::thaw`]ed
+    /// for the next burst — the paper's `run_then_freeze()`.
+    pub fn run_then_freeze<W, F>(cfg: FarmConfig, factory: F) -> Self
+    where
+        W: Node<In = I, Out = O> + 'static,
+        F: FnMut(usize) -> W,
+    {
+        Self::from_skeleton(launch_farm(
+            cfg,
+            RunMode::RunThenFreeze,
+            factory,
+            FarmOutput::Stream,
+        ))
+    }
+
+    /// Collector-less variants (paper §4.2): worker outputs are discarded;
+    /// results travel through shared state.
+    pub fn run_no_collector<W, F>(cfg: FarmConfig, factory: F) -> Self
+    where
+        W: Node<In = I, Out = O> + 'static,
+        F: FnMut(usize) -> W,
+    {
+        Self::from_skeleton(launch_farm(cfg, RunMode::RunToEnd, factory, FarmOutput::None))
+    }
+
+    pub fn run_then_freeze_no_collector<W, F>(cfg: FarmConfig, factory: F) -> Self
+    where
+        W: Node<In = I, Out = O> + 'static,
+        F: FnMut(usize) -> W,
+    {
+        Self::from_skeleton(launch_farm(
+            cfg,
+            RunMode::RunThenFreeze,
+            factory,
+            FarmOutput::None,
+        ))
+    }
+
+    /// Offload one task onto the accelerator (blocking on backpressure —
+    /// the paper's `offload` blocks when the input channel is full).
+    #[inline]
+    pub fn offload(&mut self, task: I) -> Result<(), AccelError> {
+        debug_assert!(!self.eos_sent, "offload after offload_eos in same cycle");
+        self.skel
+            .input
+            .send(task)
+            .map_err(|_| AccelError::Disconnected)?;
+        self.offloaded += 1;
+        Ok(())
+    }
+
+    /// Non-blocking offload.
+    #[inline]
+    pub fn try_offload(&mut self, task: I) -> Result<(), (I, AccelError)> {
+        if !self.skel.input.peer_alive() {
+            return Err((task, AccelError::Disconnected));
+        }
+        match self.skel.input.try_send(task) {
+            Ok(()) => {
+                self.offloaded += 1;
+                Ok(())
+            }
+            Err(crate::spsc::Full(t)) => Err((t, AccelError::WouldBlock)),
+        }
+    }
+
+    /// Close the current input stream (the paper's
+    /// `farm.offload((void*)FF_EOS)`).
+    pub fn offload_eos(&mut self) {
+        if !self.eos_sent {
+            let _ = self.skel.input.send_eos();
+            self.eos_sent = true;
+        }
+    }
+
+    /// Pop one result, blocking. `None` when the current cycle's output
+    /// stream is exhausted (EOS observed). On collector-less
+    /// accelerators, returns `None` immediately.
+    pub fn load_result(&mut self) -> Option<O> {
+        if self.out_drained {
+            return None;
+        }
+        let rx = self.skel.output.as_mut()?;
+        match rx.recv() {
+            Msg::Task(v) => {
+                self.collected += 1;
+                Some(v)
+            }
+            Msg::Eos => {
+                self.out_drained = true;
+                None
+            }
+        }
+    }
+
+    /// Pop one result if immediately available (the paper's non-blocking
+    /// `load_result_nb`).
+    pub fn load_result_nb(&mut self) -> Option<O> {
+        if self.out_drained {
+            return None;
+        }
+        let rx = self.skel.output.as_mut()?;
+        match rx.try_recv()? {
+            Msg::Task(v) => {
+                self.collected += 1;
+                Some(v)
+            }
+            Msg::Eos => {
+                self.out_drained = true;
+                None
+            }
+        }
+    }
+
+    /// Block until every accelerator thread is frozen (requires
+    /// `run_then_freeze`). Drains nothing: pop results before or after.
+    pub fn wait_freezing(&self) {
+        self.skel.lifecycle.wait_freezing();
+    }
+
+    /// Wake a frozen accelerator for another burst; resets the per-cycle
+    /// input/output stream state.
+    pub fn thaw(&mut self) {
+        assert_eq!(
+            self.skel.lifecycle.mode(),
+            RunMode::RunThenFreeze,
+            "thaw on a run-to-end accelerator"
+        );
+        // The previous cycle's streams must be closed & drained.
+        debug_assert!(self.eos_sent, "thaw before offload_eos");
+        debug_assert!(
+            self.out_drained || self.skel.output.is_none(),
+            "thaw before draining the output stream to None (results would \
+             bleed into the next cycle)"
+        );
+        self.skel.lifecycle.thaw();
+        self.eos_sent = false;
+        self.out_drained = false;
+        self.offloaded = 0;
+        self.collected = 0;
+    }
+
+    /// Final join (the paper's `farm.wait()`): closes the input stream if
+    /// still open, drains any un-popped results, tells frozen threads to
+    /// exit and joins them all. Returns the trace report.
+    pub fn wait(mut self) -> TraceReport {
+        self.offload_eos();
+        // Drain the output so the collector can't block on a full queue.
+        while self.load_result().is_some() {}
+        self.skel.lifecycle.request_exit();
+        self.skel.join()
+    }
+
+    /// Observed lifecycle state.
+    pub fn state(&self) -> LifecycleState {
+        self.skel.lifecycle.state()
+    }
+
+    /// Trace snapshot (running accelerators included).
+    pub fn trace_report(&self) -> TraceReport {
+        self.skel.trace_report()
+    }
+
+    /// Number of accelerator threads (emitter + workers [+ collector]).
+    pub fn threads(&self) -> usize {
+        self.skel.lifecycle.threads()
+    }
+
+    /// Access the shared lifecycle (for advanced protocols).
+    pub fn lifecycle(&self) -> &Arc<crate::node::Lifecycle> {
+        &self.skel.lifecycle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::farm::SchedPolicy;
+    use crate::node::node_fn;
+
+    #[test]
+    fn one_shot_offload_and_drain() {
+        let mut acc: FarmAccel<u64, u64> =
+            FarmAccel::run(FarmConfig::default().workers(3), |_| node_fn(|x: u64| x + 1));
+        for i in 0..1000 {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = acc.load_result() {
+            got.push(v);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (1..=1000).collect::<Vec<_>>());
+        assert_eq!(acc.collected, 1000);
+        let report = acc.wait();
+        assert_eq!(report.total_tasks() > 0, true);
+    }
+
+    #[test]
+    fn freeze_thaw_multiple_bursts() {
+        // The QT-Mandelbrot pattern: one accelerator reused across passes.
+        let mut acc: FarmAccel<u64, u64> = FarmAccel::run_then_freeze(
+            FarmConfig::default().workers(4).sched(SchedPolicy::OnDemand),
+            |_| node_fn(|x: u64| x * 10),
+        );
+        for burst in 0..5u64 {
+            if burst > 0 {
+                acc.thaw();
+            }
+            for i in 0..200 {
+                acc.offload(burst * 1000 + i).unwrap();
+            }
+            acc.offload_eos();
+            let mut sum = 0u64;
+            let mut count = 0;
+            while let Some(v) = acc.load_result() {
+                sum += v;
+                count += 1;
+            }
+            assert_eq!(count, 200);
+            let expect: u64 = (0..200).map(|i| (burst * 1000 + i) * 10).sum();
+            assert_eq!(sum, expect);
+            acc.wait_freezing();
+            assert_eq!(acc.state(), LifecycleState::Frozen);
+        }
+        acc.thaw();
+        acc.offload_eos();
+        acc.wait_freezing();
+        acc.wait();
+    }
+
+    #[test]
+    fn collectorless_accel_accumulates_shared_state() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let total = Arc::new(AtomicU64::new(0));
+        let t2 = total.clone();
+        let mut acc: FarmAccel<u64, ()> =
+            FarmAccel::run_no_collector(FarmConfig::default().workers(4), move |_| {
+                let total = t2.clone();
+                node_fn(move |x: u64| {
+                    total.fetch_add(x, Ordering::Relaxed);
+                })
+            });
+        for i in 1..=100 {
+            acc.offload(i).unwrap();
+        }
+        assert!(acc.load_result().is_none()); // no output stream
+        acc.offload_eos();
+        acc.wait();
+        assert_eq!(total.load(Ordering::Relaxed), 5050);
+    }
+
+    #[test]
+    fn try_offload_backpressure() {
+        // Slow worker + tiny queues: try_offload must eventually WouldBlock.
+        let mut acc: FarmAccel<u64, u64> = FarmAccel::run(
+            FarmConfig::default().workers(1).queue_caps(1, 1, 1),
+            |_| {
+                node_fn(|x: u64| {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    x
+                })
+            },
+        );
+        let mut would_block = false;
+        for i in 0..64 {
+            match acc.try_offload(i) {
+                Ok(()) => {}
+                Err((_, AccelError::WouldBlock)) => {
+                    would_block = true;
+                    break;
+                }
+                Err((_, e)) => panic!("unexpected: {e}"),
+            }
+        }
+        assert!(would_block);
+        acc.offload_eos();
+        acc.wait();
+    }
+
+    #[test]
+    fn wait_without_explicit_eos_still_joins() {
+        let mut acc: FarmAccel<u64, u64> =
+            FarmAccel::run(FarmConfig::default().workers(2), |_| node_fn(|x: u64| x));
+        acc.offload(1).unwrap();
+        acc.offload(2).unwrap();
+        // wait() sends EOS, drains, joins.
+        let report = acc.wait();
+        let workers: u64 = report
+            .rows
+            .iter()
+            .filter(|r| r.name.starts_with("worker"))
+            .map(|r| r.tasks)
+            .sum();
+        assert_eq!(workers, 2);
+    }
+
+    #[test]
+    fn accel_state_transitions() {
+        let mut acc: FarmAccel<u64, u64> =
+            FarmAccel::run_then_freeze(FarmConfig::default().workers(2), |_| node_fn(|x: u64| x));
+        assert_eq!(acc.state(), LifecycleState::Running);
+        acc.offload_eos();
+        acc.wait_freezing();
+        assert_eq!(acc.state(), LifecycleState::Frozen);
+        acc.wait();
+    }
+}

@@ -1,0 +1,235 @@
+//! The FastFlow-style parallel allocator (paper §3.2: "FastFlow provides
+//! the programmer with specific tools to tune the performance: a parallel
+//! memory allocator…").
+//!
+//! Two pieces:
+//!
+//! * [`TaskPool`] — a typed recycling pool for the accelerator hot loop:
+//!   the offloading thread allocates task boxes, workers return them
+//!   through a lock-free SPSC free-list, so steady-state offloading does
+//!   zero heap allocation. This is the tool that removes `new task_t` /
+//!   `delete t` (paper Fig. 3 lines 35 & 56) from the hot path.
+//! * [`SlabArena`] — a size-classed bump/freelist arena for untyped
+//!   buffers, single-owner, used by workloads that need scratch space
+//!   per task without malloc contention.
+
+use crate::spsc::{unbounded_spsc, UnboundedConsumer, UnboundedProducer};
+
+/// A typed object pool with a lock-free cross-thread return path.
+///
+/// One side (the offloader) calls [`TaskPool::take`] to get a recycled
+/// `Box<T>` (or a fresh one); the other side (a worker / the collector)
+/// returns boxes via the [`PoolReturner`] handle. Single-producer /
+/// single-consumer in each direction — for a farm, route returns through
+/// the collector (one thread), matching the SPSC discipline.
+pub struct TaskPool<T: Send> {
+    free_rx: UnboundedConsumer<Box<T>>,
+    /// Fresh allocations performed because the free list was empty.
+    pub fresh: u64,
+    /// Successful recycles.
+    pub reused: u64,
+}
+
+/// Return-side handle of a [`TaskPool`].
+pub struct PoolReturner<T: Send> {
+    free_tx: UnboundedProducer<Box<T>>,
+}
+
+impl<T: Send> TaskPool<T> {
+    /// Create a pool and its returner handle.
+    pub fn new() -> (Self, PoolReturner<T>) {
+        let (tx, rx) = unbounded_spsc::<Box<T>>();
+        (
+            TaskPool {
+                free_rx: rx,
+                fresh: 0,
+                reused: 0,
+            },
+            PoolReturner { free_tx: tx },
+        )
+    }
+
+    /// Get a box, recycling if possible. `init` overwrites the contents
+    /// either way.
+    #[inline]
+    pub fn take(&mut self, init: T) -> Box<T> {
+        match self.free_rx.try_pop() {
+            Some(mut b) => {
+                self.reused += 1;
+                *b = init;
+                b
+            }
+            None => {
+                self.fresh += 1;
+                Box::new(init)
+            }
+        }
+    }
+}
+
+impl<T: Send> PoolReturner<T> {
+    /// Return a box to the pool (never blocks; the free list is
+    /// unbounded).
+    #[inline]
+    pub fn give(&mut self, b: Box<T>) {
+        self.free_tx.push(b);
+    }
+}
+
+/// Size classes for [`SlabArena`] (powers of two, 64 B – 64 KB).
+const CLASSES: [usize; 11] = [
+    64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536,
+];
+
+fn class_for(size: usize) -> Option<usize> {
+    CLASSES.iter().position(|&c| size <= c)
+}
+
+/// A single-owner size-classed buffer arena: `alloc` pops a recycled
+/// buffer of the right class or allocates; `free` pushes it back.
+/// Not thread-safe by design (per-thread arenas, like FastFlow's
+/// per-thread allocator magazines); wrap per worker.
+pub struct SlabArena {
+    freelists: Vec<Vec<Box<[u8]>>>,
+    /// Stats: (allocs_fresh, allocs_reused, frees).
+    pub fresh: u64,
+    pub reused: u64,
+    pub returned: u64,
+    /// Per-class cache bound (buffers beyond this are dropped).
+    max_per_class: usize,
+}
+
+impl SlabArena {
+    pub fn new() -> Self {
+        Self::with_cache(64)
+    }
+
+    pub fn with_cache(max_per_class: usize) -> Self {
+        SlabArena {
+            freelists: (0..CLASSES.len()).map(|_| Vec::new()).collect(),
+            fresh: 0,
+            reused: 0,
+            returned: 0,
+            max_per_class,
+        }
+    }
+
+    /// Allocate a zero-initialized buffer of at least `size` bytes.
+    /// Sizes above the largest class fall through to the global
+    /// allocator (uncached).
+    pub fn alloc(&mut self, size: usize) -> Box<[u8]> {
+        match class_for(size) {
+            Some(ci) => {
+                if let Some(buf) = self.freelists[ci].pop() {
+                    self.reused += 1;
+                    buf
+                } else {
+                    self.fresh += 1;
+                    vec![0u8; CLASSES[ci]].into_boxed_slice()
+                }
+            }
+            None => {
+                self.fresh += 1;
+                vec![0u8; size].into_boxed_slice()
+            }
+        }
+    }
+
+    /// Return a buffer to its class (dropped if oversized/overflowing).
+    pub fn free(&mut self, buf: Box<[u8]>) {
+        self.returned += 1;
+        if let Some(ci) = class_for(buf.len()) {
+            if CLASSES[ci] == buf.len() && self.freelists[ci].len() < self.max_per_class {
+                self.freelists[ci].push(buf);
+            }
+        }
+        // else: drop
+    }
+
+    /// Total cached buffers.
+    pub fn cached(&self) -> usize {
+        self.freelists.iter().map(|f| f.len()).sum()
+    }
+}
+
+impl Default for SlabArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_pool_recycles_across_threads() {
+        let (mut pool, mut ret) = TaskPool::<u64>::new();
+        let a = pool.take(1);
+        let b = pool.take(2);
+        assert_eq!(pool.fresh, 2);
+        // Return from another thread (the worker side).
+        let h = std::thread::spawn(move || {
+            ret.give(a);
+            ret.give(b);
+            ret
+        });
+        let _ret = h.join().unwrap();
+        let c = pool.take(3);
+        assert_eq!(*c, 3);
+        assert_eq!(pool.reused, 1);
+    }
+
+    #[test]
+    fn task_pool_steady_state_stops_allocating() {
+        let (mut pool, mut ret) = TaskPool::<[u64; 8]>::new();
+        // Warm: 4 in flight.
+        let mut inflight: Vec<Box<[u64; 8]>> = (0..4).map(|i| pool.take([i; 8])).collect();
+        for round in 0..1000u64 {
+            ret.give(inflight.remove(0));
+            inflight.push(pool.take([round; 8]));
+        }
+        assert_eq!(pool.fresh, 4, "steady state must not allocate");
+        assert_eq!(pool.reused, 1000);
+    }
+
+    #[test]
+    fn slab_arena_classes() {
+        assert_eq!(class_for(1), Some(0));
+        assert_eq!(class_for(64), Some(0));
+        assert_eq!(class_for(65), Some(1));
+        assert_eq!(class_for(65536), Some(10));
+        assert_eq!(class_for(65537), None);
+    }
+
+    #[test]
+    fn slab_arena_reuses() {
+        let mut a = SlabArena::new();
+        let b1 = a.alloc(100); // class 128
+        assert_eq!(b1.len(), 128);
+        a.free(b1);
+        let b2 = a.alloc(120);
+        assert_eq!(b2.len(), 128);
+        assert_eq!(a.reused, 1);
+        assert_eq!(a.fresh, 1);
+    }
+
+    #[test]
+    fn slab_arena_oversize_uncached() {
+        let mut a = SlabArena::new();
+        let big = a.alloc(1 << 20);
+        assert_eq!(big.len(), 1 << 20);
+        a.free(big);
+        assert_eq!(a.cached(), 0);
+    }
+
+    #[test]
+    fn slab_arena_cache_bound() {
+        let mut a = SlabArena::with_cache(2);
+        let bufs: Vec<_> = (0..5).map(|_| a.alloc(64)).collect();
+        for b in bufs {
+            a.free(b);
+        }
+        assert_eq!(a.cached(), 2);
+    }
+}

@@ -1,0 +1,524 @@
+//! The QT-Mandelbrot workload (paper §4.1, Fig. 4).
+//!
+//! The original is Trolltech's interactive explorer: `RenderThread`
+//! recomputes the set in progressive-precision *passes* while
+//! `MandelbrotWidget` may restart/abort it. The measured quantity in
+//! Fig. 4 is the render time of the pixmap loop; we reproduce it
+//! headless, including the pass/abort protocol:
+//!
+//! * progressive passes with increasing iteration limits,
+//! * an [`crate::util::AbortFlag`] checked between rows (the QT
+//!   `restart` flag),
+//! * the farm accelerator created **once** and `run_then_freeze`/`thaw`ed
+//!   per pass, exactly the paper's usage.
+//!
+//! Engines:
+//! * [`Engine::Scalar`] — the faithful port of the QT per-pixel loop
+//!   (early escape per pixel) running in the worker's `svc`.
+//! * [`Engine::Pjrt`] — the three-layer configuration: each worker
+//!   evaluates rows in 256-wide tiles through the AOT-compiled
+//!   JAX/Pallas kernel via PJRT ([`crate::runtime::MandelTileKernel`]).
+
+use std::sync::Arc;
+
+use crate::accel::FarmAccel;
+use crate::farm::{FarmConfig, SchedPolicy};
+use crate::node::{Node, Outbox, Svc};
+use crate::runtime::{MandelTileKernel, MANDEL_TILE};
+use crate::trace::TraceReport;
+use crate::util::{AbortFlag, SendCell};
+
+/// A rectangular region of the complex plane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Region {
+    pub name: &'static str,
+    pub center_x: f64,
+    pub center_y: f64,
+    /// Half-width of the view in plane units.
+    pub scale: f64,
+}
+
+impl Region {
+    /// The paper tests "4 different regions of the plane exhibiting
+    /// different execution times (and different regularity)". The exact
+    /// coordinates are not given; these four span the same qualitative
+    /// range: mostly-interior (heavy, regular), boundary-rich (heavy,
+    /// irregular), filament (medium), mostly-exterior (cheap).
+    pub fn presets() -> [Region; 4] {
+        [
+            Region {
+                // the classic full view — mix of interior and exterior
+                name: "whole-set",
+                center_x: -0.65,
+                center_y: 0.0,
+                scale: 1.6,
+            },
+            Region {
+                // seahorse valley — boundary-rich, very irregular rows
+                name: "seahorse",
+                center_x: -0.75,
+                center_y: 0.11,
+                scale: 0.05,
+            },
+            Region {
+                // deep interior — every pixel runs to max_iter (heavy, regular)
+                name: "interior",
+                center_x: -0.16,
+                center_y: 0.0,
+                scale: 0.08,
+            },
+            Region {
+                // far exterior — almost every pixel escapes instantly (cheap)
+                name: "exterior",
+                center_x: 0.9,
+                center_y: 0.9,
+                scale: 0.4,
+            },
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<Region> {
+        Self::presets().into_iter().find(|r| r.name == name)
+    }
+
+    /// Complex coordinate of pixel `(px, py)` in a `width × height` view.
+    #[inline]
+    pub fn pixel_to_plane(&self, px: usize, py: usize, width: usize, height: usize) -> (f64, f64) {
+        let aspect = height as f64 / width as f64;
+        let x0 = self.center_x - self.scale;
+        let y0 = self.center_y - self.scale * aspect;
+        let step = 2.0 * self.scale / width as f64;
+        (x0 + px as f64 * step, y0 + py as f64 * step)
+    }
+}
+
+/// Iteration limit for a progressive pass, mirroring the QT example's
+/// geometric schedule (ours: 64·2^pass; pass 0..=7 → 64..8192).
+pub fn max_iter_for_pass(pass: u32) -> u32 {
+    64u32 << pass.min(16)
+}
+
+/// Escape-iteration count for one point; `max_iter` means "did not
+/// escape" (interior).
+#[inline]
+pub fn escape_iters(cx: f64, cy: f64, max_iter: u32) -> u32 {
+    let mut zr = 0.0f64;
+    let mut zi = 0.0f64;
+    let mut i = 0u32;
+    while i < max_iter {
+        let zr2 = zr * zr;
+        let zi2 = zi * zi;
+        if zr2 + zi2 > 4.0 {
+            break;
+        }
+        zi = 2.0 * zr * zi + cy;
+        zr = zr2 - zi2 + cx;
+        i += 1;
+    }
+    i
+}
+
+/// Render one row with the scalar engine.
+pub fn render_row_scalar(
+    region: &Region,
+    width: usize,
+    height: usize,
+    y: usize,
+    max_iter: u32,
+) -> Vec<u32> {
+    (0..width)
+        .map(|x| {
+            let (cx, cy) = region.pixel_to_plane(x, y, width, height);
+            escape_iters(cx, cy, max_iter)
+        })
+        .collect()
+}
+
+/// A rendered frame: `width × height` iteration counts, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub width: usize,
+    pub height: usize,
+    pub iters: Vec<u32>,
+    pub max_iter: u32,
+}
+
+impl Frame {
+    pub fn pixel(&self, x: usize, y: usize) -> u32 {
+        self.iters[y * self.width + x]
+    }
+
+    /// Fraction of interior pixels (hit max_iter) — the workload's
+    /// "heaviness" measure used in EXPERIMENTS.md.
+    pub fn interior_fraction(&self) -> f64 {
+        let hits = self.iters.iter().filter(|&&v| v >= self.max_iter).count();
+        hits as f64 / self.iters.len() as f64
+    }
+
+    /// Serialize as a binary PGM image (for the examples).
+    pub fn to_pgm(&self) -> Vec<u8> {
+        let mut out = format!("P5\n{} {}\n255\n", self.width, self.height).into_bytes();
+        for &v in &self.iters {
+            let g = if v >= self.max_iter {
+                0u8
+            } else {
+                // log-ish ramp
+                (255.0 * (v as f64 + 1.0).ln() / (self.max_iter as f64 + 1.0).ln()) as u8
+            };
+            out.push(g);
+        }
+        out
+    }
+}
+
+/// Sequential renderer (the "Original code" column of Fig. 3 / the
+/// single-threaded QT RenderThread). Returns `None` if aborted.
+pub fn render_sequential(
+    region: &Region,
+    width: usize,
+    height: usize,
+    max_iter: u32,
+    abort: Option<&AbortFlag>,
+) -> Option<Frame> {
+    let mut iters = Vec::with_capacity(width * height);
+    for y in 0..height {
+        if let Some(a) = abort {
+            if a.is_raised() {
+                return None;
+            }
+        }
+        iters.extend(render_row_scalar(region, width, height, y, max_iter));
+    }
+    Some(Frame {
+        width,
+        height,
+        iters,
+        max_iter,
+    })
+}
+
+/// Which compute engine the farm workers use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// Scalar Rust `svc` body (the paper's configuration).
+    #[default]
+    Scalar,
+    /// AOT JAX/Pallas tile kernel via PJRT (three-layer configuration).
+    Pjrt,
+}
+
+/// Row-task offloaded to the accelerator — the `task_t` of Fig. 3:
+/// the loop variable(s) copied into the stream (resolving the WAR
+/// dependency on `y`), everything else read from shared memory.
+#[derive(Debug, Clone, Copy)]
+pub struct RowTask {
+    pub y: usize,
+    pub max_iter: u32,
+}
+
+/// Static render parameters shared (read-only) by all workers —
+/// "all other data accesses can be resolved by just relying on the
+/// underlying shared memory" (§3.1).
+#[derive(Debug, Clone, Copy)]
+pub struct RenderParams {
+    pub region: Region,
+    pub width: usize,
+    pub height: usize,
+}
+
+/// Farm worker: one row per task.
+struct RowWorker {
+    params: Arc<RenderParams>,
+    engine: Engine,
+    /// Per-thread PJRT executable, pinned to the worker thread
+    /// (see [`SendCell`]'s contract).
+    kernel: SendCell<MandelTileKernel>,
+}
+
+impl Node for RowWorker {
+    type In = RowTask;
+    type Out = (usize, Vec<u32>);
+
+    fn svc_init(&mut self) {
+        // PJRT client + executable are per-thread (see runtime docs);
+        // built once here, off the hot path.
+        if self.engine == Engine::Pjrt && !self.kernel.is_initialized() {
+            self.kernel.get_or_init(|| {
+                MandelTileKernel::load().expect("load mandelbrot artifact (run `make artifacts`)")
+            });
+        }
+    }
+
+    fn svc(&mut self, task: RowTask, out: &mut Outbox<'_, Self::Out>) -> Svc {
+        let p = &self.params;
+        let row = match self.engine {
+            Engine::Scalar => {
+                render_row_scalar(&p.region, p.width, p.height, task.y, task.max_iter)
+            }
+            Engine::Pjrt => {
+                let kernel = self.kernel.get().expect("svc_init ran");
+                render_row_pjrt(kernel, p, task.y, task.max_iter)
+            }
+        };
+        out.send((task.y, row));
+        Svc::GoOn
+    }
+}
+
+/// Row evaluation through the AOT tile kernel: the row is split into
+/// 256-wide tiles; coordinates are computed on the Rust side (f32), the
+/// escape loop runs inside the XLA executable.
+fn render_row_pjrt(
+    kernel: &MandelTileKernel,
+    p: &RenderParams,
+    y: usize,
+    max_iter: u32,
+) -> Vec<u32> {
+    let mut row = Vec::with_capacity(p.width);
+    let mut cx = [0f32; MANDEL_TILE];
+    let mut cy = [0f32; MANDEL_TILE];
+    let mut x = 0usize;
+    while x < p.width {
+        let n = (p.width - x).min(MANDEL_TILE);
+        for k in 0..MANDEL_TILE {
+            // Pad the tail tile by repeating the last in-range pixel.
+            let px = if k < n { x + k } else { x + n - 1 };
+            let (a, b) = p.region.pixel_to_plane(px, y, p.width, p.height);
+            cx[k] = a as f32;
+            cy[k] = b as f32;
+        }
+        let counts = kernel
+            .compute(&cx, &cy, max_iter)
+            .expect("mandel tile kernel");
+        row.extend(counts[..n].iter().map(|&v| v as u32));
+        x += n;
+    }
+    row
+}
+
+/// The accelerated renderer: owns the farm accelerator across passes
+/// (created once, frozen between passes — §4.1).
+pub struct AcceleratedRenderer {
+    acc: FarmAccel<RowTask, (usize, Vec<u32>)>,
+    params: Arc<RenderParams>,
+    first_pass_done: bool,
+}
+
+impl AcceleratedRenderer {
+    /// Create + run the farm accelerator with `workers` workers.
+    pub fn new(params: RenderParams, workers: usize, engine: Engine) -> Self {
+        let params = Arc::new(params);
+        let cfg = FarmConfig::default()
+            .workers(workers)
+            // rows have very different costs: on-demand scheduling
+            .sched(SchedPolicy::OnDemand);
+        let p2 = params.clone();
+        let acc = FarmAccel::run_then_freeze(cfg, move |_| RowWorker {
+            params: p2.clone(),
+            engine,
+            kernel: SendCell::empty(),
+        });
+        AcceleratedRenderer {
+            acc,
+            params,
+            first_pass_done: false,
+        }
+    }
+
+    /// Render one pass. Checks `abort` between row offloads (the QT
+    /// restart protocol); on abort the pass still drains cleanly and
+    /// returns `None`.
+    pub fn render_pass(&mut self, max_iter: u32, abort: Option<&AbortFlag>) -> Option<Frame> {
+        let p = *self.params;
+        if self.first_pass_done {
+            self.acc.thaw();
+        }
+        self.first_pass_done = true;
+        let mut aborted = false;
+        let mut offloaded = 0usize;
+        let mut iters = vec![0u32; p.width * p.height];
+        let mut collected = 0usize;
+        for y in 0..p.height {
+            if let Some(a) = abort {
+                if a.is_raised() {
+                    aborted = true;
+                    break;
+                }
+            }
+            self.acc.offload(RowTask { y, max_iter }).expect("offload");
+            offloaded += 1;
+            // Opportunistically drain results while offloading
+            // (keeps the output queue short, overlaps with compute).
+            while let Some((y, row)) = self.acc.load_result_nb() {
+                iters[y * p.width..y * p.width + p.width].copy_from_slice(&row);
+                collected += 1;
+            }
+        }
+        self.acc.offload_eos();
+        while collected < offloaded {
+            match self.acc.load_result() {
+                Some((y, row)) => {
+                    iters[y * p.width..y * p.width + p.width].copy_from_slice(&row);
+                    collected += 1;
+                }
+                None => break,
+            }
+        }
+        // Consume the EOS so the cycle closes and workers freeze.
+        while self.acc.load_result().is_some() {}
+        self.acc.wait_freezing();
+        if aborted {
+            None
+        } else {
+            Some(Frame {
+                width: p.width,
+                height: p.height,
+                iters,
+                max_iter,
+            })
+        }
+    }
+
+    /// Final teardown.
+    pub fn shutdown(mut self) -> TraceReport {
+        if self.first_pass_done {
+            self.acc.thaw();
+        }
+        self.acc.offload_eos();
+        self.acc.wait()
+    }
+}
+
+/// Convenience: full progressive render (all `passes`), like the QT app
+/// recomputing after a zoom. Returns per-pass frames.
+pub fn render_progressive(
+    params: RenderParams,
+    workers: usize,
+    engine: Engine,
+    passes: u32,
+) -> Vec<Frame> {
+    let mut r = AcceleratedRenderer::new(params, workers, engine);
+    let frames: Vec<Frame> = (0..passes)
+        .map(|p| {
+            r.render_pass(max_iter_for_pass(p), None)
+                .expect("no abort => frame")
+        })
+        .collect();
+    r.shutdown();
+    frames
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const W: usize = 64;
+    const H: usize = 48;
+
+    #[test]
+    fn escape_iters_known_points() {
+        // origin is interior
+        assert_eq!(escape_iters(0.0, 0.0, 100), 100);
+        // far outside escapes immediately
+        assert!(escape_iters(2.0, 2.0, 100) <= 1);
+        // c = -1 is interior (period-2)
+        assert_eq!(escape_iters(-1.0, 0.0, 500), 500);
+    }
+
+    #[test]
+    fn pass_schedule_is_geometric() {
+        assert_eq!(max_iter_for_pass(0), 64);
+        assert_eq!(max_iter_for_pass(1), 128);
+        assert_eq!(max_iter_for_pass(7), 8192);
+    }
+
+    #[test]
+    fn sequential_render_shapes() {
+        let r = Region::presets()[0];
+        let f = render_sequential(&r, W, H, 64, None).unwrap();
+        assert_eq!(f.iters.len(), W * H);
+        assert!(f.interior_fraction() > 0.0 && f.interior_fraction() < 1.0);
+    }
+
+    #[test]
+    fn accelerated_matches_sequential_all_regions() {
+        for region in Region::presets() {
+            let seq = render_sequential(&region, W, H, 128, None).unwrap();
+            let frames = render_progressive(
+                RenderParams {
+                    region,
+                    width: W,
+                    height: H,
+                },
+                4,
+                Engine::Scalar,
+                2,
+            );
+            // pass 1 has max_iter 128 == seq
+            assert_eq!(frames[1].iters, seq.iters, "region {}", region.name);
+        }
+    }
+
+    #[test]
+    fn renderer_freeze_thaw_across_passes() {
+        let region = Region::presets()[3]; // cheap region
+        let mut r = AcceleratedRenderer::new(
+            RenderParams {
+                region,
+                width: W,
+                height: H,
+            },
+            3,
+            Engine::Scalar,
+        );
+        for pass in 0..4 {
+            let f = r.render_pass(max_iter_for_pass(pass), None).unwrap();
+            assert_eq!(f.iters.len(), W * H);
+        }
+        r.shutdown();
+    }
+
+    #[test]
+    fn abort_flag_interrupts_pass() {
+        let region = Region::presets()[0];
+        let abort = AbortFlag::new();
+        abort.raise();
+        let mut r = AcceleratedRenderer::new(
+            RenderParams {
+                region,
+                width: W,
+                height: H,
+            },
+            2,
+            Engine::Scalar,
+        );
+        assert!(r.render_pass(64, Some(&abort)).is_none());
+        // After abort, the next pass still works (restart protocol).
+        abort.clear();
+        assert!(r.render_pass(64, Some(&abort)).is_some());
+        r.shutdown();
+    }
+
+    #[test]
+    fn abort_in_sequential() {
+        let region = Region::presets()[0];
+        let abort = AbortFlag::new();
+        abort.raise();
+        assert!(render_sequential(&region, W, H, 64, Some(&abort)).is_none());
+    }
+
+    #[test]
+    fn pgm_has_header_and_payload() {
+        let r = Region::presets()[0];
+        let f = render_sequential(&r, 8, 8, 64, None).unwrap();
+        let pgm = f.to_pgm();
+        assert!(pgm.starts_with(b"P5\n8 8\n255\n"));
+        assert_eq!(pgm.len(), b"P5\n8 8\n255\n".len() + 64);
+    }
+
+    #[test]
+    fn region_lookup() {
+        assert!(Region::by_name("seahorse").is_some());
+        assert!(Region::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,254 @@
+//! The paper's running example (Fig. 3): accelerating a sequential
+//! matrix multiplication by offloading row-tasks onto a farm.
+//!
+//! The derivation in Fig. 3 is followed line by line:
+//!
+//! * `task_t { i, j }` → here [`RowTask`] (we offload whole rows — the
+//!   paper notes the granularity choice "offload only the index i, or i
+//!   and j, or all three" is the programmer's; per-(i,j) granularity is
+//!   exercised in the granularity bench);
+//! * `A`, `B` read-only from shared memory (§3.1: "read-only, as A at
+//!   line 54");
+//! * `C[i][j]` single-assignment shared writes (§3.1: "single assignment
+//!   as C at line 55") — expressed with an [`UnsafeCell`] wrapper whose
+//!   safety argument *is* Bernstein's condition: distinct tasks write
+//!   disjoint rows.
+
+use std::cell::UnsafeCell;
+use std::sync::Arc;
+
+use crate::accel::FarmAccel;
+use crate::farm::FarmConfig;
+use crate::node::{Node, Outbox, Svc};
+use crate::runtime::{MatmulKernel, MATMUL_N};
+use crate::util::XorShift64;
+
+/// A square row-major matrix of `i64` (the paper uses `long`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Matrix {
+    pub n: usize,
+    pub data: Vec<i64>,
+}
+
+impl Matrix {
+    pub fn zeros(n: usize) -> Self {
+        Matrix {
+            n,
+            data: vec![0; n * n],
+        }
+    }
+
+    /// Deterministic pseudo-random fill (reproducible experiments).
+    pub fn random(n: usize, seed: u64) -> Self {
+        let mut rng = XorShift64::new(seed);
+        Matrix {
+            n,
+            data: (0..n * n).map(|_| (rng.next_u64() % 100) as i64 - 50).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> i64 {
+        self.data[i * self.n + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[i64] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+}
+
+/// Sequential triple loop — the left column of Fig. 3.
+pub fn matmul_sequential(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.n, b.n);
+    let n = a.n;
+    let mut c = Matrix::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for k in 0..n {
+                acc += a.at(i, k) * b.at(k, j);
+            }
+            c.data[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Shared result matrix written concurrently by workers, one row per
+/// task.
+///
+/// SAFETY ARGUMENT (this is the paper's §3.1 discipline made explicit):
+/// the emitter assigns each row index to exactly one task, each task to
+/// exactly one worker, and a worker writes only the row of its task —
+/// writes are disjoint (Bernstein: no WAW), and the caller reads only
+/// after the accelerator's EOS barrier (`wait`) — no RAW race.
+pub struct SharedResult {
+    n: usize,
+    cells: UnsafeCell<Vec<i64>>,
+}
+
+unsafe impl Sync for SharedResult {}
+unsafe impl Send for SharedResult {}
+
+impl SharedResult {
+    pub fn new(n: usize) -> Arc<Self> {
+        Arc::new(SharedResult {
+            n,
+            cells: UnsafeCell::new(vec![0; n * n]),
+        })
+    }
+
+    /// Write one row. Caller contract: row indices are partitioned
+    /// across tasks (see type-level docs).
+    ///
+    /// # Safety
+    /// `i` must be written by at most one live task.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn row_mut(&self, i: usize) -> &mut [i64] {
+        let v = &mut *self.cells.get();
+        &mut v[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Take the finished matrix (after the EOS barrier).
+    pub fn into_matrix(self: Arc<Self>) -> Matrix {
+        let n = self.n;
+        let me = Arc::try_unwrap(self)
+            .unwrap_or_else(|_| panic!("result still shared after wait()"));
+        Matrix {
+            n,
+            data: me.cells.into_inner(),
+        }
+    }
+}
+
+/// The offloaded task: the loop index copied into the stream, resolving
+/// the WAR dependency on `i` (paper §3.1).
+pub type RowTask = usize;
+
+struct RowWorker {
+    a: Arc<Matrix>,
+    b: Arc<Matrix>,
+    c: Arc<SharedResult>,
+}
+
+impl Node for RowWorker {
+    type In = RowTask;
+    type Out = ();
+
+    fn svc(&mut self, i: RowTask, _out: &mut Outbox<'_, ()>) -> Svc {
+        let n = self.a.n;
+        // SAFETY: row `i` appears in exactly one task (emitter offloads
+        // 0..n once); see SharedResult docs.
+        let out_row = unsafe { self.c.row_mut(i) };
+        for j in 0..n {
+            let mut acc = 0i64;
+            for k in 0..n {
+                acc += self.a.at(i, k) * self.b.at(k, j);
+            }
+            out_row[j] = acc;
+        }
+        Svc::GoOn
+    }
+}
+
+/// The right column of Fig. 3: create the accelerator, offload row
+/// tasks, EOS, wait, read C.
+pub fn matmul_accelerated(a: &Matrix, b: &Matrix, workers: usize) -> Matrix {
+    assert_eq!(a.n, b.n);
+    let n = a.n;
+    let a = Arc::new(a.clone());
+    let b = Arc::new(b.clone());
+    let c = SharedResult::new(n);
+    let (a2, b2, c2) = (a.clone(), b.clone(), c.clone());
+    let mut acc: FarmAccel<RowTask, ()> = FarmAccel::run_no_collector(
+        FarmConfig::default().workers(workers),
+        move |_| RowWorker {
+            a: a2.clone(),
+            b: b2.clone(),
+            c: c2.clone(),
+        },
+    );
+    for i in 0..n {
+        acc.offload(i).expect("offload");
+    }
+    acc.offload_eos();
+    acc.wait(); // join ≡ the paper's farm.wait()
+    c.into_matrix()
+}
+
+/// f32 matmul via the AOT XLA kernel (fixed [`MATMUL_N`] edge) — the
+/// three-layer path used by `examples/quickstart.rs` to cross-check the
+/// PJRT bridge numerically.
+pub fn matmul_pjrt_f32(a: &[f32], b: &[f32]) -> anyhow::Result<Vec<f32>> {
+    let k = MatmulKernel::load()?;
+    k.compute(a, b)
+}
+
+/// Reference f32 matmul for validating the PJRT path.
+pub fn matmul_ref_f32(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            for j in 0..n {
+                c[i * n + j] += aik * b[k * n + j];
+            }
+        }
+    }
+    c
+}
+
+/// Edge used by the PJRT kernel.
+pub const PJRT_N: usize = MATMUL_N;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_identity() {
+        let n = 8;
+        let mut eye = Matrix::zeros(n);
+        for i in 0..n {
+            eye.data[i * n + i] = 1;
+        }
+        let a = Matrix::random(n, 42);
+        assert_eq!(matmul_sequential(&a, &eye), a);
+    }
+
+    #[test]
+    fn accelerated_matches_sequential() {
+        for n in [1usize, 7, 32, 64] {
+            let a = Matrix::random(n, 1);
+            let b = Matrix::random(n, 2);
+            let seq = matmul_sequential(&a, &b);
+            let acc = matmul_accelerated(&a, &b, 4);
+            assert_eq!(seq, acc, "n = {n}");
+        }
+    }
+
+    #[test]
+    fn accelerated_single_worker() {
+        let a = Matrix::random(16, 3);
+        let b = Matrix::random(16, 4);
+        assert_eq!(matmul_sequential(&a, &b), matmul_accelerated(&a, &b, 1));
+    }
+
+    #[test]
+    fn ref_f32_identity() {
+        let n = 4;
+        let mut eye = vec![0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let a: Vec<f32> = (0..n * n).map(|i| i as f32).collect();
+        assert_eq!(matmul_ref_f32(&a, &eye, n), a);
+    }
+
+    #[test]
+    fn matrix_helpers() {
+        let m = Matrix::random(4, 9);
+        assert_eq!(m.row(1).len(), 4);
+        assert_eq!(m.at(1, 2), m.data[6]);
+    }
+}

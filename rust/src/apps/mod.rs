@@ -1,0 +1,7 @@
+//! The paper's workloads (§3 Fig. 3, §4.1, §4.2), each in sequential and
+//! FastFlow-accelerated form. These are the programs the evaluation
+//! tables/figures are generated from.
+
+pub mod mandelbrot;
+pub mod matmul;
+pub mod nqueens;

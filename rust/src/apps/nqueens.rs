@@ -1,0 +1,313 @@
+//! The N-queens workload (paper §4.2, Table 2).
+//!
+//! The sequential baseline follows Jeff Somers' heavily-optimised C
+//! solver: bitboard backtracking over column/diagonal occupancy masks,
+//! computing one half of the first-row placements and doubling (a
+//! solution cannot be symmetric across the Y axis, so every solution of
+//! the half generates exactly one more by reflection; for odd N the
+//! middle column is counted separately, without doubling).
+//!
+//! The accelerated version follows the paper exactly: "a stream of
+//! independent tasks, each corresponding to an initial placement of a
+//! number of queens on the board, is produced and offloaded into the
+//! farm accelerator", with the farm built **without the collector** —
+//! each worker accumulates its solution count locally and publishes at
+//! `svc_end` (shared-memory result, §3.1's single-assignment discipline).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::accel::FarmAccel;
+use crate::farm::{FarmConfig, SchedPolicy};
+use crate::node::{Node, Outbox, Svc};
+
+/// Known solution counts (OEIS A000170) for validation.
+pub fn known_solutions(n: u32) -> Option<u64> {
+    Some(match n {
+        1 => 1,
+        2 => 0,
+        3 => 0,
+        4 => 2,
+        5 => 10,
+        6 => 4,
+        7 => 40,
+        8 => 92,
+        9 => 352,
+        10 => 724,
+        11 => 2_680,
+        12 => 14_200,
+        13 => 73_712,
+        14 => 365_596,
+        15 => 2_279_184,
+        16 => 14_772_512,
+        17 => 95_815_104,
+        18 => 666_090_624,
+        19 => 4_968_057_848,
+        20 => 39_029_188_884,
+        21 => 314_666_222_712,
+        _ => return None,
+    })
+}
+
+/// Count completions of a partial placement by bitboard backtracking.
+/// `cols`/`dl`/`dr` are occupancy masks (dl shifts left per row, dr
+/// shifts right), `row` the next row to fill, `mask` = (1<<n)-1.
+#[inline]
+fn count_completions(mask: u32, cols: u32, dl: u32, dr: u32, row: u32, n: u32) -> u64 {
+    if row == n {
+        return 1;
+    }
+    let mut free = mask & !(cols | dl | dr);
+    let mut total = 0u64;
+    while free != 0 {
+        let bit = free & free.wrapping_neg(); // lowest free square
+        free ^= bit;
+        total += count_completions(
+            mask,
+            cols | bit,
+            (dl | bit) << 1,
+            (dr | bit) >> 1,
+            row + 1,
+            n,
+        );
+    }
+    total
+}
+
+/// Sequential Somers-style count: half first row, double; middle column
+/// of odd boards counted once.
+pub fn count_sequential(n: u32) -> u64 {
+    assert!((1..=31).contains(&n));
+    if n == 1 {
+        return 1;
+    }
+    let mask = (1u32 << n) - 1;
+    let mut total = 0u64;
+    for c in 0..n / 2 {
+        let bit = 1u32 << c;
+        total += 2 * count_completions(mask, bit, bit << 1, bit >> 1, 1, n);
+    }
+    if n % 2 == 1 {
+        let bit = 1u32 << (n / 2);
+        total += count_completions(mask, bit, bit << 1, bit >> 1, 1, n);
+    }
+    total
+}
+
+/// One offloaded task: a prefix placement of `row` queens — the stream
+/// datatype of §4.2 ("the stream type … contained all the local
+/// variables that must be passed to the worker thread").
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixTask {
+    pub cols: u32,
+    pub dl: u32,
+    pub dr: u32,
+    pub row: u32,
+    /// 2 for half-board prefixes (mirror doubling), 1 for the odd-N
+    /// middle-column prefixes.
+    pub mult: u64,
+}
+
+/// Generate the task stream: all valid placements of `depth` queens
+/// (first rows), carrying the mirror multiplier. The paper used
+/// `depth = 4` (e.g. 1710 tasks at 18×18).
+pub fn gen_tasks(n: u32, depth: u32) -> Vec<PrefixTask> {
+    assert!(depth >= 1 && depth < n);
+    let mask = (1u32 << n) - 1;
+    let mut tasks = Vec::new();
+    let expand = |first_bit: u32, mult: u64, tasks: &mut Vec<PrefixTask>| {
+        // DFS to `depth` rows.
+        fn rec(
+            mask: u32,
+            cols: u32,
+            dl: u32,
+            dr: u32,
+            row: u32,
+            depth: u32,
+            n: u32,
+            mult: u64,
+            out: &mut Vec<PrefixTask>,
+        ) {
+            if row == depth || row == n {
+                out.push(PrefixTask {
+                    cols,
+                    dl,
+                    dr,
+                    row,
+                    mult,
+                });
+                return;
+            }
+            let mut free = mask & !(cols | dl | dr);
+            while free != 0 {
+                let bit = free & free.wrapping_neg();
+                free ^= bit;
+                rec(
+                    mask,
+                    cols | bit,
+                    (dl | bit) << 1,
+                    (dr | bit) >> 1,
+                    row + 1,
+                    depth,
+                    n,
+                    mult,
+                    out,
+                );
+            }
+        }
+        rec(
+            mask,
+            first_bit,
+            first_bit << 1,
+            first_bit >> 1,
+            1,
+            depth,
+            n,
+            mult,
+            tasks,
+        );
+    };
+    for c in 0..n / 2 {
+        expand(1u32 << c, 2, &mut tasks);
+    }
+    if n % 2 == 1 {
+        expand(1u32 << (n / 2), 1, &mut tasks);
+    }
+    tasks
+}
+
+/// Solve one task to completion.
+#[inline]
+pub fn solve_task(n: u32, t: &PrefixTask) -> u64 {
+    let mask = (1u32 << n) - 1;
+    t.mult * count_completions(mask, t.cols, t.dl, t.dr, t.row, n)
+}
+
+/// Worker: accumulates locally, publishes once at `svc_end` — no
+/// per-task synchronization at all (the collector-less §4.2 shape).
+struct QueensWorker {
+    n: u32,
+    local: u64,
+    total: Arc<AtomicU64>,
+}
+
+impl Node for QueensWorker {
+    type In = PrefixTask;
+    type Out = ();
+
+    fn svc(&mut self, task: PrefixTask, _out: &mut Outbox<'_, ()>) -> Svc {
+        self.local += solve_task(self.n, &task);
+        Svc::GoOn
+    }
+
+    fn svc_end(&mut self) {
+        self.total.fetch_add(self.local, Ordering::Relaxed);
+        self.local = 0;
+    }
+}
+
+/// Result of an accelerated run.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelRun {
+    pub solutions: u64,
+    pub tasks: usize,
+}
+
+/// Count solutions with the farm accelerator (collector-less farm,
+/// `workers` workers, task stream from `depth`-queen prefixes).
+pub fn count_parallel(n: u32, depth: u32, workers: usize) -> ParallelRun {
+    let tasks = gen_tasks(n, depth);
+    let ntasks = tasks.len();
+    let total = Arc::new(AtomicU64::new(0));
+    let t2 = total.clone();
+    let mut acc: FarmAccel<PrefixTask, ()> = FarmAccel::run_no_collector(
+        FarmConfig::default()
+            .workers(workers)
+            .sched(SchedPolicy::OnDemand),
+        move |_| QueensWorker {
+            n,
+            local: 0,
+            total: t2.clone(),
+        },
+    );
+    for t in tasks {
+        acc.offload(t).expect("offload");
+    }
+    acc.offload_eos();
+    acc.wait();
+    ParallelRun {
+        solutions: total.load(Ordering::Relaxed),
+        tasks: ntasks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_matches_known_counts() {
+        for n in 1..=12 {
+            assert_eq!(
+                count_sequential(n),
+                known_solutions(n).unwrap(),
+                "N = {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn tasks_partition_the_search_space() {
+        for n in [6u32, 8, 9, 11] {
+            for depth in 1..4.min(n - 1) {
+                let total: u64 = gen_tasks(n, depth)
+                    .iter()
+                    .map(|t| solve_task(n, t))
+                    .sum();
+                assert_eq!(total, known_solutions(n).unwrap(), "N={n} depth={depth}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_known_counts() {
+        for n in [8u32, 10, 12] {
+            let run = count_parallel(n, 3, 4);
+            assert_eq!(run.solutions, known_solutions(n).unwrap(), "N = {n}");
+            assert!(run.tasks > 0);
+        }
+    }
+
+    #[test]
+    fn parallel_depth_four_like_paper() {
+        let run = count_parallel(11, 4, 4);
+        assert_eq!(run.solutions, known_solutions(11).unwrap());
+    }
+
+    #[test]
+    fn task_count_grows_with_depth() {
+        let d1 = gen_tasks(10, 1).len();
+        let d2 = gen_tasks(10, 2).len();
+        let d3 = gen_tasks(10, 3).len();
+        assert!(d1 < d2 && d2 < d3);
+        // depth-1 tasks = ceil(n/2) first-row placements
+        assert_eq!(d1, 5);
+    }
+
+    #[test]
+    fn mirror_multipliers_assigned() {
+        let tasks = gen_tasks(9, 1);
+        let doubles = tasks.iter().filter(|t| t.mult == 2).count();
+        let singles = tasks.iter().filter(|t| t.mult == 1).count();
+        assert_eq!(doubles, 4); // cols 0..4 (half of 9)
+        assert_eq!(singles, 1); // middle column
+    }
+
+    #[test]
+    fn trivial_boards() {
+        assert_eq!(count_sequential(1), 1);
+        assert_eq!(count_sequential(2), 0);
+        assert_eq!(count_sequential(3), 0);
+        assert_eq!(count_sequential(4), 2);
+    }
+}

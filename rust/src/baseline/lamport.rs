@@ -1,0 +1,209 @@
+//! Lamport's lock-free SPSC circular buffer (1983), the paper's foil.
+//!
+//! `push` tests `(tail + 1) % size != head` — reading the consumer-owned
+//! `head`; `pop` tests `head != tail` — reading the producer-owned `tail`.
+//! Every operation therefore loads a line the partner core is actively
+//! writing, and the resulting coherence-miss storm is exactly the "very
+//! high invalidation rate" of §2.2. Correctness here is preserved on
+//! non-SC hardware by using Acquire/Release atomics (original relies on
+//! sequential consistency); the *sharing pattern* — the thing being
+//! measured — is faithful.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::spsc::Full;
+use crate::util::Backoff;
+
+struct Ring<T> {
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    // Deliberately NOT cache-padded apart: head and tail sharing is the
+    // phenomenon this baseline exists to exhibit. (They still sit in
+    // separate words; padding them would only *reduce* the effect the
+    // paper describes, not eliminate it, since each op reads both.)
+    head: AtomicUsize,
+    tail: AtomicUsize,
+    producer_alive: AtomicBool,
+    consumer_alive: AtomicBool,
+}
+
+unsafe impl<T: Send> Send for Ring<T> {}
+unsafe impl<T: Send> Sync for Ring<T> {}
+
+pub struct LamportProducer<T> {
+    ring: Arc<Ring<T>>,
+    cap: usize,
+}
+
+pub struct LamportConsumer<T> {
+    ring: Arc<Ring<T>>,
+    cap: usize,
+}
+
+/// Create a Lamport queue holding up to `cap` elements (allocates
+/// `cap + 1` slots — one slot is sacrificed to distinguish full/empty).
+pub fn lamport<T: Send>(cap: usize) -> (LamportProducer<T>, LamportConsumer<T>) {
+    assert!(cap >= 1);
+    let size = cap + 1;
+    let buf: Box<[UnsafeCell<MaybeUninit<T>>]> =
+        (0..size).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+    let ring = Arc::new(Ring {
+        buf,
+        head: AtomicUsize::new(0),
+        tail: AtomicUsize::new(0),
+        producer_alive: AtomicBool::new(true),
+        consumer_alive: AtomicBool::new(true),
+    });
+    (
+        LamportProducer {
+            ring: ring.clone(),
+            cap: size,
+        },
+        LamportConsumer { ring, cap: size },
+    )
+}
+
+impl<T: Send> LamportProducer<T> {
+    #[inline]
+    pub fn try_push(&mut self, value: T) -> Result<(), Full<T>> {
+        let tail = self.ring.tail.load(Ordering::Relaxed);
+        let next = if tail + 1 == self.cap { 0 } else { tail + 1 };
+        // The Lamport full-test: reads the consumer-owned head.
+        if next == self.ring.head.load(Ordering::Acquire) {
+            return Err(Full(value));
+        }
+        unsafe { (*self.ring.buf[tail].get()).write(value) };
+        self.ring.tail.store(next, Ordering::Release);
+        Ok(())
+    }
+
+    pub fn push(&mut self, mut value: T) -> Result<(), Full<T>> {
+        let mut backoff = Backoff::new();
+        loop {
+            match self.try_push(value) {
+                Ok(()) => return Ok(()),
+                Err(Full(v)) => {
+                    if !self.ring.consumer_alive.load(Ordering::Acquire) {
+                        return Err(Full(v));
+                    }
+                    value = v;
+                    backoff.snooze();
+                }
+            }
+        }
+    }
+}
+
+impl<T: Send> LamportConsumer<T> {
+    #[inline]
+    pub fn try_pop(&mut self) -> Option<T> {
+        let head = self.ring.head.load(Ordering::Relaxed);
+        // The Lamport empty-test: reads the producer-owned tail.
+        if head == self.ring.tail.load(Ordering::Acquire) {
+            return None;
+        }
+        let value = unsafe { (*self.ring.buf[head].get()).assume_init_read() };
+        let next = if head + 1 == self.cap { 0 } else { head + 1 };
+        self.ring.head.store(next, Ordering::Release);
+        Some(value)
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        let mut backoff = Backoff::new();
+        loop {
+            if let Some(v) = self.try_pop() {
+                return Some(v);
+            }
+            if !self.ring.producer_alive.load(Ordering::Acquire) {
+                return self.try_pop();
+            }
+            backoff.snooze();
+        }
+    }
+}
+
+impl<T> Drop for LamportProducer<T> {
+    fn drop(&mut self) {
+        self.ring.producer_alive.store(false, Ordering::Release);
+    }
+}
+
+impl<T> Drop for LamportConsumer<T> {
+    fn drop(&mut self) {
+        self.ring.consumer_alive.store(false, Ordering::Release);
+    }
+}
+
+impl<T> Drop for Ring<T> {
+    fn drop(&mut self) {
+        let mut head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Relaxed);
+        let cap = self.buf.len();
+        while head != tail {
+            unsafe { (*self.buf[head].get()).assume_init_drop() };
+            head = if head + 1 == cap { 0 } else { head + 1 };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let (mut p, mut c) = lamport::<u32>(4);
+        assert_eq!(c.try_pop(), None);
+        p.try_push(1).unwrap();
+        p.try_push(2).unwrap();
+        assert_eq!(c.try_pop(), Some(1));
+        assert_eq!(c.try_pop(), Some(2));
+        assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn holds_exactly_cap() {
+        let (mut p, _c) = lamport::<u32>(3);
+        p.try_push(1).unwrap();
+        p.try_push(2).unwrap();
+        p.try_push(3).unwrap();
+        assert!(p.try_push(4).is_err());
+    }
+
+    #[test]
+    fn fifo_across_threads() {
+        const N: usize = 20_000;
+        let (mut p, mut c) = lamport::<usize>(64);
+        let t = std::thread::spawn(move || {
+            for i in 0..N {
+                p.push(i).unwrap();
+            }
+        });
+        for expect in 0..N {
+            assert_eq!(c.pop(), Some(expect));
+        }
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn drops_inflight() {
+        use std::sync::atomic::AtomicUsize;
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        #[derive(Debug)]
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let (mut p, c) = lamport::<D>(8);
+        for _ in 0..4 {
+            p.try_push(D).unwrap();
+        }
+        drop(p);
+        drop(c);
+        assert_eq!(DROPS.load(Ordering::SeqCst), 4);
+    }
+}

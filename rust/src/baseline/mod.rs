@@ -1,0 +1,18 @@
+//! Comparison queues the paper argues against (§2.2, §5).
+//!
+//! * [`lamport`] — Lamport's classic lock-free circular buffer: correct
+//!   under sequential consistency, and — the paper's point — both sides
+//!   read *both* the head and tail indices, so the index cache lines
+//!   ping-pong between cores on every operation.
+//! * [`mutex_queue`] — a POSIX-lock-style blocking queue
+//!   (`Mutex<VecDeque>` + `Condvar`), the baseline for the "lock overhead
+//!   is non-negligible on multi-core" claim.
+//!
+//! Both are benchmarked head-to-head against the FastForward queues in
+//! `benches/queue_latency.rs` (reproducing the §2.2/§3.2 overhead claims).
+
+pub mod lamport;
+pub mod mutex_queue;
+
+pub use lamport::{lamport, LamportConsumer, LamportProducer};
+pub use mutex_queue::MutexQueue;

@@ -1,0 +1,188 @@
+//! Blocking lock-based queue: the "POSIX locks" baseline (§5 compares
+//! FastFlow against POSIX-lock implementations; §2.3 notes lock overhead
+//! is non-negligible on multi-core).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// A classic bounded MPMC blocking queue built from `Mutex` + `Condvar`.
+/// Used as the lock-based baseline in the queue benchmarks and usable as
+/// a drop-in channel in ablation experiments.
+pub struct MutexQueue<T> {
+    inner: Mutex<Shared<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct Shared<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> MutexQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1);
+        MutexQueue {
+            inner: Mutex::new(Shared {
+                buf: VecDeque::with_capacity(cap),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Blocking push; `Err(value)` if the queue was closed.
+    pub fn push(&self, value: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        while g.buf.len() >= self.cap && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return Err(value);
+        }
+        g.buf.push_back(value);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking push.
+    pub fn try_push(&self, value: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.buf.len() >= self.cap {
+            return Err(value);
+        }
+        g.buf.push_back(value);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(v) = g.buf.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let v = g.buf.pop_front();
+        if v.is_some() {
+            drop(g);
+            self.not_full.notify_one();
+        }
+        v
+    }
+
+    /// Close: wakes all blocked parties; pushes fail afterwards, pops
+    /// drain and then return `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn roundtrip() {
+        let q = MutexQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn try_push_respects_capacity() {
+        let q = MutexQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(3));
+    }
+
+    #[test]
+    fn close_unblocks_and_drains() {
+        let q = Arc::new(MutexQueue::new(2));
+        q.push(7).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            let a = q2.pop();
+            let b = q2.pop(); // blocks until close
+            (a, b)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        let (a, b) = t.join().unwrap();
+        assert_eq!(a, Some(7));
+        assert_eq!(b, None);
+        assert_eq!(q.push(1), Err(1));
+    }
+
+    #[test]
+    fn mpmc_sum_preserved() {
+        const PRODUCERS: usize = 4;
+        const PER: usize = 3_000;
+        let q = Arc::new(MutexQueue::new(128));
+        let mut handles = vec![];
+        for p in 0..PRODUCERS {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER {
+                    q.push(p * PER + i).unwrap();
+                }
+            }));
+        }
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut sum = 0usize;
+                for _ in 0..PRODUCERS * PER {
+                    sum += q.pop().unwrap();
+                }
+                sum
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = consumer.join().unwrap();
+        let n = PRODUCERS * PER;
+        assert_eq!(total, n * (n - 1) / 2);
+    }
+}

@@ -1,0 +1,366 @@
+//! Typed streaming channels: an SPSC queue carrying [`Msg`] frames.
+//!
+//! This is the layer where the paper's untyped `void*` streams (with the
+//! magic `FF_EOS` sentinel pointer) become a typed protocol: every frame
+//! is either `Task(T)` or `Eos`. End-of-stream propagates along skeleton
+//! paths exactly as in FastFlow's run-time (§3: "receives the
+//! End-of-Stream, which is propagated in transient states of the
+//! lifecycle to all threads").
+//!
+//! Two flavors, matching FastFlow's queue zoo:
+//!
+//! * [`stream`] — **bounded** (FastForward ring): used for the internal
+//!   skeleton links, where the bound provides backpressure;
+//! * [`stream_unbounded`] — **unbounded** (uSWSR segments): used for the
+//!   accelerator's offload input and result output. This is what makes
+//!   the paper's Fig. 3 pattern — offload *all* tasks, then pop results —
+//!   deadlock-free regardless of task count: the offloading thread can
+//!   never be blocked by its own undrained results.
+
+use crate::spsc::{self, Consumer, Full, Producer, UnboundedConsumer, UnboundedProducer};
+use crate::util::Backoff;
+
+/// A frame on a stream: a task or the end-of-stream mark.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Msg<T> {
+    Task(T),
+    Eos,
+}
+
+impl<T> Msg<T> {
+    pub fn is_eos(&self) -> bool {
+        matches!(self, Msg::Eos)
+    }
+    pub fn into_task(self) -> Option<T> {
+        match self {
+            Msg::Task(t) => Some(t),
+            Msg::Eos => None,
+        }
+    }
+}
+
+/// Error: the peer disconnected (its half of the queue was dropped).
+#[derive(Debug, PartialEq, Eq)]
+pub struct Disconnected<T>(pub Msg<T>);
+
+enum TxFlavor<T: Send> {
+    Bounded(Producer<Msg<T>>),
+    Unbounded(UnboundedProducer<Msg<T>>),
+}
+
+enum RxFlavor<T: Send> {
+    Bounded(Consumer<Msg<T>>),
+    Unbounded(UnboundedConsumer<Msg<T>>),
+}
+
+/// Sending half of a stream.
+pub struct Sender<T: Send> {
+    tx: TxFlavor<T>,
+    /// Number of failed `try_push` attempts (backpressure events) — cheap
+    /// local counter surfaced by the tracing layer.
+    pub push_retries: u64,
+}
+
+/// Receiving half of a stream.
+pub struct Receiver<T: Send> {
+    rx: RxFlavor<T>,
+    /// Number of empty polls (starvation events).
+    pub pop_retries: u64,
+}
+
+/// Create a bounded stream with the given queue capacity.
+pub fn stream<T: Send>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let (p, c) = spsc::spsc(cap);
+    (
+        Sender {
+            tx: TxFlavor::Bounded(p),
+            push_retries: 0,
+        },
+        Receiver {
+            rx: RxFlavor::Bounded(c),
+            pop_retries: 0,
+        },
+    )
+}
+
+/// Create an unbounded stream (accelerator offload/result channels).
+pub fn stream_unbounded<T: Send>() -> (Sender<T>, Receiver<T>) {
+    let (p, c) = spsc::unbounded_spsc();
+    (
+        Sender {
+            tx: TxFlavor::Unbounded(p),
+            push_retries: 0,
+        },
+        Receiver {
+            rx: RxFlavor::Unbounded(c),
+            pop_retries: 0,
+        },
+    )
+}
+
+impl<T: Send> Sender<T> {
+    /// Blocking send of a task frame.
+    #[inline]
+    pub fn send(&mut self, task: T) -> Result<(), Disconnected<T>> {
+        self.send_msg(Msg::Task(task))
+    }
+
+    /// Blocking send of the end-of-stream mark.
+    #[inline]
+    pub fn send_eos(&mut self) -> Result<(), Disconnected<T>> {
+        self.send_msg(Msg::Eos)
+    }
+
+    /// Blocking send of any frame, with spin/yield backoff while full.
+    /// (Unbounded streams never block.)
+    #[inline]
+    pub fn send_msg(&mut self, msg: Msg<T>) -> Result<(), Disconnected<T>> {
+        match &mut self.tx {
+            TxFlavor::Bounded(prod) => {
+                let mut msg = msg;
+                let mut backoff = Backoff::new();
+                loop {
+                    match prod.try_push(msg) {
+                        Ok(()) => return Ok(()),
+                        Err(Full(m)) => {
+                            if !prod.consumer_alive() {
+                                return Err(Disconnected(m));
+                            }
+                            msg = m;
+                            self.push_retries += 1;
+                            backoff.snooze();
+                        }
+                    }
+                }
+            }
+            TxFlavor::Unbounded(prod) => {
+                if !prod.consumer_alive() {
+                    return Err(Disconnected(msg));
+                }
+                prod.push(msg);
+                Ok(())
+            }
+        }
+    }
+
+    /// Non-blocking send. Unbounded streams always accept.
+    #[inline]
+    pub fn try_send(&mut self, task: T) -> Result<(), Full<T>> {
+        match &mut self.tx {
+            TxFlavor::Bounded(prod) => match prod.try_push(Msg::Task(task)) {
+                Ok(()) => Ok(()),
+                Err(Full(Msg::Task(t))) => {
+                    self.push_retries += 1;
+                    Err(Full(t))
+                }
+                Err(Full(Msg::Eos)) => unreachable!("pushed Task, got back Eos"),
+            },
+            TxFlavor::Unbounded(prod) => {
+                prod.push(Msg::Task(task));
+                Ok(())
+            }
+        }
+    }
+
+    /// True if the next `try_send` would fail (always false when
+    /// unbounded).
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        match &self.tx {
+            TxFlavor::Bounded(prod) => prod.is_full(),
+            TxFlavor::Unbounded(_) => false,
+        }
+    }
+
+    /// Queue capacity (`usize::MAX` when unbounded).
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        match &self.tx {
+            TxFlavor::Bounded(prod) => prod.capacity(),
+            TxFlavor::Unbounded(_) => usize::MAX,
+        }
+    }
+
+    /// Approximate queue occupancy (tracing only; 0 for unbounded).
+    pub fn len_approx(&self) -> usize {
+        match &self.tx {
+            TxFlavor::Bounded(prod) => prod.len_approx(),
+            TxFlavor::Unbounded(_) => 0,
+        }
+    }
+
+    #[inline]
+    pub fn peer_alive(&self) -> bool {
+        match &self.tx {
+            TxFlavor::Bounded(prod) => prod.consumer_alive(),
+            TxFlavor::Unbounded(prod) => prod.consumer_alive(),
+        }
+    }
+}
+
+impl<T: Send> Receiver<T> {
+    /// Non-blocking receive.
+    #[inline]
+    pub fn try_recv(&mut self) -> Option<Msg<T>> {
+        let m = match &mut self.rx {
+            RxFlavor::Bounded(cons) => cons.try_pop(),
+            RxFlavor::Unbounded(cons) => cons.try_pop(),
+        };
+        if m.is_none() {
+            self.pop_retries += 1;
+        }
+        m
+    }
+
+    /// Blocking receive with backoff. If the sender disconnected without
+    /// sending EOS, a synthetic `Eos` is returned so downstream nodes
+    /// still terminate cleanly.
+    #[inline]
+    pub fn recv(&mut self) -> Msg<T> {
+        let mut backoff = Backoff::new();
+        loop {
+            let (m, alive) = match &mut self.rx {
+                RxFlavor::Bounded(cons) => (cons.try_pop(), cons.producer_alive()),
+                RxFlavor::Unbounded(cons) => (cons.try_pop(), cons.producer_alive()),
+            };
+            if let Some(m) = m {
+                return m;
+            }
+            if !alive {
+                // Drain anything published between the pop and the check.
+                let last = match &mut self.rx {
+                    RxFlavor::Bounded(cons) => cons.try_pop(),
+                    RxFlavor::Unbounded(cons) => cons.try_pop(),
+                };
+                return last.unwrap_or(Msg::Eos);
+            }
+            self.pop_retries += 1;
+            backoff.snooze();
+        }
+    }
+
+    /// True if a frame is ready.
+    #[inline]
+    pub fn has_next(&self) -> bool {
+        match &self.rx {
+            RxFlavor::Bounded(cons) => cons.has_next(),
+            RxFlavor::Unbounded(cons) => cons.has_next(),
+        }
+    }
+
+    #[inline]
+    pub fn peer_alive(&self) -> bool {
+        match &self.rx {
+            RxFlavor::Bounded(cons) => cons.producer_alive(),
+            RxFlavor::Unbounded(cons) => cons.producer_alive(),
+        }
+    }
+
+    /// Approximate occupancy (tracing only; 0 for unbounded).
+    pub fn len_approx(&self) -> usize {
+        match &self.rx {
+            RxFlavor::Bounded(cons) => cons.len_approx(),
+            RxFlavor::Unbounded(_) => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_then_eos() {
+        let (mut tx, mut rx) = stream::<u32>(4);
+        tx.send(5).unwrap();
+        tx.send_eos().unwrap();
+        assert_eq!(rx.recv(), Msg::Task(5));
+        assert_eq!(rx.recv(), Msg::Eos);
+    }
+
+    #[test]
+    fn msg_helpers() {
+        assert!(Msg::<u8>::Eos.is_eos());
+        assert!(!Msg::Task(1).is_eos());
+        assert_eq!(Msg::Task(3).into_task(), Some(3));
+        assert_eq!(Msg::<u8>::Eos.into_task(), None);
+    }
+
+    #[test]
+    fn try_send_full_returns_value() {
+        let (mut tx, _rx) = stream::<u32>(1);
+        tx.try_send(1).unwrap();
+        assert!(tx.is_full());
+        assert_eq!(tx.try_send(2), Err(Full(2)));
+        assert!(tx.push_retries >= 1);
+    }
+
+    #[test]
+    fn recv_synthesizes_eos_on_disconnect() {
+        let (tx, mut rx) = stream::<u32>(4);
+        drop(tx);
+        assert_eq!(rx.recv(), Msg::Eos);
+    }
+
+    #[test]
+    fn send_fails_when_receiver_gone() {
+        let (mut tx, rx) = stream::<u32>(1);
+        tx.send(1).unwrap();
+        drop(rx);
+        assert!(tx.send(2).is_err());
+    }
+
+    #[test]
+    fn cross_thread_stream_with_eos() {
+        let (mut tx, mut rx) = stream::<usize>(8);
+        let t = std::thread::spawn(move || {
+            for i in 0..5_000 {
+                tx.send(i).unwrap();
+            }
+            tx.send_eos().unwrap();
+        });
+        let mut got = vec![];
+        loop {
+            match rx.recv() {
+                Msg::Task(v) => got.push(v),
+                Msg::Eos => break,
+            }
+        }
+        t.join().unwrap();
+        assert_eq!(got.len(), 5_000);
+        assert!(got.iter().copied().eq(0..5_000));
+    }
+
+    #[test]
+    fn unbounded_stream_never_full() {
+        let (mut tx, mut rx) = stream_unbounded::<usize>();
+        assert!(!tx.is_full());
+        assert_eq!(tx.capacity(), usize::MAX);
+        for i in 0..10_000 {
+            tx.try_send(i).unwrap(); // never Full
+        }
+        tx.send_eos().unwrap();
+        let mut count = 0;
+        loop {
+            match rx.recv() {
+                Msg::Task(v) => {
+                    assert_eq!(v, count);
+                    count += 1;
+                }
+                Msg::Eos => break,
+            }
+        }
+        assert_eq!(count, 10_000);
+    }
+
+    #[test]
+    fn unbounded_disconnect_semantics() {
+        let (tx, mut rx) = stream_unbounded::<u32>();
+        drop(tx);
+        assert_eq!(rx.recv(), Msg::Eos);
+        let (mut tx, rx) = stream_unbounded::<u32>();
+        drop(rx);
+        assert!(tx.send(1).is_err());
+        assert!(!tx.peer_alive());
+    }
+}

@@ -1,0 +1,128 @@
+//! Hand-rolled CLI argument parsing (no clap in the vendored registry).
+//!
+//! Grammar: `ffctl <subcommand> [--key value | --key=value | --flag] …`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments (subcommand first).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs.
+    options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — first token is the
+    /// program name and is skipped by [`Args::from_env`], not here.
+    pub fn parse(tokens: &[String]) -> Args {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.options
+                        .insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&tokens)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Fold every `--key value` option and `--flag` into a
+    /// [`crate::config::Config`] (CLI beats file).
+    pub fn apply_to(&self, cfg: &mut crate::config::Config) {
+        for (k, v) in &self.options {
+            cfg.set(k, v.clone());
+        }
+        for f in &self.flags {
+            cfg.set(f, "true");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(&toks(&[
+            "fig4", "--workers", "8", "--width=640", "--trace", "--runs", "3",
+        ]));
+        assert_eq!(a.subcommand(), Some("fig4"));
+        assert_eq!(a.get_usize("workers", 0), 8);
+        assert_eq!(a.get_usize("width", 0), 640);
+        assert_eq!(a.get_usize("runs", 0), 3);
+        assert!(a.has_flag("trace"));
+        assert!(!a.has_flag("json"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(&toks(&["x", "--quick"]));
+        assert!(a.has_flag("quick"));
+    }
+
+    #[test]
+    fn negative_like_values_are_values() {
+        // "--key value" where value doesn't start with --
+        let a = Args::parse(&toks(&["x", "--name", "whole-set"]));
+        assert_eq!(a.get("name"), Some("whole-set"));
+    }
+
+    #[test]
+    fn apply_to_config() {
+        let mut cfg = crate::config::Config::new();
+        let a = Args::parse(&toks(&["x", "--workers", "4", "--json"]));
+        a.apply_to(&mut cfg);
+        assert_eq!(cfg.get_usize("workers", 0), 4);
+        assert!(cfg.get_bool("json", false));
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = Args::parse(&[]);
+        assert_eq!(a.subcommand(), None);
+    }
+}

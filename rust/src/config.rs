@@ -1,0 +1,174 @@
+//! Minimal configuration system: `key = value` files (a TOML subset —
+//! the vendored registry has no toml crate), environment overrides
+//! (`FF_<KEY>`), and typed accessors. Used by `ffctl --config <file>`.
+//!
+//! ```text
+//! # experiment defaults
+//! workers = 8
+//! sched = ondemand
+//! width = 1024
+//! regions = whole-set,seahorse
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse a config file. Lines: `key = value`, `# comment`, blank.
+    /// Section headers `[name]` prefix keys as `name.key`.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read config {}", path.as_ref().display()))?;
+        Self::from_str_contents(&text)
+    }
+
+    pub fn from_str_contents(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("config line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            map.insert(key, val);
+        }
+        Ok(Config { map })
+    }
+
+    /// Set (CLI overrides config file).
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        self.map.insert(key.to_string(), value.into());
+    }
+
+    /// Raw lookup with env override: `FF_WORKERS` beats `workers`.
+    pub fn get(&self, key: &str) -> Option<String> {
+        let env_key = format!("FF_{}", key.replace(['.', '-'], "_").to_uppercase());
+        if let Ok(v) = std::env::var(&env_key) {
+            return Some(v);
+        }
+        self.map.get(key).cloned()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> u32 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key).as_deref() {
+            Some("1") | Some("true") | Some("yes") | Some("on") => true,
+            Some("0") | Some("false") | Some("no") | Some("off") => false,
+            _ => default,
+        }
+    }
+
+    /// Comma-separated list accessor.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_keys_sections_comments() {
+        let c = Config::from_str_contents(
+            "# hi\nworkers = 8\n[mandel]\nwidth=640\nname = \"whole\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_usize("workers", 0), 8);
+        assert_eq!(c.get_usize("mandel.width", 0), 640);
+        assert_eq!(c.get("mandel.name").unwrap(), "whole");
+        assert_eq!(c.get("missing"), None);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let c = Config::new();
+        assert_eq!(c.get_usize("x", 7), 7);
+        assert!(c.get_bool("y", true));
+        assert_eq!(c.get_f64("z", 1.5), 1.5);
+    }
+
+    #[test]
+    fn bool_parsing() {
+        let c =
+            Config::from_str_contents("a = true\nb = off\nc = 1\nd = nonsense\n").unwrap();
+        assert!(c.get_bool("a", false));
+        assert!(!c.get_bool("b", true));
+        assert!(c.get_bool("c", false));
+        assert!(c.get_bool("d", false) == false); // unparsable -> default
+    }
+
+    #[test]
+    fn env_override_wins() {
+        std::env::set_var("FF_TEST_KEY_42", "99");
+        let mut c = Config::new();
+        c.set("test.key-42", "1");
+        assert_eq!(c.get_usize("test.key-42", 0), 99);
+        std::env::remove_var("FF_TEST_KEY_42");
+        assert_eq!(c.get_usize("test.key-42", 0), 1);
+    }
+
+    #[test]
+    fn list_accessor() {
+        let c = Config::from_str_contents("regions = a, b ,c\n").unwrap();
+        assert_eq!(c.get_list("regions").unwrap(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::from_str_contents("workers = 2\n").unwrap();
+        c.set("workers", "16");
+        assert_eq!(c.get_usize("workers", 0), 16);
+    }
+
+    #[test]
+    fn bad_line_is_error() {
+        assert!(Config::from_str_contents("nonsense line\n").is_err());
+    }
+}

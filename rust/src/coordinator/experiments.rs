@@ -1,0 +1,283 @@
+//! Drivers for the paper's two headline experiments:
+//!
+//! * **Fig. 4** — QT-Mandelbrot execution time + speedup across regions,
+//!   passes and thread counts;
+//! * **Table 2** — N-queens sequential vs accelerated, with task counts.
+//!
+//! Board sizes / image sizes default to values scaled for CI-class
+//! machines; pass `--full` (or set the corresponding option) for
+//! paper-scale runs. See DESIGN.md §Substitutions.
+
+use std::time::Duration;
+
+use crate::apps::mandelbrot::{
+    max_iter_for_pass, render_progressive, render_sequential, Engine, Region, RenderParams,
+};
+use crate::apps::nqueens;
+use crate::metrics::{speedup, Stats, Table};
+use crate::util::{fmt_duration, num_cpus, timed};
+
+// ---------------------------------------------------------------- Fig. 4
+
+#[derive(Debug, Clone)]
+pub struct Fig4Opts {
+    pub width: usize,
+    pub height: usize,
+    /// Progressive passes rendered per measurement (pass p uses
+    /// `max_iter = 64 << p`).
+    pub passes: u32,
+    pub worker_counts: Vec<usize>,
+    pub regions: Vec<Region>,
+    pub engine: Engine,
+    pub runs: usize,
+}
+
+impl Default for Fig4Opts {
+    fn default() -> Self {
+        // Paper: 8 passes on 2×4-core machines with 2/4/8/16 threads.
+        // Scaled default: fewer passes, same thread sweep shape.
+        let ncpu = num_cpus();
+        let mut worker_counts = vec![2, 4, 8, 16];
+        worker_counts.retain(|&w| w <= 2 * ncpu.max(1));
+        if worker_counts.is_empty() {
+            worker_counts.push(ncpu);
+        }
+        Fig4Opts {
+            width: 512,
+            height: 384,
+            passes: 4,
+            worker_counts,
+            regions: Region::presets().to_vec(),
+            engine: Engine::Scalar,
+            runs: 3,
+        }
+    }
+}
+
+impl Fig4Opts {
+    /// Paper-scale settings (long!).
+    pub fn full(mut self) -> Self {
+        self.width = 1024;
+        self.height = 768;
+        self.passes = 8;
+        self.runs = 5;
+        self
+    }
+
+    pub fn quick(mut self) -> Self {
+        self.width = 192;
+        self.height = 144;
+        self.passes = 2;
+        self.runs = 1;
+        self.worker_counts = vec![2, num_cpus().max(2)];
+        self
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub region: &'static str,
+    pub workers: usize,
+    pub seq: Duration,
+    pub par: Duration,
+    pub speedup: f64,
+}
+
+/// Run the Fig. 4 experiment, returning (render table, rows).
+pub fn run_fig4(opts: &Fig4Opts) -> (Table, Vec<Fig4Row>) {
+    let mut table = Table::new(&[
+        "region", "engine", "workers", "seq-time", "ff-time", "speedup", "efficiency",
+    ]);
+    let mut rows = vec![];
+    for region in &opts.regions {
+        // Sequential baseline: all passes, best-of-runs mean.
+        let seq_samples: Vec<f64> = (0..opts.runs.max(1))
+            .map(|_| {
+                let (_, d) = timed(|| {
+                    for p in 0..opts.passes {
+                        let f = render_sequential(
+                            region,
+                            opts.width,
+                            opts.height,
+                            max_iter_for_pass(p),
+                            None,
+                        )
+                        .unwrap();
+                        std::hint::black_box(f);
+                    }
+                });
+                d.as_secs_f64()
+            })
+            .collect();
+        let seq = Stats::from_samples(&seq_samples).mean;
+
+        for &w in &opts.worker_counts {
+            let par_samples: Vec<f64> = (0..opts.runs.max(1))
+                .map(|_| {
+                    let params = RenderParams {
+                        region: *region,
+                        width: opts.width,
+                        height: opts.height,
+                    };
+                    let (frames, d) =
+                        timed(|| render_progressive(params, w, opts.engine, opts.passes));
+                    std::hint::black_box(frames);
+                    d.as_secs_f64()
+                })
+                .collect();
+            let par = Stats::from_samples(&par_samples).mean;
+            let sp = speedup(seq, par);
+            table.row(vec![
+                region.name.to_string(),
+                format!("{:?}", opts.engine),
+                w.to_string(),
+                fmt_duration(Duration::from_secs_f64(seq)),
+                fmt_duration(Duration::from_secs_f64(par)),
+                format!("{sp:.2}"),
+                format!("{:.2}", sp / w as f64),
+            ]);
+            rows.push(Fig4Row {
+                region: region.name,
+                workers: w,
+                seq: Duration::from_secs_f64(seq),
+                par: Duration::from_secs_f64(par),
+                speedup: sp,
+            });
+        }
+    }
+    (table, rows)
+}
+
+// ---------------------------------------------------------------- Table 2
+
+#[derive(Debug, Clone)]
+pub struct Table2Opts {
+    pub boards: Vec<u32>,
+    /// Queens pre-placed per task (paper: 4).
+    pub depth: u32,
+    /// Worker threads (paper: 16 on the 8-core/16-HT machine).
+    pub workers: usize,
+    pub runs: usize,
+}
+
+impl Default for Table2Opts {
+    fn default() -> Self {
+        Table2Opts {
+            // Paper: 18–21 (minutes to days). Scaled: seconds.
+            boards: vec![12, 13, 14],
+            depth: 4,
+            workers: 2 * num_cpus(),
+            runs: 3,
+        }
+    }
+}
+
+impl Table2Opts {
+    pub fn full(mut self) -> Self {
+        self.boards = vec![14, 15, 16];
+        self.runs = 5;
+        self
+    }
+
+    pub fn quick(mut self) -> Self {
+        self.boards = vec![10, 11, 12];
+        self.runs = 1;
+        self
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub board: u32,
+    pub solutions: u64,
+    pub seq: Duration,
+    pub par: Duration,
+    pub tasks: usize,
+    pub speedup: f64,
+    pub verified: bool,
+}
+
+/// Run the Table 2 experiment.
+pub fn run_table2(opts: &Table2Opts) -> (Table, Vec<Table2Row>) {
+    let mut table = Table::new(&[
+        "board", "#solutions", "seq-time", "ff-time", "#tasks", "speedup", "verified",
+    ]);
+    let mut rows = vec![];
+    for &n in &opts.boards {
+        let mut seq_t = vec![];
+        let mut solutions = 0u64;
+        for _ in 0..opts.runs.max(1) {
+            let (s, d) = timed(|| nqueens::count_sequential(n));
+            solutions = s;
+            seq_t.push(d.as_secs_f64());
+        }
+        let seq = Stats::from_samples(&seq_t).mean;
+
+        let mut par_t = vec![];
+        let mut tasks = 0usize;
+        let mut par_solutions = 0u64;
+        for _ in 0..opts.runs.max(1) {
+            let (run, d) = timed(|| nqueens::count_parallel(n, opts.depth, opts.workers));
+            tasks = run.tasks;
+            par_solutions = run.solutions;
+            par_t.push(d.as_secs_f64());
+        }
+        let par = Stats::from_samples(&par_t).mean;
+        let verified = nqueens::known_solutions(n)
+            .map(|k| k == solutions && k == par_solutions)
+            .unwrap_or(solutions == par_solutions);
+        let sp = speedup(seq, par);
+        table.row(vec![
+            format!("{n}x{n}"),
+            solutions.to_string(),
+            fmt_duration(Duration::from_secs_f64(seq)),
+            fmt_duration(Duration::from_secs_f64(par)),
+            tasks.to_string(),
+            format!("{sp:.2}"),
+            verified.to_string(),
+        ]);
+        rows.push(Table2Row {
+            board: n,
+            solutions,
+            seq: Duration::from_secs_f64(seq),
+            par: Duration::from_secs_f64(par),
+            tasks,
+            speedup: sp,
+            verified,
+        });
+    }
+    (table, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_quick_produces_rows() {
+        let opts = Fig4Opts {
+            regions: vec![Region::presets()[3]], // cheapest region
+            ..Fig4Opts::default().quick()
+        };
+        let (table, rows) = run_fig4(&opts);
+        assert_eq!(rows.len(), opts.worker_counts.len());
+        assert!(!table.render().is_empty());
+        for r in &rows {
+            assert!(r.par.as_nanos() > 0);
+            assert!(r.speedup > 0.0);
+        }
+    }
+
+    #[test]
+    fn table2_quick_verifies() {
+        let opts = Table2Opts {
+            boards: vec![9, 10],
+            depth: 3,
+            workers: 4,
+            runs: 1,
+        };
+        let (_, rows) = run_table2(&opts);
+        assert!(rows.iter().all(|r| r.verified), "{rows:?}");
+        assert!(rows.iter().all(|r| r.tasks > 0));
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment coordinator: the drivers that regenerate the paper's
+//! tables and figures. Shared between the `ffctl` CLI and the
+//! `benches/` binaries so the numbers printed by either come from the
+//! same code path.
+
+pub mod experiments;
+
+pub use experiments::{
+    run_fig4, run_table2, Fig4Opts, Fig4Row, Table2Opts, Table2Row,
+};

@@ -1,0 +1,149 @@
+//! The farm's Collector — the arbiter thread that merges the workers'
+//! output streams (MPSC without atomic RMW, paper §2.3), optionally
+//! restoring offload order.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::channel::{Msg, Receiver};
+use crate::farm::Seq;
+use crate::node::{Lifecycle, OutTarget};
+use crate::trace::NodeTrace;
+use crate::util::Backoff;
+
+/// Result-ordering policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Ordering {
+    /// Emit results as they arrive from workers (FastFlow default).
+    #[default]
+    Arrival,
+    /// Restore offload order using a reorder buffer keyed by the
+    /// emitter's sequence tag. Requires exactly one result per task.
+    Ordered,
+}
+
+/// Entry in the reorder heap: min-heap on sequence number.
+struct Pending<O>(u64, O);
+
+impl<O> PartialEq for Pending<O> {
+    fn eq(&self, other: &Self) -> bool {
+        self.0 == other.0
+    }
+}
+impl<O> Eq for Pending<O> {}
+impl<O> PartialOrd for Pending<O> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<O> Ord for Pending<O> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.cmp(&other.0)
+    }
+}
+
+pub(super) fn spawn_collector<O: Send + 'static>(
+    mut workers: Vec<Receiver<Seq<O>>>,
+    mut out: OutTarget<O>,
+    ordering: Ordering,
+    lifecycle: Arc<Lifecycle>,
+    trace: Arc<NodeTrace>,
+    pin_to: Option<usize>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("ff-collector".into())
+        .spawn(move || {
+            if let Some(cpu) = pin_to {
+                crate::sched::pin_current_thread(cpu);
+            }
+            let n = workers.len();
+            loop {
+                // one run cycle
+                let mut eos_seen = vec![false; n];
+                let mut eos_count = 0usize;
+                let mut reorder: BinaryHeap<Reverse<Pending<O>>> = BinaryHeap::new();
+                let mut next_seq = 0u64;
+                let mut cursor = 0usize;
+                let mut backoff = Backoff::new();
+                while eos_count < n {
+                    let mut progressed = false;
+                    for k in 0..n {
+                        let w = (cursor + k) % n;
+                        if eos_seen[w] {
+                            continue;
+                        }
+                        match workers[w].try_recv() {
+                            Some(Msg::Task((seq, value))) => {
+                                progressed = true;
+                                cursor = w; // keep draining the hot worker
+                                let t0 = Instant::now();
+                                match ordering {
+                                    Ordering::Arrival => {
+                                        out.send(value);
+                                        trace.on_emit(1);
+                                    }
+                                    Ordering::Ordered => {
+                                        if seq == next_seq {
+                                            out.send(value);
+                                            trace.on_emit(1);
+                                            next_seq += 1;
+                                            // Release any now-contiguous results.
+                                            while reorder
+                                                .peek()
+                                                .is_some_and(|Reverse(p)| p.0 == next_seq)
+                                            {
+                                                let Reverse(Pending(_, v)) =
+                                                    reorder.pop().unwrap();
+                                                out.send(v);
+                                                trace.on_emit(1);
+                                                next_seq += 1;
+                                            }
+                                        } else {
+                                            reorder.push(Reverse(Pending(seq, value)));
+                                        }
+                                    }
+                                }
+                                trace.on_task(t0.elapsed().as_nanos() as u64);
+                            }
+                            Some(Msg::Eos) => {
+                                progressed = true;
+                                eos_seen[w] = true;
+                                eos_count += 1;
+                            }
+                            None => {
+                                // A worker that died (panicked) without
+                                // sending EOS must not stall the farm:
+                                // empty + disconnected ⇒ synthetic EOS.
+                                if !workers[w].peer_alive() && !workers[w].has_next() {
+                                    progressed = true;
+                                    eos_seen[w] = true;
+                                    eos_count += 1;
+                                }
+                            }
+                        }
+                    }
+                    if progressed {
+                        backoff.reset();
+                    } else {
+                        backoff.snooze();
+                    }
+                }
+                // Flush any residue (holes can only occur if a worker
+                // died mid-task; emit best-effort in sequence order).
+                while let Some(Reverse(Pending(_, v))) = reorder.pop() {
+                    out.send(v);
+                    trace.on_emit(1);
+                }
+                out.send_eos();
+                trace.on_cycle();
+                trace.add_retries(out.push_retries(), 0);
+                if !lifecycle.cycle_end() {
+                    break;
+                }
+            }
+        })
+        .expect("spawn collector")
+}

@@ -1,0 +1,133 @@
+//! The farm's Emitter — the arbiter thread that turns the single input
+//! stream into an SPMC flow using only SPSC queues (paper §2.3).
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::channel::{Msg, Receiver, Sender};
+use crate::farm::{SchedPolicy, Seq};
+use crate::node::Lifecycle;
+use crate::trace::NodeTrace;
+use crate::util::Backoff;
+
+/// Spawn the emitter thread.
+///
+/// Round-robin: strict rotation, blocking on the chosen worker's queue.
+/// On-demand: rotate but *skip* workers whose (short) queue is full, so
+/// slow workers don't accumulate a backlog; this approximates FastFlow's
+/// on-demand scheduling and is what makes irregular workloads
+/// (Mandelbrot rows) balance.
+pub(super) fn spawn_emitter<I: Send + 'static>(
+    mut input: Receiver<I>,
+    mut workers: Vec<Sender<Seq<I>>>,
+    policy: SchedPolicy,
+    lifecycle: Arc<Lifecycle>,
+    trace: Arc<NodeTrace>,
+    pin_to: Option<usize>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("ff-emitter".into())
+        .spawn(move || {
+            if let Some(cpu) = pin_to {
+                crate::sched::pin_current_thread(cpu);
+            }
+            let n = workers.len();
+            let mut next = 0usize; // rotation cursor
+            loop {
+                // one run cycle
+                let mut seq = 0u64;
+                loop {
+                    match input.recv() {
+                        Msg::Task(task) => {
+                            let t0 = Instant::now();
+                            route(&mut workers, &mut next, policy, (seq, task));
+                            seq += 1;
+                            trace.on_task(t0.elapsed().as_nanos() as u64);
+                            trace.on_emit(1);
+                        }
+                        Msg::Eos => break,
+                    }
+                }
+                // Propagate EOS to every worker.
+                for w in workers.iter_mut() {
+                    let _ = w.send_eos();
+                }
+                trace.on_cycle();
+                let mut push_retries = 0u64;
+                for w in workers.iter_mut() {
+                    push_retries += w.push_retries;
+                    w.push_retries = 0;
+                }
+                trace.add_retries(push_retries, input.pop_retries);
+                input.pop_retries = 0;
+                let _ = n;
+                if !lifecycle.cycle_end() {
+                    break;
+                }
+            }
+        })
+        .expect("spawn emitter")
+}
+
+/// Route one task to a worker according to the policy. Tolerates dead
+/// workers (a panicked worker's queue reports disconnection): the task is
+/// re-routed to the next live worker, or dropped if none remain.
+#[inline]
+fn route<I: Send>(
+    workers: &mut Vec<Sender<Seq<I>>>,
+    next: &mut usize,
+    policy: SchedPolicy,
+    mut frame: Seq<I>,
+) {
+    let n = workers.len();
+    match policy {
+        SchedPolicy::RoundRobin => {
+            // Strict rotation; block on the selected queue.
+            for _attempt in 0..n {
+                let w = *next;
+                *next = (*next + 1) % n;
+                match workers[w].send_msg(Msg::Task(frame)) {
+                    Ok(()) => return,
+                    Err(crate::channel::Disconnected(Msg::Task(f))) => frame = f,
+                    Err(crate::channel::Disconnected(Msg::Eos)) => unreachable!(),
+                }
+            }
+            // all workers dead: drop the task
+        }
+        SchedPolicy::OnDemand => {
+            let mut backoff = Backoff::new();
+            loop {
+                let mut any_alive = false;
+                for k in 0..n {
+                    let w = (*next + k) % n;
+                    if !workers[w].peer_alive() {
+                        continue;
+                    }
+                    any_alive = true;
+                    match workers[w].try_send(frame.clone_hack()) {
+                        Ok(()) => {
+                            *next = (w + 1) % n;
+                            return;
+                        }
+                        Err(crate::spsc::Full(f)) => frame = f,
+                    }
+                }
+                if !any_alive {
+                    return; // drop
+                }
+                backoff.snooze();
+            }
+        }
+    }
+}
+
+/// Helper so the on-demand path can move the frame through `try_send`
+/// without cloning: `try_send` hands the value back on failure, so this
+/// is a plain move — the name is a reminder that no clone happens.
+trait MoveHack: Sized {
+    fn clone_hack(self) -> Self {
+        self
+    }
+}
+impl<T> MoveHack for T {}

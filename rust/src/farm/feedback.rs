@@ -1,0 +1,510 @@
+//! Farm-with-feedback — the paper's **master-worker / Divide&Conquer**
+//! skeleton (§2.4: "farm-with-feedback (i.e. Divide&Conquer)"; §2.3's
+//! Collector-Emitter arbiter).
+//!
+//! Topology: one *master* thread (the CE arbiter, running user logic)
+//! and N workers; worker outputs loop back to the master on per-worker
+//! SPSC feedback channels, forming the cyclic data-flow graph the paper
+//! describes ("a graph for a farm-with-feedback"):
+//!
+//! ```text
+//!            ┌────────── feedback (spsc × N) ───────────┐
+//!            ▼                                          │
+//! in ─spsc─▶ Master ── spsc ──▶ Worker 0..N ────────────┘
+//!            │
+//!            └── spsc ──▶ out
+//! ```
+//!
+//! Termination is the programmer's protocol (§3.1): the master's hooks
+//! return [`Svc::Eos`] when the recursion tree is exhausted (typically:
+//! external input closed *and* in-flight count is zero).
+
+use std::sync::Arc;
+
+use crate::channel::{stream, stream_unbounded, Msg, Sender};
+use crate::farm::{FarmConfig, SchedPolicy};
+use crate::node::{Lifecycle, Node, NodeRunner, OutTarget, RunMode, Svc};
+use crate::sched::CpuMap;
+use crate::skeleton::LaunchedSkeleton;
+use crate::trace::NodeTrace;
+use crate::util::Backoff;
+
+/// User logic run on the master (CE) thread.
+pub trait MasterLogic: Send {
+    /// External input stream element.
+    type In: Send + 'static;
+    /// Task dispatched to workers.
+    type Task: Send + 'static;
+    /// Worker result fed back to the master.
+    type Result: Send + 'static;
+    /// External output stream element.
+    type Out: Send + 'static;
+
+    /// An external task arrived. Dispatch subtasks via
+    /// [`MasterCtx::dispatch`], emit results via [`MasterCtx::emit`].
+    fn on_input(&mut self, input: Self::In, ctx: &mut MasterCtx<'_, Self>) -> Svc;
+
+    /// A worker result arrived on the feedback path.
+    fn on_feedback(&mut self, result: Self::Result, ctx: &mut MasterCtx<'_, Self>) -> Svc;
+
+    /// The external input stream closed. Default: terminate immediately
+    /// if nothing is in flight (`ctx.in_flight() == 0`), else keep
+    /// pumping feedback.
+    fn on_input_eos(&mut self, ctx: &mut MasterCtx<'_, Self>) -> Svc {
+        if ctx.in_flight() == 0 {
+            Svc::Eos
+        } else {
+            Svc::GoOn
+        }
+    }
+}
+
+/// Dispatch/emit surface handed to [`MasterLogic`] hooks.
+pub struct MasterCtx<'a, M: MasterLogic + ?Sized> {
+    workers: &'a mut Vec<Sender<M::Task>>,
+    out: &'a mut OutTarget<M::Out>,
+    next: &'a mut usize,
+    in_flight: &'a mut u64,
+    sched: SchedPolicy,
+    pub dispatched: u64,
+    pub emitted: u64,
+}
+
+impl<'a, M: MasterLogic + ?Sized> MasterCtx<'a, M> {
+    /// Send a task to some worker (per the farm scheduling policy);
+    /// bumps the in-flight counter.
+    pub fn dispatch(&mut self, task: M::Task) {
+        let n = self.workers.len();
+        let mut frame = task;
+        match self.sched {
+            SchedPolicy::RoundRobin => {
+                for _ in 0..n {
+                    let w = *self.next;
+                    *self.next = (*self.next + 1) % n;
+                    match self.workers[w].send(frame) {
+                        Ok(()) => {
+                            *self.in_flight += 1;
+                            self.dispatched += 1;
+                            return;
+                        }
+                        Err(crate::channel::Disconnected(Msg::Task(f))) => frame = f,
+                        Err(crate::channel::Disconnected(Msg::Eos)) => unreachable!(),
+                    }
+                }
+            }
+            SchedPolicy::OnDemand => {
+                let mut backoff = Backoff::new();
+                loop {
+                    let mut any_alive = false;
+                    for k in 0..n {
+                        let w = (*self.next + k) % n;
+                        if !self.workers[w].peer_alive() {
+                            continue;
+                        }
+                        any_alive = true;
+                        match self.workers[w].try_send(frame) {
+                            Ok(()) => {
+                                *self.next = (w + 1) % n;
+                                *self.in_flight += 1;
+                                self.dispatched += 1;
+                                return;
+                            }
+                            Err(crate::spsc::Full(f)) => frame = f,
+                        }
+                    }
+                    if !any_alive {
+                        return;
+                    }
+                    backoff.snooze();
+                }
+            }
+        }
+    }
+
+    /// Emit a value on the skeleton's external output stream.
+    pub fn emit(&mut self, out: M::Out) {
+        self.out.send(out);
+        self.emitted += 1;
+    }
+
+    /// Tasks dispatched but whose result has not yet fed back.
+    pub fn in_flight(&self) -> u64 {
+        *self.in_flight
+    }
+}
+
+/// Launch a master-worker skeleton.
+///
+/// Workers must emit **exactly one** `Result` per `Task` (the in-flight
+/// accounting depends on it; multi-result recursion is expressed by
+/// returning a `Result` that encodes subtasks, which the master
+/// re-dispatches — see `examples/divide_conquer.rs` for the pattern).
+pub fn launch_master_worker<M, W, F>(
+    cfg: FarmConfig,
+    mode: RunMode,
+    mut master: M,
+    mut factory: F,
+) -> LaunchedSkeleton<M::In, M::Out>
+where
+    M: MasterLogic + 'static,
+    W: Node<In = M::Task, Out = M::Result> + 'static,
+    F: FnMut(usize) -> W,
+{
+    let nworkers = cfg.workers.max(1);
+    let nthreads = nworkers + 1;
+    let lifecycle = Lifecycle::new(nthreads, mode);
+    let cpu_map = CpuMap::build(cfg.mapping, nthreads, &cfg.explicit_cores);
+    let mut joins = Vec::with_capacity(nthreads);
+    let mut traces: Vec<(String, Arc<NodeTrace>)> = Vec::with_capacity(nthreads);
+
+    // external input / output (unbounded: accelerator-grade)
+    let (input_tx, mut input_rx) = stream_unbounded::<M::In>();
+    let (output_tx, output_rx) = stream_unbounded::<M::Out>();
+
+    // master → workers
+    let wcap = match cfg.sched {
+        SchedPolicy::RoundRobin => cfg.worker_cap,
+        SchedPolicy::OnDemand => 2,
+    };
+    let mut worker_txs = Vec::with_capacity(nworkers);
+    let mut worker_rxs = Vec::with_capacity(nworkers);
+    for _ in 0..nworkers {
+        let (tx, rx) = stream::<M::Task>(wcap);
+        worker_txs.push(tx);
+        worker_rxs.push(rx);
+    }
+    // workers → master (feedback)
+    let mut fb_txs = Vec::with_capacity(nworkers);
+    let mut fb_rxs = Vec::with_capacity(nworkers);
+    for _ in 0..nworkers {
+        let (tx, rx) = stream::<M::Result>(cfg.out_cap);
+        fb_txs.push(tx);
+        fb_rxs.push(rx);
+    }
+
+    // ---- workers -----------------------------------------------------
+    for (wi, (rx, fb)) in worker_rxs.into_iter().zip(fb_txs).enumerate() {
+        let trace = NodeTrace::new();
+        traces.push((format!("worker-{wi}"), trace.clone()));
+        joins.push(
+            NodeRunner {
+                node: factory(wi),
+                rx,
+                out: OutTarget::Chan(fb),
+                lifecycle: lifecycle.clone(),
+                trace,
+                pin_to: cpu_map.core_for(1 + wi),
+                name: format!("ff-mw-worker-{wi}"),
+            }
+            .spawn(),
+        );
+    }
+
+    // ---- master (CE arbiter) ------------------------------------------
+    let trace = NodeTrace::new();
+    traces.push(("master".to_string(), trace.clone()));
+    let lc = lifecycle.clone();
+    let pin = cpu_map.core_for(0);
+    let sched = cfg.sched;
+    joins.push(
+        std::thread::Builder::new()
+            .name("ff-master".into())
+            .spawn(move || {
+                if let Some(cpu) = pin {
+                    crate::sched::pin_current_thread(cpu);
+                }
+                let mut workers = worker_txs;
+                let mut fb = fb_rxs;
+                let mut out: OutTarget<M::Out> = OutTarget::Chan(output_tx);
+                loop {
+                    // one run cycle
+                    let mut next = 0usize;
+                    let mut in_flight = 0u64;
+                    let mut input_open = true;
+                    let mut input_eos_notified = false;
+                    let mut backoff = Backoff::new();
+                    'cycle: loop {
+                        let mut progressed = false;
+                        // 1. external input
+                        if input_open {
+                            match input_rx.try_recv() {
+                                Some(Msg::Task(t)) => {
+                                    progressed = true;
+                                    let mut ctx = MasterCtx::<M> {
+                                        workers: &mut workers,
+                                        out: &mut out,
+                                        next: &mut next,
+                                        in_flight: &mut in_flight,
+                                        sched,
+                                        dispatched: 0,
+                                        emitted: 0,
+                                    };
+                                    let verdict = master.on_input(t, &mut ctx);
+                                    let emitted = ctx.emitted;
+                                    trace.on_task(0);
+                                    trace.on_emit(emitted);
+                                    if verdict == Svc::Eos {
+                                        break 'cycle;
+                                    }
+                                }
+                                Some(Msg::Eos) => {
+                                    progressed = true;
+                                    input_open = false;
+                                }
+                                None => {}
+                            }
+                        } else if !input_eos_notified {
+                            input_eos_notified = true;
+                            let mut ctx = MasterCtx::<M> {
+                                workers: &mut workers,
+                                out: &mut out,
+                                next: &mut next,
+                                in_flight: &mut in_flight,
+                                sched,
+                                dispatched: 0,
+                                emitted: 0,
+                            };
+                            if master.on_input_eos(&mut ctx) == Svc::Eos {
+                                break 'cycle;
+                            }
+                        }
+                        // 2. feedback
+                        for w in 0..fb.len() {
+                            match fb[w].try_recv() {
+                                Some(Msg::Task(r)) => {
+                                    progressed = true;
+                                    in_flight = in_flight.saturating_sub(1);
+                                    let mut ctx = MasterCtx::<M> {
+                                        workers: &mut workers,
+                                        out: &mut out,
+                                        next: &mut next,
+                                        in_flight: &mut in_flight,
+                                        sched,
+                                        dispatched: 0,
+                                        emitted: 0,
+                                    };
+                                    let verdict = master.on_feedback(r, &mut ctx);
+                                    let emitted = ctx.emitted;
+                                    trace.on_task(0);
+                                    trace.on_emit(emitted);
+                                    if verdict == Svc::Eos {
+                                        break 'cycle;
+                                    }
+                                    // re-check termination after drained input
+                                    if !input_open && in_flight == 0 {
+                                        let mut ctx = MasterCtx::<M> {
+                                            workers: &mut workers,
+                                            out: &mut out,
+                                            next: &mut next,
+                                            in_flight: &mut in_flight,
+                                            sched,
+                                            dispatched: 0,
+                                            emitted: 0,
+                                        };
+                                        if master.on_input_eos(&mut ctx) == Svc::Eos {
+                                            break 'cycle;
+                                        }
+                                    }
+                                }
+                                Some(Msg::Eos) | None => {
+                                    // a dead worker mustn't wedge the master
+                                    if !fb[w].peer_alive() && !fb[w].has_next() {
+                                        // treat its in-flight work as lost
+                                    }
+                                }
+                            }
+                        }
+                        if progressed {
+                            backoff.reset();
+                        } else {
+                            backoff.snooze();
+                        }
+                    }
+                    // Shut the workers down and drain their EOS.
+                    for w in workers.iter_mut() {
+                        let _ = w.send_eos();
+                    }
+                    let mut eos = 0usize;
+                    let mut seen = vec![false; fb.len()];
+                    let mut backoff = Backoff::new();
+                    while eos < fb.len() {
+                        let mut progressed = false;
+                        for (w, rx) in fb.iter_mut().enumerate() {
+                            if seen[w] {
+                                continue;
+                            }
+                            match rx.try_recv() {
+                                Some(Msg::Eos) => {
+                                    progressed = true;
+                                    seen[w] = true;
+                                    eos += 1;
+                                }
+                                Some(Msg::Task(_)) => progressed = true, // late result: drop
+                                None => {
+                                    if !rx.peer_alive() && !rx.has_next() {
+                                        progressed = true;
+                                        seen[w] = true;
+                                        eos += 1;
+                                    }
+                                }
+                            }
+                        }
+                        if progressed {
+                            backoff.reset();
+                        } else {
+                            backoff.snooze();
+                        }
+                    }
+                    out.send_eos();
+                    trace.on_cycle();
+                    if !lc.cycle_end() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn master"),
+    );
+
+    LaunchedSkeleton {
+        input: input_tx,
+        output: Some(output_rx),
+        lifecycle,
+        joins,
+        traces,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Accel;
+    use crate::node::node_fn;
+
+    /// D&C sum: tasks are (lo, hi) ranges; workers either sum small
+    /// ranges or split them; the master re-dispatches splits and
+    /// accumulates leaf sums, emitting the grand total at termination.
+    enum RangeResult {
+        Sum(u64),
+        Split((u64, u64), (u64, u64)),
+    }
+
+    struct SumMaster {
+        total: u64,
+    }
+
+    impl MasterLogic for SumMaster {
+        type In = (u64, u64);
+        type Task = (u64, u64);
+        type Result = RangeResult;
+        type Out = u64;
+
+        fn on_input(&mut self, t: (u64, u64), ctx: &mut MasterCtx<'_, Self>) -> Svc {
+            ctx.dispatch(t);
+            Svc::GoOn
+        }
+
+        fn on_feedback(&mut self, r: RangeResult, ctx: &mut MasterCtx<'_, Self>) -> Svc {
+            match r {
+                RangeResult::Sum(s) => self.total += s,
+                RangeResult::Split(a, b) => {
+                    ctx.dispatch(a);
+                    ctx.dispatch(b);
+                }
+            }
+            Svc::GoOn
+        }
+
+        fn on_input_eos(&mut self, ctx: &mut MasterCtx<'_, Self>) -> Svc {
+            if ctx.in_flight() == 0 {
+                ctx.emit(self.total);
+                Svc::Eos
+            } else {
+                Svc::GoOn
+            }
+        }
+    }
+
+    fn range_worker() -> impl Node<In = (u64, u64), Out = RangeResult> {
+        node_fn(|(lo, hi): (u64, u64)| {
+            if hi - lo <= 64 {
+                RangeResult::Sum((lo..hi).sum())
+            } else {
+                let mid = lo + (hi - lo) / 2;
+                RangeResult::Split((lo, mid), (mid, hi))
+            }
+        })
+    }
+
+    #[test]
+    fn master_worker_divide_and_conquer_sums() {
+        let skel = launch_master_worker(
+            FarmConfig::default().workers(3).sched(SchedPolicy::OnDemand),
+            RunMode::RunToEnd,
+            SumMaster { total: 0 },
+            |_| range_worker(),
+        );
+        let mut acc: Accel<(u64, u64), u64> = Accel::from_skeleton(skel);
+        acc.offload((0, 10_000)).unwrap();
+        acc.offload_eos();
+        assert_eq!(acc.load_result(), Some((0..10_000u64).sum()));
+        assert_eq!(acc.load_result(), None);
+        acc.wait();
+    }
+
+    #[test]
+    fn master_worker_multiple_roots() {
+        let skel = launch_master_worker(
+            FarmConfig::default().workers(2),
+            RunMode::RunToEnd,
+            SumMaster { total: 0 },
+            |_| range_worker(),
+        );
+        let mut acc: Accel<(u64, u64), u64> = Accel::from_skeleton(skel);
+        acc.offload((0, 1_000)).unwrap();
+        acc.offload((1_000, 2_000)).unwrap();
+        acc.offload((5_000, 5_001)).unwrap();
+        acc.offload_eos();
+        let expect: u64 = (0..2_000u64).sum::<u64>() + 5_000;
+        assert_eq!(acc.load_result(), Some(expect));
+        acc.wait();
+    }
+
+    #[test]
+    fn master_worker_empty_input_terminates() {
+        let skel = launch_master_worker(
+            FarmConfig::default().workers(2),
+            RunMode::RunToEnd,
+            SumMaster { total: 0 },
+            |_| range_worker(),
+        );
+        let mut acc: Accel<(u64, u64), u64> = Accel::from_skeleton(skel);
+        acc.offload_eos();
+        assert_eq!(acc.load_result(), Some(0)); // empty total emitted
+        acc.wait();
+    }
+
+    #[test]
+    fn master_worker_freeze_thaw() {
+        let skel = launch_master_worker(
+            FarmConfig::default().workers(2),
+            RunMode::RunThenFreeze,
+            SumMaster { total: 0 },
+            |_| range_worker(),
+        );
+        let mut acc: Accel<(u64, u64), u64> = Accel::from_skeleton(skel);
+        // NOTE: SumMaster keeps `total` across cycles — each burst's
+        // output is cumulative, which this test asserts explicitly.
+        acc.offload((0, 100)).unwrap();
+        acc.offload_eos();
+        let first = acc.load_result().unwrap();
+        assert_eq!(first, (0..100u64).sum());
+        assert_eq!(acc.load_result(), None); // drain the cycle's EOS
+        acc.wait_freezing();
+        acc.thaw();
+        acc.offload((0, 10)).unwrap();
+        acc.offload_eos();
+        let second = acc.load_result().unwrap();
+        assert_eq!(second, (0..100u64).sum::<u64>() + (0..10u64).sum::<u64>());
+        acc.wait();
+    }
+}

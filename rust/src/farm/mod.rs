@@ -1,0 +1,552 @@
+//! The **farm** skeleton (paper §2.4): functional replication of a set of
+//! workers filtering successive independent stream items, under the
+//! control of a scheduler.
+//!
+//! Topology (all channels are lock-free SPSC; the Emitter and Collector
+//! are the *arbiter threads* that give SPMC/MPSC semantics without any
+//! atomic RMW — §2.3):
+//!
+//! ```text
+//!              ┌── spsc ──▶ Worker 0 ── spsc ──┐
+//!  input ─spsc─▶ Emitter ──▶ Worker 1 ─────────▶ Collector ─spsc─▶ output
+//!              └── spsc ──▶ Worker n ── spsc ──┘
+//! ```
+//!
+//! Variants, all exercised by the paper:
+//! * **collector-less** farm (§4.2, N-queens): workers discard their
+//!   output stream; results travel through shared state.
+//! * **ordered** farm: the collector restores offload order via a
+//!   reorder buffer (requires exactly one emission per task).
+//! * **on-demand scheduling**: tiny worker queues + skip-if-full routing
+//!   approximate FastFlow's on-demand policy for irregular tasks.
+//!
+//! The farm is also the body of the [`crate::accel::FarmAccel`]
+//! accelerator and can be nested as a [`crate::pipeline`] stage.
+
+mod collector;
+mod emitter;
+pub mod feedback;
+
+pub use collector::Ordering as CollectorOrdering;
+pub use feedback::{launch_master_worker, MasterCtx, MasterLogic};
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::channel::{stream, stream_unbounded, Receiver, Sender};
+use crate::node::{Lifecycle, Node, NodeRunner, OutTarget, RunMode, Svc};
+use crate::sched::{CpuMap, MappingPolicy};
+use crate::skeleton::LaunchedSkeleton;
+use crate::trace::NodeTrace;
+use crate::DEFAULT_QUEUE_CAP;
+
+/// Task-scheduling policy applied by the emitter (paper §3.2:
+/// "mechanisms to control task scheduling").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// Strict round-robin; blocks on the chosen worker's queue.
+    /// FastFlow's default. Best for regular tasks.
+    #[default]
+    RoundRobin,
+    /// On-demand: short worker queues; the emitter gives the task to the
+    /// first worker with room, scanning from the last position. Best for
+    /// irregular tasks (e.g. Mandelbrot rows of very different cost).
+    OnDemand,
+}
+
+/// Farm configuration.
+#[derive(Debug, Clone)]
+pub struct FarmConfig {
+    pub workers: usize,
+    pub sched: SchedPolicy,
+    pub ordering: CollectorOrdering,
+    /// Capacity of the farm input queue.
+    pub in_cap: usize,
+    /// Capacity of each emitter→worker queue (forced small by OnDemand).
+    pub worker_cap: usize,
+    /// Capacity of each worker→collector queue and of the output queue.
+    pub out_cap: usize,
+    pub mapping: MappingPolicy,
+    pub explicit_cores: Vec<usize>,
+}
+
+impl Default for FarmConfig {
+    fn default() -> Self {
+        FarmConfig {
+            workers: crate::util::num_cpus().max(2) - 1,
+            sched: SchedPolicy::default(),
+            ordering: CollectorOrdering::Arrival,
+            in_cap: usize::MAX, // unbounded offload buffer (uSWSR)
+            worker_cap: DEFAULT_QUEUE_CAP,
+            out_cap: DEFAULT_QUEUE_CAP,
+            mapping: MappingPolicy::None,
+            explicit_cores: vec![],
+        }
+    }
+}
+
+impl FarmConfig {
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+    pub fn sched(mut self, p: SchedPolicy) -> Self {
+        self.sched = p;
+        self
+    }
+    pub fn ordered(mut self) -> Self {
+        self.ordering = CollectorOrdering::Ordered;
+        self
+    }
+    pub fn queue_caps(mut self, in_cap: usize, worker_cap: usize, out_cap: usize) -> Self {
+        self.in_cap = in_cap.max(1);
+        self.worker_cap = worker_cap.max(1);
+        self.out_cap = out_cap.max(1);
+        self
+    }
+    pub fn mapping(mut self, m: MappingPolicy) -> Self {
+        self.mapping = m;
+        self
+    }
+
+    /// Effective per-worker queue capacity under the scheduling policy.
+    fn effective_worker_cap(&self) -> usize {
+        match self.sched {
+            SchedPolicy::RoundRobin => self.worker_cap,
+            // On-demand relies on short queues so work sits with the
+            // emitter, not in a long queue behind a slow worker.
+            SchedPolicy::OnDemand => 2,
+        }
+    }
+}
+
+/// Where the farm's results go.
+pub enum FarmOutput<O: Send> {
+    /// Create an internal output stream and run a collector; the caller
+    /// pops results (accelerator mode).
+    Stream,
+    /// Run a collector writing into an existing stream (pipeline mode).
+    External(Sender<O>),
+    /// No collector at all (paper §4.2): worker emissions are discarded.
+    None,
+}
+
+/// A launched farm (see [`LaunchedSkeleton`]).
+pub type LaunchedFarm<I, O> = LaunchedSkeleton<I, O>;
+
+/// Internal frame: every task is tagged with an offload sequence number
+/// so the ordered collector can restore order with a plain u64 — the
+/// paper's "streams carry synchronization tokens" in typed form.
+pub(crate) type Seq<T> = (u64, T);
+
+/// Adapts a user worker `Node<In=I, Out=O>` to the sequence-tagged farm
+/// plumbing `Node<In=(u64,I), Out=(u64,O)>`.
+struct SeqWrap<W> {
+    inner: W,
+    /// Ordered farms require exactly one emission per task.
+    enforce_one: bool,
+}
+
+impl<W: Node> Node for SeqWrap<W> {
+    type In = Seq<W::In>;
+    type Out = Seq<W::Out>;
+
+    fn svc_init(&mut self) {
+        self.inner.svc_init();
+    }
+
+    fn svc(
+        &mut self,
+        (seq, task): Self::In,
+        out: &mut crate::node::Outbox<'_, Self::Out>,
+    ) -> Svc {
+        let mut emitted = 0u64;
+        let verdict = {
+            let mut sink = |v: W::Out| {
+                emitted += 1;
+                // Re-tag with the task's sequence number.
+                out.send((seq, v));
+                !out.broken
+            };
+            let mut inner_out = crate::node::Outbox::over(&mut sink);
+            self.inner.svc(task, &mut inner_out)
+        };
+        if self.enforce_one && emitted != 1 {
+            panic!(
+                "ordered farm requires exactly one emission per task, got {emitted} \
+                 (seq {seq}); use CollectorOrdering::Arrival for multi-emission workers"
+            );
+        }
+        verdict
+    }
+
+    fn svc_end(&mut self) {
+        self.inner.svc_end();
+    }
+}
+
+/// The number of threads a farm with this config will run.
+pub fn farm_thread_count(cfg: &FarmConfig, has_collector: bool) -> usize {
+    cfg.workers.max(1) + 1 + usize::from(has_collector)
+}
+
+/// Launch a standalone farm.
+///
+/// * `cfg` — topology and policies.
+/// * `mode` — [`RunMode::RunToEnd`] (one-shot) or
+///   [`RunMode::RunThenFreeze`] (accelerator bursts).
+/// * `factory` — produces one worker node per worker thread (each worker
+///   owns its state, per the skeleton's "local state may be maintained
+///   in each filter").
+/// * `out` — result routing, see [`FarmOutput`].
+pub fn launch_farm<I, O, W, F>(
+    cfg: FarmConfig,
+    mode: RunMode,
+    factory: F,
+    out: FarmOutput<O>,
+) -> LaunchedFarm<I, O>
+where
+    I: Send + 'static,
+    O: Send + 'static,
+    W: Node<In = I, Out = O> + 'static,
+    F: FnMut(usize) -> W,
+{
+    let has_collector = !matches!(out, FarmOutput::None);
+    let nthreads = farm_thread_count(&cfg, has_collector);
+    let lifecycle = Lifecycle::new(nthreads, mode);
+    let cpu_map = CpuMap::build(cfg.mapping, nthreads, &cfg.explicit_cores);
+
+    let mut joins = Vec::with_capacity(nthreads);
+    let mut traces = Vec::with_capacity(nthreads);
+
+    let (out_target, output_rx): (Option<OutTarget<O>>, Option<Receiver<O>>) = match out {
+        FarmOutput::Stream => {
+            // Unbounded result stream: the offloading thread can never
+            // deadlock itself by offloading before draining (Fig. 3's
+            // offload-all-then-pop pattern).
+            let (tx, rx) = stream_unbounded::<O>();
+            (Some(OutTarget::Chan(tx)), Some(rx))
+        }
+        FarmOutput::External(tx) => (Some(OutTarget::Chan(tx)), None),
+        FarmOutput::None => (None, None),
+    };
+
+    let input_tx = wire_farm(
+        &cfg,
+        factory,
+        out_target,
+        &lifecycle,
+        0,
+        &cpu_map,
+        &mut joins,
+        &mut traces,
+    );
+
+    LaunchedFarm {
+        input: input_tx,
+        output: output_rx,
+        lifecycle,
+        joins,
+        traces,
+    }
+}
+
+/// Wire a farm's threads into an existing skeleton (shared lifecycle,
+/// thread ids starting at `thread_base` for CPU mapping). Used by
+/// [`launch_farm`] and by [`crate::pipeline`] for farm stages.
+/// Returns the farm's input sender. `out_target == None` means
+/// collector-less (worker outputs discarded).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn wire_farm<I, O, W, F>(
+    cfg: &FarmConfig,
+    mut factory: F,
+    out_target: Option<OutTarget<O>>,
+    lifecycle: &Arc<Lifecycle>,
+    thread_base: usize,
+    cpu_map: &CpuMap,
+    joins: &mut Vec<JoinHandle<()>>,
+    traces: &mut Vec<(String, Arc<NodeTrace>)>,
+) -> Sender<I>
+where
+    I: Send + 'static,
+    O: Send + 'static,
+    W: Node<In = I, Out = O> + 'static,
+    F: FnMut(usize) -> W,
+{
+    let nworkers = cfg.workers.max(1);
+    let has_collector = out_target.is_some();
+    let ordered = cfg.ordering == CollectorOrdering::Ordered && has_collector;
+
+    // --- farm input stream (caller → emitter) --------------------------
+    // Unbounded (FastFlow's accelerator input buffer): `offload` never
+    // blocks the caller, removing the offload/drain deadlock cycle.
+    // `in_cap` is kept for pipeline-internal (bounded) wiring.
+    let (input_tx, input_rx) = if cfg.in_cap == usize::MAX {
+        stream_unbounded::<I>()
+    } else {
+        stream::<I>(cfg.in_cap)
+    };
+
+    // --- emitter → workers ---------------------------------------------
+    let wcap = cfg.effective_worker_cap();
+    let mut worker_rxs = Vec::with_capacity(nworkers);
+    let mut worker_txs = Vec::with_capacity(nworkers);
+    for _ in 0..nworkers {
+        let (tx, rx) = stream::<Seq<I>>(wcap);
+        worker_txs.push(tx);
+        worker_rxs.push(rx);
+    }
+
+    // --- workers → collector --------------------------------------------
+    let mut collector_rxs = Vec::with_capacity(nworkers);
+    let mut worker_outs: Vec<OutTarget<Seq<O>>> = Vec::with_capacity(nworkers);
+    for _ in 0..nworkers {
+        if has_collector {
+            let (tx, rx) = stream::<Seq<O>>(cfg.out_cap);
+            collector_rxs.push(rx);
+            worker_outs.push(OutTarget::Chan(tx));
+        } else {
+            worker_outs.push(OutTarget::Discard);
+        }
+    }
+
+    // --- spawn: emitter ---------------------------------------------------
+    let emitter_trace = NodeTrace::new();
+    traces.push(("emitter".to_string(), emitter_trace.clone()));
+    joins.push(emitter::spawn_emitter(
+        input_rx,
+        worker_txs,
+        cfg.sched,
+        lifecycle.clone(),
+        emitter_trace,
+        cpu_map.core_for(thread_base),
+    ));
+
+    // --- spawn: workers -----------------------------------------------------
+    for (wi, (rx, wout)) in worker_rxs.into_iter().zip(worker_outs).enumerate() {
+        let trace = NodeTrace::new();
+        traces.push((format!("worker-{wi}"), trace.clone()));
+        let runner = NodeRunner {
+            node: SeqWrap {
+                inner: factory(wi),
+                enforce_one: ordered,
+            },
+            rx,
+            out: wout,
+            lifecycle: lifecycle.clone(),
+            trace,
+            pin_to: cpu_map.core_for(thread_base + 1 + wi),
+            name: format!("ff-worker-{wi}"),
+        };
+        joins.push(runner.spawn());
+    }
+
+    // --- spawn: collector ------------------------------------------------
+    if let Some(out_target) = out_target {
+        let trace = NodeTrace::new();
+        traces.push(("collector".to_string(), trace.clone()));
+        joins.push(collector::spawn_collector(
+            collector_rxs,
+            out_target,
+            cfg.ordering,
+            lifecycle.clone(),
+            trace,
+            cpu_map.core_for(thread_base + 1 + nworkers),
+        ));
+    }
+
+    input_tx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Msg;
+    use crate::node::node_fn;
+
+    fn drain<O: Send>(rx: &mut Receiver<O>) -> Vec<O> {
+        let mut got = vec![];
+        loop {
+            match rx.recv() {
+                Msg::Task(v) => got.push(v),
+                Msg::Eos => break,
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn farm_processes_all_tasks() {
+        let farm = launch_farm(
+            FarmConfig::default().workers(4),
+            RunMode::RunToEnd,
+            |_| node_fn(|x: u64| x * 2),
+            FarmOutput::Stream,
+        );
+        let (mut input, output, _handle) = farm.split();
+        let mut output = output.unwrap();
+        let pusher = std::thread::spawn(move || {
+            for i in 0..3_000u64 {
+                input.send(i).unwrap();
+            }
+            input.send_eos().unwrap();
+        });
+        let mut got = drain(&mut output);
+        pusher.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got.len(), 3_000);
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v, 2 * i as u64);
+        }
+    }
+
+    #[test]
+    fn ordered_farm_preserves_offload_order() {
+        let farm = launch_farm(
+            FarmConfig::default().workers(8).ordered(),
+            RunMode::RunToEnd,
+            |wi| {
+                node_fn(move |x: u64| {
+                    // Make workers finish out of order on purpose.
+                    if wi % 2 == 0 {
+                        std::thread::yield_now();
+                    }
+                    x + 1
+                })
+            },
+            FarmOutput::Stream,
+        );
+        let (mut input, output, _handle) = farm.split();
+        let mut output = output.unwrap();
+        let pusher = std::thread::spawn(move || {
+            for i in 0..2_000u64 {
+                input.send(i).unwrap();
+            }
+            input.send_eos().unwrap();
+        });
+        let got = drain(&mut output);
+        pusher.join().unwrap();
+        assert_eq!(got, (1..=2_000u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn collectorless_farm_discards_but_processes() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let sum = Arc::new(AtomicU64::new(0));
+        let farm = launch_farm(
+            FarmConfig::default().workers(3),
+            RunMode::RunToEnd,
+            |_| {
+                let sum = sum.clone();
+                node_fn(move |x: u64| {
+                    sum.fetch_add(x, Ordering::Relaxed);
+                })
+            },
+            FarmOutput::None::<()>,
+        );
+        let (mut input, _none, handle) = farm.split();
+        for i in 1..=1000u64 {
+            input.send(i).unwrap();
+        }
+        input.send_eos().unwrap();
+        handle.join();
+        assert_eq!(sum.load(Ordering::Relaxed), 500_500);
+    }
+
+    #[test]
+    fn on_demand_balances_irregular_tasks() {
+        let farm = launch_farm(
+            FarmConfig::default().workers(4).sched(SchedPolicy::OnDemand),
+            RunMode::RunToEnd,
+            |_| {
+                node_fn(|cost: u64| {
+                    // Irregular busy-work.
+                    let mut acc = 0u64;
+                    for i in 0..cost * 1000 {
+                        acc = acc.wrapping_add(i);
+                    }
+                    acc
+                })
+            },
+            FarmOutput::Stream,
+        );
+        let (mut input, output, handle) = farm.split();
+        let mut output = output.unwrap();
+        let pusher = std::thread::spawn(move || {
+            // One pathological task then many cheap ones: RR would pile
+            // cheap tasks behind the heavy one on the same worker.
+            input.send(400).unwrap();
+            for _ in 0..200u64 {
+                input.send(1).unwrap();
+            }
+            input.send_eos().unwrap();
+        });
+        let got = drain(&mut output);
+        pusher.join().unwrap();
+        let report = handle.join();
+        assert_eq!(got.len(), 201);
+        // With on-demand, no worker should have hoarded everything.
+        assert!(report.imbalance("worker") < 4.0);
+    }
+
+    #[test]
+    fn farm_trace_counts_tasks() {
+        let farm = launch_farm(
+            FarmConfig::default().workers(2),
+            RunMode::RunToEnd,
+            |_| node_fn(|x: u32| x),
+            FarmOutput::Stream,
+        );
+        let (mut input, output, handle) = farm.split();
+        let mut output = output.unwrap();
+        for i in 0..100u32 {
+            input.send(i).unwrap();
+        }
+        input.send_eos().unwrap();
+        let _ = drain(&mut output);
+        let report = handle.join();
+        let worker_tasks: u64 = report
+            .rows
+            .iter()
+            .filter(|r| r.name.starts_with("worker"))
+            .map(|r| r.tasks)
+            .sum();
+        assert_eq!(worker_tasks, 100);
+        let emitter = report.rows.iter().find(|r| r.name == "emitter").unwrap();
+        assert_eq!(emitter.tasks, 100);
+    }
+
+    #[test]
+    fn ordered_farm_rejects_multi_emission() {
+        // The seq-wrapper panics (on the worker thread) when an ordered
+        // farm's worker emits != 1 result per task; the farm must still
+        // drain (synthetic EOS from the dead worker) rather than hang.
+        struct Multi;
+        impl Node for Multi {
+            type In = u32;
+            type Out = u32;
+            fn svc(&mut self, t: u32, out: &mut crate::node::Outbox<'_, u32>) -> Svc {
+                out.send(t);
+                out.send(t);
+                Svc::GoOn
+            }
+        }
+        let mut farm = launch_farm(
+            FarmConfig::default().workers(1).ordered(),
+            RunMode::RunToEnd,
+            |_| Multi,
+            FarmOutput::Stream,
+        );
+        farm.input.send(1).unwrap();
+        let _ = farm.input.send_eos(); // worker may already be gone
+        let mut output = farm.output.take().unwrap();
+        let got = drain(&mut output);
+        // First emission may or may not have escaped before the panic;
+        // the stream must terminate either way (no hang).
+        assert!(got.len() <= 2);
+        // The worker died before completing a cycle.
+        let report = farm.trace_report();
+        let w = report.rows.iter().find(|r| r.name == "worker-0").unwrap();
+        assert_eq!(w.cycles, 0, "worker should have panicked before cycle end");
+    }
+}

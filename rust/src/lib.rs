@@ -1,0 +1,75 @@
+//! # fastflow — lock-free streaming skeletons with a software accelerator
+//!
+//! A Rust reproduction of *"Accelerating sequential programs using FastFlow
+//! and self-offloading"* (Aldinucci, Danelutto, Kilpatrick, Meneghin,
+//! Torquati — Università di Pisa TR-10-03, 2010).
+//!
+//! The library is organised as the paper's layered stack:
+//!
+//! 1. **Run-time support** — [`spsc`]: lock-free, fence-free (x86/TSO)
+//!    Single-Producer-Single-Consumer queues in the FastForward style, plus
+//!    an unbounded variant. [`baseline`] holds the comparison queues the
+//!    paper argues against (Lamport-style shared-index ring, mutex queue).
+//! 2. **Low-level programming** — [`queues`]: SPMC / MPSC / MPMC channels
+//!    realised *without* atomic read-modify-write operations by composing
+//!    SPSC queues with an arbiter thread (Emitter / Collector).
+//! 3. **High-level programming** — [`farm`], [`pipeline`]: stream-parallel
+//!    skeletons with pluggable scheduling, ordering, and feedback
+//!    (master–worker).
+//! 4. **The accelerator** — [`accel`]: wrap a skeleton as a *software
+//!    device* with an input and an output stream; `offload()` tasks from
+//!    sequential code, `run_then_freeze()` / `thaw()` the device between
+//!    bursts, `wait()` for completion. This is the paper's contribution:
+//!    *self-offloading* onto the unused cores of the same CPU.
+//!
+//! On top of the stack sit the paper's workloads ([`apps`]): the QT
+//! Mandelbrot explorer (Fig. 4), Somers' N-queens solver (Table 2) and the
+//! matrix-multiplication running example (Fig. 3) — each in sequential and
+//! accelerated form, with the Mandelbrot/matmul numeric hot-spot optionally
+//! executed by an AOT-compiled XLA (JAX + Pallas) kernel through
+//! [`runtime`] (PJRT). Python never runs at request time.
+//!
+//! ```no_run
+//! use fastflow::accel::FarmAccel;
+//! use fastflow::farm::FarmConfig;
+//! use fastflow::node::node_fn;
+//!
+//! // Fig. 3: offload matrix-multiply row-tasks onto a farm accelerator.
+//! let mut acc: FarmAccel<usize, ()> = FarmAccel::run_no_collector(
+//!     FarmConfig::default().workers(4),
+//!     |_| node_fn(|row: usize| { /* compute row */ }),
+//! );
+//! for row in 0..1024 { acc.offload(row).unwrap(); }
+//! acc.offload_eos();
+//! acc.wait();
+//! ```
+
+pub mod accel;
+pub mod alloc;
+pub mod apps;
+pub mod baseline;
+pub mod benchkit;
+pub mod channel;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod farm;
+pub mod metrics;
+pub mod node;
+pub mod pipeline;
+pub mod queues;
+pub mod runtime;
+pub mod sched;
+pub mod skeleton;
+pub mod spsc;
+pub mod testing;
+pub mod trace;
+pub mod util;
+
+/// Library version (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default capacity for inter-node SPSC queues, matching FastFlow's
+/// default of a few hundred slots: large enough to decouple producer
+/// and consumer, small enough to stay cache-resident.
+pub const DEFAULT_QUEUE_CAP: usize = 512;

@@ -1,0 +1,311 @@
+//! `ffctl` — the launcher for the FastFlow-accelerator reproduction.
+//!
+//! Subcommands (each regenerates a paper artifact or runs a demo):
+//!
+//! ```text
+//! ffctl fig4      [--quick|--full] [--engine scalar|pjrt] [--width N] …
+//! ffctl table2    [--quick|--full] [--boards 12,13,14] [--depth 4] …
+//! ffctl mandel    [--region whole-set] [--workers N] [--out img.pgm] …
+//! ffctl nqueens   [--n 13] [--depth 4] [--workers N]
+//! ffctl matmul    [--n 256] [--workers N]
+//! ffctl info
+//! ```
+//!
+//! Global options: `--config file` (key=value), `--trace`, `--csv dir`.
+
+use anyhow::{bail, Result};
+
+use fastflow::apps::mandelbrot::{
+    max_iter_for_pass, render_sequential, AcceleratedRenderer, Engine, Region, RenderParams,
+};
+use fastflow::apps::matmul::{matmul_accelerated, matmul_sequential, Matrix};
+use fastflow::apps::nqueens;
+use fastflow::cli::Args;
+use fastflow::config::Config;
+use fastflow::coordinator::{run_fig4, run_table2, Fig4Opts, Table2Opts};
+use fastflow::metrics::speedup;
+use fastflow::util::{fmt_duration, num_cpus, timed};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("ffctl: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::new(),
+    };
+    args.apply_to(&mut cfg);
+    Ok(cfg)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("fig4") => cmd_fig4(args),
+        Some("table2") => cmd_table2(args),
+        Some("mandel") => cmd_mandel(args),
+        Some("nqueens") => cmd_nqueens(args),
+        Some("matmul") => cmd_matmul(args),
+        Some("info") => cmd_info(),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try `ffctl help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "ffctl {} — FastFlow accelerator & self-offloading (TR-10-03 reproduction)
+
+USAGE: ffctl <subcommand> [options]
+
+SUBCOMMANDS
+  fig4      QT-Mandelbrot speedup experiment (paper Fig. 4)
+  table2    N-queens accelerator experiment (paper Table 2)
+  mandel    render one Mandelbrot frame (demo / end-to-end driver)
+  nqueens   count N-queens solutions once
+  matmul    Fig. 3 running example (matrix multiply offload)
+  info      platform + configuration report
+
+COMMON OPTIONS
+  --config <file>    key=value config file
+  --quick / --full   scaled-down / paper-scale experiment sizes
+  --engine <e>       scalar | pjrt  (pjrt needs `make artifacts`)
+  --workers <n>      worker threads
+  --trace            print per-node trace report
+  --csv <dir>        also write tables as CSV
+",
+        fastflow::VERSION
+    );
+}
+
+fn parse_engine(cfg: &Config) -> Result<Engine> {
+    match cfg.get("engine").as_deref() {
+        None | Some("scalar") => Ok(Engine::Scalar),
+        Some("pjrt") => Ok(Engine::Pjrt),
+        Some(e) => bail!("unknown engine '{e}' (scalar|pjrt)"),
+    }
+}
+
+fn emit_table(name: &str, table: &fastflow::metrics::Table, cfg: &Config) {
+    println!("\n## {name}\n");
+    print!("{}", table.render());
+    if let Some(dir) = cfg.get("csv") {
+        let _ = std::fs::create_dir_all(&dir);
+        let path = format!("{dir}/{name}.csv");
+        if std::fs::write(&path, table.to_csv()).is_ok() {
+            println!("csv: {path}");
+        }
+    }
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mut opts = Fig4Opts::default();
+    if cfg.get_bool("full", false) {
+        opts = opts.full();
+    }
+    if cfg.get_bool("quick", false) {
+        opts = opts.quick();
+    }
+    opts.width = cfg.get_usize("width", opts.width);
+    opts.height = cfg.get_usize("height", opts.height);
+    opts.passes = cfg.get_u32("passes", opts.passes);
+    opts.runs = cfg.get_usize("runs", opts.runs);
+    opts.engine = parse_engine(&cfg)?;
+    if let Some(list) = cfg.get_list("workers") {
+        opts.worker_counts = list.iter().filter_map(|s| s.parse().ok()).collect();
+    }
+    if let Some(names) = cfg.get_list("regions") {
+        opts.regions = names.iter().filter_map(|n| Region::by_name(n)).collect();
+        if opts.regions.is_empty() {
+            bail!("no valid regions in --regions");
+        }
+    }
+    println!(
+        "fig4: {}x{} px, {} passes, engine {:?}, {} cpus",
+        opts.width,
+        opts.height,
+        opts.passes,
+        opts.engine,
+        num_cpus()
+    );
+    let (table, _) = run_fig4(&opts);
+    emit_table("fig4_mandelbrot", &table, &cfg);
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mut opts = Table2Opts::default();
+    if cfg.get_bool("full", false) {
+        opts = opts.full();
+    }
+    if cfg.get_bool("quick", false) {
+        opts = opts.quick();
+    }
+    if let Some(list) = cfg.get_list("boards") {
+        opts.boards = list.iter().filter_map(|s| s.parse().ok()).collect();
+    }
+    opts.depth = cfg.get_u32("depth", opts.depth);
+    opts.workers = cfg.get_usize("workers", opts.workers);
+    opts.runs = cfg.get_usize("runs", opts.runs);
+    println!(
+        "table2: boards {:?}, depth {}, {} workers",
+        opts.boards, opts.depth, opts.workers
+    );
+    let (table, rows) = run_table2(&opts);
+    emit_table("table2_nqueens", &table, &cfg);
+    if rows.iter().any(|r| !r.verified) {
+        bail!("solution count mismatch!");
+    }
+    Ok(())
+}
+
+fn cmd_mandel(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let region = match cfg.get("region") {
+        Some(name) => {
+            Region::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown region '{name}'"))?
+        }
+        None => Region::presets()[0],
+    };
+    let width = cfg.get_usize("width", 800);
+    let height = cfg.get_usize("height", 600);
+    let pass = cfg.get_u32("pass", 3);
+    let workers = cfg.get_usize("workers", num_cpus().max(2) - 1);
+    let engine = parse_engine(&cfg)?;
+    let max_iter = max_iter_for_pass(pass);
+
+    let (seq, seq_d) = timed(|| render_sequential(&region, width, height, max_iter, None));
+    let seq = seq.unwrap();
+
+    let params = RenderParams {
+        region,
+        width,
+        height,
+    };
+    let mut renderer = AcceleratedRenderer::new(params, workers, engine);
+    let (frame, par_d) = timed(|| renderer.render_pass(max_iter, None).unwrap());
+    let report = renderer.shutdown();
+
+    anyhow::ensure!(
+        engine == Engine::Pjrt || frame.iters == seq.iters,
+        "accelerated frame differs from sequential!"
+    );
+    println!(
+        "mandel {}: {}x{} max_iter={} | seq {} | ff({} workers, {:?}) {} | speedup {:.2}",
+        region.name,
+        width,
+        height,
+        max_iter,
+        fmt_duration(seq_d),
+        workers,
+        engine,
+        fmt_duration(par_d),
+        speedup(seq_d.as_secs_f64(), par_d.as_secs_f64()),
+    );
+    if cfg.get_bool("trace", false) {
+        print!("{}", report.render());
+    }
+    if let Some(path) = cfg.get("out") {
+        std::fs::write(&path, frame.to_pgm())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_nqueens(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n = cfg.get_u32("n", 13);
+    let depth = cfg.get_u32("depth", 4);
+    let workers = cfg.get_usize("workers", 2 * num_cpus());
+    let (seq, seq_d) = timed(|| nqueens::count_sequential(n));
+    let (run, par_d) = timed(|| nqueens::count_parallel(n, depth, workers));
+    anyhow::ensure!(
+        seq == run.solutions,
+        "count mismatch: {seq} vs {}",
+        run.solutions
+    );
+    println!(
+        "nqueens {n}x{n}: {} solutions | seq {} | ff({} workers, {} tasks) {} | speedup {:.2}{}",
+        seq,
+        fmt_duration(seq_d),
+        workers,
+        run.tasks,
+        fmt_duration(par_d),
+        speedup(seq_d.as_secs_f64(), par_d.as_secs_f64()),
+        match nqueens::known_solutions(n) {
+            Some(k) if k == seq => " [verified]",
+            Some(_) => " [MISMATCH vs known]",
+            None => "",
+        }
+    );
+    Ok(())
+}
+
+fn cmd_matmul(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n = cfg.get_usize("n", 256);
+    let workers = cfg.get_usize("workers", num_cpus().max(2) - 1);
+    let a = Matrix::random(n, 1);
+    let b = Matrix::random(n, 2);
+    let (c_seq, seq_d) = timed(|| matmul_sequential(&a, &b));
+    let (c_par, par_d) = timed(|| matmul_accelerated(&a, &b, workers));
+    anyhow::ensure!(c_seq == c_par, "accelerated result differs!");
+    println!(
+        "matmul {n}x{n}: seq {} | ff({} workers) {} | speedup {:.2} [verified]",
+        fmt_duration(seq_d),
+        workers,
+        fmt_duration(par_d),
+        speedup(seq_d.as_secs_f64(), par_d.as_secs_f64()),
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!(
+        "fastflow {} — FastFlow accelerator reproduction",
+        fastflow::VERSION
+    );
+    println!("cpus: {}", num_cpus());
+    println!("default queue capacity: {}", fastflow::DEFAULT_QUEUE_CAP);
+    for name in [
+        fastflow::runtime::MandelTileKernel::ARTIFACT,
+        fastflow::runtime::MatmulKernel::ARTIFACT,
+    ] {
+        println!(
+            "artifact {name}: {}",
+            if fastflow::runtime::artifact_available(name) {
+                "present"
+            } else {
+                "MISSING (run `make artifacts`)"
+            }
+        );
+    }
+    // Smoke the lifecycle quickly so `info` doubles as a self-test.
+    let (_, d) = timed(|| {
+        let mut acc: fastflow::accel::FarmAccel<u32, u32> = fastflow::accel::FarmAccel::run(
+            fastflow::farm::FarmConfig::default().workers(2),
+            |_| fastflow::node::node_fn(|x: u32| x + 1),
+        );
+        for i in 0..100 {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut n = 0;
+        while acc.load_result().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 100);
+        acc.wait();
+    });
+    println!("accelerator smoke-test: ok ({})", fmt_duration(d));
+    Ok(())
+}

@@ -1,0 +1,538 @@
+//! Skeleton nodes and their lifecycle — the FastFlow `ff_node` analogue.
+//!
+//! A [`Node`] is a sequential filter with `svc_init` / `svc` / `svc_end`
+//! hooks, executed by a dedicated thread that spins (never blocks in the
+//! OS while *running* — the paper: non-blocking threads "fully load the
+//! cores in which they are placed") and parks only when the skeleton is
+//! *frozen*.
+//!
+//! The accelerator lifecycle (§3) is implemented by [`Lifecycle`]:
+//!
+//! ```text
+//!        run()/run_then_freeze()        EOS            thaw()
+//! Created ────────────────▶ Running ────────▶ Frozen ────────▶ Running …
+//!                              │                  │ request_exit()/wait()
+//!                              ▼ (RunToEnd)       ▼
+//!                            Done               Done
+//! ```
+//!
+//! `Frozen` threads are suspended at the OS level (condvar wait), exactly
+//! matching the paper's description of the frozen state; every transition
+//! between the two stable states goes through transient states in which
+//! EOS propagates to all threads.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::channel::{Msg, Receiver, Sender};
+use crate::trace::NodeTrace;
+use std::sync::Arc;
+
+/// What `svc` tells the runtime after handling one task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Svc {
+    /// Keep going (the C++ `GO_ON`).
+    GoOn,
+    /// Terminate this node's stream now (the C++ `EOS` return).
+    Eos,
+}
+
+/// Where a node's emissions go.
+pub enum OutTarget<T: Send> {
+    /// Into a downstream stream.
+    Chan(Sender<T>),
+    /// Nowhere — the collector-less farm of §4.2 (N-queens) discards
+    /// worker outputs; results travel through shared state instead.
+    Discard,
+}
+
+impl<T: Send> OutTarget<T> {
+    /// Send one value; counts emissions. Returns false if downstream
+    /// disconnected.
+    #[inline]
+    pub fn send(&mut self, value: T) -> bool {
+        match self {
+            OutTarget::Chan(tx) => tx.send(value).is_ok(),
+            OutTarget::Discard => true,
+        }
+    }
+
+    /// Propagate EOS downstream (no-op for Discard).
+    #[inline]
+    pub fn send_eos(&mut self) {
+        if let OutTarget::Chan(tx) = self {
+            let _ = tx.send_eos();
+        }
+    }
+
+    /// Read-and-reset the backpressure counter (per-cycle accounting).
+    pub fn push_retries(&mut self) -> u64 {
+        match self {
+            OutTarget::Chan(tx) => std::mem::take(&mut tx.push_retries),
+            OutTarget::Discard => 0,
+        }
+    }
+}
+
+/// Emission handle passed to `svc` — the C++ `ff_send_out`. A node may
+/// emit zero, one, or many frames per input.
+///
+/// Backed by a dyn sink so wrappers (e.g. the farm's sequence tagger) can
+/// interpose on emissions without changing node types.
+pub struct Outbox<'a, T: Send> {
+    sink: &'a mut dyn FnMut(T) -> bool,
+    pub sent: u64,
+    /// Set if a send failed because downstream disconnected.
+    pub broken: bool,
+}
+
+impl<'a, T: Send> Outbox<'a, T> {
+    /// Build an outbox over an arbitrary sink; the sink returns false if
+    /// downstream disconnected.
+    pub fn over(sink: &'a mut dyn FnMut(T) -> bool) -> Self {
+        Outbox {
+            sink,
+            sent: 0,
+            broken: false,
+        }
+    }
+
+    /// Emit one value downstream (blocking on backpressure).
+    #[inline]
+    pub fn send(&mut self, value: T) {
+        if (self.sink)(value) {
+            self.sent += 1;
+        } else {
+            self.broken = true;
+        }
+    }
+}
+
+/// A sequential filter run by a dedicated thread — FastFlow's `ff_node`.
+///
+/// Implemented by user types, or use any `FnMut(In) -> Out` closure
+/// (blanket impl below): the closure's return value is emitted downstream
+/// and the node always continues (`GoOn`).
+pub trait Node: Send {
+    type In: Send + 'static;
+    type Out: Send + 'static;
+
+    /// Called once per run cycle before the first task.
+    fn svc_init(&mut self) {}
+
+    /// Handle one task; emit results through `out`.
+    fn svc(&mut self, task: Self::In, out: &mut Outbox<'_, Self::Out>) -> Svc;
+
+    /// Called once per run cycle after EOS.
+    fn svc_end(&mut self) {}
+}
+
+/// A node made from a plain `FnMut(In) -> Out` closure (1:1 mapping,
+/// always `GoOn`) — this is what makes the self-offloading recipe a
+/// one-liner: the loop body from the sequential program *is* the worker.
+/// Build with [`node_fn`].
+pub struct FnNode<F, I, O> {
+    f: F,
+    _pd: std::marker::PhantomData<fn(I) -> O>,
+}
+
+/// Wrap a closure as a [`Node`].
+pub fn node_fn<I, O, F>(f: F) -> FnNode<F, I, O>
+where
+    F: FnMut(I) -> O + Send,
+    I: Send + 'static,
+    O: Send + 'static,
+{
+    FnNode {
+        f,
+        _pd: std::marker::PhantomData,
+    }
+}
+
+impl<I, O, F> Node for FnNode<F, I, O>
+where
+    F: FnMut(I) -> O + Send,
+    I: Send + 'static,
+    O: Send + 'static,
+{
+    type In = I;
+    type Out = O;
+
+    #[inline]
+    fn svc(&mut self, task: I, out: &mut Outbox<'_, O>) -> Svc {
+        let r = (self.f)(task);
+        out.send(r);
+        Svc::GoOn
+    }
+}
+
+/// Lifecycle mode chosen at launch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunMode {
+    /// `run()`: process until EOS, then the threads exit (join with
+    /// `wait()`).
+    RunToEnd,
+    /// `run_then_freeze()`: process until EOS, then park (OS suspend)
+    /// awaiting `thaw()` or final `wait()`.
+    RunThenFreeze,
+}
+
+/// Coarse skeleton state, for observation/debugging.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LifecycleState {
+    Running,
+    Frozen,
+    Done,
+}
+
+struct LcInner {
+    generation: u64,
+    frozen: usize,
+    exited: usize,
+    exit: bool,
+    /// Completed freeze epochs: bumped when the *last* thread of a cycle
+    /// parks. `wait_freezing` consumes epochs through `freeze_cursor`, so
+    /// a thaw/wait_freezing sequence cannot observe the previous epoch.
+    freezes_done: u64,
+    freeze_cursor: u64,
+    /// True between a thaw and the moment every thread has left the
+    /// previous freeze epoch. A fast thread finishing its next cycle must
+    /// not re-freeze (and complete a bogus epoch) while a slow sibling is
+    /// still parked in the old one — the classic reusable-barrier
+    /// double-pass hazard.
+    draining: bool,
+}
+
+/// Shared lifecycle control for all threads of one skeleton instance.
+pub struct Lifecycle {
+    total: usize,
+    mode: RunMode,
+    st: Mutex<LcInner>,
+    cv: Condvar,
+}
+
+impl Lifecycle {
+    pub fn new(total: usize, mode: RunMode) -> Arc<Self> {
+        Arc::new(Lifecycle {
+            total,
+            mode,
+            st: Mutex::new(LcInner {
+                generation: 0,
+                frozen: 0,
+                exited: 0,
+                exit: false,
+                freezes_done: 0,
+                freeze_cursor: 0,
+                draining: false,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn mode(&self) -> RunMode {
+        self.mode
+    }
+
+    pub fn threads(&self) -> usize {
+        self.total
+    }
+
+    /// Node side: called at the end of a run cycle (EOS fully handled).
+    /// Returns `true` to run another cycle (thawed), `false` to exit.
+    pub fn cycle_end(&self) -> bool {
+        if self.mode == RunMode::RunToEnd {
+            let mut st = self.st.lock().unwrap();
+            st.exited += 1;
+            self.cv.notify_all();
+            return false;
+        }
+        let mut st = self.st.lock().unwrap();
+        // Wait out stragglers still parked in the previous epoch.
+        while st.draining && !st.exit {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.frozen += 1;
+        if st.frozen == self.total {
+            st.freezes_done += 1;
+        }
+        let my_gen = st.generation;
+        self.cv.notify_all();
+        // Frozen: OS-suspended until thaw or exit (paper's frozen state).
+        while st.generation == my_gen && !st.exit {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.frozen -= 1;
+        if st.frozen == 0 {
+            st.draining = false;
+        }
+        let cont = !st.exit;
+        if !cont {
+            st.exited += 1;
+        }
+        self.cv.notify_all();
+        cont
+    }
+
+    /// Caller side: block until every thread is frozen (the accelerator's
+    /// `wait_freezing`). Panics if called on a `RunToEnd` skeleton.
+    pub fn wait_freezing(&self) {
+        assert_eq!(
+            self.mode,
+            RunMode::RunThenFreeze,
+            "wait_freezing on a run-to-end skeleton"
+        );
+        let mut st = self.st.lock().unwrap();
+        while st.freezes_done <= st.freeze_cursor && !st.exit {
+            st = self.cv.wait(st).unwrap();
+        }
+        if !st.exit {
+            st.freeze_cursor = st.freezes_done;
+        }
+    }
+
+    /// Caller side: wake all frozen threads for another run cycle.
+    pub fn thaw(&self) {
+        let mut st = self.st.lock().unwrap();
+        st.generation += 1;
+        st.draining = st.frozen > 0;
+        self.cv.notify_all();
+    }
+
+    /// Caller side: tell frozen (or about-to-freeze) threads to exit.
+    pub fn request_exit(&self) {
+        let mut st = self.st.lock().unwrap();
+        st.exit = true;
+        self.cv.notify_all();
+    }
+
+    /// Observed state.
+    pub fn state(&self) -> LifecycleState {
+        let st = self.st.lock().unwrap();
+        if st.exited == self.total {
+            LifecycleState::Done
+        } else if st.frozen == self.total {
+            LifecycleState::Frozen
+        } else {
+            LifecycleState::Running
+        }
+    }
+}
+
+/// Configuration handed to the generic node runner.
+pub struct NodeRunner<N: Node> {
+    pub node: N,
+    pub rx: Receiver<N::In>,
+    pub out: OutTarget<N::Out>,
+    pub lifecycle: Arc<Lifecycle>,
+    pub trace: Arc<NodeTrace>,
+    /// Optional CPU to pin this node's thread to.
+    pub pin_to: Option<usize>,
+    pub name: String,
+}
+
+impl<N: Node + 'static> NodeRunner<N> {
+    /// Spawn the node's thread. The loop: `svc_init` → pump frames until
+    /// EOS (or `svc` returns `Eos`) → `svc_end` → propagate EOS → freeze
+    /// or exit per the lifecycle.
+    pub fn spawn(self) -> std::thread::JoinHandle<()> {
+        let NodeRunner {
+            mut node,
+            mut rx,
+            mut out,
+            lifecycle,
+            trace,
+            pin_to,
+            name,
+        } = self;
+        std::thread::Builder::new()
+            .name(name)
+            .spawn(move || {
+                if let Some(cpu) = pin_to {
+                    crate::sched::pin_current_thread(cpu);
+                }
+                loop {
+                    node.svc_init();
+                    loop {
+                        match rx.recv() {
+                            Msg::Task(t) => {
+                                let t0 = Instant::now();
+                                let mut sink = |v: N::Out| out.send(v);
+                                let mut outbox = Outbox::over(&mut sink);
+                                let verdict = node.svc(t, &mut outbox);
+                                let sent = outbox.sent;
+                                trace.on_task(t0.elapsed().as_nanos() as u64);
+                                trace.on_emit(sent);
+                                if verdict == Svc::Eos {
+                                    break;
+                                }
+                            }
+                            Msg::Eos => break,
+                        }
+                    }
+                    node.svc_end();
+                    out.send_eos();
+                    trace.on_cycle();
+                    trace.add_retries(out.push_retries(), rx.pop_retries);
+                    rx.pop_retries = 0;
+                    if !lifecycle.cycle_end() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn node thread")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::stream;
+
+    struct Doubler;
+    impl Node for Doubler {
+        type In = u32;
+        type Out = u32;
+        fn svc(&mut self, task: u32, out: &mut Outbox<'_, u32>) -> Svc {
+            out.send(task * 2);
+            Svc::GoOn
+        }
+    }
+
+    fn run_single<N: Node + 'static>(
+        node: N,
+        inputs: Vec<N::In>,
+    ) -> Vec<N::Out> {
+        let (mut tx_in, rx_in) = stream::<N::In>(16);
+        let (tx_out, mut rx_out) = stream::<N::Out>(16);
+        let lc = Lifecycle::new(1, RunMode::RunToEnd);
+        let h = NodeRunner {
+            node,
+            rx: rx_in,
+            out: OutTarget::Chan(tx_out),
+            lifecycle: lc,
+            trace: NodeTrace::new(),
+            pin_to: None,
+            name: "test-node".into(),
+        }
+        .spawn();
+        for t in inputs {
+            assert!(tx_in.send(t).is_ok());
+        }
+        assert!(tx_in.send_eos().is_ok());
+        let mut got = vec![];
+        loop {
+            match rx_out.recv() {
+                Msg::Task(v) => got.push(v),
+                Msg::Eos => break,
+            }
+        }
+        h.join().unwrap();
+        got
+    }
+
+    #[test]
+    fn node_maps_stream_and_propagates_eos() {
+        let got = run_single(Doubler, vec![1, 2, 3]);
+        assert_eq!(got, vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn closure_is_a_node() {
+        let got = run_single(node_fn(|x: u32| x + 10), vec![1, 2]);
+        assert_eq!(got, vec![11, 12]);
+    }
+
+    struct EarlyStop;
+    impl Node for EarlyStop {
+        type In = u32;
+        type Out = u32;
+        fn svc(&mut self, task: u32, out: &mut Outbox<'_, u32>) -> Svc {
+            out.send(task);
+            if task >= 2 {
+                Svc::Eos
+            } else {
+                Svc::GoOn
+            }
+        }
+    }
+
+    #[test]
+    fn svc_can_terminate_early() {
+        let got = run_single(EarlyStop, vec![1, 2, 3, 4]);
+        assert_eq!(got, vec![1, 2]);
+    }
+
+    struct MultiEmit;
+    impl Node for MultiEmit {
+        type In = u32;
+        type Out = u32;
+        fn svc(&mut self, task: u32, out: &mut Outbox<'_, u32>) -> Svc {
+            for i in 0..task {
+                out.send(i);
+            }
+            Svc::GoOn
+        }
+    }
+
+    #[test]
+    fn multi_emission_via_outbox() {
+        let got = run_single(MultiEmit, vec![3]);
+        assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn lifecycle_freeze_thaw_exit() {
+        let lc = Lifecycle::new(2, RunMode::RunThenFreeze);
+        let lc1 = lc.clone();
+        let lc2 = lc.clone();
+        let mk = |lc: Arc<Lifecycle>| {
+            std::thread::spawn(move || {
+                let mut cycles = 0;
+                loop {
+                    cycles += 1;
+                    if !lc.cycle_end() {
+                        break;
+                    }
+                }
+                cycles
+            })
+        };
+        let t1 = mk(lc1);
+        let t2 = mk(lc2);
+        lc.wait_freezing();
+        assert_eq!(lc.state(), LifecycleState::Frozen);
+        lc.thaw();
+        lc.wait_freezing();
+        lc.request_exit();
+        assert_eq!(t1.join().unwrap(), 2);
+        assert_eq!(t2.join().unwrap(), 2);
+        assert_eq!(lc.state(), LifecycleState::Done);
+    }
+
+    #[test]
+    fn run_to_end_exits_after_one_cycle() {
+        let lc = Lifecycle::new(1, RunMode::RunToEnd);
+        assert!(!lc.cycle_end());
+        assert_eq!(lc.state(), LifecycleState::Done);
+    }
+
+    #[test]
+    fn outbox_counts_and_discard_works() {
+        let mut t = OutTarget::<u32>::Discard;
+        let mut sink = |v: u32| t.send(v);
+        let mut ob = Outbox::over(&mut sink);
+        ob.send(1);
+        ob.send(2);
+        assert_eq!(ob.sent, 2);
+        assert!(!ob.broken);
+    }
+
+    #[test]
+    fn outbox_reports_broken_sink() {
+        let mut sink = |_v: u32| false;
+        let mut ob = Outbox::over(&mut sink);
+        ob.send(1);
+        assert!(ob.broken);
+        assert_eq!(ob.sent, 0);
+    }
+}

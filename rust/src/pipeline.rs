@@ -1,0 +1,417 @@
+//! The **pipeline** skeleton (paper §2.4): parallel execution of filters
+//! with a direct data dependency, plus arbitrary nesting of farms as
+//! stages (farm-in-pipeline composition — the paper's "their arbitrary
+//! nesting and composition").
+//!
+//! A pipeline is assembled back-to-front at launch: each stage is handed
+//! the sender of its successor's input queue, so every link is one
+//! lock-free SPSC stream and no pump threads exist.
+//!
+//! ```no_run
+//! use fastflow::pipeline::Pipeline;
+//! use fastflow::farm::FarmConfig;
+//! use fastflow::accel::Accel;
+//!
+//! use fastflow::node::node_fn;
+//! let pipe = Pipeline::new(node_fn(|x: u64| x + 1))   // stage 1: node
+//!     .then_farm(FarmConfig::default().workers(4), |_| node_fn(|x: u64| x * 2)) // stage 2: farm
+//!     .then(node_fn(|x: u64| x - 1));               // stage 3: node
+//! let mut acc: Accel<u64, u64> = Accel::from_skeleton(pipe.launch_accel());
+//! acc.offload(10).unwrap();
+//! acc.offload_eos();
+//! assert_eq!(acc.load_result(), Some(21));
+//! acc.wait();
+//! ```
+
+use std::marker::PhantomData;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::channel::{stream, Sender};
+use crate::farm::{farm_thread_count, wire_farm, FarmConfig};
+use crate::node::{Lifecycle, Node, NodeRunner, OutTarget, RunMode};
+use crate::sched::{CpuMap, MappingPolicy};
+use crate::skeleton::LaunchedSkeleton;
+use crate::trace::NodeTrace;
+use crate::DEFAULT_QUEUE_CAP;
+
+/// Wiring context threaded through stage construction.
+pub struct WireCtx<'a> {
+    lifecycle: &'a Arc<Lifecycle>,
+    cpu_map: &'a CpuMap,
+    next_thread: usize,
+    joins: &'a mut Vec<JoinHandle<()>>,
+    traces: &'a mut Vec<(String, Arc<NodeTrace>)>,
+    stage_idx: usize,
+}
+
+/// A pipeline stage: knows how many threads it runs and how to wire
+/// itself given its downstream target, returning its input sender.
+pub trait Stage<I: Send + 'static, O: Send + 'static>: Sized {
+    fn thread_count(&self) -> usize;
+    fn wire(self, out: OutTarget<O>, ctx: &mut WireCtx<'_>) -> Sender<I>;
+}
+
+/// A single [`Node`] as a stage.
+pub struct NodeStage<N> {
+    node: N,
+    cap: usize,
+}
+
+impl<N: Node + 'static> Stage<N::In, N::Out> for NodeStage<N> {
+    fn thread_count(&self) -> usize {
+        1
+    }
+
+    fn wire(self, out: OutTarget<N::Out>, ctx: &mut WireCtx<'_>) -> Sender<N::In> {
+        let (tx, rx) = stream::<N::In>(self.cap);
+        let trace = NodeTrace::new();
+        let name = format!("stage-{}", ctx.stage_idx);
+        ctx.traces.push((name.clone(), trace.clone()));
+        let tid = ctx.next_thread;
+        ctx.next_thread += 1;
+        ctx.stage_idx += 1;
+        ctx.joins.push(
+            NodeRunner {
+                node: self.node,
+                rx,
+                out,
+                lifecycle: ctx.lifecycle.clone(),
+                trace,
+                pin_to: ctx.cpu_map.core_for(tid),
+                name,
+            }
+            .spawn(),
+        );
+        tx
+    }
+}
+
+/// A whole farm as a stage (farm-in-pipeline nesting).
+pub struct FarmStage<W, F> {
+    cfg: FarmConfig,
+    factory: F,
+    _pd: PhantomData<fn() -> W>,
+}
+
+impl<I, O, W, F> Stage<I, O> for FarmStage<W, F>
+where
+    I: Send + 'static,
+    O: Send + 'static,
+    W: Node<In = I, Out = O> + 'static,
+    F: FnMut(usize) -> W,
+{
+    fn thread_count(&self) -> usize {
+        farm_thread_count(&self.cfg, true)
+    }
+
+    fn wire(self, out: OutTarget<O>, ctx: &mut WireCtx<'_>) -> Sender<I> {
+        let base = ctx.next_thread;
+        ctx.next_thread += farm_thread_count(&self.cfg, true);
+        ctx.stage_idx += 1;
+        let out_target = match out {
+            OutTarget::Chan(tx) => Some(OutTarget::Chan(tx)),
+            OutTarget::Discard => Some(OutTarget::Discard),
+        };
+        wire_farm(
+            &self.cfg,
+            self.factory,
+            out_target,
+            ctx.lifecycle,
+            base,
+            ctx.cpu_map,
+            ctx.joins,
+            ctx.traces,
+        )
+    }
+}
+
+/// Two stages composed: `S1 → S2`.
+pub struct Compose<S1, S2, M> {
+    first: S1,
+    second: S2,
+    _pd: PhantomData<fn() -> M>,
+}
+
+impl<I, M, O, S1, S2> Stage<I, O> for Compose<S1, S2, M>
+where
+    I: Send + 'static,
+    M: Send + 'static,
+    O: Send + 'static,
+    S1: Stage<I, M>,
+    S2: Stage<M, O>,
+{
+    fn thread_count(&self) -> usize {
+        self.first.thread_count() + self.second.thread_count()
+    }
+
+    fn wire(self, out: OutTarget<O>, ctx: &mut WireCtx<'_>) -> Sender<I> {
+        // Back-to-front: reserve first-stage thread ids before the
+        // second stage consumes ids, to keep pinning front-to-back.
+        let first_threads = self.first.thread_count();
+        let first_base = ctx.next_thread;
+        ctx.next_thread += first_threads;
+        let mid_tx = self.second.wire(out, ctx);
+        // Rewind for the first stage's ids.
+        let saved = ctx.next_thread;
+        ctx.next_thread = first_base;
+        let tx = self.first.wire(OutTarget::Chan(mid_tx), ctx);
+        ctx.next_thread = saved;
+        tx
+    }
+}
+
+/// Pipeline builder.
+pub struct Pipeline<I: Send + 'static, O: Send + 'static, S: Stage<I, O>> {
+    stage: S,
+    cap: usize,
+    mapping: MappingPolicy,
+    explicit_cores: Vec<usize>,
+    _pd: PhantomData<fn(I) -> O>,
+}
+
+impl<N: Node + 'static> Pipeline<N::In, N::Out, NodeStage<N>> {
+    /// Start a pipeline with a first stage.
+    pub fn new(node: N) -> Self {
+        Pipeline {
+            stage: NodeStage {
+                node,
+                cap: DEFAULT_QUEUE_CAP,
+            },
+            cap: DEFAULT_QUEUE_CAP,
+            mapping: MappingPolicy::None,
+            explicit_cores: vec![],
+            _pd: PhantomData,
+        }
+    }
+}
+
+impl<I: Send + 'static, O: Send + 'static, S: Stage<I, O>> Pipeline<I, O, S> {
+    /// Append a node stage.
+    pub fn then<N>(self, node: N) -> Pipeline<I, N::Out, Compose<S, NodeStage<N>, O>>
+    where
+        N: Node<In = O> + 'static,
+    {
+        let cap = self.cap;
+        Pipeline {
+            stage: Compose {
+                first: self.stage,
+                second: NodeStage { node, cap },
+                _pd: PhantomData,
+            },
+            cap,
+            mapping: self.mapping,
+            explicit_cores: self.explicit_cores,
+            _pd: PhantomData,
+        }
+    }
+
+    /// Append a farm stage (nesting).
+    pub fn then_farm<W, F>(
+        self,
+        cfg: FarmConfig,
+        factory: F,
+    ) -> Pipeline<I, W::Out, Compose<S, FarmStage<W, F>, O>>
+    where
+        W: Node<In = O> + 'static,
+        F: FnMut(usize) -> W,
+    {
+        let cap = self.cap;
+        Pipeline {
+            stage: Compose {
+                first: self.stage,
+                second: FarmStage {
+                    cfg,
+                    factory,
+                    _pd: PhantomData,
+                },
+                _pd: PhantomData,
+            },
+            cap,
+            mapping: self.mapping,
+            explicit_cores: self.explicit_cores,
+            _pd: PhantomData,
+        }
+    }
+
+    /// Default queue capacity for subsequently-added links.
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.cap = cap.max(1);
+        self
+    }
+
+    /// Thread→core mapping policy for the whole pipeline.
+    pub fn mapping(mut self, m: MappingPolicy) -> Self {
+        self.mapping = m;
+        self
+    }
+
+    /// Launch with an output stream, one-shot lifecycle.
+    pub fn launch(self) -> LaunchedSkeleton<I, O> {
+        self.launch_mode(RunMode::RunToEnd)
+    }
+
+    /// Launch with an output stream, one-shot lifecycle (accelerator use:
+    /// wrap the result in [`crate::accel::Accel::from_skeleton`]).
+    pub fn launch_accel(self) -> LaunchedSkeleton<I, O> {
+        self.launch_mode(RunMode::RunToEnd)
+    }
+
+    /// Launch with an output stream in freeze mode.
+    pub fn launch_accel_freeze(self) -> LaunchedSkeleton<I, O> {
+        self.launch_mode(RunMode::RunThenFreeze)
+    }
+
+    /// Launch with explicit run mode.
+    pub fn launch_mode(self, mode: RunMode) -> LaunchedSkeleton<I, O> {
+        let total = self.stage.thread_count();
+        let lifecycle = Lifecycle::new(total, mode);
+        let cpu_map = CpuMap::build(self.mapping, total, &self.explicit_cores);
+        let mut joins = Vec::with_capacity(total);
+        let mut traces = Vec::with_capacity(total);
+        let (out_tx, out_rx) = stream::<O>(self.cap);
+        let mut ctx = WireCtx {
+            lifecycle: &lifecycle,
+            cpu_map: &cpu_map,
+            next_thread: 0,
+            joins: &mut joins,
+            traces: &mut traces,
+            stage_idx: 0,
+        };
+        let input = self.stage.wire(OutTarget::Chan(out_tx), &mut ctx);
+        LaunchedSkeleton {
+            input,
+            output: Some(out_rx),
+            lifecycle,
+            joins,
+            traces,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Accel;
+    use crate::node::node_fn;
+    use crate::channel::Msg;
+
+    #[test]
+    fn two_stage_pipeline_composes_functions() {
+        let skel = Pipeline::new(node_fn(|x: u64| x + 1))
+            .then(node_fn(|x: u64| x * 3))
+            .launch();
+        let mut input = skel.input;
+        let mut output = skel.output.unwrap();
+        for i in 0..100u64 {
+            input.send(i).unwrap();
+        }
+        input.send_eos().unwrap();
+        let mut got = vec![];
+        loop {
+            match output.recv() {
+                Msg::Task(v) => got.push(v),
+                Msg::Eos => break,
+            }
+        }
+        assert_eq!(got, (0..100u64).map(|x| (x + 1) * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pipeline_preserves_order() {
+        let skel = Pipeline::new(node_fn(|x: u64| x))
+            .then(node_fn(|x: u64| x))
+            .then(node_fn(|x: u64| x))
+            .launch();
+        let mut input = skel.input;
+        let mut output = skel.output.unwrap();
+        let pusher = std::thread::spawn(move || {
+            for i in 0..10_000u64 {
+                input.send(i).unwrap();
+            }
+            input.send_eos().unwrap();
+        });
+        let mut expect = 0u64;
+        loop {
+            match output.recv() {
+                Msg::Task(v) => {
+                    assert_eq!(v, expect);
+                    expect += 1;
+                }
+                Msg::Eos => break,
+            }
+        }
+        pusher.join().unwrap();
+        assert_eq!(expect, 10_000);
+    }
+
+    #[test]
+    fn farm_nested_in_pipeline() {
+        let pipe = Pipeline::new(node_fn(|x: u64| x + 1))
+            .then_farm(FarmConfig::default().workers(4).ordered(), |_| {
+                node_fn(|x: u64| x * 2)
+            })
+            .then(node_fn(|x: u64| x - 1));
+        let mut acc: Accel<u64, u64> = Accel::from_skeleton(pipe.launch_accel());
+        for i in 0..1000 {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = acc.load_result() {
+            got.push(v);
+        }
+        // ordered farm keeps pipeline order end-to-end
+        assert_eq!(got, (0..1000u64).map(|x| (x + 1) * 2 - 1).collect::<Vec<_>>());
+        acc.wait();
+    }
+
+    #[test]
+    fn multi_emission_stage_expands_stream() {
+        struct Expander;
+        impl Node for Expander {
+            type In = u64;
+            type Out = u64;
+            fn svc(
+                &mut self,
+                t: u64,
+                out: &mut crate::node::Outbox<'_, u64>,
+            ) -> crate::node::Svc {
+                out.send(t);
+                out.send(t + 100);
+                crate::node::Svc::GoOn
+            }
+        }
+        let skel = Pipeline::new(Expander).then(node_fn(|x: u64| x)).launch();
+        let mut input = skel.input;
+        let mut output = skel.output.unwrap();
+        input.send(1).unwrap();
+        input.send(2).unwrap();
+        input.send_eos().unwrap();
+        let mut got = vec![];
+        loop {
+            match output.recv() {
+                Msg::Task(v) => got.push(v),
+                Msg::Eos => break,
+            }
+        }
+        assert_eq!(got, vec![1, 101, 2, 102]);
+    }
+
+    #[test]
+    fn pipeline_freeze_thaw_cycles() {
+        let pipe = Pipeline::new(node_fn(|x: u64| x * 2)).then(node_fn(|x: u64| x + 1));
+        let mut acc: Accel<u64, u64> = Accel::from_skeleton(pipe.launch_accel_freeze());
+        for cycle in 0..3u64 {
+            if cycle > 0 {
+                acc.thaw();
+            }
+            acc.offload(cycle).unwrap();
+            acc.offload_eos();
+            assert_eq!(acc.load_result(), Some(cycle * 2 + 1));
+            assert_eq!(acc.load_result(), None);
+            acc.wait_freezing();
+        }
+        acc.wait();
+    }
+}

@@ -1,0 +1,367 @@
+//! Low-level programming tier (paper §2.3): one-to-many, many-to-one and
+//! many-to-many channels built **without locks or atomic RMW
+//! operations** — SPMC, MPSC and MPMC queues realised as sets of SPSC
+//! queues plus an *arbiter thread* enforcing the serialization of
+//! producers/consumers.
+//!
+//! The farm's Emitter/Collector are specialized inlined versions of these
+//! arbiters; this module exposes the general-purpose standalone forms
+//! usable as plain channels among arbitrary threads.
+
+
+use std::thread::JoinHandle;
+
+use crate::channel::{stream, Msg, Receiver, Sender};
+use crate::util::Backoff;
+use crate::DEFAULT_QUEUE_CAP;
+
+/// One-to-many: a single producer feeds `n` consumers through an Emitter
+/// arbiter (round-robin dispatch).
+///
+/// Returns (producer sender, consumer receivers, arbiter join handle).
+/// The arbiter exits after forwarding EOS to every consumer.
+pub fn spmc<T: Send + 'static>(
+    consumers: usize,
+    cap: usize,
+) -> (Sender<T>, Vec<Receiver<T>>, JoinHandle<()>) {
+    assert!(consumers >= 1);
+    let (tx_in, mut rx_in) = stream::<T>(cap);
+    let mut outs = Vec::with_capacity(consumers);
+    let mut rxs = Vec::with_capacity(consumers);
+    for _ in 0..consumers {
+        let (tx, rx) = stream::<T>(cap);
+        outs.push(tx);
+        rxs.push(rx);
+    }
+    let arbiter = std::thread::Builder::new()
+        .name("ff-spmc-arbiter".into())
+        .spawn(move || {
+            let n = outs.len();
+            let mut next = 0usize;
+            loop {
+                match rx_in.recv() {
+                    Msg::Task(t) => {
+                        // Round-robin with skip-if-full (work happily
+                        // drains past a slow consumer).
+                        let mut frame = t;
+                        let mut backoff = Backoff::new();
+                        'route: loop {
+                            for k in 0..n {
+                                let c = (next + k) % n;
+                                match outs[c].try_send(frame) {
+                                    Ok(()) => {
+                                        next = (c + 1) % n;
+                                        break 'route;
+                                    }
+                                    Err(crate::spsc::Full(f)) => frame = f,
+                                }
+                            }
+                            backoff.snooze();
+                        }
+                    }
+                    Msg::Eos => break,
+                }
+            }
+            for o in outs.iter_mut() {
+                let _ = o.send_eos();
+            }
+        })
+        .expect("spawn spmc arbiter");
+    (tx_in, rxs, arbiter)
+}
+
+/// Many-to-one: `n` producers feed a single consumer through a Collector
+/// arbiter. The consumer receives EOS once *all* producers sent EOS.
+pub fn mpsc<T: Send + 'static>(
+    producers: usize,
+    cap: usize,
+) -> (Vec<Sender<T>>, Receiver<T>, JoinHandle<()>) {
+    assert!(producers >= 1);
+    let mut ins = Vec::with_capacity(producers);
+    let mut rxs = Vec::with_capacity(producers);
+    for _ in 0..producers {
+        let (tx, rx) = stream::<T>(cap);
+        ins.push(tx);
+        rxs.push(rx);
+    }
+    let (mut tx_out, rx_out) = stream::<T>(cap);
+    let arbiter = std::thread::Builder::new()
+        .name("ff-mpsc-arbiter".into())
+        .spawn(move || {
+            let n = rxs.len();
+            let mut eos = vec![false; n];
+            let mut eos_count = 0;
+            let mut backoff = Backoff::new();
+            while eos_count < n {
+                let mut progressed = false;
+                for (i, rx) in rxs.iter_mut().enumerate() {
+                    if eos[i] {
+                        continue;
+                    }
+                    match rx.try_recv() {
+                        Some(Msg::Task(t)) => {
+                            progressed = true;
+                            if tx_out.send(t).is_err() {
+                                return;
+                            }
+                        }
+                        Some(Msg::Eos) => {
+                            progressed = true;
+                            eos[i] = true;
+                            eos_count += 1;
+                        }
+                        None => {
+                            // dead producer without EOS ⇒ synthetic EOS
+                            if !rx.peer_alive() && !rx.has_next() {
+                                progressed = true;
+                                eos[i] = true;
+                                eos_count += 1;
+                            }
+                        }
+                    }
+                }
+                if progressed {
+                    backoff.reset();
+                } else {
+                    backoff.snooze();
+                }
+            }
+            let _ = tx_out.send_eos();
+        })
+        .expect("spawn mpsc arbiter");
+    (ins, rx_out, arbiter)
+}
+
+/// Many-to-many: `p` producers, `c` consumers, one Collector-Emitter
+/// arbiter in the middle (the paper's CE / master-worker plumbing).
+pub fn mpmc<T: Send + 'static>(
+    producers: usize,
+    consumers: usize,
+    cap: usize,
+) -> (Vec<Sender<T>>, Vec<Receiver<T>>, JoinHandle<()>) {
+    assert!(producers >= 1 && consumers >= 1);
+    let mut ins = Vec::with_capacity(producers);
+    let mut in_rxs = Vec::with_capacity(producers);
+    for _ in 0..producers {
+        let (tx, rx) = stream::<T>(cap);
+        ins.push(tx);
+        in_rxs.push(rx);
+    }
+    let mut outs = Vec::with_capacity(consumers);
+    let mut out_rxs = Vec::with_capacity(consumers);
+    for _ in 0..consumers {
+        let (tx, rx) = stream::<T>(cap);
+        outs.push(tx);
+        out_rxs.push(rx);
+    }
+    let arbiter = std::thread::Builder::new()
+        .name("ff-mpmc-arbiter".into())
+        .spawn(move || {
+            let np = in_rxs.len();
+            let nc = outs.len();
+            let mut eos = vec![false; np];
+            let mut eos_count = 0;
+            let mut next = 0usize;
+            let mut backoff = Backoff::new();
+            while eos_count < np {
+                let mut progressed = false;
+                for i in 0..np {
+                    if eos[i] {
+                        continue;
+                    }
+                    match in_rxs[i].try_recv() {
+                        Some(Msg::Task(t)) => {
+                            progressed = true;
+                            let mut frame = t;
+                            let mut inner = Backoff::new();
+                            'route: loop {
+                                for k in 0..nc {
+                                    let c = (next + k) % nc;
+                                    match outs[c].try_send(frame) {
+                                        Ok(()) => {
+                                            next = (c + 1) % nc;
+                                            break 'route;
+                                        }
+                                        Err(crate::spsc::Full(f)) => frame = f,
+                                    }
+                                }
+                                inner.snooze();
+                            }
+                        }
+                        Some(Msg::Eos) => {
+                            progressed = true;
+                            eos[i] = true;
+                            eos_count += 1;
+                        }
+                        None => {
+                            // dead producer without EOS ⇒ synthetic EOS
+                            if !in_rxs[i].peer_alive() && !in_rxs[i].has_next() {
+                                progressed = true;
+                                eos[i] = true;
+                                eos_count += 1;
+                            }
+                        }
+                    }
+                }
+                if progressed {
+                    backoff.reset();
+                } else {
+                    backoff.snooze();
+                }
+            }
+            for o in outs.iter_mut() {
+                let _ = o.send_eos();
+            }
+        })
+        .expect("spawn mpmc arbiter");
+    (ins, out_rxs, arbiter)
+}
+
+/// Convenience: default capacity.
+pub fn spmc_default<T: Send + 'static>(
+    consumers: usize,
+) -> (Sender<T>, Vec<Receiver<T>>, JoinHandle<()>) {
+    spmc(consumers, DEFAULT_QUEUE_CAP)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spmc_distributes_everything() {
+        let (mut tx, rxs, arbiter) = spmc::<u64>(3, 16);
+        let consumers: Vec<_> = rxs
+            .into_iter()
+            .map(|mut rx| {
+                std::thread::spawn(move || {
+                    let mut got = vec![];
+                    loop {
+                        match rx.recv() {
+                            Msg::Task(t) => got.push(t),
+                            Msg::Eos => break,
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for i in 0..3000u64 {
+            tx.send(i).unwrap();
+        }
+        tx.send_eos().unwrap();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        arbiter.join().unwrap();
+        all.sort_unstable();
+        assert_eq!(all, (0..3000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mpsc_merges_everything() {
+        let (txs, mut rx, arbiter) = mpsc::<u64>(4, 16);
+        let producers: Vec<_> = txs
+            .into_iter()
+            .enumerate()
+            .map(|(p, mut tx)| {
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        tx.send(p as u64 * 1000 + i).unwrap();
+                    }
+                    tx.send_eos().unwrap();
+                })
+            })
+            .collect();
+        let mut got = vec![];
+        loop {
+            match rx.recv() {
+                Msg::Task(t) => got.push(t),
+                Msg::Eos => break,
+            }
+        }
+        for h in producers {
+            h.join().unwrap();
+        }
+        arbiter.join().unwrap();
+        assert_eq!(got.len(), 2000);
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), 2000); // no duplication, no loss
+    }
+
+    #[test]
+    fn mpsc_preserves_per_producer_order() {
+        let (txs, mut rx, _arbiter) = mpsc::<(usize, u64)>(2, 8);
+        let producers: Vec<_> = txs
+            .into_iter()
+            .enumerate()
+            .map(|(p, mut tx)| {
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        tx.send((p, i)).unwrap();
+                    }
+                    tx.send_eos().unwrap();
+                })
+            })
+            .collect();
+        let mut last = vec![-1i64; 2];
+        loop {
+            match rx.recv() {
+                Msg::Task((p, i)) => {
+                    assert!(i as i64 > last[p], "order violated for producer {p}");
+                    last[p] = i as i64;
+                }
+                Msg::Eos => break,
+            }
+        }
+        for h in producers {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn mpmc_routes_all() {
+        let (txs, rxs, arbiter) = mpmc::<u64>(2, 2, 8);
+        let producers: Vec<_> = txs
+            .into_iter()
+            .enumerate()
+            .map(|(p, mut tx)| {
+                std::thread::spawn(move || {
+                    for i in 0..400u64 {
+                        tx.send(p as u64 * 1000 + i).unwrap();
+                    }
+                    tx.send_eos().unwrap();
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = rxs
+            .into_iter()
+            .map(|mut rx| {
+                std::thread::spawn(move || {
+                    let mut got = vec![];
+                    loop {
+                        match rx.recv() {
+                            Msg::Task(t) => got.push(t),
+                            Msg::Eos => break,
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        arbiter.join().unwrap();
+        all.sort_unstable();
+        assert_eq!(all.len(), 800);
+        all.dedup();
+        assert_eq!(all.len(), 800);
+    }
+}

@@ -1,0 +1,145 @@
+//! Thread→core mapping (paper §2.3: "the programmer should be fully aware
+//! of all programming aspects … such as load-balancing and memory
+//! alignment and hot-spots"; §3: "at creation time the accelerator is
+//! configured and its threads are bound into one or more cores").
+//!
+//! FastFlow leaves mapping decisions to the programmer; we expose the same
+//! control as a [`MappingPolicy`] plus a raw [`pin_current_thread`].
+
+use crate::util::num_cpus;
+
+/// How skeleton threads are laid out over cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MappingPolicy {
+    /// No pinning; the OS scheduler decides. Default: friendliest on
+    /// shared/virtualized testbeds, and what the accelerator uses when
+    /// over-provisioned.
+    #[default]
+    None,
+    /// Threads pinned round-robin starting from core `start`: thread *i*
+    /// on core `(start + i) mod ncpu`. This reproduces the paper's
+    /// "accelerator configured to use spare cores".
+    RoundRobin { start: usize },
+    /// Explicit per-thread core list (wraps if shorter than the thread
+    /// count) — FastFlow's manual mapping string.
+    Explicit,
+}
+
+/// A resolved mapping: thread index → optional core.
+#[derive(Debug, Clone, Default)]
+pub struct CpuMap {
+    cores: Vec<Option<usize>>,
+}
+
+impl CpuMap {
+    /// Build a map for `nthreads` threads under `policy`. `explicit` is
+    /// consulted only for [`MappingPolicy::Explicit`].
+    pub fn build(policy: MappingPolicy, nthreads: usize, explicit: &[usize]) -> Self {
+        let ncpu = num_cpus();
+        let cores = match policy {
+            MappingPolicy::None => vec![None; nthreads],
+            MappingPolicy::RoundRobin { start } => (0..nthreads)
+                .map(|i| Some((start + i) % ncpu))
+                .collect(),
+            MappingPolicy::Explicit => {
+                if explicit.is_empty() {
+                    vec![None; nthreads]
+                } else {
+                    (0..nthreads)
+                        .map(|i| Some(explicit[i % explicit.len()] % ncpu))
+                        .collect()
+                }
+            }
+        };
+        CpuMap { cores }
+    }
+
+    /// Core for thread `i` (None = unpinned).
+    pub fn core_for(&self, i: usize) -> Option<usize> {
+        self.cores.get(i).copied().flatten()
+    }
+
+    pub fn len(&self) -> usize {
+        self.cores.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cores.is_empty()
+    }
+}
+
+/// Pin the calling thread to `cpu`. Best-effort: failures (e.g. cpuset
+/// restrictions in containers) are ignored, matching FastFlow's
+/// "mapping is a hint" behaviour.
+pub fn pin_current_thread(cpu: usize) {
+    // SAFETY: CPU_SET/sched_setaffinity with a properly zeroed set.
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(cpu % (8 * std::mem::size_of::<libc::cpu_set_t>()), &mut set);
+        let _ = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+    }
+}
+
+/// Parse an explicit mapping string like `"0,2,4,6"`.
+pub fn parse_mapping(s: &str) -> Result<Vec<usize>, String> {
+    s.split(',')
+        .map(|tok| {
+            tok.trim()
+                .parse::<usize>()
+                .map_err(|e| format!("bad core id '{tok}': {e}"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_policy_leaves_unpinned() {
+        let m = CpuMap::build(MappingPolicy::None, 4, &[]);
+        assert_eq!(m.len(), 4);
+        assert!((0..4).all(|i| m.core_for(i).is_none()));
+    }
+
+    #[test]
+    fn round_robin_wraps_over_cpus() {
+        let m = CpuMap::build(MappingPolicy::RoundRobin { start: 0 }, 64, &[]);
+        let ncpu = num_cpus();
+        for i in 0..64 {
+            assert_eq!(m.core_for(i), Some(i % ncpu));
+        }
+    }
+
+    #[test]
+    fn explicit_list_wraps() {
+        let m = CpuMap::build(MappingPolicy::Explicit, 5, &[0, 1]);
+        assert_eq!(m.core_for(0), m.core_for(2));
+        assert_eq!(m.core_for(1), m.core_for(3));
+    }
+
+    #[test]
+    fn explicit_empty_falls_back_to_unpinned() {
+        let m = CpuMap::build(MappingPolicy::Explicit, 3, &[]);
+        assert!(m.core_for(0).is_none());
+    }
+
+    #[test]
+    fn parse_mapping_ok_and_err() {
+        assert_eq!(parse_mapping("0, 2,4").unwrap(), vec![0, 2, 4]);
+        assert!(parse_mapping("0,x").is_err());
+    }
+
+    #[test]
+    fn pin_current_thread_does_not_crash() {
+        pin_current_thread(0);
+        pin_current_thread(99999); // wrapped, best-effort
+    }
+
+    #[test]
+    fn out_of_range_core_ignored() {
+        let m = CpuMap::build(MappingPolicy::Explicit, 1, &[100000]);
+        // wrapped into range
+        assert!(m.core_for(0).unwrap() < num_cpus());
+    }
+}

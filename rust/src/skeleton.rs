@@ -1,0 +1,100 @@
+//! Common shape of a *launched* skeleton instance: threads running,
+//! an input stream to push into, optionally an output stream to pop
+//! from, and the shared lifecycle. Both [`crate::farm`] and
+//! [`crate::pipeline`] produce this; [`crate::accel`] wraps it as a
+//! software accelerator.
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::channel::{Receiver, Sender};
+use crate::node::Lifecycle;
+use crate::trace::{NodeTrace, TraceReport};
+
+/// A running skeleton: the concurrent counterpart of a FastFlow
+/// `ff_farm`/`ff_pipeline` object after `run()`.
+pub struct LaunchedSkeleton<I: Send + 'static, O: Send + 'static> {
+    /// Stream into the skeleton (the offload end).
+    pub input: Sender<I>,
+    /// Stream out of the skeleton (present iff the topology produces one).
+    pub output: Option<Receiver<O>>,
+    /// Shared lifecycle (freeze/thaw/exit).
+    pub lifecycle: Arc<Lifecycle>,
+    pub joins: Vec<JoinHandle<()>>,
+    pub traces: Vec<(String, Arc<NodeTrace>)>,
+}
+
+/// The non-stream remainder of a skeleton after [`LaunchedSkeleton::split`]:
+/// lifecycle + join handles + traces.
+pub struct SkeletonHandle {
+    pub lifecycle: Arc<Lifecycle>,
+    joins: Vec<JoinHandle<()>>,
+    traces: Vec<(String, Arc<NodeTrace>)>,
+}
+
+impl SkeletonHandle {
+    /// Join all threads, returning the final trace report.
+    pub fn join(self) -> TraceReport {
+        let report = TraceReport {
+            rows: self
+                .traces
+                .iter()
+                .map(|(name, t)| t.snapshot(name.clone()))
+                .collect(),
+        };
+        for j in self.joins {
+            let _ = j.join();
+        }
+        report
+    }
+
+    pub fn trace_report(&self) -> TraceReport {
+        TraceReport {
+            rows: self
+                .traces
+                .iter()
+                .map(|(name, t)| t.snapshot(name.clone()))
+                .collect(),
+        }
+    }
+}
+
+impl<I: Send + 'static, O: Send + 'static> LaunchedSkeleton<I, O> {
+    /// Split into (input, output, handle) — lets the streams move to
+    /// other threads while the handle stays for the final `join`.
+    pub fn split(self) -> (Sender<I>, Option<Receiver<O>>, SkeletonHandle) {
+        (
+            self.input,
+            self.output,
+            SkeletonHandle {
+                lifecycle: self.lifecycle,
+                joins: self.joins,
+                traces: self.traces,
+            },
+        )
+    }
+
+    /// Join all threads, returning the final trace report.
+    /// Call after EOS (and `request_exit` for freeze-mode skeletons).
+    pub fn join(self) -> TraceReport {
+        let report = Self::snapshot(&self.traces);
+        for j in self.joins {
+            let _ = j.join();
+        }
+        report
+    }
+
+    /// Snapshot traces without joining.
+    pub fn trace_report(&self) -> TraceReport {
+        Self::snapshot(&self.traces)
+    }
+
+    fn snapshot(traces: &[(String, Arc<NodeTrace>)]) -> TraceReport {
+        TraceReport {
+            rows: traces
+                .iter()
+                .map(|(name, t)| t.snapshot(name.clone()))
+                .collect(),
+        }
+    }
+}

@@ -1,0 +1,405 @@
+//! Bounded FastForward-style SPSC ring (typed).
+//!
+//! The defining property (paper §2.2, after Giacomoni et al.'s
+//! FastForward): **producer and consumer never share an index**. The
+//! producer owns `pwrite`, the consumer owns `pread`, and whether a slot
+//! is occupied is recorded in the slot itself — here a per-slot `full`
+//! flag (the pointer queue in [`super::ptr`] uses NULL as in the paper's
+//! Fig. 2). A push writes the value, then releases the flag; a pop
+//! acquires the flag, reads the value, then releases the cleared flag.
+//! Neither side ever loads the other side's index, so the cache lines
+//! holding the indices are never invalidated by the partner — unlike
+//! Lamport's queue ([`crate::baseline::lamport`]) where every operation
+//! reads both indices.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::Full;
+use crate::util::{Backoff, CachePadded};
+
+/// One ring slot: occupancy flag + storage.
+struct Slot<T> {
+    full: AtomicBool,
+    value: UnsafeCell<MaybeUninit<T>>,
+}
+
+impl<T> Slot<T> {
+    fn empty() -> Self {
+        Slot {
+            full: AtomicBool::new(false),
+            value: UnsafeCell::new(MaybeUninit::uninit()),
+        }
+    }
+}
+
+/// Shared ring storage. Only the slot array and capacity are shared;
+/// the indices live in the producer/consumer halves (thread-local).
+struct Ring<T> {
+    slots: Box<[Slot<T>]>,
+    /// Count of *live* handle pairs; when a side drops it flips its bit so
+    /// the other side can detect disconnection.
+    producer_alive: CachePadded<AtomicBool>,
+    consumer_alive: CachePadded<AtomicBool>,
+    /// Approximate occupancy, maintained only when tracing is enabled via
+    /// the `len` methods; not used by push/pop (would reintroduce sharing).
+    _pad: CachePadded<AtomicUsize>,
+}
+
+// SAFETY: Slot values are transferred with Release/Acquire handshakes on
+// `full`; only one side reads or writes a given slot at a time.
+unsafe impl<T: Send> Send for Ring<T> {}
+unsafe impl<T: Send> Sync for Ring<T> {}
+
+/// Producer half. `!Sync`: exactly one thread may push.
+pub struct Producer<T> {
+    ring: Arc<Ring<T>>,
+    /// Local write index — never shared (the FastForward property).
+    pwrite: usize,
+    cap: usize,
+}
+
+/// Consumer half. `!Sync`: exactly one thread may pop.
+pub struct Consumer<T> {
+    ring: Arc<Ring<T>>,
+    /// Local read index — never shared.
+    pread: usize,
+    cap: usize,
+}
+
+/// Create a bounded SPSC queue with room for `cap` elements (`cap >= 1`).
+pub fn spsc<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
+    assert!(cap >= 1, "spsc capacity must be >= 1");
+    let slots: Box<[Slot<T>]> = (0..cap).map(|_| Slot::empty()).collect();
+    let ring = Arc::new(Ring {
+        slots,
+        producer_alive: CachePadded::new(AtomicBool::new(true)),
+        consumer_alive: CachePadded::new(AtomicBool::new(true)),
+        _pad: CachePadded::new(AtomicUsize::new(0)),
+    });
+    (
+        Producer {
+            ring: ring.clone(),
+            pwrite: 0,
+            cap,
+        },
+        Consumer {
+            ring,
+            pread: 0,
+            cap,
+        },
+    )
+}
+
+impl<T: Send> Producer<T> {
+    /// Non-blocking push. `Err(Full(v))` if the slot at `pwrite` is still
+    /// occupied (queue full).
+    #[inline]
+    pub fn try_push(&mut self, value: T) -> Result<(), Full<T>> {
+        let slot = &self.ring.slots[self.pwrite];
+        if slot.full.load(Ordering::Acquire) {
+            return Err(Full(value));
+        }
+        // SAFETY: the slot is empty and the consumer will not touch
+        // `value` until it observes `full == true` (Release below).
+        unsafe { (*slot.value.get()).write(value) };
+        slot.full.store(true, Ordering::Release);
+        self.pwrite = if self.pwrite + 1 == self.cap {
+            0
+        } else {
+            self.pwrite + 1
+        };
+        Ok(())
+    }
+
+    /// Blocking push with spin/yield backoff. Returns `Err(Full(v))` only
+    /// if the consumer disconnected (otherwise loops until room).
+    #[inline]
+    pub fn push(&mut self, mut value: T) -> Result<(), Full<T>> {
+        let mut backoff = Backoff::new();
+        loop {
+            match self.try_push(value) {
+                Ok(()) => return Ok(()),
+                Err(Full(v)) => {
+                    if !self.ring.consumer_alive.load(Ordering::Acquire) {
+                        return Err(Full(v));
+                    }
+                    value = v;
+                    backoff.snooze();
+                }
+            }
+        }
+    }
+
+    /// Capacity the queue was created with.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// True if a `try_push` would currently fail. Only inspects the
+    /// producer's own slot — stays within the FastForward contract.
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.ring.slots[self.pwrite].full.load(Ordering::Acquire)
+    }
+
+    /// Whether the consumer half still exists.
+    #[inline]
+    pub fn consumer_alive(&self) -> bool {
+        self.ring.consumer_alive.load(Ordering::Acquire)
+    }
+
+    /// Approximate number of occupied slots (O(cap): counts flags).
+    /// For tracing/monitoring only — never used on the hot path.
+    pub fn len_approx(&self) -> usize {
+        self.ring
+            .slots
+            .iter()
+            .filter(|s| s.full.load(Ordering::Relaxed))
+            .count()
+    }
+}
+
+impl<T: Send> Consumer<T> {
+    /// Non-blocking pop. `None` if the slot at `pread` is empty.
+    #[inline]
+    pub fn try_pop(&mut self) -> Option<T> {
+        let slot = &self.ring.slots[self.pread];
+        if !slot.full.load(Ordering::Acquire) {
+            return None;
+        }
+        // SAFETY: `full == true` (Acquire) happens-after the producer's
+        // write of the value; the producer will not rewrite this slot
+        // until it observes `full == false`.
+        let value = unsafe { (*slot.value.get()).assume_init_read() };
+        slot.full.store(false, Ordering::Release);
+        self.pread = if self.pread + 1 == self.cap {
+            0
+        } else {
+            self.pread + 1
+        };
+        Some(value)
+    }
+
+    /// Blocking pop with backoff. `None` only if the producer disconnected
+    /// *and* the queue is drained.
+    #[inline]
+    pub fn pop(&mut self) -> Option<T> {
+        let mut backoff = Backoff::new();
+        loop {
+            if let Some(v) = self.try_pop() {
+                return Some(v);
+            }
+            if !self.ring.producer_alive.load(Ordering::Acquire) {
+                // Producer is gone; drain whatever it published first.
+                return self.try_pop();
+            }
+            backoff.snooze();
+        }
+    }
+
+    /// Peek whether something is ready without consuming it.
+    #[inline]
+    pub fn has_next(&self) -> bool {
+        self.ring.slots[self.pread].full.load(Ordering::Acquire)
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Whether the producer half still exists.
+    #[inline]
+    pub fn producer_alive(&self) -> bool {
+        self.ring.producer_alive.load(Ordering::Acquire)
+    }
+
+    /// Approximate occupancy — see [`Producer::len_approx`].
+    pub fn len_approx(&self) -> usize {
+        self.ring
+            .slots
+            .iter()
+            .filter(|s| s.full.load(Ordering::Relaxed))
+            .count()
+    }
+}
+
+impl<T> Drop for Producer<T> {
+    fn drop(&mut self) {
+        self.ring.producer_alive.store(false, Ordering::Release);
+    }
+}
+
+impl<T> Drop for Consumer<T> {
+    fn drop(&mut self) {
+        self.ring.consumer_alive.store(false, Ordering::Release);
+    }
+}
+
+impl<T> Drop for Ring<T> {
+    fn drop(&mut self) {
+        // Drop any values still in flight. Single-threaded here: both
+        // handles are gone (Arc refcount reached zero).
+        for slot in self.slots.iter() {
+            if slot.full.load(Ordering::Relaxed) {
+                unsafe { (*slot.value.get()).assume_init_drop() };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn push_pop_roundtrip() {
+        let (mut p, mut c) = spsc::<u64>(4);
+        assert_eq!(c.try_pop(), None);
+        p.try_push(1).unwrap();
+        p.try_push(2).unwrap();
+        assert_eq!(c.try_pop(), Some(1));
+        assert_eq!(c.try_pop(), Some(2));
+        assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn fills_to_capacity_exactly() {
+        let (mut p, mut c) = spsc::<u32>(3);
+        for i in 0..3 {
+            p.try_push(i).unwrap();
+        }
+        assert!(p.is_full());
+        assert_eq!(p.try_push(99), Err(Full(99)));
+        assert_eq!(c.try_pop(), Some(0));
+        p.try_push(99).unwrap(); // room again
+    }
+
+    #[test]
+    fn wraps_around_many_times() {
+        let (mut p, mut c) = spsc::<usize>(5);
+        for i in 0..1000 {
+            p.try_push(i).unwrap();
+            assert_eq!(c.try_pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn capacity_one_alternates() {
+        let (mut p, mut c) = spsc::<u8>(1);
+        for i in 0..10 {
+            p.try_push(i).unwrap();
+            assert!(p.try_push(0).is_err());
+            assert_eq!(c.try_pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn fifo_across_threads() {
+        const N: usize = 30_000;
+        let (mut p, mut c) = spsc::<usize>(64);
+        let producer = std::thread::spawn(move || {
+            for i in 0..N {
+                p.push(i).unwrap();
+            }
+        });
+        for expect in 0..N {
+            assert_eq!(c.pop(), Some(expect));
+        }
+        producer.join().unwrap();
+        assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn consumer_sees_disconnect_after_drain() {
+        let (mut p, mut c) = spsc::<u32>(8);
+        p.try_push(1).unwrap();
+        p.try_push(2).unwrap();
+        drop(p);
+        assert_eq!(c.pop(), Some(1));
+        assert_eq!(c.pop(), Some(2));
+        assert_eq!(c.pop(), None);
+        assert!(!c.producer_alive());
+    }
+
+    #[test]
+    fn producer_sees_disconnect_when_full() {
+        let (mut p, c) = spsc::<u32>(1);
+        p.try_push(1).unwrap();
+        drop(c);
+        assert_eq!(p.push(2), Err(Full(2)));
+        assert!(!p.consumer_alive());
+    }
+
+    #[test]
+    fn drops_inflight_values() {
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        #[derive(Debug)]
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let (mut p, mut c) = spsc::<D>(8);
+        for _ in 0..5 {
+            p.try_push(D).unwrap();
+        }
+        let popped = c.try_pop().unwrap();
+        drop(popped); // 1
+        drop(p);
+        drop(c); // remaining 4 dropped by Ring::drop
+        assert_eq!(DROPS.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn len_approx_tracks_occupancy() {
+        let (mut p, mut c) = spsc::<u8>(8);
+        assert_eq!(p.len_approx(), 0);
+        for i in 0..5 {
+            p.try_push(i).unwrap();
+        }
+        assert_eq!(p.len_approx(), 5);
+        c.try_pop();
+        assert_eq!(c.len_approx(), 4);
+    }
+
+    #[test]
+    fn has_next_peeks() {
+        let (mut p, mut c) = spsc::<u8>(2);
+        assert!(!c.has_next());
+        p.try_push(9).unwrap();
+        assert!(c.has_next());
+        assert_eq!(c.try_pop(), Some(9));
+        assert!(!c.has_next());
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be >= 1")]
+    fn zero_capacity_panics() {
+        let _ = spsc::<u8>(0);
+    }
+
+    #[test]
+    fn boxed_payloads_cross_threads() {
+        // The paper's queues carry pointers; verify heap payloads survive.
+        const N: usize = 10_000;
+        let (mut p, mut c) = spsc::<Box<usize>>(128);
+        let producer = std::thread::spawn(move || {
+            for i in 0..N {
+                p.push(Box::new(i)).unwrap();
+            }
+        });
+        let mut sum = 0usize;
+        for _ in 0..N {
+            sum += *c.pop().unwrap();
+        }
+        producer.join().unwrap();
+        assert_eq!(sum, N * (N - 1) / 2);
+    }
+}

@@ -1,0 +1,52 @@
+//! Lock-free Single-Producer-Single-Consumer queues — the FastFlow
+//! run-time support tier (paper §2.2).
+//!
+//! Three implementations:
+//!
+//! * [`bounded`] — the workhorse: a typed FastForward-style ring where the
+//!   full/empty state lives *in the slot* (a tag word per slot), so the
+//!   producer only ever touches `pwrite` + the slot it writes and the
+//!   consumer only ever touches `pread` + the slot it reads. Head and tail
+//!   indices are thread-local, never shared, never invalidated.
+//! * [`ptr`] — the paper's Fig. 2 verbatim: a ring of `AtomicPtr` slots
+//!   where `NULL` *is* the empty sentinel. Zero metadata per slot; only
+//!   usable for non-null pointers. Kept for fidelity and benchmarked
+//!   against the typed ring.
+//! * [`unbounded`] — FastFlow's uSWSR: a linked list of bounded segments
+//!   with consumer→producer segment recycling, giving an unbounded queue
+//!   that is still SPSC-lock-free and allocation-free in steady state.
+//!
+//! All orderings are Acquire/Release: on x86 (TSO) these compile to plain
+//! loads and stores — the queue is *fence-free* exactly as the paper
+//! claims for x86/TSO, while remaining correct on weaker models (where
+//! the compiler emits the store fence the paper notes is needed).
+
+pub mod bounded;
+pub mod ptr;
+pub mod unbounded;
+
+pub use bounded::{spsc, Consumer, Producer};
+pub use unbounded::{unbounded_spsc, UnboundedConsumer, UnboundedProducer};
+
+/// Error returned by `try_push` when the queue is full: hands the value
+/// back to the caller (no drop, no clone).
+#[derive(Debug, PartialEq, Eq)]
+pub struct Full<T>(pub T);
+
+impl<T> std::fmt::Display for Full<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "queue full")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_error_returns_value() {
+        let e = Full(42);
+        assert_eq!(e.0, 42);
+        assert_eq!(format!("{e}"), "queue full");
+    }
+}

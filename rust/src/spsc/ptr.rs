@@ -1,0 +1,256 @@
+//! The paper's Fig. 2 queue, verbatim: a circular buffer of pointers where
+//! `NULL` is the empty-slot sentinel.
+//!
+//! ```c
+//! bool push(void* const data) {
+//!     if (!data) return false;
+//!     if (buf[pwrite] == NULL) {
+//!         // WriteFence(); (e.g. for non-x86 CPU)
+//!         buf[pwrite] = data;
+//!         pwrite += (pwrite + 1 >= size) ? (1 - size) : 1;
+//!         return true;
+//!     }
+//!     return false;
+//! }
+//! ```
+//!
+//! This is the minimal-footprint variant: one word per slot, no flags, no
+//! version counters. It cannot store a null pointer (null *is* the
+//! metadata) and it is untyped — callers cast. The skeleton layer uses the
+//! typed [`super::bounded`] ring instead; this one exists for fidelity and
+//! is measured head-to-head in `benches/queue_latency.rs`. It does not
+//! suffer the ABA problem: each side owns its index, so a slot is only
+//! reused after the *same* consumer emptied it (single-producer /
+//! single-consumer discipline), and no compare-and-swap is involved.
+
+use std::sync::atomic::{AtomicBool, AtomicPtr, Ordering};
+use std::sync::Arc;
+
+use crate::util::CachePadded;
+
+struct PtrRing {
+    slots: Box<[AtomicPtr<u8>]>,
+    producer_alive: CachePadded<AtomicBool>,
+    consumer_alive: CachePadded<AtomicBool>,
+}
+
+/// Producer half of the pointer queue.
+pub struct PtrProducer {
+    ring: Arc<PtrRing>,
+    pwrite: usize,
+    cap: usize,
+}
+
+/// Consumer half of the pointer queue.
+pub struct PtrConsumer {
+    ring: Arc<PtrRing>,
+    pread: usize,
+    cap: usize,
+}
+
+/// Create a pointer SPSC queue of capacity `cap`.
+pub fn ptr_spsc(cap: usize) -> (PtrProducer, PtrConsumer) {
+    assert!(cap >= 1, "ptr_spsc capacity must be >= 1");
+    let slots: Box<[AtomicPtr<u8>]> = (0..cap)
+        .map(|_| AtomicPtr::new(std::ptr::null_mut()))
+        .collect();
+    let ring = Arc::new(PtrRing {
+        slots,
+        producer_alive: CachePadded::new(AtomicBool::new(true)),
+        consumer_alive: CachePadded::new(AtomicBool::new(true)),
+    });
+    (
+        PtrProducer {
+            ring: ring.clone(),
+            pwrite: 0,
+            cap,
+        },
+        PtrConsumer {
+            ring,
+            pread: 0,
+            cap,
+        },
+    )
+}
+
+impl PtrProducer {
+    /// Fig. 2 `push`. Returns `false` if `data` is null (reserved) or the
+    /// slot is occupied (queue full).
+    ///
+    /// # Safety-relevant contract
+    /// The queue transfers raw pointers; ownership semantics are the
+    /// caller's. Typical use: `Box::into_raw` on push, `Box::from_raw`
+    /// on pop.
+    #[inline]
+    pub fn push(&mut self, data: *mut u8) -> bool {
+        if data.is_null() {
+            return false;
+        }
+        let slot = &self.ring.slots[self.pwrite];
+        if slot.load(Ordering::Acquire).is_null() {
+            // Release ≙ the paper's WriteFence on non-TSO machines; free
+            // on x86.
+            slot.store(data, Ordering::Release);
+            self.pwrite = if self.pwrite + 1 >= self.cap {
+                0
+            } else {
+                self.pwrite + 1
+            };
+            return true;
+        }
+        false
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    #[inline]
+    pub fn consumer_alive(&self) -> bool {
+        self.ring.consumer_alive.load(Ordering::Acquire)
+    }
+}
+
+impl PtrConsumer {
+    /// Fig. 2 `pop`. Returns null if the queue is empty.
+    #[inline]
+    pub fn pop(&mut self) -> *mut u8 {
+        let slot = &self.ring.slots[self.pread];
+        let data = slot.load(Ordering::Acquire);
+        if data.is_null() {
+            return std::ptr::null_mut();
+        }
+        slot.store(std::ptr::null_mut(), Ordering::Release);
+        self.pread = if self.pread + 1 >= self.cap {
+            0
+        } else {
+            self.pread + 1
+        };
+        data
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    #[inline]
+    pub fn producer_alive(&self) -> bool {
+        self.ring.producer_alive.load(Ordering::Acquire)
+    }
+}
+
+impl Drop for PtrProducer {
+    fn drop(&mut self) {
+        self.ring.producer_alive.store(false, Ordering::Release);
+    }
+}
+
+impl Drop for PtrConsumer {
+    fn drop(&mut self) {
+        self.ring.consumer_alive.store(false, Ordering::Release);
+    }
+}
+
+// NOTE: PtrRing does not free in-flight pointers on drop — it cannot know
+// their type. Callers draining protocols (EOS) guarantee emptiness before
+// teardown; tests cover the leak-free path.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leak(v: u64) -> *mut u8 {
+        Box::into_raw(Box::new(v)) as *mut u8
+    }
+
+    unsafe fn reclaim(p: *mut u8) -> u64 {
+        *Box::from_raw(p as *mut u64)
+    }
+
+    #[test]
+    fn rejects_null() {
+        let (mut p, _c) = ptr_spsc(4);
+        assert!(!p.push(std::ptr::null_mut()));
+    }
+
+    #[test]
+    fn push_pop_roundtrip() {
+        let (mut p, mut c) = ptr_spsc(4);
+        assert!(c.pop().is_null());
+        let a = leak(11);
+        let b = leak(22);
+        assert!(p.push(a));
+        assert!(p.push(b));
+        unsafe {
+            assert_eq!(reclaim(c.pop()), 11);
+            assert_eq!(reclaim(c.pop()), 22);
+        }
+        assert!(c.pop().is_null());
+    }
+
+    #[test]
+    fn full_queue_rejects() {
+        let (mut p, mut c) = ptr_spsc(2);
+        let a = leak(1);
+        let b = leak(2);
+        let x = leak(3);
+        assert!(p.push(a));
+        assert!(p.push(b));
+        assert!(!p.push(x)); // full
+        unsafe {
+            reclaim(c.pop());
+            reclaim(c.pop());
+            reclaim(x); // we still own x
+        }
+    }
+
+    #[test]
+    fn fifo_across_threads() {
+        const N: u64 = 20_000;
+        let (mut p, mut c) = ptr_spsc(64);
+        let t = std::thread::spawn(move || {
+            for i in 1..=N {
+                let ptr = leak(i);
+                while !p.push(ptr) {
+                    std::thread::yield_now(); // 1-cpu friendliness
+                }
+            }
+        });
+        let mut expect = 1;
+        while expect <= N {
+            let ptr = c.pop();
+            if ptr.is_null() {
+                std::thread::yield_now();
+                continue;
+            }
+            unsafe {
+                assert_eq!(reclaim(ptr), expect);
+            }
+            expect += 1;
+        }
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wraparound_indexing() {
+        let (mut p, mut c) = ptr_spsc(3);
+        for round in 0..50u64 {
+            let v = leak(round);
+            assert!(p.push(v));
+            unsafe {
+                assert_eq!(reclaim(c.pop()), round);
+            }
+        }
+    }
+
+    #[test]
+    fn disconnect_flags() {
+        let (p, c) = ptr_spsc(2);
+        assert!(p.consumer_alive());
+        assert!(c.producer_alive());
+        drop(p);
+        assert!(!c.producer_alive());
+    }
+}

@@ -1,0 +1,397 @@
+//! Unbounded SPSC queue (FastFlow's uSWSR): a linked list of bounded
+//! FastForward segments with consumer→producer segment recycling.
+//!
+//! The producer writes into the tail segment; when the tail is full it
+//! fetches a recycled segment from the *pool* (itself an SPSC queue fed by
+//! the consumer) — or allocates a fresh one — links it, and continues.
+//! The consumer drains the head segment; when the head is empty *and* a
+//! next segment has been linked, it advances and recycles the old segment
+//! into the pool. In steady state no allocation happens: the queue cycles
+//! through `POOL_CAP + 2` segments.
+//!
+//! Both directions (data and recycling) are plain SPSC flows, so the whole
+//! structure stays lock-free and RMW-free, like everything in this tier.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU8, Ordering};
+use std::sync::Arc;
+
+use crate::spsc::bounded::{spsc, Consumer as PoolCons, Producer as PoolProd};
+use crate::util::{Backoff, CachePadded};
+
+/// Slots per segment. A power of two keeps the wrap test cheap; 1024
+/// words ≈ one 4 KB page of payload per segment.
+pub const SEG_CAP: usize = 1024;
+
+/// Segments kept in the recycling pool before excess segments are freed.
+const POOL_CAP: usize = 8;
+
+struct SegSlot<T> {
+    full: AtomicBool,
+    value: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// One bounded segment. `pwrite` is touched only by the producer (only
+/// while this segment is the tail); `pread` only by the consumer (only
+/// while it is the head) — padded apart so the two sides never share a
+/// line even inside a segment.
+struct Seg<T> {
+    slots: Box<[SegSlot<T>]>,
+    next: AtomicPtr<Seg<T>>,
+    pwrite: CachePadded<UnsafeCell<usize>>,
+    pread: CachePadded<UnsafeCell<usize>>,
+}
+
+unsafe impl<T: Send> Send for Seg<T> {}
+unsafe impl<T: Send> Sync for Seg<T> {}
+
+impl<T> Seg<T> {
+    fn new() -> Box<Self> {
+        Box::new(Seg {
+            slots: (0..SEG_CAP)
+                .map(|_| SegSlot {
+                    full: AtomicBool::new(false),
+                    value: UnsafeCell::new(MaybeUninit::uninit()),
+                })
+                .collect(),
+            next: AtomicPtr::new(std::ptr::null_mut()),
+            pwrite: CachePadded::new(UnsafeCell::new(0)),
+            pread: CachePadded::new(UnsafeCell::new(0)),
+        })
+    }
+
+    /// Reset for reuse. Caller must have exclusive access (a drained,
+    /// unlinked segment).
+    fn reset(&mut self) {
+        *self.pwrite.get_mut() = 0;
+        *self.pread.get_mut() = 0;
+        self.next = AtomicPtr::new(std::ptr::null_mut());
+        debug_assert!(self.slots.iter().all(|s| !s.full.load(Ordering::Relaxed)));
+    }
+}
+
+impl<T> Drop for Seg<T> {
+    fn drop(&mut self) {
+        for s in self.slots.iter() {
+            if s.full.load(Ordering::Relaxed) {
+                unsafe { (*s.value.get()).assume_init_drop() };
+            }
+        }
+    }
+}
+
+/// A recycled segment travelling through the pool queue.
+struct SegBox<T>(*mut Seg<T>);
+unsafe impl<T: Send> Send for SegBox<T> {}
+impl<T> Drop for SegBox<T> {
+    fn drop(&mut self) {
+        // Pool teardown: reclaim the boxed segment.
+        unsafe { drop(Box::from_raw(self.0)) };
+    }
+}
+
+struct Inner<T> {
+    /// 2 while both halves live; the half that decrements to 0 frees the
+    /// chain starting at `orphan_head`.
+    live: AtomicU8,
+    orphan_head: AtomicPtr<Seg<T>>,
+}
+
+/// Producer half of the unbounded queue.
+pub struct UnboundedProducer<T> {
+    tail: *mut Seg<T>,
+    pool: PoolCons<SegBox<T>>,
+    inner: Arc<Inner<T>>,
+    /// Segments allocated because the pool was empty (stat for traces).
+    pub allocs: u64,
+}
+
+/// Consumer half of the unbounded queue.
+pub struct UnboundedConsumer<T> {
+    head: *mut Seg<T>,
+    pool: PoolProd<SegBox<T>>,
+    inner: Arc<Inner<T>>,
+    /// Segments freed because the pool was full (stat for traces).
+    pub frees: u64,
+}
+
+unsafe impl<T: Send> Send for UnboundedProducer<T> {}
+unsafe impl<T: Send> Send for UnboundedConsumer<T> {}
+
+/// Create an unbounded SPSC queue.
+pub fn unbounded_spsc<T: Send>() -> (UnboundedProducer<T>, UnboundedConsumer<T>) {
+    let first = Box::into_raw(Seg::<T>::new());
+    let (pool_tx, pool_rx) = spsc::<SegBox<T>>(POOL_CAP);
+    let inner = Arc::new(Inner {
+        live: AtomicU8::new(2),
+        orphan_head: AtomicPtr::new(std::ptr::null_mut()),
+    });
+    (
+        UnboundedProducer {
+            tail: first,
+            pool: pool_rx,
+            inner: inner.clone(),
+            allocs: 1,
+        },
+        UnboundedConsumer {
+            head: first,
+            pool: pool_tx,
+            inner,
+            frees: 0,
+        },
+    )
+}
+
+impl<T: Send> UnboundedProducer<T> {
+    /// Whether the consumer half still exists.
+    #[inline]
+    pub fn consumer_alive(&self) -> bool {
+        self.inner.live.load(Ordering::Acquire) == 2
+    }
+
+    /// Push; never fails, never blocks (allocates a segment when the tail
+    /// is full and the pool is empty).
+    #[inline]
+    pub fn push(&mut self, value: T) {
+        // SAFETY: `tail` is exclusively ours until we link a successor.
+        let seg = unsafe { &*self.tail };
+        let w = unsafe { &mut *seg.pwrite.get() };
+        let slot = &seg.slots[*w];
+        if !slot.full.load(Ordering::Acquire) {
+            unsafe { (*slot.value.get()).write(value) };
+            slot.full.store(true, Ordering::Release);
+            *w = if *w + 1 == SEG_CAP { 0 } else { *w + 1 };
+            return;
+        }
+        // Tail full at the write position: grab a new segment.
+        let new_seg = match self.pool.try_pop() {
+            Some(sb) => {
+                let raw = sb.0;
+                std::mem::forget(sb); // we take ownership back from the pool
+                unsafe { (*raw).reset() };
+                raw
+            }
+            None => {
+                self.allocs += 1;
+                Box::into_raw(Seg::<T>::new())
+            }
+        };
+        unsafe {
+            let s = &*new_seg;
+            (*s.slots[0].value.get()).write(value);
+            s.slots[0].full.store(true, Ordering::Release);
+            *s.pwrite.get() = 1;
+        }
+        // Publish: after this store the old tail is consumer territory.
+        seg.next.store(new_seg, Ordering::Release);
+        self.tail = new_seg;
+    }
+}
+
+impl<T: Send> UnboundedConsumer<T> {
+    /// Non-blocking pop.
+    #[inline]
+    pub fn try_pop(&mut self) -> Option<T> {
+        loop {
+            // SAFETY: `head` is exclusively ours until we advance past it.
+            let seg = unsafe { &*self.head };
+            let r = unsafe { &mut *seg.pread.get() };
+            let slot = &seg.slots[*r];
+            if slot.full.load(Ordering::Acquire) {
+                let value = unsafe { (*slot.value.get()).assume_init_read() };
+                slot.full.store(false, Ordering::Release);
+                *r = if *r + 1 == SEG_CAP { 0 } else { *r + 1 };
+                return Some(value);
+            }
+            // Head empty. Advance iff a successor was linked; the producer
+            // never writes to a segment again once it links `next`, and it
+            // links only after completely filling it, so empty + linked ⇒
+            // fully drained.
+            let next = seg.next.load(Ordering::Acquire);
+            if next.is_null() {
+                return None;
+            }
+            let old = self.head;
+            self.head = next;
+            // Recycle the drained segment (or free it if the pool is full).
+            unsafe { (*old).reset() };
+            if let Err(full) = self.pool.try_push(SegBox(old)) {
+                self.frees += 1;
+                drop(full.0); // SegBox drop frees the segment
+            }
+        }
+    }
+
+    /// Blocking pop with backoff; `None` once the producer disconnected
+    /// and the queue is fully drained.
+    pub fn pop(&mut self) -> Option<T> {
+        let mut backoff = Backoff::new();
+        loop {
+            if let Some(v) = self.try_pop() {
+                return Some(v);
+            }
+            if self.inner.live.load(Ordering::Acquire) < 2 {
+                return self.try_pop();
+            }
+            backoff.snooze();
+        }
+    }
+
+    /// Whether the producer half still exists.
+    #[inline]
+    pub fn producer_alive(&self) -> bool {
+        self.inner.live.load(Ordering::Acquire) == 2
+    }
+
+    /// True if a pop would currently yield a value.
+    pub fn has_next(&self) -> bool {
+        let seg = unsafe { &*self.head };
+        let r = unsafe { *seg.pread.get() };
+        seg.slots[r].full.load(Ordering::Acquire)
+            || !seg.next.load(Ordering::Acquire).is_null()
+    }
+}
+
+unsafe fn free_chain<T>(mut head: *mut Seg<T>) {
+    while !head.is_null() {
+        let seg = Box::from_raw(head);
+        head = seg.next.load(Ordering::Acquire);
+        drop(seg);
+    }
+}
+
+impl<T> Drop for UnboundedProducer<T> {
+    fn drop(&mut self) {
+        if self.inner.live.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Consumer already gone; it published its head for us.
+            let head = self.inner.orphan_head.load(Ordering::Acquire);
+            unsafe { free_chain(head) };
+        }
+    }
+}
+
+impl<T> Drop for UnboundedConsumer<T> {
+    fn drop(&mut self) {
+        self.inner.orphan_head.store(self.head, Ordering::Release);
+        if self.inner.live.fetch_sub(1, Ordering::AcqRel) == 1 {
+            unsafe { free_chain(self.head) };
+        }
+        // The pool halves drop after this, freeing pooled segments via
+        // SegBox::drop.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn basic_roundtrip() {
+        let (mut p, mut c) = unbounded_spsc::<u64>();
+        assert_eq!(c.try_pop(), None);
+        p.push(1);
+        p.push(2);
+        assert!(c.has_next());
+        assert_eq!(c.try_pop(), Some(1));
+        assert_eq!(c.try_pop(), Some(2));
+        assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn grows_past_segment_capacity() {
+        let (mut p, mut c) = unbounded_spsc::<usize>();
+        let n = SEG_CAP * 3 + 17;
+        for i in 0..n {
+            p.push(i);
+        }
+        for i in 0..n {
+            assert_eq!(c.try_pop(), Some(i));
+        }
+        assert_eq!(c.try_pop(), None);
+        assert!(p.allocs >= 4); // first + at least 3 growth segments
+    }
+
+    #[test]
+    fn recycles_segments_in_steady_state() {
+        let (mut p, mut c) = unbounded_spsc::<usize>();
+        // Interleave so the consumer keeps returning segments to the pool.
+        for round in 0..10 {
+            for i in 0..SEG_CAP {
+                p.push(round * SEG_CAP + i);
+            }
+            for i in 0..SEG_CAP {
+                assert_eq!(c.try_pop(), Some(round * SEG_CAP + i));
+            }
+        }
+        // Pool (cap 8) should absorb all recycling for this pattern.
+        assert!(
+            p.allocs <= 3,
+            "expected steady-state reuse, got {} allocs",
+            p.allocs
+        );
+    }
+
+    #[test]
+    fn fifo_across_threads() {
+        const N: usize = 50_000;
+        let (mut p, mut c) = unbounded_spsc::<usize>();
+        let t = std::thread::spawn(move || {
+            for i in 0..N {
+                p.push(i);
+            }
+        });
+        for expect in 0..N {
+            assert_eq!(c.pop(), Some(expect));
+        }
+        t.join().unwrap();
+        assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn pop_returns_none_after_disconnect() {
+        let (mut p, mut c) = unbounded_spsc::<u32>();
+        p.push(7);
+        drop(p);
+        assert_eq!(c.pop(), Some(7));
+        assert_eq!(c.pop(), None);
+    }
+
+    #[test]
+    fn drops_inflight_on_teardown() {
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        DROPS.store(0, Ordering::SeqCst);
+        let (mut p, mut c) = unbounded_spsc::<D>();
+        let n = SEG_CAP + 100; // spans two segments
+        for _ in 0..n {
+            p.push(D);
+        }
+        drop(c.try_pop().unwrap()); // 1 explicit
+        drop(p);
+        drop(c);
+        assert_eq!(DROPS.load(Ordering::SeqCst), n);
+    }
+
+    #[test]
+    fn teardown_order_producer_first_then_consumer() {
+        let (p, c) = unbounded_spsc::<u8>();
+        drop(p);
+        drop(c);
+    }
+
+    #[test]
+    fn teardown_order_consumer_first_then_producer() {
+        let (mut p, c) = unbounded_spsc::<u8>();
+        p.push(1);
+        drop(c);
+        p.push(2); // producer may still push into orphaned chain
+        drop(p);
+    }
+}

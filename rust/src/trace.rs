@@ -1,0 +1,187 @@
+//! Execution tracing — the paper's "mechanism to trace the execution of
+//! the workers' threads" (§3.2).
+//!
+//! Every skeleton node owns an [`NodeTrace`] (shared atomics, updated with
+//! relaxed stores on the node's own thread — negligible overhead, and can
+//! be compiled out of hot loops by not calling the hooks). Skeletons
+//! collect them into a [`TraceReport`] printed by `ffctl --trace`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-node counters. All relaxed: single-writer, read at report time.
+#[derive(Debug, Default)]
+pub struct NodeTrace {
+    /// Tasks processed by `svc`.
+    pub tasks: AtomicU64,
+    /// Messages emitted downstream.
+    pub emitted: AtomicU64,
+    /// Nanoseconds spent inside `svc`.
+    pub svc_ns: AtomicU64,
+    /// Failed pushes (backpressure) observed by this node's sender.
+    pub push_retries: AtomicU64,
+    /// Empty polls (starvation) observed by this node's receiver.
+    pub pop_retries: AtomicU64,
+    /// Completed run cycles (freeze/thaw generations).
+    pub cycles: AtomicU64,
+}
+
+impl NodeTrace {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    #[inline]
+    pub fn on_task(&self, svc_ns: u64) {
+        self.tasks.fetch_add(1, Ordering::Relaxed);
+        self.svc_ns.fetch_add(svc_ns, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn on_emit(&self, n: u64) {
+        self.emitted.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn on_cycle(&self) {
+        self.cycles.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_retries(&self, push: u64, pop: u64) {
+        self.push_retries.fetch_add(push, Ordering::Relaxed);
+        self.pop_retries.fetch_add(pop, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self, name: impl Into<String>) -> TraceRow {
+        TraceRow {
+            name: name.into(),
+            tasks: self.tasks.load(Ordering::Relaxed),
+            emitted: self.emitted.load(Ordering::Relaxed),
+            svc_time: Duration::from_nanos(self.svc_ns.load(Ordering::Relaxed)),
+            push_retries: self.push_retries.load(Ordering::Relaxed),
+            pop_retries: self.pop_retries.load(Ordering::Relaxed),
+            cycles: self.cycles.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One row of a trace report.
+#[derive(Debug, Clone)]
+pub struct TraceRow {
+    pub name: String,
+    pub tasks: u64,
+    pub emitted: u64,
+    pub svc_time: Duration,
+    pub push_retries: u64,
+    pub pop_retries: u64,
+    pub cycles: u64,
+}
+
+/// A collected report over all nodes of a skeleton.
+#[derive(Debug, Clone, Default)]
+pub struct TraceReport {
+    pub rows: Vec<TraceRow>,
+}
+
+impl TraceReport {
+    pub fn total_tasks(&self) -> u64 {
+        self.rows.iter().map(|r| r.tasks).sum()
+    }
+
+    /// Load imbalance: max/mean of per-worker task counts over rows whose
+    /// name starts with `prefix` (e.g. "worker"). 1.0 = perfectly even.
+    pub fn imbalance(&self, prefix: &str) -> f64 {
+        let counts: Vec<u64> = self
+            .rows
+            .iter()
+            .filter(|r| r.name.starts_with(prefix))
+            .map(|r| r.tasks)
+            .collect();
+        if counts.is_empty() {
+            return 1.0;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let mean = counts.iter().sum::<u64>() as f64 / counts.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<14} {:>10} {:>10} {:>12} {:>12} {:>12} {:>7}\n",
+            "node", "tasks", "emitted", "svc-time", "push-retry", "pop-retry", "cycles"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<14} {:>10} {:>10} {:>12} {:>12} {:>12} {:>7}\n",
+                r.name,
+                r.tasks,
+                r.emitted,
+                format!("{:.3?}", r.svc_time),
+                r.push_retries,
+                r.pop_retries,
+                r.cycles
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let t = NodeTrace::new();
+        t.on_task(100);
+        t.on_task(50);
+        t.on_emit(3);
+        t.on_cycle();
+        t.add_retries(2, 5);
+        let row = t.snapshot("w0");
+        assert_eq!(row.tasks, 2);
+        assert_eq!(row.emitted, 3);
+        assert_eq!(row.svc_time, Duration::from_nanos(150));
+        assert_eq!(row.push_retries, 2);
+        assert_eq!(row.pop_retries, 5);
+        assert_eq!(row.cycles, 1);
+    }
+
+    #[test]
+    fn imbalance_measured() {
+        let mk = |name: &str, tasks: u64| TraceRow {
+            name: name.into(),
+            tasks,
+            emitted: 0,
+            svc_time: Duration::ZERO,
+            push_retries: 0,
+            pop_retries: 0,
+            cycles: 0,
+        };
+        let rep = TraceReport {
+            rows: vec![mk("worker-0", 10), mk("worker-1", 30), mk("emitter", 999)],
+        };
+        assert_eq!(rep.imbalance("worker"), 30.0 / 20.0);
+        assert_eq!(rep.imbalance("nomatch"), 1.0);
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let t = NodeTrace::new();
+        t.on_task(5);
+        let rep = TraceReport {
+            rows: vec![t.snapshot("emitter")],
+        };
+        let s = rep.render();
+        assert!(s.contains("emitter"));
+        assert!(s.contains("tasks"));
+    }
+}

@@ -1,0 +1,387 @@
+//! Small shared utilities: cache-line padding, spin backoff, a seeded
+//! PRNG (no `rand` crate offline), and time helpers.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Size of a destructive-interference-free region. 64 bytes on x86-64;
+/// we use 128 to also defeat the adjacent-line (spatial) prefetcher,
+/// like crossbeam's `CachePadded` and FastFlow's `longxCacheLine`.
+pub const CACHE_LINE: usize = 128;
+
+/// Pads and aligns `T` to [`CACHE_LINE`] bytes so two instances never
+/// share a cache line. This is what keeps the FastForward queue's
+/// `pread` / `pwrite` from false-sharing (§2.2 of the paper).
+#[derive(Debug, Default)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> Self {
+        Self { value }
+    }
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+/// Escalating spin backoff used by every blocking loop in the runtime.
+///
+/// FastFlow threads are *non-blocking*: while running they never sleep in
+/// the OS, they spin (the paper: "they will, if not frozen, fully load the
+/// cores"). We spin with `hint::spin_loop` for a while and then escalate
+/// to `yield_now` so over-subscribed configurations still make progress.
+#[derive(Debug)]
+pub struct Backoff {
+    step: u32,
+}
+
+impl Backoff {
+    /// Spins below this many steps; yields the OS slice above it.
+    /// Perf note (EXPERIMENTS.md §Perf L3.1): 4 (≤16-pause bursts)
+    /// rather than 7 (≤128) — on oversubscribed/single-core boxes the
+    /// long spin burns most of a scheduling quantum before the partner
+    /// thread can run; short bursts keep multi-core latency while
+    /// cutting 1-cpu ping-pong latency ~3×.
+    const SPIN_LIMIT: u32 = 1;
+
+    #[inline]
+    pub fn new() -> Self {
+        Backoff { step: 0 }
+    }
+
+    /// One unit of waiting; escalates geometrically.
+    #[inline]
+    pub fn snooze(&mut self) {
+        if self.step <= Self::SPIN_LIMIT {
+            for _ in 0..(1u32 << self.step) {
+                std::hint::spin_loop();
+            }
+            self.step += 1;
+        } else {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Back to tight spinning (call after successful progress).
+    #[inline]
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+
+    /// True once the backoff has escalated past pure spinning.
+    #[inline]
+    pub fn is_yielding(&self) -> bool {
+        self.step > Self::SPIN_LIMIT
+    }
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Deterministic xorshift64* PRNG — used by tests, property generators and
+/// workload synthesis. (The vendored registry has no `rand`; determinism
+/// is a feature for reproducible experiments anyway.)
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        // 0 is a fixed point of xorshift; remap it.
+        Self {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, bound)`; `bound` must be nonzero.
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        self.next_u64() % bound
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo < hi);
+        lo + self.next_below(hi - lo)
+    }
+
+    /// Uniform float in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Coin flip with probability `p` of `true`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+}
+
+/// A cell for lazily-initialized, thread-affine values inside [`Send`]
+/// nodes — e.g. a PJRT client/executable (`Rc`-based, not `Send`) built
+/// in `svc_init` on the worker thread.
+///
+/// # Safety contract
+/// The cell may cross threads **only while empty**. `get_or_init` pins
+/// the value to the calling thread; every later access (and the drop, in
+/// the normal node lifecycle: the node is dropped at the end of its
+/// thread) happens on that same thread. Debug builds verify the pin.
+pub struct SendCell<T> {
+    value: Option<T>,
+    owner: Option<std::thread::ThreadId>,
+}
+
+// SAFETY: see type-level contract — the inner value never actually moves
+// between threads; only the empty shell does.
+unsafe impl<T> Send for SendCell<T> {}
+
+impl<T> SendCell<T> {
+    pub const fn empty() -> Self {
+        SendCell {
+            value: None,
+            owner: None,
+        }
+    }
+
+    /// Initialize on the current thread if empty; returns the value.
+    pub fn get_or_init(&mut self, init: impl FnOnce() -> T) -> &mut T {
+        if self.value.is_none() {
+            self.value = Some(init());
+            self.owner = Some(std::thread::current().id());
+        }
+        debug_assert_eq!(
+            self.owner,
+            Some(std::thread::current().id()),
+            "SendCell accessed from a different thread than it was pinned to"
+        );
+        self.value.as_mut().unwrap()
+    }
+
+    /// Access if initialized (same-thread contract applies).
+    pub fn get(&self) -> Option<&T> {
+        debug_assert!(
+            self.value.is_none() || self.owner == Some(std::thread::current().id()),
+            "SendCell accessed from a different thread than it was pinned to"
+        );
+        self.value.as_ref()
+    }
+
+    pub fn is_initialized(&self) -> bool {
+        self.value.is_some()
+    }
+}
+
+impl<T> Default for SendCell<T> {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+/// Measure wall time of `f`, returning (result, elapsed).
+pub fn timed<R>(f: impl FnOnce() -> R) -> (R, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// A cooperative cancellation flag (used by the Mandelbrot explorer to
+/// reproduce the QT `restart`/`abort` protocol between passes).
+#[derive(Debug, Default)]
+pub struct AbortFlag {
+    flag: AtomicBool,
+}
+
+impl AbortFlag {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    #[inline]
+    pub fn raise(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+    #[inline]
+    pub fn clear(&self) {
+        self.flag.store(false, Ordering::Release);
+    }
+    #[inline]
+    pub fn is_raised(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+}
+
+/// Human-readable duration, `mm:ss.mmm` or `h:mm:ss` for long runs —
+/// mirrors the paper's Table 2 time format.
+pub fn fmt_duration(d: Duration) -> String {
+    let total_ms = d.as_millis();
+    let ms = total_ms % 1000;
+    let s = (total_ms / 1000) % 60;
+    let m = (total_ms / 60_000) % 60;
+    let h = total_ms / 3_600_000;
+    if h > 0 {
+        format!("{h}:{m:02}:{s:02}")
+    } else if m > 0 {
+        format!("{m}:{s:02}.{ms:03}")
+    } else {
+        format!("{s}.{ms:03}s")
+    }
+}
+
+/// Number of logical CPUs visible to this process (affinity-mask aware).
+pub fn num_cpus() -> usize {
+    // SAFETY: plain libc call with an out-param we own.
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        if libc::sched_getaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &mut set) == 0 {
+            let n = libc::CPU_COUNT(&set);
+            if n > 0 {
+                return n as usize;
+            }
+        }
+        let n = libc::sysconf(libc::_SC_NPROCESSORS_ONLN);
+        if n > 0 {
+            n as usize
+        } else {
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_padded_is_aligned() {
+        assert!(std::mem::align_of::<CachePadded<u8>>() >= 128);
+        assert!(std::mem::size_of::<CachePadded<u8>>() >= 128);
+        let p = CachePadded::new(42u32);
+        assert_eq!(*p, 42);
+        assert_eq!(p.into_inner(), 42);
+    }
+
+    #[test]
+    fn backoff_escalates_and_resets() {
+        let mut b = Backoff::new();
+        assert!(!b.is_yielding());
+        for _ in 0..16 {
+            b.snooze();
+        }
+        assert!(b.is_yielding());
+        b.reset();
+        assert!(!b.is_yielding());
+    }
+
+    #[test]
+    fn xorshift_is_deterministic() {
+        let mut a = XorShift64::new(7);
+        let mut b = XorShift64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn xorshift_zero_seed_is_remapped() {
+        let mut r = XorShift64::new(0);
+        // must not get stuck at zero
+        assert_ne!(r.next_u64(), 0);
+        assert_ne!(r.next_u64(), r.next_u64());
+    }
+
+    #[test]
+    fn xorshift_bounds_respected() {
+        let mut r = XorShift64::new(123);
+        for _ in 0..1000 {
+            let v = r.range(10, 20);
+            assert!((10..20).contains(&v));
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn abort_flag_roundtrip() {
+        let f = AbortFlag::new();
+        assert!(!f.is_raised());
+        f.raise();
+        assert!(f.is_raised());
+        f.clear();
+        assert!(!f.is_raised());
+    }
+
+    #[test]
+    fn fmt_duration_formats() {
+        assert_eq!(fmt_duration(Duration::from_millis(1500)), "1.500s");
+        assert_eq!(fmt_duration(Duration::from_secs(75)), "1:15.000");
+        assert_eq!(fmt_duration(Duration::from_secs(3725)), "1:02:05");
+    }
+
+    #[test]
+    fn num_cpus_positive() {
+        assert!(num_cpus() >= 1);
+    }
+
+    #[test]
+    fn send_cell_initializes_once() {
+        let mut c = SendCell::<u32>::empty();
+        assert!(!c.is_initialized());
+        assert!(c.get().is_none());
+        assert_eq!(*c.get_or_init(|| 5), 5);
+        assert_eq!(*c.get_or_init(|| 99), 5); // init runs once
+        assert!(c.is_initialized());
+        assert_eq!(c.get(), Some(&5));
+    }
+
+    #[test]
+    fn send_cell_crosses_threads_while_empty() {
+        // The exact pattern the mandelbrot worker uses: move empty,
+        // init + use + drop on the destination thread.
+        let cell = SendCell::<std::rc::Rc<u32>>::empty();
+        let h = std::thread::spawn(move || {
+            let mut cell = cell;
+            let v = cell.get_or_init(|| std::rc::Rc::new(7));
+            **v
+        });
+        assert_eq!(h.join().unwrap(), 7);
+    }
+
+    #[test]
+    fn timed_returns_result_and_duration() {
+        let (v, d) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() < 1_000_000_000);
+    }
+}

@@ -1,0 +1,151 @@
+//! Cross-module integration: the paper's workloads end-to-end through
+//! the public API, each verified against its sequential oracle.
+
+use fastflow::accel::{Accel, FarmAccel};
+use fastflow::apps::mandelbrot::{
+    render_progressive, render_sequential, Engine, Region, RenderParams,
+};
+use fastflow::apps::matmul::{matmul_accelerated, matmul_sequential, Matrix};
+use fastflow::apps::nqueens::{count_parallel, count_sequential, known_solutions};
+use fastflow::farm::{FarmConfig, SchedPolicy};
+use fastflow::node::node_fn;
+use fastflow::pipeline::Pipeline;
+use fastflow::util::num_cpus;
+
+#[test]
+fn fig3_matmul_accelerated_equals_sequential() {
+    let a = Matrix::random(96, 10);
+    let b = Matrix::random(96, 20);
+    let seq = matmul_sequential(&a, &b);
+    for workers in [1, 2, 5] {
+        assert_eq!(seq, matmul_accelerated(&a, &b, workers), "w={workers}");
+    }
+}
+
+#[test]
+fn fig4_mandelbrot_farm_equals_sequential_every_region() {
+    for region in Region::presets() {
+        let seq = render_sequential(&region, 96, 64, 256, None).unwrap();
+        let frames = render_progressive(
+            RenderParams {
+                region,
+                width: 96,
+                height: 64,
+            },
+            3,
+            Engine::Scalar,
+            3, // passes 0..3 → max_iter 64,128,256
+        );
+        assert_eq!(frames[2].iters, seq.iters, "region {}", region.name);
+    }
+}
+
+#[test]
+fn table2_nqueens_all_decompositions_agree() {
+    let n = 10;
+    let expected = known_solutions(n).unwrap();
+    assert_eq!(count_sequential(n), expected);
+    for depth in [1, 2, 3, 4] {
+        for workers in [1, 3, 8] {
+            let run = count_parallel(n, depth, workers);
+            assert_eq!(run.solutions, expected, "depth={depth} workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn accelerator_burst_reuse_matches_fresh_accelerators() {
+    // One frozen accelerator reused over 10 bursts must equal 10
+    // one-shot runs.
+    let mut acc: FarmAccel<u64, u64> = FarmAccel::run_then_freeze(
+        FarmConfig::default().workers(3).sched(SchedPolicy::OnDemand),
+        |_| node_fn(|x: u64| x.wrapping_mul(2654435761).rotate_left(7)),
+    );
+    for burst in 0..10u64 {
+        if burst > 0 {
+            acc.thaw();
+        }
+        let inputs: Vec<u64> = (0..500).map(|i| burst * 10_000 + i).collect();
+        let mut expect: Vec<u64> = inputs
+            .iter()
+            .map(|x| x.wrapping_mul(2654435761).rotate_left(7))
+            .collect();
+        expect.sort_unstable();
+        for &i in &inputs {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = acc.load_result() {
+            got.push(v);
+        }
+        got.sort_unstable();
+        assert_eq!(got, expect, "burst {burst}");
+        acc.wait_freezing();
+    }
+    acc.thaw();
+    acc.offload_eos();
+    acc.wait();
+}
+
+#[test]
+fn pipeline_of_farms_composes() {
+    // pipeline( farm(x+1) → farm(x*3) ) ordered end to end.
+    let pipe = Pipeline::new(node_fn(|x: u64| x))
+        .then_farm(FarmConfig::default().workers(2).ordered(), |_| {
+            node_fn(|x: u64| x + 1)
+        })
+        .then_farm(FarmConfig::default().workers(3).ordered(), |_| {
+            node_fn(|x: u64| x * 3)
+        });
+    let mut acc: Accel<u64, u64> = Accel::from_skeleton(pipe.launch_accel());
+    for i in 0..2_000 {
+        acc.offload(i).unwrap();
+    }
+    acc.offload_eos();
+    let mut got = vec![];
+    while let Some(v) = acc.load_result() {
+        got.push(v);
+    }
+    assert_eq!(got, (0..2_000u64).map(|x| (x + 1) * 3).collect::<Vec<_>>());
+    acc.wait();
+}
+
+#[test]
+fn offload_counts_are_tracked() {
+    let mut acc: FarmAccel<u32, u32> =
+        FarmAccel::run(FarmConfig::default().workers(2), |_| node_fn(|x: u32| x));
+    for i in 0..50 {
+        acc.offload(i).unwrap();
+    }
+    acc.offload_eos();
+    while acc.load_result().is_some() {}
+    assert_eq!(acc.offloaded, 50);
+    assert_eq!(acc.collected, 50);
+    let report = acc.wait();
+    assert_eq!(
+        report
+            .rows
+            .iter()
+            .filter(|r| r.name.starts_with("worker"))
+            .map(|r| r.tasks)
+            .sum::<u64>(),
+        50
+    );
+}
+
+#[test]
+fn trace_reports_cover_all_nodes() {
+    let workers = num_cpus().clamp(2, 4);
+    let mut acc: FarmAccel<u32, u32> = FarmAccel::run(
+        FarmConfig::default().workers(workers),
+        |_| node_fn(|x: u32| x),
+    );
+    acc.offload(1).unwrap();
+    acc.offload_eos();
+    while acc.load_result().is_some() {}
+    let report = acc.wait();
+    assert_eq!(report.rows.len(), workers + 2); // emitter + workers + collector
+    assert!(report.rows.iter().any(|r| r.name == "emitter"));
+    assert!(report.rows.iter().any(|r| r.name == "collector"));
+}

@@ -1,0 +1,159 @@
+//! Integration: the AOT bridge. Loads `artifacts/*.hlo.txt` (produced by
+//! `make artifacts`) into the PJRT CPU client and cross-checks the
+//! JAX/Pallas kernels against the Rust references.
+//!
+//! All tests no-op with a notice when artifacts are missing, so
+//! `cargo test` stays green before `make artifacts`.
+
+use fastflow::apps::mandelbrot::escape_iters;
+use fastflow::apps::matmul::matmul_ref_f32;
+use fastflow::runtime::{MandelTileKernel, MatmulKernel, MANDEL_TILE, MATMUL_N};
+use fastflow::util::XorShift64;
+
+fn artifacts_or_skip(name: &str) -> bool {
+    if MandelTileKernel::available() && MatmulKernel::available() {
+        true
+    } else {
+        eprintln!("SKIP {name}: artifacts missing (run `make artifacts`)");
+        false
+    }
+}
+
+#[test]
+fn mandel_kernel_matches_rust_scalar() {
+    if !artifacts_or_skip("mandel_kernel_matches_rust_scalar") {
+        return;
+    }
+    let k = MandelTileKernel::load().expect("load");
+    let mut rng = XorShift64::new(11);
+    for max_iter in [16u32, 64, 200] {
+        let cx: Vec<f32> = (0..MANDEL_TILE)
+            .map(|_| (rng.next_f64() * 3.5 - 2.5) as f32)
+            .collect();
+        let cy: Vec<f32> = (0..MANDEL_TILE)
+            .map(|_| (rng.next_f64() * 4.0 - 2.0) as f32)
+            .collect();
+        let got = k.compute(&cx, &cy, max_iter).expect("compute");
+        let mut mismatches = 0usize;
+        for i in 0..MANDEL_TILE {
+            // The kernel iterates in f32, the Rust reference in f64;
+            // compare against an f32-exact scalar loop instead.
+            let want = escape_iters_f32(cx[i], cy[i], max_iter);
+            if got[i] as u32 != want {
+                mismatches += 1;
+            }
+        }
+        assert_eq!(
+            mismatches, 0,
+            "kernel vs f32 scalar reference diverged (max_iter {max_iter})"
+        );
+    }
+}
+
+/// f32 replica of `escape_iters` matching the kernel's arithmetic.
+fn escape_iters_f32(cx: f32, cy: f32, max_iter: u32) -> u32 {
+    let mut zr = 0.0f32;
+    let mut zi = 0.0f32;
+    let mut i = 0u32;
+    while i < max_iter {
+        let zr2 = zr * zr;
+        let zi2 = zi * zi;
+        if zr2 + zi2 > 4.0 {
+            break;
+        }
+        zi = 2.0 * zr * zi + cy;
+        zr = zr2 - zi2 + cx;
+        i += 1;
+    }
+    i
+}
+
+#[test]
+fn mandel_kernel_f64_reference_close() {
+    if !artifacts_or_skip("mandel_kernel_f64_reference_close") {
+        return;
+    }
+    // Against the f64 renderer the counts may differ at boundary pixels;
+    // require < 2% disagreement on a random sample (this bounds the
+    // visual error of the PJRT render path).
+    let k = MandelTileKernel::load().expect("load");
+    let mut rng = XorShift64::new(5);
+    let cx: Vec<f32> = (0..MANDEL_TILE)
+        .map(|_| (rng.next_f64() * 3.0 - 2.2) as f32)
+        .collect();
+    let cy: Vec<f32> = (0..MANDEL_TILE)
+        .map(|_| (rng.next_f64() * 3.0 - 1.5) as f32)
+        .collect();
+    let got = k.compute(&cx, &cy, 256).expect("compute");
+    let diff = (0..MANDEL_TILE)
+        .filter(|&i| got[i] as u32 != escape_iters(cx[i] as f64, cy[i] as f64, 256))
+        .count();
+    assert!(
+        (diff as f64) < 0.02 * MANDEL_TILE as f64,
+        "too many f32/f64 boundary disagreements: {diff}"
+    );
+}
+
+#[test]
+fn matmul_kernel_matches_rust_ref() {
+    if !artifacts_or_skip("matmul_kernel_matches_rust_ref") {
+        return;
+    }
+    let k = MatmulKernel::load().expect("load");
+    let mut rng = XorShift64::new(3);
+    let a: Vec<f32> = (0..MATMUL_N * MATMUL_N)
+        .map(|_| (rng.next_f64() * 2.0 - 1.0) as f32)
+        .collect();
+    let b: Vec<f32> = (0..MATMUL_N * MATMUL_N)
+        .map(|_| (rng.next_f64() * 2.0 - 1.0) as f32)
+        .collect();
+    let got = k.compute(&a, &b).expect("compute");
+    let want = matmul_ref_f32(&a, &b, MATMUL_N);
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "max error {max_err}");
+}
+
+#[test]
+fn matmul_kernel_identity() {
+    if !artifacts_or_skip("matmul_kernel_identity") {
+        return;
+    }
+    let k = MatmulKernel::load().expect("load");
+    let n = MATMUL_N;
+    let mut eye = vec![0f32; n * n];
+    for i in 0..n {
+        eye[i * n + i] = 1.0;
+    }
+    let a: Vec<f32> = (0..n * n).map(|i| (i % 97) as f32).collect();
+    let got = k.compute(&a, &eye).expect("compute");
+    assert_eq!(got, a);
+}
+
+#[test]
+fn kernel_reuse_is_stable() {
+    if !artifacts_or_skip("kernel_reuse_is_stable") {
+        return;
+    }
+    // One executable, many invocations with different budgets — the
+    // progressive-pass usage pattern.
+    let k = MandelTileKernel::load().expect("load");
+    let cx = vec![0.0f32; MANDEL_TILE];
+    let cy = vec![0.0f32; MANDEL_TILE];
+    for budget in [1u32, 10, 100, 50, 1] {
+        let out = k.compute(&cx, &cy, budget).expect("compute");
+        assert!(out.iter().all(|&v| v as u32 == budget), "budget {budget}");
+    }
+}
+
+#[test]
+fn bad_tile_width_rejected() {
+    if !artifacts_or_skip("bad_tile_width_rejected") {
+        return;
+    }
+    let k = MandelTileKernel::load().expect("load");
+    assert!(k.compute(&[0.0; 3], &[0.0; 3], 10).is_err());
+}

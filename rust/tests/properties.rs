@@ -1,0 +1,264 @@
+//! Randomized property tests (seeded, reproducible — see
+//! `fastflow::testing`) over the runtime's core invariants:
+//!
+//! 1. every SPSC queue delivers exactly the pushed sequence (FIFO, no
+//!    loss, no duplication) under arbitrary interleavings;
+//! 2. a farm processes every offloaded task exactly once, for any
+//!    (workers, policy, queue capacity, task count);
+//! 3. an ordered farm emits results in offload order;
+//! 4. freeze/thaw bursts of arbitrary sizes lose nothing;
+//! 5. arbiter-built MPSC/SPMC channels conserve the multiset of messages.
+
+use fastflow::accel::FarmAccel;
+use fastflow::channel::Msg;
+use fastflow::farm::{FarmConfig, SchedPolicy};
+use fastflow::node::node_fn;
+use fastflow::queues;
+use fastflow::spsc::{spsc, unbounded_spsc};
+use fastflow::testing::{Cases, Gen};
+
+#[test]
+fn prop_spsc_fifo_random_interleave() {
+    Cases::new("spsc_fifo", 30).run(|g: &mut Gen| {
+        let cap = g.usize_in(1, 64);
+        let n = g.usize_in(1, 2_000);
+        let (mut p, mut c) = spsc::<usize>(cap);
+        // Single-threaded random interleaving driven by the seed.
+        let mut pushed = 0usize;
+        let mut popped = 0usize;
+        while popped < n {
+            if pushed < n && (g.bool() || !c.has_next()) {
+                if p.try_push(pushed).is_ok() {
+                    pushed += 1;
+                }
+            } else if let Some(v) = c.try_pop() {
+                assert_eq!(v, popped, "FIFO violated");
+                popped += 1;
+            }
+        }
+        assert_eq!(c.try_pop(), None);
+    });
+}
+
+#[test]
+fn prop_unbounded_spsc_never_loses() {
+    Cases::new("uspsc_lossless", 20).run(|g: &mut Gen| {
+        let n = g.usize_in(1, 5_000);
+        let burst = g.usize_in(1, 700);
+        let (mut p, mut c) = unbounded_spsc::<usize>();
+        let mut pushed = 0usize;
+        let mut popped = 0usize;
+        while popped < n {
+            for _ in 0..burst.min(n - pushed) {
+                p.push(pushed);
+                pushed += 1;
+            }
+            while let Some(v) = c.try_pop() {
+                assert_eq!(v, popped);
+                popped += 1;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_farm_processes_each_task_exactly_once() {
+    Cases::new("farm_exactly_once", 12).run(|g: &mut Gen| {
+        let workers = g.usize_in(1, 6);
+        let n = g.usize_in(1, 3_000) as u64;
+        let sched = if g.bool() {
+            SchedPolicy::RoundRobin
+        } else {
+            SchedPolicy::OnDemand
+        };
+        let caps = g.usize_in(1, 128);
+        let mut acc: FarmAccel<u64, u64> = FarmAccel::run(
+            FarmConfig::default()
+                .workers(workers)
+                .sched(sched)
+                .queue_caps(caps, caps, caps),
+            |_| node_fn(|x: u64| x),
+        );
+        for i in 0..n {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut seen = vec![false; n as usize];
+        while let Some(v) = acc.load_result() {
+            assert!(!seen[v as usize], "duplicate {v}");
+            seen[v as usize] = true;
+        }
+        acc.wait();
+        assert!(seen.iter().all(|&s| s), "lost tasks");
+    });
+}
+
+#[test]
+fn prop_ordered_farm_preserves_order() {
+    Cases::new("farm_ordered", 10).run(|g: &mut Gen| {
+        let workers = g.usize_in(1, 6);
+        let n = g.usize_in(1, 2_000) as u64;
+        let mut acc: FarmAccel<u64, u64> = FarmAccel::run(
+            FarmConfig::default().workers(workers).ordered(),
+            |wi| {
+                node_fn(move |x: u64| {
+                    if wi % 2 == 0 {
+                        std::thread::yield_now(); // skew completion order
+                    }
+                    x
+                })
+            },
+        );
+        for i in 0..n {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut expect = 0u64;
+        while let Some(v) = acc.load_result() {
+            assert_eq!(v, expect);
+            expect += 1;
+        }
+        acc.wait();
+        assert_eq!(expect, n);
+    });
+}
+
+#[test]
+fn prop_freeze_thaw_bursts_lossless() {
+    Cases::new("freeze_thaw", 6).run(|g: &mut Gen| {
+        let workers = g.usize_in(1, 4);
+        let bursts = g.usize_in(1, 6);
+        let mut acc: FarmAccel<u64, u64> = FarmAccel::run_then_freeze(
+            FarmConfig::default().workers(workers),
+            |_| node_fn(|x: u64| x + 1),
+        );
+        for b in 0..bursts {
+            if b > 0 {
+                acc.thaw();
+            }
+            let n = g.usize_in(0, 800) as u64;
+            for i in 0..n {
+                acc.offload(i).unwrap();
+            }
+            acc.offload_eos();
+            let mut count = 0u64;
+            let mut sum = 0u64;
+            while let Some(v) = acc.load_result() {
+                count += 1;
+                sum += v;
+            }
+            assert_eq!(count, n, "burst {b}");
+            assert_eq!(sum, (0..n).map(|i| i + 1).sum::<u64>());
+            acc.wait_freezing();
+        }
+        acc.thaw();
+        acc.offload_eos();
+        acc.wait();
+    });
+}
+
+#[test]
+fn prop_mpsc_conserves_messages() {
+    Cases::new("mpsc_conserve", 8).run(|g: &mut Gen| {
+        let producers = g.usize_in(1, 5);
+        let per = g.usize_in(1, 600);
+        let (txs, mut rx, arbiter) = queues::mpsc::<(usize, usize)>(producers, 32);
+        let handles: Vec<_> = txs
+            .into_iter()
+            .enumerate()
+            .map(|(p, mut tx)| {
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        tx.send((p, i)).unwrap();
+                    }
+                    tx.send_eos().unwrap();
+                })
+            })
+            .collect();
+        let mut last = vec![-1i64; producers];
+        let mut count = 0usize;
+        loop {
+            match rx.recv() {
+                Msg::Task((p, i)) => {
+                    assert!((i as i64) > last[p], "per-producer order violated");
+                    last[p] = i as i64;
+                    count += 1;
+                }
+                Msg::Eos => break,
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        arbiter.join().unwrap();
+        assert_eq!(count, producers * per);
+    });
+}
+
+#[test]
+fn prop_spmc_conserves_messages() {
+    Cases::new("spmc_conserve", 8).run(|g: &mut Gen| {
+        let consumers = g.usize_in(1, 5);
+        let n = g.usize_in(1, 2_000);
+        let (mut tx, rxs, arbiter) = queues::spmc::<usize>(consumers, 32);
+        let handles: Vec<_> = rxs
+            .into_iter()
+            .map(|mut rx| {
+                std::thread::spawn(move || {
+                    let mut got = vec![];
+                    loop {
+                        match rx.recv() {
+                            Msg::Task(v) => got.push(v),
+                            Msg::Eos => break,
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for i in 0..n {
+            tx.send(i).unwrap();
+        }
+        tx.send_eos().unwrap();
+        let mut all: Vec<usize> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        arbiter.join().unwrap();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn prop_multi_emission_conserves_expansion() {
+    use fastflow::node::{Node, Outbox, Svc};
+    struct Expand(u64);
+    impl Node for Expand {
+        type In = u64;
+        type Out = u64;
+        fn svc(&mut self, t: u64, out: &mut Outbox<'_, u64>) -> Svc {
+            for k in 0..self.0 {
+                out.send(t * 100 + k);
+            }
+            Svc::GoOn
+        }
+    }
+    Cases::new("multi_emit", 8).run(|g: &mut Gen| {
+        let fanout = g.usize_in(0, 5) as u64;
+        let n = g.usize_in(1, 400) as u64;
+        let workers = g.usize_in(1, 4);
+        let mut acc: FarmAccel<u64, u64> =
+            FarmAccel::run(FarmConfig::default().workers(workers), |_| Expand(fanout));
+        for i in 0..n {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut count = 0u64;
+        while acc.load_result().is_some() {
+            count += 1;
+        }
+        acc.wait();
+        assert_eq!(count, n * fanout);
+    });
+}
