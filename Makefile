@@ -1,0 +1,50 @@
+# FastFlow accelerator reproduction — build entry points.
+#
+# `make artifacts` is the only step that runs Python (JAX/Pallas): it
+# AOT-compiles the numeric kernels to HLO text under artifacts/, which
+# the Rust side (built with `--features pjrt`) loads at start-up via
+# PJRT. Everything else is plain cargo.
+
+CARGO  ?= cargo
+PYTHON ?= python
+ARTIFACT_DIR ?= artifacts
+
+.PHONY: all build test test-fallback bench artifacts fmt clippy pytest clean
+
+all: build
+
+build:
+	cd rust && $(CARGO) build --release
+
+# Tier-1 verification: must stay green with no XLA libraries installed
+# and no artifacts built (PJRT-dependent tests skip, never fail).
+test:
+	cd rust && $(CARGO) build --release && $(CARGO) test -q
+
+# The no-default-features lane: proves the fallback kernel path
+# (scoped: identical to `test` while `default = []`, but guards the
+# zero-dep path if a default feature ever appears).
+test-fallback:
+	cd rust && $(CARGO) test -q --no-default-features --lib --test fallback_kernel
+
+bench:
+	cd rust && $(CARGO) bench --bench fig4_mandelbrot -- --quick
+	cd rust && $(CARGO) bench --bench table2_nqueens -- --quick
+
+# AOT-compile the JAX/Pallas kernels to HLO text (build-time only;
+# Python never runs at request time).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir $(abspath $(ARTIFACT_DIR))
+
+fmt:
+	cd rust && $(CARGO) fmt --check
+
+clippy:
+	cd rust && $(CARGO) clippy --all-targets -- -D warnings
+
+pytest:
+	$(PYTHON) -m pytest python/tests -q
+
+clean:
+	cd rust && $(CARGO) clean
+	rm -rf $(ARTIFACT_DIR)

@@ -35,7 +35,7 @@ fn main() {
         _ => Engine::Scalar,
     };
     if engine == Engine::Pjrt && !MandelTileKernel::available() {
-        eprintln!("--engine pjrt requires `make artifacts` first");
+        eprintln!("--engine pjrt requires a `--features pjrt` build and `make artifacts`");
         std::process::exit(1);
     }
 

@@ -65,6 +65,9 @@ fn main() {
         assert!(max_err < 1e-3, "PJRT kernel numerically diverged");
         println!("verified: AOT JAX/Pallas kernel matches the Rust reference");
     } else {
-        println!("pjrt kernel: artifacts missing — run `make artifacts` to exercise L1/L2");
+        println!(
+            "pjrt kernel: unavailable — build with `--features pjrt` and run \
+             `make artifacts` to exercise L1/L2"
+        );
     }
 }

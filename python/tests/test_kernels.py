@@ -8,6 +8,10 @@ counts) or to f32 tolerance (matmul).
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# hypothesis is a build-time-only dev dependency; skip the sweep (not
+# fail collection) on images that ship jax but not hypothesis.
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile import model

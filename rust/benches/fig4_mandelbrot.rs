@@ -4,7 +4,8 @@
 //!
 //! Paper shape to reproduce: near-ideal speedup on compute-heavy regions,
 //! Amdahl-limited speedup on cheap regions. On a 1-CPU container the
-//! expected shape is flat (≈1×) — see EXPERIMENTS.md.
+//! expected shape is flat (≈1×) — see `EXPERIMENTS.md` at the repo root
+//! for the methodology and recorded runs.
 //!
 //! `cargo bench --bench fig4_mandelbrot [-- --quick]`
 
@@ -60,6 +61,6 @@ fn main() {
         r.note("rows evaluated through the AOT JAX/Pallas kernel via PJRT");
         r.emit();
     } else {
-        println!("(pjrt variant skipped: run `make artifacts`)");
+        println!("(pjrt variant skipped: needs a `--features pjrt` build + `make artifacts`)");
     }
 }

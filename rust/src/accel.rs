@@ -47,6 +47,9 @@ pub enum AccelError {
     Disconnected,
     /// Input channel full (only from [`Accel::try_offload`]).
     WouldBlock,
+    /// The current cycle's input stream was closed by
+    /// [`Accel::offload_eos`]; [`Accel::thaw`] opens the next cycle.
+    Closed,
 }
 
 impl std::fmt::Display for AccelError {
@@ -54,6 +57,9 @@ impl std::fmt::Display for AccelError {
         match self {
             AccelError::Disconnected => write!(f, "accelerator disconnected"),
             AccelError::WouldBlock => write!(f, "accelerator input full"),
+            AccelError::Closed => {
+                write!(f, "accelerator input stream closed (offload after offload_eos)")
+            }
         }
     }
 }
@@ -142,9 +148,16 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
 
     /// Offload one task onto the accelerator (blocking on backpressure —
     /// the paper's `offload` blocks when the input channel is full).
+    ///
+    /// Errors with [`AccelError::Closed`] after [`Accel::offload_eos`]
+    /// in the same cycle — in every build, not just with debug
+    /// assertions (a release build must not silently push onto a
+    /// closed stream).
     #[inline]
     pub fn offload(&mut self, task: I) -> Result<(), AccelError> {
-        debug_assert!(!self.eos_sent, "offload after offload_eos in same cycle");
+        if self.eos_sent {
+            return Err(AccelError::Closed);
+        }
         self.skel
             .input
             .send(task)
@@ -153,9 +166,13 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
         Ok(())
     }
 
-    /// Non-blocking offload.
+    /// Non-blocking offload. Fails with the same [`AccelError::Closed`]
+    /// as [`Accel::offload`] once the cycle's EOS has been sent.
     #[inline]
     pub fn try_offload(&mut self, task: I) -> Result<(), (I, AccelError)> {
+        if self.eos_sent {
+            return Err((task, AccelError::Closed));
+        }
         if !self.skel.input.peer_alive() {
             return Err((task, AccelError::Disconnected));
         }
@@ -298,7 +315,44 @@ mod tests {
         assert_eq!(got, (1..=1000).collect::<Vec<_>>());
         assert_eq!(acc.collected, 1000);
         let report = acc.wait();
-        assert_eq!(report.total_tasks() > 0, true);
+        assert!(report.total_tasks() > 0);
+    }
+
+    #[test]
+    fn offload_after_eos_is_closed() {
+        let mut acc: FarmAccel<u64, u64> =
+            FarmAccel::run(FarmConfig::default().workers(2), |_| node_fn(|x: u64| x));
+        acc.offload(1).unwrap();
+        acc.offload_eos();
+        assert_eq!(acc.offload(2), Err(AccelError::Closed));
+        match acc.try_offload(3) {
+            Err((task, AccelError::Closed)) => assert_eq!(task, 3),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // The rejected offloads must not count, and the cycle still
+        // drains and joins cleanly.
+        assert_eq!(acc.offloaded, 1);
+        let mut got = 0;
+        while acc.load_result().is_some() {
+            got += 1;
+        }
+        assert_eq!(got, 1);
+        acc.wait();
+    }
+
+    #[test]
+    fn thaw_reopens_input_after_closed() {
+        let mut acc: FarmAccel<u64, u64> =
+            FarmAccel::run_then_freeze(FarmConfig::default().workers(2), |_| node_fn(|x: u64| x));
+        acc.offload_eos();
+        assert_eq!(acc.offload(1), Err(AccelError::Closed));
+        while acc.load_result().is_some() {}
+        acc.wait_freezing();
+        acc.thaw();
+        acc.offload(1).unwrap(); // next cycle accepts again
+        acc.offload_eos();
+        assert_eq!(acc.load_result(), Some(1));
+        acc.wait();
     }
 
     #[test]

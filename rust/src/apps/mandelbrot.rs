@@ -18,6 +18,8 @@
 //! * [`Engine::Pjrt`] — the three-layer configuration: each worker
 //!   evaluates rows in 256-wide tiles through the AOT-compiled
 //!   JAX/Pallas kernel via PJRT ([`crate::runtime::MandelTileKernel`]).
+//!   Requires the `pjrt` cargo feature *and* `make artifacts`; probe
+//!   `MandelTileKernel::available()` before selecting it.
 
 use std::sync::Arc;
 
@@ -244,7 +246,10 @@ impl Node for RowWorker {
         // built once here, off the hot path.
         if self.engine == Engine::Pjrt && !self.kernel.is_initialized() {
             self.kernel.get_or_init(|| {
-                MandelTileKernel::load().expect("load mandelbrot artifact (run `make artifacts`)")
+                MandelTileKernel::load().expect(
+                    "load mandelbrot kernel (build with `--features pjrt` and run \
+                     `make artifacts`; probe MandelTileKernel::available() to skip)",
+                )
             });
         }
     }

@@ -20,7 +20,7 @@ use std::sync::Arc;
 use crate::accel::FarmAccel;
 use crate::farm::FarmConfig;
 use crate::node::{Node, Outbox, Svc};
-use crate::runtime::{MatmulKernel, MATMUL_N};
+use crate::runtime::{KernelError, MatmulKernel, MATMUL_N};
 use crate::util::XorShift64;
 
 /// A square row-major matrix of `i64` (the paper uses `long`).
@@ -178,8 +178,10 @@ pub fn matmul_accelerated(a: &Matrix, b: &Matrix, workers: usize) -> Matrix {
 
 /// f32 matmul via the AOT XLA kernel (fixed [`MATMUL_N`] edge) — the
 /// three-layer path used by `examples/quickstart.rs` to cross-check the
-/// PJRT bridge numerically.
-pub fn matmul_pjrt_f32(a: &[f32], b: &[f32]) -> anyhow::Result<Vec<f32>> {
+/// PJRT bridge numerically. Probe `MatmulKernel::available()` first:
+/// without the `pjrt` feature (or before `make artifacts`) this returns
+/// an actionable [`KernelError`].
+pub fn matmul_pjrt_f32(a: &[f32], b: &[f32]) -> Result<Vec<f32>, KernelError> {
     let k = MatmulKernel::load()?;
     k.compute(a, b)
 }

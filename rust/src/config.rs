@@ -13,7 +13,24 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+/// Error reading or parsing a config file (std-only: the default build
+/// carries no error-handling crate).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError(String);
+
+impl ConfigError {
+    fn new(msg: impl Into<String>) -> Self {
+        ConfigError(msg.into())
+    }
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 #[derive(Debug, Clone, Default)]
 pub struct Config {
@@ -27,13 +44,14 @@ impl Config {
 
     /// Parse a config file. Lines: `key = value`, `# comment`, blank.
     /// Section headers `[name]` prefix keys as `name.key`.
-    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
-        let text = std::fs::read_to_string(path.as_ref())
-            .with_context(|| format!("read config {}", path.as_ref().display()))?;
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            ConfigError::new(format!("read config {}: {e}", path.as_ref().display()))
+        })?;
         Self::from_str_contents(&text)
     }
 
-    pub fn from_str_contents(text: &str) -> Result<Self> {
+    pub fn from_str_contents(text: &str) -> Result<Self, ConfigError> {
         let mut map = BTreeMap::new();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
@@ -45,9 +63,9 @@ impl Config {
                 section = line[1..line.len() - 1].trim().to_string();
                 continue;
             }
-            let (k, v) = line
-                .split_once('=')
-                .with_context(|| format!("config line {}: expected key = value", lineno + 1))?;
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                ConfigError::new(format!("config line {}: expected key = value", lineno + 1))
+            })?;
             let key = if section.is_empty() {
                 k.trim().to_string()
             } else {
@@ -141,7 +159,7 @@ mod tests {
         assert!(c.get_bool("a", false));
         assert!(!c.get_bool("b", true));
         assert!(c.get_bool("c", false));
-        assert!(c.get_bool("d", false) == false); // unparsable -> default
+        assert!(!c.get_bool("d", false)); // unparsable -> default
     }
 
     #[test]

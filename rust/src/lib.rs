@@ -29,6 +29,12 @@
 //! executed by an AOT-compiled XLA (JAX + Pallas) kernel through
 //! [`runtime`] (PJRT). Python never runs at request time.
 //!
+//! The default build is **dependency-free**: the PJRT bridge lives
+//! behind the `pjrt` cargo feature, and without it the [`runtime`]
+//! kernels fall back to null devices reporting `available() == false`
+//! (callers skip the kernel path and use the scalar engines). The
+//! `affinity` feature enables real thread→core pinning via `libc`.
+//!
 //! ```no_run
 //! use fastflow::accel::FarmAccel;
 //! use fastflow::farm::FarmConfig;

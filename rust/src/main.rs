@@ -13,8 +13,6 @@
 //!
 //! Global options: `--config file` (key=value), `--trace`, `--csv dir`.
 
-use anyhow::{bail, Result};
-
 use fastflow::apps::mandelbrot::{
     max_iter_for_pass, render_sequential, AcceleratedRenderer, Engine, Region, RenderParams,
 };
@@ -24,12 +22,22 @@ use fastflow::cli::Args;
 use fastflow::config::Config;
 use fastflow::coordinator::{run_fig4, run_table2, Fig4Opts, Table2Opts};
 use fastflow::metrics::speedup;
+use fastflow::runtime::MandelTileKernel;
 use fastflow::util::{fmt_duration, num_cpus, timed};
+
+/// CLI-level result: every failure is a rendered message (std-only,
+/// no `anyhow` — the binary shares the library's zero-dep default).
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
+/// Fail with a formatted message.
+fn fail<T>(msg: String) -> Result<T> {
+    Err(msg.into())
+}
 
 fn main() {
     let args = Args::from_env();
     if let Err(e) = dispatch(&args) {
-        eprintln!("ffctl: error: {e:#}");
+        eprintln!("ffctl: error: {e}");
         std::process::exit(1);
     }
 }
@@ -55,7 +63,7 @@ fn dispatch(args: &Args) -> Result<()> {
             print_help();
             Ok(())
         }
-        Some(other) => bail!("unknown subcommand '{other}' (try `ffctl help`)"),
+        Some(other) => fail(format!("unknown subcommand '{other}' (try `ffctl help`)")),
     }
 }
 
@@ -88,8 +96,17 @@ COMMON OPTIONS
 fn parse_engine(cfg: &Config) -> Result<Engine> {
     match cfg.get("engine").as_deref() {
         None | Some("scalar") => Ok(Engine::Scalar),
-        Some("pjrt") => Ok(Engine::Pjrt),
-        Some(e) => bail!("unknown engine '{e}' (scalar|pjrt)"),
+        Some("pjrt") => {
+            if !MandelTileKernel::available() {
+                return fail(
+                    "engine 'pjrt' unavailable: build with `--features pjrt` and run \
+                     `make artifacts`"
+                        .to_string(),
+                );
+            }
+            Ok(Engine::Pjrt)
+        }
+        Some(e) => fail(format!("unknown engine '{e}' (scalar|pjrt)")),
     }
 }
 
@@ -125,7 +142,7 @@ fn cmd_fig4(args: &Args) -> Result<()> {
     if let Some(names) = cfg.get_list("regions") {
         opts.regions = names.iter().filter_map(|n| Region::by_name(n)).collect();
         if opts.regions.is_empty() {
-            bail!("no valid regions in --regions");
+            return fail("no valid regions in --regions".to_string());
         }
     }
     println!(
@@ -163,7 +180,7 @@ fn cmd_table2(args: &Args) -> Result<()> {
     let (table, rows) = run_table2(&opts);
     emit_table("table2_nqueens", &table, &cfg);
     if rows.iter().any(|r| !r.verified) {
-        bail!("solution count mismatch!");
+        return fail("solution count mismatch!".to_string());
     }
     Ok(())
 }
@@ -171,9 +188,7 @@ fn cmd_table2(args: &Args) -> Result<()> {
 fn cmd_mandel(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let region = match cfg.get("region") {
-        Some(name) => {
-            Region::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown region '{name}'"))?
-        }
+        Some(name) => Region::by_name(&name).ok_or_else(|| format!("unknown region '{name}'"))?,
         None => Region::presets()[0],
     };
     let width = cfg.get_usize("width", 800);
@@ -195,10 +210,9 @@ fn cmd_mandel(args: &Args) -> Result<()> {
     let (frame, par_d) = timed(|| renderer.render_pass(max_iter, None).unwrap());
     let report = renderer.shutdown();
 
-    anyhow::ensure!(
-        engine == Engine::Pjrt || frame.iters == seq.iters,
-        "accelerated frame differs from sequential!"
-    );
+    if engine != Engine::Pjrt && frame.iters != seq.iters {
+        return fail("accelerated frame differs from sequential!".to_string());
+    }
     println!(
         "mandel {}: {}x{} max_iter={} | seq {} | ff({} workers, {:?}) {} | speedup {:.2}",
         region.name,
@@ -228,11 +242,9 @@ fn cmd_nqueens(args: &Args) -> Result<()> {
     let workers = cfg.get_usize("workers", 2 * num_cpus());
     let (seq, seq_d) = timed(|| nqueens::count_sequential(n));
     let (run, par_d) = timed(|| nqueens::count_parallel(n, depth, workers));
-    anyhow::ensure!(
-        seq == run.solutions,
-        "count mismatch: {seq} vs {}",
-        run.solutions
-    );
+    if seq != run.solutions {
+        return fail(format!("count mismatch: {seq} vs {}", run.solutions));
+    }
     println!(
         "nqueens {n}x{n}: {} solutions | seq {} | ff({} workers, {} tasks) {} | speedup {:.2}{}",
         seq,
@@ -258,7 +270,9 @@ fn cmd_matmul(args: &Args) -> Result<()> {
     let b = Matrix::random(n, 2);
     let (c_seq, seq_d) = timed(|| matmul_sequential(&a, &b));
     let (c_par, par_d) = timed(|| matmul_accelerated(&a, &b, workers));
-    anyhow::ensure!(c_seq == c_par, "accelerated result differs!");
+    if c_seq != c_par {
+        return fail("accelerated result differs!".to_string());
+    }
     println!(
         "matmul {n}x{n}: seq {} | ff({} workers) {} | speedup {:.2} [verified]",
         fmt_duration(seq_d),
@@ -276,6 +290,14 @@ fn cmd_info() -> Result<()> {
     );
     println!("cpus: {}", num_cpus());
     println!("default queue capacity: {}", fastflow::DEFAULT_QUEUE_CAP);
+    println!(
+        "pjrt backend: {}",
+        if cfg!(feature = "pjrt") {
+            "compiled in"
+        } else {
+            "compiled out (rebuild with --features pjrt)"
+        }
+    );
     for name in [
         fastflow::runtime::MandelTileKernel::ARTIFACT,
         fastflow::runtime::MatmulKernel::ARTIFACT,

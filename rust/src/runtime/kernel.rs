@@ -1,0 +1,208 @@
+//! The backend seam: every compute "device" a farm worker can hand its
+//! numeric hot-spot to implements [`Kernel`]. The default build wires
+//! the seam to fallback kernels built on [`NullKernel`], which report
+//! `available() == false` and refuse to load — callers probe
+//! availability and fall back to the scalar Rust path, so the library
+//! compiles and tests with zero external dependencies. Building with
+//! `--features pjrt` swaps in the real AOT-XLA kernels from
+//! `runtime::pjrt` under the same type names.
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// Errors surfaced by kernel backends. Plain `std` (no `anyhow` in the
+/// request path) so the default build carries no error-handling crate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KernelError {
+    /// The backing artifact file does not exist (run `make artifacts`).
+    MissingArtifact(PathBuf),
+    /// The backend itself is compiled out of this build.
+    BackendDisabled {
+        /// Artifact the caller asked for.
+        artifact: &'static str,
+    },
+    /// Operand shapes don't match what the kernel was compiled for.
+    BadShape(String),
+    /// The backend reported a failure while compiling or executing.
+    Backend(String),
+}
+
+impl fmt::Display for KernelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KernelError::MissingArtifact(p) => {
+                write!(f, "artifact missing: {} (run `make artifacts`)", p.display())
+            }
+            KernelError::BackendDisabled { artifact } => {
+                write!(
+                    f,
+                    "no backend for '{artifact}': this build has the PJRT bridge \
+                     compiled out (rebuild with `--features pjrt`)"
+                )
+            }
+            KernelError::BadShape(msg) => write!(f, "operand shape mismatch: {msg}"),
+            KernelError::Backend(msg) => write!(f, "kernel backend error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for KernelError {}
+
+/// A loadable compute kernel bound to one AOT artifact.
+///
+/// The contract every backend upholds:
+/// * [`Kernel::available`] is cheap and side-effect free — callers use
+///   it to *skip* the kernel path (tests, benches, examples all probe it
+///   before loading);
+/// * [`Kernel::load`] only succeeds when `available()` would have
+///   returned `true`, and its error says how to fix the situation.
+pub trait Kernel: Sized {
+    /// Artifact file name this kernel executes.
+    fn artifact() -> &'static str;
+
+    /// True only when the backend is compiled in *and* the artifact
+    /// exists on disk.
+    fn available() -> bool;
+
+    /// Load the kernel (off the hot path — e.g. in `svc_init`).
+    fn load() -> Result<Self, KernelError>;
+}
+
+/// The fallback "device" used when a real backend is compiled out: it
+/// knows which artifact it stands in for, always reports unavailable,
+/// and every operation returns [`KernelError::BackendDisabled`].
+#[derive(Debug, Clone, Copy)]
+pub struct NullKernel {
+    artifact: &'static str,
+}
+
+impl NullKernel {
+    pub const fn new(artifact: &'static str) -> Self {
+        NullKernel { artifact }
+    }
+
+    /// Artifact this null kernel stands in for.
+    pub fn artifact(&self) -> &'static str {
+        self.artifact
+    }
+
+    /// The error every operation on a null kernel reports.
+    pub fn disabled(&self) -> KernelError {
+        KernelError::BackendDisabled {
+            artifact: self.artifact,
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod fallback {
+    use super::{Kernel, KernelError, NullKernel};
+    use crate::runtime::{MANDEL_ARTIFACT, MATMUL_ARTIFACT};
+
+    /// Fallback Mandelbrot tile kernel: same surface as the `pjrt`
+    /// module's `MandelTileKernel`, never available. `load()` always
+    /// fails, so no instance exists and `compute` is unreachable — it
+    /// exists only to keep callers compiling unchanged.
+    pub struct MandelTileKernel;
+
+    impl MandelTileKernel {
+        pub const ARTIFACT: &'static str = MANDEL_ARTIFACT;
+
+        pub fn available() -> bool {
+            false
+        }
+
+        pub fn load() -> Result<Self, KernelError> {
+            Err(NullKernel::new(Self::ARTIFACT).disabled())
+        }
+
+        pub fn compute(
+            &self,
+            _cx: &[f32],
+            _cy: &[f32],
+            _max_iter: u32,
+        ) -> Result<Vec<i32>, KernelError> {
+            Err(NullKernel::new(Self::ARTIFACT).disabled())
+        }
+    }
+
+    impl Kernel for MandelTileKernel {
+        fn artifact() -> &'static str {
+            Self::ARTIFACT
+        }
+        fn available() -> bool {
+            false
+        }
+        fn load() -> Result<Self, KernelError> {
+            MandelTileKernel::load()
+        }
+    }
+
+    /// Fallback matmul kernel: same surface as the `pjrt` module's
+    /// `MatmulKernel`, never available (see `MandelTileKernel`).
+    pub struct MatmulKernel;
+
+    impl MatmulKernel {
+        pub const ARTIFACT: &'static str = MATMUL_ARTIFACT;
+
+        pub fn available() -> bool {
+            false
+        }
+
+        pub fn load() -> Result<Self, KernelError> {
+            Err(NullKernel::new(Self::ARTIFACT).disabled())
+        }
+
+        pub fn compute(&self, _a: &[f32], _b: &[f32]) -> Result<Vec<f32>, KernelError> {
+            Err(NullKernel::new(Self::ARTIFACT).disabled())
+        }
+    }
+
+    impl Kernel for MatmulKernel {
+        fn artifact() -> &'static str {
+            Self::ARTIFACT
+        }
+        fn available() -> bool {
+            false
+        }
+        fn load() -> Result<Self, KernelError> {
+            MatmulKernel::load()
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use fallback::{MandelTileKernel, MatmulKernel};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_kernel_reports_disabled() {
+        let k = NullKernel::new("some.hlo.txt");
+        assert_eq!(k.artifact(), "some.hlo.txt");
+        let err = k.disabled();
+        assert_eq!(err, KernelError::BackendDisabled { artifact: "some.hlo.txt" });
+        let msg = err.to_string();
+        assert!(msg.contains("some.hlo.txt"), "{msg}");
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+
+    #[test]
+    fn kernel_error_display_is_actionable() {
+        let e = KernelError::MissingArtifact("artifacts/x.hlo.txt".into());
+        assert!(e.to_string().contains("make artifacts"));
+        let e = KernelError::BadShape("want 256, got 3".into());
+        assert!(e.to_string().contains("256"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn fallback_kernels_never_available() {
+        assert!(!MandelTileKernel::available());
+        assert!(!MatmulKernel::available());
+        assert!(MandelTileKernel::load().is_err());
+        assert!(MatmulKernel::load().is_err());
+    }
+}

@@ -1,25 +1,62 @@
-//! PJRT runtime bridge: load AOT-compiled XLA programs (HLO **text**
-//! produced by `python/compile/aot.py`) and execute them from farm
-//! workers.
+//! Runtime kernels: the seam between farm workers and whatever executes
+//! the numeric hot-spot.
 //!
-//! Python/JAX/Pallas run only at build time (`make artifacts`); this
-//! module is the entire request-path footprint of layers L1/L2.
-//!
-//! Thread model: the `xla` crate's `PjRtClient` is `Rc`-based and **not
-//! `Send`**, so each worker thread owns its own client + compiled
-//! executable, created once in `svc_init` (off the hot path). Compiled
-//! executables are a few MB; per-worker duplication is the documented
-//! trade-off (see DESIGN.md §Perf).
+//! [`kernel`] defines the backend-neutral surface — the [`Kernel`]
+//! trait, [`KernelError`], and the [`NullKernel`] fallback. The real
+//! backend, `pjrt` (behind the `pjrt` feature), loads AOT-compiled
+//! XLA programs (HLO **text** produced by `python/compile/aot.py`; see
+//! `make artifacts`) and executes them through the PJRT CPU client.
+//! With the feature off, [`MandelTileKernel`] and [`MatmulKernel`]
+//! resolve to fallback kernels that report `available() == false`, so
+//! every caller skips the kernel path gracefully and the request-path
+//! library builds with zero external dependencies.
+
+pub mod kernel;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use kernel::{Kernel, KernelError, NullKernel};
+
+#[cfg(not(feature = "pjrt"))]
+pub use kernel::{MandelTileKernel, MatmulKernel};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{MandelTileKernel, MatmulKernel, XlaKernel};
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
-
-/// Default artifact directory (relative to the repo root / CWD).
+/// Default artifact directory (under the repository root).
 pub const ARTIFACT_DIR: &str = "artifacts";
 
-/// Resolve an artifact path: honour `FF_ARTIFACT_DIR`, else `artifacts/`,
-/// walking up a couple of directories so tests work from `rust/`.
+/// Artifact file holding the AOT Mandelbrot tile kernel.
+pub const MANDEL_ARTIFACT: &str = "mandelbrot_tile.hlo.txt";
+
+/// Artifact file holding the AOT matmul kernel.
+pub const MATMUL_ARTIFACT: &str = "matmul.hlo.txt";
+
+/// Tile width the Mandelbrot kernel was AOT-compiled for (must match
+/// `python/compile/model.py::TILE`).
+pub const MANDEL_TILE: usize = 256;
+
+/// Matrix edge the matmul kernel was AOT-compiled for (must match
+/// `python/compile/model.py::MATMUL_N`).
+pub const MATMUL_N: usize = 128;
+
+/// The repository root: the parent of this crate's manifest directory
+/// (`rust/..`). Compile-time, so it is correct no matter where the
+/// process was started from.
+fn repo_root() -> &'static Path {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest)
+}
+
+/// Resolve an artifact path. Precedence:
+///
+/// 1. `FF_ARTIFACT_DIR` environment override;
+/// 2. the first *existing* `artifacts/` among the CWD and up to two
+///    parent directories (covers ad-hoc invocations);
+/// 3. `<repo root>/artifacts/<name>` — anchored at the crate manifest's
+///    parent, so `cargo test` from `rust/` and from the repo root agree
+///    on the location even before `make artifacts` has created it.
 pub fn artifact_path(name: &str) -> PathBuf {
     if let Ok(dir) = std::env::var("FF_ARTIFACT_DIR") {
         return Path::new(&dir).join(name);
@@ -30,7 +67,7 @@ pub fn artifact_path(name: &str) -> PathBuf {
             return p;
         }
     }
-    Path::new(ARTIFACT_DIR).join(name)
+    repo_root().join(ARTIFACT_DIR).join(name)
 }
 
 /// True if the named artifact exists (used by tests/benches to skip
@@ -39,152 +76,27 @@ pub fn artifact_available(name: &str) -> bool {
     artifact_path(name).exists()
 }
 
-/// A compiled XLA program bound to a per-thread CPU PJRT client.
-///
-/// NOT `Send` — construct inside the thread that uses it (`svc_init`).
-pub struct XlaKernel {
-    exe: xla::PjRtLoadedExecutable,
-    path: PathBuf,
-}
-
-impl XlaKernel {
-    /// Load + compile an HLO text file on a fresh CPU client.
-    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
-        let path = path.as_ref().to_path_buf();
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
-        Ok(XlaKernel { exe, path })
-    }
-
-    /// Load a named artifact from the artifact directory.
-    pub fn load_artifact(name: &str) -> Result<Self> {
-        let p = artifact_path(name);
-        Self::load(&p).with_context(|| {
-            format!(
-                "artifact '{name}' missing or broken; run `make artifacts` (looked at {})",
-                p.display()
-            )
-        })
-    }
-
-    pub fn path(&self) -> &Path {
-        &self.path
-    }
-
-    /// Execute with literal inputs; the python side lowers with
-    /// `return_tuple=True`, so unwrap the 1-tuple.
-    pub fn run1(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
-        let outs = self
-            .exe
-            .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.path.display()))?;
-        let lit = outs
-            .first()
-            .and_then(|replica| replica.first())
-            .context("no output buffer")?
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
-        lit.to_tuple1()
-            .map_err(|e| anyhow::anyhow!("to_tuple1: {e:?}"))
-    }
-}
-
-/// Tile width the Mandelbrot kernel was AOT-compiled for (must match
-/// `python/compile/model.py::TILE`).
-pub const MANDEL_TILE: usize = 256;
-
-/// Matrix edge the matmul kernel was AOT-compiled for (must match
-/// `python/compile/model.py::MATMUL_N`).
-pub const MATMUL_N: usize = 128;
-
-/// Typed wrapper over the AOT Mandelbrot tile kernel:
-/// `(cx[TILE] f32, cy[TILE] f32, max_iter i32[1]) -> iters i32[TILE]`.
-pub struct MandelTileKernel {
-    k: XlaKernel,
-}
-
-impl MandelTileKernel {
-    pub const ARTIFACT: &'static str = "mandelbrot_tile.hlo.txt";
-
-    pub fn load() -> Result<Self> {
-        Ok(MandelTileKernel {
-            k: XlaKernel::load_artifact(Self::ARTIFACT)?,
-        })
-    }
-
-    pub fn available() -> bool {
-        artifact_available(Self::ARTIFACT)
-    }
-
-    /// Escape-iteration counts for one tile of complex coordinates.
-    /// `cx`/`cy` must have length [`MANDEL_TILE`].
-    pub fn compute(&self, cx: &[f32], cy: &[f32], max_iter: u32) -> Result<Vec<i32>> {
-        anyhow::ensure!(
-            cx.len() == MANDEL_TILE && cy.len() == MANDEL_TILE,
-            "tile must be {MANDEL_TILE} wide (got {}, {})",
-            cx.len(),
-            cy.len()
-        );
-        let cx_l = xla::Literal::vec1(cx);
-        let cy_l = xla::Literal::vec1(cy);
-        let mi = xla::Literal::vec1(&[max_iter as i32]);
-        let out = self.k.run1(&[cx_l, cy_l, mi])?;
-        out.to_vec::<i32>()
-            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
-    }
-}
-
-/// Typed wrapper over the AOT matmul kernel:
-/// `(a[N,N] f32, b[N,N] f32) -> c[N,N] f32` with `N =` [`MATMUL_N`].
-pub struct MatmulKernel {
-    k: XlaKernel,
-}
-
-impl MatmulKernel {
-    pub const ARTIFACT: &'static str = "matmul.hlo.txt";
-
-    pub fn load() -> Result<Self> {
-        Ok(MatmulKernel {
-            k: XlaKernel::load_artifact(Self::ARTIFACT)?,
-        })
-    }
-
-    pub fn available() -> bool {
-        artifact_available(Self::ARTIFACT)
-    }
-
-    /// `c = a @ b` over row-major `N*N` buffers.
-    pub fn compute(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
-        let n = MATMUL_N;
-        anyhow::ensure!(a.len() == n * n && b.len() == n * n, "bad operand size");
-        let a_l = xla::Literal::vec1(a)
-            .reshape(&[n as i64, n as i64])
-            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
-        let b_l = xla::Literal::vec1(b)
-            .reshape(&[n as i64, n as i64])
-            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
-        let out = self.k.run1(&[a_l, b_l])?;
-        out.to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn artifact_path_falls_back_to_default_dir() {
+    fn artifact_path_falls_back_to_repo_root() {
         let p = artifact_path("definitely_missing_artifact.hlo.txt");
-        assert!(p.to_string_lossy().contains("artifacts"));
+        assert!(p.to_string_lossy().contains(ARTIFACT_DIR));
+        // Without an env override or an existing candidate dir, the
+        // path is anchored (absolute) rather than CWD-relative — the
+        // crate-vs-repo-root mismatch fix.
+        assert!(p.exists() || p.is_absolute(), "{}", p.display());
     }
 
-    // PJRT round-trip tests live in rust/tests/pjrt_runtime.rs and skip
-    // when artifacts are missing.
+    #[test]
+    fn repo_root_contains_this_crate() {
+        assert!(repo_root().join("rust").join("Cargo.toml").exists());
+    }
+
+    #[test]
+    fn missing_artifact_reported_unavailable() {
+        assert!(!artifact_available("definitely_missing_artifact.hlo.txt"));
+    }
 }

@@ -1,0 +1,177 @@
+//! PJRT runtime bridge (feature `pjrt`): load AOT-compiled XLA programs
+//! (HLO **text** produced by `python/compile/aot.py`) and execute them
+//! from farm workers.
+//!
+//! Python/JAX/Pallas run only at build time (`make artifacts`); this
+//! module is the entire request-path footprint of layers L1/L2.
+//!
+//! Thread model: the `xla` crate's `PjRtClient` is `Rc`-based and **not
+//! `Send`**, so each worker thread owns its own client + compiled
+//! executable, created once in `svc_init` (off the hot path). Compiled
+//! executables are a few MB; per-worker duplication is the documented
+//! trade-off (see DESIGN.md §Perf).
+
+use std::path::{Path, PathBuf};
+
+use super::kernel::{Kernel, KernelError};
+use super::{artifact_path, MANDEL_ARTIFACT, MANDEL_TILE, MATMUL_ARTIFACT, MATMUL_N};
+
+fn backend_err(what: &str, e: impl std::fmt::Debug) -> KernelError {
+    KernelError::Backend(format!("{what}: {e:?}"))
+}
+
+/// A compiled XLA program bound to a per-thread CPU PJRT client.
+///
+/// NOT `Send` — construct inside the thread that uses it (`svc_init`).
+pub struct XlaKernel {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+impl XlaKernel {
+    /// Load + compile an HLO text file on a fresh CPU client.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, KernelError> {
+        let path = path.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().map_err(|e| backend_err("PjRtClient::cpu", e))?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| backend_err(&format!("parse {}", path.display()), e))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| backend_err(&format!("compile {}", path.display()), e))?;
+        Ok(XlaKernel { exe, path })
+    }
+
+    /// Load a named artifact from the artifact directory.
+    pub fn load_artifact(name: &str) -> Result<Self, KernelError> {
+        let p = artifact_path(name);
+        if !p.exists() {
+            return Err(KernelError::MissingArtifact(p));
+        }
+        Self::load(&p)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Execute with literal inputs; the python side lowers with
+    /// `return_tuple=True`, so unwrap the 1-tuple.
+    pub fn run1(&self, args: &[xla::Literal]) -> Result<xla::Literal, KernelError> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| backend_err(&format!("execute {}", self.path.display()), e))?;
+        let lit = outs
+            .first()
+            .and_then(|replica| replica.first())
+            .ok_or_else(|| KernelError::Backend("no output buffer".into()))?
+            .to_literal_sync()
+            .map_err(|e| backend_err("to_literal", e))?;
+        lit.to_tuple1().map_err(|e| backend_err("to_tuple1", e))
+    }
+}
+
+/// Typed wrapper over the AOT Mandelbrot tile kernel:
+/// `(cx[TILE] f32, cy[TILE] f32, max_iter i32[1]) -> iters i32[TILE]`.
+pub struct MandelTileKernel {
+    k: XlaKernel,
+}
+
+impl MandelTileKernel {
+    pub const ARTIFACT: &'static str = MANDEL_ARTIFACT;
+
+    pub fn load() -> Result<Self, KernelError> {
+        Ok(MandelTileKernel {
+            k: XlaKernel::load_artifact(Self::ARTIFACT)?,
+        })
+    }
+
+    pub fn available() -> bool {
+        super::artifact_available(Self::ARTIFACT)
+    }
+
+    /// Escape-iteration counts for one tile of complex coordinates.
+    /// `cx`/`cy` must have length [`MANDEL_TILE`].
+    pub fn compute(&self, cx: &[f32], cy: &[f32], max_iter: u32) -> Result<Vec<i32>, KernelError> {
+        if cx.len() != MANDEL_TILE || cy.len() != MANDEL_TILE {
+            return Err(KernelError::BadShape(format!(
+                "tile must be {MANDEL_TILE} wide (got {}, {})",
+                cx.len(),
+                cy.len()
+            )));
+        }
+        let cx_l = xla::Literal::vec1(cx);
+        let cy_l = xla::Literal::vec1(cy);
+        let mi = xla::Literal::vec1(&[max_iter as i32]);
+        let out = self.k.run1(&[cx_l, cy_l, mi])?;
+        out.to_vec::<i32>().map_err(|e| backend_err("to_vec", e))
+    }
+}
+
+impl Kernel for MandelTileKernel {
+    fn artifact() -> &'static str {
+        Self::ARTIFACT
+    }
+    fn available() -> bool {
+        MandelTileKernel::available()
+    }
+    fn load() -> Result<Self, KernelError> {
+        MandelTileKernel::load()
+    }
+}
+
+/// Typed wrapper over the AOT matmul kernel:
+/// `(a[N,N] f32, b[N,N] f32) -> c[N,N] f32` with `N =` [`MATMUL_N`].
+pub struct MatmulKernel {
+    k: XlaKernel,
+}
+
+impl MatmulKernel {
+    pub const ARTIFACT: &'static str = MATMUL_ARTIFACT;
+
+    pub fn load() -> Result<Self, KernelError> {
+        Ok(MatmulKernel {
+            k: XlaKernel::load_artifact(Self::ARTIFACT)?,
+        })
+    }
+
+    pub fn available() -> bool {
+        super::artifact_available(Self::ARTIFACT)
+    }
+
+    /// `c = a @ b` over row-major `N*N` buffers.
+    pub fn compute(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>, KernelError> {
+        let n = MATMUL_N;
+        if a.len() != n * n || b.len() != n * n {
+            return Err(KernelError::BadShape(format!(
+                "operands must be {n}x{n} row-major (got {}, {})",
+                a.len(),
+                b.len()
+            )));
+        }
+        let a_l = xla::Literal::vec1(a)
+            .reshape(&[n as i64, n as i64])
+            .map_err(|e| backend_err("reshape", e))?;
+        let b_l = xla::Literal::vec1(b)
+            .reshape(&[n as i64, n as i64])
+            .map_err(|e| backend_err("reshape", e))?;
+        let out = self.k.run1(&[a_l, b_l])?;
+        out.to_vec::<f32>().map_err(|e| backend_err("to_vec", e))
+    }
+}
+
+impl Kernel for MatmulKernel {
+    fn artifact() -> &'static str {
+        Self::ARTIFACT
+    }
+    fn available() -> bool {
+        MatmulKernel::available()
+    }
+    fn load() -> Result<Self, KernelError> {
+        MatmulKernel::load()
+    }
+}
+
+// PJRT round-trip tests live in rust/tests/pjrt_runtime.rs and skip
+// when artifacts are missing.

@@ -71,6 +71,11 @@ impl CpuMap {
 /// Pin the calling thread to `cpu`. Best-effort: failures (e.g. cpuset
 /// restrictions in containers) are ignored, matching FastFlow's
 /// "mapping is a hint" behaviour.
+///
+/// Stable Rust has no affinity API, so the real `sched_setaffinity`
+/// call lives behind the `affinity` feature (pulling `libc`); the
+/// dependency-free default build compiles this to a no-op hint.
+#[cfg(feature = "affinity")]
 pub fn pin_current_thread(cpu: usize) {
     // SAFETY: CPU_SET/sched_setaffinity with a properly zeroed set.
     unsafe {
@@ -78,6 +83,12 @@ pub fn pin_current_thread(cpu: usize) {
         libc::CPU_SET(cpu % (8 * std::mem::size_of::<libc::cpu_set_t>()), &mut set);
         let _ = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
     }
+}
+
+/// No-op fallback (build without the `affinity` feature).
+#[cfg(not(feature = "affinity"))]
+pub fn pin_current_thread(cpu: usize) {
+    let _ = cpu;
 }
 
 /// Parse an explicit mapping string like `"0,2,4,6"`.

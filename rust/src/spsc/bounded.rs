@@ -14,7 +14,7 @@
 
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use super::Full;
@@ -43,9 +43,6 @@ struct Ring<T> {
     /// the other side can detect disconnection.
     producer_alive: CachePadded<AtomicBool>,
     consumer_alive: CachePadded<AtomicBool>,
-    /// Approximate occupancy, maintained only when tracing is enabled via
-    /// the `len` methods; not used by push/pop (would reintroduce sharing).
-    _pad: CachePadded<AtomicUsize>,
 }
 
 // SAFETY: Slot values are transferred with Release/Acquire handshakes on
@@ -77,7 +74,6 @@ pub fn spsc<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
         slots,
         producer_alive: CachePadded::new(AtomicBool::new(true)),
         consumer_alive: CachePadded::new(AtomicBool::new(true)),
-        _pad: CachePadded::new(AtomicUsize::new(0)),
     });
     (
         Producer {
@@ -152,8 +148,11 @@ impl<T: Send> Producer<T> {
         self.ring.consumer_alive.load(Ordering::Acquire)
     }
 
-    /// Approximate number of occupied slots (O(cap): counts flags).
-    /// For tracing/monitoring only — never used on the hot path.
+    /// Approximate number of occupied slots, computed on demand by
+    /// scanning the per-slot `full` flags (O(cap)) — a racy snapshot,
+    /// **not** a maintained counter. There is no occupancy state in the
+    /// ring: push/pop touch only their own slot, preserving the
+    /// fence-free FastForward invariant. Tracing/monitoring only.
     pub fn len_approx(&self) -> usize {
         self.ring
             .slots
@@ -218,7 +217,8 @@ impl<T: Send> Consumer<T> {
         self.ring.producer_alive.load(Ordering::Acquire)
     }
 
-    /// Approximate occupancy — see [`Producer::len_approx`].
+    /// Approximate occupancy: a racy O(cap) flag scan — see
+    /// [`Producer::len_approx`].
     pub fn len_approx(&self) -> usize {
         self.ring
             .slots

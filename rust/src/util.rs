@@ -259,24 +259,12 @@ pub fn fmt_duration(d: Duration) -> String {
     }
 }
 
-/// Number of logical CPUs visible to this process (affinity-mask aware).
+/// Number of logical CPUs visible to this process.
+/// `available_parallelism` consults the scheduler affinity mask (and
+/// cgroup quotas) on Linux, matching the old `sched_getaffinity` path
+/// without pulling `libc` into the dependency-free default build.
 pub fn num_cpus() -> usize {
-    // SAFETY: plain libc call with an out-param we own.
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        if libc::sched_getaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &mut set) == 0 {
-            let n = libc::CPU_COUNT(&set);
-            if n > 0 {
-                return n as usize;
-            }
-        }
-        let n = libc::sysconf(libc::_SC_NPROCESSORS_ONLN);
-        if n > 0 {
-            n as usize
-        } else {
-            1
-        }
-    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 #[cfg(test)]
