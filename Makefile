@@ -9,7 +9,7 @@ CARGO  ?= cargo
 PYTHON ?= python
 ARTIFACT_DIR ?= artifacts
 
-.PHONY: all build test test-fallback bench artifacts fmt clippy pytest clean
+.PHONY: all build test test-fallback bench bench-smoke artifacts fmt clippy pytest clean
 
 all: build
 
@@ -30,6 +30,15 @@ test-fallback:
 bench:
 	cd rust && $(CARGO) bench --bench fig4_mandelbrot -- --quick
 	cd rust && $(CARGO) bench --bench table2_nqueens -- --quick
+
+# CI smoke lane: compile every bench, then run a short multi-client
+# sweep that writes $(ARTIFACT_DIR)/BENCH_accel.json (the machine-
+# readable perf trajectory benchkit emits via FF_BENCH_JSON).
+bench-smoke:
+	cd rust && $(CARGO) bench --no-run
+	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
+		FF_BENCH_JSON=$(abspath $(ARTIFACT_DIR)) \
+		$(CARGO) bench --bench accel_multiclient -- --quick
 
 # AOT-compile the JAX/Pallas kernels to HLO text (build-time only;
 # Python never runs at request time).

@@ -10,9 +10,12 @@
 //! cargo run --release --example quickstart [n] [workers]
 //! ```
 
+use fastflow::accel::{AccelPool, PoolConfig};
 use fastflow::apps::matmul::{
     matmul_accelerated, matmul_pjrt_f32, matmul_ref_f32, matmul_sequential, Matrix, PJRT_N,
 };
+use fastflow::farm::FarmConfig;
+use fastflow::node::node_fn;
 use fastflow::runtime::MatmulKernel;
 use fastflow::util::{fmt_duration, num_cpus, timed, XorShift64};
 
@@ -41,6 +44,52 @@ fn main() {
     );
     assert_eq!(c_seq, c_acc, "results must be identical");
     println!("verified: accelerated result == sequential result");
+
+    // == Migration: Accel → AccelHandle (the multi-client service) ==
+    //
+    // The single-client session:
+    //     let mut acc = FarmAccel::run(cfg, |_| worker());   // 1:1 device
+    //     acc.offload(t)?; … acc.load_result();
+    // becomes, in two lines, a device shared by any number of threads:
+    //     let (mut pool, h) = AccelPool::run(PoolConfig::default().farm(cfg),
+    //                                        |_shard, _w| worker());
+    //     h.offload(t)?; … pool.load_result();   // h.clone() per extra client
+    println!("\n== AccelPool: the same device, shared by 4 client threads ==");
+    let (mut pool, root) = AccelPool::run(
+        PoolConfig::default()
+            .shards(2)
+            .batch(32)
+            .farm(FarmConfig::default().workers(workers.max(2) / 2)),
+        |_shard, _w| node_fn(|x: u64| x * x),
+    );
+    let per_client = 25_000u64;
+    let offloaders: Vec<_> = (0..4u64)
+        .map(|c| {
+            let mut h = root.clone(); // a clone is a new client lane
+            std::thread::spawn(move || {
+                for i in 0..per_client {
+                    h.offload(c * per_client + i).expect("offload");
+                }
+                h.finish().expect("finish");
+            })
+        })
+        .collect();
+    drop(root);
+    pool.offload_eos();
+    let mut sum = 0u64;
+    let mut count = 0u64;
+    while let Some(sq) = pool.load_result() {
+        sum = sum.wrapping_add(sq);
+        count += 1;
+    }
+    for j in offloaders {
+        j.join().expect("client thread");
+    }
+    pool.wait();
+    let expect: u64 = (0..4 * per_client).map(|i| i.wrapping_mul(i)).fold(0, u64::wrapping_add);
+    assert_eq!(count, 4 * per_client);
+    assert_eq!(sum, expect, "pooled result set must equal sequential");
+    println!("verified: 4 clients × {per_client} tasks through 2 shards == sequential sums");
 
     // Three-layer path: the same computation AOT-compiled from JAX/Pallas.
     if MatmulKernel::available() {

@@ -1,0 +1,142 @@
+//! Multi-client accelerator service bench: sweep offloading `clients` ×
+//! pool `shards` × coalescing `batch` on a fine-grained task and
+//! measure end-to-end throughput.
+//!
+//! This is the service-shaped companion of `granularity.rs`: that bench
+//! locates the grain where *one* offloader breaks even against inline
+//! execution; this one holds the grain fixed in the expensive region
+//! (per-item offload cost ≥ task cost) and shows the two levers the
+//! `AccelPool` adds — sharding for arbiter/emitter headroom, and
+//! batching (`Msg::Batch`: one queue slot, one synchronization per run)
+//! to amortize the per-item transfer cost that granularity.rs charges
+//! to every task. Expected shape: batch ≥ 32 beats per-item offload at
+//! every client count on the fine grain, and shards help once the
+//! client count saturates a single arbiter→emitter lane.
+//!
+//! `cargo bench --bench accel_multiclient [-- --quick]`
+//! `FF_BENCH_JSON=dir` emits `BENCH_accel.json` for the CI perf
+//! trajectory.
+
+use fastflow::accel::{AccelHandle, AccelPool, Placement, PoolConfig};
+use fastflow::benchkit::{measure, BenchOpts, Report};
+use fastflow::metrics::Table;
+use fastflow::node::node_fn;
+use fastflow::util::num_cpus;
+
+/// Busy-work calibrated in iterations (~1ns each; matches granularity.rs).
+#[inline]
+fn spin_work(iters: u64) -> u64 {
+    let mut acc = 0u64;
+    for i in 0..iters {
+        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+    }
+    std::hint::black_box(acc)
+}
+
+/// One full pooled run: `clients` threads offload `per_client` tasks
+/// each through cloned handles; the main thread drains the merged
+/// stream and verifies the count.
+fn run_pool(
+    clients: usize,
+    shards: usize,
+    batch: usize,
+    per_client: u64,
+    grain: u64,
+    workers: usize,
+) {
+    let (mut pool, root) = AccelPool::run(
+        PoolConfig::default()
+            .shards(shards)
+            .placement(Placement::LeastLoaded)
+            .batch(batch)
+            .workers_per_shard(workers),
+        |_s, _w| node_fn(move |i: u64| spin_work(grain + (i & 1))),
+    );
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            let mut h: AccelHandle<u64> = root.clone();
+            std::thread::spawn(move || {
+                for i in 0..per_client {
+                    h.offload(c as u64 * per_client + i).unwrap();
+                }
+                h.finish().unwrap();
+            })
+        })
+        .collect();
+    drop(root);
+    pool.offload_eos();
+    let mut n = 0u64;
+    while pool.load_result().is_some() {
+        n += 1;
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    pool.wait();
+    assert_eq!(n, clients as u64 * per_client, "lost or duplicated results");
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let per_client: u64 = if quick { 10_000 } else { 50_000 };
+    let grain: u64 = 100; // fine-grained: offload overhead ≥ task cost
+    let clients_sweep: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    let shards_sweep: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let batch_sweep: &[usize] = if quick { &[1, 32] } else { &[1, 32, 256] };
+
+    let mut table = Table::new(&[
+        "clients",
+        "shards",
+        "batch",
+        "ns/task",
+        "Mtask/s",
+        "speedup vs batch=1",
+    ]);
+    let mut notes = vec![];
+    for &clients in clients_sweep {
+        for &shards in shards_sweep {
+            let workers = ((num_cpus().max(2) - 1) / shards).max(1);
+            let mut base_ns = None;
+            for &batch in batch_sweep {
+                let total = (clients as u64 * per_client) as f64;
+                let (stats, _) =
+                    measure(opts, || run_pool(clients, shards, batch, per_client, grain, workers));
+                let ns_per_task = stats.mean * 1e9 / total;
+                let speedup = base_ns.map_or(1.0, |b: f64| b / ns_per_task);
+                if batch == 1 {
+                    base_ns = Some(ns_per_task);
+                }
+                table.row(vec![
+                    clients.to_string(),
+                    shards.to_string(),
+                    batch.to_string(),
+                    format!("{ns_per_task:.0}"),
+                    format!("{:.2}", 1e3 / ns_per_task),
+                    format!("{speedup:.2}"),
+                ]);
+                if batch >= 32 && speedup > 1.0 {
+                    notes.push(format!(
+                        "batched offload wins: clients={clients} shards={shards} \
+                         batch={batch} is {speedup:.2}x per-item offload"
+                    ));
+                }
+            }
+        }
+    }
+
+    let mut report = Report::new("accel", table);
+    report.note(format!(
+        "grain {grain} iters (~{grain}ns/task), {per_client} tasks/client, {} cpu(s)",
+        num_cpus()
+    ));
+    report.note(
+        "shape vs granularity.rs: same fine grain that loses per-item there should \
+         recover via batch>=32 here; shards add arbiter/emitter headroom at high \
+         client counts",
+    );
+    for n in notes {
+        report.note(n);
+    }
+    report.emit();
+}

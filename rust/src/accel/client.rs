@@ -1,0 +1,209 @@
+//! The multi-client **offload capability**: [`AccelHandle`].
+//!
+//! The paper's Fig. 3 protocol is 1:1 — one sequential caller per
+//! accelerator. To serve many concurrent offloaders without giving up
+//! the no-RMW discipline, every handle (and every `clone()` of it) owns
+//! a **private unbounded SPSC lane** into the pool's input-arbiter
+//! thread (the arbiter pattern of §2.3: serialization is provided by a
+//! thread, not by atomic read-modify-write operations). The hot path —
+//! `offload` — is a plain SPSC push; the only lock in the design guards
+//! the *cold* registration path (creating a handle), which happens once
+//! per client, not once per task.
+//!
+//! Handles optionally **auto-coalesce**: with a batch size `b > 1`,
+//! tasks are buffered locally and shipped as one
+//! [`crate::channel::Msg::Batch`] frame per `b` tasks — one queue slot
+//! and one synchronization per run, which is what amortizes the
+//! per-item offload overhead on fine-grained tasks (the granularity
+//! cliff of `benches/granularity.rs`).
+//!
+//! Lifecycle: a handle's lane is closed by [`AccelHandle::finish`] (or
+//! its `Drop`). The pool's cycle completes when the pool itself called
+//! `offload_eos` **and** every handle of the cycle has closed.
+//!
+//! **Backpressure:** lanes are unbounded, like the session accelerator's
+//! offload buffer (`FarmConfig::in_cap = usize::MAX` — the paper's
+//! Fig. 3 offload-all-then-pop pattern is deadlock-free only because
+//! the offloading side can never block on its own undrained results).
+//! `offload` therefore never blocks and never reports `WouldBlock`;
+//! memory grows with offered load minus drain rate. Clients that can
+//! outrun the pool for long stretches should throttle at the
+//! application level (e.g. cap `offloaded` minus observed results per
+//! burst) — a bounded-lane variant is future work.
+
+use std::sync::{Arc, Mutex};
+
+use super::AccelError;
+use crate::channel::{stream_unbounded, Receiver, Sender};
+
+/// A freshly-registered client lane, travelling from the registry to
+/// the input arbiter.
+pub(crate) struct NewLane<T: Send + 'static>(pub(crate) Receiver<T>);
+
+/// Shared registry of client lanes. Registration is the cold path: it
+/// takes a short mutex to serialize concurrent `clone()`s onto the
+/// single registration stream; offloads never touch it.
+pub(crate) struct LaneRegistry<T: Send + 'static> {
+    reg_tx: Mutex<Sender<NewLane<T>>>,
+}
+
+impl<T: Send + 'static> LaneRegistry<T> {
+    /// Create a registry; the returned receiver goes to the arbiter.
+    pub(crate) fn create() -> (Arc<Self>, Receiver<NewLane<T>>) {
+        let (reg_tx, reg_rx) = stream_unbounded::<NewLane<T>>();
+        (
+            Arc::new(LaneRegistry {
+                reg_tx: Mutex::new(reg_tx),
+            }),
+            reg_rx,
+        )
+    }
+
+    /// Open a fresh private lane and announce it to the arbiter. If the
+    /// arbiter is gone, the lane's receiving half is dropped and every
+    /// send on the returned sender reports disconnection.
+    pub(crate) fn open_lane(&self) -> Sender<T> {
+        let (lane_tx, lane_rx) = stream_unbounded::<T>();
+        let _ = self
+            .reg_tx
+            .lock()
+            .expect("lane registry lock")
+            .send(NewLane(lane_rx));
+        lane_tx
+    }
+}
+
+/// A cloneable offload capability into an [`super::AccelPool`].
+///
+/// Each clone owns a private SPSC lane; per-handle FIFO order is
+/// preserved end-to-end through the arbiter (and, with an ordered
+/// single-shard pool, all the way to the merged result stream).
+///
+/// Migrating from the single-client [`super::Accel`] is two lines:
+///
+/// ```text
+/// let mut acc = FarmAccel::run(cfg, factory);          // before
+/// let (mut pool, mut h) = AccelPool::run(pool_cfg, factory);  // after
+/// acc.offload(t)?  →  h.offload(t)?     (h.clone() for more clients)
+/// acc.load_result()  →  pool.load_result()
+/// ```
+pub struct AccelHandle<T: Send + 'static> {
+    lane: Sender<T>,
+    registry: Arc<LaneRegistry<T>>,
+    /// Local coalescing buffer (flushed at `batch` items).
+    buf: Vec<T>,
+    batch: usize,
+    /// Tasks offloaded through this handle (including still-buffered).
+    pub offloaded: u64,
+    closed: bool,
+}
+
+impl<T: Send + 'static> AccelHandle<T> {
+    pub(crate) fn new(registry: Arc<LaneRegistry<T>>, batch: usize) -> Self {
+        let lane = registry.open_lane();
+        AccelHandle {
+            lane,
+            registry,
+            buf: Vec::new(),
+            batch: batch.max(1),
+            offloaded: 0,
+            closed: false,
+        }
+    }
+
+    /// Auto-coalescing threshold: tasks per shipped batch frame. `1`
+    /// disables coalescing (every task is its own frame).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Change the coalescing threshold for subsequent offloads (flushes
+    /// the current buffer first so order is preserved).
+    pub fn set_batch(&mut self, batch: usize) -> Result<(), AccelError> {
+        self.flush()?;
+        self.batch = batch.max(1);
+        Ok(())
+    }
+
+    /// Offload one task. With coalescing enabled the task may sit in
+    /// the local buffer until `batch` tasks accumulate (or [`flush`] /
+    /// [`finish`] ships the partial run).
+    ///
+    /// [`flush`]: AccelHandle::flush
+    /// [`finish`]: AccelHandle::finish
+    #[inline]
+    pub fn offload(&mut self, task: T) -> Result<(), AccelError> {
+        if self.closed {
+            return Err(AccelError::Closed);
+        }
+        if self.batch <= 1 {
+            self.lane.send(task).map_err(|_| AccelError::Disconnected)?;
+        } else {
+            self.buf.push(task);
+            if self.buf.len() >= self.batch {
+                self.flush()?;
+            }
+        }
+        self.offloaded += 1;
+        Ok(())
+    }
+
+    /// Offload a pre-built run of tasks as one frame (after flushing any
+    /// buffered tasks, so per-handle FIFO order holds).
+    pub fn offload_batch(&mut self, tasks: Vec<T>) -> Result<(), AccelError> {
+        if self.closed {
+            return Err(AccelError::Closed);
+        }
+        self.flush()?;
+        let n = tasks.len() as u64;
+        self.lane
+            .send_batch(tasks)
+            .map_err(|_| AccelError::Disconnected)?;
+        self.offloaded += n;
+        Ok(())
+    }
+
+    /// Ship any buffered tasks now.
+    pub fn flush(&mut self) -> Result<(), AccelError> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        let run = std::mem::take(&mut self.buf);
+        self.lane
+            .send_batch(run)
+            .map_err(|_| AccelError::Disconnected)
+    }
+
+    /// Close this handle's lane: flushes buffered tasks and tells the
+    /// arbiter this client is done for the cycle. Dropping the handle
+    /// does the same (ignoring errors).
+    pub fn finish(mut self) -> Result<(), AccelError> {
+        self.close_lane()
+    }
+
+    fn close_lane(&mut self) -> Result<(), AccelError> {
+        if self.closed {
+            return Ok(());
+        }
+        let flushed = self.flush();
+        self.closed = true;
+        let eos = self.lane.send_eos().map_err(|_| AccelError::Disconnected);
+        flushed.and(eos)
+    }
+}
+
+impl<T: Send + 'static> Clone for AccelHandle<T> {
+    /// A clone is a **new client**: it gets its own private lane (and
+    /// empty buffer), registered with the arbiter through the cold-path
+    /// registry. Clone only live handles you still intend to close —
+    /// the pool's cycle waits for every lane to finish.
+    fn clone(&self) -> Self {
+        AccelHandle::new(self.registry.clone(), self.batch)
+    }
+}
+
+impl<T: Send + 'static> Drop for AccelHandle<T> {
+    fn drop(&mut self) {
+        let _ = self.close_lane();
+    }
+}

@@ -1,0 +1,66 @@
+//! **Self-offloading** (paper §3) as a *service*: software accelerators
+//! that scale from one sequential caller to many concurrent clients.
+//!
+//! The module is layered like the protocols it implements:
+//!
+//! * [`session`] — the paper's Fig. 3 single-client cycle protocol:
+//!   one sequential caller owns one [`Accel`], offloads, pops results,
+//!   freezes/thaws between bursts. Unchanged API, the 1:1 shape of the
+//!   original `ff_farm(true /*accel*/)`.
+//! * [`client`] — [`AccelHandle`], a cloneable offload capability.
+//!   Every clone owns a **private SPSC lane** into an input-arbiter
+//!   thread, so any number of client threads can offload concurrently
+//!   without locks or atomic RMW on the data path (the arbiter pattern
+//!   of §2.3). Handles optionally auto-coalesce tasks into
+//!   [`crate::channel::Msg::Batch`] frames to amortize per-item
+//!   synchronization on fine-grained tasks.
+//! * [`pool`] — [`AccelPool`], which shards offloaded work across N
+//!   independently-launched farm accelerators (round-robin or
+//!   least-loaded placement), merges their result streams, and runs the
+//!   pool-wide lifecycle (`offload_eos` / `wait_freezing` / `thaw` /
+//!   `wait`).
+//!
+//! ```text
+//!  client₀ ──spsc──┐
+//!  client₁ ──spsc──┤                 ┌─▶ shard 0 (farm accel) ──┐
+//!  client₂ ──spsc──┼──▶ arbiter ─────┤                          ├──▶ merged drain
+//!      ⋮           │   (placement)   └─▶ shard N-1 ─────────────┘
+//!  clientₘ ──spsc──┘
+//! ```
+
+pub mod client;
+pub mod pool;
+pub mod session;
+
+pub use client::AccelHandle;
+pub use pool::{AccelPool, Placement, PoolConfig};
+pub use session::{Accel, FarmAccel};
+
+/// Errors surfaced by the offload interface.
+#[derive(Debug, PartialEq, Eq)]
+pub enum AccelError {
+    /// The accelerator's threads are gone (e.g. a worker panicked) or
+    /// the skeleton was poisoned by a protocol violation (e.g. an
+    /// ordered farm's worker emitting ≠ 1 result per task).
+    Disconnected,
+    /// Input channel full (only from [`Accel::try_offload`]).
+    WouldBlock,
+    /// The current cycle's input stream was closed by
+    /// [`Accel::offload_eos`] (or the handle was finished);
+    /// [`Accel::thaw`] opens the next cycle.
+    Closed,
+}
+
+impl std::fmt::Display for AccelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AccelError::Disconnected => write!(f, "accelerator disconnected"),
+            AccelError::WouldBlock => write!(f, "accelerator input full"),
+            AccelError::Closed => {
+                write!(f, "accelerator input stream closed (offload after offload_eos)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AccelError {}

@@ -1,0 +1,819 @@
+//! The sharded **accelerator pool**: N independently-launched farm
+//! accelerators behind one input arbiter and one merged result drain.
+//!
+//! One skeleton accelerator saturates once its emitter (one thread)
+//! becomes the serialization point; the pool scales past that by
+//! running `shards` complete farms and placing offloaded work across
+//! them:
+//!
+//! * [`Placement::RoundRobin`] — stateless rotation, best for regular
+//!   tasks;
+//! * [`Placement::LeastLoaded`] — pick the shard with the fewest
+//!   in-flight tasks, computed from two *single-writer* counters
+//!   (arbiter-local `dispatched`, pool-side `completed`) so the data
+//!   path still performs no atomic read-modify-write.
+//!
+//! Clients offload through cloneable [`AccelHandle`]s (private SPSC
+//! lanes, see [`crate::accel::client`]); batched frames travel intact
+//! from the client lane through placement into the chosen shard, whose
+//! emitter unpacks them for scheduling.
+//!
+//! The pool-wide cycle protocol mirrors the single-client session:
+//! `offload_eos()` closes the cycle once every handle has finished,
+//! `wait_freezing()`/`thaw()` run freeze-mode bursts, `wait()` joins
+//! everything and returns the merged trace report.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::client::{AccelHandle, LaneRegistry, NewLane};
+use crate::channel::{stream_unbounded, Msg, Receiver, Sender};
+use crate::farm::{launch_farm, FarmConfig, FarmOutput};
+use crate::node::{Lifecycle, Node, RunMode};
+use crate::skeleton::SkeletonHandle;
+use crate::trace::{NodeTrace, TraceReport, TraceRow};
+use crate::util::Backoff;
+
+/// Append a shard's trace rows prefixed `s<i>/` — shared by
+/// [`AccelPool::trace_report`] and [`AccelPool::wait`].
+fn merge_shard_rows(rows: &mut Vec<TraceRow>, shard: usize, rep: TraceReport) {
+    rows.extend(rep.rows.into_iter().map(|mut r| {
+        r.name = format!("s{shard}/{}", r.name);
+        r
+    }));
+}
+
+/// Shard-placement policy applied by the pool's input arbiter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Stateless rotation over the shards.
+    #[default]
+    RoundRobin,
+    /// Send to the shard with the fewest in-flight tasks.
+    LeastLoaded,
+}
+
+/// Pool configuration: how many shards, how each shard's farm is built,
+/// how work is placed, and the default client coalescing threshold.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    pub shards: usize,
+    pub placement: Placement,
+    /// Default auto-coalescing threshold for handles created by this
+    /// pool (1 = ship every task as its own frame).
+    pub batch: usize,
+    /// Per-shard farm topology (workers, scheduling, ordering, queues).
+    pub farm: FarmConfig,
+}
+
+/// Default per-shard worker budget: the machine's single-farm default
+/// (`num_cpus - 1`) divided across the shards, so
+/// `PoolConfig::default()` does not oversubscribe the host.
+fn default_workers_per_shard(shards: usize) -> usize {
+    ((crate::util::num_cpus().max(2) - 1) / shards.max(1)).max(1)
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        let shards = 2;
+        PoolConfig {
+            shards,
+            placement: Placement::default(),
+            batch: 1,
+            farm: FarmConfig::default().workers(default_workers_per_shard(shards)),
+        }
+    }
+}
+
+impl PoolConfig {
+    /// Set the shard count. While the worker budget is still the
+    /// default it is rescaled across the new shard count — call
+    /// [`PoolConfig::workers_per_shard`] / [`PoolConfig::farm`] *after*
+    /// `shards` to override it.
+    pub fn shards(mut self, n: usize) -> Self {
+        let was_default = self.farm.workers == default_workers_per_shard(self.shards);
+        self.shards = n.max(1);
+        if was_default {
+            self.farm.workers = default_workers_per_shard(self.shards);
+        }
+        self
+    }
+    pub fn placement(mut self, p: Placement) -> Self {
+        self.placement = p;
+        self
+    }
+    pub fn batch(mut self, b: usize) -> Self {
+        self.batch = b.max(1);
+        self
+    }
+    pub fn farm(mut self, cfg: FarmConfig) -> Self {
+        self.farm = cfg;
+        self
+    }
+    /// Convenience: set each shard's worker count.
+    pub fn workers_per_shard(mut self, n: usize) -> Self {
+        self.farm.workers = n.max(1);
+        self
+    }
+}
+
+/// Pool → arbiter control frames.
+enum Ctl {
+    /// Close the current cycle once every client lane has finished.
+    CloseCycle,
+}
+
+/// How many frames the arbiter drains from one lane before moving on —
+/// bounds per-client latency while keeping hot lanes cheap to serve.
+const LANE_BURST: usize = 64;
+
+/// A sharded multi-client accelerator service. Create with
+/// [`AccelPool::run`] (one-shot) or [`AccelPool::run_then_freeze`]
+/// (burst reuse); offload through [`AccelHandle`]s; drain with
+/// [`AccelPool::load_result`].
+///
+/// Protocol: the cycle's result stream ends only after (a) the pool
+/// called [`AccelPool::offload_eos`] and (b) every handle created for
+/// the cycle was finished or dropped — close your clients before
+/// expecting the drain to terminate.
+pub struct AccelPool<I: Send + 'static, O: Send + 'static> {
+    mode: RunMode,
+    batch: usize,
+    registry: Arc<LaneRegistry<I>>,
+    ctl: Sender<Ctl>,
+    arbiter_lc: Arc<Lifecycle>,
+    arbiter_trace: Arc<NodeTrace>,
+    arbiter_join: Option<JoinHandle<()>>,
+    shards: Vec<SkeletonHandle>,
+    outputs: Vec<Receiver<O>>,
+    /// Per-shard results consumed by the pool — the single-writer
+    /// counterpart of the arbiter's `dispatched` counters (plain
+    /// load+store, no RMW; the arbiter only reads them).
+    completed: Arc<Vec<AtomicU64>>,
+    out_done: Vec<bool>,
+    done_count: usize,
+    cursor: usize,
+    /// Items of a partially-consumed batch result frame, tagged with
+    /// their shard for completion accounting.
+    pending: VecDeque<(usize, O)>,
+    eos_sent: bool,
+    /// Results popped in the current run cycle.
+    pub collected: u64,
+}
+
+impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
+    /// Launch a one-shot pool (threads exit after the cycle; join with
+    /// [`AccelPool::wait`]). The factory builds one worker node per
+    /// `(shard, worker)` slot. Returns the pool and a first client
+    /// handle — `clone()` it for more clients.
+    pub fn run<W, F>(cfg: PoolConfig, factory: F) -> (Self, AccelHandle<I>)
+    where
+        W: Node<In = I, Out = O> + 'static,
+        F: FnMut(usize, usize) -> W,
+    {
+        Self::launch(cfg, RunMode::RunToEnd, factory)
+    }
+
+    /// Launch a pool in freeze mode: after each pool-wide EOS the
+    /// threads park and can be [`AccelPool::thaw`]ed for the next burst.
+    pub fn run_then_freeze<W, F>(cfg: PoolConfig, factory: F) -> (Self, AccelHandle<I>)
+    where
+        W: Node<In = I, Out = O> + 'static,
+        F: FnMut(usize, usize) -> W,
+    {
+        Self::launch(cfg, RunMode::RunThenFreeze, factory)
+    }
+
+    fn launch<W, F>(cfg: PoolConfig, mode: RunMode, mut factory: F) -> (Self, AccelHandle<I>)
+    where
+        W: Node<In = I, Out = O> + 'static,
+        F: FnMut(usize, usize) -> W,
+    {
+        let nshards = cfg.shards.max(1);
+        let mut shard_inputs = Vec::with_capacity(nshards);
+        let mut outputs = Vec::with_capacity(nshards);
+        let mut shards = Vec::with_capacity(nshards);
+        for si in 0..nshards {
+            let skel =
+                launch_farm(cfg.farm.clone(), mode, |wi| factory(si, wi), FarmOutput::Stream);
+            let (input, output, handle) = skel.split();
+            shard_inputs.push(input);
+            outputs.push(output.expect("farm accelerators always stream"));
+            shards.push(handle);
+        }
+        let completed: Arc<Vec<AtomicU64>> =
+            Arc::new((0..nshards).map(|_| AtomicU64::new(0)).collect::<Vec<_>>());
+        let (registry, reg_rx) = LaneRegistry::create();
+        let (ctl_tx, ctl_rx) = stream_unbounded::<Ctl>();
+        let arbiter_lc = Lifecycle::new(1, mode);
+        let arbiter_trace = NodeTrace::new();
+        let arbiter_join = spawn_arbiter(
+            shard_inputs,
+            reg_rx,
+            ctl_rx,
+            cfg.placement,
+            completed.clone(),
+            arbiter_lc.clone(),
+            arbiter_trace.clone(),
+        );
+        let pool = AccelPool {
+            mode,
+            batch: cfg.batch.max(1),
+            registry,
+            ctl: ctl_tx,
+            arbiter_lc,
+            arbiter_trace,
+            arbiter_join: Some(arbiter_join),
+            shards,
+            outputs,
+            completed,
+            out_done: vec![false; nshards],
+            done_count: 0,
+            cursor: 0,
+            pending: VecDeque::new(),
+            eos_sent: false,
+            collected: 0,
+        };
+        let handle = pool.handle();
+        (pool, handle)
+    }
+
+    /// Open another client handle for the current cycle (equivalent to
+    /// cloning an existing one). Panics after [`AccelPool::offload_eos`]
+    /// — thaw into the next cycle first.
+    pub fn handle(&self) -> AccelHandle<I> {
+        assert!(
+            !self.eos_sent,
+            "AccelPool::handle() after offload_eos (thaw the next cycle first)"
+        );
+        AccelHandle::new(self.registry.clone(), self.batch)
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Pool-wide end-of-stream: after this, the cycle closes as soon as
+    /// every client handle has finished (or been dropped). Idempotent
+    /// within a cycle.
+    pub fn offload_eos(&mut self) {
+        if !self.eos_sent {
+            let _ = self.ctl.send(Ctl::CloseCycle);
+            self.eos_sent = true;
+        }
+    }
+
+    /// Single-writer completion counter bump (no RMW: the pool is the
+    /// only writer, the arbiter only reads).
+    fn note_completed(&self, shard: usize) {
+        let c = &self.completed[shard];
+        c.store(c.load(Ordering::Relaxed) + 1, Ordering::Relaxed);
+    }
+
+    /// Pop one merged result if immediately available, polling the
+    /// shards round-robin from the last productive one.
+    pub fn load_result_nb(&mut self) -> Option<O> {
+        if let Some((s, v)) = self.pending.pop_front() {
+            self.note_completed(s);
+            self.collected += 1;
+            return Some(v);
+        }
+        let n = self.outputs.len();
+        if self.done_count == n {
+            return None;
+        }
+        for k in 0..n {
+            let s = (self.cursor + k) % n;
+            if self.out_done[s] {
+                continue;
+            }
+            match self.outputs[s].try_recv() {
+                Some(Msg::Task(v)) => {
+                    self.cursor = s; // keep draining the hot shard
+                    self.note_completed(s);
+                    self.collected += 1;
+                    return Some(v);
+                }
+                Some(Msg::Batch(vs)) => {
+                    self.cursor = s;
+                    self.pending.extend(vs.into_iter().map(|v| (s, v)));
+                    if let Some((s2, v)) = self.pending.pop_front() {
+                        self.note_completed(s2);
+                        self.collected += 1;
+                        return Some(v);
+                    }
+                }
+                Some(Msg::Eos) => {
+                    self.out_done[s] = true;
+                    self.done_count += 1;
+                }
+                None => {
+                    // A shard whose collector died without EOS must not
+                    // wedge the merged drain.
+                    if !self.outputs[s].peer_alive() && !self.outputs[s].has_next() {
+                        self.out_done[s] = true;
+                        self.done_count += 1;
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Pop one merged result, blocking until one arrives or every
+    /// shard's cycle output reached EOS (`None`). Idle waits use the
+    /// shared [`Backoff`] escalation, so draining a quiet pool parks in
+    /// `yield` instead of burning the core.
+    pub fn load_result(&mut self) -> Option<O> {
+        let mut backoff = Backoff::new();
+        loop {
+            if let Some(v) = self.load_result_nb() {
+                return Some(v);
+            }
+            if self.done_count == self.outputs.len() {
+                return None;
+            }
+            backoff.snooze();
+        }
+    }
+
+    /// Block until every thread of every shard (and the arbiter) is
+    /// frozen. Requires `run_then_freeze`.
+    pub fn wait_freezing(&self) {
+        for sh in &self.shards {
+            sh.lifecycle.wait_freezing();
+        }
+        self.arbiter_lc.wait_freezing();
+    }
+
+    /// Wake the frozen pool for another burst; resets per-cycle state.
+    pub fn thaw(&mut self) {
+        assert_eq!(
+            self.mode,
+            RunMode::RunThenFreeze,
+            "thaw on a run-to-end pool"
+        );
+        debug_assert!(self.eos_sent, "thaw before offload_eos");
+        debug_assert!(
+            self.pending.is_empty() && self.done_count == self.outputs.len(),
+            "thaw before draining the merged output (results would bleed \
+             into the next cycle)"
+        );
+        self.arbiter_lc.thaw();
+        for sh in &self.shards {
+            sh.lifecycle.thaw();
+        }
+        self.eos_sent = false;
+        for d in self.out_done.iter_mut() {
+            *d = false;
+        }
+        self.done_count = 0;
+        self.collected = 0;
+    }
+
+    /// True once any shard raised its poison flag (see
+    /// [`crate::accel::Accel::poisoned`]).
+    pub fn poisoned(&self) -> bool {
+        self.shards.iter().any(|s| s.poisoned())
+    }
+
+    /// Total threads run by the pool (arbiter + all shard threads).
+    pub fn threads(&self) -> usize {
+        1 + self
+            .shards
+            .iter()
+            .map(|s| s.lifecycle.threads())
+            .sum::<usize>()
+    }
+
+    /// Merged trace snapshot: the arbiter plus every shard's nodes,
+    /// shard rows prefixed `s<i>/`.
+    pub fn trace_report(&self) -> TraceReport {
+        let mut rows = vec![self.arbiter_trace.snapshot("arbiter")];
+        for (i, sh) in self.shards.iter().enumerate() {
+            merge_shard_rows(&mut rows, i, sh.trace_report());
+        }
+        TraceReport { rows }
+    }
+
+    /// Final join: sends the pool-wide EOS, drains remaining results,
+    /// tells frozen threads to exit and joins them all. All client
+    /// handles must already be finished (or dropped) — the drain waits
+    /// for their lanes to close.
+    pub fn wait(mut self) -> TraceReport {
+        self.offload_eos();
+        while self.load_result().is_some() {}
+        self.arbiter_lc.request_exit();
+        for sh in &self.shards {
+            sh.lifecycle.request_exit();
+        }
+        if let Some(j) = self.arbiter_join.take() {
+            let _ = j.join();
+        }
+        let mut rows = vec![self.arbiter_trace.snapshot("arbiter")];
+        for (i, sh) in self.shards.drain(..).enumerate() {
+            merge_shard_rows(&mut rows, i, sh.join());
+        }
+        TraceReport { rows }
+    }
+}
+
+impl<I: Send + 'static, O: Send + 'static> Drop for AccelPool<I, O> {
+    /// A pool dropped without [`AccelPool::wait`] must not leak
+    /// OS-suspended threads: in freeze mode the shards would otherwise
+    /// park forever after the arbiter's pool-dropped EOS. Telling every
+    /// lifecycle to exit lets them run out instead (idempotent after
+    /// `wait()`, which already drained `shards`).
+    fn drop(&mut self) {
+        self.arbiter_lc.request_exit();
+        for sh in &self.shards {
+            sh.lifecycle.request_exit();
+        }
+    }
+}
+
+/// Choose a shard for the next task/batch.
+#[inline]
+fn pick_shard(
+    placement: Placement,
+    rr: &mut usize,
+    dispatched: &[u64],
+    completed: &[AtomicU64],
+) -> usize {
+    let n = dispatched.len();
+    match placement {
+        Placement::RoundRobin => {
+            let s = *rr;
+            *rr = (*rr + 1) % n;
+            s
+        }
+        Placement::LeastLoaded => {
+            let mut best = 0usize;
+            let mut best_load = u64::MAX;
+            for (i, d) in dispatched.iter().enumerate() {
+                // `completed` counts *results* while `dispatched` counts
+                // *tasks*; workers are allowed to emit 0 or ≥2 results
+                // per task (arrival-ordered farms), so the delta is a
+                // load heuristic, not an invariant — saturate it.
+                let load = d.saturating_sub(completed[i].load(Ordering::Relaxed));
+                if load < best_load {
+                    best_load = load;
+                    best = i;
+                }
+            }
+            best
+        }
+    }
+}
+
+/// The pool's input arbiter: merges every client lane into the shard
+/// inputs (SPMC over SPSC lanes, §2.3 — no locks, no RMW on the data
+/// path) and applies the placement policy per task or per batch frame
+/// (a batch stays whole so its single-synchronization economy survives
+/// into the shard, whose emitter unpacks it for scheduling).
+fn spawn_arbiter<I: Send + 'static>(
+    mut shard_inputs: Vec<Sender<I>>,
+    mut reg_rx: Receiver<NewLane<I>>,
+    mut ctl_rx: Receiver<Ctl>,
+    placement: Placement,
+    completed: Arc<Vec<AtomicU64>>,
+    lifecycle: Arc<Lifecycle>,
+    trace: Arc<NodeTrace>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("ff-pool-arbiter".into())
+        .spawn(move || {
+            let nshards = shard_inputs.len();
+            let mut rr = 0usize;
+            // Cumulative per-shard dispatch counts: arbiter-local plain
+            // integers (single writer — this thread), paired with the
+            // pool-side `completed` atomics for in-flight load.
+            let mut dispatched = vec![0u64; nshards];
+            let mut exit_after_cycle = false;
+            loop {
+                // ---- one run cycle -----------------------------------
+                let mut lanes: Vec<Receiver<I>> = Vec::new();
+                let mut lane_open: Vec<bool> = Vec::new();
+                let mut open = 0usize;
+                let mut closing = false;
+                let mut backoff = Backoff::new();
+                loop {
+                    let mut progressed = false;
+                    // 1. pool control
+                    while let Some(m) = ctl_rx.try_recv() {
+                        match m {
+                            Msg::Task(Ctl::CloseCycle) | Msg::Eos => {
+                                progressed = true;
+                                closing = true;
+                            }
+                            Msg::Batch(_) => unreachable!("control is never batched"),
+                        }
+                    }
+                    if !ctl_rx.peer_alive() && !ctl_rx.has_next() {
+                        // Pool dropped without wait(): finish the cycle
+                        // with what we have and exit.
+                        closing = true;
+                        exit_after_cycle = true;
+                    }
+                    // 2. client lanes: burst-drain each open lane
+                    for (li, lane) in lanes.iter_mut().enumerate() {
+                        if !lane_open[li] {
+                            continue;
+                        }
+                        for _ in 0..LANE_BURST {
+                            match lane.try_recv() {
+                                Some(Msg::Task(t)) => {
+                                    progressed = true;
+                                    let t0 = Instant::now();
+                                    let s =
+                                        pick_shard(placement, &mut rr, &dispatched, &completed);
+                                    let _ = shard_inputs[s].send(t);
+                                    dispatched[s] += 1;
+                                    trace.on_task(t0.elapsed().as_nanos() as u64);
+                                    trace.on_emit(1);
+                                }
+                                Some(Msg::Batch(ts)) => {
+                                    progressed = true;
+                                    let t0 = Instant::now();
+                                    let k = ts.len() as u64;
+                                    let s =
+                                        pick_shard(placement, &mut rr, &dispatched, &completed);
+                                    let _ = shard_inputs[s].send_batch(ts);
+                                    dispatched[s] += k;
+                                    trace.on_tasks(k, t0.elapsed().as_nanos() as u64);
+                                    trace.on_emit(k);
+                                }
+                                Some(Msg::Eos) => {
+                                    progressed = true;
+                                    lane_open[li] = false;
+                                    open -= 1;
+                                    break;
+                                }
+                                None => {
+                                    // A client thread that died without
+                                    // closing (e.g. mem::forget) must not
+                                    // wedge the cycle.
+                                    if !lane.peer_alive() && !lane.has_next() {
+                                        progressed = true;
+                                        lane_open[li] = false;
+                                        open -= 1;
+                                    }
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    // 3. registrations — polled AFTER the lanes: popping
+                    // a lane's Eos happens-after that client enqueued any
+                    // clone registration, so a close can never outrun the
+                    // clone it spawned.
+                    while let Some(m) = reg_rx.try_recv() {
+                        match m {
+                            Msg::Task(NewLane(rx)) => {
+                                progressed = true;
+                                lanes.push(rx);
+                                lane_open.push(true);
+                                open += 1;
+                            }
+                            Msg::Batch(ls) => {
+                                progressed = true;
+                                for NewLane(rx) in ls {
+                                    lanes.push(rx);
+                                    lane_open.push(true);
+                                    open += 1;
+                                }
+                            }
+                            Msg::Eos => {}
+                        }
+                    }
+                    // 4. cycle completion: pool closed + all lanes done.
+                    if closing && open == 0 {
+                        break;
+                    }
+                    if progressed {
+                        backoff.reset();
+                    } else {
+                        backoff.snooze();
+                    }
+                }
+                // Propagate EOS into every shard.
+                for s in shard_inputs.iter_mut() {
+                    let _ = s.send_eos();
+                }
+                trace.on_cycle();
+                if exit_after_cycle || !lifecycle.cycle_end() {
+                    break;
+                }
+            }
+        })
+        .expect("spawn pool arbiter")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::farm::{CollectorOrdering, SchedPolicy};
+    use crate::node::node_fn;
+
+    fn square_pool(shards: usize, batch: usize) -> (AccelPool<u64, u64>, AccelHandle<u64>) {
+        AccelPool::run(
+            PoolConfig::default()
+                .shards(shards)
+                .batch(batch)
+                .workers_per_shard(2),
+            |_s, _w| node_fn(|x: u64| x * x),
+        )
+    }
+
+    #[test]
+    fn single_client_pool_roundtrip() {
+        let (mut pool, mut h) = square_pool(2, 1);
+        for i in 0..500u64 {
+            h.offload(i).unwrap();
+        }
+        h.finish().unwrap();
+        pool.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = pool.load_result() {
+            got.push(v);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..500u64).map(|i| i * i).collect::<Vec<_>>());
+        assert_eq!(pool.collected, 500);
+        let report = pool.wait();
+        let arb = report.rows.iter().find(|r| r.name == "arbiter").unwrap();
+        assert_eq!(arb.tasks, 500);
+    }
+
+    #[test]
+    fn four_clients_two_shards_exact_result_set() {
+        // The acceptance shape: ≥4 handle clones on their own threads,
+        // a 2-shard pool, exactly the sequential result set out.
+        let (mut pool, root) = square_pool(2, 8);
+        let clients = 4u64;
+        let per_client = 1_000u64;
+        let joins: Vec<_> = (0..clients)
+            .map(|c| {
+                let mut h = root.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_client {
+                        h.offload(c * per_client + i).unwrap();
+                    }
+                    h.finish().unwrap();
+                })
+            })
+            .collect();
+        drop(root); // closes the root lane
+        pool.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = pool.load_result() {
+            got.push(v);
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        got.sort_unstable();
+        let mut expect: Vec<u64> = (0..clients * per_client).map(|i| i * i).collect();
+        expect.sort_unstable();
+        assert_eq!(got, expect);
+        pool.wait();
+    }
+
+    #[test]
+    fn least_loaded_placement_conserves_tasks() {
+        let (mut pool, mut h) = AccelPool::run(
+            PoolConfig::default()
+                .shards(3)
+                .placement(Placement::LeastLoaded)
+                .workers_per_shard(1),
+            |_s, _w| node_fn(|x: u64| x + 1),
+        );
+        for i in 0..2_000u64 {
+            h.offload(i).unwrap();
+        }
+        h.finish().unwrap();
+        pool.offload_eos();
+        let mut count = 0u64;
+        let mut sum = 0u64;
+        while let Some(v) = pool.load_result() {
+            count += 1;
+            sum += v;
+        }
+        assert_eq!(count, 2_000);
+        assert_eq!(sum, (1..=2_000u64).sum::<u64>());
+        // Every shard should have been exercised.
+        let report = pool.wait();
+        for s in 0..3 {
+            let emitter = report
+                .rows
+                .iter()
+                .find(|r| r.name == format!("s{s}/emitter"))
+                .unwrap();
+            assert!(emitter.tasks > 0, "shard {s} never used");
+        }
+    }
+
+    #[test]
+    fn pool_freeze_thaw_bursts() {
+        let (mut pool, first) = AccelPool::run_then_freeze(
+            PoolConfig::default().shards(2).workers_per_shard(2),
+            |_s, _w| node_fn(|x: u64| x + 1),
+        );
+        let mut next_handle = Some(first);
+        for burst in 0..4u64 {
+            let mut h = next_handle.take().unwrap();
+            for i in 0..300u64 {
+                h.offload(burst * 1_000 + i).unwrap();
+            }
+            h.finish().unwrap();
+            pool.offload_eos();
+            let mut sum = 0u64;
+            let mut count = 0u64;
+            while let Some(v) = pool.load_result() {
+                sum += v;
+                count += 1;
+            }
+            assert_eq!(count, 300, "burst {burst}");
+            assert_eq!(sum, (0..300u64).map(|i| burst * 1_000 + i + 1).sum::<u64>());
+            pool.wait_freezing();
+            pool.thaw();
+            next_handle = Some(pool.handle());
+        }
+        // Close the final (unused) cycle and join.
+        next_handle.take().unwrap().finish().unwrap();
+        pool.wait();
+    }
+
+    #[test]
+    fn batched_offload_matches_per_item_per_shard_order() {
+        // One shard + ordered collectors: per-client FIFO survives
+        // coalescing end-to-end.
+        let (mut pool, mut h) = AccelPool::run(
+            PoolConfig::default()
+                .shards(1)
+                .batch(16)
+                .farm(FarmConfig::default().workers(4).ordered()),
+            |_s, _w| node_fn(|x: u64| x),
+        );
+        for i in 0..1_000u64 {
+            h.offload(i).unwrap();
+        }
+        h.finish().unwrap();
+        pool.offload_eos();
+        let mut expect = 0u64;
+        while let Some(v) = pool.load_result() {
+            assert_eq!(v, expect);
+            expect += 1;
+        }
+        assert_eq!(expect, 1_000);
+        assert_eq!(
+            pool.trace_report()
+                .rows
+                .iter()
+                .find(|r| r.name == "s0/emitter")
+                .unwrap()
+                .tasks,
+            1_000
+        );
+        pool.wait();
+    }
+
+    #[test]
+    fn handle_after_eos_panics() {
+        let (mut pool, h) = square_pool(1, 1);
+        h.finish().unwrap();
+        pool.offload_eos();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.handle()));
+        assert!(r.is_err(), "handle() after offload_eos must panic");
+        while pool.load_result().is_some() {}
+        pool.wait();
+    }
+
+    #[test]
+    fn empty_cycle_terminates() {
+        let (mut pool, h) = square_pool(2, 4);
+        drop(h);
+        pool.offload_eos();
+        assert!(pool.load_result().is_none());
+        pool.wait();
+    }
+
+    #[test]
+    fn ordering_config_passthrough() {
+        // Smoke that PoolConfig::farm carries collector ordering.
+        let cfg = PoolConfig::default()
+            .shards(4)
+            .placement(Placement::LeastLoaded)
+            .batch(32)
+            .farm(FarmConfig::default().workers(2).ordered());
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.placement, Placement::LeastLoaded);
+        assert_eq!(cfg.batch, 32);
+        assert_eq!(cfg.farm.ordering, CollectorOrdering::Ordered);
+        assert_eq!(cfg.farm.sched, SchedPolicy::RoundRobin);
+    }
+}

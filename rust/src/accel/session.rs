@@ -1,7 +1,5 @@
-//! **Self-offloading** (paper §3): wrap a skeleton as a *software
-//! accelerator* — a device with one streaming input channel and one
-//! streaming output channel, dynamically created (and destroyed) from
-//! sequential code, running on the spare cores of the same CPU.
+//! The single-client **session** protocol (paper §3, Fig. 3): one
+//! sequential caller owns one accelerator and drives its cycles.
 //!
 //! The API mirrors the paper's Fig. 3 protocol:
 //!
@@ -31,40 +29,20 @@
 //! let report = acc.wait(); // final join
 //! # let _ = (sum, report);
 //! ```
+//!
+//! For many concurrent offloaders, see [`crate::accel::client`] and
+//! [`crate::accel::pool`] — the session stays the right tool when one
+//! thread drives the device, and is what each pool shard runs inside.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
+use super::AccelError;
 use crate::channel::Msg;
 use crate::farm::{launch_farm, FarmConfig, FarmOutput};
 use crate::node::{LifecycleState, Node, RunMode};
 use crate::skeleton::LaunchedSkeleton;
 use crate::trace::TraceReport;
-
-/// Errors surfaced by the offload interface.
-#[derive(Debug, PartialEq, Eq)]
-pub enum AccelError {
-    /// The accelerator's threads are gone (e.g. a worker panicked).
-    Disconnected,
-    /// Input channel full (only from [`Accel::try_offload`]).
-    WouldBlock,
-    /// The current cycle's input stream was closed by
-    /// [`Accel::offload_eos`]; [`Accel::thaw`] opens the next cycle.
-    Closed,
-}
-
-impl std::fmt::Display for AccelError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            AccelError::Disconnected => write!(f, "accelerator disconnected"),
-            AccelError::WouldBlock => write!(f, "accelerator input full"),
-            AccelError::Closed => {
-                write!(f, "accelerator input stream closed (offload after offload_eos)")
-            }
-        }
-    }
-}
-
-impl std::error::Error for AccelError {}
 
 /// A software accelerator wrapping any launched skeleton.
 ///
@@ -80,6 +58,8 @@ pub struct Accel<I: Send + 'static, O: Send + 'static> {
     eos_sent: bool,
     /// The output stream of the current cycle reached EOS.
     out_drained: bool,
+    /// Items of a partially-consumed `Msg::Batch` result frame.
+    pending: VecDeque<O>,
 }
 
 /// Farm-shaped accelerator (the paper's main configuration).
@@ -94,6 +74,7 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
             collected: 0,
             eos_sent: false,
             out_drained: false,
+            pending: VecDeque::new(),
         }
     }
 
@@ -152,11 +133,15 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
     /// Errors with [`AccelError::Closed`] after [`Accel::offload_eos`]
     /// in the same cycle — in every build, not just with debug
     /// assertions (a release build must not silently push onto a
-    /// closed stream).
+    /// closed stream) — and with [`AccelError::Disconnected`] once the
+    /// skeleton is poisoned (see [`Accel::poisoned`]).
     #[inline]
     pub fn offload(&mut self, task: I) -> Result<(), AccelError> {
         if self.eos_sent {
             return Err(AccelError::Closed);
+        }
+        if self.skel.poisoned() {
+            return Err(AccelError::Disconnected);
         }
         self.skel
             .input
@@ -166,12 +151,37 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
         Ok(())
     }
 
+    /// Offload a whole run of tasks as **one** stream frame (one queue
+    /// slot, one synchronization). The farm emitter unpacks the batch,
+    /// so scheduling policies and ordered collection still operate on
+    /// individual tasks — batching only changes the transfer cost, not
+    /// the semantics. This is what makes fine-grained offloading pay
+    /// (cf. `benches/granularity.rs` and `benches/accel_multiclient.rs`).
+    pub fn offload_batch(&mut self, tasks: Vec<I>) -> Result<(), AccelError> {
+        if self.eos_sent {
+            return Err(AccelError::Closed);
+        }
+        if self.skel.poisoned() {
+            return Err(AccelError::Disconnected);
+        }
+        let n = tasks.len() as u64;
+        self.skel
+            .input
+            .send_batch(tasks)
+            .map_err(|_| AccelError::Disconnected)?;
+        self.offloaded += n;
+        Ok(())
+    }
+
     /// Non-blocking offload. Fails with the same [`AccelError::Closed`]
     /// as [`Accel::offload`] once the cycle's EOS has been sent.
     #[inline]
     pub fn try_offload(&mut self, task: I) -> Result<(), (I, AccelError)> {
         if self.eos_sent {
             return Err((task, AccelError::Closed));
+        }
+        if self.skel.poisoned() {
+            return Err((task, AccelError::Disconnected));
         }
         if !self.skel.input.peer_alive() {
             return Err((task, AccelError::Disconnected));
@@ -197,19 +207,30 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
     /// Pop one result, blocking. `None` when the current cycle's output
     /// stream is exhausted (EOS observed). On collector-less
     /// accelerators, returns `None` immediately.
+    ///
+    /// Blocking waits ride the receiver's shared [`crate::util::Backoff`]
+    /// escalation (spin → yield), so a caller draining an idle
+    /// accelerator does not burn its core.
     pub fn load_result(&mut self) -> Option<O> {
-        if self.out_drained {
-            return None;
-        }
-        let rx = self.skel.output.as_mut()?;
-        match rx.recv() {
-            Msg::Task(v) => {
+        loop {
+            if let Some(v) = self.pending.pop_front() {
                 self.collected += 1;
-                Some(v)
+                return Some(v);
             }
-            Msg::Eos => {
-                self.out_drained = true;
-                None
+            if self.out_drained {
+                return None;
+            }
+            let rx = self.skel.output.as_mut()?;
+            match rx.recv() {
+                Msg::Task(v) => {
+                    self.collected += 1;
+                    return Some(v);
+                }
+                Msg::Batch(vs) => self.pending.extend(vs),
+                Msg::Eos => {
+                    self.out_drained = true;
+                    return None;
+                }
             }
         }
     }
@@ -217,18 +238,25 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
     /// Pop one result if immediately available (the paper's non-blocking
     /// `load_result_nb`).
     pub fn load_result_nb(&mut self) -> Option<O> {
-        if self.out_drained {
-            return None;
-        }
-        let rx = self.skel.output.as_mut()?;
-        match rx.try_recv()? {
-            Msg::Task(v) => {
+        loop {
+            if let Some(v) = self.pending.pop_front() {
                 self.collected += 1;
-                Some(v)
+                return Some(v);
             }
-            Msg::Eos => {
-                self.out_drained = true;
-                None
+            if self.out_drained {
+                return None;
+            }
+            let rx = self.skel.output.as_mut()?;
+            match rx.try_recv()? {
+                Msg::Task(v) => {
+                    self.collected += 1;
+                    return Some(v);
+                }
+                Msg::Batch(vs) => self.pending.extend(vs),
+                Msg::Eos => {
+                    self.out_drained = true;
+                    return None;
+                }
             }
         }
     }
@@ -250,7 +278,7 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
         // The previous cycle's streams must be closed & drained.
         debug_assert!(self.eos_sent, "thaw before offload_eos");
         debug_assert!(
-            self.out_drained || self.skel.output.is_none(),
+            self.pending.is_empty() && (self.out_drained || self.skel.output.is_none()),
             "thaw before draining the output stream to None (results would \
              bleed into the next cycle)"
         );
@@ -270,6 +298,15 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
         while self.load_result().is_some() {}
         self.skel.lifecycle.request_exit();
         self.skel.join()
+    }
+
+    /// True once the skeleton raised its poison flag (a worker violated
+    /// the ordered farm's one-emission contract). The stream still
+    /// drains; [`Accel::offload`]/[`Accel::try_offload`] surface
+    /// [`AccelError::Disconnected`]. Check this on the load side after
+    /// a short drain to distinguish "complete" from "poisoned".
+    pub fn poisoned(&self) -> bool {
+        self.skel.poisoned()
     }
 
     /// Observed lifecycle state.
@@ -325,6 +362,7 @@ mod tests {
         acc.offload(1).unwrap();
         acc.offload_eos();
         assert_eq!(acc.offload(2), Err(AccelError::Closed));
+        assert_eq!(acc.offload_batch(vec![4, 5]), Err(AccelError::Closed));
         match acc.try_offload(3) {
             Err((task, AccelError::Closed)) => assert_eq!(task, 3),
             other => panic!("expected Closed, got {other:?}"),
@@ -462,6 +500,73 @@ mod tests {
         acc.offload_eos();
         acc.wait_freezing();
         assert_eq!(acc.state(), LifecycleState::Frozen);
+        acc.wait();
+    }
+
+    #[test]
+    fn offload_batch_equals_per_item() {
+        let mut acc: FarmAccel<u64, u64> = FarmAccel::run(
+            FarmConfig::default().workers(3).ordered(),
+            |_| node_fn(|x: u64| x + 7),
+        );
+        acc.offload(0).unwrap();
+        acc.offload_batch((1..100).collect()).unwrap();
+        acc.offload_batch(vec![]).unwrap(); // no-op
+        acc.offload(100).unwrap();
+        assert_eq!(acc.offloaded, 101);
+        acc.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = acc.load_result() {
+            got.push(v);
+        }
+        assert_eq!(got, (7..=107).collect::<Vec<_>>());
+        assert_eq!(acc.collected, 101);
+        acc.wait();
+    }
+
+    #[test]
+    fn poisoned_ordered_accel_surfaces_disconnected() {
+        use crate::node::{Node, Outbox, Svc};
+        // A worker that violates the ordered farm's one-emission
+        // contract on task 42: the farm poisons instead of panicking,
+        // the offload side reports Disconnected, and the drain
+        // terminates (regression for the old panic-and-maybe-hang).
+        struct Rogue;
+        impl Node for Rogue {
+            type In = u64;
+            type Out = u64;
+            fn svc(&mut self, t: u64, out: &mut Outbox<'_, u64>) -> Svc {
+                out.send(t);
+                if t == 42 {
+                    out.send(t); // contract violation
+                }
+                Svc::GoOn
+            }
+        }
+        let mut acc: FarmAccel<u64, u64> =
+            FarmAccel::run(FarmConfig::default().workers(1).ordered(), |_| Rogue);
+        let mut offload_err = None;
+        for i in 0..10_000u64 {
+            if let Err(e) = acc.offload(i) {
+                offload_err = Some(e);
+                break;
+            }
+        }
+        acc.offload_eos();
+        let mut drained = 0u64;
+        while acc.load_result().is_some() {
+            drained += 1;
+        }
+        assert!(acc.poisoned(), "load side must see the poison flag");
+        // The offload side either saw Disconnected live or the caller
+        // finished first; both are valid, but the flag always is set and
+        // the drain always terminates with at least the pre-violation
+        // results.
+        if let Some(e) = offload_err {
+            assert_eq!(e, AccelError::Disconnected);
+        }
+        assert!(drained >= 43, "results up to the violation must arrive");
+        assert_eq!(acc.try_offload(7), Err((7, AccelError::Closed)));
         acc.wait();
     }
 }

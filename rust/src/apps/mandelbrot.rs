@@ -23,9 +23,9 @@
 
 use std::sync::Arc;
 
-use crate::accel::FarmAccel;
+use crate::accel::{AccelHandle, AccelPool, FarmAccel, Placement, PoolConfig};
 use crate::farm::{FarmConfig, SchedPolicy};
-use crate::node::{Node, Outbox, Svc};
+use crate::node::{node_fn, Node, Outbox, Svc};
 use crate::runtime::{MandelTileKernel, MANDEL_TILE};
 use crate::trace::TraceReport;
 use crate::util::{AbortFlag, SendCell};
@@ -394,6 +394,79 @@ impl AcceleratedRenderer {
     }
 }
 
+/// Render one frame with `clients` offloading threads sharing one
+/// sharded accelerator pool — the service shape the single-owner
+/// `AcceleratedRenderer` cannot express (many sequential callers, one
+/// device). Rows are dealt round-robin over the client threads; each
+/// client offloads through its own cloned [`AccelHandle`], coalescing
+/// `batch` rows per stream frame, while the calling thread drains the
+/// merged result stream into the frame. Scalar engine only; the output
+/// is bit-identical to [`render_sequential`].
+pub fn render_multiclient(
+    params: RenderParams,
+    clients: usize,
+    shards: usize,
+    workers_per_shard: usize,
+    batch: usize,
+    max_iter: u32,
+) -> (Frame, TraceReport) {
+    let clients = clients.max(1);
+    let params = Arc::new(params);
+    let cfg = PoolConfig::default()
+        .shards(shards)
+        .placement(Placement::LeastLoaded)
+        .batch(batch)
+        .farm(
+            FarmConfig::default()
+                .workers(workers_per_shard)
+                // rows have very different costs: on-demand scheduling
+                .sched(SchedPolicy::OnDemand),
+        );
+    let p2 = params.clone();
+    let (mut pool, root) = AccelPool::run(cfg, move |_shard, _worker| {
+        let p = p2.clone();
+        node_fn(move |t: RowTask| {
+            (
+                t.y,
+                render_row_scalar(&p.region, p.width, p.height, t.y, t.max_iter),
+            )
+        })
+    });
+    let p = *params;
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            let mut h: AccelHandle<RowTask> = root.clone();
+            std::thread::spawn(move || {
+                let mut y = c;
+                while y < p.height {
+                    h.offload(RowTask { y, max_iter }).expect("offload row");
+                    y += clients;
+                }
+                h.finish().expect("close client lane");
+            })
+        })
+        .collect();
+    drop(root); // the root handle was never offloaded through
+    pool.offload_eos();
+    let mut iters = vec![0u32; p.width * p.height];
+    while let Some((y, row)) = pool.load_result() {
+        iters[y * p.width..y * p.width + p.width].copy_from_slice(&row);
+    }
+    for j in joins {
+        j.join().expect("client thread");
+    }
+    let report = pool.wait();
+    (
+        Frame {
+            width: p.width,
+            height: p.height,
+            iters,
+            max_iter,
+        },
+        report,
+    )
+}
+
 /// Convenience: full progressive render (all `passes`), like the QT app
 /// recomputing after a zoom. Returns per-pass frames.
 pub fn render_progressive(
@@ -481,6 +554,33 @@ mod tests {
             assert_eq!(f.iters.len(), W * H);
         }
         r.shutdown();
+    }
+
+    #[test]
+    fn multiclient_pool_matches_sequential() {
+        let region = Region::presets()[1]; // irregular rows
+        let seq = render_sequential(&region, W, H, 128, None).unwrap();
+        for (clients, shards, batch) in [(1, 1, 1), (4, 2, 1), (4, 2, 8), (3, 2, 64)] {
+            let (frame, report) = render_multiclient(
+                RenderParams {
+                    region,
+                    width: W,
+                    height: H,
+                },
+                clients,
+                shards,
+                2,
+                batch,
+                128,
+            );
+            assert_eq!(
+                frame.iters, seq.iters,
+                "clients={clients} shards={shards} batch={batch}"
+            );
+            // Every row was dispatched exactly once through the arbiter.
+            let arb = report.rows.iter().find(|r| r.name == "arbiter").unwrap();
+            assert_eq!(arb.tasks, H as u64);
+        }
     }
 
     #[test]

@@ -80,8 +80,27 @@ pub fn measure_ns_per_op(opts: BenchOpts, iters: u64, mut f: impl FnMut(u64)) ->
     Stats::from_samples(&samples)
 }
 
+/// Escape a string for embedding in a JSON document.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Bench report: named table + optional CSV dump controlled by
-/// `FF_BENCH_CSV=dir`.
+/// `FF_BENCH_CSV=dir` and JSON dump controlled by `FF_BENCH_JSON=dir`
+/// (written as `BENCH_<name>.json` — the machine-readable perf
+/// trajectory CI uploads as an artifact).
 pub struct Report {
     pub name: &'static str,
     pub table: Table,
@@ -101,7 +120,41 @@ impl Report {
         self.notes.push(s.into());
     }
 
-    /// Print to stdout and optionally write CSV.
+    /// Serialize as a small JSON document (hand-rolled — the vendored
+    /// registry has no serde): `{"name", "columns", "rows", "notes"}`,
+    /// rows as arrays of strings exactly as rendered in the table.
+    pub fn to_json(&self) -> String {
+        let cols: Vec<String> = self
+            .table
+            .header
+            .iter()
+            .map(|c| format!("\"{}\"", json_escape(c)))
+            .collect();
+        let rows: Vec<String> = self
+            .table
+            .rows
+            .iter()
+            .map(|r| {
+                let cells: Vec<String> =
+                    r.iter().map(|c| format!("\"{}\"", json_escape(c))).collect();
+                format!("[{}]", cells.join(","))
+            })
+            .collect();
+        let notes: Vec<String> = self
+            .notes
+            .iter()
+            .map(|n| format!("\"{}\"", json_escape(n)))
+            .collect();
+        format!(
+            "{{\"name\":\"{}\",\"columns\":[{}],\"rows\":[{}],\"notes\":[{}]}}\n",
+            json_escape(self.name),
+            cols.join(","),
+            rows.join(","),
+            notes.join(",")
+        )
+    }
+
+    /// Print to stdout and optionally write CSV / JSON artifacts.
     pub fn emit(&self) {
         println!("\n## {}\n", self.name);
         print!("{}", self.table.render());
@@ -113,6 +166,13 @@ impl Report {
             if std::fs::create_dir_all(&dir).is_ok() {
                 let _ = std::fs::write(&path, self.table.to_csv());
                 println!("csv: {path}");
+            }
+        }
+        if let Ok(dir) = std::env::var("FF_BENCH_JSON") {
+            let path = format!("{dir}/BENCH_{}.json", self.name);
+            if std::fs::create_dir_all(&dir).is_ok() {
+                let _ = std::fs::write(&path, self.to_json());
+                println!("json: {path}");
             }
         }
     }
@@ -165,5 +225,27 @@ mod tests {
         let mut r = Report::new("unit_test_report", t);
         r.note("hello");
         r.emit(); // prints; just ensure no panic
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let mut t = Table::new(&["clients", "ns/task"]);
+        t.row(vec!["4".into(), "123".into()]);
+        let mut r = Report::new("accel", t);
+        r.note("a \"quoted\" note\nwith newline");
+        let j = r.to_json();
+        assert!(j.starts_with("{\"name\":\"accel\""));
+        assert!(j.contains("\"columns\":[\"clients\",\"ns/task\"]"));
+        assert!(j.contains("\"rows\":[[\"4\",\"123\"]]"));
+        assert!(j.contains("\\\"quoted\\\""));
+        assert!(j.contains("\\n"));
+        assert!(j.ends_with("}\n"));
+    }
+
+    #[test]
+    fn json_escape_control_chars() {
+        assert_eq!(json_escape("a\tb"), "a\\tb");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+        assert_eq!(json_escape("plain"), "plain");
     }
 }

@@ -20,10 +20,19 @@
 use crate::spsc::{self, Consumer, Full, Producer, UnboundedConsumer, UnboundedProducer};
 use crate::util::Backoff;
 
-/// A frame on a stream: a task or the end-of-stream mark.
+/// A frame on a stream: a task, a coalesced batch of tasks, or the
+/// end-of-stream mark.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Msg<T> {
     Task(T),
+    /// A run of tasks travelling as **one** frame — one queue slot, one
+    /// producer/consumer synchronization for the whole run. This is the
+    /// transfer batching of the FPGA-offloading line of work
+    /// (`ff_node_acc_t`): it amortizes the per-item offload cost that
+    /// dominates fine-grained tasks (`benches/granularity.rs`).
+    /// Arbiters (farm emitter, pool arbiter) unpack batches so
+    /// scheduling policies still see individual tasks.
+    Batch(Vec<T>),
     Eos,
 }
 
@@ -31,10 +40,19 @@ impl<T> Msg<T> {
     pub fn is_eos(&self) -> bool {
         matches!(self, Msg::Eos)
     }
+    /// The single task of a `Task` frame (`None` for `Batch`/`Eos`).
     pub fn into_task(self) -> Option<T> {
         match self {
             Msg::Task(t) => Some(t),
-            Msg::Eos => None,
+            Msg::Batch(_) | Msg::Eos => None,
+        }
+    }
+    /// Number of tasks this frame carries (0 for `Eos`).
+    pub fn task_count(&self) -> usize {
+        match self {
+            Msg::Task(_) => 1,
+            Msg::Batch(v) => v.len(),
+            Msg::Eos => 0,
         }
     }
 }
@@ -111,6 +129,17 @@ impl<T: Send> Sender<T> {
         self.send_msg(Msg::Eos)
     }
 
+    /// Blocking send of a whole run of tasks as one frame. Empty runs
+    /// send nothing; single-task runs degrade to a plain `Task` frame so
+    /// downstream framing stays canonical.
+    pub fn send_batch(&mut self, tasks: Vec<T>) -> Result<(), Disconnected<T>> {
+        match tasks.len() {
+            0 => Ok(()),
+            1 => self.send(tasks.into_iter().next().unwrap()),
+            _ => self.send_msg(Msg::Batch(tasks)),
+        }
+    }
+
     /// Blocking send of any frame, with spin/yield backoff while full.
     /// (Unbounded streams never block.)
     #[inline]
@@ -153,7 +182,7 @@ impl<T: Send> Sender<T> {
                     self.push_retries += 1;
                     Err(Full(t))
                 }
-                Err(Full(Msg::Eos)) => unreachable!("pushed Task, got back Eos"),
+                Err(Full(_)) => unreachable!("pushed Task, got back a different frame"),
             },
             TxFlavor::Unbounded(prod) => {
                 prod.push(Msg::Task(task));
@@ -282,8 +311,38 @@ mod tests {
     fn msg_helpers() {
         assert!(Msg::<u8>::Eos.is_eos());
         assert!(!Msg::Task(1).is_eos());
+        assert!(!Msg::Batch(vec![1u8, 2]).is_eos());
         assert_eq!(Msg::Task(3).into_task(), Some(3));
         assert_eq!(Msg::<u8>::Eos.into_task(), None);
+        assert_eq!(Msg::Batch(vec![1u8, 2]).into_task(), None);
+        assert_eq!(Msg::Task(3).task_count(), 1);
+        assert_eq!(Msg::Batch(vec![1u8, 2, 3]).task_count(), 3);
+        assert_eq!(Msg::<u8>::Eos.task_count(), 0);
+    }
+
+    #[test]
+    fn batch_frame_roundtrip() {
+        let (mut tx, mut rx) = stream::<u32>(4);
+        tx.send_batch(vec![1, 2, 3]).unwrap();
+        tx.send_batch(vec![]).unwrap(); // no frame
+        tx.send_batch(vec![9]).unwrap(); // degrades to Task
+        tx.send_eos().unwrap();
+        assert_eq!(rx.recv(), Msg::Batch(vec![1, 2, 3]));
+        assert_eq!(rx.recv(), Msg::Task(9));
+        assert_eq!(rx.recv(), Msg::Eos);
+    }
+
+    #[test]
+    fn batch_occupies_one_slot() {
+        // A batch is one frame: a capacity-1 queue still accepts an
+        // arbitrarily long run.
+        let (mut tx, mut rx) = stream::<u32>(1);
+        tx.send_batch((0..100).collect()).unwrap();
+        assert!(tx.is_full());
+        match rx.recv() {
+            Msg::Batch(v) => assert_eq!(v.len(), 100),
+            other => panic!("expected batch, got {other:?}"),
+        }
     }
 
     #[test]
@@ -323,6 +382,7 @@ mod tests {
         loop {
             match rx.recv() {
                 Msg::Task(v) => got.push(v),
+                Msg::Batch(vs) => got.extend(vs),
                 Msg::Eos => break,
             }
         }
@@ -347,6 +407,7 @@ mod tests {
                     assert_eq!(v, count);
                     count += 1;
                 }
+                Msg::Batch(_) => unreachable!("no batches sent"),
                 Msg::Eos => break,
             }
         }

@@ -99,6 +99,24 @@ mod tests {
     }
 
     #[test]
+    fn pool_knobs_parse() {
+        // The multi-client service knobs grown by the accel-pool work:
+        // `ffctl mandel --clients M --shards S --batch B`.
+        let a = Args::parse(&toks(&[
+            "mandel", "--clients", "8", "--shards=2", "--batch", "64",
+        ]));
+        assert_eq!(a.subcommand(), Some("mandel"));
+        assert_eq!(a.get_usize("clients", 1), 8);
+        assert_eq!(a.get_usize("shards", 1), 2);
+        assert_eq!(a.get_usize("batch", 1), 64);
+        // Defaults stay single-client when the knobs are absent.
+        let b = Args::parse(&toks(&["mandel"]));
+        assert_eq!(b.get_usize("clients", 1), 1);
+        assert_eq!(b.get_usize("shards", 1), 1);
+        assert_eq!(b.get_usize("batch", 1), 1);
+    }
+
+    #[test]
     fn trailing_flag_without_value() {
         let a = Args::parse(&toks(&["x", "--quick"]));
         assert!(a.has_flag("quick"));

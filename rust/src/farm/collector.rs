@@ -45,6 +45,42 @@ impl<O> Ord for Pending<O> {
     }
 }
 
+/// Deliver one sequence-tagged result per the ordering policy. Shared by
+/// the `Task` and (unpacked) `Batch` arms of the collector loop.
+#[inline]
+fn deliver<O: Send>(
+    ordering: Ordering,
+    seq: u64,
+    value: O,
+    out: &mut OutTarget<O>,
+    trace: &NodeTrace,
+    reorder: &mut BinaryHeap<Reverse<Pending<O>>>,
+    next_seq: &mut u64,
+) {
+    match ordering {
+        Ordering::Arrival => {
+            out.send(value);
+            trace.on_emit(1);
+        }
+        Ordering::Ordered => {
+            if seq == *next_seq {
+                out.send(value);
+                trace.on_emit(1);
+                *next_seq += 1;
+                // Release any now-contiguous results.
+                while reorder.peek().is_some_and(|Reverse(p)| p.0 == *next_seq) {
+                    let Reverse(Pending(_, v)) = reorder.pop().unwrap();
+                    out.send(v);
+                    trace.on_emit(1);
+                    *next_seq += 1;
+                }
+            } else {
+                reorder.push(Reverse(Pending(seq, value)));
+            }
+        }
+    }
+}
+
 pub(super) fn spawn_collector<O: Send + 'static>(
     mut workers: Vec<Receiver<Seq<O>>>,
     mut out: OutTarget<O>,
@@ -80,33 +116,24 @@ pub(super) fn spawn_collector<O: Send + 'static>(
                                 progressed = true;
                                 cursor = w; // keep draining the hot worker
                                 let t0 = Instant::now();
-                                match ordering {
-                                    Ordering::Arrival => {
-                                        out.send(value);
-                                        trace.on_emit(1);
-                                    }
-                                    Ordering::Ordered => {
-                                        if seq == next_seq {
-                                            out.send(value);
-                                            trace.on_emit(1);
-                                            next_seq += 1;
-                                            // Release any now-contiguous results.
-                                            while reorder
-                                                .peek()
-                                                .is_some_and(|Reverse(p)| p.0 == next_seq)
-                                            {
-                                                let Reverse(Pending(_, v)) =
-                                                    reorder.pop().unwrap();
-                                                out.send(v);
-                                                trace.on_emit(1);
-                                                next_seq += 1;
-                                            }
-                                        } else {
-                                            reorder.push(Reverse(Pending(seq, value)));
-                                        }
-                                    }
-                                }
+                                deliver(
+                                    ordering, seq, value, &mut out, &trace, &mut reorder,
+                                    &mut next_seq,
+                                );
                                 trace.on_task(t0.elapsed().as_nanos() as u64);
+                            }
+                            Some(Msg::Batch(frames)) => {
+                                progressed = true;
+                                cursor = w;
+                                let t0 = Instant::now();
+                                let k = frames.len() as u64;
+                                for (seq, value) in frames {
+                                    deliver(
+                                        ordering, seq, value, &mut out, &trace, &mut reorder,
+                                        &mut next_seq,
+                                    );
+                                }
+                                trace.on_tasks(k, t0.elapsed().as_nanos() as u64);
                             }
                             Some(Msg::Eos) => {
                                 progressed = true;

@@ -46,6 +46,21 @@ pub(super) fn spawn_emitter<I: Send + 'static>(
                             trace.on_task(t0.elapsed().as_nanos() as u64);
                             trace.on_emit(1);
                         }
+                        Msg::Batch(tasks) => {
+                            // Unpack so the scheduling policy sees (and
+                            // balances) individual tasks; each item gets
+                            // its own sequence number, so ordered
+                            // collection is batching-oblivious. Trace
+                            // counters attribute every batched item.
+                            let t0 = Instant::now();
+                            let k = tasks.len() as u64;
+                            for task in tasks {
+                                route(&mut workers, &mut next, policy, (seq, task));
+                                seq += 1;
+                            }
+                            trace.on_tasks(k, t0.elapsed().as_nanos() as u64);
+                            trace.on_emit(k);
+                        }
                         Msg::Eos => break,
                     }
                 }
@@ -90,7 +105,7 @@ fn route<I: Send>(
                 match workers[w].send_msg(Msg::Task(frame)) {
                     Ok(()) => return,
                     Err(crate::channel::Disconnected(Msg::Task(f))) => frame = f,
-                    Err(crate::channel::Disconnected(Msg::Eos)) => unreachable!(),
+                    Err(crate::channel::Disconnected(_)) => unreachable!(),
                 }
             }
             // all workers dead: drop the task

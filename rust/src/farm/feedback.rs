@@ -88,7 +88,7 @@ impl<'a, M: MasterLogic + ?Sized> MasterCtx<'a, M> {
                             return;
                         }
                         Err(crate::channel::Disconnected(Msg::Task(f))) => frame = f,
-                        Err(crate::channel::Disconnected(Msg::Eos)) => unreachable!(),
+                        Err(crate::channel::Disconnected(_)) => unreachable!(),
                     }
                 }
             }
@@ -130,6 +130,27 @@ impl<'a, M: MasterLogic + ?Sized> MasterCtx<'a, M> {
     /// Tasks dispatched but whose result has not yet fed back.
     pub fn in_flight(&self) -> u64 {
         *self.in_flight
+    }
+}
+
+/// Build the per-event [`MasterCtx`] handed to a [`MasterLogic`] hook —
+/// one place for the plumbing shared by the Task and Batch arms of the
+/// master loop.
+fn mk_ctx<'a, M: MasterLogic + ?Sized>(
+    workers: &'a mut Vec<Sender<M::Task>>,
+    out: &'a mut OutTarget<M::Out>,
+    next: &'a mut usize,
+    in_flight: &'a mut u64,
+    sched: SchedPolicy,
+) -> MasterCtx<'a, M> {
+    MasterCtx {
+        workers,
+        out,
+        next,
+        in_flight,
+        sched,
+        dispatched: 0,
+        emitted: 0,
     }
 }
 
@@ -230,21 +251,28 @@ where
                             match input_rx.try_recv() {
                                 Some(Msg::Task(t)) => {
                                     progressed = true;
-                                    let mut ctx = MasterCtx::<M> {
-                                        workers: &mut workers,
-                                        out: &mut out,
-                                        next: &mut next,
-                                        in_flight: &mut in_flight,
-                                        sched,
-                                        dispatched: 0,
-                                        emitted: 0,
-                                    };
+                                    let mut ctx =
+                                        mk_ctx::<M>(&mut workers, &mut out, &mut next, &mut in_flight, sched);
                                     let verdict = master.on_input(t, &mut ctx);
                                     let emitted = ctx.emitted;
                                     trace.on_task(0);
                                     trace.on_emit(emitted);
                                     if verdict == Svc::Eos {
                                         break 'cycle;
+                                    }
+                                }
+                                Some(Msg::Batch(ts)) => {
+                                    progressed = true;
+                                    for t in ts {
+                                        let mut ctx =
+                                            mk_ctx::<M>(&mut workers, &mut out, &mut next, &mut in_flight, sched);
+                                        let verdict = master.on_input(t, &mut ctx);
+                                        let emitted = ctx.emitted;
+                                        trace.on_task(0);
+                                        trace.on_emit(emitted);
+                                        if verdict == Svc::Eos {
+                                            break 'cycle;
+                                        }
                                     }
                                 }
                                 Some(Msg::Eos) => {
@@ -255,15 +283,8 @@ where
                             }
                         } else if !input_eos_notified {
                             input_eos_notified = true;
-                            let mut ctx = MasterCtx::<M> {
-                                workers: &mut workers,
-                                out: &mut out,
-                                next: &mut next,
-                                in_flight: &mut in_flight,
-                                sched,
-                                dispatched: 0,
-                                emitted: 0,
-                            };
+                            let mut ctx =
+                                mk_ctx::<M>(&mut workers, &mut out, &mut next, &mut in_flight, sched);
                             if master.on_input_eos(&mut ctx) == Svc::Eos {
                                 break 'cycle;
                             }
@@ -274,15 +295,8 @@ where
                                 Some(Msg::Task(r)) => {
                                     progressed = true;
                                     in_flight = in_flight.saturating_sub(1);
-                                    let mut ctx = MasterCtx::<M> {
-                                        workers: &mut workers,
-                                        out: &mut out,
-                                        next: &mut next,
-                                        in_flight: &mut in_flight,
-                                        sched,
-                                        dispatched: 0,
-                                        emitted: 0,
-                                    };
+                                    let mut ctx =
+                                        mk_ctx::<M>(&mut workers, &mut out, &mut next, &mut in_flight, sched);
                                     let verdict = master.on_feedback(r, &mut ctx);
                                     let emitted = ctx.emitted;
                                     trace.on_task(0);
@@ -292,17 +306,34 @@ where
                                     }
                                     // re-check termination after drained input
                                     if !input_open && in_flight == 0 {
-                                        let mut ctx = MasterCtx::<M> {
-                                            workers: &mut workers,
-                                            out: &mut out,
-                                            next: &mut next,
-                                            in_flight: &mut in_flight,
-                                            sched,
-                                            dispatched: 0,
-                                            emitted: 0,
-                                        };
+                                        let mut ctx =
+                                            mk_ctx::<M>(&mut workers, &mut out, &mut next, &mut in_flight, sched);
                                         if master.on_input_eos(&mut ctx) == Svc::Eos {
                                             break 'cycle;
+                                        }
+                                    }
+                                }
+                                Some(Msg::Batch(rs)) => {
+                                    // Workers emit per item today, but the
+                                    // protocol tolerates batched feedback.
+                                    progressed = true;
+                                    for r in rs {
+                                        in_flight = in_flight.saturating_sub(1);
+                                        let mut ctx =
+                                            mk_ctx::<M>(&mut workers, &mut out, &mut next, &mut in_flight, sched);
+                                        let verdict = master.on_feedback(r, &mut ctx);
+                                        let emitted = ctx.emitted;
+                                        trace.on_task(0);
+                                        trace.on_emit(emitted);
+                                        if verdict == Svc::Eos {
+                                            break 'cycle;
+                                        }
+                                        if !input_open && in_flight == 0 {
+                                            let mut ctx =
+                                                mk_ctx::<M>(&mut workers, &mut out, &mut next, &mut in_flight, sched);
+                                            if master.on_input_eos(&mut ctx) == Svc::Eos {
+                                                break 'cycle;
+                                            }
                                         }
                                     }
                                 }
@@ -339,7 +370,7 @@ where
                                     seen[w] = true;
                                     eos += 1;
                                 }
-                                Some(Msg::Task(_)) => progressed = true, // late result: drop
+                                Some(Msg::Task(_) | Msg::Batch(_)) => progressed = true, // late result: drop
                                 None => {
                                     if !rx.peer_alive() && !rx.has_next() {
                                         progressed = true;
@@ -371,6 +402,8 @@ where
         lifecycle,
         joins,
         traces,
+        // Master-worker has no one-emission contract to violate.
+        poison: Arc::new(std::sync::atomic::AtomicBool::new(false)),
     }
 }
 

@@ -30,6 +30,7 @@ pub mod feedback;
 pub use collector::Ordering as CollectorOrdering;
 pub use feedback::{launch_master_worker, MasterCtx, MasterLogic};
 
+use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -145,6 +146,12 @@ struct SeqWrap<W> {
     inner: W,
     /// Ordered farms require exactly one emission per task.
     enforce_one: bool,
+    /// Shared poison flag: raised (instead of panicking) when an
+    /// ordered farm's worker violates the one-emission contract. The
+    /// worker then terminates its stream cleanly (`Svc::Eos`), the farm
+    /// drains, and the offload side surfaces
+    /// [`crate::accel::AccelError::Disconnected`].
+    poison: Arc<AtomicBool>,
 }
 
 impl<W: Node> Node for SeqWrap<W> {
@@ -162,20 +169,27 @@ impl<W: Node> Node for SeqWrap<W> {
     ) -> Svc {
         let mut emitted = 0u64;
         let verdict = {
+            let enforce_one = self.enforce_one;
             let mut sink = |v: W::Out| {
                 emitted += 1;
-                // Re-tag with the task's sequence number.
-                out.send((seq, v));
+                // Re-tag with the task's sequence number. Under the
+                // one-emission contract, suppress surplus emissions so a
+                // duplicate sequence tag never reaches the reorder
+                // buffer.
+                if !enforce_one || emitted == 1 {
+                    out.send((seq, v));
+                }
                 !out.broken
             };
             let mut inner_out = crate::node::Outbox::over(&mut sink);
             self.inner.svc(task, &mut inner_out)
         };
         if self.enforce_one && emitted != 1 {
-            panic!(
-                "ordered farm requires exactly one emission per task, got {emitted} \
-                 (seq {seq}); use CollectorOrdering::Arrival for multi-emission workers"
-            );
+            // Poison, don't panic: the skeleton must keep draining so
+            // the offloading thread sees a terminated stream plus an
+            // `AccelError::Disconnected`, never a hang.
+            self.poison.store(true, AtomicOrdering::Release);
+            return Svc::Eos;
         }
         verdict
     }
@@ -231,11 +245,13 @@ where
         FarmOutput::None => (None, None),
     };
 
+    let poison = Arc::new(AtomicBool::new(false));
     let input_tx = wire_farm(
         &cfg,
         factory,
         out_target,
         &lifecycle,
+        &poison,
         0,
         &cpu_map,
         &mut joins,
@@ -248,6 +264,7 @@ where
         lifecycle,
         joins,
         traces,
+        poison,
     }
 }
 
@@ -262,6 +279,7 @@ pub(crate) fn wire_farm<I, O, W, F>(
     mut factory: F,
     out_target: Option<OutTarget<O>>,
     lifecycle: &Arc<Lifecycle>,
+    poison: &Arc<AtomicBool>,
     thread_base: usize,
     cpu_map: &CpuMap,
     joins: &mut Vec<JoinHandle<()>>,
@@ -330,6 +348,7 @@ where
             node: SeqWrap {
                 inner: factory(wi),
                 enforce_one: ordered,
+                poison: poison.clone(),
             },
             rx,
             out: wout,
@@ -369,6 +388,7 @@ mod tests {
         loop {
             match rx.recv() {
                 Msg::Task(v) => got.push(v),
+                Msg::Batch(vs) => got.extend(vs),
                 Msg::Eos => break,
             }
         }
@@ -517,10 +537,12 @@ mod tests {
     }
 
     #[test]
-    fn ordered_farm_rejects_multi_emission() {
-        // The seq-wrapper panics (on the worker thread) when an ordered
-        // farm's worker emits != 1 result per task; the farm must still
-        // drain (synthetic EOS from the dead worker) rather than hang.
+    fn ordered_farm_poisons_on_multi_emission() {
+        // The seq-wrapper raises the poison flag (no panic) when an
+        // ordered farm's worker emits != 1 result per task; the worker
+        // terminates its stream cleanly and the farm drains rather than
+        // hang. Only the first emission reaches the collector, so the
+        // reorder buffer never sees a duplicate sequence tag.
         struct Multi;
         impl Node for Multi {
             type In = u32;
@@ -538,15 +560,41 @@ mod tests {
             FarmOutput::Stream,
         );
         farm.input.send(1).unwrap();
-        let _ = farm.input.send_eos(); // worker may already be gone
+        let _ = farm.input.send_eos(); // worker may already have stopped
         let mut output = farm.output.take().unwrap();
         let got = drain(&mut output);
-        // First emission may or may not have escaped before the panic;
-        // the stream must terminate either way (no hang).
-        assert!(got.len() <= 2);
-        // The worker died before completing a cycle.
+        // Exactly the first emission escapes; the stream terminates.
+        assert_eq!(got, vec![1]);
+        assert!(farm.poisoned(), "violation must raise the poison flag");
+        // No panic: the worker completed its cycle normally.
         let report = farm.trace_report();
         let w = report.rows.iter().find(|r| r.name == "worker-0").unwrap();
-        assert_eq!(w.cycles, 0, "worker should have panicked before cycle end");
+        assert_eq!(w.cycles, 1, "worker should end its cycle cleanly");
+        farm.join();
+    }
+
+    #[test]
+    fn farm_unpacks_batched_offloads() {
+        // A batch through the farm equals per-item offloads: the emitter
+        // unpacks, assigns per-item sequence numbers, and the ordered
+        // collector restores offload order across the batch boundary.
+        let farm = launch_farm(
+            FarmConfig::default().workers(4).ordered(),
+            RunMode::RunToEnd,
+            |_| node_fn(|x: u64| x * 2),
+            FarmOutput::Stream,
+        );
+        let (mut input, output, handle) = farm.split();
+        let mut output = output.unwrap();
+        input.send(0).unwrap();
+        input.send_batch((1..500).collect()).unwrap();
+        input.send(500).unwrap();
+        input.send_eos().unwrap();
+        let got = drain(&mut output);
+        assert_eq!(got, (0..=500).map(|x| x * 2).collect::<Vec<u64>>());
+        let report = handle.join();
+        let emitter = report.rows.iter().find(|r| r.name == "emitter").unwrap();
+        assert_eq!(emitter.tasks, 501, "batched items count individually");
+        assert_eq!(emitter.emitted, 501);
     }
 }

@@ -20,7 +20,12 @@
 //!    device* with an input and an output stream; `offload()` tasks from
 //!    sequential code, `run_then_freeze()` / `thaw()` the device between
 //!    bursts, `wait()` for completion. This is the paper's contribution:
-//!    *self-offloading* onto the unused cores of the same CPU.
+//!    *self-offloading* onto the unused cores of the same CPU. The
+//!    module is a three-tier service — the single-client session
+//!    ([`accel::Accel`]), cloneable multi-client handles
+//!    ([`accel::AccelHandle`], one private SPSC lane per client), and
+//!    the sharded [`accel::AccelPool`] with batched offload
+//!    ([`channel::Msg::Batch`]) and merged result drain.
 //!
 //! On top of the stack sit the paper's workloads ([`apps`]): the QT
 //! Mandelbrot explorer (Fig. 4), Somers' N-queens solver (Table 2) and the

@@ -5,7 +5,8 @@
 //! ```text
 //! ffctl fig4      [--quick|--full] [--engine scalar|pjrt] [--width N] …
 //! ffctl table2    [--quick|--full] [--boards 12,13,14] [--depth 4] …
-//! ffctl mandel    [--region whole-set] [--workers N] [--out img.pgm] …
+//! ffctl mandel    [--region whole-set] [--workers N] [--clients M]
+//!                 [--shards S] [--batch B] [--out img.pgm] …
 //! ffctl nqueens   [--n 13] [--depth 4] [--workers N]
 //! ffctl matmul    [--n 256] [--workers N]
 //! ffctl info
@@ -14,7 +15,8 @@
 //! Global options: `--config file` (key=value), `--trace`, `--csv dir`.
 
 use fastflow::apps::mandelbrot::{
-    max_iter_for_pass, render_sequential, AcceleratedRenderer, Engine, Region, RenderParams,
+    max_iter_for_pass, render_multiclient, render_sequential, AcceleratedRenderer, Engine, Region,
+    RenderParams,
 };
 use fastflow::apps::matmul::{matmul_accelerated, matmul_sequential, Matrix};
 use fastflow::apps::nqueens;
@@ -85,7 +87,10 @@ COMMON OPTIONS
   --config <file>    key=value config file
   --quick / --full   scaled-down / paper-scale experiment sizes
   --engine <e>       scalar | pjrt  (pjrt needs `make artifacts`)
-  --workers <n>      worker threads
+  --workers <n>      worker threads (per shard when pooled)
+  --clients <m>      mandel: offloading client threads sharing one pool
+  --shards <s>       mandel: independent farm accelerators in the pool
+  --batch <b>        mandel: tasks coalesced per offload frame
   --trace            print per-node trace report
   --csv <dir>        also write tables as CSV
 ",
@@ -195,6 +200,9 @@ fn cmd_mandel(args: &Args) -> Result<()> {
     let height = cfg.get_usize("height", 600);
     let pass = cfg.get_u32("pass", 3);
     let workers = cfg.get_usize("workers", num_cpus().max(2) - 1);
+    let clients = cfg.get_usize("clients", 1);
+    let shards = cfg.get_usize("shards", 1);
+    let batch = cfg.get_usize("batch", 1);
     let engine = parse_engine(&cfg)?;
     let max_iter = max_iter_for_pass(pass);
 
@@ -206,22 +214,41 @@ fn cmd_mandel(args: &Args) -> Result<()> {
         width,
         height,
     };
-    let mut renderer = AcceleratedRenderer::new(params, workers, engine);
-    let (frame, par_d) = timed(|| renderer.render_pass(max_iter, None).unwrap());
-    let report = renderer.shutdown();
+    let pooled = clients > 1 || shards > 1 || batch > 1;
+    let (frame, report, par_d, label) = if pooled {
+        // Multi-client service path: M offloading threads share one
+        // sharded AccelPool.
+        if engine != Engine::Scalar {
+            return fail("--clients/--shards/--batch require --engine scalar".to_string());
+        }
+        let ((frame, report), par_d) =
+            timed(|| render_multiclient(params, clients, shards, workers, batch, max_iter));
+        let label = format!(
+            "pool({clients} clients, {shards} shards, batch {batch}, {workers} workers/shard)"
+        );
+        (frame, report, par_d, label)
+    } else {
+        // Time launch + render + teardown, the same span the pooled
+        // path measures, so the two modes are comparable.
+        let ((frame, report), par_d) = timed(|| {
+            let mut renderer = AcceleratedRenderer::new(params, workers, engine);
+            let frame = renderer.render_pass(max_iter, None).unwrap();
+            (frame, renderer.shutdown())
+        });
+        (frame, report, par_d, format!("ff({workers} workers, {engine:?})"))
+    };
 
     if engine != Engine::Pjrt && frame.iters != seq.iters {
         return fail("accelerated frame differs from sequential!".to_string());
     }
     println!(
-        "mandel {}: {}x{} max_iter={} | seq {} | ff({} workers, {:?}) {} | speedup {:.2}",
+        "mandel {}: {}x{} max_iter={} | seq {} | {} {} | speedup {:.2}",
         region.name,
         width,
         height,
         max_iter,
         fmt_duration(seq_d),
-        workers,
-        engine,
+        label,
         fmt_duration(par_d),
         speedup(seq_d.as_secs_f64(), par_d.as_secs_f64()),
     );

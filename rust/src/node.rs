@@ -352,7 +352,7 @@ impl<N: Node + 'static> NodeRunner<N> {
                 }
                 loop {
                     node.svc_init();
-                    loop {
+                    'cycle: loop {
                         match rx.recv() {
                             Msg::Task(t) => {
                                 let t0 = Instant::now();
@@ -364,6 +364,23 @@ impl<N: Node + 'static> NodeRunner<N> {
                                 trace.on_emit(sent);
                                 if verdict == Svc::Eos {
                                     break;
+                                }
+                            }
+                            Msg::Batch(tasks) => {
+                                // Unpack: each batched item is one svc
+                                // invocation; an Eos verdict terminates
+                                // the stream mid-batch, like mid-stream.
+                                for t in tasks {
+                                    let t0 = Instant::now();
+                                    let mut sink = |v: N::Out| out.send(v);
+                                    let mut outbox = Outbox::over(&mut sink);
+                                    let verdict = node.svc(t, &mut outbox);
+                                    let sent = outbox.sent;
+                                    trace.on_task(t0.elapsed().as_nanos() as u64);
+                                    trace.on_emit(sent);
+                                    if verdict == Svc::Eos {
+                                        break 'cycle;
+                                    }
                                 }
                             }
                             Msg::Eos => break,
@@ -423,11 +440,42 @@ mod tests {
         loop {
             match rx_out.recv() {
                 Msg::Task(v) => got.push(v),
+                Msg::Batch(vs) => got.extend(vs),
                 Msg::Eos => break,
             }
         }
         h.join().unwrap();
         got
+    }
+
+    #[test]
+    fn node_unpacks_batch_frames() {
+        let (mut tx_in, rx_in) = stream::<u32>(16);
+        let (tx_out, mut rx_out) = stream::<u32>(16);
+        let lc = Lifecycle::new(1, RunMode::RunToEnd);
+        let h = NodeRunner {
+            node: Doubler,
+            rx: rx_in,
+            out: OutTarget::Chan(tx_out),
+            lifecycle: lc,
+            trace: NodeTrace::new(),
+            pin_to: None,
+            name: "batch-node".into(),
+        }
+        .spawn();
+        tx_in.send_batch(vec![1, 2, 3]).unwrap();
+        tx_in.send(4).unwrap();
+        tx_in.send_eos().unwrap();
+        let mut got = vec![];
+        loop {
+            match rx_out.recv() {
+                Msg::Task(v) => got.push(v),
+                Msg::Batch(vs) => got.extend(vs),
+                Msg::Eos => break,
+            }
+        }
+        h.join().unwrap();
+        assert_eq!(got, vec![2, 4, 6, 8]);
     }
 
     #[test]

@@ -38,6 +38,9 @@ use crate::DEFAULT_QUEUE_CAP;
 /// Wiring context threaded through stage construction.
 pub struct WireCtx<'a> {
     lifecycle: &'a Arc<Lifecycle>,
+    /// Shared poison flag (raised by any farm stage on a protocol
+    /// violation — see [`LaunchedSkeleton::poison`]).
+    poison: &'a Arc<std::sync::atomic::AtomicBool>,
     cpu_map: &'a CpuMap,
     next_thread: usize,
     joins: &'a mut Vec<JoinHandle<()>>,
@@ -118,6 +121,7 @@ where
             self.factory,
             out_target,
             ctx.lifecycle,
+            ctx.poison,
             base,
             ctx.cpu_map,
             ctx.joins,
@@ -270,8 +274,10 @@ impl<I: Send + 'static, O: Send + 'static, S: Stage<I, O>> Pipeline<I, O, S> {
         let mut joins = Vec::with_capacity(total);
         let mut traces = Vec::with_capacity(total);
         let (out_tx, out_rx) = stream::<O>(self.cap);
+        let poison = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let mut ctx = WireCtx {
             lifecycle: &lifecycle,
+            poison: &poison,
             cpu_map: &cpu_map,
             next_thread: 0,
             joins: &mut joins,
@@ -285,6 +291,7 @@ impl<I: Send + 'static, O: Send + 'static, S: Stage<I, O>> Pipeline<I, O, S> {
             lifecycle,
             joins,
             traces,
+            poison,
         }
     }
 }
@@ -311,6 +318,7 @@ mod tests {
         loop {
             match output.recv() {
                 Msg::Task(v) => got.push(v),
+                Msg::Batch(vs) => got.extend(vs),
                 Msg::Eos => break,
             }
         }
@@ -338,6 +346,7 @@ mod tests {
                     assert_eq!(v, expect);
                     expect += 1;
                 }
+                Msg::Batch(_) => unreachable!("no batches sent"),
                 Msg::Eos => break,
             }
         }
@@ -392,6 +401,7 @@ mod tests {
         loop {
             match output.recv() {
                 Msg::Task(v) => got.push(v),
+                Msg::Batch(vs) => got.extend(vs),
                 Msg::Eos => break,
             }
         }

@@ -15,6 +15,28 @@ use crate::channel::{stream, Msg, Receiver, Sender};
 use crate::util::Backoff;
 use crate::DEFAULT_QUEUE_CAP;
 
+/// Round-robin with skip-if-full routing of one frame to some consumer
+/// (work happily drains past a slow consumer). Shared by the SPMC and
+/// MPMC arbiters, which unpack [`Msg::Batch`] runs through it so every
+/// consumer still receives individual tasks.
+fn route_skip_full<T: Send>(outs: &mut [Sender<T>], next: &mut usize, mut frame: T) {
+    let n = outs.len();
+    let mut backoff = Backoff::new();
+    loop {
+        for k in 0..n {
+            let c = (*next + k) % n;
+            match outs[c].try_send(frame) {
+                Ok(()) => {
+                    *next = (c + 1) % n;
+                    return;
+                }
+                Err(crate::spsc::Full(f)) => frame = f,
+            }
+        }
+        backoff.snooze();
+    }
+}
+
 /// One-to-many: a single producer feeds `n` consumers through an Emitter
 /// arbiter (round-robin dispatch).
 ///
@@ -36,27 +58,13 @@ pub fn spmc<T: Send + 'static>(
     let arbiter = std::thread::Builder::new()
         .name("ff-spmc-arbiter".into())
         .spawn(move || {
-            let n = outs.len();
             let mut next = 0usize;
             loop {
                 match rx_in.recv() {
-                    Msg::Task(t) => {
-                        // Round-robin with skip-if-full (work happily
-                        // drains past a slow consumer).
-                        let mut frame = t;
-                        let mut backoff = Backoff::new();
-                        'route: loop {
-                            for k in 0..n {
-                                let c = (next + k) % n;
-                                match outs[c].try_send(frame) {
-                                    Ok(()) => {
-                                        next = (c + 1) % n;
-                                        break 'route;
-                                    }
-                                    Err(crate::spsc::Full(f)) => frame = f,
-                                }
-                            }
-                            backoff.snooze();
+                    Msg::Task(t) => route_skip_full(&mut outs, &mut next, t),
+                    Msg::Batch(ts) => {
+                        for t in ts {
+                            route_skip_full(&mut outs, &mut next, t);
                         }
                     }
                     Msg::Eos => break,
@@ -102,6 +110,15 @@ pub fn mpsc<T: Send + 'static>(
                         Some(Msg::Task(t)) => {
                             progressed = true;
                             if tx_out.send(t).is_err() {
+                                return;
+                            }
+                        }
+                        Some(Msg::Batch(ts)) => {
+                            // Forward the run as one frame: the merge
+                            // keeps the batch's single-synchronization
+                            // economy on the consumer side too.
+                            progressed = true;
+                            if tx_out.send_batch(ts).is_err() {
                                 return;
                             }
                         }
@@ -158,7 +175,6 @@ pub fn mpmc<T: Send + 'static>(
         .name("ff-mpmc-arbiter".into())
         .spawn(move || {
             let np = in_rxs.len();
-            let nc = outs.len();
             let mut eos = vec![false; np];
             let mut eos_count = 0;
             let mut next = 0usize;
@@ -172,20 +188,12 @@ pub fn mpmc<T: Send + 'static>(
                     match in_rxs[i].try_recv() {
                         Some(Msg::Task(t)) => {
                             progressed = true;
-                            let mut frame = t;
-                            let mut inner = Backoff::new();
-                            'route: loop {
-                                for k in 0..nc {
-                                    let c = (next + k) % nc;
-                                    match outs[c].try_send(frame) {
-                                        Ok(()) => {
-                                            next = (c + 1) % nc;
-                                            break 'route;
-                                        }
-                                        Err(crate::spsc::Full(f)) => frame = f,
-                                    }
-                                }
-                                inner.snooze();
+                            route_skip_full(&mut outs, &mut next, t);
+                        }
+                        Some(Msg::Batch(ts)) => {
+                            progressed = true;
+                            for t in ts {
+                                route_skip_full(&mut outs, &mut next, t);
                             }
                         }
                         Some(Msg::Eos) => {
@@ -228,23 +236,25 @@ pub fn spmc_default<T: Send + 'static>(
 mod tests {
     use super::*;
 
+    /// Drain a receiver to EOS, flattening any batch frames.
+    fn drain_all<T: Send>(rx: &mut Receiver<T>) -> Vec<T> {
+        let mut got = vec![];
+        loop {
+            match rx.recv() {
+                Msg::Task(t) => got.push(t),
+                Msg::Batch(ts) => got.extend(ts),
+                Msg::Eos => break,
+            }
+        }
+        got
+    }
+
     #[test]
     fn spmc_distributes_everything() {
         let (mut tx, rxs, arbiter) = spmc::<u64>(3, 16);
         let consumers: Vec<_> = rxs
             .into_iter()
-            .map(|mut rx| {
-                std::thread::spawn(move || {
-                    let mut got = vec![];
-                    loop {
-                        match rx.recv() {
-                            Msg::Task(t) => got.push(t),
-                            Msg::Eos => break,
-                        }
-                    }
-                    got
-                })
-            })
+            .map(|mut rx| std::thread::spawn(move || drain_all(&mut rx)))
             .collect();
         for i in 0..3000u64 {
             tx.send(i).unwrap();
@@ -274,13 +284,7 @@ mod tests {
                 })
             })
             .collect();
-        let mut got = vec![];
-        loop {
-            match rx.recv() {
-                Msg::Task(t) => got.push(t),
-                Msg::Eos => break,
-            }
-        }
+        let mut got = drain_all(&mut rx);
         for h in producers {
             h.join().unwrap();
         }
@@ -307,14 +311,9 @@ mod tests {
             })
             .collect();
         let mut last = vec![-1i64; 2];
-        loop {
-            match rx.recv() {
-                Msg::Task((p, i)) => {
-                    assert!(i as i64 > last[p], "order violated for producer {p}");
-                    last[p] = i as i64;
-                }
-                Msg::Eos => break,
-            }
+        for (p, i) in drain_all(&mut rx) {
+            assert!(i as i64 > last[p], "order violated for producer {p}");
+            last[p] = i as i64;
         }
         for h in producers {
             h.join().unwrap();
@@ -338,18 +337,7 @@ mod tests {
             .collect();
         let consumers: Vec<_> = rxs
             .into_iter()
-            .map(|mut rx| {
-                std::thread::spawn(move || {
-                    let mut got = vec![];
-                    loop {
-                        match rx.recv() {
-                            Msg::Task(t) => got.push(t),
-                            Msg::Eos => break,
-                        }
-                    }
-                    got
-                })
-            })
+            .map(|mut rx| std::thread::spawn(move || drain_all(&mut rx)))
             .collect();
         for h in producers {
             h.join().unwrap();
@@ -363,5 +351,36 @@ mod tests {
         assert_eq!(all.len(), 800);
         all.dedup();
         assert_eq!(all.len(), 800);
+    }
+
+    #[test]
+    fn spmc_unpacks_batches_mpsc_preserves_them() {
+        // SPMC: a batch is spread over consumers as individual tasks.
+        let (mut tx, rxs, arbiter) = spmc::<u64>(2, 8);
+        let consumers: Vec<_> = rxs
+            .into_iter()
+            .map(|mut rx| std::thread::spawn(move || drain_all(&mut rx)))
+            .collect();
+        tx.send_batch((0..100).collect()).unwrap();
+        tx.send_eos().unwrap();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        arbiter.join().unwrap();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+
+        // MPSC: the merged stream conserves batched items.
+        let (mut txs, mut rx, arbiter) = mpsc::<u64>(2, 8);
+        txs[0].send_batch((0..50).collect()).unwrap();
+        txs[1].send_batch((50..100).collect()).unwrap();
+        for mut tx in txs {
+            tx.send_eos().unwrap();
+        }
+        let mut got = drain_all(&mut rx);
+        arbiter.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
     }
 }

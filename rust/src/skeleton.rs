@@ -4,6 +4,7 @@
 //! [`crate::pipeline`] produce this; [`crate::accel`] wraps it as a
 //! software accelerator.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -22,12 +23,18 @@ pub struct LaunchedSkeleton<I: Send + 'static, O: Send + 'static> {
     pub lifecycle: Arc<Lifecycle>,
     pub joins: Vec<JoinHandle<()>>,
     pub traces: Vec<(String, Arc<NodeTrace>)>,
+    /// Raised by a node that detected a protocol violation (e.g. an
+    /// ordered farm's worker emitting ≠ 1 result per task). The stream
+    /// still drains cleanly; the offload side surfaces the flag as
+    /// [`crate::accel::AccelError::Disconnected`].
+    pub poison: Arc<AtomicBool>,
 }
 
 /// The non-stream remainder of a skeleton after [`LaunchedSkeleton::split`]:
 /// lifecycle + join handles + traces.
 pub struct SkeletonHandle {
     pub lifecycle: Arc<Lifecycle>,
+    pub poison: Arc<AtomicBool>,
     joins: Vec<JoinHandle<()>>,
     traces: Vec<(String, Arc<NodeTrace>)>,
 }
@@ -57,6 +64,11 @@ impl SkeletonHandle {
                 .collect(),
         }
     }
+
+    /// True if some node raised the poison flag.
+    pub fn poisoned(&self) -> bool {
+        self.poison.load(Ordering::Acquire)
+    }
 }
 
 impl<I: Send + 'static, O: Send + 'static> LaunchedSkeleton<I, O> {
@@ -68,10 +80,16 @@ impl<I: Send + 'static, O: Send + 'static> LaunchedSkeleton<I, O> {
             self.output,
             SkeletonHandle {
                 lifecycle: self.lifecycle,
+                poison: self.poison,
                 joins: self.joins,
                 traces: self.traces,
             },
         )
+    }
+
+    /// True if some node raised the poison flag (see [`Self::poison`]).
+    pub fn poisoned(&self) -> bool {
+        self.poison.load(Ordering::Acquire)
     }
 
     /// Join all threads, returning the final trace report.

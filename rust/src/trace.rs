@@ -34,7 +34,15 @@ impl NodeTrace {
 
     #[inline]
     pub fn on_task(&self, svc_ns: u64) {
-        self.tasks.fetch_add(1, Ordering::Relaxed);
+        self.on_tasks(1, svc_ns);
+    }
+
+    /// Account `n` tasks handled in one `svc_ns` stretch — used by
+    /// arbiters unpacking a [`crate::channel::Msg::Batch`] so batched
+    /// items count as individual tasks, not one.
+    #[inline]
+    pub fn on_tasks(&self, n: u64, svc_ns: u64) {
+        self.tasks.fetch_add(n, Ordering::Relaxed);
         self.svc_ns.fetch_add(svc_ns, Ordering::Relaxed);
     }
 
@@ -153,6 +161,16 @@ mod tests {
         assert_eq!(row.push_retries, 2);
         assert_eq!(row.pop_retries, 5);
         assert_eq!(row.cycles, 1);
+    }
+
+    #[test]
+    fn batched_tasks_attributed_individually() {
+        let t = NodeTrace::new();
+        t.on_tasks(32, 640);
+        t.on_task(10);
+        let row = t.snapshot("emitter");
+        assert_eq!(row.tasks, 33);
+        assert_eq!(row.svc_time, Duration::from_nanos(650));
     }
 
     #[test]

@@ -1,9 +1,9 @@
 //! Cross-module integration: the paper's workloads end-to-end through
 //! the public API, each verified against its sequential oracle.
 
-use fastflow::accel::{Accel, FarmAccel};
+use fastflow::accel::{Accel, AccelPool, FarmAccel, Placement, PoolConfig};
 use fastflow::apps::mandelbrot::{
-    render_progressive, render_sequential, Engine, Region, RenderParams,
+    render_multiclient, render_progressive, render_sequential, Engine, Region, RenderParams,
 };
 use fastflow::apps::matmul::{matmul_accelerated, matmul_sequential, Matrix};
 use fastflow::apps::nqueens::{count_parallel, count_sequential, known_solutions};
@@ -132,6 +132,86 @@ fn offload_counts_are_tracked() {
             .sum::<u64>(),
         50
     );
+}
+
+#[test]
+fn pool_four_clients_two_shards_equals_sequential_result_set() {
+    // The service acceptance shape: ≥4 AccelHandle clones, each on its
+    // own thread, offloading into a 2-shard pool; the merged drain must
+    // be exactly the sequential result multiset — across batch sizes
+    // and both placement policies.
+    let f = |x: u64| x.wrapping_mul(2654435761).rotate_left(9);
+    for (batch, placement) in [
+        (1, Placement::RoundRobin),
+        (32, Placement::RoundRobin),
+        (32, Placement::LeastLoaded),
+    ] {
+        let (mut pool, root) = AccelPool::run(
+            PoolConfig::default()
+                .shards(2)
+                .placement(placement)
+                .batch(batch)
+                .workers_per_shard(2),
+            move |_s, _w| node_fn(f),
+        );
+        let clients = 4u64;
+        let per_client = 2_500u64;
+        let joins: Vec<_> = (0..clients)
+            .map(|c| {
+                let mut h = root.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_client {
+                        h.offload(c * per_client + i).unwrap();
+                    }
+                    h.finish().unwrap();
+                })
+            })
+            .collect();
+        drop(root);
+        pool.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = pool.load_result() {
+            got.push(v);
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let report = pool.wait();
+        got.sort_unstable();
+        let mut expect: Vec<u64> = (0..clients * per_client).map(f).collect();
+        expect.sort_unstable();
+        assert_eq!(got, expect, "batch {batch} placement {placement:?}");
+        // Both shards participated and the arbiter attributed every task.
+        let arb = report.rows.iter().find(|r| r.name == "arbiter").unwrap();
+        assert_eq!(arb.tasks, clients * per_client);
+        for s in 0..2 {
+            let em = report
+                .rows
+                .iter()
+                .find(|r| r.name == format!("s{s}/emitter"))
+                .unwrap();
+            assert!(em.tasks > 0, "shard {s} unused (batch {batch})");
+        }
+    }
+}
+
+#[test]
+fn mandelbrot_multiclient_pool_is_bit_identical() {
+    let region = Region::presets()[0];
+    let seq = render_sequential(&region, 96, 64, 256, None).unwrap();
+    let (frame, _report) = render_multiclient(
+        RenderParams {
+            region,
+            width: 96,
+            height: 64,
+        },
+        4, // clients
+        2, // shards
+        2, // workers per shard
+        8, // batch
+        256,
+    );
+    assert_eq!(frame.iters, seq.iters);
 }
 
 #[test]

@@ -7,9 +7,14 @@
 //!    (workers, policy, queue capacity, task count);
 //! 3. an ordered farm emits results in offload order;
 //! 4. freeze/thaw bursts of arbitrary sizes lose nothing;
-//! 5. arbiter-built MPSC/SPMC channels conserve the multiset of messages.
+//! 5. arbiter-built MPSC/SPMC channels conserve the multiset of messages;
+//! 6. batched offload is observationally identical to per-item offload
+//!    for every scheduling policy and collector ordering;
+//! 7. a sharded `AccelPool` serves concurrent clients exactly-once, and
+//!    preserves per-client FIFO order through the input arbiter when a
+//!    single shard runs an ordered collector.
 
-use fastflow::accel::FarmAccel;
+use fastflow::accel::{AccelPool, FarmAccel, Placement, PoolConfig};
 use fastflow::channel::Msg;
 use fastflow::farm::{FarmConfig, SchedPolicy};
 use fastflow::node::node_fn;
@@ -184,6 +189,7 @@ fn prop_mpsc_conserves_messages() {
                     last[p] = i as i64;
                     count += 1;
                 }
+                Msg::Batch(_) => unreachable!("no batches sent"),
                 Msg::Eos => break,
             }
         }
@@ -209,6 +215,7 @@ fn prop_spmc_conserves_messages() {
                     loop {
                         match rx.recv() {
                             Msg::Task(v) => got.push(v),
+                            Msg::Batch(vs) => got.extend(vs),
                             Msg::Eos => break,
                         }
                     }
@@ -227,6 +234,151 @@ fn prop_spmc_conserves_messages() {
         arbiter.join().unwrap();
         all.sort_unstable();
         assert_eq!(all, (0..n).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn prop_batched_equals_unbatched_every_policy() {
+    // Batching is a transfer optimization, not a semantic change: the
+    // same inputs through the same farm produce the same outputs (same
+    // order when ordered) whether offloaded per-item or in arbitrary
+    // batch sizes, under every scheduling policy.
+    Cases::new("batch_equiv", 8).run(|g: &mut Gen| {
+        let workers = g.usize_in(1, 5);
+        let n = g.usize_in(1, 2_000) as u64;
+        let batch = g.usize_in(2, 128);
+        let ordered = g.bool();
+        for sched in [SchedPolicy::RoundRobin, SchedPolicy::OnDemand] {
+            let mut cfg = FarmConfig::default().workers(workers).sched(sched);
+            if ordered {
+                cfg = cfg.ordered();
+            }
+            let run = |batched: bool| {
+                let mut acc: FarmAccel<u64, u64> =
+                    FarmAccel::run(cfg.clone(), |_| node_fn(|x: u64| x * 3 + 1));
+                if batched {
+                    let all: Vec<u64> = (0..n).collect();
+                    for chunk in all.chunks(batch) {
+                        acc.offload_batch(chunk.to_vec()).unwrap();
+                    }
+                } else {
+                    for i in 0..n {
+                        acc.offload(i).unwrap();
+                    }
+                }
+                acc.offload_eos();
+                let mut got = vec![];
+                while let Some(v) = acc.load_result() {
+                    got.push(v);
+                }
+                acc.wait();
+                got
+            };
+            let mut per_item = run(false);
+            let mut batched = run(true);
+            if !ordered {
+                per_item.sort_unstable();
+                batched.sort_unstable();
+            }
+            assert_eq!(
+                per_item, batched,
+                "sched {sched:?} ordered {ordered} batch {batch}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_pool_multiclient_exactly_once() {
+    // Any number of concurrent clients through any shard count and
+    // placement policy: every offloaded task comes back exactly once.
+    Cases::new("pool_exactly_once", 8).run(|g: &mut Gen| {
+        let clients = g.usize_in(1, 5) as u64;
+        let shards = g.usize_in(1, 4);
+        let batch = g.usize_in(1, 65);
+        let per_client = g.usize_in(1, 800) as u64;
+        let placement = if g.bool() {
+            Placement::RoundRobin
+        } else {
+            Placement::LeastLoaded
+        };
+        let (mut pool, root) = AccelPool::run(
+            PoolConfig::default()
+                .shards(shards)
+                .placement(placement)
+                .batch(batch)
+                .workers_per_shard(2),
+            |_s, _w| node_fn(|x: u64| x),
+        );
+        let joins: Vec<_> = (0..clients)
+            .map(|c| {
+                let mut h = root.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_client {
+                        h.offload(c * per_client + i).unwrap();
+                    }
+                    h.finish().unwrap();
+                })
+            })
+            .collect();
+        drop(root);
+        pool.offload_eos();
+        let total = clients * per_client;
+        let mut seen = vec![false; total as usize];
+        while let Some(v) = pool.load_result() {
+            assert!(!seen[v as usize], "duplicate {v}");
+            seen[v as usize] = true;
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        pool.wait();
+        assert!(seen.iter().all(|&s| s), "lost tasks");
+    });
+}
+
+#[test]
+fn prop_per_client_fifo_through_arbiter() {
+    // Each handle's lane is FIFO and the arbiter forwards lanes in
+    // order, so with a single shard and an ordered collector every
+    // client observes its own tasks in offload order in the merged
+    // stream — batched or not.
+    Cases::new("pool_client_fifo", 8).run(|g: &mut Gen| {
+        let clients = g.usize_in(1, 5) as u64;
+        let per_client = g.usize_in(1, 600) as u64;
+        let batch = g.usize_in(1, 33);
+        let (mut pool, root) = AccelPool::run(
+            PoolConfig::default()
+                .shards(1)
+                .batch(batch)
+                .farm(FarmConfig::default().workers(4).ordered()),
+            |_s, _w| node_fn(|t: (u64, u64)| t),
+        );
+        let joins: Vec<_> = (0..clients)
+            .map(|c| {
+                let mut h = root.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_client {
+                        h.offload((c, i)).unwrap();
+                    }
+                    h.finish().unwrap();
+                })
+            })
+            .collect();
+        drop(root);
+        pool.offload_eos();
+        let mut next = vec![0u64; clients as usize];
+        let mut count = 0u64;
+        while let Some((c, i)) = pool.load_result() {
+            assert_eq!(i, next[c as usize], "client {c} FIFO violated");
+            next[c as usize] += 1;
+            count += 1;
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        pool.wait();
+        assert_eq!(count, clients * per_client);
     });
 }
 
