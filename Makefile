@@ -9,7 +9,7 @@ CARGO  ?= cargo
 PYTHON ?= python
 ARTIFACT_DIR ?= artifacts
 
-.PHONY: all build test test-fallback bench bench-smoke artifacts fmt clippy pytest clean
+.PHONY: all build test test-fallback bench bench-smoke doc artifacts fmt clippy pytest clean
 
 all: build
 
@@ -31,14 +31,23 @@ bench:
 	cd rust && $(CARGO) bench --bench fig4_mandelbrot -- --quick
 	cd rust && $(CARGO) bench --bench table2_nqueens -- --quick
 
-# CI smoke lane: compile every bench, then run a short multi-client
-# sweep that writes $(ARTIFACT_DIR)/BENCH_accel.json (the machine-
-# readable perf trajectory benchkit emits via FF_BENCH_JSON).
+# CI smoke lane: compile every bench, then run short sweeps that write
+# $(ARTIFACT_DIR)/BENCH_accel.json (multi-client service) and
+# $(ARTIFACT_DIR)/BENCH_accel_nesting.json (composition overhead) — the
+# machine-readable perf trajectory benchkit emits via FF_BENCH_JSON.
 bench-smoke:
 	cd rust && $(CARGO) bench --no-run
 	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
 		FF_BENCH_JSON=$(abspath $(ARTIFACT_DIR)) \
 		$(CARGO) bench --bench accel_multiclient -- --quick
+	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
+		FF_BENCH_JSON=$(abspath $(ARTIFACT_DIR)) \
+		$(CARGO) bench --bench nested_topologies -- --quick
+
+# API docs with rustdoc warnings denied (deprecation shims must stay
+# documented; broken intra-doc links fail the build).
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
 # AOT-compile the JAX/Pallas kernels to HLO text (build-time only;
 # Python never runs at request time).

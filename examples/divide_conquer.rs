@@ -8,9 +8,7 @@
 
 use std::sync::Arc;
 
-use fastflow::accel::FarmAccel;
-use fastflow::farm::{FarmConfig, SchedPolicy};
-use fastflow::node::{node_fn};
+use fastflow::prelude::*;
 use fastflow::util::{fmt_duration, num_cpus, timed, XorShift64};
 
 /// A sortable range of the shared buffer. The buffer is shared mutable
@@ -55,13 +53,13 @@ fn main() {
     // Accelerated D&C.
     let buf = Arc::new(SharedBuf(std::cell::UnsafeCell::new(data)));
     let b2 = buf.clone();
-    let mut acc: FarmAccel<RangeTask, Done> = FarmAccel::run(
+    let mut acc: FarmAccel<RangeTask, Done> = farm(
         FarmConfig::default()
             .workers(workers)
             .sched(SchedPolicy::OnDemand),
         move |_| {
             let buf = b2.clone();
-            node_fn(move |t: RangeTask| {
+            seq_fn(move |t: RangeTask| {
                 // SAFETY: ranges in flight are disjoint.
                 let v = unsafe { &mut *buf.0.get() };
                 let slice = &mut v[t.lo..t.hi];
@@ -88,7 +86,8 @@ fn main() {
                 }
             })
         },
-    );
+    )
+    .into_accel();
 
     let (_, t_par) = timed(|| {
         // Feedback loop through the offloading thread. Deadlock-freedom:

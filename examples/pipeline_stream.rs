@@ -10,10 +10,7 @@
 //! cargo run --release --example pipeline_stream -- [lines] [workers]
 //! ```
 
-use fastflow::accel::Accel;
-use fastflow::farm::FarmConfig;
-use fastflow::node::{node_fn, Node, Outbox, Svc};
-use fastflow::pipeline::Pipeline;
+use fastflow::prelude::*;
 use fastflow::util::{fmt_duration, num_cpus, timed, XorShift64};
 
 /// Stage 1: split a line into words (multi-emission node).
@@ -76,13 +73,14 @@ fn main() {
             .unwrap()
     });
 
-    // Pipeline: tokenizer → farm(hash) → max-reduce, wrapped as an accelerator.
-    let pipe = Pipeline::new(Tokenizer)
-        .then_farm(FarmConfig::default().workers(workers), |_| {
-            node_fn(|w: String| heavy_hash(&w))
-        })
-        .then(node_fn(|h: u64| h));
-    let mut acc: Accel<String, u64> = Accel::from_skeleton(pipe.launch_accel());
+    // Pipeline: tokenizer → farm(hash) → max-reduce, wrapped as an
+    // accelerator — one combinator chain, one launch path.
+    let mut acc: Accel<String, u64> = seq(Tokenizer)
+        .then(farm(FarmConfig::default().workers(workers), |_| {
+            seq_fn(|w: String| heavy_hash(&w))
+        }))
+        .then(seq_fn(|h: u64| h))
+        .into_accel();
 
     let (par_max, t_par) = timed(|| {
         for line in &corpus {

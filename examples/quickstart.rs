@@ -10,12 +10,10 @@
 //! cargo run --release --example quickstart [n] [workers]
 //! ```
 
-use fastflow::accel::{AccelPool, PoolConfig};
 use fastflow::apps::matmul::{
     matmul_accelerated, matmul_pjrt_f32, matmul_ref_f32, matmul_sequential, Matrix, PJRT_N,
 };
-use fastflow::farm::FarmConfig;
-use fastflow::node::node_fn;
+use fastflow::prelude::*;
 use fastflow::runtime::MatmulKernel;
 use fastflow::util::{fmt_duration, num_cpus, timed, XorShift64};
 
@@ -48,12 +46,13 @@ fn main() {
     // == Migration: Accel → AccelHandle (the multi-client service) ==
     //
     // The single-client session:
-    //     let mut acc = FarmAccel::run(cfg, |_| worker());   // 1:1 device
+    //     let mut acc = farm(cfg, |_| seq(worker())).into_accel();  // 1:1 device
     //     acc.offload(t)?; … acc.load_result();
     // becomes, in two lines, a device shared by any number of threads:
     //     let (mut pool, h) = AccelPool::run(PoolConfig::default().farm(cfg),
     //                                        |_shard, _w| worker());
     //     h.offload(t)?; … pool.load_result();   // h.clone() per extra client
+    // (shards can be whole composed skeletons too: AccelPool::run_skeleton)
     println!("\n== AccelPool: the same device, shared by 4 client threads ==");
     let (mut pool, root) = AccelPool::run(
         PoolConfig::default()

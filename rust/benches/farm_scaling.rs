@@ -7,11 +7,9 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use fastflow::accel::FarmAccel;
 use fastflow::benchkit::{measure, BenchOpts, Report};
-use fastflow::farm::{FarmConfig, SchedPolicy};
 use fastflow::metrics::Table;
-use fastflow::node::node_fn;
+use fastflow::prelude::*;
 use fastflow::util::num_cpus;
 
 #[inline]
@@ -48,10 +46,11 @@ fn main() {
             for collector in [true, false] {
                 let (stats, _) = measure(opts, || {
                     if collector {
-                        let mut acc: FarmAccel<u64, u64> = FarmAccel::run(
+                        let mut acc: FarmAccel<u64, u64> = farm(
                             FarmConfig::default().workers(w).sched(sched),
-                            |_| node_fn(move |i: u64| spin_work(grain + (i & 7))),
-                        );
+                            |_| seq_fn(move |i: u64| spin_work(grain + (i & 7))),
+                        )
+                        .into_accel();
                         for i in 0..tasks {
                             acc.offload(i).unwrap();
                         }
@@ -61,15 +60,17 @@ fn main() {
                     } else {
                         let sink = Arc::new(AtomicU64::new(0));
                         let s2 = sink.clone();
-                        let mut acc: FarmAccel<u64, ()> = FarmAccel::run_no_collector(
+                        let mut acc: FarmAccel<u64, ()> = farm(
                             FarmConfig::default().workers(w).sched(sched),
                             move |_| {
                                 let sink = s2.clone();
-                                node_fn(move |i: u64| {
+                                seq_fn(move |i: u64| {
                                     sink.fetch_add(spin_work(grain + (i & 7)) & 1, Ordering::Relaxed);
                                 })
                             },
-                        );
+                        )
+                        .no_collector()
+                        .into_accel();
                         for i in 0..tasks {
                             acc.offload(i).unwrap();
                         }

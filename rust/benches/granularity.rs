@@ -11,12 +11,10 @@
 
 use std::sync::Arc;
 
-use fastflow::accel::FarmAccel;
 use fastflow::baseline::MutexQueue;
 use fastflow::benchkit::{measure, BenchOpts, Report};
-use fastflow::farm::FarmConfig;
 use fastflow::metrics::Table;
-use fastflow::node::node_fn;
+use fastflow::prelude::*;
 use fastflow::util::num_cpus;
 
 /// Busy-work calibrated in iterations (avoids timers in the hot loop).
@@ -60,10 +58,10 @@ fn main() {
 
         // FastFlow farm accelerator.
         let (farm_stats, _) = measure(opts, || {
-            let mut acc: FarmAccel<u64, u64> = FarmAccel::run(
-                FarmConfig::default().workers(workers),
-                |_| node_fn(move |i: u64| spin_work(grain + (i & 1))),
-            );
+            let mut acc: FarmAccel<u64, u64> = farm(FarmConfig::default().workers(workers), |_| {
+                seq_fn(move |i: u64| spin_work(grain + (i & 1)))
+            })
+            .into_accel();
             for i in 0..tasks {
                 acc.offload(i).unwrap();
             }

@@ -1,0 +1,140 @@
+//! Composition-overhead bench for the unified `Skeleton` algebra: what
+//! does each *hop* of a topology cost at near-zero task grain?
+//!
+//! Sweeps a fixed task stream through topologies of increasing nesting
+//! depth — a bare node, node chains, a flat farm, a farm whose workers
+//! are pipelines (adapter-bounded worker slots), and a pipeline of
+//! farms — and charges the measured ns/task to the number of
+//! thread-hops a task crosses. The delta between a node chain and the
+//! nested shapes is the price of the farm arbiters (emitter/collector)
+//! and of the worker-slot tag adapters, i.e. the cost of expressing a
+//! topology the old API could not express at all.
+//!
+//! `cargo bench --bench nested_topologies [-- --quick]`
+//! `FF_BENCH_JSON=dir` emits `BENCH_accel_nesting.json` next to the
+//! multi-client `BENCH_accel.json` for the CI perf trajectory.
+
+use fastflow::benchkit::{measure, BenchOpts, Report};
+use fastflow::metrics::Table;
+use fastflow::prelude::*;
+use fastflow::util::num_cpus;
+
+/// Tiny busy-work so the hop overhead dominates (matches granularity.rs).
+#[inline]
+fn spin_work(iters: u64) -> u64 {
+    let mut acc = 0u64;
+    for i in 0..iters {
+        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+    }
+    std::hint::black_box(acc)
+}
+
+const GRAIN: u64 = 16;
+
+#[inline]
+fn work(i: u64) -> u64 {
+    spin_work(GRAIN + (i & 1))
+}
+
+/// Run one accelerator to completion over `tasks` items; panics on loss.
+fn drive(mut acc: Accel<u64, u64>, tasks: u64) {
+    for i in 0..tasks {
+        acc.offload(i).unwrap();
+    }
+    acc.offload_eos();
+    let mut n = 0u64;
+    while acc.load_result().is_some() {
+        n += 1;
+    }
+    assert_eq!(n, tasks, "lost or duplicated results");
+    acc.wait();
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let tasks: u64 = if quick { 5_000 } else { 30_000 };
+    let workers = (num_cpus().max(2) - 1).min(4);
+
+    // Each row: (label, thread-hops a task crosses, builder closure).
+    let mut table = Table::new(&["topology", "threads", "hops/task", "ns/task", "ns/hop"]);
+    let mut notes = vec![];
+
+    let mut row = |label: &str, threads: usize, hops: u64, stats_mean: f64| {
+        let ns_task = stats_mean * 1e9 / tasks as f64;
+        table.row(vec![
+            label.to_string(),
+            threads.to_string(),
+            hops.to_string(),
+            format!("{ns_task:.0}"),
+            format!("{:.0}", ns_task / hops as f64),
+        ]);
+        ns_task
+    };
+
+    // 1 hop: a bare node.
+    let (s, _) = measure(opts, || drive(seq_fn(work).into_accel(), tasks));
+    let node_ns = row("seq", 1, 1, s.mean);
+
+    // 3 hops: node chain (pure pipeline, no arbiters).
+    let (s, _) = measure(opts, || {
+        drive(
+            seq_fn(work).then(seq_fn(|x: u64| x)).then(seq_fn(|x: u64| x)).into_accel(),
+            tasks,
+        )
+    });
+    let chain_ns = row("seq.then(seq).then(seq)", 3, 3, s.mean);
+
+    // 3 hops: flat farm (emitter + worker + collector).
+    let flat = || farm(FarmConfig::default().workers(workers), |_| seq_fn(work));
+    let (s, _) = measure(opts, || drive(flat().into_accel(), tasks));
+    let farm_threads = flat().thread_count();
+    let farm_ns = row("farm(seq)", farm_threads, 3, s.mean);
+
+    // 6 hops: farm of 2-stage pipelines (worker slots pay the tag
+    // ingress/egress adapters: emitter + in + 2 stages + out + collector).
+    let nested = || {
+        farm(FarmConfig::default().workers(workers), |_| {
+            seq_fn(work).then(seq_fn(|x: u64| x))
+        })
+    };
+    let (s, _) = measure(opts, || drive(nested().into_accel(), tasks));
+    let nested_threads = nested().thread_count();
+    let nested_ns = row("farm(seq.then(seq))", nested_threads, 6, s.mean);
+
+    // 6 hops: pipeline of two farms.
+    let pipeline_of_farms = || {
+        farm(FarmConfig::default().workers(workers.max(2) / 2), |_| seq_fn(work)).then(farm(
+            FarmConfig::default().workers(workers.max(2) / 2),
+            |_| seq_fn(|x: u64| x),
+        ))
+    };
+    let (s, _) = measure(opts, || drive(pipeline_of_farms().into_accel(), tasks));
+    let pof_threads = pipeline_of_farms().thread_count();
+    let pof_ns = row("farm(seq).then(farm(seq))", pof_threads, 6, s.mean);
+
+    notes.push(format!(
+        "per-hop baseline: node {:.0} ns, chain {:.0} ns/hop",
+        node_ns,
+        chain_ns / 3.0
+    ));
+    notes.push(format!(
+        "arbiter premium: flat farm {:.0} ns/task vs chain {:.0}; \
+         nesting premium: farm-of-pipelines {:.0}, pipeline-of-farms {:.0}",
+        farm_ns, chain_ns, nested_ns, pof_ns
+    ));
+
+    let mut report = Report::new("accel_nesting", table);
+    report.note(format!(
+        "grain {GRAIN} iters (~{GRAIN}ns/task), {tasks} tasks, {workers} workers/farm, {} cpu(s)",
+        num_cpus()
+    ));
+    report.note(
+        "hops = thread boundaries a task crosses; ns/hop isolates the per-boundary \
+         cost of composing topologies (farm arbiters, worker-slot tag adapters)",
+    );
+    for n in notes {
+        report.note(n);
+    }
+    report.emit();
+}

@@ -82,7 +82,7 @@ impl<T: Send + 'static> LaneRegistry<T> {
 /// Migrating from the single-client [`super::Accel`] is two lines:
 ///
 /// ```text
-/// let mut acc = FarmAccel::run(cfg, factory);          // before
+/// let mut acc = farm(cfg, |w| seq(worker(w))).into_accel();   // before
 /// let (mut pool, mut h) = AccelPool::run(pool_cfg, factory);  // after
 /// acc.offload(t)?  →  h.offload(t)?     (h.clone() for more clients)
 /// acc.load_result()  →  pool.load_result()

@@ -5,8 +5,12 @@
 //!
 //! * [`session`] — the paper's Fig. 3 single-client cycle protocol:
 //!   one sequential caller owns one [`Accel`], offloads, pops results,
-//!   freezes/thaws between bursts. Unchanged API, the 1:1 shape of the
-//!   original `ff_farm(true /*accel*/)`.
+//!   freezes/thaws between bursts — the 1:1 shape of the original
+//!   `ff_farm(true /*accel*/)`. An accelerator is just a composed
+//!   skeleton run on spare cores: build one from **any**
+//!   [`crate::skeleton::Skeleton`] with
+//!   [`crate::skeleton::Skeleton::into_accel`] /
+//!   [`crate::skeleton::Skeleton::into_accel_frozen`].
 //! * [`client`] — [`AccelHandle`], a cloneable offload capability.
 //!   Every clone owns a **private SPSC lane** into an input-arbiter
 //!   thread, so any number of client threads can offload concurrently
@@ -15,10 +19,11 @@
 //!   [`crate::channel::Msg::Batch`] frames to amortize per-item
 //!   synchronization on fine-grained tasks.
 //! * [`pool`] — [`AccelPool`], which shards offloaded work across N
-//!   independently-launched farm accelerators (round-robin or
-//!   least-loaded placement), merges their result streams, and runs the
-//!   pool-wide lifecycle (`offload_eos` / `wait_freezing` / `thaw` /
-//!   `wait`).
+//!   independently-launched skeleton accelerators — farms by default,
+//!   or arbitrary topologies via [`AccelPool::run_skeleton`]
+//!   (round-robin or least-loaded placement) — merges their result
+//!   streams, and runs the pool-wide lifecycle (`offload_eos` /
+//!   `wait_freezing` / `thaw` / `wait`).
 //!
 //! ```text
 //!  client₀ ──spsc──┐
@@ -37,7 +42,12 @@ pub use pool::{AccelPool, Placement, PoolConfig};
 pub use session::{Accel, FarmAccel};
 
 /// Errors surfaced by the offload interface.
+///
+/// Marked `#[non_exhaustive]`: downstream matches must keep a wildcard
+/// arm so new failure modes (e.g. future bounded-lane backpressure) can
+/// be added without a breaking release.
 #[derive(Debug, PartialEq, Eq)]
+#[non_exhaustive]
 pub enum AccelError {
     /// The accelerator's threads are gone (e.g. a worker panicked) or
     /// the skeleton was poisoned by a protocol violation (e.g. an

@@ -1,10 +1,12 @@
-//! The sharded **accelerator pool**: N independently-launched farm
+//! The sharded **accelerator pool**: N independently-launched skeleton
 //! accelerators behind one input arbiter and one merged result drain.
 //!
 //! One skeleton accelerator saturates once its emitter (one thread)
 //! becomes the serialization point; the pool scales past that by
-//! running `shards` complete farms and placing offloaded work across
-//! them:
+//! running `shards` complete skeleton instances — farms by default
+//! ([`AccelPool::run`]), or **any** composed topology via
+//! [`AccelPool::run_skeleton`] (e.g. a pool of per-shard pipelines
+//! `decode.then(farm(…))`) — and placing offloaded work across them:
 //!
 //! * [`Placement::RoundRobin`] — stateless rotation, best for regular
 //!   tasks;
@@ -31,8 +33,9 @@ use std::time::Instant;
 
 use super::client::{AccelHandle, LaneRegistry, NewLane};
 use crate::channel::{stream_unbounded, Msg, Receiver, Sender};
-use crate::farm::{launch_farm, FarmConfig, FarmOutput};
+use crate::farm::{farm, FarmConfig};
 use crate::node::{Lifecycle, Node, RunMode};
+use crate::skeleton::builder::{seq, Skeleton};
 use crate::skeleton::SkeletonHandle;
 use crate::trace::{NodeTrace, TraceReport, TraceRow};
 use crate::util::Backoff;
@@ -93,6 +96,7 @@ impl PoolConfig {
     /// default it is rescaled across the new shard count — call
     /// [`PoolConfig::workers_per_shard`] / [`PoolConfig::farm`] *after*
     /// `shards` to override it.
+    #[must_use]
     pub fn shards(mut self, n: usize) -> Self {
         let was_default = self.farm.workers == default_workers_per_shard(self.shards);
         self.shards = n.max(1);
@@ -101,22 +105,41 @@ impl PoolConfig {
         }
         self
     }
+    #[must_use]
     pub fn placement(mut self, p: Placement) -> Self {
         self.placement = p;
         self
     }
+    #[must_use]
     pub fn batch(mut self, b: usize) -> Self {
         self.batch = b.max(1);
         self
     }
+    #[must_use]
     pub fn farm(mut self, cfg: FarmConfig) -> Self {
         self.farm = cfg;
         self
     }
     /// Convenience: set each shard's worker count.
+    #[must_use]
     pub fn workers_per_shard(mut self, n: usize) -> Self {
         self.farm.workers = n.max(1);
         self
+    }
+
+    /// Launch a one-shot pool whose shards are arbitrary skeletons —
+    /// `self.run_skeleton(|shard| skel)` sugar for
+    /// [`AccelPool::run_skeleton`]. The per-shard [`PoolConfig::farm`]
+    /// config is ignored (the factory decides each shard's topology);
+    /// `shards`, `placement`, and `batch` apply unchanged.
+    pub fn run_skeleton<I, O, S, F>(self, factory: F) -> (AccelPool<I, O>, AccelHandle<I>)
+    where
+        I: Send + 'static,
+        O: Send + 'static,
+        S: Skeleton<I, O>,
+        F: FnMut(usize) -> S,
+    {
+        AccelPool::run_skeleton(self, factory)
     }
 }
 
@@ -169,39 +192,72 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
     /// [`AccelPool::wait`]). The factory builds one worker node per
     /// `(shard, worker)` slot. Returns the pool and a first client
     /// handle — `clone()` it for more clients.
-    pub fn run<W, F>(cfg: PoolConfig, factory: F) -> (Self, AccelHandle<I>)
+    pub fn run<W, F>(cfg: PoolConfig, mut factory: F) -> (Self, AccelHandle<I>)
     where
         W: Node<In = I, Out = O> + 'static,
         F: FnMut(usize, usize) -> W,
     {
-        Self::launch(cfg, RunMode::RunToEnd, factory)
+        let farm_cfg = cfg.farm.clone();
+        Self::launch(cfg, RunMode::RunToEnd, move |si| {
+            farm(farm_cfg.clone(), |wi| seq(factory(si, wi)))
+        })
     }
 
     /// Launch a pool in freeze mode: after each pool-wide EOS the
     /// threads park and can be [`AccelPool::thaw`]ed for the next burst.
-    pub fn run_then_freeze<W, F>(cfg: PoolConfig, factory: F) -> (Self, AccelHandle<I>)
+    pub fn run_then_freeze<W, F>(cfg: PoolConfig, mut factory: F) -> (Self, AccelHandle<I>)
     where
         W: Node<In = I, Out = O> + 'static,
         F: FnMut(usize, usize) -> W,
     {
+        let farm_cfg = cfg.farm.clone();
+        Self::launch(cfg, RunMode::RunThenFreeze, move |si| {
+            farm(farm_cfg.clone(), |wi| seq(factory(si, wi)))
+        })
+    }
+
+    /// Launch a one-shot pool whose shards are **arbitrary skeletons**:
+    /// `factory(shard)` builds each shard's topology — a pipeline, a
+    /// nested farm, a feedback loop, anything composed from the
+    /// [`Skeleton`] algebra. Placement, batching, and the merged drain
+    /// are identical to the farm-shard pool. Note that a shard whose
+    /// outermost component is a `seq`/pipeline has a *bounded* input
+    /// queue, so a backlogged shard can briefly stall the arbiter
+    /// (farm-led shards keep the unbounded offload buffer).
+    pub fn run_skeleton<S, F>(cfg: PoolConfig, factory: F) -> (Self, AccelHandle<I>)
+    where
+        S: Skeleton<I, O>,
+        F: FnMut(usize) -> S,
+    {
+        Self::launch(cfg, RunMode::RunToEnd, factory)
+    }
+
+    /// Freeze-mode counterpart of [`AccelPool::run_skeleton`].
+    pub fn run_skeleton_then_freeze<S, F>(cfg: PoolConfig, factory: F) -> (Self, AccelHandle<I>)
+    where
+        S: Skeleton<I, O>,
+        F: FnMut(usize) -> S,
+    {
         Self::launch(cfg, RunMode::RunThenFreeze, factory)
     }
 
-    fn launch<W, F>(cfg: PoolConfig, mode: RunMode, mut factory: F) -> (Self, AccelHandle<I>)
+    fn launch<S, F>(cfg: PoolConfig, mode: RunMode, mut factory: F) -> (Self, AccelHandle<I>)
     where
-        W: Node<In = I, Out = O> + 'static,
-        F: FnMut(usize, usize) -> W,
+        S: Skeleton<I, O>,
+        F: FnMut(usize) -> S,
     {
         let nshards = cfg.shards.max(1);
         let mut shard_inputs = Vec::with_capacity(nshards);
         let mut outputs = Vec::with_capacity(nshards);
         let mut shards = Vec::with_capacity(nshards);
         for si in 0..nshards {
-            let skel =
-                launch_farm(cfg.farm.clone(), mode, |wi| factory(si, wi), FarmOutput::Stream);
+            let skel = factory(si).launch(mode);
             let (input, output, handle) = skel.split();
             shard_inputs.push(input);
-            outputs.push(output.expect("farm accelerators always stream"));
+            outputs.push(output.expect(
+                "pool shards must produce an output stream — a collector-less \
+                 farm cannot be a pool shard (its results bypass the drain)",
+            ));
             shards.push(handle);
         }
         let completed: Arc<Vec<AtomicU64>> =
@@ -276,6 +332,7 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
 
     /// Pop one merged result if immediately available, polling the
     /// shards round-robin from the last productive one.
+    #[must_use = "a popped result must be consumed (None may just mean not-ready-yet)"]
     pub fn load_result_nb(&mut self) -> Option<O> {
         if let Some((s, v)) = self.pending.pop_front() {
             self.note_completed(s);
@@ -799,6 +856,75 @@ mod tests {
         drop(h);
         pool.offload_eos();
         assert!(pool.load_result().is_none());
+        pool.wait();
+    }
+
+    #[test]
+    fn pool_of_pipeline_shards_exactly_once() {
+        // The api_redesign acceptance shape: every shard is a pipeline
+        // (seq → farm), launched through the same pool plumbing.
+        use crate::skeleton::seq_fn;
+        let (mut pool, root) = AccelPool::run_skeleton(
+            PoolConfig::default().shards(2).batch(4),
+            |_shard| {
+                seq_fn(|x: u64| x + 1).then(farm(
+                    FarmConfig::default().workers(2).ordered(),
+                    |_| seq_fn(|x: u64| x * 3),
+                ))
+            },
+        );
+        let clients = 3u64;
+        let per_client = 500u64;
+        let joins: Vec<_> = (0..clients)
+            .map(|c| {
+                let mut h = root.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_client {
+                        h.offload(c * per_client + i).unwrap();
+                    }
+                    h.finish().unwrap();
+                })
+            })
+            .collect();
+        drop(root);
+        pool.offload_eos();
+        let total = clients * per_client;
+        let mut seen = vec![false; total as usize];
+        while let Some(v) = pool.load_result() {
+            let orig = (v / 3) - 1;
+            assert_eq!((orig + 1) * 3, v, "value not of pipeline shape: {v}");
+            assert!(!seen[orig as usize], "duplicate {orig}");
+            seen[orig as usize] = true;
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert!(seen.iter().all(|&s| s), "lost tasks");
+        // Shard trace rows carry the pipeline's stage names.
+        let report = pool.wait();
+        assert!(report
+            .rows
+            .iter()
+            .any(|r| r.name.starts_with("s0/stage-") || r.name.starts_with("s1/stage-")));
+    }
+
+    #[test]
+    fn config_run_skeleton_sugar() {
+        use crate::skeleton::seq_fn;
+        let (mut pool, mut h) = PoolConfig::default()
+            .shards(2)
+            .run_skeleton(|_| seq_fn(|x: u64| x * 2));
+        for i in 0..100u64 {
+            h.offload(i).unwrap();
+        }
+        h.finish().unwrap();
+        pool.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = pool.load_result() {
+            got.push(v);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..100u64).map(|i| i * 2).collect::<Vec<_>>());
         pool.wait();
     }
 

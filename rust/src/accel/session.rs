@@ -4,12 +4,11 @@
 //! The API mirrors the paper's Fig. 3 protocol:
 //!
 //! ```no_run
-//! use fastflow::accel::FarmAccel;
-//! use fastflow::farm::FarmConfig;
+//! use fastflow::prelude::*;
 //!
 //! // ff::ff_farm<> farm(true /*accel*/); farm.add_workers(w);
 //! let mut acc: FarmAccel<u64, u64> =
-//!     FarmAccel::run_then_freeze(FarmConfig::default().workers(4), |_| fastflow::node::node_fn(|x: u64| x * x));
+//!     farm(FarmConfig::default().workers(4), |_| seq_fn(|x: u64| x * x)).into_accel_frozen();
 //!
 //! // farm.offload(task);
 //! for i in 0..100 {
@@ -39,15 +38,18 @@ use std::sync::Arc;
 
 use super::AccelError;
 use crate::channel::Msg;
-use crate::farm::{launch_farm, FarmConfig, FarmOutput};
+use crate::farm::{farm, FarmConfig};
 use crate::node::{LifecycleState, Node, RunMode};
+use crate::skeleton::builder::{seq, Skeleton};
 use crate::skeleton::LaunchedSkeleton;
 use crate::trace::TraceReport;
 
 /// A software accelerator wrapping any launched skeleton.
 ///
-/// Obtained from [`FarmAccel::run`] / [`FarmAccel::run_then_freeze`] (farm
-/// body) or [`crate::pipeline::Pipeline`]'s accelerator launchers.
+/// Obtained from [`crate::skeleton::Skeleton::into_accel`] /
+/// [`crate::skeleton::Skeleton::into_accel_frozen`] on any composed
+/// skeleton (or [`Accel::from_skeleton`] around an explicit
+/// [`crate::skeleton::Skeleton::launch`]).
 pub struct Accel<I: Send + 'static, O: Send + 'static> {
     skel: LaunchedSkeleton<I, O>,
     /// Tasks offloaded in the current run cycle.
@@ -80,51 +82,62 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
 
     /// Create **and run** a farm accelerator (one-shot: after EOS the
     /// threads exit; use [`Accel::wait`] to join).
-    pub fn run<W, F>(cfg: FarmConfig, factory: F) -> Self
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `farm(cfg, |w| seq(factory(w))).into_accel()`"
+    )]
+    pub fn run<W, F>(cfg: FarmConfig, mut factory: F) -> Self
     where
         W: Node<In = I, Out = O> + 'static,
         F: FnMut(usize) -> W,
     {
-        Self::from_skeleton(launch_farm(cfg, RunMode::RunToEnd, factory, FarmOutput::Stream))
+        farm(cfg, move |wi| seq(factory(wi))).into_accel()
     }
 
     /// Create and run a farm accelerator in **freeze** mode: after each
     /// EOS the threads park (OS-suspended) and can be [`Accel::thaw`]ed
     /// for the next burst — the paper's `run_then_freeze()`.
-    pub fn run_then_freeze<W, F>(cfg: FarmConfig, factory: F) -> Self
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `farm(cfg, |w| seq(factory(w))).into_accel_frozen()`"
+    )]
+    pub fn run_then_freeze<W, F>(cfg: FarmConfig, mut factory: F) -> Self
     where
         W: Node<In = I, Out = O> + 'static,
         F: FnMut(usize) -> W,
     {
-        Self::from_skeleton(launch_farm(
-            cfg,
-            RunMode::RunThenFreeze,
-            factory,
-            FarmOutput::Stream,
-        ))
+        farm(cfg, move |wi| seq(factory(wi))).into_accel_frozen()
     }
 
-    /// Collector-less variants (paper §4.2): worker outputs are discarded;
-    /// results travel through shared state.
-    pub fn run_no_collector<W, F>(cfg: FarmConfig, factory: F) -> Self
+    /// Collector-less variant (paper §4.2): worker outputs are
+    /// discarded; results travel through shared state.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `farm(cfg, |w| seq(factory(w))).no_collector().into_accel()`"
+    )]
+    pub fn run_no_collector<W, F>(cfg: FarmConfig, mut factory: F) -> Self
     where
         W: Node<In = I, Out = O> + 'static,
         F: FnMut(usize) -> W,
     {
-        Self::from_skeleton(launch_farm(cfg, RunMode::RunToEnd, factory, FarmOutput::None))
+        farm(cfg, move |wi| seq(factory(wi)))
+            .no_collector()
+            .into_accel()
     }
 
-    pub fn run_then_freeze_no_collector<W, F>(cfg: FarmConfig, factory: F) -> Self
+    /// Collector-less freeze-mode variant.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `farm(cfg, |w| seq(factory(w))).no_collector().into_accel_frozen()`"
+    )]
+    pub fn run_then_freeze_no_collector<W, F>(cfg: FarmConfig, mut factory: F) -> Self
     where
         W: Node<In = I, Out = O> + 'static,
         F: FnMut(usize) -> W,
     {
-        Self::from_skeleton(launch_farm(
-            cfg,
-            RunMode::RunThenFreeze,
-            factory,
-            FarmOutput::None,
-        ))
+        farm(cfg, move |wi| seq(factory(wi)))
+            .no_collector()
+            .into_accel_frozen()
     }
 
     /// Offload one task onto the accelerator (blocking on backpressure —
@@ -176,6 +189,7 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
     /// Non-blocking offload. Fails with the same [`AccelError::Closed`]
     /// as [`Accel::offload`] once the cycle's EOS has been sent.
     #[inline]
+    #[must_use = "on failure the task is handed back and must not be dropped"]
     pub fn try_offload(&mut self, task: I) -> Result<(), (I, AccelError)> {
         if self.eos_sent {
             return Err((task, AccelError::Closed));
@@ -237,6 +251,7 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
 
     /// Pop one result if immediately available (the paper's non-blocking
     /// `load_result_nb`).
+    #[must_use = "a popped result must be consumed (None may just mean not-ready-yet)"]
     pub fn load_result_nb(&mut self) -> Option<O> {
         loop {
             if let Some(v) = self.pending.pop_front() {
@@ -334,12 +349,12 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
 mod tests {
     use super::*;
     use crate::farm::SchedPolicy;
-    use crate::node::node_fn;
+    use crate::skeleton::seq_fn;
 
     #[test]
     fn one_shot_offload_and_drain() {
         let mut acc: FarmAccel<u64, u64> =
-            FarmAccel::run(FarmConfig::default().workers(3), |_| node_fn(|x: u64| x + 1));
+            farm(FarmConfig::default().workers(3), |_| seq_fn(|x: u64| x + 1)).into_accel();
         for i in 0..1000 {
             acc.offload(i).unwrap();
         }
@@ -358,7 +373,7 @@ mod tests {
     #[test]
     fn offload_after_eos_is_closed() {
         let mut acc: FarmAccel<u64, u64> =
-            FarmAccel::run(FarmConfig::default().workers(2), |_| node_fn(|x: u64| x));
+            farm(FarmConfig::default().workers(2), |_| seq_fn(|x: u64| x)).into_accel();
         acc.offload(1).unwrap();
         acc.offload_eos();
         assert_eq!(acc.offload(2), Err(AccelError::Closed));
@@ -381,7 +396,7 @@ mod tests {
     #[test]
     fn thaw_reopens_input_after_closed() {
         let mut acc: FarmAccel<u64, u64> =
-            FarmAccel::run_then_freeze(FarmConfig::default().workers(2), |_| node_fn(|x: u64| x));
+            farm(FarmConfig::default().workers(2), |_| seq_fn(|x: u64| x)).into_accel_frozen();
         acc.offload_eos();
         assert_eq!(acc.offload(1), Err(AccelError::Closed));
         while acc.load_result().is_some() {}
@@ -396,10 +411,11 @@ mod tests {
     #[test]
     fn freeze_thaw_multiple_bursts() {
         // The QT-Mandelbrot pattern: one accelerator reused across passes.
-        let mut acc: FarmAccel<u64, u64> = FarmAccel::run_then_freeze(
+        let mut acc: FarmAccel<u64, u64> = farm(
             FarmConfig::default().workers(4).sched(SchedPolicy::OnDemand),
-            |_| node_fn(|x: u64| x * 10),
-        );
+            |_| seq_fn(|x: u64| x * 10),
+        )
+        .into_accel_frozen();
         for burst in 0..5u64 {
             if burst > 0 {
                 acc.thaw();
@@ -432,12 +448,14 @@ mod tests {
         let total = Arc::new(AtomicU64::new(0));
         let t2 = total.clone();
         let mut acc: FarmAccel<u64, ()> =
-            FarmAccel::run_no_collector(FarmConfig::default().workers(4), move |_| {
+            farm(FarmConfig::default().workers(4), move |_| {
                 let total = t2.clone();
-                node_fn(move |x: u64| {
+                seq_fn(move |x: u64| {
                     total.fetch_add(x, Ordering::Relaxed);
                 })
-            });
+            })
+            .no_collector()
+            .into_accel();
         for i in 1..=100 {
             acc.offload(i).unwrap();
         }
@@ -450,15 +468,16 @@ mod tests {
     #[test]
     fn try_offload_backpressure() {
         // Slow worker + tiny queues: try_offload must eventually WouldBlock.
-        let mut acc: FarmAccel<u64, u64> = FarmAccel::run(
+        let mut acc: FarmAccel<u64, u64> = farm(
             FarmConfig::default().workers(1).queue_caps(1, 1, 1),
             |_| {
-                node_fn(|x: u64| {
+                seq_fn(|x: u64| {
                     std::thread::sleep(std::time::Duration::from_millis(2));
                     x
                 })
             },
-        );
+        )
+        .into_accel();
         let mut would_block = false;
         for i in 0..64 {
             match acc.try_offload(i) {
@@ -478,7 +497,7 @@ mod tests {
     #[test]
     fn wait_without_explicit_eos_still_joins() {
         let mut acc: FarmAccel<u64, u64> =
-            FarmAccel::run(FarmConfig::default().workers(2), |_| node_fn(|x: u64| x));
+            farm(FarmConfig::default().workers(2), |_| seq_fn(|x: u64| x)).into_accel();
         acc.offload(1).unwrap();
         acc.offload(2).unwrap();
         // wait() sends EOS, drains, joins.
@@ -495,7 +514,7 @@ mod tests {
     #[test]
     fn accel_state_transitions() {
         let mut acc: FarmAccel<u64, u64> =
-            FarmAccel::run_then_freeze(FarmConfig::default().workers(2), |_| node_fn(|x: u64| x));
+            farm(FarmConfig::default().workers(2), |_| seq_fn(|x: u64| x)).into_accel_frozen();
         assert_eq!(acc.state(), LifecycleState::Running);
         acc.offload_eos();
         acc.wait_freezing();
@@ -505,10 +524,11 @@ mod tests {
 
     #[test]
     fn offload_batch_equals_per_item() {
-        let mut acc: FarmAccel<u64, u64> = FarmAccel::run(
+        let mut acc: FarmAccel<u64, u64> = farm(
             FarmConfig::default().workers(3).ordered(),
-            |_| node_fn(|x: u64| x + 7),
-        );
+            |_| seq_fn(|x: u64| x + 7),
+        )
+        .into_accel();
         acc.offload(0).unwrap();
         acc.offload_batch((1..100).collect()).unwrap();
         acc.offload_batch(vec![]).unwrap(); // no-op
@@ -544,7 +564,7 @@ mod tests {
             }
         }
         let mut acc: FarmAccel<u64, u64> =
-            FarmAccel::run(FarmConfig::default().workers(1).ordered(), |_| Rogue);
+            farm(FarmConfig::default().workers(1).ordered(), |_| seq(Rogue)).into_accel();
         let mut offload_err = None;
         for i in 0..10_000u64 {
             if let Err(e) = acc.offload(i) {

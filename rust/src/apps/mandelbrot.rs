@@ -24,8 +24,9 @@
 use std::sync::Arc;
 
 use crate::accel::{AccelHandle, AccelPool, FarmAccel, Placement, PoolConfig};
-use crate::farm::{FarmConfig, SchedPolicy};
+use crate::farm::{farm, FarmConfig, SchedPolicy};
 use crate::node::{node_fn, Node, Outbox, Svc};
+use crate::skeleton::{seq, Skeleton};
 use crate::runtime::{MandelTileKernel, MANDEL_TILE};
 use crate::trace::TraceReport;
 use crate::util::{AbortFlag, SendCell};
@@ -318,11 +319,14 @@ impl AcceleratedRenderer {
             // rows have very different costs: on-demand scheduling
             .sched(SchedPolicy::OnDemand);
         let p2 = params.clone();
-        let acc = FarmAccel::run_then_freeze(cfg, move |_| RowWorker {
-            params: p2.clone(),
-            engine,
-            kernel: SendCell::empty(),
-        });
+        let acc = farm(cfg, move |_| {
+            seq(RowWorker {
+                params: p2.clone(),
+                engine,
+                kernel: SendCell::empty(),
+            })
+        })
+        .into_accel_frozen();
         AcceleratedRenderer {
             acc,
             params,

@@ -18,8 +18,9 @@ use std::cell::UnsafeCell;
 use std::sync::Arc;
 
 use crate::accel::FarmAccel;
-use crate::farm::FarmConfig;
+use crate::farm::{farm, FarmConfig};
 use crate::node::{Node, Outbox, Svc};
+use crate::skeleton::{seq, Skeleton};
 use crate::runtime::{KernelError, MatmulKernel, MATMUL_N};
 use crate::util::XorShift64;
 
@@ -160,14 +161,15 @@ pub fn matmul_accelerated(a: &Matrix, b: &Matrix, workers: usize) -> Matrix {
     let b = Arc::new(b.clone());
     let c = SharedResult::new(n);
     let (a2, b2, c2) = (a.clone(), b.clone(), c.clone());
-    let mut acc: FarmAccel<RowTask, ()> = FarmAccel::run_no_collector(
-        FarmConfig::default().workers(workers),
-        move |_| RowWorker {
+    let mut acc: FarmAccel<RowTask, ()> = farm(FarmConfig::default().workers(workers), move |_| {
+        seq(RowWorker {
             a: a2.clone(),
             b: b2.clone(),
             c: c2.clone(),
-        },
-    );
+        })
+    })
+    .no_collector()
+    .into_accel();
     for i in 0..n {
         acc.offload(i).expect("offload");
     }

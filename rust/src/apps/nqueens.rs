@@ -18,8 +18,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::accel::FarmAccel;
-use crate::farm::{FarmConfig, SchedPolicy};
+use crate::farm::{farm, FarmConfig, SchedPolicy};
 use crate::node::{Node, Outbox, Svc};
+use crate::skeleton::{seq, Skeleton};
 
 /// Known solution counts (OEIS A000170) for validation.
 pub fn known_solutions(n: u32) -> Option<u64> {
@@ -220,16 +221,20 @@ pub fn count_parallel(n: u32, depth: u32, workers: usize) -> ParallelRun {
     let ntasks = tasks.len();
     let total = Arc::new(AtomicU64::new(0));
     let t2 = total.clone();
-    let mut acc: FarmAccel<PrefixTask, ()> = FarmAccel::run_no_collector(
+    let mut acc: FarmAccel<PrefixTask, ()> = farm(
         FarmConfig::default()
             .workers(workers)
             .sched(SchedPolicy::OnDemand),
-        move |_| QueensWorker {
-            n,
-            local: 0,
-            total: t2.clone(),
+        move |_| {
+            seq(QueensWorker {
+                n,
+                local: 0,
+                total: t2.clone(),
+            })
         },
-    );
+    )
+    .no_collector()
+    .into_accel();
     for t in tasks {
         acc.offload(t).expect("offload");
     }

@@ -15,16 +15,22 @@
 //!            └── spsc ──▶ out
 //! ```
 //!
+//! Build with the [`feedback`] combinator. The workers are **any**
+//! [`Skeleton`] mapping `Task → Result`, and the whole loop is itself a
+//! skeleton, so it composes as a pipeline stage
+//! (`seq(pre).then(feedback(cfg, master, …)).then(seq(post))`) or lives
+//! inside an [`crate::accel::AccelPool`] shard.
+//!
 //! Termination is the programmer's protocol (§3.1): the master's hooks
 //! return [`Svc::Eos`] when the recursion tree is exhausted (typically:
 //! external input closed *and* in-flight count is zero).
 
 use std::sync::Arc;
 
-use crate::channel::{stream, stream_unbounded, Msg, Sender};
+use crate::channel::{stream, stream_unbounded, Msg, Receiver, Sender};
 use crate::farm::{FarmConfig, SchedPolicy};
-use crate::node::{Lifecycle, Node, NodeRunner, OutTarget, RunMode, Svc};
-use crate::sched::CpuMap;
+use crate::node::{Node, OutTarget, RunMode, Svc};
+use crate::skeleton::builder::{seq, Skeleton, WireCtx};
 use crate::skeleton::LaunchedSkeleton;
 use crate::trace::NodeTrace;
 use crate::util::Backoff;
@@ -154,80 +160,121 @@ fn mk_ctx<'a, M: MasterLogic + ?Sized>(
     }
 }
 
-/// Launch a master-worker skeleton.
+/// The master–worker feedback combinator. Build with [`feedback`].
+#[must_use = "skeletons are blueprints: nothing runs until launch"]
+pub struct Feedback<M: MasterLogic, S> {
+    cfg: FarmConfig,
+    master: M,
+    workers: Vec<S>,
+}
+
+/// Create a master–worker feedback loop: `master` runs on the CE
+/// arbiter thread, `factory(i)` builds worker slot `i` — **any**
+/// skeleton mapping `Task → Result`. The factory runs eagerly, once per
+/// slot, at construction time.
 ///
 /// Workers must emit **exactly one** `Result` per `Task` (the in-flight
 /// accounting depends on it; multi-result recursion is expressed by
 /// returning a `Result` that encodes subtasks, which the master
 /// re-dispatches — see `examples/divide_conquer.rs` for the pattern).
-pub fn launch_master_worker<M, W, F>(
-    cfg: FarmConfig,
-    mode: RunMode,
-    mut master: M,
-    mut factory: F,
-) -> LaunchedSkeleton<M::In, M::Out>
+pub fn feedback<M, S, F>(cfg: FarmConfig, master: M, mut factory: F) -> Feedback<M, S>
 where
     M: MasterLogic + 'static,
-    W: Node<In = M::Task, Out = M::Result> + 'static,
-    F: FnMut(usize) -> W,
+    S: Skeleton<M::Task, M::Result>,
+    F: FnMut(usize) -> S,
 {
-    let nworkers = cfg.workers.max(1);
-    let nthreads = nworkers + 1;
-    let lifecycle = Lifecycle::new(nthreads, mode);
-    let cpu_map = CpuMap::build(cfg.mapping, nthreads, &cfg.explicit_cores);
-    let mut joins = Vec::with_capacity(nthreads);
-    let mut traces: Vec<(String, Arc<NodeTrace>)> = Vec::with_capacity(nthreads);
+    let n = cfg.workers.max(1);
+    Feedback {
+        master,
+        workers: (0..n).map(&mut factory).collect(),
+        cfg,
+    }
+}
 
-    // external input / output (unbounded: accelerator-grade)
-    let (input_tx, mut input_rx) = stream_unbounded::<M::In>();
-    let (output_tx, output_rx) = stream_unbounded::<M::Out>();
+impl<M, S> Skeleton<M::In, M::Out> for Feedback<M, S>
+where
+    M: MasterLogic + 'static,
+    S: Skeleton<M::Task, M::Result>,
+{
+    fn thread_count(&self) -> usize {
+        1 + self.workers.iter().map(|w| w.thread_count()).sum::<usize>()
+    }
 
-    // master → workers
-    let wcap = match cfg.sched {
-        SchedPolicy::RoundRobin => cfg.worker_cap,
-        SchedPolicy::OnDemand => 2,
+    fn wire(self, out: OutTarget<M::Out>, ctx: &mut WireCtx<'_>) -> Sender<M::In> {
+        wire_master_worker(&self.cfg, self.master, self.workers, out, ctx)
+    }
+
+    /// Overridden to honour the config's mapping policy in every
+    /// context, generic callers included.
+    fn launch(self, mode: RunMode) -> LaunchedSkeleton<M::In, M::Out> {
+        let mapping = self.cfg.mapping;
+        let cores = self.cfg.explicit_cores.clone();
+        self.launch_pinned(mode, mapping, &cores)
+    }
+
+    /// Overridden to keep the config's mapping policy, like
+    /// [`Skeleton::launch`].
+    fn launch_into(self, out: Sender<M::Out>, mode: RunMode) -> LaunchedSkeleton<M::In, M::Out> {
+        let mapping = self.cfg.mapping;
+        let cores = self.cfg.explicit_cores.clone();
+        let total = self.thread_count();
+        crate::skeleton::builder::launch_with_ctx(
+            total,
+            mode,
+            mapping,
+            &cores,
+            move |ctx: &mut WireCtx<'_>| (self.wire(OutTarget::Chan(out), ctx), None),
+        )
+    }
+}
+
+/// Wire the master–worker loop into an enclosing skeleton; returns the
+/// external input sender.
+fn wire_master_worker<M, S>(
+    cfg: &FarmConfig,
+    mut master: M,
+    workers: Vec<S>,
+    mut out: OutTarget<M::Out>,
+    ctx: &mut WireCtx<'_>,
+) -> Sender<M::In>
+where
+    M: MasterLogic + 'static,
+    S: Skeleton<M::Task, M::Result>,
+{
+    let nworkers = workers.len();
+
+    // External input: unbounded by default (accelerator-grade) unless an
+    // enclosing worker slot hinted a short queue.
+    let in_cap = ctx.take_in_cap(usize::MAX);
+    let (input_tx, mut input_rx) = if in_cap == usize::MAX {
+        stream_unbounded::<M::In>()
+    } else {
+        stream::<M::In>(in_cap)
     };
-    let mut worker_txs = Vec::with_capacity(nworkers);
-    let mut worker_rxs = Vec::with_capacity(nworkers);
-    for _ in 0..nworkers {
-        let (tx, rx) = stream::<M::Task>(wcap);
-        worker_txs.push(tx);
-        worker_rxs.push(rx);
-    }
-    // workers → master (feedback)
-    let mut fb_txs = Vec::with_capacity(nworkers);
-    let mut fb_rxs = Vec::with_capacity(nworkers);
-    for _ in 0..nworkers {
-        let (tx, rx) = stream::<M::Result>(cfg.out_cap);
-        fb_txs.push(tx);
-        fb_rxs.push(rx);
-    }
 
-    // ---- workers -----------------------------------------------------
-    for (wi, (rx, fb)) in worker_rxs.into_iter().zip(fb_txs).enumerate() {
-        let trace = NodeTrace::new();
-        traces.push((format!("worker-{wi}"), trace.clone()));
-        joins.push(
-            NodeRunner {
-                node: factory(wi),
-                rx,
-                out: OutTarget::Chan(fb),
-                lifecycle: lifecycle.clone(),
-                trace,
-                pin_to: cpu_map.core_for(1 + wi),
-                name: format!("ff-mw-worker-{wi}"),
-            }
-            .spawn(),
-        );
+    // Master thread id first: pinning stays master-then-workers.
+    let master_tid = ctx.alloc_thread();
+
+    // Worker slots: master → worker (short queues under on-demand) and
+    // worker → master feedback channels.
+    let wcap = cfg.effective_worker_cap();
+    let mut worker_txs: Vec<Sender<M::Task>> = Vec::with_capacity(nworkers);
+    let mut fb_rxs: Vec<Receiver<M::Result>> = Vec::with_capacity(nworkers);
+    for (wi, skel) in workers.into_iter().enumerate() {
+        let (fb_tx, fb_rx) = stream::<M::Result>(cfg.out_cap);
+        fb_rxs.push(fb_rx);
+        ctx.set_in_cap(wcap);
+        worker_txs.push(skel.wire_named(&format!("worker-{wi}"), OutTarget::Chan(fb_tx), ctx));
     }
 
     // ---- master (CE arbiter) ------------------------------------------
     let trace = NodeTrace::new();
-    traces.push(("master".to_string(), trace.clone()));
-    let lc = lifecycle.clone();
-    let pin = cpu_map.core_for(0);
+    let master_name = ctx.name("master");
+    ctx.traces.push((master_name, trace.clone()));
+    let lc = ctx.lifecycle.clone();
+    let pin = ctx.cpu_map.core_for(master_tid);
     let sched = cfg.sched;
-    joins.push(
+    ctx.joins.push(
         std::thread::Builder::new()
             .name("ff-master".into())
             .spawn(move || {
@@ -236,7 +283,6 @@ where
                 }
                 let mut workers = worker_txs;
                 let mut fb = fb_rxs;
-                let mut out: OutTarget<M::Out> = OutTarget::Chan(output_tx);
                 loop {
                     // one run cycle
                     let mut next = 0usize;
@@ -314,8 +360,8 @@ where
                                     }
                                 }
                                 Some(Msg::Batch(rs)) => {
-                                    // Workers emit per item today, but the
-                                    // protocol tolerates batched feedback.
+                                    // Composite workers may batch their
+                                    // feedback; the protocol tolerates it.
                                     progressed = true;
                                     for r in rs {
                                         in_flight = in_flight.saturating_sub(1);
@@ -396,15 +442,27 @@ where
             .expect("spawn master"),
     );
 
-    LaunchedSkeleton {
-        input: input_tx,
-        output: Some(output_rx),
-        lifecycle,
-        joins,
-        traces,
-        // Master-worker has no one-emission contract to violate.
-        poison: Arc::new(std::sync::atomic::AtomicBool::new(false)),
-    }
+    input_tx
+}
+
+/// Launch a standalone master-worker skeleton with plain-[`Node`]
+/// workers — the pre-combinator entry point.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `feedback(cfg, master, |w| seq(factory(w))).launch(mode)`"
+)]
+pub fn launch_master_worker<M, W, F>(
+    cfg: FarmConfig,
+    mode: RunMode,
+    master: M,
+    mut factory: F,
+) -> LaunchedSkeleton<M::In, M::Out>
+where
+    M: MasterLogic + 'static,
+    W: Node<In = M::Task, Out = M::Result> + 'static,
+    F: FnMut(usize) -> W,
+{
+    feedback(cfg, master, move |wi| seq(factory(wi))).launch(mode)
 }
 
 #[cfg(test)]
@@ -412,6 +470,7 @@ mod tests {
     use super::*;
     use crate::accel::Accel;
     use crate::node::node_fn;
+    use crate::skeleton::{seq_fn, Skeleton};
 
     /// D&C sum: tasks are (lo, hi) ranges; workers either sum small
     /// ranges or split them; the master re-dispatches splits and
@@ -470,13 +529,12 @@ mod tests {
 
     #[test]
     fn master_worker_divide_and_conquer_sums() {
-        let skel = launch_master_worker(
+        let mut acc: Accel<(u64, u64), u64> = feedback(
             FarmConfig::default().workers(3).sched(SchedPolicy::OnDemand),
-            RunMode::RunToEnd,
             SumMaster { total: 0 },
-            |_| range_worker(),
-        );
-        let mut acc: Accel<(u64, u64), u64> = Accel::from_skeleton(skel);
+            |_| seq(range_worker()),
+        )
+        .into_accel();
         acc.offload((0, 10_000)).unwrap();
         acc.offload_eos();
         assert_eq!(acc.load_result(), Some((0..10_000u64).sum()));
@@ -486,13 +544,12 @@ mod tests {
 
     #[test]
     fn master_worker_multiple_roots() {
-        let skel = launch_master_worker(
+        let mut acc: Accel<(u64, u64), u64> = feedback(
             FarmConfig::default().workers(2),
-            RunMode::RunToEnd,
             SumMaster { total: 0 },
-            |_| range_worker(),
-        );
-        let mut acc: Accel<(u64, u64), u64> = Accel::from_skeleton(skel);
+            |_| seq(range_worker()),
+        )
+        .into_accel();
         acc.offload((0, 1_000)).unwrap();
         acc.offload((1_000, 2_000)).unwrap();
         acc.offload((5_000, 5_001)).unwrap();
@@ -504,13 +561,12 @@ mod tests {
 
     #[test]
     fn master_worker_empty_input_terminates() {
-        let skel = launch_master_worker(
+        let mut acc: Accel<(u64, u64), u64> = feedback(
             FarmConfig::default().workers(2),
-            RunMode::RunToEnd,
             SumMaster { total: 0 },
-            |_| range_worker(),
-        );
-        let mut acc: Accel<(u64, u64), u64> = Accel::from_skeleton(skel);
+            |_| seq(range_worker()),
+        )
+        .into_accel();
         acc.offload_eos();
         assert_eq!(acc.load_result(), Some(0)); // empty total emitted
         acc.wait();
@@ -518,13 +574,12 @@ mod tests {
 
     #[test]
     fn master_worker_freeze_thaw() {
-        let skel = launch_master_worker(
+        let mut acc: Accel<(u64, u64), u64> = feedback(
             FarmConfig::default().workers(2),
-            RunMode::RunThenFreeze,
             SumMaster { total: 0 },
-            |_| range_worker(),
-        );
-        let mut acc: Accel<(u64, u64), u64> = Accel::from_skeleton(skel);
+            |_| seq(range_worker()),
+        )
+        .into_accel_frozen();
         // NOTE: SumMaster keeps `total` across cycles — each burst's
         // output is cumulative, which this test asserts explicitly.
         acc.offload((0, 100)).unwrap();
@@ -538,6 +593,60 @@ mod tests {
         acc.offload_eos();
         let second = acc.load_result().unwrap();
         assert_eq!(second, (0..100u64).sum::<u64>() + (0..10u64).sum::<u64>());
+        acc.wait();
+    }
+
+    #[test]
+    fn feedback_with_pipeline_workers() {
+        // Worker slots that are two-stage pipelines: stage 1 classifies
+        // the range, stage 2 finishes it — exactly one Result per Task,
+        // so in-flight accounting still holds.
+        enum Half {
+            Leaf(u64, u64),
+            Deep(u64, u64),
+        }
+        let mut acc: Accel<(u64, u64), u64> = feedback(
+            FarmConfig::default().workers(2),
+            SumMaster { total: 0 },
+            |_| {
+                seq_fn(|(lo, hi): (u64, u64)| {
+                    if hi - lo <= 64 {
+                        Half::Leaf(lo, hi)
+                    } else {
+                        Half::Deep(lo, hi)
+                    }
+                })
+                .then(seq_fn(|h: Half| match h {
+                    Half::Leaf(lo, hi) => RangeResult::Sum((lo..hi).sum()),
+                    Half::Deep(lo, hi) => {
+                        let mid = lo + (hi - lo) / 2;
+                        RangeResult::Split((lo, mid), (mid, hi))
+                    }
+                }))
+            },
+        )
+        .into_accel();
+        acc.offload((0, 5_000)).unwrap();
+        acc.offload_eos();
+        assert_eq!(acc.load_result(), Some((0..5_000u64).sum()));
+        acc.wait();
+    }
+
+    #[test]
+    fn feedback_inside_pipeline() {
+        // The feedback loop as a mid-pipeline stage: pre-scale the
+        // range, run the D&C sum, post-scale the total.
+        let skel = seq_fn(|n: u64| (0u64, n))
+            .then(feedback(
+                FarmConfig::default().workers(2),
+                SumMaster { total: 0 },
+                |_| seq(range_worker()),
+            ))
+            .then(seq_fn(|total: u64| total * 10));
+        let mut acc: Accel<u64, u64> = skel.into_accel();
+        acc.offload(1_000).unwrap();
+        acc.offload_eos();
+        assert_eq!(acc.load_result(), Some((0..1_000u64).sum::<u64>() * 10));
         acc.wait();
     }
 }

@@ -12,31 +12,42 @@
 //!              └── spsc ──▶ Worker n ── spsc ──┘
 //! ```
 //!
+//! Build with the [`farm`] combinator: the workers are **any**
+//! [`Skeleton`], so `farm(cfg, |_| seq_fn(f))` is the classic node farm
+//! and `farm(cfg, |_| seq_fn(f).then(seq_fn(g)))` is a farm of
+//! pipelines — the nesting direction the paper's `ff_farm` supports and
+//! the old `launch_farm` entry point could not express.
+//!
 //! Variants, all exercised by the paper:
-//! * **collector-less** farm (§4.2, N-queens): workers discard their
-//!   output stream; results travel through shared state.
+//! * **collector-less** farm (§4.2, N-queens): [`Farm::no_collector`] —
+//!   workers discard their output stream; results travel through shared
+//!   state.
 //! * **ordered** farm: the collector restores offload order via a
-//!   reorder buffer (requires exactly one emission per task).
+//!   reorder buffer (requires exactly one emission per task; composite
+//!   workers must be FIFO one-in/one-out transformers).
 //! * **on-demand scheduling**: tiny worker queues + skip-if-full routing
 //!   approximate FastFlow's on-demand policy for irregular tasks.
 //!
 //! The farm is also the body of the [`crate::accel::FarmAccel`]
-//! accelerator and can be nested as a [`crate::pipeline`] stage.
+//! accelerator ([`Skeleton::into_accel`]) and composes as a pipeline
+//! stage via [`Skeleton::then`].
 
 mod collector;
 mod emitter;
 pub mod feedback;
 
 pub use collector::Ordering as CollectorOrdering;
-pub use feedback::{launch_master_worker, MasterCtx, MasterLogic};
+#[allow(deprecated)]
+pub use feedback::launch_master_worker;
+pub use feedback::{feedback, Feedback, MasterCtx, MasterLogic};
 
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 
 use crate::channel::{stream, stream_unbounded, Receiver, Sender};
-use crate::node::{Lifecycle, Node, NodeRunner, OutTarget, RunMode, Svc};
-use crate::sched::{CpuMap, MappingPolicy};
+use crate::node::{Node, OutTarget, RunMode, Svc};
+use crate::skeleton::builder::{launch_with_ctx, seq, Skeleton, WireCtx};
 use crate::skeleton::LaunchedSkeleton;
 use crate::trace::NodeTrace;
 use crate::DEFAULT_QUEUE_CAP;
@@ -55,7 +66,7 @@ pub enum SchedPolicy {
     OnDemand,
 }
 
-/// Farm configuration.
+/// Farm configuration. All setters are by-value builders.
 #[derive(Debug, Clone)]
 pub struct FarmConfig {
     pub workers: usize,
@@ -67,7 +78,7 @@ pub struct FarmConfig {
     pub worker_cap: usize,
     /// Capacity of each worker→collector queue and of the output queue.
     pub out_cap: usize,
-    pub mapping: MappingPolicy,
+    pub mapping: crate::sched::MappingPolicy,
     pub explicit_cores: Vec<usize>,
 }
 
@@ -80,38 +91,50 @@ impl Default for FarmConfig {
             in_cap: usize::MAX, // unbounded offload buffer (uSWSR)
             worker_cap: DEFAULT_QUEUE_CAP,
             out_cap: DEFAULT_QUEUE_CAP,
-            mapping: MappingPolicy::None,
+            mapping: crate::sched::MappingPolicy::None,
             explicit_cores: vec![],
         }
     }
 }
 
 impl FarmConfig {
+    #[must_use]
     pub fn workers(mut self, n: usize) -> Self {
         self.workers = n.max(1);
         self
     }
+    #[must_use]
     pub fn sched(mut self, p: SchedPolicy) -> Self {
         self.sched = p;
         self
     }
+    /// Collector ordering policy (see [`CollectorOrdering`]).
+    #[must_use]
+    pub fn ordering(mut self, o: CollectorOrdering) -> Self {
+        self.ordering = o;
+        self
+    }
+    /// Shorthand for `ordering(CollectorOrdering::Ordered)`.
+    #[must_use]
     pub fn ordered(mut self) -> Self {
         self.ordering = CollectorOrdering::Ordered;
         self
     }
+    #[must_use]
     pub fn queue_caps(mut self, in_cap: usize, worker_cap: usize, out_cap: usize) -> Self {
         self.in_cap = in_cap.max(1);
         self.worker_cap = worker_cap.max(1);
         self.out_cap = out_cap.max(1);
         self
     }
-    pub fn mapping(mut self, m: MappingPolicy) -> Self {
+    #[must_use]
+    pub fn mapping(mut self, m: crate::sched::MappingPolicy) -> Self {
         self.mapping = m;
         self
     }
 
     /// Effective per-worker queue capacity under the scheduling policy.
-    fn effective_worker_cap(&self) -> usize {
+    pub(crate) fn effective_worker_cap(&self) -> usize {
         match self.sched {
             SchedPolicy::RoundRobin => self.worker_cap,
             // On-demand relies on short queues so work sits with the
@@ -121,7 +144,9 @@ impl FarmConfig {
     }
 }
 
-/// Where the farm's results go.
+/// Where a deprecated [`launch_farm`] call routes its results. New code
+/// expresses the same three shapes as [`Skeleton::launch`],
+/// [`Skeleton::launch_into`], and [`Farm::no_collector`].
 pub enum FarmOutput<O: Send> {
     /// Create an internal output stream and run a collector; the caller
     /// pops results (accelerator mode).
@@ -141,17 +166,18 @@ pub type LaunchedFarm<I, O> = LaunchedSkeleton<I, O>;
 pub(crate) type Seq<T> = (u64, T);
 
 /// Adapts a user worker `Node<In=I, Out=O>` to the sequence-tagged farm
-/// plumbing `Node<In=(u64,I), Out=(u64,O)>`.
-struct SeqWrap<W> {
-    inner: W,
+/// plumbing `Node<In=(u64,I), Out=(u64,O)>` — the zero-overhead worker
+/// slot used when a farm worker is a [`seq`] leaf.
+pub(crate) struct SeqWrap<W> {
+    pub(crate) inner: W,
     /// Ordered farms require exactly one emission per task.
-    enforce_one: bool,
+    pub(crate) enforce_one: bool,
     /// Shared poison flag: raised (instead of panicking) when an
     /// ordered farm's worker violates the one-emission contract. The
     /// worker then terminates its stream cleanly (`Svc::Eos`), the farm
     /// drains, and the offload side surfaces
     /// [`crate::accel::AccelError::Disconnected`].
-    poison: Arc<AtomicBool>,
+    pub(crate) poison: Arc<AtomicBool>,
 }
 
 impl<W: Node> Node for SeqWrap<W> {
@@ -199,24 +225,208 @@ impl<W: Node> Node for SeqWrap<W> {
     }
 }
 
-/// The number of threads a farm with this config will run.
+/// The number of threads a classic node farm with this config will run.
 pub fn farm_thread_count(cfg: &FarmConfig, has_collector: bool) -> usize {
     cfg.workers.max(1) + 1 + usize::from(has_collector)
 }
 
-/// Launch a standalone farm.
+/// The farm combinator: functional replication of `cfg.workers` copies
+/// of an arbitrary worker [`Skeleton`]. Build with [`farm`].
+#[must_use = "skeletons are blueprints: nothing runs until launch"]
+pub struct Farm<I, O, S> {
+    cfg: FarmConfig,
+    workers: Vec<S>,
+    collector: bool,
+    _pd: PhantomData<fn(I) -> O>,
+}
+
+/// Create a farm whose workers are **any** skeleton: `factory(i)` builds
+/// worker slot `i` (each worker owns its state, per the skeleton's
+/// "local state may be maintained in each filter"). The factory runs
+/// eagerly, once per slot, at construction time.
 ///
-/// * `cfg` — topology and policies.
-/// * `mode` — [`RunMode::RunToEnd`] (one-shot) or
-///   [`RunMode::RunThenFreeze`] (accelerator bursts).
-/// * `factory` — produces one worker node per worker thread (each worker
-///   owns its state, per the skeleton's "local state may be maintained
-///   in each filter").
-/// * `out` — result routing, see [`FarmOutput`].
+/// `farm(cfg, |_| seq_fn(f))` is the classic node farm;
+/// `farm(cfg, |_| seq_fn(f).then(seq_fn(g)))` is a farm of pipelines.
+pub fn farm<I, O, S, F>(cfg: FarmConfig, mut factory: F) -> Farm<I, O, S>
+where
+    I: Send + 'static,
+    O: Send + 'static,
+    S: Skeleton<I, O>,
+    F: FnMut(usize) -> S,
+{
+    let n = cfg.workers.max(1);
+    Farm {
+        workers: (0..n).map(&mut factory).collect(),
+        cfg,
+        collector: true,
+        _pd: PhantomData,
+    }
+}
+
+impl<I, O, S> Farm<I, O, S>
+where
+    I: Send + 'static,
+    O: Send + 'static,
+    S: Skeleton<I, O>,
+{
+    /// Drop the collector entirely (paper §4.2): worker emissions are
+    /// discarded; results travel through shared state with zero per-task
+    /// synchronization. Only meaningful on a farm that is launched
+    /// directly — composing a collector-less farm into a larger skeleton
+    /// panics at wire time, because downstream stages would wait on a
+    /// stream nobody feeds.
+    pub fn no_collector(mut self) -> Self {
+        self.collector = false;
+        self
+    }
+}
+
+impl<I, O, S> Skeleton<I, O> for Farm<I, O, S>
+where
+    I: Send + 'static,
+    O: Send + 'static,
+    S: Skeleton<I, O>,
+{
+    fn thread_count(&self) -> usize {
+        // emitter [+ collector] + worker slots.
+        1 + usize::from(self.collector)
+            + self
+                .workers
+                .iter()
+                .map(|w| w.worker_threads())
+                .sum::<usize>()
+    }
+
+    fn wire(self, out: OutTarget<O>, ctx: &mut WireCtx<'_>) -> Sender<I> {
+        assert!(
+            self.collector,
+            "collector-less farm: results bypass the output stream, so it \
+             cannot be composed into a larger skeleton or launched through \
+             the generic launch_pinned/launch_into paths — launch it with \
+             `launch(mode)` / `into_accel()` / `into_accel_frozen()` \
+             (the overridden Skeleton::launch)"
+        );
+        wire_farm_skel(&self.cfg, self.workers, Some(out), ctx)
+    }
+
+    /// Launch honouring [`Farm::no_collector`] and the config's mapping
+    /// policy — overridden here (not an inherent shadow) so pinning and
+    /// the collector-less shape survive generic contexts such as
+    /// [`crate::accel::AccelPool::run_skeleton`] shard factories.
+    fn launch(self, mode: RunMode) -> LaunchedSkeleton<I, O> {
+        let mapping = self.cfg.mapping;
+        let cores = self.cfg.explicit_cores.clone();
+        if self.collector {
+            return self.launch_pinned(mode, mapping, &cores);
+        }
+        let Farm { cfg, workers, .. } = self;
+        let total = 1 + workers.iter().map(|w| w.worker_threads()).sum::<usize>();
+        launch_with_ctx(total, mode, mapping, &cores, move |ctx: &mut WireCtx<'_>| {
+            (wire_farm_skel(&cfg, workers, None, ctx), None)
+        })
+    }
+
+    /// Overridden to keep the config's mapping policy, like
+    /// [`Skeleton::launch`].
+    fn launch_into(self, out: Sender<O>, mode: RunMode) -> LaunchedSkeleton<I, O> {
+        let mapping = self.cfg.mapping;
+        let cores = self.cfg.explicit_cores.clone();
+        let total = self.thread_count();
+        launch_with_ctx(total, mode, mapping, &cores, move |ctx: &mut WireCtx<'_>| {
+            (self.wire(OutTarget::Chan(out), ctx), None)
+        })
+    }
+}
+
+/// Wire a farm's threads into an enclosing skeleton: emitter, one slot
+/// per worker skeleton, and (unless `out_target` is `None`) a collector.
+/// Returns the farm's input sender.
+pub(crate) fn wire_farm_skel<I, O, S>(
+    cfg: &FarmConfig,
+    workers: Vec<S>,
+    out_target: Option<OutTarget<O>>,
+    ctx: &mut WireCtx<'_>,
+) -> Sender<I>
+where
+    I: Send + 'static,
+    O: Send + 'static,
+    S: Skeleton<I, O>,
+{
+    let nworkers = workers.len();
+    let has_collector = out_target.is_some();
+    let ordered = cfg.ordering == CollectorOrdering::Ordered && has_collector;
+
+    // --- farm input stream (caller → emitter) --------------------------
+    // Unbounded by default (FastFlow's accelerator input buffer):
+    // `offload` never blocks the caller, removing the offload/drain
+    // deadlock cycle. An enclosing worker slot may hint a short bounded
+    // queue instead (on-demand dispatch).
+    let in_cap = ctx.take_in_cap(cfg.in_cap);
+    let (input_tx, input_rx) = if in_cap == usize::MAX {
+        stream_unbounded::<I>()
+    } else {
+        stream::<I>(in_cap)
+    };
+
+    // --- emitter (thread id first: pinning stays front-to-back) --------
+    let emitter_tid = ctx.alloc_thread();
+    let emitter_trace = NodeTrace::new();
+    let emitter_name = ctx.name("emitter");
+    ctx.traces.push((emitter_name, emitter_trace.clone()));
+
+    // --- worker slots ---------------------------------------------------
+    let wcap = cfg.effective_worker_cap();
+    let mut worker_txs: Vec<Sender<Seq<I>>> = Vec::with_capacity(nworkers);
+    let mut collector_rxs: Vec<Receiver<Seq<O>>> = Vec::with_capacity(nworkers);
+    for (wi, skel) in workers.into_iter().enumerate() {
+        let wout = if has_collector {
+            let (tx, rx) = stream::<Seq<O>>(cfg.out_cap);
+            collector_rxs.push(rx);
+            OutTarget::Chan(tx)
+        } else {
+            OutTarget::Discard
+        };
+        worker_txs.push(skel.wire_worker(wout, ordered, wcap, cfg.out_cap, wi, ctx));
+    }
+
+    // --- collector ------------------------------------------------------
+    if let Some(out) = out_target {
+        let trace = NodeTrace::new();
+        let collector_name = ctx.name("collector");
+        ctx.traces.push((collector_name, trace.clone()));
+        let tid = ctx.alloc_thread();
+        ctx.joins.push(collector::spawn_collector(
+            collector_rxs,
+            out,
+            cfg.ordering,
+            ctx.lifecycle.clone(),
+            trace,
+            ctx.cpu_map.core_for(tid),
+        ));
+    }
+
+    ctx.joins.push(emitter::spawn_emitter(
+        input_rx,
+        worker_txs,
+        cfg.sched,
+        ctx.lifecycle.clone(),
+        emitter_trace,
+        ctx.cpu_map.core_for(emitter_tid),
+    ));
+
+    input_tx
+}
+
+/// Launch a standalone node farm — the pre-combinator entry point.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `farm(cfg, |w| seq(factory(w)))` with `.launch(mode)`, \
+            `.launch_into(tx, mode)`, or `.no_collector().launch(mode)`"
+)]
 pub fn launch_farm<I, O, W, F>(
     cfg: FarmConfig,
     mode: RunMode,
-    factory: F,
+    mut factory: F,
     out: FarmOutput<O>,
 ) -> LaunchedFarm<I, O>
 where
@@ -225,163 +435,19 @@ where
     W: Node<In = I, Out = O> + 'static,
     F: FnMut(usize) -> W,
 {
-    let has_collector = !matches!(out, FarmOutput::None);
-    let nthreads = farm_thread_count(&cfg, has_collector);
-    let lifecycle = Lifecycle::new(nthreads, mode);
-    let cpu_map = CpuMap::build(cfg.mapping, nthreads, &cfg.explicit_cores);
-
-    let mut joins = Vec::with_capacity(nthreads);
-    let mut traces = Vec::with_capacity(nthreads);
-
-    let (out_target, output_rx): (Option<OutTarget<O>>, Option<Receiver<O>>) = match out {
-        FarmOutput::Stream => {
-            // Unbounded result stream: the offloading thread can never
-            // deadlock itself by offloading before draining (Fig. 3's
-            // offload-all-then-pop pattern).
-            let (tx, rx) = stream_unbounded::<O>();
-            (Some(OutTarget::Chan(tx)), Some(rx))
-        }
-        FarmOutput::External(tx) => (Some(OutTarget::Chan(tx)), None),
-        FarmOutput::None => (None, None),
-    };
-
-    let poison = Arc::new(AtomicBool::new(false));
-    let input_tx = wire_farm(
-        &cfg,
-        factory,
-        out_target,
-        &lifecycle,
-        &poison,
-        0,
-        &cpu_map,
-        &mut joins,
-        &mut traces,
-    );
-
-    LaunchedFarm {
-        input: input_tx,
-        output: output_rx,
-        lifecycle,
-        joins,
-        traces,
-        poison,
+    let skel = farm(cfg, move |wi| seq(factory(wi)));
+    match out {
+        FarmOutput::Stream => skel.launch(mode),
+        FarmOutput::External(tx) => skel.launch_into(tx, mode),
+        FarmOutput::None => skel.no_collector().launch(mode),
     }
-}
-
-/// Wire a farm's threads into an existing skeleton (shared lifecycle,
-/// thread ids starting at `thread_base` for CPU mapping). Used by
-/// [`launch_farm`] and by [`crate::pipeline`] for farm stages.
-/// Returns the farm's input sender. `out_target == None` means
-/// collector-less (worker outputs discarded).
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn wire_farm<I, O, W, F>(
-    cfg: &FarmConfig,
-    mut factory: F,
-    out_target: Option<OutTarget<O>>,
-    lifecycle: &Arc<Lifecycle>,
-    poison: &Arc<AtomicBool>,
-    thread_base: usize,
-    cpu_map: &CpuMap,
-    joins: &mut Vec<JoinHandle<()>>,
-    traces: &mut Vec<(String, Arc<NodeTrace>)>,
-) -> Sender<I>
-where
-    I: Send + 'static,
-    O: Send + 'static,
-    W: Node<In = I, Out = O> + 'static,
-    F: FnMut(usize) -> W,
-{
-    let nworkers = cfg.workers.max(1);
-    let has_collector = out_target.is_some();
-    let ordered = cfg.ordering == CollectorOrdering::Ordered && has_collector;
-
-    // --- farm input stream (caller → emitter) --------------------------
-    // Unbounded (FastFlow's accelerator input buffer): `offload` never
-    // blocks the caller, removing the offload/drain deadlock cycle.
-    // `in_cap` is kept for pipeline-internal (bounded) wiring.
-    let (input_tx, input_rx) = if cfg.in_cap == usize::MAX {
-        stream_unbounded::<I>()
-    } else {
-        stream::<I>(cfg.in_cap)
-    };
-
-    // --- emitter → workers ---------------------------------------------
-    let wcap = cfg.effective_worker_cap();
-    let mut worker_rxs = Vec::with_capacity(nworkers);
-    let mut worker_txs = Vec::with_capacity(nworkers);
-    for _ in 0..nworkers {
-        let (tx, rx) = stream::<Seq<I>>(wcap);
-        worker_txs.push(tx);
-        worker_rxs.push(rx);
-    }
-
-    // --- workers → collector --------------------------------------------
-    let mut collector_rxs = Vec::with_capacity(nworkers);
-    let mut worker_outs: Vec<OutTarget<Seq<O>>> = Vec::with_capacity(nworkers);
-    for _ in 0..nworkers {
-        if has_collector {
-            let (tx, rx) = stream::<Seq<O>>(cfg.out_cap);
-            collector_rxs.push(rx);
-            worker_outs.push(OutTarget::Chan(tx));
-        } else {
-            worker_outs.push(OutTarget::Discard);
-        }
-    }
-
-    // --- spawn: emitter ---------------------------------------------------
-    let emitter_trace = NodeTrace::new();
-    traces.push(("emitter".to_string(), emitter_trace.clone()));
-    joins.push(emitter::spawn_emitter(
-        input_rx,
-        worker_txs,
-        cfg.sched,
-        lifecycle.clone(),
-        emitter_trace,
-        cpu_map.core_for(thread_base),
-    ));
-
-    // --- spawn: workers -----------------------------------------------------
-    for (wi, (rx, wout)) in worker_rxs.into_iter().zip(worker_outs).enumerate() {
-        let trace = NodeTrace::new();
-        traces.push((format!("worker-{wi}"), trace.clone()));
-        let runner = NodeRunner {
-            node: SeqWrap {
-                inner: factory(wi),
-                enforce_one: ordered,
-                poison: poison.clone(),
-            },
-            rx,
-            out: wout,
-            lifecycle: lifecycle.clone(),
-            trace,
-            pin_to: cpu_map.core_for(thread_base + 1 + wi),
-            name: format!("ff-worker-{wi}"),
-        };
-        joins.push(runner.spawn());
-    }
-
-    // --- spawn: collector ------------------------------------------------
-    if let Some(out_target) = out_target {
-        let trace = NodeTrace::new();
-        traces.push(("collector".to_string(), trace.clone()));
-        joins.push(collector::spawn_collector(
-            collector_rxs,
-            out_target,
-            cfg.ordering,
-            lifecycle.clone(),
-            trace,
-            cpu_map.core_for(thread_base + 1 + nworkers),
-        ));
-    }
-
-    input_tx
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::channel::Msg;
-    use crate::node::node_fn;
+    use crate::skeleton::seq_fn;
 
     fn drain<O: Send>(rx: &mut Receiver<O>) -> Vec<O> {
         let mut got = vec![];
@@ -397,12 +463,10 @@ mod tests {
 
     #[test]
     fn farm_processes_all_tasks() {
-        let farm = launch_farm(
-            FarmConfig::default().workers(4),
-            RunMode::RunToEnd,
-            |_| node_fn(|x: u64| x * 2),
-            FarmOutput::Stream,
-        );
+        let farm = farm(FarmConfig::default().workers(4), |_| {
+            seq_fn(|x: u64| x * 2)
+        })
+        .launch(RunMode::RunToEnd);
         let (mut input, output, _handle) = farm.split();
         let mut output = output.unwrap();
         let pusher = std::thread::spawn(move || {
@@ -422,20 +486,16 @@ mod tests {
 
     #[test]
     fn ordered_farm_preserves_offload_order() {
-        let farm = launch_farm(
-            FarmConfig::default().workers(8).ordered(),
-            RunMode::RunToEnd,
-            |wi| {
-                node_fn(move |x: u64| {
-                    // Make workers finish out of order on purpose.
-                    if wi % 2 == 0 {
-                        std::thread::yield_now();
-                    }
-                    x + 1
-                })
-            },
-            FarmOutput::Stream,
-        );
+        let farm = farm(FarmConfig::default().workers(8).ordered(), |wi| {
+            seq_fn(move |x: u64| {
+                // Make workers finish out of order on purpose.
+                if wi % 2 == 0 {
+                    std::thread::yield_now();
+                }
+                x + 1
+            })
+        })
+        .launch(RunMode::RunToEnd);
         let (mut input, output, _handle) = farm.split();
         let mut output = output.unwrap();
         let pusher = std::thread::spawn(move || {
@@ -453,18 +513,16 @@ mod tests {
     fn collectorless_farm_discards_but_processes() {
         use std::sync::atomic::{AtomicU64, Ordering};
         let sum = Arc::new(AtomicU64::new(0));
-        let farm = launch_farm(
-            FarmConfig::default().workers(3),
-            RunMode::RunToEnd,
-            |_| {
-                let sum = sum.clone();
-                node_fn(move |x: u64| {
-                    sum.fetch_add(x, Ordering::Relaxed);
-                })
-            },
-            FarmOutput::None::<()>,
-        );
-        let (mut input, _none, handle) = farm.split();
+        let farm = farm(FarmConfig::default().workers(3), |_| {
+            let sum = sum.clone();
+            seq_fn(move |x: u64| {
+                sum.fetch_add(x, Ordering::Relaxed);
+            })
+        })
+        .no_collector()
+        .launch(RunMode::RunToEnd);
+        let (mut input, none, handle) = farm.split();
+        assert!(none.is_none(), "collector-less farm has no output stream");
         for i in 1..=1000u64 {
             input.send(i).unwrap();
         }
@@ -475,11 +533,10 @@ mod tests {
 
     #[test]
     fn on_demand_balances_irregular_tasks() {
-        let farm = launch_farm(
+        let farm = farm(
             FarmConfig::default().workers(4).sched(SchedPolicy::OnDemand),
-            RunMode::RunToEnd,
             |_| {
-                node_fn(|cost: u64| {
+                seq_fn(|cost: u64| {
                     // Irregular busy-work.
                     let mut acc = 0u64;
                     for i in 0..cost * 1000 {
@@ -488,8 +545,8 @@ mod tests {
                     acc
                 })
             },
-            FarmOutput::Stream,
-        );
+        )
+        .launch(RunMode::RunToEnd);
         let (mut input, output, handle) = farm.split();
         let mut output = output.unwrap();
         let pusher = std::thread::spawn(move || {
@@ -511,12 +568,10 @@ mod tests {
 
     #[test]
     fn farm_trace_counts_tasks() {
-        let farm = launch_farm(
-            FarmConfig::default().workers(2),
-            RunMode::RunToEnd,
-            |_| node_fn(|x: u32| x),
-            FarmOutput::Stream,
-        );
+        let farm = farm(FarmConfig::default().workers(2), |_| {
+            seq_fn(|x: u32| x)
+        })
+        .launch(RunMode::RunToEnd);
         let (mut input, output, handle) = farm.split();
         let mut output = output.unwrap();
         for i in 0..100u32 {
@@ -553,12 +608,8 @@ mod tests {
                 Svc::GoOn
             }
         }
-        let mut farm = launch_farm(
-            FarmConfig::default().workers(1).ordered(),
-            RunMode::RunToEnd,
-            |_| Multi,
-            FarmOutput::Stream,
-        );
+        let mut farm = farm(FarmConfig::default().workers(1).ordered(), |_| seq(Multi))
+            .launch(RunMode::RunToEnd);
         farm.input.send(1).unwrap();
         let _ = farm.input.send_eos(); // worker may already have stopped
         let mut output = farm.output.take().unwrap();
@@ -578,12 +629,10 @@ mod tests {
         // A batch through the farm equals per-item offloads: the emitter
         // unpacks, assigns per-item sequence numbers, and the ordered
         // collector restores offload order across the batch boundary.
-        let farm = launch_farm(
-            FarmConfig::default().workers(4).ordered(),
-            RunMode::RunToEnd,
-            |_| node_fn(|x: u64| x * 2),
-            FarmOutput::Stream,
-        );
+        let farm = farm(FarmConfig::default().workers(4).ordered(), |_| {
+            seq_fn(|x: u64| x * 2)
+        })
+        .launch(RunMode::RunToEnd);
         let (mut input, output, handle) = farm.split();
         let mut output = output.unwrap();
         input.send(0).unwrap();
@@ -596,5 +645,26 @@ mod tests {
         let emitter = report.rows.iter().find(|r| r.name == "emitter").unwrap();
         assert_eq!(emitter.tasks, 501, "batched items count individually");
         assert_eq!(emitter.emitted, 501);
+    }
+
+    #[test]
+    fn thread_count_matches_wired_threads() {
+        // The Lifecycle barrier is sized from thread_count(); a mismatch
+        // would hang freeze/thaw. Cross-check leaf and composite workers.
+        let leaf = farm(FarmConfig::default().workers(3), |_| seq_fn(|x: u64| x));
+        assert_eq!(leaf.thread_count(), farm_thread_count(&FarmConfig::default().workers(3), true));
+        let nested = farm(FarmConfig::default().workers(2), |_| {
+            seq_fn(|x: u64| x).then(seq_fn(|x: u64| x))
+        });
+        // emitter + 2 × (2 stages + ingress + egress) + collector
+        assert_eq!(nested.thread_count(), 2 + 2 * 4);
+        let launched = nested.launch(RunMode::RunToEnd);
+        assert_eq!(launched.lifecycle.threads(), launched.joins.len());
+        let mut input = launched.input;
+        input.send(1).unwrap();
+        input.send_eos().unwrap();
+        let mut out = launched.output;
+        let got = drain(out.as_mut().unwrap());
+        assert_eq!(got, vec![1]);
     }
 }

@@ -13,9 +13,13 @@
 //! 2. **Low-level programming** — [`queues`]: SPMC / MPSC / MPMC channels
 //!    realised *without* atomic read-modify-write operations by composing
 //!    SPSC queues with an arbiter thread (Emitter / Collector).
-//! 3. **High-level programming** — [`farm`], [`pipeline`]: stream-parallel
-//!    skeletons with pluggable scheduling, ordering, and feedback
-//!    (master–worker).
+//! 3. **High-level programming** — [`skeleton`]: the unified
+//!    [`skeleton::Skeleton`] combinator algebra (`seq` / `then` /
+//!    `farm` / `feedback`) under which a node, a pipeline, a farm, and
+//!    a master–worker loop compose in every direction (farm-of-
+//!    pipelines, feedback-inside-pipeline, …); [`farm`] and
+//!    [`pipeline`] hold the farm-shaped wiring and the legacy pipeline
+//!    facade.
 //! 4. **The accelerator** — [`accel`]: wrap a skeleton as a *software
 //!    device* with an input and an output stream; `offload()` tasks from
 //!    sequential code, `run_then_freeze()` / `thaw()` the device between
@@ -41,15 +45,14 @@
 //! `affinity` feature enables real thread→core pinning via `libc`.
 //!
 //! ```no_run
-//! use fastflow::accel::FarmAccel;
-//! use fastflow::farm::FarmConfig;
-//! use fastflow::node::node_fn;
+//! use fastflow::prelude::*;
 //!
 //! // Fig. 3: offload matrix-multiply row-tasks onto a farm accelerator.
-//! let mut acc: FarmAccel<usize, ()> = FarmAccel::run_no_collector(
-//!     FarmConfig::default().workers(4),
-//!     |_| node_fn(|row: usize| { /* compute row */ }),
-//! );
+//! let mut acc = farm(FarmConfig::default().workers(4), |_| {
+//!     seq_fn(|row: usize| { /* compute row */ })
+//! })
+//! .no_collector()
+//! .into_accel();
 //! for row in 0..1024 { acc.offload(row).unwrap(); }
 //! acc.offload_eos();
 //! acc.wait();
@@ -76,6 +79,26 @@ pub mod spsc;
 pub mod testing;
 pub mod trace;
 pub mod util;
+
+/// The working surface in one import: `use fastflow::prelude::*;`.
+///
+/// Re-exports the skeleton combinators ([`seq`](crate::skeleton::seq),
+/// [`farm`](crate::farm::farm), [`feedback`](fn@crate::farm::feedback),
+/// [`Skeleton::then`](crate::skeleton::Skeleton::then)), their configs,
+/// the accelerator service tiers, and the node vocabulary.
+pub mod prelude {
+    pub use crate::accel::{
+        Accel, AccelError, AccelHandle, AccelPool, FarmAccel, Placement, PoolConfig,
+    };
+    pub use crate::farm::{
+        farm, feedback, CollectorOrdering, Farm, FarmConfig, Feedback, MasterCtx, MasterLogic,
+        SchedPolicy,
+    };
+    pub use crate::node::{node_fn, Node, Outbox, RunMode, Svc};
+    pub use crate::skeleton::{
+        seq, seq_fn, LaunchedSkeleton, SeqNode, Skeleton, SkeletonHandle, Then,
+    };
+}
 
 /// Library version (mirrors `Cargo.toml`).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -340,10 +340,11 @@ fn cmd_info() -> Result<()> {
     }
     // Smoke the lifecycle quickly so `info` doubles as a self-test.
     let (_, d) = timed(|| {
-        let mut acc: fastflow::accel::FarmAccel<u32, u32> = fastflow::accel::FarmAccel::run(
-            fastflow::farm::FarmConfig::default().workers(2),
-            |_| fastflow::node::node_fn(|x: u32| x + 1),
-        );
+        use fastflow::prelude::*;
+        let mut acc: FarmAccel<u32, u32> = farm(FarmConfig::default().workers(2), |_| {
+            seq_fn(|x: u32| x + 1)
+        })
+        .into_accel();
         for i in 0..100 {
             acc.offload(i).unwrap();
         }

@@ -1,187 +1,61 @@
-//! The **pipeline** skeleton (paper §2.4): parallel execution of filters
-//! with a direct data dependency, plus arbitrary nesting of farms as
-//! stages (farm-in-pipeline composition — the paper's "their arbitrary
-//! nesting and composition").
+//! The **pipeline** facade (paper §2.4): parallel execution of filters
+//! with a direct data dependency.
 //!
-//! A pipeline is assembled back-to-front at launch: each stage is handed
-//! the sender of its successor's input queue, so every link is one
-//! lock-free SPSC stream and no pump threads exist.
+//! Since the [`crate::skeleton`] combinator algebra landed, a pipeline
+//! is just [`seq`]`(a).`[`then`]`(b)` — and a farm stage is
+//! `.then(farm(cfg, |w| seq(worker)))`, with the farm's workers free to
+//! be whole skeletons themselves. This module keeps the familiar
+//! [`Pipeline`] builder as a thin facade over those combinators; its
+//! launch methods are deprecated shims for the single
+//! [`Skeleton::launch`] path.
 //!
 //! ```no_run
-//! use fastflow::pipeline::Pipeline;
-//! use fastflow::farm::FarmConfig;
-//! use fastflow::accel::Accel;
+//! use fastflow::prelude::*;
 //!
-//! use fastflow::node::node_fn;
-//! let pipe = Pipeline::new(node_fn(|x: u64| x + 1))   // stage 1: node
-//!     .then_farm(FarmConfig::default().workers(4), |_| node_fn(|x: u64| x * 2)) // stage 2: farm
-//!     .then(node_fn(|x: u64| x - 1));               // stage 3: node
-//! let mut acc: Accel<u64, u64> = Accel::from_skeleton(pipe.launch_accel());
+//! let skel = seq_fn(|x: u64| x + 1)                         // stage 1: node
+//!     .then(farm(FarmConfig::default().workers(4), |_| {
+//!         seq_fn(|x: u64| x * 2)                            // stage 2: farm
+//!     }))
+//!     .then(seq_fn(|x: u64| x - 1));                        // stage 3: node
+//! let mut acc = skel.into_accel();
 //! acc.offload(10).unwrap();
 //! acc.offload_eos();
 //! assert_eq!(acc.load_result(), Some(21));
 //! acc.wait();
 //! ```
+//!
+//! [`seq`]: crate::skeleton::seq
+//! [`then`]: Skeleton::then
 
 use std::marker::PhantomData;
-use std::sync::Arc;
-use std::thread::JoinHandle;
 
-use crate::channel::{stream, Sender};
-use crate::farm::{farm_thread_count, wire_farm, FarmConfig};
-use crate::node::{Lifecycle, Node, NodeRunner, OutTarget, RunMode};
-use crate::sched::{CpuMap, MappingPolicy};
+use crate::farm::{farm, Farm, FarmConfig};
+use crate::node::{Node, RunMode};
+use crate::sched::MappingPolicy;
+use crate::skeleton::builder::{seq, SeqNode, Skeleton, Then};
 use crate::skeleton::LaunchedSkeleton;
-use crate::trace::NodeTrace;
 use crate::DEFAULT_QUEUE_CAP;
 
-/// Wiring context threaded through stage construction.
-pub struct WireCtx<'a> {
-    lifecycle: &'a Arc<Lifecycle>,
-    /// Shared poison flag (raised by any farm stage on a protocol
-    /// violation — see [`LaunchedSkeleton::poison`]).
-    poison: &'a Arc<std::sync::atomic::AtomicBool>,
-    cpu_map: &'a CpuMap,
-    next_thread: usize,
-    joins: &'a mut Vec<JoinHandle<()>>,
-    traces: &'a mut Vec<(String, Arc<NodeTrace>)>,
-    stage_idx: usize,
-}
+// Re-exported so pre-combinator imports keep compiling.
+pub use crate::skeleton::builder::WireCtx;
 
-/// A pipeline stage: knows how many threads it runs and how to wire
-/// itself given its downstream target, returning its input sender.
-pub trait Stage<I: Send + 'static, O: Send + 'static>: Sized {
-    fn thread_count(&self) -> usize;
-    fn wire(self, out: OutTarget<O>, ctx: &mut WireCtx<'_>) -> Sender<I>;
-}
-
-/// A single [`Node`] as a stage.
-pub struct NodeStage<N> {
-    node: N,
-    cap: usize,
-}
-
-impl<N: Node + 'static> Stage<N::In, N::Out> for NodeStage<N> {
-    fn thread_count(&self) -> usize {
-        1
-    }
-
-    fn wire(self, out: OutTarget<N::Out>, ctx: &mut WireCtx<'_>) -> Sender<N::In> {
-        let (tx, rx) = stream::<N::In>(self.cap);
-        let trace = NodeTrace::new();
-        let name = format!("stage-{}", ctx.stage_idx);
-        ctx.traces.push((name.clone(), trace.clone()));
-        let tid = ctx.next_thread;
-        ctx.next_thread += 1;
-        ctx.stage_idx += 1;
-        ctx.joins.push(
-            NodeRunner {
-                node: self.node,
-                rx,
-                out,
-                lifecycle: ctx.lifecycle.clone(),
-                trace,
-                pin_to: ctx.cpu_map.core_for(tid),
-                name,
-            }
-            .spawn(),
-        );
-        tx
-    }
-}
-
-/// A whole farm as a stage (farm-in-pipeline nesting).
-pub struct FarmStage<W, F> {
-    cfg: FarmConfig,
-    factory: F,
-    _pd: PhantomData<fn() -> W>,
-}
-
-impl<I, O, W, F> Stage<I, O> for FarmStage<W, F>
-where
-    I: Send + 'static,
-    O: Send + 'static,
-    W: Node<In = I, Out = O> + 'static,
-    F: FnMut(usize) -> W,
-{
-    fn thread_count(&self) -> usize {
-        farm_thread_count(&self.cfg, true)
-    }
-
-    fn wire(self, out: OutTarget<O>, ctx: &mut WireCtx<'_>) -> Sender<I> {
-        let base = ctx.next_thread;
-        ctx.next_thread += farm_thread_count(&self.cfg, true);
-        ctx.stage_idx += 1;
-        let out_target = match out {
-            OutTarget::Chan(tx) => Some(OutTarget::Chan(tx)),
-            OutTarget::Discard => Some(OutTarget::Discard),
-        };
-        wire_farm(
-            &self.cfg,
-            self.factory,
-            out_target,
-            ctx.lifecycle,
-            ctx.poison,
-            base,
-            ctx.cpu_map,
-            ctx.joins,
-            ctx.traces,
-        )
-    }
-}
-
-/// Two stages composed: `S1 → S2`.
-pub struct Compose<S1, S2, M> {
-    first: S1,
-    second: S2,
-    _pd: PhantomData<fn() -> M>,
-}
-
-impl<I, M, O, S1, S2> Stage<I, O> for Compose<S1, S2, M>
-where
-    I: Send + 'static,
-    M: Send + 'static,
-    O: Send + 'static,
-    S1: Stage<I, M>,
-    S2: Stage<M, O>,
-{
-    fn thread_count(&self) -> usize {
-        self.first.thread_count() + self.second.thread_count()
-    }
-
-    fn wire(self, out: OutTarget<O>, ctx: &mut WireCtx<'_>) -> Sender<I> {
-        // Back-to-front: reserve first-stage thread ids before the
-        // second stage consumes ids, to keep pinning front-to-back.
-        let first_threads = self.first.thread_count();
-        let first_base = ctx.next_thread;
-        ctx.next_thread += first_threads;
-        let mid_tx = self.second.wire(out, ctx);
-        // Rewind for the first stage's ids.
-        let saved = ctx.next_thread;
-        ctx.next_thread = first_base;
-        let tx = self.first.wire(OutTarget::Chan(mid_tx), ctx);
-        ctx.next_thread = saved;
-        tx
-    }
-}
-
-/// Pipeline builder.
-pub struct Pipeline<I: Send + 'static, O: Send + 'static, S: Stage<I, O>> {
-    stage: S,
+/// Pipeline builder — a facade over [`Skeleton::then`] kept for
+/// familiarity; [`Pipeline::into_skeleton`] hands back the underlying
+/// combinator value.
+#[must_use = "skeletons are blueprints: nothing runs until launch"]
+pub struct Pipeline<I: Send + 'static, O: Send + 'static, S: Skeleton<I, O>> {
+    skel: S,
     cap: usize,
     mapping: MappingPolicy,
     explicit_cores: Vec<usize>,
     _pd: PhantomData<fn(I) -> O>,
 }
 
-impl<N: Node + 'static> Pipeline<N::In, N::Out, NodeStage<N>> {
+impl<N: Node + 'static> Pipeline<N::In, N::Out, SeqNode<N>> {
     /// Start a pipeline with a first stage.
     pub fn new(node: N) -> Self {
         Pipeline {
-            stage: NodeStage {
-                node,
-                cap: DEFAULT_QUEUE_CAP,
-            },
+            skel: seq(node),
             cap: DEFAULT_QUEUE_CAP,
             mapping: MappingPolicy::None,
             explicit_cores: vec![],
@@ -190,19 +64,15 @@ impl<N: Node + 'static> Pipeline<N::In, N::Out, NodeStage<N>> {
     }
 }
 
-impl<I: Send + 'static, O: Send + 'static, S: Stage<I, O>> Pipeline<I, O, S> {
+impl<I: Send + 'static, O: Send + 'static, S: Skeleton<I, O>> Pipeline<I, O, S> {
     /// Append a node stage.
-    pub fn then<N>(self, node: N) -> Pipeline<I, N::Out, Compose<S, NodeStage<N>, O>>
+    pub fn then<N>(self, node: N) -> Pipeline<I, N::Out, Then<S, SeqNode<N>, O>>
     where
         N: Node<In = O> + 'static,
     {
         let cap = self.cap;
         Pipeline {
-            stage: Compose {
-                first: self.stage,
-                second: NodeStage { node, cap },
-                _pd: PhantomData,
-            },
+            skel: self.skel.then(seq(node).cap(cap)),
             cap,
             mapping: self.mapping,
             explicit_cores: self.explicit_cores,
@@ -210,27 +80,20 @@ impl<I: Send + 'static, O: Send + 'static, S: Stage<I, O>> Pipeline<I, O, S> {
         }
     }
 
-    /// Append a farm stage (nesting).
+    /// Append a farm stage (nesting) with plain-node workers. For
+    /// skeleton-valued workers, use the [`farm`] combinator directly.
     pub fn then_farm<W, F>(
         self,
         cfg: FarmConfig,
-        factory: F,
-    ) -> Pipeline<I, W::Out, Compose<S, FarmStage<W, F>, O>>
+        mut factory: F,
+    ) -> Pipeline<I, W::Out, Then<S, Farm<O, W::Out, SeqNode<W>>, O>>
     where
         W: Node<In = O> + 'static,
         F: FnMut(usize) -> W,
     {
         let cap = self.cap;
         Pipeline {
-            stage: Compose {
-                first: self.stage,
-                second: FarmStage {
-                    cfg,
-                    factory,
-                    _pd: PhantomData,
-                },
-                _pd: PhantomData,
-            },
+            skel: self.skel.then(farm(cfg, move |wi| seq(factory(wi)))),
             cap,
             mapping: self.mapping,
             explicit_cores: self.explicit_cores,
@@ -250,64 +113,66 @@ impl<I: Send + 'static, O: Send + 'static, S: Stage<I, O>> Pipeline<I, O, S> {
         self
     }
 
-    /// Launch with an output stream, one-shot lifecycle.
-    pub fn launch(self) -> LaunchedSkeleton<I, O> {
-        self.launch_mode(RunMode::RunToEnd)
+    /// Unwrap into the underlying [`Skeleton`] combinator value (the
+    /// migration path off this facade).
+    pub fn into_skeleton(self) -> S {
+        self.skel
     }
 
-    /// Launch with an output stream, one-shot lifecycle (accelerator use:
-    /// wrap the result in [`crate::accel::Accel::from_skeleton`]).
+    /// Shared body of the deprecated launch shims.
+    fn launch_inner(self, mode: RunMode) -> LaunchedSkeleton<I, O> {
+        let (skel, mapping, cores) = (self.skel, self.mapping, self.explicit_cores);
+        skel.launch_pinned(mode, mapping, &cores)
+    }
+
+    /// Launch with an output stream, one-shot lifecycle.
+    ///
+    /// Note: the unified launch path gives the pipeline an **unbounded**
+    /// output stream (the old `launch` bounded it at `queue_cap`), so
+    /// the Fig. 3 offload-all-then-pop pattern can never deadlock;
+    /// callers that relied on output backpressure should throttle at
+    /// the application level.
+    #[deprecated(since = "0.2.0", note = "use `Skeleton::launch(RunMode::RunToEnd)`")]
+    #[must_use = "a launched skeleton must be driven and joined"]
+    pub fn launch(self) -> LaunchedSkeleton<I, O> {
+        self.launch_inner(RunMode::RunToEnd)
+    }
+
+    /// Launch for accelerator use (identical to `launch`; wrap the
+    /// result in [`crate::accel::Accel::from_skeleton`]).
+    #[deprecated(since = "0.2.0", note = "use `Skeleton::into_accel()`")]
+    #[must_use = "a launched skeleton must be driven and joined"]
     pub fn launch_accel(self) -> LaunchedSkeleton<I, O> {
-        self.launch_mode(RunMode::RunToEnd)
+        self.launch_inner(RunMode::RunToEnd)
     }
 
     /// Launch with an output stream in freeze mode.
+    #[deprecated(since = "0.2.0", note = "use `Skeleton::into_accel_frozen()`")]
+    #[must_use = "a launched skeleton must be driven and joined"]
     pub fn launch_accel_freeze(self) -> LaunchedSkeleton<I, O> {
-        self.launch_mode(RunMode::RunThenFreeze)
+        self.launch_inner(RunMode::RunThenFreeze)
     }
 
     /// Launch with explicit run mode.
+    #[deprecated(since = "0.2.0", note = "use `Skeleton::launch(mode)`")]
+    #[must_use = "a launched skeleton must be driven and joined"]
     pub fn launch_mode(self, mode: RunMode) -> LaunchedSkeleton<I, O> {
-        let total = self.stage.thread_count();
-        let lifecycle = Lifecycle::new(total, mode);
-        let cpu_map = CpuMap::build(self.mapping, total, &self.explicit_cores);
-        let mut joins = Vec::with_capacity(total);
-        let mut traces = Vec::with_capacity(total);
-        let (out_tx, out_rx) = stream::<O>(self.cap);
-        let poison = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        let mut ctx = WireCtx {
-            lifecycle: &lifecycle,
-            poison: &poison,
-            cpu_map: &cpu_map,
-            next_thread: 0,
-            joins: &mut joins,
-            traces: &mut traces,
-            stage_idx: 0,
-        };
-        let input = self.stage.wire(OutTarget::Chan(out_tx), &mut ctx);
-        LaunchedSkeleton {
-            input,
-            output: Some(out_rx),
-            lifecycle,
-            joins,
-            traces,
-            poison,
-        }
+        self.launch_inner(mode)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::accel::Accel;
-    use crate::node::node_fn;
     use crate::channel::Msg;
+    use crate::node::{node_fn, Outbox, Svc};
+    use crate::skeleton::seq_fn;
 
     #[test]
     fn two_stage_pipeline_composes_functions() {
-        let skel = Pipeline::new(node_fn(|x: u64| x + 1))
-            .then(node_fn(|x: u64| x * 3))
-            .launch();
+        let skel = seq_fn(|x: u64| x + 1)
+            .then(seq_fn(|x: u64| x * 3))
+            .launch(RunMode::RunToEnd);
         let mut input = skel.input;
         let mut output = skel.output.unwrap();
         for i in 0..100u64 {
@@ -327,10 +192,10 @@ mod tests {
 
     #[test]
     fn pipeline_preserves_order() {
-        let skel = Pipeline::new(node_fn(|x: u64| x))
-            .then(node_fn(|x: u64| x))
-            .then(node_fn(|x: u64| x))
-            .launch();
+        let skel = seq_fn(|x: u64| x)
+            .then(seq_fn(|x: u64| x))
+            .then(seq_fn(|x: u64| x))
+            .launch(RunMode::RunToEnd);
         let mut input = skel.input;
         let mut output = skel.output.unwrap();
         let pusher = std::thread::spawn(move || {
@@ -356,12 +221,12 @@ mod tests {
 
     #[test]
     fn farm_nested_in_pipeline() {
-        let pipe = Pipeline::new(node_fn(|x: u64| x + 1))
-            .then_farm(FarmConfig::default().workers(4).ordered(), |_| {
-                node_fn(|x: u64| x * 2)
-            })
-            .then(node_fn(|x: u64| x - 1));
-        let mut acc: Accel<u64, u64> = Accel::from_skeleton(pipe.launch_accel());
+        let mut acc = seq_fn(|x: u64| x + 1)
+            .then(farm(FarmConfig::default().workers(4).ordered(), |_| {
+                seq_fn(|x: u64| x * 2)
+            }))
+            .then(seq_fn(|x: u64| x - 1))
+            .into_accel();
         for i in 0..1000 {
             acc.offload(i).unwrap();
         }
@@ -381,17 +246,15 @@ mod tests {
         impl Node for Expander {
             type In = u64;
             type Out = u64;
-            fn svc(
-                &mut self,
-                t: u64,
-                out: &mut crate::node::Outbox<'_, u64>,
-            ) -> crate::node::Svc {
+            fn svc(&mut self, t: u64, out: &mut Outbox<'_, u64>) -> Svc {
                 out.send(t);
                 out.send(t + 100);
-                crate::node::Svc::GoOn
+                Svc::GoOn
             }
         }
-        let skel = Pipeline::new(Expander).then(node_fn(|x: u64| x)).launch();
+        let skel = crate::skeleton::seq(Expander)
+            .then(seq_fn(|x: u64| x))
+            .launch(RunMode::RunToEnd);
         let mut input = skel.input;
         let mut output = skel.output.unwrap();
         input.send(1).unwrap();
@@ -410,8 +273,9 @@ mod tests {
 
     #[test]
     fn pipeline_freeze_thaw_cycles() {
-        let pipe = Pipeline::new(node_fn(|x: u64| x * 2)).then(node_fn(|x: u64| x + 1));
-        let mut acc: Accel<u64, u64> = Accel::from_skeleton(pipe.launch_accel_freeze());
+        let mut acc = seq_fn(|x: u64| x * 2)
+            .then(seq_fn(|x: u64| x + 1))
+            .into_accel_frozen();
         for cycle in 0..3u64 {
             if cycle > 0 {
                 acc.thaw();
@@ -422,6 +286,35 @@ mod tests {
             assert_eq!(acc.load_result(), None);
             acc.wait_freezing();
         }
+        acc.wait();
+    }
+
+    #[test]
+    fn facade_builds_the_same_skeleton() {
+        // The Pipeline facade and the combinators must wire identical
+        // topologies; compare thread counts and results.
+        let facade = Pipeline::new(node_fn(|x: u64| x + 1))
+            .then_farm(FarmConfig::default().workers(2).ordered(), |_| {
+                node_fn(|x: u64| x * 2)
+            })
+            .then(node_fn(|x: u64| x - 1))
+            .into_skeleton();
+        let combinators = seq_fn(|x: u64| x + 1)
+            .then(farm(FarmConfig::default().workers(2).ordered(), |_| {
+                seq_fn(|x: u64| x * 2)
+            }))
+            .then(seq_fn(|x: u64| x - 1));
+        assert_eq!(facade.thread_count(), combinators.thread_count());
+        let mut acc = facade.into_accel();
+        for i in 0..100 {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = acc.load_result() {
+            got.push(v);
+        }
+        assert_eq!(got, (0..100u64).map(|x| (x + 1) * 2 - 1).collect::<Vec<_>>());
         acc.wait();
     }
 }

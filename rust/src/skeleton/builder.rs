@@ -1,0 +1,738 @@
+//! The [`Skeleton`] combinator trait — one algebra, one launch path.
+//!
+//! A skeleton is a *blueprint* for a concurrent stream transformer
+//! `I → O`. The algebra has four constructors, and every composite is
+//! itself a skeleton, so they nest arbitrarily (the paper's "arbitrary
+//! nesting and composition"):
+//!
+//! * [`seq`]`(node)` / [`seq_fn`]`(f)` — a sequential filter on its own
+//!   thread (the `ff_node` leaf);
+//! * `a.`[`then`]`(b)` — pipeline composition (`ff_pipeline`);
+//! * [`crate::farm::farm`]`(cfg, |w| skel)` — functional replication
+//!   (`ff_farm`); the workers are **any** skeleton, so a farm of
+//!   pipelines is spelled exactly like a farm of nodes;
+//! * [`fn@crate::farm::feedback`]`(cfg, master, |w| skel)` — the
+//!   master–worker / Divide&Conquer cyclic graph.
+//!
+//! Launching is one path for every shape: [`Skeleton::launch`] returns a
+//! [`LaunchedSkeleton`] whose *output stream is unbounded*, so the
+//! paper's Fig. 3 offload-all-then-pop pattern is deadlock-free for any
+//! topology. [`Skeleton::into_accel`] / [`Skeleton::into_accel_frozen`]
+//! wrap the launch as a software accelerator in one call.
+//!
+//! ```no_run
+//! use fastflow::prelude::*;
+//!
+//! // A farm of two-stage pipelines, ordered end to end, as an accelerator.
+//! let mut acc = farm(FarmConfig::default().workers(4).ordered(), |_| {
+//!     seq_fn(|x: u64| x + 1).then(seq_fn(|x: u64| x * 2))
+//! })
+//! .into_accel();
+//! for i in 0..100 {
+//!     acc.offload(i).unwrap();
+//! }
+//! acc.offload_eos();
+//! assert_eq!(acc.load_result(), Some(2)); // (0 + 1) * 2
+//! acc.wait();
+//! ```
+//!
+//! [`then`]: Skeleton::then
+
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::accel::Accel;
+use crate::channel::{stream, stream_unbounded, Receiver, Sender};
+use crate::node::{node_fn, FnNode, Lifecycle, Node, NodeRunner, OutTarget, Outbox, RunMode, Svc};
+use crate::sched::{CpuMap, MappingPolicy};
+use crate::skeleton::LaunchedSkeleton;
+use crate::spsc::{unbounded_spsc, UnboundedConsumer, UnboundedProducer};
+use crate::trace::NodeTrace;
+use crate::DEFAULT_QUEUE_CAP;
+
+/// Wiring context threaded through skeleton construction: the shared
+/// lifecycle/poison/CPU-map of the enclosing launch, plus mutable
+/// bookkeeping (thread ids, join handles, trace registry, name prefix).
+///
+/// Combinators receive it in [`Skeleton::wire`]; user code never builds
+/// one directly — [`Skeleton::launch`] does.
+pub struct WireCtx<'a> {
+    pub(crate) lifecycle: &'a Arc<Lifecycle>,
+    /// Shared poison flag (raised by any node on a protocol violation —
+    /// see [`LaunchedSkeleton::poison`]).
+    pub(crate) poison: &'a Arc<AtomicBool>,
+    pub(crate) cpu_map: &'a CpuMap,
+    pub(crate) next_thread: usize,
+    pub(crate) joins: &'a mut Vec<JoinHandle<()>>,
+    pub(crate) traces: &'a mut Vec<(String, Arc<NodeTrace>)>,
+    pub(crate) stage_idx: usize,
+    /// Trace-name prefix for the component being wired (e.g.
+    /// `"worker-3/"` inside a farm worker slot).
+    pub(crate) prefix: String,
+    /// One-shot capacity override for the *next* input queue a leaf (or
+    /// farm/feedback input) creates — how enclosing combinators impose
+    /// short queues on worker slots (on-demand scheduling).
+    pub(crate) in_cap_hint: Option<usize>,
+}
+
+impl<'a> WireCtx<'a> {
+    /// Claim the next thread id (for CPU-map lookup).
+    pub(crate) fn alloc_thread(&mut self) -> usize {
+        let id = self.next_thread;
+        self.next_thread += 1;
+        id
+    }
+
+    /// Prefix-qualified trace name.
+    pub(crate) fn name(&self, base: &str) -> String {
+        format!("{}{}", self.prefix, base)
+    }
+
+    /// Next `stage-N` trace name (pipeline leaves).
+    pub(crate) fn next_stage_name(&mut self) -> String {
+        let n = self.name(&format!("stage-{}", self.stage_idx));
+        self.stage_idx += 1;
+        n
+    }
+
+    /// Consume the pending input-capacity hint, or fall back.
+    pub(crate) fn take_in_cap(&mut self, default: usize) -> usize {
+        self.in_cap_hint.take().unwrap_or(default)
+    }
+
+    pub(crate) fn set_in_cap(&mut self, cap: usize) {
+        self.in_cap_hint = Some(cap);
+    }
+}
+
+/// Run `f` with a fresh wiring context for a `total`-thread skeleton and
+/// package the result as a [`LaunchedSkeleton`]. The single launch path
+/// behind every combinator and facade.
+pub(crate) fn launch_with_ctx<I, O>(
+    total: usize,
+    mode: RunMode,
+    mapping: MappingPolicy,
+    cores: &[usize],
+    f: impl FnOnce(&mut WireCtx<'_>) -> (Sender<I>, Option<Receiver<O>>),
+) -> LaunchedSkeleton<I, O>
+where
+    I: Send + 'static,
+    O: Send + 'static,
+{
+    let lifecycle = Lifecycle::new(total, mode);
+    let cpu_map = CpuMap::build(mapping, total, cores);
+    let poison = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::with_capacity(total);
+    let mut traces = Vec::with_capacity(total);
+    let (input, output) = {
+        let mut ctx = WireCtx {
+            lifecycle: &lifecycle,
+            poison: &poison,
+            cpu_map: &cpu_map,
+            next_thread: 0,
+            joins: &mut joins,
+            traces: &mut traces,
+            stage_idx: 0,
+            prefix: String::new(),
+            in_cap_hint: None,
+        };
+        f(&mut ctx)
+    };
+    LaunchedSkeleton {
+        input,
+        output,
+        lifecycle,
+        joins,
+        traces,
+        poison,
+    }
+}
+
+/// A composable stream-parallel skeleton: a blueprint mapping an input
+/// stream of `I` to an output stream of `O`.
+///
+/// Composites implement this by wiring their parts through the shared
+/// [`WireCtx`]; every value of the algebra launches through the same
+/// [`Skeleton::launch`] path. See the [module docs](self) for the
+/// grammar.
+pub trait Skeleton<I, O>: Sized + Send + 'static
+where
+    I: Send + 'static,
+    O: Send + 'static,
+{
+    /// Exact number of threads [`Skeleton::wire`] will spawn. The launch
+    /// path sizes the shared [`Lifecycle`] barrier from this, so the two
+    /// must agree for freeze/thaw to work.
+    fn thread_count(&self) -> usize;
+
+    /// Spawn this skeleton's threads against `ctx`, sending results to
+    /// `out`; returns the skeleton's input stream.
+    fn wire(self, out: OutTarget<O>, ctx: &mut WireCtx<'_>) -> Sender<I>;
+
+    /// Wire under a display name (trace rows gain a `name/` prefix; a
+    /// single-node skeleton uses `name` itself).
+    #[doc(hidden)]
+    fn wire_named(self, name: &str, out: OutTarget<O>, ctx: &mut WireCtx<'_>) -> Sender<I> {
+        let saved = ctx.prefix.clone();
+        ctx.prefix = format!("{saved}{name}/");
+        let tx = self.wire(out, ctx);
+        ctx.prefix = saved;
+        tx
+    }
+
+    /// Threads consumed when wired as a farm worker slot (leaf nodes
+    /// override to 1; composites pay two boundary adapters).
+    #[doc(hidden)]
+    fn worker_threads(&self) -> usize {
+        self.thread_count() + 2
+    }
+
+    /// Wire as a farm worker slot over sequence-tagged streams
+    /// (`(u64, T)` frames — the farm's internal ordered-collection
+    /// protocol). The default wraps `self` between a tag-stripping
+    /// ingress and a tag-reattaching egress node connected by a private
+    /// SPSC tag queue; this requires the inner skeleton to be a FIFO
+    /// one-in/one-out transformer when `ordered` (count violations
+    /// raise the shared poison flag instead of hanging — see
+    /// [`LaunchedSkeleton::poison`] and `TagEgress` for the exact
+    /// detection contract). Leaf nodes override this with the
+    /// zero-adapter `SeqWrap` path.
+    #[doc(hidden)]
+    fn wire_worker(
+        self,
+        out: OutTarget<(u64, O)>,
+        ordered: bool,
+        in_cap: usize,
+        out_cap: usize,
+        slot: usize,
+        ctx: &mut WireCtx<'_>,
+    ) -> Sender<(u64, I)> {
+        let worker_name = ctx.name(&format!("worker-{slot}"));
+        // Tags are banked only when the collector will read them; an
+        // arrival-ordered farm skips the queue and both per-task ops.
+        let (tag_tx, tag_rx) = if ordered {
+            let (tx, rx) = unbounded_spsc::<u64>();
+            (Some(tx), Some(rx))
+        } else {
+            (None, None)
+        };
+
+        // Thread ids front-to-back (ingress, inner stages, egress) even
+        // though wiring happens back-to-front, so pinning follows the
+        // dataflow like everywhere else.
+        let ingress_tid = ctx.alloc_thread();
+        let inner_base = ctx.next_thread;
+        ctx.next_thread += self.thread_count();
+        let egress_tid = ctx.alloc_thread();
+        let after_slot = ctx.next_thread;
+
+        // Egress: O → (tag, O), reattaching tags in FIFO order.
+        let (egress_tx, egress_rx) = stream::<O>(out_cap.max(1));
+        let egress_trace = NodeTrace::new();
+        ctx.traces.push((format!("{worker_name}/out"), egress_trace.clone()));
+        ctx.joins.push(
+            NodeRunner {
+                node: TagEgress {
+                    tags: tag_rx,
+                    poison: ctx.poison.clone(),
+                    _pd: PhantomData::<fn() -> O>,
+                },
+                rx: egress_rx,
+                out,
+                lifecycle: ctx.lifecycle.clone(),
+                trace: egress_trace,
+                pin_to: ctx.cpu_map.core_for(egress_tid),
+                name: format!("{worker_name}/out"),
+            }
+            .spawn(),
+        );
+
+        // The worker body: any skeleton, wired untagged. Propagate the
+        // slot's short-queue capacity to the inner skeleton's input so
+        // on-demand scheduling keeps seeing (near-)full queues instead
+        // of a deep default buffer hiding behind the ingress.
+        ctx.set_in_cap(in_cap.max(1));
+        ctx.next_thread = inner_base;
+        let inner_tx = self.wire_named(&format!("worker-{slot}"), OutTarget::Chan(egress_tx), ctx);
+        ctx.next_thread = after_slot;
+
+        // Ingress: (tag, I) → I, banking tags for the egress.
+        let (in_tx, in_rx) = stream::<(u64, I)>(in_cap.max(1));
+        let ingress_trace = NodeTrace::new();
+        ctx.traces.push((format!("{worker_name}/in"), ingress_trace.clone()));
+        ctx.joins.push(
+            NodeRunner {
+                node: TagIngress {
+                    tags: tag_tx,
+                    _pd: PhantomData::<fn(I)>,
+                },
+                rx: in_rx,
+                out: OutTarget::Chan(inner_tx),
+                lifecycle: ctx.lifecycle.clone(),
+                trace: ingress_trace,
+                pin_to: ctx.cpu_map.core_for(ingress_tid),
+                name: format!("{worker_name}/in"),
+            }
+            .spawn(),
+        );
+        in_tx
+    }
+
+    /// Append another skeleton as a pipeline stage: `self → next`.
+    #[must_use = "skeletons are blueprints: nothing runs until launch"]
+    fn then<O2, S2>(self, next: S2) -> Then<Self, S2, O>
+    where
+        O2: Send + 'static,
+        S2: Skeleton<O, O2>,
+    {
+        Then {
+            first: self,
+            second: next,
+            _pd: PhantomData,
+        }
+    }
+
+    /// **The** launch path: spawn every thread under one lifecycle in
+    /// `mode`, with an unbounded output stream (so offloading everything
+    /// before popping anything can never deadlock — Fig. 3's pattern).
+    #[must_use = "a launched skeleton must be driven and joined"]
+    fn launch(self, mode: RunMode) -> LaunchedSkeleton<I, O> {
+        self.launch_pinned(mode, MappingPolicy::None, &[])
+    }
+
+    /// [`Skeleton::launch`] with a thread→core mapping policy.
+    #[must_use = "a launched skeleton must be driven and joined"]
+    fn launch_pinned(
+        self,
+        mode: RunMode,
+        mapping: MappingPolicy,
+        cores: &[usize],
+    ) -> LaunchedSkeleton<I, O> {
+        let total = self.thread_count();
+        launch_with_ctx(total, mode, mapping, cores, move |ctx: &mut WireCtx<'_>| {
+            let (out_tx, out_rx) = stream_unbounded::<O>();
+            let input = self.wire(OutTarget::Chan(out_tx), ctx);
+            (input, Some(out_rx))
+        })
+    }
+
+    /// Launch with results flowing into an existing stream instead of a
+    /// fresh output (the launched skeleton's `output` is `None`).
+    #[must_use = "a launched skeleton must be driven and joined"]
+    fn launch_into(self, out: Sender<O>, mode: RunMode) -> LaunchedSkeleton<I, O> {
+        let total = self.thread_count();
+        launch_with_ctx(total, mode, MappingPolicy::None, &[], move |ctx: &mut WireCtx<'_>| {
+            (self.wire(OutTarget::Chan(out), ctx), None)
+        })
+    }
+
+    /// Launch as a one-shot software accelerator (paper §3): threads
+    /// exit after EOS; join with [`Accel::wait`].
+    #[must_use = "an accelerator must be driven and joined"]
+    fn into_accel(self) -> Accel<I, O> {
+        Accel::from_skeleton(self.launch(RunMode::RunToEnd))
+    }
+
+    /// Launch as a freeze-mode accelerator: after each EOS the threads
+    /// park (OS-suspended) awaiting [`Accel::thaw`] — the paper's
+    /// `run_then_freeze()`.
+    #[must_use = "an accelerator must be driven and joined"]
+    fn into_accel_frozen(self) -> Accel<I, O> {
+        Accel::from_skeleton(self.launch(RunMode::RunThenFreeze))
+    }
+}
+
+/// A single [`Node`] as a skeleton leaf. Build with [`seq`] / [`seq_fn`].
+#[must_use = "skeletons are blueprints: nothing runs until launch"]
+pub struct SeqNode<N> {
+    node: N,
+    cap: usize,
+}
+
+/// Lift a [`Node`] into the skeleton algebra.
+pub fn seq<N: Node + 'static>(node: N) -> SeqNode<N> {
+    SeqNode {
+        node,
+        cap: DEFAULT_QUEUE_CAP,
+    }
+}
+
+/// Lift a plain `FnMut(I) -> O` closure into the skeleton algebra —
+/// `seq(node_fn(f))` in one call.
+pub fn seq_fn<I, O, F>(f: F) -> SeqNode<FnNode<F, I, O>>
+where
+    F: FnMut(I) -> O + Send,
+    I: Send + 'static,
+    O: Send + 'static,
+{
+    seq(node_fn(f))
+}
+
+impl<N> SeqNode<N> {
+    /// Capacity of this node's input queue (default
+    /// [`DEFAULT_QUEUE_CAP`]; enclosing combinators may override it for
+    /// worker slots).
+    pub fn cap(mut self, cap: usize) -> Self {
+        self.cap = cap.max(1);
+        self
+    }
+
+    fn wire_with_name<I, O>(
+        self,
+        name: String,
+        out: OutTarget<O>,
+        ctx: &mut WireCtx<'_>,
+    ) -> Sender<I>
+    where
+        I: Send + 'static,
+        O: Send + 'static,
+        N: Node<In = I, Out = O> + 'static,
+    {
+        let cap = ctx.take_in_cap(self.cap);
+        let (tx, rx) = stream::<I>(cap);
+        let trace = NodeTrace::new();
+        ctx.traces.push((name.clone(), trace.clone()));
+        let tid = ctx.alloc_thread();
+        ctx.joins.push(
+            NodeRunner {
+                node: self.node,
+                rx,
+                out,
+                lifecycle: ctx.lifecycle.clone(),
+                trace,
+                pin_to: ctx.cpu_map.core_for(tid),
+                name,
+            }
+            .spawn(),
+        );
+        tx
+    }
+}
+
+impl<N: Node + 'static> Skeleton<N::In, N::Out> for SeqNode<N> {
+    fn thread_count(&self) -> usize {
+        1
+    }
+
+    fn wire(self, out: OutTarget<N::Out>, ctx: &mut WireCtx<'_>) -> Sender<N::In> {
+        let name = ctx.next_stage_name();
+        self.wire_with_name(name, out, ctx)
+    }
+
+    fn wire_named(
+        self,
+        name: &str,
+        out: OutTarget<N::Out>,
+        ctx: &mut WireCtx<'_>,
+    ) -> Sender<N::In> {
+        let qualified = ctx.name(name);
+        self.wire_with_name(qualified, out, ctx)
+    }
+
+    fn worker_threads(&self) -> usize {
+        1
+    }
+
+    /// Leaf worker slot: the zero-adapter path — the node is wrapped in
+    /// the farm's sequence tagger (`SeqWrap`) on a single thread,
+    /// exactly the classic farm worker.
+    fn wire_worker(
+        self,
+        out: OutTarget<(u64, N::Out)>,
+        ordered: bool,
+        in_cap: usize,
+        _out_cap: usize,
+        slot: usize,
+        ctx: &mut WireCtx<'_>,
+    ) -> Sender<(u64, N::In)> {
+        let (tx, rx) = stream::<(u64, N::In)>(in_cap.max(1));
+        let trace = NodeTrace::new();
+        let name = ctx.name(&format!("worker-{slot}"));
+        ctx.traces.push((name.clone(), trace.clone()));
+        let tid = ctx.alloc_thread();
+        ctx.joins.push(
+            NodeRunner {
+                node: crate::farm::SeqWrap {
+                    inner: self.node,
+                    enforce_one: ordered,
+                    poison: ctx.poison.clone(),
+                },
+                rx,
+                out,
+                lifecycle: ctx.lifecycle.clone(),
+                trace,
+                pin_to: ctx.cpu_map.core_for(tid),
+                name: format!("ff-{name}"),
+            }
+            .spawn(),
+        );
+        tx
+    }
+}
+
+/// Two skeletons composed in a pipeline: `S1 → S2`. Build with
+/// [`Skeleton::then`].
+#[must_use = "skeletons are blueprints: nothing runs until launch"]
+pub struct Then<S1, S2, M> {
+    first: S1,
+    second: S2,
+    _pd: PhantomData<fn() -> M>,
+}
+
+impl<I, M, O, S1, S2> Skeleton<I, O> for Then<S1, S2, M>
+where
+    I: Send + 'static,
+    M: Send + 'static,
+    O: Send + 'static,
+    S1: Skeleton<I, M>,
+    S2: Skeleton<M, O>,
+{
+    fn thread_count(&self) -> usize {
+        self.first.thread_count() + self.second.thread_count()
+    }
+
+    fn wire(self, out: OutTarget<O>, ctx: &mut WireCtx<'_>) -> Sender<I> {
+        // Back-to-front: reserve first-stage thread ids before the
+        // second stage consumes ids, to keep pinning front-to-back. Any
+        // pending input-capacity hint belongs to the *first* stage's
+        // input queue, not the middle link.
+        let hint = ctx.in_cap_hint.take();
+        let first_threads = self.first.thread_count();
+        let first_base = ctx.next_thread;
+        ctx.next_thread += first_threads;
+        let mid_tx = self.second.wire(out, ctx);
+        let saved = ctx.next_thread;
+        ctx.next_thread = first_base;
+        ctx.in_cap_hint = hint;
+        let tx = self.first.wire(OutTarget::Chan(mid_tx), ctx);
+        ctx.next_thread = saved;
+        tx
+    }
+}
+
+/// Boundary adapter: strips the farm's sequence tag on the way into a
+/// composite worker, banking it on a private SPSC queue for the egress
+/// (`tags` is `None` in arrival-ordered farms, where nobody reads them).
+struct TagIngress<I> {
+    tags: Option<UnboundedProducer<u64>>,
+    _pd: PhantomData<fn(I)>,
+}
+
+impl<I: Send + 'static> Node for TagIngress<I> {
+    type In = (u64, I);
+    type Out = I;
+
+    #[inline]
+    fn svc(&mut self, (tag, task): (u64, I), out: &mut Outbox<'_, I>) -> Svc {
+        // Bank the tag *before* forwarding: the egress can then always
+        // observe it by the time the corresponding result exits (the
+        // SPSC release/acquire pair orders the two).
+        if let Some(tags) = &mut self.tags {
+            tags.push(tag);
+        }
+        out.send(task);
+        Svc::GoOn
+    }
+}
+
+/// Boundary adapter: reattaches banked sequence tags to a composite
+/// worker's results in FIFO order. Correct iff the inner skeleton is an
+/// order-preserving one-in/one-out transformer. Under `ordered`,
+/// arity violations are detected **by count** (more results than banked
+/// tags mid-stream, or leftover tags at cycle end) and raise the shared
+/// poison flag — the farm drains and the offload side surfaces
+/// [`crate::accel::AccelError::Disconnected`] instead of hanging or
+/// panicking. A *balanced* violation (equal counts but broken
+/// input→output correspondence, e.g. one task dropped and another
+/// duplicated while tags are banked) is indistinguishable from correct
+/// behaviour at this boundary and yields misattributed sequence tags;
+/// the leaf `SeqWrap` path enforces per-task arity exactly, which is
+/// why plain-node workers never take this adapter.
+struct TagEgress<O> {
+    /// `Some` iff the farm is ordered (tag banking active).
+    tags: Option<UnboundedConsumer<u64>>,
+    poison: Arc<AtomicBool>,
+    _pd: PhantomData<fn() -> O>,
+}
+
+impl<O: Send + 'static> Node for TagEgress<O> {
+    type In = O;
+    type Out = (u64, O);
+
+    #[inline]
+    fn svc(&mut self, value: O, out: &mut Outbox<'_, (u64, O)>) -> Svc {
+        match &mut self.tags {
+            None => {
+                // Arrival-ordered collection ignores the tag value.
+                out.send((0, value));
+                Svc::GoOn
+            }
+            Some(tags) => match tags.try_pop() {
+                Some(tag) => {
+                    out.send((tag, value));
+                    Svc::GoOn
+                }
+                None => {
+                    // More results than tasks: the one-emission contract
+                    // is broken. Poison and terminate this slot's
+                    // stream; the farm keeps draining.
+                    self.poison.store(true, AtomicOrdering::Release);
+                    Svc::Eos
+                }
+            },
+        }
+    }
+
+    fn svc_end(&mut self) {
+        // Leftover tags mean fewer results than tasks — an arity
+        // violation under the ordered contract. Either way, drain them
+        // so a freeze/thaw cycle starts clean.
+        if let Some(tags) = &mut self.tags {
+            let mut leftover = false;
+            while tags.try_pop().is_some() {
+                leftover = true;
+            }
+            if leftover {
+                self.poison.store(true, AtomicOrdering::Release);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Msg;
+    use crate::farm::{farm, FarmConfig};
+
+    #[test]
+    fn seq_then_seq_composes_functions() {
+        let skel = seq_fn(|x: u64| x + 1).then(seq_fn(|x: u64| x * 3));
+        assert_eq!(skel.thread_count(), 2);
+        let launched = skel.launch(RunMode::RunToEnd);
+        let mut input = launched.input;
+        let mut output = launched.output.unwrap();
+        for i in 0..100u64 {
+            input.send(i).unwrap();
+        }
+        input.send_eos().unwrap();
+        let mut got = vec![];
+        loop {
+            match output.recv() {
+                Msg::Task(v) => got.push(v),
+                Msg::Batch(vs) => got.extend(vs),
+                Msg::Eos => break,
+            }
+        }
+        assert_eq!(got, (0..100u64).map(|x| (x + 1) * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn farm_of_pipelines_ordered_matches_sequential() {
+        // The composition the old API could not express: each worker is
+        // itself a two-stage pipeline, and the ordered collector still
+        // restores offload order end to end.
+        let mut acc = farm(FarmConfig::default().workers(3).ordered(), |_| {
+            seq_fn(|x: u64| x + 1).then(seq_fn(|x: u64| x * 2))
+        })
+        .into_accel();
+        for i in 0..1_000u64 {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = acc.load_result() {
+            got.push(v);
+        }
+        assert_eq!(got, (0..1_000u64).map(|x| (x + 1) * 2).collect::<Vec<_>>());
+        assert!(!acc.poisoned());
+        acc.wait();
+    }
+
+    #[test]
+    fn farm_of_pipelines_trace_names_are_scoped() {
+        let mut acc = farm(FarmConfig::default().workers(2), |_| {
+            seq_fn(|x: u64| x).then(seq_fn(|x: u64| x))
+        })
+        .into_accel();
+        acc.offload(1).unwrap();
+        acc.offload_eos();
+        while acc.load_result().is_some() {}
+        let report = acc.wait();
+        let names: Vec<&str> = report.rows.iter().map(|r| r.name.as_str()).collect();
+        assert!(names.contains(&"emitter"));
+        assert!(names.contains(&"collector"));
+        assert!(names.contains(&"worker-0/in"));
+        assert!(names.contains(&"worker-0/out"));
+        assert!(names.iter().any(|n| n.starts_with("worker-0/stage-")));
+    }
+
+    #[test]
+    fn ordered_farm_of_multi_emitting_pipeline_poisons() {
+        // A composite worker that emits twice per task violates the
+        // ordered farm's one-in/one-out contract: the egress adapter
+        // must poison (never hang, never panic) and the stream must
+        // still terminate.
+        struct Dup;
+        impl Node for Dup {
+            type In = u64;
+            type Out = u64;
+            fn svc(&mut self, t: u64, out: &mut Outbox<'_, u64>) -> Svc {
+                out.send(t);
+                out.send(t);
+                Svc::GoOn
+            }
+        }
+        let mut acc = farm(FarmConfig::default().workers(1).ordered(), |_| {
+            seq(Dup).then(seq_fn(|x: u64| x))
+        })
+        .into_accel();
+        acc.offload(7).unwrap();
+        acc.offload_eos();
+        while acc.load_result().is_some() {}
+        assert!(acc.poisoned(), "arity violation must poison");
+        acc.wait();
+    }
+
+    #[test]
+    fn launch_into_external_stream() {
+        let (tx, mut rx) = stream::<u64>(16);
+        let launched = seq_fn(|x: u64| x * 10).launch_into(tx, RunMode::RunToEnd);
+        let (mut input, output, handle) = launched.split();
+        assert!(output.is_none());
+        input.send(4).unwrap();
+        input.send_eos().unwrap();
+        assert_eq!(rx.recv(), Msg::Task(40));
+        assert_eq!(rx.recv(), Msg::Eos);
+        handle.join();
+    }
+
+    #[test]
+    fn deep_nesting_three_levels() {
+        // pipeline( seq → farm( pipeline( seq → farm(seq) ) ) → seq )
+        let skel = seq_fn(|x: u64| x + 1)
+            .then(farm(FarmConfig::default().workers(2).ordered(), |_| {
+                seq_fn(|x: u64| x * 2).then(farm(
+                    FarmConfig::default().workers(2).ordered(),
+                    |_| seq_fn(|x: u64| x + 10),
+                ))
+            }))
+            .then(seq_fn(|x: u64| x - 1));
+        let mut acc = skel.into_accel();
+        for i in 0..200u64 {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = acc.load_result() {
+            got.push(v);
+        }
+        assert_eq!(
+            got,
+            (0..200u64).map(|x| (x + 1) * 2 + 10 - 1).collect::<Vec<_>>()
+        );
+        acc.wait();
+    }
+}

@@ -1,8 +1,30 @@
-//! Common shape of a *launched* skeleton instance: threads running,
-//! an input stream to push into, optionally an output stream to pop
-//! from, and the shared lifecycle. Both [`crate::farm`] and
-//! [`crate::pipeline`] produce this; [`crate::accel`] wraps it as a
-//! software accelerator.
+//! The **skeleton algebra**: one uniform combinator language in which a
+//! sequential node, a pipeline, a farm, and a master–worker feedback
+//! loop are all values of the same type family, composable in every
+//! direction — the paper's "arbitrary nesting and composition" made
+//! first-class.
+//!
+//! * [`builder`] holds the [`Skeleton`] trait and the combinators:
+//!   [`seq`] / [`seq_fn`] (leaf), [`Skeleton::then`] (pipeline),
+//!   [`crate::farm::farm`] (functional replication — workers may be
+//!   *any* skeleton, enabling farm-of-pipelines), and
+//!   [`fn@crate::farm::feedback`] (master–worker / Divide&Conquer).
+//! * This module also holds the common shape of a *launched* skeleton
+//!   instance ([`LaunchedSkeleton`]): threads running, an input stream
+//!   to push into, optionally an output stream to pop from, and the
+//!   shared lifecycle. Every combinator launches through exactly one
+//!   path — [`Skeleton::launch`] — and [`crate::accel`] wraps the
+//!   result as a software accelerator
+//!   ([`Skeleton::into_accel`] / [`Skeleton::into_accel_frozen`]).
+
+pub mod builder;
+
+pub use builder::{seq, seq_fn, SeqNode, Skeleton, Then, WireCtx};
+// The farm-shaped combinators live next to their wiring but belong to
+// the same algebra; re-export them so `skeleton::{farm, feedback}` is
+// the one-stop composition surface.
+pub use crate::farm::feedback::{feedback, Feedback};
+pub use crate::farm::{farm, Farm};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;

@@ -1,15 +1,12 @@
 //! Cross-module integration: the paper's workloads end-to-end through
 //! the public API, each verified against its sequential oracle.
 
-use fastflow::accel::{Accel, AccelPool, FarmAccel, Placement, PoolConfig};
 use fastflow::apps::mandelbrot::{
     render_multiclient, render_progressive, render_sequential, Engine, Region, RenderParams,
 };
 use fastflow::apps::matmul::{matmul_accelerated, matmul_sequential, Matrix};
 use fastflow::apps::nqueens::{count_parallel, count_sequential, known_solutions};
-use fastflow::farm::{FarmConfig, SchedPolicy};
-use fastflow::node::node_fn;
-use fastflow::pipeline::Pipeline;
+use fastflow::prelude::*;
 use fastflow::util::num_cpus;
 
 #[test]
@@ -57,10 +54,11 @@ fn table2_nqueens_all_decompositions_agree() {
 fn accelerator_burst_reuse_matches_fresh_accelerators() {
     // One frozen accelerator reused over 10 bursts must equal 10
     // one-shot runs.
-    let mut acc: FarmAccel<u64, u64> = FarmAccel::run_then_freeze(
+    let mut acc: FarmAccel<u64, u64> = farm(
         FarmConfig::default().workers(3).sched(SchedPolicy::OnDemand),
-        |_| node_fn(|x: u64| x.wrapping_mul(2654435761).rotate_left(7)),
-    );
+        |_| seq_fn(|x: u64| x.wrapping_mul(2654435761).rotate_left(7)),
+    )
+    .into_accel_frozen();
     for burst in 0..10u64 {
         if burst > 0 {
             acc.thaw();
@@ -91,14 +89,14 @@ fn accelerator_burst_reuse_matches_fresh_accelerators() {
 #[test]
 fn pipeline_of_farms_composes() {
     // pipeline( farm(x+1) → farm(x*3) ) ordered end to end.
-    let pipe = Pipeline::new(node_fn(|x: u64| x))
-        .then_farm(FarmConfig::default().workers(2).ordered(), |_| {
-            node_fn(|x: u64| x + 1)
-        })
-        .then_farm(FarmConfig::default().workers(3).ordered(), |_| {
-            node_fn(|x: u64| x * 3)
-        });
-    let mut acc: Accel<u64, u64> = Accel::from_skeleton(pipe.launch_accel());
+    let mut acc: Accel<u64, u64> = seq_fn(|x: u64| x)
+        .then(farm(FarmConfig::default().workers(2).ordered(), |_| {
+            seq_fn(|x: u64| x + 1)
+        }))
+        .then(farm(FarmConfig::default().workers(3).ordered(), |_| {
+            seq_fn(|x: u64| x * 3)
+        }))
+        .into_accel();
     for i in 0..2_000 {
         acc.offload(i).unwrap();
     }
@@ -114,7 +112,7 @@ fn pipeline_of_farms_composes() {
 #[test]
 fn offload_counts_are_tracked() {
     let mut acc: FarmAccel<u32, u32> =
-        FarmAccel::run(FarmConfig::default().workers(2), |_| node_fn(|x: u32| x));
+        farm(FarmConfig::default().workers(2), |_| seq_fn(|x: u32| x)).into_accel();
     for i in 0..50 {
         acc.offload(i).unwrap();
     }
@@ -217,10 +215,10 @@ fn mandelbrot_multiclient_pool_is_bit_identical() {
 #[test]
 fn trace_reports_cover_all_nodes() {
     let workers = num_cpus().clamp(2, 4);
-    let mut acc: FarmAccel<u32, u32> = FarmAccel::run(
-        FarmConfig::default().workers(workers),
-        |_| node_fn(|x: u32| x),
-    );
+    let mut acc: FarmAccel<u32, u32> = farm(FarmConfig::default().workers(workers), |_| {
+        seq_fn(|x: u32| x)
+    })
+    .into_accel();
     acc.offload(1).unwrap();
     acc.offload_eos();
     while acc.load_result().is_some() {}

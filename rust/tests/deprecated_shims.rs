@@ -1,0 +1,266 @@
+//! The one-release compatibility shims: the deprecated constructor
+//! matrix (`Accel::run*`, `Pipeline::launch*`, `launch_farm`,
+//! `launch_master_worker`) must keep working — and produce results
+//! identical to the unified builder — until it is removed. This file is
+//! the **only** place the deprecated entry points may be used.
+#![allow(deprecated)]
+
+use fastflow::accel::{Accel, AccelError, FarmAccel};
+use fastflow::channel::Msg;
+use fastflow::farm::{
+    launch_farm, launch_master_worker, FarmConfig, FarmOutput, MasterCtx, MasterLogic,
+};
+use fastflow::node::{node_fn, RunMode, Svc};
+use fastflow::pipeline::Pipeline;
+
+#[test]
+fn accel_run_shim() {
+    let mut acc: FarmAccel<u64, u64> =
+        FarmAccel::run(FarmConfig::default().workers(2), |_| node_fn(|x: u64| x + 1));
+    for i in 0..100 {
+        acc.offload(i).unwrap();
+    }
+    acc.offload_eos();
+    let mut got = vec![];
+    while let Some(v) = acc.load_result() {
+        got.push(v);
+    }
+    got.sort_unstable();
+    assert_eq!(got, (1..=100).collect::<Vec<u64>>());
+    acc.wait();
+}
+
+#[test]
+fn accel_run_then_freeze_shim() {
+    let mut acc: FarmAccel<u64, u64> =
+        FarmAccel::run_then_freeze(FarmConfig::default().workers(2), |_| node_fn(|x: u64| x * 2));
+    for burst in 0..2u64 {
+        if burst > 0 {
+            acc.thaw();
+        }
+        acc.offload(burst).unwrap();
+        acc.offload_eos();
+        assert_eq!(acc.load_result(), Some(burst * 2));
+        assert_eq!(acc.load_result(), None);
+        acc.wait_freezing();
+    }
+    acc.thaw();
+    acc.offload_eos();
+    acc.wait();
+}
+
+#[test]
+fn accel_run_no_collector_shims() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    let total = Arc::new(AtomicU64::new(0));
+    let t2 = total.clone();
+    let mut acc: FarmAccel<u64, ()> =
+        FarmAccel::run_no_collector(FarmConfig::default().workers(2), move |_| {
+            let total = t2.clone();
+            node_fn(move |x: u64| {
+                total.fetch_add(x, Ordering::Relaxed);
+            })
+        });
+    for i in 1..=100 {
+        acc.offload(i).unwrap();
+    }
+    assert!(acc.load_result().is_none(), "no output stream");
+    acc.offload_eos();
+    acc.wait();
+    assert_eq!(total.load(Ordering::Relaxed), 5050);
+
+    let t3 = total.clone();
+    let mut acc: FarmAccel<u64, ()> =
+        FarmAccel::run_then_freeze_no_collector(FarmConfig::default().workers(2), move |_| {
+            let total = t3.clone();
+            node_fn(move |x: u64| {
+                total.fetch_add(x, Ordering::Relaxed);
+            })
+        });
+    acc.offload(10).unwrap();
+    acc.offload_eos();
+    acc.wait_freezing();
+    acc.wait();
+    assert_eq!(total.load(Ordering::Relaxed), 5060);
+}
+
+#[test]
+fn accel_shim_still_reports_closed() {
+    let mut acc: FarmAccel<u64, u64> =
+        FarmAccel::run(FarmConfig::default().workers(1), |_| node_fn(|x: u64| x));
+    acc.offload(1).unwrap();
+    acc.offload_eos();
+    assert_eq!(acc.offload(2), Err(AccelError::Closed));
+    while acc.load_result().is_some() {}
+    acc.wait();
+}
+
+#[test]
+fn pipeline_launch_shims() {
+    // launch()
+    let launched = Pipeline::new(node_fn(|x: u64| x + 1))
+        .then(node_fn(|x: u64| x * 3))
+        .launch();
+    let mut input = launched.input;
+    let mut output = launched.output.unwrap();
+    input.send(2).unwrap();
+    input.send_eos().unwrap();
+    assert_eq!(output.recv(), Msg::Task(9));
+    assert_eq!(output.recv(), Msg::Eos);
+
+    // launch_accel()
+    let mut acc: Accel<u64, u64> = Accel::from_skeleton(
+        Pipeline::new(node_fn(|x: u64| x + 1))
+            .then_farm(FarmConfig::default().workers(2).ordered(), |_| {
+                node_fn(|x: u64| x * 2)
+            })
+            .launch_accel(),
+    );
+    for i in 0..100 {
+        acc.offload(i).unwrap();
+    }
+    acc.offload_eos();
+    let mut got = vec![];
+    while let Some(v) = acc.load_result() {
+        got.push(v);
+    }
+    assert_eq!(got, (0..100u64).map(|x| (x + 1) * 2).collect::<Vec<_>>());
+    acc.wait();
+
+    // launch_accel_freeze()
+    let mut acc: Accel<u64, u64> =
+        Accel::from_skeleton(Pipeline::new(node_fn(|x: u64| x * 2)).launch_accel_freeze());
+    acc.offload(21).unwrap();
+    acc.offload_eos();
+    assert_eq!(acc.load_result(), Some(42));
+    assert_eq!(acc.load_result(), None);
+    acc.wait_freezing();
+    acc.wait();
+
+    // launch_mode()
+    let launched = Pipeline::new(node_fn(|x: u64| x)).launch_mode(RunMode::RunToEnd);
+    let mut input = launched.input;
+    let mut output = launched.output.unwrap();
+    input.send(5).unwrap();
+    input.send_eos().unwrap();
+    assert_eq!(output.recv(), Msg::Task(5));
+    assert_eq!(output.recv(), Msg::Eos);
+}
+
+#[test]
+fn launch_farm_shim_all_outputs() {
+    // Stream
+    let farm = launch_farm(
+        FarmConfig::default().workers(2),
+        RunMode::RunToEnd,
+        |_| node_fn(|x: u64| x + 1),
+        FarmOutput::Stream,
+    );
+    let (mut input, output, handle) = farm.split();
+    let mut output = output.unwrap();
+    for i in 0..50 {
+        input.send(i).unwrap();
+    }
+    input.send_eos().unwrap();
+    let mut got = vec![];
+    loop {
+        match output.recv() {
+            Msg::Task(v) => got.push(v),
+            Msg::Batch(vs) => got.extend(vs),
+            Msg::Eos => break,
+        }
+    }
+    handle.join();
+    got.sort_unstable();
+    assert_eq!(got, (1..=50).collect::<Vec<u64>>());
+
+    // External
+    let (tx, mut rx) = fastflow::channel::stream::<u64>(64);
+    let farm = launch_farm(
+        FarmConfig::default().workers(2),
+        RunMode::RunToEnd,
+        |_| node_fn(|x: u64| x),
+        FarmOutput::External(tx),
+    );
+    let (mut input, none, handle) = farm.split();
+    assert!(none.is_none());
+    input.send(9).unwrap();
+    input.send_eos().unwrap();
+    assert_eq!(rx.recv(), Msg::Task(9));
+    assert_eq!(rx.recv(), Msg::Eos);
+    handle.join();
+
+    // None (collector-less)
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    let sum = Arc::new(AtomicU64::new(0));
+    let s2 = sum.clone();
+    let farm = launch_farm(
+        FarmConfig::default().workers(2),
+        RunMode::RunToEnd,
+        move |_| {
+            let sum = s2.clone();
+            node_fn(move |x: u64| {
+                sum.fetch_add(x, Ordering::Relaxed);
+            })
+        },
+        FarmOutput::None::<()>,
+    );
+    let (mut input, none, handle) = farm.split();
+    assert!(none.is_none());
+    for i in 1..=10 {
+        input.send(i).unwrap();
+    }
+    input.send_eos().unwrap();
+    handle.join();
+    assert_eq!(sum.load(Ordering::Relaxed), 55);
+}
+
+/// Minimal D&C master for the launch_master_worker shim.
+struct CountMaster {
+    seen: u64,
+}
+
+impl MasterLogic for CountMaster {
+    type In = u64;
+    type Task = u64;
+    type Result = u64;
+    type Out = u64;
+
+    fn on_input(&mut self, t: u64, ctx: &mut MasterCtx<'_, Self>) -> Svc {
+        ctx.dispatch(t);
+        Svc::GoOn
+    }
+
+    fn on_feedback(&mut self, r: u64, _ctx: &mut MasterCtx<'_, Self>) -> Svc {
+        self.seen += r;
+        Svc::GoOn
+    }
+
+    fn on_input_eos(&mut self, ctx: &mut MasterCtx<'_, Self>) -> Svc {
+        if ctx.in_flight() == 0 {
+            ctx.emit(self.seen);
+            Svc::Eos
+        } else {
+            Svc::GoOn
+        }
+    }
+}
+
+#[test]
+fn launch_master_worker_shim() {
+    let skel = launch_master_worker(
+        FarmConfig::default().workers(2),
+        RunMode::RunToEnd,
+        CountMaster { seen: 0 },
+        |_| node_fn(|x: u64| x * 2),
+    );
+    let mut acc: Accel<u64, u64> = Accel::from_skeleton(skel);
+    for i in 1..=10 {
+        acc.offload(i).unwrap();
+    }
+    acc.offload_eos();
+    assert_eq!(acc.load_result(), Some(110)); // 2 * Σ 1..=10
+    acc.wait();
+}

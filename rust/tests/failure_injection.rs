@@ -11,10 +11,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use fastflow::accel::FarmAccel;
 use fastflow::baseline::MutexQueue;
-use fastflow::farm::{launch_farm, FarmConfig, FarmOutput, SchedPolicy};
-use fastflow::node::{node_fn, Node, Outbox, RunMode, Svc};
+use fastflow::prelude::*;
 
 /// A worker that panics on a designated task value.
 struct Panicky {
@@ -37,10 +35,11 @@ impl Node for Panicky {
 fn worker_panic_does_not_hang_the_farm() {
     // 4 workers, one will die on task 17; all other tasks must still
     // flow and the farm must terminate.
-    let mut acc: FarmAccel<u64, u64> = FarmAccel::run(
+    let mut acc: FarmAccel<u64, u64> = farm(
         FarmConfig::default().workers(4).sched(SchedPolicy::OnDemand),
-        |_| Panicky { trigger: 17 },
-    );
+        |_| seq(Panicky { trigger: 17 }),
+    )
+    .into_accel();
     for i in 0..500 {
         acc.offload(i).unwrap();
     }
@@ -73,7 +72,7 @@ fn early_svc_eos_terminates_single_worker_cleanly() {
     }
     // Single worker: deterministic — stream ends after the trigger.
     let mut acc: FarmAccel<u64, u64> =
-        FarmAccel::run(FarmConfig::default().workers(1), |_| StopAt(10));
+        farm(FarmConfig::default().workers(1), |_| seq(StopAt(10))).into_accel();
     for i in 0..100 {
         match acc.try_offload(i) {
             Ok(()) => {}
@@ -94,7 +93,7 @@ fn dropping_accel_without_eos_does_not_hang() {
     // The accelerator is dropped mid-stream; its Drop path (wait) closes
     // the input, drains output, and joins. Must complete.
     let mut acc: FarmAccel<u64, u64> =
-        FarmAccel::run(FarmConfig::default().workers(2), |_| node_fn(|x: u64| x));
+        farm(FarmConfig::default().workers(2), |_| seq_fn(|x: u64| x)).into_accel();
     for i in 0..100 {
         acc.offload(i).unwrap();
     }
@@ -105,18 +104,17 @@ fn dropping_accel_without_eos_does_not_hang() {
 fn collectorless_worker_panic_still_joins() {
     let hits = Arc::new(AtomicU64::new(0));
     let h2 = hits.clone();
-    let mut acc: FarmAccel<u64, ()> = FarmAccel::run_no_collector(
-        FarmConfig::default().workers(3),
-        move |wi| {
-            let hits = h2.clone();
-            node_fn(move |x: u64| {
-                if wi == 1 && x % 97 == 13 {
-                    panic!("injected");
-                }
-                hits.fetch_add(1, Ordering::Relaxed);
-            })
-        },
-    );
+    let mut acc: FarmAccel<u64, ()> = farm(FarmConfig::default().workers(3), move |wi| {
+        let hits = h2.clone();
+        seq_fn(move |x: u64| {
+            if wi == 1 && x % 97 == 13 {
+                panic!("injected");
+            }
+            hits.fetch_add(1, Ordering::Relaxed);
+        })
+    })
+    .no_collector()
+    .into_accel();
     for i in 0..300 {
         acc.offload(i).unwrap();
     }
@@ -131,13 +129,9 @@ fn farm_with_external_output_survives_receiver_drop() {
     // still terminate on EOS.
     let (tx, rx) = fastflow::channel::stream::<u64>(8);
     drop(rx);
-    let farm = launch_farm(
-        FarmConfig::default().workers(2),
-        RunMode::RunToEnd,
-        |_| node_fn(|x: u64| x),
-        FarmOutput::External(tx),
-    );
-    let (mut input, _out, handle) = farm.split();
+    let launched = farm(FarmConfig::default().workers(2), |_| seq_fn(|x: u64| x))
+        .launch_into(tx, RunMode::RunToEnd);
+    let (mut input, _out, handle) = launched.split();
     for i in 0..50 {
         input.send(i).unwrap();
     }
@@ -171,7 +165,7 @@ fn mutex_queue_close_under_contention() {
 fn zero_task_stream_is_valid() {
     // Offload nothing, just EOS: the accelerator must cycle cleanly.
     let mut acc: FarmAccel<u64, u64> =
-        FarmAccel::run(FarmConfig::default().workers(3), |_| node_fn(|x: u64| x));
+        farm(FarmConfig::default().workers(3), |_| seq_fn(|x: u64| x)).into_accel();
     acc.offload_eos();
     assert_eq!(acc.load_result(), None);
     let report = acc.wait();

@@ -10,12 +10,10 @@
 //!   `AccelError::Closed` in **every** build profile (it used to be a
 //!   `debug_assert`, i.e. a silent push in `--release`).
 
-use fastflow::accel::{AccelError, FarmAccel};
 use fastflow::apps::matmul::{
     matmul_accelerated, matmul_pjrt_f32, matmul_ref_f32, matmul_sequential, Matrix, PJRT_N,
 };
-use fastflow::farm::FarmConfig;
-use fastflow::node::node_fn;
+use fastflow::prelude::*;
 use fastflow::runtime::MatmulKernel;
 
 /// The quickstart flow with the kernel gate: scalar + farm paths always
@@ -68,7 +66,7 @@ fn fallback_kernels_report_unavailable() {
 #[test]
 fn offload_after_eos_returns_closed_in_all_profiles() {
     let mut acc: FarmAccel<u64, u64> =
-        FarmAccel::run(FarmConfig::default().workers(2), |_| node_fn(|x: u64| x + 1));
+        farm(FarmConfig::default().workers(2), |_| seq_fn(|x: u64| x + 1)).into_accel();
     for i in 0..10 {
         acc.offload(i).unwrap();
     }

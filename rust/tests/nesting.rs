@@ -1,0 +1,305 @@
+//! Sequential-equivalence property tests for **nested** skeleton
+//! topologies (seeded, reproducible — see `fastflow::testing`):
+//!
+//! 1. a farm whose workers are pipelines equals the sequential
+//!    composition, under every `SchedPolicy` × ordered/unordered, both
+//!    per-item and via `offload_batch`, and across freeze/thaw cycles;
+//! 2. a pipeline of farms equals the sequential composition under the
+//!    same sweep;
+//! 3. a feedback (master–worker) loop nested inside a pipeline equals
+//!    the sequential reduction, including across a freeze/thaw cycle;
+//! 4. an `AccelPool` whose shards are pipelines serves concurrent
+//!    clients exactly-once with the sequential result multiset.
+
+use fastflow::prelude::*;
+use fastflow::testing::{Cases, Gen};
+
+fn f1(x: u64) -> u64 {
+    x.wrapping_mul(31).wrapping_add(7)
+}
+fn f2(x: u64) -> u64 {
+    x ^ (x >> 3)
+}
+fn f3(x: u64) -> u64 {
+    x.wrapping_mul(2654435761)
+}
+
+/// The sequential oracle for `f3 ∘ f2 ∘ f1` over `0..n`.
+fn oracle(n: u64) -> Vec<u64> {
+    (0..n).map(|x| f3(f2(f1(x)))).collect()
+}
+
+fn sched_of(g: &mut Gen) -> SchedPolicy {
+    if g.bool() {
+        SchedPolicy::RoundRobin
+    } else {
+        SchedPolicy::OnDemand
+    }
+}
+
+/// Drive one accelerator cycle: offload `0..n` (per-item or batched),
+/// close, drain. Returns the collected results in arrival order.
+fn drive_cycle(acc: &mut Accel<u64, u64>, n: u64, batch: Option<usize>) -> Vec<u64> {
+    match batch {
+        Some(b) => {
+            let all: Vec<u64> = (0..n).collect();
+            for chunk in all.chunks(b.max(1)) {
+                acc.offload_batch(chunk.to_vec()).unwrap();
+            }
+        }
+        None => {
+            for i in 0..n {
+                acc.offload(i).unwrap();
+            }
+        }
+    }
+    acc.offload_eos();
+    let mut got = vec![];
+    while let Some(v) = acc.load_result() {
+        got.push(v);
+    }
+    got
+}
+
+fn check(mut got: Vec<u64>, ordered: bool, n: u64, label: &str) {
+    let mut want = oracle(n);
+    if !ordered {
+        got.sort_unstable();
+        want.sort_unstable();
+    }
+    assert_eq!(got, want, "{label}");
+}
+
+#[test]
+fn prop_farm_of_pipelines_equals_sequential() {
+    Cases::new("farm_of_pipelines", 8).run(|g: &mut Gen| {
+        let workers = g.usize_in(1, 4);
+        let n = g.usize_in(1, 1_500) as u64;
+        let sched = sched_of(g);
+        let ordered = g.bool();
+        let batch = if g.bool() {
+            Some(g.usize_in(1, 64))
+        } else {
+            None
+        };
+        let mut cfg = FarmConfig::default().workers(workers).sched(sched);
+        if ordered {
+            cfg = cfg.ordered();
+        }
+        let mut acc = farm(cfg, |_| {
+            seq_fn(f1).then(seq_fn(f2)).then(seq_fn(f3))
+        })
+        .into_accel();
+        let got = drive_cycle(&mut acc, n, batch);
+        check(
+            got,
+            ordered,
+            n,
+            &format!("workers={workers} sched={sched:?} ordered={ordered} batch={batch:?}"),
+        );
+        assert!(!acc.poisoned());
+        acc.wait();
+    });
+}
+
+#[test]
+fn prop_farm_of_pipelines_freeze_thaw() {
+    Cases::new("farm_of_pipelines_freeze", 4).run(|g: &mut Gen| {
+        let workers = g.usize_in(1, 3);
+        let bursts = g.usize_in(2, 4);
+        let ordered = g.bool();
+        let mut cfg = FarmConfig::default().workers(workers).sched(sched_of(g));
+        if ordered {
+            cfg = cfg.ordered();
+        }
+        let mut acc = farm(cfg, |_| seq_fn(f1).then(seq_fn(f2)).then(seq_fn(f3)))
+            .into_accel_frozen();
+        for b in 0..bursts {
+            if b > 0 {
+                acc.thaw();
+            }
+            let n = g.usize_in(0, 600) as u64;
+            let batch = if g.bool() {
+                Some(g.usize_in(1, 32))
+            } else {
+                None
+            };
+            let got = drive_cycle(&mut acc, n, batch);
+            check(got, ordered, n, &format!("burst={b} ordered={ordered}"));
+            acc.wait_freezing();
+        }
+        acc.thaw();
+        acc.offload_eos();
+        acc.wait();
+    });
+}
+
+#[test]
+fn prop_pipeline_of_farms_equals_sequential() {
+    Cases::new("pipeline_of_farms", 8).run(|g: &mut Gen| {
+        let n = g.usize_in(1, 1_500) as u64;
+        let ordered = g.bool();
+        let batch = if g.bool() {
+            Some(g.usize_in(1, 64))
+        } else {
+            None
+        };
+        let mk_cfg = |g: &mut Gen, ordered: bool| {
+            let mut cfg = FarmConfig::default()
+                .workers(g.usize_in(1, 4))
+                .sched(sched_of(g));
+            if ordered {
+                cfg = cfg.ordered();
+            }
+            cfg
+        };
+        let (c1, c2) = (mk_cfg(g, ordered), mk_cfg(g, ordered));
+        let mut acc = seq_fn(f1)
+            .then(farm(c1, |_| seq_fn(f2)))
+            .then(farm(c2, |_| seq_fn(f3)))
+            .into_accel();
+        let got = drive_cycle(&mut acc, n, batch);
+        check(got, ordered, n, &format!("ordered={ordered} batch={batch:?}"));
+        acc.wait();
+    });
+}
+
+/// D&C range-sum master (the feedback worker splits or sums ranges).
+enum RangeResult {
+    Sum(u64),
+    Split((u64, u64), (u64, u64)),
+}
+
+struct SumMaster {
+    total: u64,
+}
+
+impl MasterLogic for SumMaster {
+    type In = (u64, u64);
+    type Task = (u64, u64);
+    type Result = RangeResult;
+    type Out = u64;
+
+    fn on_input(&mut self, t: (u64, u64), ctx: &mut MasterCtx<'_, Self>) -> Svc {
+        ctx.dispatch(t);
+        Svc::GoOn
+    }
+
+    fn on_feedback(&mut self, r: RangeResult, ctx: &mut MasterCtx<'_, Self>) -> Svc {
+        match r {
+            RangeResult::Sum(s) => self.total += s,
+            RangeResult::Split(a, b) => {
+                ctx.dispatch(a);
+                ctx.dispatch(b);
+            }
+        }
+        Svc::GoOn
+    }
+
+    fn on_input_eos(&mut self, ctx: &mut MasterCtx<'_, Self>) -> Svc {
+        if ctx.in_flight() == 0 {
+            let total = std::mem::take(&mut self.total);
+            ctx.emit(total);
+            Svc::Eos
+        } else {
+            Svc::GoOn
+        }
+    }
+}
+
+#[test]
+fn prop_feedback_inside_pipeline_equals_sequential() {
+    Cases::new("feedback_in_pipeline", 5).run(|g: &mut Gen| {
+        let workers = g.usize_in(1, 4);
+        let hi = g.usize_in(1, 8_000) as u64;
+        let sched = sched_of(g);
+        // pre-stage widens the range, feedback sums it, post-stage scales.
+        let skel = seq_fn(|n: u64| (0u64, n))
+            .then(feedback(
+                FarmConfig::default().workers(workers).sched(sched),
+                SumMaster { total: 0 },
+                |_| {
+                    seq_fn(|(lo, hi): (u64, u64)| {
+                        if hi - lo <= 128 {
+                            RangeResult::Sum((lo..hi).sum())
+                        } else {
+                            let mid = lo + (hi - lo) / 2;
+                            RangeResult::Split((lo, mid), (mid, hi))
+                        }
+                    })
+                },
+            ))
+            .then(seq_fn(|total: u64| total.wrapping_mul(3)));
+        let mut acc: Accel<u64, u64> = skel.into_accel_frozen();
+        // Two bursts across a freeze/thaw cycle (SumMaster resets its
+        // accumulator at every cycle end via mem::take).
+        for burst in 0..2u64 {
+            if burst > 0 {
+                acc.thaw();
+            }
+            acc.offload(hi).unwrap();
+            acc.offload_eos();
+            let want = (0..hi).sum::<u64>().wrapping_mul(3);
+            assert_eq!(acc.load_result(), Some(want), "burst {burst}");
+            assert_eq!(acc.load_result(), None);
+            acc.wait_freezing();
+        }
+        acc.thaw();
+        acc.offload_eos();
+        acc.wait();
+    });
+}
+
+#[test]
+fn prop_pool_of_pipeline_shards_exactly_once() {
+    Cases::new("pool_pipeline_shards", 5).run(|g: &mut Gen| {
+        let shards = g.usize_in(1, 3);
+        let clients = g.usize_in(1, 4) as u64;
+        let per_client = g.usize_in(1, 500) as u64;
+        let batch = g.usize_in(1, 33);
+        let placement = if g.bool() {
+            Placement::RoundRobin
+        } else {
+            Placement::LeastLoaded
+        };
+        let (mut pool, root) = AccelPool::run_skeleton(
+            PoolConfig::default()
+                .shards(shards)
+                .placement(placement)
+                .batch(batch),
+            |_shard| {
+                seq_fn(f1).then(farm(FarmConfig::default().workers(2).ordered(), |_| {
+                    seq_fn(f2).then(seq_fn(f3))
+                }))
+            },
+        );
+        let joins: Vec<_> = (0..clients)
+            .map(|c| {
+                let mut h = root.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_client {
+                        h.offload(c * per_client + i).unwrap();
+                    }
+                    h.finish().unwrap();
+                })
+            })
+            .collect();
+        drop(root);
+        pool.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = pool.load_result() {
+            got.push(v);
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        pool.wait();
+        got.sort_unstable();
+        let mut want: Vec<u64> = (0..clients * per_client).map(|x| f3(f2(f1(x)))).collect();
+        want.sort_unstable();
+        assert_eq!(
+            got, want,
+            "shards={shards} clients={clients} batch={batch} placement={placement:?}"
+        );
+    });
+}

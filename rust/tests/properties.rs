@@ -14,10 +14,8 @@
 //!    preserves per-client FIFO order through the input arbiter when a
 //!    single shard runs an ordered collector.
 
-use fastflow::accel::{AccelPool, FarmAccel, Placement, PoolConfig};
 use fastflow::channel::Msg;
-use fastflow::farm::{FarmConfig, SchedPolicy};
-use fastflow::node::node_fn;
+use fastflow::prelude::*;
 use fastflow::queues;
 use fastflow::spsc::{spsc, unbounded_spsc};
 use fastflow::testing::{Cases, Gen};
@@ -77,13 +75,14 @@ fn prop_farm_processes_each_task_exactly_once() {
             SchedPolicy::OnDemand
         };
         let caps = g.usize_in(1, 128);
-        let mut acc: FarmAccel<u64, u64> = FarmAccel::run(
+        let mut acc: FarmAccel<u64, u64> = farm(
             FarmConfig::default()
                 .workers(workers)
                 .sched(sched)
                 .queue_caps(caps, caps, caps),
-            |_| node_fn(|x: u64| x),
-        );
+            |_| seq_fn(|x: u64| x),
+        )
+        .into_accel();
         for i in 0..n {
             acc.offload(i).unwrap();
         }
@@ -103,17 +102,18 @@ fn prop_ordered_farm_preserves_order() {
     Cases::new("farm_ordered", 10).run(|g: &mut Gen| {
         let workers = g.usize_in(1, 6);
         let n = g.usize_in(1, 2_000) as u64;
-        let mut acc: FarmAccel<u64, u64> = FarmAccel::run(
+        let mut acc: FarmAccel<u64, u64> = farm(
             FarmConfig::default().workers(workers).ordered(),
             |wi| {
-                node_fn(move |x: u64| {
+                seq_fn(move |x: u64| {
                     if wi % 2 == 0 {
                         std::thread::yield_now(); // skew completion order
                     }
                     x
                 })
             },
-        );
+        )
+        .into_accel();
         for i in 0..n {
             acc.offload(i).unwrap();
         }
@@ -133,10 +133,10 @@ fn prop_freeze_thaw_bursts_lossless() {
     Cases::new("freeze_thaw", 6).run(|g: &mut Gen| {
         let workers = g.usize_in(1, 4);
         let bursts = g.usize_in(1, 6);
-        let mut acc: FarmAccel<u64, u64> = FarmAccel::run_then_freeze(
-            FarmConfig::default().workers(workers),
-            |_| node_fn(|x: u64| x + 1),
-        );
+        let mut acc: FarmAccel<u64, u64> = farm(FarmConfig::default().workers(workers), |_| {
+            seq_fn(|x: u64| x + 1)
+        })
+        .into_accel_frozen();
         for b in 0..bursts {
             if b > 0 {
                 acc.thaw();
@@ -255,7 +255,7 @@ fn prop_batched_equals_unbatched_every_policy() {
             }
             let run = |batched: bool| {
                 let mut acc: FarmAccel<u64, u64> =
-                    FarmAccel::run(cfg.clone(), |_| node_fn(|x: u64| x * 3 + 1));
+                    farm(cfg.clone(), |_| seq_fn(|x: u64| x * 3 + 1)).into_accel();
                 if batched {
                     let all: Vec<u64> = (0..n).collect();
                     for chunk in all.chunks(batch) {
@@ -401,7 +401,7 @@ fn prop_multi_emission_conserves_expansion() {
         let n = g.usize_in(1, 400) as u64;
         let workers = g.usize_in(1, 4);
         let mut acc: FarmAccel<u64, u64> =
-            FarmAccel::run(FarmConfig::default().workers(workers), |_| Expand(fanout));
+            farm(FarmConfig::default().workers(workers), |_| seq(Expand(fanout))).into_accel();
         for i in 0..n {
             acc.offload(i).unwrap();
         }
