@@ -32,9 +32,12 @@ bench:
 	cd rust && $(CARGO) bench --bench table2_nqueens -- --quick
 
 # CI smoke lane: compile every bench, then run short sweeps that write
-# $(ARTIFACT_DIR)/BENCH_accel.json (multi-client service) and
-# $(ARTIFACT_DIR)/BENCH_accel_nesting.json (composition overhead) — the
-# machine-readable perf trajectory benchkit emits via FF_BENCH_JSON.
+# $(ARTIFACT_DIR)/BENCH_accel.json (multi-client service),
+# $(ARTIFACT_DIR)/BENCH_accel_nesting.json (composition overhead),
+# $(ARTIFACT_DIR)/BENCH_alloc.json (allocator plateau study) and
+# $(ARTIFACT_DIR)/BENCH_queue_latency_multipush.json (multipush on/off
+# sweep) — the machine-readable perf trajectory benchkit emits via
+# FF_BENCH_JSON.
 bench-smoke:
 	cd rust && $(CARGO) bench --no-run
 	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
@@ -43,6 +46,12 @@ bench-smoke:
 	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
 		FF_BENCH_JSON=$(abspath $(ARTIFACT_DIR)) \
 		$(CARGO) bench --bench nested_topologies -- --quick
+	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
+		FF_BENCH_JSON=$(abspath $(ARTIFACT_DIR)) \
+		$(CARGO) bench --bench allocator -- --quick
+	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
+		FF_BENCH_JSON=$(abspath $(ARTIFACT_DIR)) \
+		$(CARGO) bench --bench queue_latency -- --quick
 
 # API docs with rustdoc warnings denied (deprecation shims must stay
 # documented; broken intra-doc links fail the build).

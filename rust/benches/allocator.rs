@@ -1,13 +1,21 @@
 //! Ablation (§3.2 "parallel memory allocator"): cost of task allocation
 //! on the offload hot path — fresh `Box` per task (the paper's Fig. 3
 //! `new task_t` / `delete t`) vs the recycling [`TaskPool`], plus the
-//! size-classed [`SlabArena`] vs global malloc for worker scratch space.
+//! size-classed [`SlabArena`] vs global malloc for worker scratch space,
+//! plus the end-to-end plateau study: fresh-allocation counts through a
+//! real session accelerator (TaskPool envelopes) and a real multi-client
+//! pool (BatchPool frame recycling), which must stop growing after
+//! warmup.
+//!
+//! Emits `BENCH_alloc.json` under `FF_BENCH_JSON` — the machine-readable
+//! allocation trajectory CI uploads.
 //!
 //! `cargo bench --bench allocator [-- --quick]`
 
 use fastflow::alloc::{SlabArena, TaskPool};
 use fastflow::benchkit::{measure_ns_per_op, BenchOpts, Report};
 use fastflow::metrics::Table;
+use fastflow::prelude::*;
 use fastflow::spsc::spsc;
 
 /// A Fig. 3-sized task payload.
@@ -17,12 +25,87 @@ struct TaskT {
     _payload: [u64; 6],
 }
 
+/// Steady-state session run: a window of boxed tasks cycling through a
+/// farm accelerator with TaskPool recycling. Returns
+/// (ns_per_task, fresh_after_warmup, fresh_final, reused).
+fn session_taskpool_run(n: u64) -> (f64, u64, u64, u64) {
+    const WINDOW: u64 = 64;
+    let (mut pool, mut ret) = TaskPool::<TaskT>::new();
+    let cfg = FarmConfig::default().workers(2);
+    let mut acc: FarmAccel<Box<TaskT>, Box<TaskT>> =
+        farm(cfg, |_| seq_fn(|t: Box<TaskT>| t)).into_accel();
+    for i in 0..WINDOW {
+        acc.offload(pool.take(TaskT {
+            _i: i,
+            _j: i,
+            _payload: [i; 6],
+        }))
+        .unwrap();
+    }
+    let fresh_warm = pool.fresh;
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let done = acc.load_result().expect("open stream");
+        ret.give(done);
+        acc.offload(pool.take(TaskT {
+            _i: i,
+            _j: i,
+            _payload: [i; 6],
+        }))
+        .unwrap();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / n as f64;
+    let (fresh, reused) = (pool.fresh, pool.reused);
+    acc.offload_eos();
+    while let Some(done) = acc.load_result() {
+        ret.give(done);
+    }
+    acc.wait();
+    (ns, fresh_warm, fresh, reused)
+}
+
+/// Steady-state pool run: one client coalescing into a 2-shard pool,
+/// draining each frame before the next flush. Returns
+/// (ns_per_task, client_batch_fresh, client_batch_reused,
+/// arbiter_alloc_fresh, arbiter_alloc_reused).
+fn pool_batchpool_run(rounds: u64) -> (f64, u64, u64, u64, u64) {
+    const BATCH: usize = 32;
+    let (mut pool, mut h) = AccelPool::run(
+        PoolConfig::default()
+            .shards(2)
+            .batch(BATCH)
+            .workers_per_shard(2),
+        |_s, _w| node_fn(|x: u64| x + 1),
+    );
+    let t0 = std::time::Instant::now();
+    for round in 0..rounds {
+        for i in 0..BATCH as u64 {
+            h.offload(round * 1_000 + i).unwrap();
+        }
+        for _ in 0..BATCH {
+            pool.load_result().expect("open cycle");
+        }
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / (rounds * BATCH as u64) as f64;
+    let (bf, br) = (h.batch_fresh(), h.batch_reused());
+    h.finish().unwrap();
+    pool.offload_eos();
+    while pool.load_result().is_some() {}
+    let report = pool.wait();
+    let arb = report
+        .rows
+        .iter()
+        .find(|r| r.name == "arbiter")
+        .expect("arbiter row");
+    (ns, bf, br, arb.alloc_fresh, arb.alloc_reused)
+}
+
 fn main() {
     let opts = BenchOpts::from_env();
     let quick = std::env::args().any(|a| a == "--quick");
     let n: u64 = if quick { 200_000 } else { 1_000_000 };
 
-    let mut table = Table::new(&["strategy", "ns/task"]);
+    let mut table = Table::new(&["metric", "value"]);
 
     // Fresh Box per offload, freed by the "worker" (other side of a queue).
     let boxed = measure_ns_per_op(opts, n, |iters| {
@@ -55,7 +138,10 @@ fn main() {
         }
         consumer.join().unwrap();
     });
-    table.row(vec!["Box per task (Fig. 3)".into(), format!("{:.1}", boxed.mean)]);
+    table.row(vec![
+        "Box per task (Fig. 3) ns/task".into(),
+        format!("{:.1}", boxed.mean),
+    ]);
 
     // TaskPool recycling through the return channel.
     let pooled = measure_ns_per_op(opts, n, |iters| {
@@ -89,7 +175,10 @@ fn main() {
         }
         consumer.join().unwrap();
     });
-    table.row(vec!["TaskPool recycle".into(), format!("{:.1}", pooled.mean)]);
+    table.row(vec![
+        "TaskPool recycle ns/task".into(),
+        format!("{:.1}", pooled.mean),
+    ]);
 
     // Worker scratch buffers: malloc vs slab arena.
     let malloc_scratch = measure_ns_per_op(opts, n, |iters| {
@@ -99,7 +188,7 @@ fn main() {
         }
     });
     table.row(vec![
-        "scratch: malloc 1KB".into(),
+        "scratch: malloc 1KB ns/op".into(),
         format!("{:.1}", malloc_scratch.mean),
     ]);
 
@@ -112,15 +201,50 @@ fn main() {
         }
     });
     table.row(vec![
-        "scratch: SlabArena 1KB".into(),
+        "scratch: SlabArena 1KB ns/op".into(),
         format!("{:.1}", slab_scratch.mean),
     ]);
 
-    let mut report = Report::new("allocator", table);
+    // ---- end-to-end plateau study -------------------------------------
+    // The zero-allocation acceptance observable: fresh counts after a
+    // sustained run equal the warmup counts (TaskPool) / stay at one
+    // buffer per lane (BatchPool).
+    let steady_n: u64 = if quick { 20_000 } else { 200_000 };
+    let (ns, fresh_warm, fresh, reused) = session_taskpool_run(steady_n);
+    let rounds: u64 = if quick { 200 } else { 2_000 };
+    let (pns, bf, br, af, ar) = pool_batchpool_run(rounds);
+
+    table.row(vec!["session ns/task (pooled)".into(), format!("{ns:.1}")]);
+    table.row(vec![
+        "session TaskPool fresh @warmup".into(),
+        fresh_warm.to_string(),
+    ]);
+    table.row(vec![
+        "session TaskPool fresh @end".into(),
+        fresh.to_string(),
+    ]);
+    table.row(vec!["session TaskPool reused".into(), reused.to_string()]);
+    table.row(vec!["pool ns/task (batched)".into(), format!("{pns:.1}")]);
+    table.row(vec!["client BatchPool fresh".into(), bf.to_string()]);
+    table.row(vec!["client BatchPool reused".into(), br.to_string()]);
+    table.row(vec!["arbiter alloc fresh".into(), af.to_string()]);
+    table.row(vec!["arbiter alloc reused".into(), ar.to_string()]);
+
+    let mut report = Report::new("alloc", table);
     report.note(format!(
         "TaskPool vs Box: {:.2}x | SlabArena vs malloc: {:.2}x",
         boxed.mean / pooled.mean,
         malloc_scratch.mean / slab_scratch.mean
+    ));
+    report.note(format!(
+        "plateau: TaskPool fresh {} -> {} over {} tasks (delta {}), \
+         client BatchPool fresh {} over {} flushes",
+        fresh_warm,
+        fresh,
+        steady_n,
+        fresh - fresh_warm,
+        bf,
+        rounds
     ));
     report.emit();
 }

@@ -130,6 +130,38 @@ fn bench_stream(opts: BenchOpts, n: u64) -> Vec<(String, f64)> {
     rows
 }
 
+/// Multipush on/off sweep (TR-09-12): the same streaming workload with
+/// the producer staging `burst` items per ring transaction. `burst = 1`
+/// is the plain `push` baseline.
+fn bench_multipush(opts: BenchOpts, n: u64) -> Vec<(String, f64)> {
+    let mut rows = vec![];
+    for burst in [1usize, 4, 16, 64] {
+        let s = measure_ns_per_op(opts, n, move |iters| {
+            let (mut p, mut c) = spsc::<u64>(CAP);
+            p.set_burst(burst);
+            let producer = std::thread::spawn(move || {
+                for i in 0..iters {
+                    p.push_buffered(i).unwrap();
+                }
+                assert!(p.flush());
+            });
+            let mut sum = 0u64;
+            for _ in 0..iters {
+                sum = sum.wrapping_add(c.pop().unwrap());
+            }
+            producer.join().unwrap();
+            std::hint::black_box(sum);
+        });
+        let label = if burst == 1 {
+            "multipush off (plain push)".to_string()
+        } else {
+            format!("multipush burst={burst}")
+        };
+        rows.push((label, s.mean));
+    }
+    rows
+}
+
 fn bench_pingpong(opts: BenchOpts, rounds: u64) -> Vec<(String, f64)> {
     let mut rows = vec![];
 
@@ -216,6 +248,25 @@ fn main() {
     report.note(format!(
         "ff-spsc vs mutex: {:.1}x cheaper per op (paper claim: lock-free ⇒ fine-grain viable)",
         mutex_ns / ff_ns
+    ));
+    report.emit();
+
+    let mut t = Table::new(&["mode", "stream ns/op"]);
+    let multi = bench_multipush(opts, n);
+    for (name, ns) in &multi {
+        t.row(vec![name.clone(), format!("{ns:.1}")]);
+    }
+    let mut report = Report::new("queue_latency_multipush", t);
+    let off = multi[0].1;
+    let best = multi
+        .iter()
+        .skip(1)
+        .map(|(_, ns)| *ns)
+        .fold(f64::INFINITY, f64::min);
+    report.note(format!(
+        "best multipush vs plain push: {:.2}x (burst amortizes the \
+         per-slot coherence handshake, TR-09-12)",
+        off / best
     ));
     report.emit();
 

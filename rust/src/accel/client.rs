@@ -90,7 +90,10 @@ impl<T: Send + 'static> LaneRegistry<T> {
 pub struct AccelHandle<T: Send + 'static> {
     lane: Sender<T>,
     registry: Arc<LaneRegistry<T>>,
-    /// Local coalescing buffer (flushed at `batch` items).
+    /// Local coalescing buffer (flushed at `batch` items). Replenished
+    /// from the lane's batch free lane: the pool arbiter returns every
+    /// unpacked frame, so a draining client re-uses the same few `Vec`s
+    /// forever — the steady-state offload path allocates nothing.
     buf: Vec<T>,
     batch: usize,
     /// Tasks offloaded through this handle (including still-buffered).
@@ -148,8 +151,18 @@ impl<T: Send + 'static> AccelHandle<T> {
         Ok(())
     }
 
+    /// Draw a recycled batch buffer for [`AccelHandle::offload_batch`]
+    /// (the pool arbiter returns every unpacked frame through this
+    /// lane's free lane).
+    #[must_use = "the drawn buffer is the batch frame — fill and offload it"]
+    pub fn take_batch_buf(&mut self) -> Vec<T> {
+        self.lane.take_buf()
+    }
+
     /// Offload a pre-built run of tasks as one frame (after flushing any
-    /// buffered tasks, so per-handle FIFO order holds).
+    /// buffered tasks, so per-handle FIFO order holds). Draw `tasks`
+    /// from [`AccelHandle::take_batch_buf`] to keep sustained batching
+    /// allocation-free.
     pub fn offload_batch(&mut self, tasks: Vec<T>) -> Result<(), AccelError> {
         if self.closed {
             return Err(AccelError::Closed);
@@ -163,15 +176,29 @@ impl<T: Send + 'static> AccelHandle<T> {
         Ok(())
     }
 
-    /// Ship any buffered tasks now.
+    /// Ship any buffered tasks now. The next coalescing buffer is drawn
+    /// from the lane's free lane (recycled frames returned by the pool
+    /// arbiter) — fresh allocation happens only during warmup.
     pub fn flush(&mut self) -> Result<(), AccelError> {
         if self.buf.is_empty() {
             return Ok(());
         }
-        let run = std::mem::take(&mut self.buf);
+        let run = std::mem::replace(&mut self.buf, self.lane.take_buf());
         self.lane
             .send_batch(run)
             .map_err(|_| AccelError::Disconnected)
+    }
+
+    /// Batch buffers this handle allocated fresh (its free lane was
+    /// empty). Plateaus after warmup when the arbiter keeps up — the
+    /// §3.2 "parallel allocator" observable for the offload side.
+    pub fn batch_fresh(&self) -> u64 {
+        self.lane.batch_fresh()
+    }
+
+    /// Batch buffers this handle drew recycled from the arbiter.
+    pub fn batch_reused(&self) -> u64 {
+        self.lane.batch_reused()
     }
 
     /// Close this handle's lane: flushes buffered tasks and tells the

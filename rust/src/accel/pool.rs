@@ -357,7 +357,11 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
                 }
                 Some(Msg::Batch(vs)) => {
                     self.cursor = s;
-                    self.pending.extend(vs.into_iter().map(|v| (s, v)));
+                    // The emptied frame goes back to the shard's
+                    // collector through the free lane.
+                    let pending = &mut self.pending;
+                    self.outputs[s]
+                        .recycle_after(vs, |vs| pending.extend(vs.drain(..).map(|v| (s, v))));
                     if let Some((s2, v)) = self.pending.pop_front() {
                         self.note_completed(s2);
                         self.collected += 1;
@@ -599,7 +603,16 @@ fn spawn_arbiter<I: Send + 'static>(
                                     let k = ts.len() as u64;
                                     let s =
                                         pick_shard(placement, &mut rr, &dispatched, &completed);
-                                    let _ = shard_inputs[s].send_batch(ts);
+                                    // Re-frame instead of forwarding the
+                                    // client's Vec: the run moves into a
+                                    // buffer recycled on the shard link
+                                    // (returned by that shard's emitter)
+                                    // and the client's buffer goes back
+                                    // through its own lane — both return
+                                    // paths stay SPSC and the arbiter
+                                    // allocates nothing after warmup.
+                                    let run = shard_inputs[s].reframe(lane, ts);
+                                    let _ = shard_inputs[s].send_batch(run);
                                     dispatched[s] += k;
                                     trace.on_tasks(k, t0.elapsed().as_nanos() as u64);
                                     trace.on_emit(k);
@@ -661,6 +674,15 @@ fn spawn_arbiter<I: Send + 'static>(
                 for s in shard_inputs.iter_mut() {
                     let _ = s.send_eos();
                 }
+                // Publish the cycle's buffer-pool activity so the
+                // fresh-allocation plateau is visible in TraceReport.
+                let (mut fresh, mut reused) = (0u64, 0u64);
+                for s in shard_inputs.iter_mut() {
+                    let (f, r) = s.take_alloc_stats();
+                    fresh += f;
+                    reused += r;
+                }
+                trace.on_alloc(fresh, reused);
                 trace.on_cycle();
                 if exit_after_cycle || !lifecycle.cycle_end() {
                     break;

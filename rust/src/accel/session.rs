@@ -35,6 +35,7 @@
 
 use std::collections::VecDeque;
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::AccelError;
 use crate::channel::Msg;
@@ -42,7 +43,7 @@ use crate::farm::{farm, FarmConfig};
 use crate::node::{LifecycleState, Node, RunMode};
 use crate::skeleton::builder::{seq, Skeleton};
 use crate::skeleton::LaunchedSkeleton;
-use crate::trace::TraceReport;
+use crate::trace::{TraceReport, TraceRow};
 
 /// A software accelerator wrapping any launched skeleton.
 ///
@@ -164,12 +165,31 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
         Ok(())
     }
 
+    /// Draw a recycled batch buffer for [`Accel::offload_batch`]: the
+    /// farm emitter returns every unpacked frame through the input
+    /// stream's free lane, so a loop of `take_batch_buf` → fill →
+    /// `offload_batch` allocates nothing after warmup (observable via
+    /// [`Accel::batch_alloc_stats`] and the `offload` trace row).
+    #[must_use = "the drawn buffer is the batch frame — fill and offload it"]
+    pub fn take_batch_buf(&mut self) -> Vec<I> {
+        self.skel.input.take_buf()
+    }
+
+    /// `(fresh, reused)` batch-buffer counts for the offload side.
+    /// `fresh` plateaus after warmup when the emitter keeps returning
+    /// emptied frames.
+    pub fn batch_alloc_stats(&self) -> (u64, u64) {
+        (self.skel.input.batch_fresh(), self.skel.input.batch_reused())
+    }
+
     /// Offload a whole run of tasks as **one** stream frame (one queue
     /// slot, one synchronization). The farm emitter unpacks the batch,
     /// so scheduling policies and ordered collection still operate on
     /// individual tasks — batching only changes the transfer cost, not
     /// the semantics. This is what makes fine-grained offloading pay
     /// (cf. `benches/granularity.rs` and `benches/accel_multiclient.rs`).
+    /// Draw `tasks` from [`Accel::take_batch_buf`] to keep sustained
+    /// batching allocation-free.
     pub fn offload_batch(&mut self, tasks: Vec<I>) -> Result<(), AccelError> {
         if self.eos_sent {
             return Err(AccelError::Closed);
@@ -240,7 +260,10 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
                     self.collected += 1;
                     return Some(v);
                 }
-                Msg::Batch(vs) => self.pending.extend(vs),
+                Msg::Batch(vs) => {
+                    let pending = &mut self.pending;
+                    rx.recycle_after(vs, |vs| pending.extend(vs.drain(..)));
+                }
                 Msg::Eos => {
                     self.out_drained = true;
                     return None;
@@ -267,7 +290,10 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
                     self.collected += 1;
                     return Some(v);
                 }
-                Msg::Batch(vs) => self.pending.extend(vs),
+                Msg::Batch(vs) => {
+                    let pending = &mut self.pending;
+                    rx.recycle_after(vs, |vs| pending.extend(vs.drain(..)));
+                }
                 Msg::Eos => {
                     self.out_drained = true;
                     return None;
@@ -306,13 +332,35 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
 
     /// Final join (the paper's `farm.wait()`): closes the input stream if
     /// still open, drains any un-popped results, tells frozen threads to
-    /// exit and joins them all. Returns the trace report.
+    /// exit and joins them all. Returns the trace report (including the
+    /// offload-side `offload` row).
     pub fn wait(mut self) -> TraceReport {
         self.offload_eos();
         // Drain the output so the collector can't block on a full queue.
         while self.load_result().is_some() {}
+        let offload = self.offload_row();
         self.skel.lifecycle.request_exit();
-        self.skel.join()
+        let mut report = self.skel.join();
+        report.rows.push(offload);
+        report
+    }
+
+    /// The caller-side row of the trace report: offload counts plus the
+    /// batch-pool fresh/reused counters whose plateau shows the hot
+    /// path is allocation-free.
+    fn offload_row(&self) -> TraceRow {
+        let (alloc_fresh, alloc_reused) = self.batch_alloc_stats();
+        TraceRow {
+            name: "offload".into(),
+            tasks: self.offloaded,
+            emitted: self.offloaded,
+            svc_time: Duration::ZERO,
+            push_retries: self.skel.input.push_retries,
+            pop_retries: 0,
+            cycles: 0,
+            alloc_fresh,
+            alloc_reused,
+        }
     }
 
     /// True once the skeleton raised its poison flag (a worker violated
@@ -329,9 +377,12 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
         self.skel.lifecycle.state()
     }
 
-    /// Trace snapshot (running accelerators included).
+    /// Trace snapshot (running accelerators included), with the
+    /// caller-side `offload` row appended.
     pub fn trace_report(&self) -> TraceReport {
-        self.skel.trace_report()
+        let mut report = self.skel.trace_report();
+        report.rows.push(self.offload_row());
+        report
     }
 
     /// Number of accelerator threads (emitter + workers [+ collector]).

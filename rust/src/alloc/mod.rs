@@ -2,28 +2,64 @@
 //! the programmer with specific tools to tune the performance: a parallel
 //! memory allocator…").
 //!
-//! Two pieces:
+//! Three pieces:
 //!
 //! * [`TaskPool`] — a typed recycling pool for the accelerator hot loop:
 //!   the offloading thread allocates task boxes, workers return them
 //!   through a lock-free SPSC free-list, so steady-state offloading does
 //!   zero heap allocation. This is the tool that removes `new task_t` /
 //!   `delete t` (paper Fig. 3 lines 35 & 56) from the hot path.
+//! * [`BatchPool`] — a recycling pool for the `Vec`s that back
+//!   [`crate::channel::Msg::Batch`] frames. Every stream owns one: the
+//!   sender draws emptied buffers ([`crate::channel::Sender::take_buf`]),
+//!   the receiver returns them after unpacking
+//!   ([`crate::channel::Receiver::recycle`]), and in steady state no
+//!   batch frame allocates.
 //! * [`SlabArena`] — a size-classed bump/freelist arena for untyped
 //!   buffers, single-owner, used by workloads that need scratch space
 //!   per task without malloc contention.
+//!
+//! ## The SPSC return discipline
+//!
+//! Both pools move recycled objects over a **bounded SPSC** queue: the
+//! take side ([`TaskPool`] / [`BatchPool`]) owns the consumer half, the
+//! give side ([`PoolReturner`] / [`BatchReturner`]) owns the producer
+//! half. Exactly **one** thread may take and exactly **one** thread may
+//! give — for a farm, route returns through the single arbiter thread
+//! that already serializes that direction (the collector for results,
+//! the emitter's receiver for batch frames), never through the workers
+//! directly. Same-thread use (take and give on one thread, the Fig. 3
+//! offload loop) is a degenerate but valid instance of the discipline.
+//!
+//! ## Bounded free lists
+//!
+//! Free lists are **capped** ([`DEFAULT_POOL_CAP`] /
+//! [`DEFAULT_BATCH_CAP`]): a `give` beyond the cap drops the object
+//! instead of caching it (counted in `dropped`). Unbounded recycling
+//! would be a slow leak under bursty clients — a burst of B in-flight
+//! objects would pin B cached objects forever after the burst passes.
+//! The cap bounds the cache at the steady-state working set and lets
+//! the global allocator reclaim the rest.
 
-use crate::spsc::{unbounded_spsc, UnboundedConsumer, UnboundedProducer};
+use crate::spsc::{spsc, Consumer, Producer};
+
+/// Default bound on a [`TaskPool`] free list (boxes cached beyond the
+/// in-flight window are dropped).
+pub const DEFAULT_POOL_CAP: usize = 256;
+
+/// Default bound on a [`BatchPool`] free lane. Streams rarely have more
+/// than a handful of batch frames in flight, so a short lane suffices.
+pub const DEFAULT_BATCH_CAP: usize = 8;
 
 /// A typed object pool with a lock-free cross-thread return path.
 ///
 /// One side (the offloader) calls [`TaskPool::take`] to get a recycled
 /// `Box<T>` (or a fresh one); the other side (a worker / the collector)
 /// returns boxes via the [`PoolReturner`] handle. Single-producer /
-/// single-consumer in each direction — for a farm, route returns through
-/// the collector (one thread), matching the SPSC discipline.
+/// single-consumer in each direction — see the module docs for the
+/// return discipline.
 pub struct TaskPool<T: Send> {
-    free_rx: UnboundedConsumer<Box<T>>,
+    free_rx: Consumer<Box<T>>,
     /// Fresh allocations performed because the free list was empty.
     pub fresh: u64,
     /// Successful recycles.
@@ -32,26 +68,44 @@ pub struct TaskPool<T: Send> {
 
 /// Return-side handle of a [`TaskPool`].
 pub struct PoolReturner<T: Send> {
-    free_tx: UnboundedProducer<Box<T>>,
+    free_tx: Producer<Box<T>>,
+    /// Boxes handed back (cached or dropped).
+    pub returned: u64,
+    /// Boxes dropped because the free list was at capacity.
+    pub dropped: u64,
 }
 
 impl<T: Send> TaskPool<T> {
-    /// Create a pool and its returner handle.
+    /// Create a pool and its returner handle with the default free-list
+    /// cap ([`DEFAULT_POOL_CAP`]).
+    #[must_use = "dropping the returner half disables recycling"]
     pub fn new() -> (Self, PoolReturner<T>) {
-        let (tx, rx) = unbounded_spsc::<Box<T>>();
+        Self::with_cap(DEFAULT_POOL_CAP)
+    }
+
+    /// Create a pool whose free list caches at most `cap` boxes
+    /// (`give` drops the excess).
+    #[must_use = "dropping the returner half disables recycling"]
+    pub fn with_cap(cap: usize) -> (Self, PoolReturner<T>) {
+        let (tx, rx) = spsc::<Box<T>>(cap.max(1));
         (
             TaskPool {
                 free_rx: rx,
                 fresh: 0,
                 reused: 0,
             },
-            PoolReturner { free_tx: tx },
+            PoolReturner {
+                free_tx: tx,
+                returned: 0,
+                dropped: 0,
+            },
         )
     }
 
     /// Get a box, recycling if possible. `init` overwrites the contents
     /// either way.
     #[inline]
+    #[must_use = "the box carries the task — dropping it loses the work"]
     pub fn take(&mut self, init: T) -> Box<T> {
         match self.free_rx.try_pop() {
             Some(mut b) => {
@@ -68,11 +122,106 @@ impl<T: Send> TaskPool<T> {
 }
 
 impl<T: Send> PoolReturner<T> {
-    /// Return a box to the pool (never blocks; the free list is
-    /// unbounded).
+    /// Return a box to the pool. Never blocks: if the free list is at
+    /// capacity the box is dropped (freed) instead of cached, keeping
+    /// the pool's memory bounded.
     #[inline]
     pub fn give(&mut self, b: Box<T>) {
-        self.free_tx.push(b);
+        self.returned += 1;
+        if self.free_tx.try_push(b).is_err() {
+            self.dropped += 1;
+        }
+    }
+}
+
+/// Recycling pool for the `Vec` backing of batch frames
+/// ([`crate::channel::Msg::Batch`]).
+///
+/// Built into every [`crate::channel::Sender`]/`Receiver` pair as the
+/// stream's *free lane*: the receiver, after unpacking a batch, gives
+/// the emptied `Vec` back; the sender takes it for the next batch. The
+/// lane is a bounded SPSC queue, so the return path is lock-free and
+/// the cache is capped (overflow is dropped, not accumulated).
+pub struct BatchPool<T: Send> {
+    free_rx: Consumer<Vec<T>>,
+    /// Same-side stash for buffers handed straight back by the take
+    /// side (e.g. a single-task batch degrading to a `Task` frame).
+    stash: Option<Vec<T>>,
+    /// Buffers allocated fresh because the lane and stash were empty.
+    pub fresh: u64,
+    /// Buffers drawn recycled.
+    pub reused: u64,
+}
+
+/// Return-side handle of a [`BatchPool`] (held by the stream receiver).
+pub struct BatchReturner<T: Send> {
+    free_tx: Producer<Vec<T>>,
+    /// Buffers handed back (cached or dropped).
+    pub returned: u64,
+    /// Buffers dropped because the lane was at capacity.
+    pub dropped: u64,
+}
+
+impl<T: Send> BatchPool<T> {
+    /// Create a pool whose free lane caches at most `cap` buffers.
+    #[must_use = "dropping the returner half disables recycling"]
+    pub fn with_cap(cap: usize) -> (Self, BatchReturner<T>) {
+        let (tx, rx) = spsc::<Vec<T>>(cap.max(1));
+        (
+            BatchPool {
+                free_rx: rx,
+                stash: None,
+                fresh: 0,
+                reused: 0,
+            },
+            BatchReturner {
+                free_tx: tx,
+                returned: 0,
+                dropped: 0,
+            },
+        )
+    }
+
+    /// Draw an empty buffer: stash first, then the free lane, then a
+    /// fresh `Vec` (which defers its heap allocation to the first push).
+    #[inline]
+    #[must_use = "the drawn buffer is the batch frame — fill and send it"]
+    pub fn take(&mut self) -> Vec<T> {
+        if let Some(b) = self.stash.take() {
+            self.reused += 1;
+            return b;
+        }
+        match self.free_rx.try_pop() {
+            Some(b) => {
+                self.reused += 1;
+                b
+            }
+            None => {
+                self.fresh += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Same-side return: stash a buffer the take side did not ship
+    /// (cleared; replaces any previously stashed buffer).
+    #[inline]
+    pub fn put_back(&mut self, mut buf: Vec<T>) {
+        buf.clear();
+        self.stash = Some(buf);
+    }
+}
+
+impl<T: Send> BatchReturner<T> {
+    /// Return an emptied (or abandoned — it is cleared here) batch
+    /// buffer. Never blocks; overflow beyond the lane cap is dropped.
+    #[inline]
+    pub fn give(&mut self, mut buf: Vec<T>) {
+        buf.clear();
+        self.returned += 1;
+        if self.free_tx.try_push(buf).is_err() {
+            self.dropped += 1;
+        }
     }
 }
 
@@ -117,6 +266,7 @@ impl SlabArena {
     /// Allocate a zero-initialized buffer of at least `size` bytes.
     /// Sizes above the largest class fall through to the global
     /// allocator (uncached).
+    #[must_use = "an unused allocation should be freed back to the arena"]
     pub fn alloc(&mut self, size: usize) -> Box<[u8]> {
         match class_for(size) {
             Some(ci) => {
@@ -174,10 +324,12 @@ mod tests {
             ret.give(b);
             ret
         });
-        let _ret = h.join().unwrap();
+        let ret = h.join().unwrap();
         let c = pool.take(3);
         assert_eq!(*c, 3);
         assert_eq!(pool.reused, 1);
+        assert_eq!(ret.returned, 2);
+        assert_eq!(ret.dropped, 0);
     }
 
     #[test]
@@ -191,6 +343,53 @@ mod tests {
         }
         assert_eq!(pool.fresh, 4, "steady state must not allocate");
         assert_eq!(pool.reused, 1000);
+    }
+
+    #[test]
+    fn task_pool_cap_drops_overflow() {
+        let (mut pool, mut ret) = TaskPool::<u64>::with_cap(2);
+        let boxes: Vec<_> = (0..5).map(|i| pool.take(i)).collect();
+        for b in boxes {
+            ret.give(b);
+        }
+        assert_eq!(ret.returned, 5);
+        assert_eq!(ret.dropped, 3, "free list caches at most cap boxes");
+        // Only the cached 2 come back recycled.
+        for _ in 0..3 {
+            let _ = pool.take(0);
+        }
+        assert_eq!(pool.reused, 2);
+        assert_eq!(pool.fresh, 6);
+    }
+
+    #[test]
+    fn batch_pool_roundtrip_and_cap() {
+        let (mut pool, mut ret) = BatchPool::<u32>::with_cap(2);
+        let mut a = pool.take();
+        assert_eq!(pool.fresh, 1);
+        a.extend([1, 2, 3]);
+        ret.give(a);
+        let b = pool.take();
+        assert!(b.is_empty(), "recycled buffers come back cleared");
+        assert!(b.capacity() >= 3, "recycling preserves capacity");
+        assert_eq!(pool.reused, 1);
+        // Overflow beyond the lane cap is dropped.
+        for _ in 0..4 {
+            ret.give(Vec::with_capacity(8));
+        }
+        assert_eq!(ret.dropped, 2);
+    }
+
+    #[test]
+    fn batch_pool_stash_prefers_same_side_returns() {
+        let (mut pool, _ret) = BatchPool::<u32>::with_cap(2);
+        let mut a = pool.take();
+        a.push(7);
+        pool.put_back(a);
+        let b = pool.take();
+        assert!(b.is_empty());
+        assert_eq!(pool.reused, 1);
+        assert_eq!(pool.fresh, 1);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //!   deadlock-free regardless of task count: the offloading thread can
 //!   never be blocked by its own undrained results.
 
+use crate::alloc::{BatchPool, BatchReturner, DEFAULT_BATCH_CAP};
 use crate::spsc::{self, Consumer, Full, Producer, UnboundedConsumer, UnboundedProducer};
 use crate::util::Backoff;
 
@@ -32,6 +33,12 @@ pub enum Msg<T> {
     /// dominates fine-grained tasks (`benches/granularity.rs`).
     /// Arbiters (farm emitter, pool arbiter) unpack batches so
     /// scheduling policies still see individual tasks.
+    ///
+    /// The backing `Vec` is recyclable: draw it from
+    /// [`Sender::take_buf`] and, after unpacking, hand it back with
+    /// [`Receiver::recycle`] — in steady state batch frames then
+    /// perform **zero** heap allocation (the stream's
+    /// [`crate::alloc::BatchPool`] free lane cycles the buffers).
     Batch(Vec<T>),
     Eos,
 }
@@ -77,6 +84,9 @@ pub struct Sender<T: Send> {
     /// Number of failed `try_push` attempts (backpressure events) — cheap
     /// local counter surfaced by the tracing layer.
     pub push_retries: u64,
+    /// Batch-buffer pool: take side of the stream's free lane (the
+    /// receiver returns emptied `Msg::Batch` vectors through it).
+    batch_pool: BatchPool<T>,
 }
 
 /// Receiving half of a stream.
@@ -84,19 +94,24 @@ pub struct Receiver<T: Send> {
     rx: RxFlavor<T>,
     /// Number of empty polls (starvation events).
     pub pop_retries: u64,
+    /// Batch-buffer free lane: give side (see [`Receiver::recycle`]).
+    batch_return: BatchReturner<T>,
 }
 
 /// Create a bounded stream with the given queue capacity.
 pub fn stream<T: Send>(cap: usize) -> (Sender<T>, Receiver<T>) {
     let (p, c) = spsc::spsc(cap);
+    let (batch_pool, batch_return) = BatchPool::with_cap(DEFAULT_BATCH_CAP);
     (
         Sender {
             tx: TxFlavor::Bounded(p),
             push_retries: 0,
+            batch_pool,
         },
         Receiver {
             rx: RxFlavor::Bounded(c),
             pop_retries: 0,
+            batch_return,
         },
     )
 }
@@ -104,14 +119,17 @@ pub fn stream<T: Send>(cap: usize) -> (Sender<T>, Receiver<T>) {
 /// Create an unbounded stream (accelerator offload/result channels).
 pub fn stream_unbounded<T: Send>() -> (Sender<T>, Receiver<T>) {
     let (p, c) = spsc::unbounded_spsc();
+    let (batch_pool, batch_return) = BatchPool::with_cap(DEFAULT_BATCH_CAP);
     (
         Sender {
             tx: TxFlavor::Unbounded(p),
             push_retries: 0,
+            batch_pool,
         },
         Receiver {
             rx: RxFlavor::Unbounded(c),
             pop_retries: 0,
+            batch_return,
         },
     )
 }
@@ -131,16 +149,69 @@ impl<T: Send> Sender<T> {
 
     /// Blocking send of a whole run of tasks as one frame. Empty runs
     /// send nothing; single-task runs degrade to a plain `Task` frame so
-    /// downstream framing stays canonical.
-    pub fn send_batch(&mut self, tasks: Vec<T>) -> Result<(), Disconnected<T>> {
+    /// downstream framing stays canonical (their buffer returns to the
+    /// batch pool either way). Draw the `Vec` from [`Sender::take_buf`]
+    /// to make sustained batching allocation-free.
+    pub fn send_batch(&mut self, mut tasks: Vec<T>) -> Result<(), Disconnected<T>> {
         match tasks.len() {
-            0 => Ok(()),
-            1 => self.send(tasks.into_iter().next().unwrap()),
+            0 => {
+                self.batch_pool.put_back(tasks);
+                Ok(())
+            }
+            1 => {
+                let t = tasks.pop().expect("len checked");
+                self.batch_pool.put_back(tasks);
+                self.send(t)
+            }
             _ => self.send_msg(Msg::Batch(tasks)),
         }
     }
 
-    /// Blocking send of any frame, with spin/yield backoff while full.
+    /// Draw an empty, possibly recycled batch buffer from this stream's
+    /// free lane (fed by the receiver's [`Receiver::recycle`]). Fill it
+    /// and ship it with [`Sender::send_batch`].
+    #[inline]
+    #[must_use = "the drawn buffer is the batch frame — fill and send it"]
+    pub fn take_buf(&mut self) -> Vec<T> {
+        self.batch_pool.take()
+    }
+
+    /// Batch buffers this sender allocated fresh (free lane empty).
+    pub fn batch_fresh(&self) -> u64 {
+        self.batch_pool.fresh
+    }
+
+    /// Batch buffers this sender drew recycled.
+    pub fn batch_reused(&self) -> u64 {
+        self.batch_pool.reused
+    }
+
+    /// Read-and-reset the batch-pool counters `(fresh, reused)` — used
+    /// by arbiters for per-cycle [`crate::trace::NodeTrace`] accounting.
+    pub fn take_alloc_stats(&mut self) -> (u64, u64) {
+        (
+            std::mem::take(&mut self.batch_pool.fresh),
+            std::mem::take(&mut self.batch_pool.reused),
+        )
+    }
+
+    /// The arbiter **re-framing** idiom, made structural: move a run
+    /// received from `from` into a buffer drawn from *this* stream's
+    /// batch pool and hand the incoming buffer straight back through
+    /// `from`'s free lane. Each hop recycles against its own pool, so
+    /// every return path stays SPSC; the returned run is ready for
+    /// [`Sender::send_batch`].
+    #[inline]
+    #[must_use = "the re-framed run is the batch frame — send it"]
+    pub fn reframe(&mut self, from: &mut Receiver<T>, mut tasks: Vec<T>) -> Vec<T> {
+        let mut run = self.take_buf();
+        run.append(&mut tasks);
+        from.recycle(tasks);
+        run
+    }
+
+    /// Blocking send of any frame, with spin/yield backoff while full;
+    /// staged multipush frames are flushed first so FIFO order holds.
     /// (Unbounded streams never block.)
     #[inline]
     pub fn send_msg(&mut self, msg: Msg<T>) -> Result<(), Disconnected<T>> {
@@ -149,17 +220,17 @@ impl<T: Send> Sender<T> {
                 let mut msg = msg;
                 let mut backoff = Backoff::new();
                 loop {
-                    match prod.try_push(msg) {
-                        Ok(()) => return Ok(()),
-                        Err(Full(m)) => {
-                            if !prod.consumer_alive() {
-                                return Err(Disconnected(m));
-                            }
-                            msg = m;
-                            self.push_retries += 1;
-                            backoff.snooze();
+                    if prod.try_flush() {
+                        match prod.try_push(msg) {
+                            Ok(()) => return Ok(()),
+                            Err(Full(m)) => msg = m,
                         }
                     }
+                    if !prod.consumer_alive() {
+                        return Err(Disconnected(msg));
+                    }
+                    self.push_retries += 1;
+                    backoff.snooze();
                 }
             }
             TxFlavor::Unbounded(prod) => {
@@ -172,22 +243,85 @@ impl<T: Send> Sender<T> {
         }
     }
 
-    /// Non-blocking send. Unbounded streams always accept.
+    /// Non-blocking send. Unbounded streams always accept. Any staged
+    /// multipush frames must fit first (they precede this frame in FIFO
+    /// order), so a clogged stage reports `Full` too.
     #[inline]
     pub fn try_send(&mut self, task: T) -> Result<(), Full<T>> {
         match &mut self.tx {
-            TxFlavor::Bounded(prod) => match prod.try_push(Msg::Task(task)) {
-                Ok(()) => Ok(()),
-                Err(Full(Msg::Task(t))) => {
+            TxFlavor::Bounded(prod) => {
+                if !prod.try_flush() {
                     self.push_retries += 1;
-                    Err(Full(t))
+                    return Err(Full(task));
                 }
-                Err(Full(_)) => unreachable!("pushed Task, got back a different frame"),
-            },
+                match prod.try_push(Msg::Task(task)) {
+                    Ok(()) => Ok(()),
+                    Err(Full(Msg::Task(t))) => {
+                        self.push_retries += 1;
+                        Err(Full(t))
+                    }
+                    Err(Full(_)) => unreachable!("pushed Task, got back a different frame"),
+                }
+            }
             TxFlavor::Unbounded(prod) => {
                 prod.push(Msg::Task(task));
                 Ok(())
             }
+        }
+    }
+
+    /// Buffered send (producer-side **multipush**, FastFlow TR-09-12):
+    /// the frame is staged locally and written to the queue in bursts of
+    /// [`Sender::burst`] frames — one synchronization per burst instead
+    /// of per frame. [`Sender::flush`] and any ordinary send (including
+    /// [`Sender::send_eos`]) publish the stage first, so no frame is
+    /// ever lost or reordered; drop publishes it best-effort (bounded
+    /// retries — dropping must not hang on a wedged consumer). Unbounded
+    /// streams send directly (their push is already a producer-owned
+    /// tail write).
+    #[inline]
+    pub fn send_buffered(&mut self, task: T) -> Result<(), Disconnected<T>> {
+        if let TxFlavor::Bounded(prod) = &mut self.tx {
+            return match prod.push_buffered(Msg::Task(task)) {
+                Ok(()) => Ok(()),
+                Err(Full(m)) => Err(Disconnected(m)),
+            };
+        }
+        self.send(task)
+    }
+
+    /// Set the multipush burst width (bounded streams only; clamped to
+    /// the queue capacity, `1` disables buffering). Returns the
+    /// effective width — always `1` on unbounded streams.
+    pub fn set_burst(&mut self, burst: usize) -> usize {
+        match &mut self.tx {
+            TxFlavor::Bounded(prod) => prod.set_burst(burst),
+            TxFlavor::Unbounded(_) => 1,
+        }
+    }
+
+    /// Configured multipush burst width (`1` = off).
+    pub fn burst(&self) -> usize {
+        match &self.tx {
+            TxFlavor::Bounded(prod) => prod.burst(),
+            TxFlavor::Unbounded(_) => 1,
+        }
+    }
+
+    /// Frames currently staged in the multipush buffer.
+    pub fn staged(&self) -> usize {
+        match &self.tx {
+            TxFlavor::Bounded(prod) => prod.staged(),
+            TxFlavor::Unbounded(_) => 0,
+        }
+    }
+
+    /// Publish any staged multipush frames, blocking until the queue
+    /// has room. `false` if the receiver disconnected first.
+    pub fn flush(&mut self) -> bool {
+        match &mut self.tx {
+            TxFlavor::Bounded(prod) => prod.flush(),
+            TxFlavor::Unbounded(_) => true,
         }
     }
 
@@ -291,6 +425,37 @@ impl<T: Send> Receiver<T> {
             RxFlavor::Bounded(cons) => cons.len_approx(),
             RxFlavor::Unbounded(_) => 0,
         }
+    }
+
+    /// Return an unpacked (or abandoned) `Msg::Batch` buffer through the
+    /// stream's free lane so the sender's next [`Sender::take_buf`]
+    /// reuses it instead of allocating. The buffer is cleared here; a
+    /// lane at capacity drops the excess (bounded cache).
+    #[inline]
+    pub fn recycle(&mut self, buf: Vec<T>) {
+        self.batch_return.give(buf);
+    }
+
+    /// The **unpack discipline**, made structural: run `f` over a
+    /// received batch buffer (drain it, possibly stopping early), then
+    /// return the buffer through the free lane. Consumers that go
+    /// through this helper cannot forget the recycle the steady-state
+    /// zero-allocation claim rests on.
+    #[inline]
+    pub fn recycle_after<R>(&mut self, mut batch: Vec<T>, f: impl FnOnce(&mut Vec<T>) -> R) -> R {
+        let r = f(&mut batch);
+        self.recycle(batch);
+        r
+    }
+
+    /// Batch buffers returned through [`Receiver::recycle`].
+    pub fn recycled(&self) -> u64 {
+        self.batch_return.returned
+    }
+
+    /// Returned buffers dropped because the free lane was at capacity.
+    pub fn recycle_dropped(&self) -> u64 {
+        self.batch_return.dropped
     }
 }
 
@@ -412,6 +577,115 @@ mod tests {
             }
         }
         assert_eq!(count, 10_000);
+    }
+
+    #[test]
+    fn send_buffered_flushes_before_ordinary_sends_and_eos() {
+        let (mut tx, mut rx) = stream::<u32>(16);
+        assert_eq!(tx.set_burst(8), 8);
+        tx.send_buffered(1).unwrap();
+        tx.send_buffered(2).unwrap();
+        assert_eq!(tx.staged(), 2);
+        tx.send(3).unwrap(); // must flush the stage first
+        tx.send_buffered(4).unwrap();
+        tx.send_eos().unwrap(); // EOS always flushes
+        assert_eq!(rx.recv(), Msg::Task(1));
+        assert_eq!(rx.recv(), Msg::Task(2));
+        assert_eq!(rx.recv(), Msg::Task(3));
+        assert_eq!(rx.recv(), Msg::Task(4));
+        assert_eq!(rx.recv(), Msg::Eos);
+    }
+
+    #[test]
+    fn send_buffered_drop_flushes() {
+        let (mut tx, mut rx) = stream::<u32>(8);
+        tx.set_burst(4);
+        tx.send_buffered(9).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Msg::Task(9));
+        assert_eq!(rx.recv(), Msg::Eos); // synthetic EOS after disconnect
+    }
+
+    #[test]
+    fn try_send_respects_staged_frames() {
+        let (mut tx, mut rx) = stream::<u32>(2);
+        tx.set_burst(2);
+        tx.send_buffered(1).unwrap();
+        tx.send_buffered(2).unwrap(); // burst reached: flushed, ring full
+        assert_eq!(tx.try_send(3), Err(Full(3)));
+        assert_eq!(rx.recv(), Msg::Task(1));
+        tx.try_send(3).unwrap();
+        assert_eq!(rx.recv(), Msg::Task(2));
+        assert_eq!(rx.recv(), Msg::Task(3));
+    }
+
+    #[test]
+    fn unbounded_send_buffered_degrades_to_send() {
+        let (mut tx, mut rx) = stream_unbounded::<u32>();
+        assert_eq!(tx.set_burst(64), 1);
+        tx.send_buffered(5).unwrap();
+        assert_eq!(tx.staged(), 0);
+        assert_eq!(rx.recv(), Msg::Task(5));
+    }
+
+    #[test]
+    fn batch_buffers_recycle_through_the_free_lane() {
+        let (mut tx, mut rx) = stream::<u32>(4);
+        let mut buf = tx.take_buf();
+        assert_eq!(tx.batch_fresh(), 1);
+        buf.extend([1, 2, 3]);
+        tx.send_batch(buf).unwrap();
+        match rx.recv() {
+            Msg::Batch(mut vs) => {
+                assert_eq!(vs, vec![1, 2, 3]);
+                vs.drain(..);
+                rx.recycle(vs);
+            }
+            other => panic!("expected batch, got {other:?}"),
+        }
+        assert_eq!(rx.recycled(), 1);
+        let buf2 = tx.take_buf();
+        assert!(buf2.capacity() >= 3, "free lane returned the allocation");
+        assert_eq!(tx.batch_reused(), 1);
+        assert_eq!(tx.batch_fresh(), 1, "steady state allocates nothing new");
+    }
+
+    #[test]
+    fn reframe_and_recycle_after_cycle_buffers() {
+        let (mut tx_a, mut rx_a) = stream::<u32>(4);
+        let (mut tx_b, mut rx_b) = stream::<u32>(4);
+        let mut buf = tx_a.take_buf();
+        buf.extend([1, 2, 3]);
+        tx_a.send_batch(buf).unwrap();
+        // Hop A→B: re-frame against B's pool, return A's buffer to A.
+        let run = match rx_a.recv() {
+            Msg::Batch(ts) => tx_b.reframe(&mut rx_a, ts),
+            other => panic!("expected batch, got {other:?}"),
+        };
+        tx_b.send_batch(run).unwrap();
+        // Terminal unpack on B recycles B's buffer.
+        let got = match rx_b.recv() {
+            Msg::Batch(ts) => rx_b.recycle_after(ts, |ts| ts.drain(..).collect::<Vec<_>>()),
+            other => panic!("expected batch, got {other:?}"),
+        };
+        assert_eq!(got, vec![1, 2, 3]);
+        assert_eq!(rx_a.recycled(), 1);
+        assert_eq!(rx_b.recycled(), 1);
+        let _ = tx_a.take_buf();
+        let _ = tx_b.take_buf();
+        assert_eq!(tx_a.batch_reused(), 1, "hop A reuses its own buffer");
+        assert_eq!(tx_b.batch_reused(), 1, "hop B reuses its own buffer");
+    }
+
+    #[test]
+    fn single_task_batch_returns_buffer_to_stash() {
+        let (mut tx, mut rx) = stream::<u32>(4);
+        let mut buf = tx.take_buf();
+        buf.push(7);
+        tx.send_batch(buf).unwrap(); // degrades to Task, buffer stashed
+        assert_eq!(rx.recv(), Msg::Task(7));
+        let _ = tx.take_buf();
+        assert_eq!(tx.batch_reused(), 1, "stash served the next take");
     }
 
     #[test]

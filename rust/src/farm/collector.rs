@@ -126,14 +126,18 @@ pub(super) fn spawn_collector<O: Send + 'static>(
                                 progressed = true;
                                 cursor = w;
                                 let t0 = Instant::now();
-                                let k = frames.len() as u64;
-                                for (seq, value) in frames {
-                                    deliver(
-                                        ordering, seq, value, &mut out, &trace, &mut reorder,
-                                        &mut next_seq,
-                                    );
-                                }
-                                trace.on_tasks(k, t0.elapsed().as_nanos() as u64);
+                                let kf = frames.len() as u64;
+                                // The emptied buffer returns through the
+                                // worker link's free lane.
+                                workers[w].recycle_after(frames, |fs| {
+                                    for (seq, value) in fs.drain(..) {
+                                        deliver(
+                                            ordering, seq, value, &mut out, &trace, &mut reorder,
+                                            &mut next_seq,
+                                        );
+                                    }
+                                });
+                                trace.on_tasks(kf, t0.elapsed().as_nanos() as u64);
                             }
                             Some(Msg::Eos) => {
                                 progressed = true;

@@ -51,13 +51,18 @@ pub(super) fn spawn_emitter<I: Send + 'static>(
                             // balances) individual tasks; each item gets
                             // its own sequence number, so ordered
                             // collection is batching-oblivious. Trace
-                            // counters attribute every batched item.
+                            // counters attribute every batched item. The
+                            // emptied buffer goes back through the input
+                            // stream's free lane, so the offloader's next
+                            // batch reuses it instead of allocating.
                             let t0 = Instant::now();
                             let k = tasks.len() as u64;
-                            for task in tasks {
-                                route(&mut workers, &mut next, policy, (seq, task));
-                                seq += 1;
-                            }
+                            input.recycle_after(tasks, |ts| {
+                                for task in ts.drain(..) {
+                                    route(&mut workers, &mut next, policy, (seq, task));
+                                    seq += 1;
+                                }
+                            });
                             trace.on_tasks(k, t0.elapsed().as_nanos() as u64);
                             trace.on_emit(k);
                         }

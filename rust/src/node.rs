@@ -369,18 +369,26 @@ impl<N: Node + 'static> NodeRunner<N> {
                             Msg::Batch(tasks) => {
                                 // Unpack: each batched item is one svc
                                 // invocation; an Eos verdict terminates
-                                // the stream mid-batch, like mid-stream.
-                                for t in tasks {
-                                    let t0 = Instant::now();
-                                    let mut sink = |v: N::Out| out.send(v);
-                                    let mut outbox = Outbox::over(&mut sink);
-                                    let verdict = node.svc(t, &mut outbox);
-                                    let sent = outbox.sent;
-                                    trace.on_task(t0.elapsed().as_nanos() as u64);
-                                    trace.on_emit(sent);
-                                    if verdict == Svc::Eos {
-                                        break 'cycle;
+                                // the stream mid-batch, like mid-stream
+                                // (the rest of the run is discarded when
+                                // the emptied buffer is recycled).
+                                let stop = rx.recycle_after(tasks, |ts| {
+                                    for t in ts.drain(..) {
+                                        let t0 = Instant::now();
+                                        let mut sink = |v: N::Out| out.send(v);
+                                        let mut outbox = Outbox::over(&mut sink);
+                                        let verdict = node.svc(t, &mut outbox);
+                                        let sent = outbox.sent;
+                                        trace.on_task(t0.elapsed().as_nanos() as u64);
+                                        trace.on_emit(sent);
+                                        if verdict == Svc::Eos {
+                                            return true;
+                                        }
                                     }
+                                    false
+                                });
+                                if stop {
+                                    break 'cycle;
                                 }
                             }
                             Msg::Eos => break,

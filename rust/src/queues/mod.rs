@@ -19,19 +19,39 @@ use crate::DEFAULT_QUEUE_CAP;
 /// (work happily drains past a slow consumer). Shared by the SPMC and
 /// MPMC arbiters, which unpack [`Msg::Batch`] runs through it so every
 /// consumer still receives individual tasks.
-fn route_skip_full<T: Send>(outs: &mut [Sender<T>], next: &mut usize, mut frame: T) {
+///
+/// Consumers whose receiving half was dropped are removed from the
+/// rotation (a dead ring with spare slots would otherwise swallow the
+/// frame; a *full* dead ring would spin this loop forever — the
+/// regression `spmc_all_consumers_gone_poisons_producer` covers it).
+/// When **no** live consumer remains the frame is handed back via
+/// `Err`, and the calling arbiter exits — poisoning the producer-side
+/// stream, whose sends then report `Disconnected`.
+fn route_skip_full<T: Send>(
+    outs: &mut [Sender<T>],
+    next: &mut usize,
+    mut frame: T,
+) -> Result<(), T> {
     let n = outs.len();
     let mut backoff = Backoff::new();
     loop {
+        let mut any_alive = false;
         for k in 0..n {
             let c = (*next + k) % n;
+            if !outs[c].peer_alive() {
+                continue; // dropped from rotation
+            }
+            any_alive = true;
             match outs[c].try_send(frame) {
                 Ok(()) => {
                     *next = (c + 1) % n;
-                    return;
+                    return Ok(());
                 }
                 Err(crate::spsc::Full(f)) => frame = f,
             }
+        }
+        if !any_alive {
+            return Err(frame);
         }
         backoff.snooze();
     }
@@ -61,10 +81,22 @@ pub fn spmc<T: Send + 'static>(
             let mut next = 0usize;
             loop {
                 match rx_in.recv() {
-                    Msg::Task(t) => route_skip_full(&mut outs, &mut next, t),
+                    Msg::Task(t) => {
+                        if route_skip_full(&mut outs, &mut next, t).is_err() {
+                            break; // every consumer gone: poison the producer
+                        }
+                    }
                     Msg::Batch(ts) => {
-                        for t in ts {
-                            route_skip_full(&mut outs, &mut next, t);
+                        let dead = rx_in.recycle_after(ts, |ts| {
+                            for t in ts.drain(..) {
+                                if route_skip_full(&mut outs, &mut next, t).is_err() {
+                                    return true;
+                                }
+                            }
+                            false
+                        });
+                        if dead {
+                            break;
                         }
                     }
                     Msg::Eos => break,
@@ -116,9 +148,13 @@ pub fn mpsc<T: Send + 'static>(
                         Some(Msg::Batch(ts)) => {
                             // Forward the run as one frame: the merge
                             // keeps the batch's single-synchronization
-                            // economy on the consumer side too.
+                            // economy on the consumer side too. The run
+                            // is re-framed into a buffer recycled on the
+                            // *output* stream and the input buffer goes
+                            // straight back to its own free lane.
                             progressed = true;
-                            if tx_out.send_batch(ts).is_err() {
+                            let run = tx_out.reframe(rx, ts);
+                            if tx_out.send_batch(run).is_err() {
                                 return;
                             }
                         }
@@ -179,7 +215,7 @@ pub fn mpmc<T: Send + 'static>(
             let mut eos_count = 0;
             let mut next = 0usize;
             let mut backoff = Backoff::new();
-            while eos_count < np {
+            'cycle: while eos_count < np {
                 let mut progressed = false;
                 for i in 0..np {
                     if eos[i] {
@@ -188,12 +224,22 @@ pub fn mpmc<T: Send + 'static>(
                     match in_rxs[i].try_recv() {
                         Some(Msg::Task(t)) => {
                             progressed = true;
-                            route_skip_full(&mut outs, &mut next, t);
+                            if route_skip_full(&mut outs, &mut next, t).is_err() {
+                                break 'cycle; // all consumers gone
+                            }
                         }
                         Some(Msg::Batch(ts)) => {
                             progressed = true;
-                            for t in ts {
-                                route_skip_full(&mut outs, &mut next, t);
+                            let dead = in_rxs[i].recycle_after(ts, |ts| {
+                                for t in ts.drain(..) {
+                                    if route_skip_full(&mut outs, &mut next, t).is_err() {
+                                        return true;
+                                    }
+                                }
+                                false
+                            });
+                            if dead {
+                                break 'cycle;
                             }
                         }
                         Some(Msg::Eos) => {
@@ -351,6 +397,75 @@ mod tests {
         assert_eq!(all.len(), 800);
         all.dedup();
         assert_eq!(all.len(), 800);
+    }
+
+    #[test]
+    fn spmc_all_consumers_gone_poisons_producer() {
+        // Regression: with every consumer dropped, route_skip_full used
+        // to spin forever on the first full dead queue (and silently
+        // swallow frames into dead rings with spare slots). Now dead
+        // consumers leave the rotation and the arbiter exits, so the
+        // producer's stream reports disconnection.
+        let (mut tx, rxs, arbiter) = spmc::<u64>(3, 2);
+        drop(rxs);
+        let mut saw_disconnect = false;
+        for i in 0..100_000u64 {
+            if tx.send(i).is_err() {
+                saw_disconnect = true;
+                break;
+            }
+        }
+        assert!(saw_disconnect, "producer must observe the poisoned stream");
+        arbiter.join().unwrap();
+    }
+
+    #[test]
+    fn mpmc_all_consumers_gone_terminates_arbiter() {
+        let (mut txs, out_rxs, arbiter) = mpmc::<u64>(2, 2, 2);
+        drop(out_rxs);
+        for tx in txs.iter_mut() {
+            // Batched and plain sends both hit the dead-rotation path.
+            let _ = tx.send_batch(vec![1, 2, 3]);
+            for i in 0..100_000u64 {
+                if tx.send(i).is_err() {
+                    break;
+                }
+            }
+        }
+        drop(txs);
+        arbiter.join().unwrap(); // must not hang
+    }
+
+    #[test]
+    fn mpsc_reframes_batches_through_recycled_buffers() {
+        // The merge arbiter re-frames each batch into an output-stream
+        // buffer; once the consumer recycles, the arbiter's take_buf
+        // draws recycled and its input buffers flow back to the senders.
+        let (mut txs, mut rx, arbiter) = mpsc::<u64>(1, 8);
+        for round in 0..20u64 {
+            let mut buf = txs[0].take_buf();
+            buf.extend(round * 10..round * 10 + 5);
+            txs[0].send_batch(buf).unwrap();
+            match rx.recv() {
+                Msg::Batch(mut vs) => {
+                    assert_eq!(vs.len(), 5);
+                    vs.drain(..);
+                    rx.recycle(vs);
+                }
+                other => panic!("expected batch, got {other:?}"),
+            }
+        }
+        // The client's free lane is fed by the arbiter: after warmup the
+        // sender stops allocating fresh buffers.
+        assert!(
+            txs[0].batch_reused() > 0,
+            "sender must see recycled buffers back from the arbiter"
+        );
+        for mut tx in txs {
+            tx.send_eos().unwrap();
+        }
+        assert_eq!(rx.recv(), Msg::Eos);
+        arbiter.join().unwrap();
     }
 
     #[test]

@@ -56,6 +56,13 @@ pub struct Producer<T> {
     /// Local write index — never shared (the FastForward property).
     pwrite: usize,
     cap: usize,
+    /// Producer-local multipush staging buffer (FastFlow's `multipush`,
+    /// TR-09-12): frames accumulate here and are written into the ring
+    /// in bursts, amortizing the per-slot cache-coherence handshake.
+    /// Empty whenever `mburst <= 1`.
+    mbuf: Vec<T>,
+    /// Burst width; `1` disables buffering (every push is immediate).
+    mburst: usize,
 }
 
 /// Consumer half. `!Sync`: exactly one thread may pop.
@@ -80,6 +87,8 @@ pub fn spsc<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
             ring: ring.clone(),
             pwrite: 0,
             cap,
+            mbuf: Vec::new(),
+            mburst: 1,
         },
         Consumer {
             ring,
@@ -91,9 +100,17 @@ pub fn spsc<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
 
 impl<T: Send> Producer<T> {
     /// Non-blocking push. `Err(Full(v))` if the slot at `pwrite` is still
-    /// occupied (queue full).
+    /// occupied (queue full). Bypasses the multipush staging buffer —
+    /// callers mixing `push_buffered` with direct pushes must [`flush`]
+    /// first or frames reorder (debug builds assert this).
+    ///
+    /// [`flush`]: Producer::flush
     #[inline]
     pub fn try_push(&mut self, value: T) -> Result<(), Full<T>> {
+        debug_assert!(
+            self.mbuf.is_empty(),
+            "try_push with staged multipush frames — flush() first"
+        );
         let slot = &self.ring.slots[self.pwrite];
         if slot.full.load(Ordering::Acquire) {
             return Err(Full(value));
@@ -111,9 +128,15 @@ impl<T: Send> Producer<T> {
     }
 
     /// Blocking push with spin/yield backoff. Returns `Err(Full(v))` only
-    /// if the consumer disconnected (otherwise loops until room).
+    /// if the consumer disconnected (otherwise loops until room). Flushes
+    /// any staged multipush frames first so FIFO order holds.
     #[inline]
     pub fn push(&mut self, mut value: T) -> Result<(), Full<T>> {
+        if !self.mbuf.is_empty() && !self.flush() {
+            // Consumer gone with frames still staged: the value cannot
+            // be delivered in order (or at all) — hand it back.
+            return Err(Full(value));
+        }
         let mut backoff = Backoff::new();
         loop {
             match self.try_push(value) {
@@ -129,17 +152,58 @@ impl<T: Send> Producer<T> {
         }
     }
 
+    /// Buffered push (FastFlow's `multipush`): the value is staged in a
+    /// producer-local buffer and written to the ring only when `burst`
+    /// values have accumulated (or on [`flush`] / [`push`] / drop), in
+    /// one backward burst — a single occupancy check and one stretch of
+    /// flag stores per burst instead of a coherence round-trip per item.
+    ///
+    /// With `burst <= 1` this is exactly [`push`]. Errors with
+    /// `Full(value)` only when the consumer is gone (the value is not
+    /// staged; previously staged values stay buffered and are dropped
+    /// with the producer).
+    ///
+    /// [`flush`]: Producer::flush
+    /// [`push`]: Producer::push
+    #[inline]
+    pub fn push_buffered(&mut self, value: T) -> Result<(), Full<T>> {
+        if self.mburst <= 1 {
+            return self.push(value);
+        }
+        if !self.consumer_alive() {
+            return Err(Full(value));
+        }
+        self.mbuf.push(value);
+        if self.mbuf.len() >= self.mburst {
+            // Best-effort: a consumer death mid-flush is reported by the
+            // next call (the staged frames are undeliverable anyway).
+            self.flush();
+        }
+        Ok(())
+    }
+
     /// Capacity the queue was created with.
     #[inline]
     pub fn capacity(&self) -> usize {
         self.cap
     }
 
-    /// True if a `try_push` would currently fail. Only inspects the
-    /// producer's own slot — stays within the FastForward contract.
+    /// True if flushing the staged multipush frames and then pushing one
+    /// more value would currently fail. With an empty stage this is the
+    /// plain "slot at `pwrite` occupied" check; with `n` frames staged
+    /// it inspects the slot the next value would land in (`pwrite + n`),
+    /// which — the free region being contiguous from `pwrite` — is
+    /// occupied iff fewer than `n + 1` slots are free. Still only
+    /// producer-known state: the FastForward contract holds.
     #[inline]
     pub fn is_full(&self) -> bool {
-        self.ring.slots[self.pwrite].full.load(Ordering::Acquire)
+        let staged = self.mbuf.len();
+        if staged >= self.cap {
+            return true;
+        }
+        self.ring.slots[(self.pwrite + staged) % self.cap]
+            .full
+            .load(Ordering::Acquire)
     }
 
     /// Whether the consumer half still exists.
@@ -150,15 +214,105 @@ impl<T: Send> Producer<T> {
 
     /// Approximate number of occupied slots, computed on demand by
     /// scanning the per-slot `full` flags (O(cap)) — a racy snapshot,
-    /// **not** a maintained counter. There is no occupancy state in the
-    /// ring: push/pop touch only their own slot, preserving the
-    /// fence-free FastForward invariant. Tracing/monitoring only.
+    /// **not** a maintained counter (staged multipush frames are not
+    /// counted). There is no occupancy state in the ring: push/pop touch
+    /// only their own slot, preserving the fence-free FastForward
+    /// invariant. Tracing/monitoring only.
     pub fn len_approx(&self) -> usize {
         self.ring
             .slots
             .iter()
             .filter(|s| s.full.load(Ordering::Relaxed))
             .count()
+    }
+}
+
+// Multipush internals live in a `T`-unbounded impl so `Drop` (which has
+// no `T: Send` bound) can flush; every live `Producer<T>` was created
+// through `spsc<T: Send>`, so the transfer is still `Send`-checked.
+impl<T> Producer<T> {
+    /// Set the multipush burst width for [`Producer::push_buffered`]
+    /// (clamped to `1..=capacity`; `1` disables buffering). Flushes any
+    /// staged frames first so reconfiguration preserves order. Returns
+    /// the effective width.
+    pub fn set_burst(&mut self, burst: usize) -> usize {
+        self.flush();
+        self.mburst = burst.clamp(1, self.cap);
+        if self.mburst > 1 {
+            self.mbuf.reserve(self.mburst);
+        }
+        self.mburst
+    }
+
+    /// Configured multipush burst width (`1` = disabled).
+    #[inline]
+    pub fn burst(&self) -> usize {
+        self.mburst
+    }
+
+    /// Number of values currently staged in the multipush buffer.
+    #[inline]
+    pub fn staged(&self) -> usize {
+        self.mbuf.len()
+    }
+
+    /// Try to write the whole staged buffer into the ring as one burst.
+    /// Returns `true` when the buffer is empty afterwards (including the
+    /// trivially-empty case), `false` if the ring lacks a contiguous run.
+    ///
+    /// The FastForward occupancy argument makes one flag load suffice:
+    /// the consumer clears slots strictly in ring order, so if the
+    /// *last* slot of the run is empty, every earlier slot of the run is
+    /// empty too — and the Acquire on that last flag happens-after the
+    /// consumer's reads of all earlier slots. Values are then written
+    /// **backward** (FastFlow's multipush): the producer dirties the
+    /// whole stretch of cache lines while it still owns them, and the
+    /// consumer streams through the burst afterwards — one coherence
+    /// migration per burst instead of a ping-pong per item.
+    pub fn try_flush(&mut self) -> bool {
+        let len = self.mbuf.len();
+        if len == 0 {
+            return true;
+        }
+        debug_assert!(len <= self.cap, "staged burst exceeds ring capacity");
+        let base = self.pwrite;
+        let cap = self.cap;
+        let last = (base + len - 1) % cap;
+        if self.ring.slots[last].full.load(Ordering::Acquire) {
+            return false;
+        }
+        {
+            let ring = &*self.ring;
+            for (i, v) in self.mbuf.drain(..).enumerate().rev() {
+                let slot = &ring.slots[(base + i) % cap];
+                // SAFETY: empty by the contiguity argument above; the
+                // consumer reads `v` only after the Release store.
+                unsafe { (*slot.value.get()).write(v) };
+                slot.full.store(true, Ordering::Release);
+            }
+        }
+        self.pwrite = (base + len) % cap;
+        true
+    }
+
+    /// Flush the staged multipush buffer, blocking with backoff until
+    /// the ring has room. Returns `false` if the consumer disconnected
+    /// first (the staged values stay buffered and are dropped with the
+    /// producer); `true` once the buffer is empty.
+    pub fn flush(&mut self) -> bool {
+        if self.mbuf.is_empty() {
+            return true;
+        }
+        let mut backoff = Backoff::new();
+        loop {
+            if self.try_flush() {
+                return true;
+            }
+            if !self.ring.consumer_alive.load(Ordering::Acquire) {
+                return false;
+            }
+            backoff.snooze();
+        }
     }
 }
 
@@ -228,8 +382,26 @@ impl<T: Send> Consumer<T> {
     }
 }
 
+/// Failed flush attempts a dropping producer tolerates before
+/// abandoning its staged frames. Drop must never block unwinding
+/// forever on a consumer that is alive but permanently not popping
+/// (e.g. stalled on state the panicking thread holds), so the drop-time
+/// flush is best-effort and bounded — ordinary sends and EOS still
+/// flush unconditionally.
+const DROP_FLUSH_ATTEMPTS: usize = 256;
+
 impl<T> Drop for Producer<T> {
     fn drop(&mut self) {
+        // Best-effort publication of staged multipush frames: retry a
+        // bounded number of times (plenty for a consumer that is merely
+        // behind), then give up — leaving them to drop with `mbuf`.
+        let mut backoff = Backoff::new();
+        for _ in 0..DROP_FLUSH_ATTEMPTS {
+            if self.try_flush() || !self.ring.consumer_alive.load(Ordering::Acquire) {
+                break;
+            }
+            backoff.snooze();
+        }
         self.ring.producer_alive.store(false, Ordering::Release);
     }
 }
@@ -383,6 +555,129 @@ mod tests {
     #[should_panic(expected = "capacity must be >= 1")]
     fn zero_capacity_panics() {
         let _ = spsc::<u8>(0);
+    }
+
+    #[test]
+    fn multipush_preserves_fifo() {
+        let (mut p, mut c) = spsc::<u32>(16);
+        assert_eq!(p.set_burst(4), 4);
+        for i in 0..10 {
+            p.push_buffered(i).unwrap();
+        }
+        // 8 flushed in two bursts; 2 still staged.
+        assert_eq!(p.staged(), 2);
+        assert_eq!(p.len_approx(), 8);
+        assert!(p.flush());
+        for i in 0..10 {
+            assert_eq!(c.try_pop(), Some(i), "FIFO across burst boundaries");
+        }
+        assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn multipush_burst_one_is_plain_push() {
+        let (mut p, mut c) = spsc::<u32>(4);
+        assert_eq!(p.set_burst(1), 1);
+        p.push_buffered(7).unwrap();
+        assert_eq!(p.staged(), 0, "burst 1 never stages");
+        assert_eq!(c.try_pop(), Some(7));
+    }
+
+    #[test]
+    fn multipush_burst_clamped_to_capacity() {
+        let (mut p, mut c) = spsc::<u32>(4);
+        assert_eq!(p.set_burst(1000), 4);
+        for i in 0..4 {
+            p.push_buffered(i).unwrap();
+        }
+        // A full-capacity burst flushes into the empty ring in one go.
+        assert_eq!(p.staged(), 0);
+        assert!(p.is_full());
+        for i in 0..4 {
+            assert_eq!(c.try_pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn multipush_wraps_and_interleaves() {
+        let (mut p, mut c) = spsc::<usize>(8);
+        p.set_burst(3);
+        let mut expect = 0usize;
+        for i in 0..1_000 {
+            p.push_buffered(i).unwrap();
+            if i % 5 == 0 {
+                assert!(p.flush());
+            }
+            while let Some(v) = c.try_pop() {
+                assert_eq!(v, expect);
+                expect += 1;
+            }
+        }
+        assert!(p.flush());
+        while let Some(v) = c.try_pop() {
+            assert_eq!(v, expect);
+            expect += 1;
+        }
+        assert_eq!(expect, 1_000);
+    }
+
+    #[test]
+    fn multipush_flush_on_drop() {
+        let (mut p, mut c) = spsc::<u32>(8);
+        p.set_burst(8);
+        p.push_buffered(1).unwrap();
+        p.push_buffered(2).unwrap();
+        assert_eq!(c.try_pop(), None, "staged frames not yet visible");
+        drop(p); // flushes the stage, then disconnects
+        assert_eq!(c.pop(), Some(1));
+        assert_eq!(c.pop(), Some(2));
+        assert_eq!(c.pop(), None);
+    }
+
+    #[test]
+    fn multipush_dead_consumer_reports_full() {
+        let (mut p, c) = spsc::<u32>(4);
+        p.set_burst(2);
+        for i in 0..4 {
+            p.push(i).unwrap(); // fill the ring
+        }
+        p.push_buffered(9).unwrap(); // staged: no room to flush
+        drop(c);
+        assert!(!p.flush(), "flush reports the lost consumer");
+        assert_eq!(p.staged(), 1, "undeliverable frames stay staged");
+        assert_eq!(p.push_buffered(10), Err(Full(10)));
+    }
+
+    #[test]
+    fn is_full_accounts_for_staged_frames() {
+        let (mut p, mut c) = spsc::<u32>(4);
+        p.set_burst(3);
+        p.push(0).unwrap();
+        p.push(1).unwrap(); // ring: 2 occupied, 2 free
+        p.push_buffered(2).unwrap(); // staged 1: next send needs 2 free
+        assert!(!p.is_full());
+        p.push_buffered(3).unwrap(); // staged 2: next send needs 3 free
+        assert!(p.is_full(), "staged frames count against capacity");
+        assert_eq!(c.try_pop(), Some(0)); // 3 free now
+        assert!(!p.is_full());
+    }
+
+    #[test]
+    fn multipush_cross_thread_fifo() {
+        const N: usize = 30_000;
+        let (mut p, mut c) = spsc::<usize>(64);
+        p.set_burst(16);
+        let producer = std::thread::spawn(move || {
+            for i in 0..N {
+                p.push_buffered(i).unwrap();
+            }
+            assert!(p.flush());
+        });
+        for expect in 0..N {
+            assert_eq!(c.pop(), Some(expect));
+        }
+        producer.join().unwrap();
+        assert_eq!(c.try_pop(), None);
     }
 
     #[test]

@@ -7,7 +7,12 @@
 //!   full/empty state lives *in the slot* (a tag word per slot), so the
 //!   producer only ever touches `pwrite` + the slot it writes and the
 //!   consumer only ever touches `pread` + the slot it reads. Head and tail
-//!   indices are thread-local, never shared, never invalidated.
+//!   indices are thread-local, never shared, never invalidated. The
+//!   producer optionally stages frames in a local **multipush** buffer
+//!   ([`bounded::Producer::push_buffered`], FastFlow TR-09-12): one
+//!   occupancy check and one backward burst of slot writes per `burst`
+//!   frames, amortizing the cache-coherence handshake that dominates
+//!   fine-grained streaming.
 //! * [`ptr`] — the paper's Fig. 2 verbatim: a ring of `AtomicPtr` slots
 //!   where `NULL` *is* the empty sentinel. Zero metadata per slot; only
 //!   usable for non-null pointers. Kept for fidelity and benchmarked

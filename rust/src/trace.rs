@@ -25,6 +25,13 @@ pub struct NodeTrace {
     pub pop_retries: AtomicU64,
     /// Completed run cycles (freeze/thaw generations).
     pub cycles: AtomicU64,
+    /// Batch/task buffers this node allocated fresh (its recycling pool
+    /// was empty) — the observable that must **plateau** after warmup if
+    /// the hot path is allocation-free (paper §3.2, the parallel
+    /// allocator claim).
+    pub alloc_fresh: AtomicU64,
+    /// Buffers drawn recycled from a pool free lane.
+    pub alloc_reused: AtomicU64,
 }
 
 impl NodeTrace {
@@ -62,6 +69,15 @@ impl NodeTrace {
         self.pop_retries.fetch_add(pop, Ordering::Relaxed);
     }
 
+    /// Account buffer-pool activity (see
+    /// [`crate::channel::Sender::take_alloc_stats`]): `fresh` heap
+    /// allocations vs `reused` recycled draws.
+    #[inline]
+    pub fn on_alloc(&self, fresh: u64, reused: u64) {
+        self.alloc_fresh.fetch_add(fresh, Ordering::Relaxed);
+        self.alloc_reused.fetch_add(reused, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self, name: impl Into<String>) -> TraceRow {
         TraceRow {
             name: name.into(),
@@ -71,6 +87,8 @@ impl NodeTrace {
             push_retries: self.push_retries.load(Ordering::Relaxed),
             pop_retries: self.pop_retries.load(Ordering::Relaxed),
             cycles: self.cycles.load(Ordering::Relaxed),
+            alloc_fresh: self.alloc_fresh.load(Ordering::Relaxed),
+            alloc_reused: self.alloc_reused.load(Ordering::Relaxed),
         }
     }
 }
@@ -85,6 +103,11 @@ pub struct TraceRow {
     pub push_retries: u64,
     pub pop_retries: u64,
     pub cycles: u64,
+    /// Fresh buffer allocations attributed to this node (plateaus after
+    /// warmup when recycling works).
+    pub alloc_fresh: u64,
+    /// Recycled buffer draws.
+    pub alloc_reused: u64,
 }
 
 /// A collected report over all nodes of a skeleton.
@@ -123,19 +146,29 @@ impl TraceReport {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<14} {:>10} {:>10} {:>12} {:>12} {:>12} {:>7}\n",
-            "node", "tasks", "emitted", "svc-time", "push-retry", "pop-retry", "cycles"
+            "{:<14} {:>10} {:>10} {:>12} {:>12} {:>12} {:>7} {:>9} {:>9}\n",
+            "node",
+            "tasks",
+            "emitted",
+            "svc-time",
+            "push-retry",
+            "pop-retry",
+            "cycles",
+            "alloc-new",
+            "alloc-re"
         ));
         for r in &self.rows {
             out.push_str(&format!(
-                "{:<14} {:>10} {:>10} {:>12} {:>12} {:>12} {:>7}\n",
+                "{:<14} {:>10} {:>10} {:>12} {:>12} {:>12} {:>7} {:>9} {:>9}\n",
                 r.name,
                 r.tasks,
                 r.emitted,
                 format!("{:.3?}", r.svc_time),
                 r.push_retries,
                 r.pop_retries,
-                r.cycles
+                r.cycles,
+                r.alloc_fresh,
+                r.alloc_reused
             ));
         }
         out
@@ -154,6 +187,7 @@ mod tests {
         t.on_emit(3);
         t.on_cycle();
         t.add_retries(2, 5);
+        t.on_alloc(4, 9);
         let row = t.snapshot("w0");
         assert_eq!(row.tasks, 2);
         assert_eq!(row.emitted, 3);
@@ -161,6 +195,8 @@ mod tests {
         assert_eq!(row.push_retries, 2);
         assert_eq!(row.pop_retries, 5);
         assert_eq!(row.cycles, 1);
+        assert_eq!(row.alloc_fresh, 4);
+        assert_eq!(row.alloc_reused, 9);
     }
 
     #[test]
@@ -183,6 +219,8 @@ mod tests {
             push_retries: 0,
             pop_retries: 0,
             cycles: 0,
+            alloc_fresh: 0,
+            alloc_reused: 0,
         };
         let rep = TraceReport {
             rows: vec![mk("worker-0", 10), mk("worker-1", 30), mk("emitter", 999)],

@@ -223,7 +223,9 @@ fn trace_reports_cover_all_nodes() {
     acc.offload_eos();
     while acc.load_result().is_some() {}
     let report = acc.wait();
-    assert_eq!(report.rows.len(), workers + 2); // emitter + workers + collector
+    // emitter + workers + collector + the caller-side offload row
+    assert_eq!(report.rows.len(), workers + 3);
     assert!(report.rows.iter().any(|r| r.name == "emitter"));
     assert!(report.rows.iter().any(|r| r.name == "collector"));
+    assert!(report.rows.iter().any(|r| r.name == "offload"));
 }

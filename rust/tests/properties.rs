@@ -289,6 +289,120 @@ fn prop_batched_equals_unbatched_every_policy() {
 }
 
 #[test]
+fn prop_multipush_equals_plain_transport() {
+    // Producer-side multipush is a transfer optimization, not a semantic
+    // change: the same inputs through the same farm produce the same
+    // outputs (same order when ordered) whether the input stream is fed
+    // with plain sends or with burst-buffered sends of any width, under
+    // every scheduling policy. EOS flushes, so no tail is ever lost.
+    Cases::new("multipush_equiv", 8).run(|g: &mut Gen| {
+        let workers = g.usize_in(1, 5);
+        let n = g.usize_in(1, 2_000) as u64;
+        let burst = g.usize_in(2, 96);
+        let cap = g.usize_in(2, 128);
+        let ordered = g.bool();
+        for sched in [SchedPolicy::RoundRobin, SchedPolicy::OnDemand] {
+            let mut cfg = FarmConfig::default()
+                .workers(workers)
+                .sched(sched)
+                // Bounded input: multipush stages against a real ring.
+                .queue_caps(cap, 64, 64);
+            if ordered {
+                cfg = cfg.ordered();
+            }
+            let run = |buffered: bool| {
+                let skel = farm(cfg.clone(), |_| seq_fn(|x: u64| x * 7 + 1))
+                    .launch(RunMode::RunToEnd);
+                let (mut input, output, handle) = skel.split();
+                let mut output = output.expect("farm has a collector");
+                let burst = if buffered { burst } else { 1 };
+                let pusher = std::thread::spawn(move || {
+                    input.set_burst(burst);
+                    for i in 0..n {
+                        input.send_buffered(i).unwrap();
+                    }
+                    input.send_eos().unwrap(); // flushes the stage
+                });
+                let mut got = vec![];
+                loop {
+                    match output.recv() {
+                        Msg::Task(v) => got.push(v),
+                        Msg::Batch(vs) => got.extend(vs),
+                        Msg::Eos => break,
+                    }
+                }
+                pusher.join().unwrap();
+                handle.join();
+                got
+            };
+            let mut plain = run(false);
+            let mut multi = run(true);
+            if !ordered {
+                plain.sort_unstable();
+                multi.sort_unstable();
+            }
+            assert_eq!(
+                plain, multi,
+                "sched {sched:?} ordered {ordered} burst {burst} cap {cap}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_recycled_batches_equal_unbatched() {
+    // The pooled-batch path (take_batch_buf → offload_batch, buffers
+    // cycling through the stream free lane) is observationally identical
+    // to per-item offloading for every SchedPolicy × ordering.
+    Cases::new("pooled_batch_equiv", 8).run(|g: &mut Gen| {
+        let workers = g.usize_in(1, 5);
+        let n = g.usize_in(1, 2_000) as u64;
+        let chunk = g.usize_in(2, 128) as u64;
+        let ordered = g.bool();
+        for sched in [SchedPolicy::RoundRobin, SchedPolicy::OnDemand] {
+            let mut cfg = FarmConfig::default().workers(workers).sched(sched);
+            if ordered {
+                cfg = cfg.ordered();
+            }
+            let run = |pooled: bool| {
+                let mut acc: FarmAccel<u64, u64> =
+                    farm(cfg.clone(), |_| seq_fn(|x: u64| x * 5 + 3)).into_accel();
+                if pooled {
+                    let mut i = 0u64;
+                    while i < n {
+                        let mut buf = acc.take_batch_buf();
+                        buf.extend(i..(i + chunk).min(n));
+                        i = (i + chunk).min(n);
+                        acc.offload_batch(buf).unwrap();
+                    }
+                } else {
+                    for i in 0..n {
+                        acc.offload(i).unwrap();
+                    }
+                }
+                acc.offload_eos();
+                let mut got = vec![];
+                while let Some(v) = acc.load_result() {
+                    got.push(v);
+                }
+                acc.wait();
+                got
+            };
+            let mut per_item = run(false);
+            let mut pooled = run(true);
+            if !ordered {
+                per_item.sort_unstable();
+                pooled.sort_unstable();
+            }
+            assert_eq!(
+                per_item, pooled,
+                "sched {sched:?} ordered {ordered} chunk {chunk}"
+            );
+        }
+    });
+}
+
+#[test]
 fn prop_pool_multiclient_exactly_once() {
     // Any number of concurrent clients through any shard count and
     // placement policy: every offloaded task comes back exactly once.
