@@ -9,7 +9,7 @@ CARGO  ?= cargo
 PYTHON ?= python
 ARTIFACT_DIR ?= artifacts
 
-.PHONY: all build test test-fallback bench bench-smoke doc artifacts fmt clippy pytest clean
+.PHONY: all build test test-fallback test-oversub bench bench-smoke doc artifacts fmt clippy pytest clean
 
 all: build
 
@@ -27,6 +27,11 @@ test:
 test-fallback:
 	cd rust && $(CARGO) test -q --no-default-features --lib --test fallback_kernel
 
+# Over-subscription smoke lane: the Park-mode waiting suite with
+# workers ≫ cores (includes the #[ignore]d heavy case CI also runs).
+test-oversub:
+	cd rust && $(CARGO) test -q --test waiting -- --include-ignored
+
 bench:
 	cd rust && $(CARGO) bench --bench fig4_mandelbrot -- --quick
 	cd rust && $(CARGO) bench --bench table2_nqueens -- --quick
@@ -34,10 +39,11 @@ bench:
 # CI smoke lane: compile every bench, then run short sweeps that write
 # $(ARTIFACT_DIR)/BENCH_accel.json (multi-client service),
 # $(ARTIFACT_DIR)/BENCH_accel_nesting.json (composition overhead),
-# $(ARTIFACT_DIR)/BENCH_alloc.json (allocator plateau study) and
+# $(ARTIFACT_DIR)/BENCH_alloc.json (allocator plateau study),
 # $(ARTIFACT_DIR)/BENCH_queue_latency_multipush.json (multipush on/off
-# sweep) — the machine-readable perf trajectory benchkit emits via
-# FF_BENCH_JSON.
+# sweep) and $(ARTIFACT_DIR)/BENCH_queue_latency_waitmode.json
+# (Spin/Adaptive/Park hot-path cost) — the machine-readable perf
+# trajectory benchkit emits via FF_BENCH_JSON.
 bench-smoke:
 	cd rust && $(CARGO) bench --no-run
 	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \

@@ -31,6 +31,7 @@
 //! application level (e.g. cap `offloaded` minus observed results per
 //! burst) — a bounded-lane variant is future work.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::AccelError;
@@ -43,8 +44,21 @@ pub(crate) struct NewLane<T: Send + 'static>(pub(crate) Receiver<T>);
 /// Shared registry of client lanes. Registration is the cold path: it
 /// takes a short mutex to serialize concurrent `clone()`s onto the
 /// single registration stream; offloads never touch it.
+///
+/// The registry also keeps the **registration epoch counters**: every
+/// handle bumps `opened` when its lane registers and `finished` when
+/// its close path runs (`finish()` or `Drop` — even a panicking client
+/// thread runs it during unwind). `opened > finished` therefore means
+/// some handle was *leaked* (`mem::forget`, a handle stranded in a
+/// poisoned mutex): its lane will never send EOS and its sender ring
+/// never reports the producer side gone, which is what used to wedge
+/// `AccelPool::wait` forever. The pool's `Park`-mode drain uses the
+/// counter gap to detect that state and surface
+/// [`AccelError::Disconnected`].
 pub(crate) struct LaneRegistry<T: Send + 'static> {
     reg_tx: Mutex<Sender<NewLane<T>>>,
+    opened: AtomicU64,
+    finished: AtomicU64,
 }
 
 impl<T: Send + 'static> LaneRegistry<T> {
@@ -54,6 +68,8 @@ impl<T: Send + 'static> LaneRegistry<T> {
         (
             Arc::new(LaneRegistry {
                 reg_tx: Mutex::new(reg_tx),
+                opened: AtomicU64::new(0),
+                finished: AtomicU64::new(0),
             }),
             reg_rx,
         )
@@ -64,12 +80,27 @@ impl<T: Send + 'static> LaneRegistry<T> {
     /// send on the returned sender reports disconnection.
     pub(crate) fn open_lane(&self) -> Sender<T> {
         let (lane_tx, lane_rx) = stream_unbounded::<T>();
+        self.opened.fetch_add(1, Ordering::SeqCst);
         let _ = self
             .reg_tx
             .lock()
             .expect("lane registry lock")
             .send(NewLane(lane_rx));
         lane_tx
+    }
+
+    pub(crate) fn note_finished(&self) {
+        self.finished.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Lanes ever opened (cumulative across cycles).
+    pub(crate) fn opened(&self) -> u64 {
+        self.opened.load(Ordering::SeqCst)
+    }
+
+    /// Lanes whose handle ran its close path (cumulative).
+    pub(crate) fn finished(&self) -> u64 {
+        self.finished.load(Ordering::SeqCst)
     }
 }
 
@@ -215,6 +246,9 @@ impl<T: Send + 'static> AccelHandle<T> {
         let flushed = self.flush();
         self.closed = true;
         let eos = self.lane.send_eos().map_err(|_| AccelError::Disconnected);
+        // Count the close even on error: the registration-epoch gap
+        // (`opened - finished`) must track *leaked* handles only.
+        self.registry.note_finished();
         flushed.and(eos)
     }
 }

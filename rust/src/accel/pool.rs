@@ -29,16 +29,17 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::client::{AccelHandle, LaneRegistry, NewLane};
+use super::AccelError;
 use crate::channel::{stream_unbounded, Msg, Receiver, Sender};
 use crate::farm::{farm, FarmConfig};
 use crate::node::{Lifecycle, Node, RunMode};
 use crate::skeleton::builder::{seq, Skeleton};
 use crate::skeleton::SkeletonHandle;
 use crate::trace::{NodeTrace, TraceReport, TraceRow};
-use crate::util::Backoff;
+use crate::util::{Backoff, Doorbell, ParkGauge, WaitCfg, WaitMode};
 
 /// Append a shard's trace rows prefixed `s<i>/` — shared by
 /// [`AccelPool::trace_report`] and [`AccelPool::wait`].
@@ -60,7 +61,8 @@ pub enum Placement {
 }
 
 /// Pool configuration: how many shards, how each shard's farm is built,
-/// how work is placed, and the default client coalescing threshold.
+/// how work is placed, the default client coalescing threshold, and the
+/// waiting/elasticity discipline.
 #[derive(Debug, Clone)]
 pub struct PoolConfig {
     pub shards: usize,
@@ -70,6 +72,23 @@ pub struct PoolConfig {
     pub batch: usize,
     /// Per-shard farm topology (workers, scheduling, ordering, queues).
     pub farm: FarmConfig,
+    /// Waiting discipline for the arbiter, the merged drain, and (for
+    /// the farm-shard constructors) every shard thread — see
+    /// [`WaitMode`]. `Park` gives the pool **idle-shard elasticity**: a
+    /// shard whose lanes stay empty past [`field@PoolConfig::idle_grace`]
+    /// parks wholesale (emitter, workers and collector each on their
+    /// stream doorbell) and is woken by the arbiter's next dispatch.
+    pub wait: WaitMode,
+    /// How long a shard's lanes must stay empty before its threads
+    /// park (zero = park as soon as the spin budget runs out).
+    pub idle_grace: Duration,
+    /// Parking modes (`Adaptive`/`Park`) only: how long the merged
+    /// drain tolerates a fully stalled cycle (pool closed, no results,
+    /// unfinished lanes) before
+    /// concluding a client handle was leaked, force-closing the
+    /// abandoned lanes and surfacing [`AccelError::Disconnected`]
+    /// through [`AccelPool::wait_checked`].
+    pub disconnect_grace: Duration,
 }
 
 /// Default per-shard worker budget: the machine's single-farm default
@@ -87,6 +106,9 @@ impl Default for PoolConfig {
             placement: Placement::default(),
             batch: 1,
             farm: FarmConfig::default().workers(default_workers_per_shard(shards)),
+            wait: WaitMode::Spin,
+            idle_grace: Duration::ZERO,
+            disconnect_grace: Duration::from_millis(500),
         }
     }
 }
@@ -126,6 +148,25 @@ impl PoolConfig {
         self.farm.workers = n.max(1);
         self
     }
+    /// Waiting discipline for the whole pool (see [`field@PoolConfig::wait`]).
+    #[must_use]
+    pub fn wait(mut self, mode: WaitMode) -> Self {
+        self.wait = mode;
+        self
+    }
+    /// Idle-shard elasticity grace (see [`field@PoolConfig::idle_grace`]).
+    #[must_use]
+    pub fn idle_grace(mut self, grace: Duration) -> Self {
+        self.idle_grace = grace;
+        self
+    }
+    /// Leaked-handle detection window (see
+    /// [`field@PoolConfig::disconnect_grace`]).
+    #[must_use]
+    pub fn disconnect_grace(mut self, grace: Duration) -> Self {
+        self.disconnect_grace = grace;
+        self
+    }
 
     /// Launch a one-shot pool whose shards are arbitrary skeletons —
     /// `self.run_skeleton(|shard| skel)` sugar for
@@ -147,6 +188,10 @@ impl PoolConfig {
 enum Ctl {
     /// Close the current cycle once every client lane has finished.
     CloseCycle,
+    /// Leaked-handle recovery (parking modes): drain whatever the
+    /// still-open lanes buffered, then close them unconditionally and
+    /// count them as abandoned, so the cycle can complete.
+    ForceClose,
 }
 
 /// How many frames the arbiter drains from one lane before moving on —
@@ -185,6 +230,18 @@ pub struct AccelPool<I: Send + 'static, O: Send + 'static> {
     eos_sent: bool,
     /// Results popped in the current run cycle.
     pub collected: u64,
+    /// The merged drain's waiting discipline (mode + disconnect grace).
+    wait: WaitCfg,
+    disconnect_grace: Duration,
+    /// Set once a ForceClose was sent for this cycle.
+    force_closed: bool,
+    /// Lanes the arbiter force-closed (cumulative) — written by the
+    /// arbiter, read by the pool.
+    abandoned: Arc<AtomicU64>,
+    /// Snapshot of `abandoned` at the start of the current cycle.
+    abandoned_seen: u64,
+    /// Parked-thread gauge for the arbiter thread.
+    arbiter_gauge: Arc<ParkGauge>,
 }
 
 impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
@@ -197,7 +254,7 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
         W: Node<In = I, Out = O> + 'static,
         F: FnMut(usize, usize) -> W,
     {
-        let farm_cfg = cfg.farm.clone();
+        let farm_cfg = Self::shard_farm_cfg(&cfg);
         Self::launch(cfg, RunMode::RunToEnd, move |si| {
             farm(farm_cfg.clone(), |wi| seq(factory(si, wi)))
         })
@@ -210,10 +267,25 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
         W: Node<In = I, Out = O> + 'static,
         F: FnMut(usize, usize) -> W,
     {
-        let farm_cfg = cfg.farm.clone();
+        let farm_cfg = Self::shard_farm_cfg(&cfg);
         Self::launch(cfg, RunMode::RunThenFreeze, move |si| {
             farm(farm_cfg.clone(), |wi| seq(factory(si, wi)))
         })
+    }
+
+    /// The per-shard farm config with the pool's waiting discipline
+    /// folded in (more patient mode wins; the pool's idle grace becomes
+    /// the shards' park grace). `run_skeleton` shards, whose topology
+    /// the factory owns, inherit the pool mode only at the pool edges —
+    /// set [`field@FarmConfig::wait`] / [`Skeleton::wait_mode`] inside the
+    /// factory for shard-internal parking.
+    fn shard_farm_cfg(cfg: &PoolConfig) -> FarmConfig {
+        let mut farm_cfg = cfg.farm.clone();
+        farm_cfg.wait = farm_cfg.wait.max(cfg.wait);
+        if !cfg.idle_grace.is_zero() {
+            farm_cfg.park_grace = cfg.idle_grace;
+        }
+        farm_cfg
     }
 
     /// Launch a one-shot pool whose shards are **arbitrary skeletons**:
@@ -247,21 +319,40 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
         F: FnMut(usize) -> S,
     {
         let nshards = cfg.shards.max(1);
+        let arbiter_gauge = Arc::new(ParkGauge::new());
+        let arbiter_wait = WaitCfg {
+            mode: cfg.wait,
+            grace: cfg.idle_grace,
+            gauge: if cfg.wait == WaitMode::Spin {
+                None
+            } else {
+                Some(arbiter_gauge.clone())
+            },
+        };
         let mut shard_inputs = Vec::with_capacity(nshards);
         let mut outputs = Vec::with_capacity(nshards);
         let mut shards = Vec::with_capacity(nshards);
         for si in 0..nshards {
             let skel = factory(si).launch(mode);
-            let (input, output, handle) = skel.split();
-            shard_inputs.push(input);
-            outputs.push(output.expect(
+            let (mut input, output, handle) = skel.split();
+            let mut output = output.expect(
                 "pool shards must produce an output stream — a collector-less \
                  farm cannot be a pool shard (its results bypass the drain)",
-            ));
+            );
+            if cfg.wait != WaitMode::Spin {
+                // Pool-edge waits: the arbiter blocking on a bounded
+                // shard input, and the merged drain on the outputs.
+                input.set_wait(cfg.wait);
+                input.set_park_gauge(arbiter_gauge.clone());
+                output.set_wait(cfg.wait);
+            }
+            shard_inputs.push(input);
+            outputs.push(output);
             shards.push(handle);
         }
         let completed: Arc<Vec<AtomicU64>> =
             Arc::new((0..nshards).map(|_| AtomicU64::new(0)).collect::<Vec<_>>());
+        let abandoned = Arc::new(AtomicU64::new(0));
         let (registry, reg_rx) = LaneRegistry::create();
         let (ctl_tx, ctl_rx) = stream_unbounded::<Ctl>();
         let arbiter_lc = Lifecycle::new(1, mode);
@@ -271,9 +362,13 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
             reg_rx,
             ctl_rx,
             cfg.placement,
-            completed.clone(),
-            arbiter_lc.clone(),
-            arbiter_trace.clone(),
+            ArbiterShared {
+                completed: completed.clone(),
+                abandoned: abandoned.clone(),
+                lifecycle: arbiter_lc.clone(),
+                trace: arbiter_trace.clone(),
+                wait: arbiter_wait.clone(),
+            },
         );
         let pool = AccelPool {
             mode,
@@ -292,6 +387,15 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
             pending: VecDeque::new(),
             eos_sent: false,
             collected: 0,
+            wait: WaitCfg {
+                gauge: None, // the drain runs on the caller's thread
+                ..arbiter_wait
+            },
+            disconnect_grace: cfg.disconnect_grace,
+            force_closed: false,
+            abandoned,
+            abandoned_seen: 0,
+            arbiter_gauge,
         };
         let handle = pool.handle();
         (pool, handle)
@@ -387,10 +491,22 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
 
     /// Pop one merged result, blocking until one arrives or every
     /// shard's cycle output reached EOS (`None`). Idle waits use the
-    /// shared [`Backoff`] escalation, so draining a quiet pool parks in
-    /// `yield` instead of burning the core.
+    /// shared [`Backoff`] escalation — and, under a `Park`-mode pool,
+    /// park on any shard output's doorbell — so draining a quiet pool
+    /// does not burn the caller's core.
+    ///
+    /// In the parking modes this is also where **leaked-handle
+    /// recovery** runs: a cycle that is closed (`offload_eos` sent), produces
+    /// nothing for [`field@PoolConfig::disconnect_grace`], and still has
+    /// registered-but-unfinished lanes (the registration-epoch gap) is
+    /// wedged by a handle that will never close — `mem::forget`, or a
+    /// handle stranded in a poisoned mutex. The drain then force-closes
+    /// the abandoned lanes (the arbiter forwards whatever they
+    /// buffered) so the cycle terminates; [`AccelPool::wait_checked`]
+    /// surfaces it as [`AccelError::Disconnected`].
     pub fn load_result(&mut self) -> Option<O> {
         let mut backoff = Backoff::new();
+        let mut stalled: Option<Instant> = None;
         loop {
             if let Some(v) = self.load_result_nb() {
                 return Some(v);
@@ -398,7 +514,32 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
             if self.done_count == self.outputs.len() {
                 return None;
             }
-            backoff.snooze();
+            if self.wait.mode != WaitMode::Spin
+                && self.eos_sent
+                && !self.force_closed
+                && self.registry.opened() > self.registry.finished()
+                && stalled.get_or_insert_with(Instant::now).elapsed() >= self.disconnect_grace
+            {
+                let _ = self.ctl.send(Ctl::ForceClose);
+                self.force_closed = true;
+            }
+            if self.wait.wants_park(&mut backoff) {
+                let bells: Vec<&Doorbell> = self
+                    .outputs
+                    .iter()
+                    .enumerate()
+                    .filter(|(s, _)| !self.out_done[*s])
+                    .map(|(_, rx)| rx.data_bell())
+                    .collect();
+                let (outputs, out_done) = (&self.outputs, &self.out_done);
+                self.wait.park_any(&bells, || {
+                    !outputs.iter().enumerate().any(|(s, rx)| {
+                        !out_done[s] && (rx.has_next() || !rx.peer_alive())
+                    })
+                });
+            } else {
+                backoff.snooze();
+            }
         }
     }
 
@@ -434,6 +575,8 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
         }
         self.done_count = 0;
         self.collected = 0;
+        self.force_closed = false;
+        self.abandoned_seen = self.abandoned.load(Ordering::SeqCst);
     }
 
     /// True once any shard raised its poison flag (see
@@ -451,6 +594,26 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
             .sum::<usize>()
     }
 
+    /// Pool threads currently parked on stream doorbells: the arbiter
+    /// plus every shard thread (a racy snapshot; nonzero only under an
+    /// `Adaptive`/`Park` pool). This is the observable behind the
+    /// idle-shard elasticity claim: an idle `Park`-mode pool reaches
+    /// `parked_threads() == threads()`.
+    pub fn parked_threads(&self) -> usize {
+        self.arbiter_gauge.parked_now()
+            + self
+                .shards
+                .iter()
+                .map(|s| s.park_gauge.parked_now())
+                .sum::<usize>()
+    }
+
+    /// Client lanes the arbiter force-closed as abandoned in the
+    /// current cycle (see [`AccelPool::load_result`]).
+    pub fn abandoned_lanes(&self) -> u64 {
+        self.abandoned.load(Ordering::SeqCst) - self.abandoned_seen
+    }
+
     /// Merged trace snapshot: the arbiter plus every shard's nodes,
     /// shard rows prefixed `s<i>/`.
     pub fn trace_report(&self) -> TraceReport {
@@ -464,10 +627,35 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
     /// Final join: sends the pool-wide EOS, drains remaining results,
     /// tells frozen threads to exit and joins them all. All client
     /// handles must already be finished (or dropped) — the drain waits
-    /// for their lanes to close.
+    /// for their lanes to close (in the parking modes, a lane wedged by a
+    /// *leaked* handle is force-closed after
+    /// [`field@PoolConfig::disconnect_grace`]; use [`AccelPool::wait_checked`]
+    /// to observe that as an error).
     pub fn wait(mut self) -> TraceReport {
+        self.finish().0
+    }
+
+    /// Like [`AccelPool::wait`], but surfaces leaked-handle recovery:
+    /// `Err(AccelError::Disconnected)` if any client lane of the final
+    /// cycle had to be force-closed because its handle never ran its
+    /// close path (`mem::forget`, a handle stranded in a poisoned
+    /// mutex). The pool is fully drained and joined either way.
+    pub fn wait_checked(mut self) -> Result<TraceReport, AccelError> {
+        let (report, err) = self.finish();
+        match err {
+            None => Ok(report),
+            Some(e) => Err(e),
+        }
+    }
+
+    fn finish(&mut self) -> (TraceReport, Option<AccelError>) {
         self.offload_eos();
         while self.load_result().is_some() {}
+        let err = if self.abandoned_lanes() > 0 {
+            Some(AccelError::Disconnected)
+        } else {
+            None
+        };
         self.arbiter_lc.request_exit();
         for sh in &self.shards {
             sh.lifecycle.request_exit();
@@ -479,7 +667,7 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
         for (i, sh) in self.shards.drain(..).enumerate() {
             merge_shard_rows(&mut rows, i, sh.join());
         }
-        TraceReport { rows }
+        (TraceReport { rows }, err)
     }
 }
 
@@ -531,23 +719,43 @@ fn pick_shard(
     }
 }
 
+/// The shared state handed to the pool's input arbiter (bundled so the
+/// spawn signature stays readable).
+struct ArbiterShared {
+    completed: Arc<Vec<AtomicU64>>,
+    /// Client lanes force-closed as abandoned (leaked handles).
+    abandoned: Arc<AtomicU64>,
+    lifecycle: Arc<Lifecycle>,
+    trace: Arc<NodeTrace>,
+    wait: WaitCfg,
+}
+
 /// The pool's input arbiter: merges every client lane into the shard
 /// inputs (SPMC over SPSC lanes, §2.3 — no locks, no RMW on the data
 /// path) and applies the placement policy per task or per batch frame
 /// (a batch stays whole so its single-synchronization economy survives
-/// into the shard, whose emitter unpacks it for scheduling).
+/// into the shard, whose emitter unpacks it for scheduling). Idle waits
+/// — every lane empty, no control, no registrations — ride the shared
+/// spin→yield→park escalation, parking on any lane/control doorbell;
+/// any client offload rings the arbiter awake, which is what wakes a
+/// wholesale-parked idle pool on the next dispatch.
 fn spawn_arbiter<I: Send + 'static>(
     mut shard_inputs: Vec<Sender<I>>,
     mut reg_rx: Receiver<NewLane<I>>,
     mut ctl_rx: Receiver<Ctl>,
     placement: Placement,
-    completed: Arc<Vec<AtomicU64>>,
-    lifecycle: Arc<Lifecycle>,
-    trace: Arc<NodeTrace>,
+    shared: ArbiterShared,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("ff-pool-arbiter".into())
         .spawn(move || {
+            let ArbiterShared {
+                completed,
+                abandoned,
+                lifecycle,
+                trace,
+                wait,
+            } = shared;
             let nshards = shard_inputs.len();
             let mut rr = 0usize;
             // Cumulative per-shard dispatch counts: arbiter-local plain
@@ -561,6 +769,7 @@ fn spawn_arbiter<I: Send + 'static>(
                 let mut lane_open: Vec<bool> = Vec::new();
                 let mut open = 0usize;
                 let mut closing = false;
+                let mut force_close = false;
                 let mut backoff = Backoff::new();
                 loop {
                     let mut progressed = false;
@@ -570,6 +779,11 @@ fn spawn_arbiter<I: Send + 'static>(
                             Msg::Task(Ctl::CloseCycle) | Msg::Eos => {
                                 progressed = true;
                                 closing = true;
+                            }
+                            Msg::Task(Ctl::ForceClose) => {
+                                progressed = true;
+                                closing = true;
+                                force_close = true;
                             }
                             Msg::Batch(_) => unreachable!("control is never batched"),
                         }
@@ -660,12 +874,48 @@ fn spawn_arbiter<I: Send + 'static>(
                             Msg::Eos => {}
                         }
                     }
-                    // 4. cycle completion: pool closed + all lanes done.
+                    // 4. leaked-handle recovery: after a ForceClose,
+                    // close every drained lane unconditionally (frames
+                    // still buffered were forwarded by step 2 above;
+                    // the lane's handle will never send EOS).
+                    if force_close {
+                        for li in 0..lanes.len() {
+                            if lane_open[li] && !lanes[li].has_next() {
+                                lane_open[li] = false;
+                                open -= 1;
+                                abandoned.fetch_add(1, Ordering::SeqCst);
+                                progressed = true;
+                            }
+                        }
+                    }
+                    // 5. cycle completion: pool closed + all lanes done.
                     if closing && open == 0 {
                         break;
                     }
                     if progressed {
                         backoff.reset();
+                    } else if wait.wants_park(&mut backoff) {
+                        // Everything idle: park until a client offload,
+                        // a registration, or pool control rings.
+                        let mut bells: Vec<&Doorbell> =
+                            Vec::with_capacity(lanes.len() + 2);
+                        bells.push(ctl_rx.data_bell());
+                        bells.push(reg_rx.data_bell());
+                        bells.extend(
+                            lanes
+                                .iter()
+                                .enumerate()
+                                .filter(|(li, _)| lane_open[*li])
+                                .map(|(_, l)| l.data_bell()),
+                        );
+                        wait.park_any(&bells, || {
+                            ctl_rx.peer_alive()
+                                && !ctl_rx.has_next()
+                                && !reg_rx.has_next()
+                                && !lanes.iter().enumerate().any(|(li, l)| {
+                                    lane_open[li] && (l.has_next() || !l.peer_alive())
+                                })
+                        });
                     } else {
                         backoff.snooze();
                     }

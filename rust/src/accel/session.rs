@@ -44,6 +44,7 @@ use crate::node::{LifecycleState, Node, RunMode};
 use crate::skeleton::builder::{seq, Skeleton};
 use crate::skeleton::LaunchedSkeleton;
 use crate::trace::{TraceReport, TraceRow};
+use crate::util::WaitMode;
 
 /// A software accelerator wrapping any launched skeleton.
 ///
@@ -243,8 +244,10 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
     /// accelerators, returns `None` immediately.
     ///
     /// Blocking waits ride the receiver's shared [`crate::util::Backoff`]
-    /// escalation (spin → yield), so a caller draining an idle
-    /// accelerator does not burn its core.
+    /// escalation (spin → yield — and, after [`Accel::set_wait`] with
+    /// [`WaitMode::Adaptive`]/[`WaitMode::Park`], park on the output
+    /// stream's doorbell), so a caller draining an idle accelerator does
+    /// not burn its core.
     pub fn load_result(&mut self) -> Option<O> {
         loop {
             if let Some(v) = self.pending.pop_front() {
@@ -388,6 +391,28 @@ impl<I: Send + 'static, O: Send + 'static> Accel<I, O> {
     /// Number of accelerator threads (emitter + workers [+ collector]).
     pub fn threads(&self) -> usize {
         self.skel.lifecycle.threads()
+    }
+
+    /// Caller-side waiting discipline (see [`WaitMode`]): how
+    /// [`Accel::load_result`] waits on an empty output stream and how
+    /// [`Accel::offload`] waits on a full (bounded) input stream. The
+    /// *accelerator threads'* discipline is configured where the
+    /// skeleton is built — [`field@crate::farm::FarmConfig::wait`] or
+    /// [`crate::skeleton::Skeleton::wait_mode`].
+    pub fn set_wait(&mut self, mode: WaitMode) {
+        self.skel.input.set_wait(mode);
+        if let Some(rx) = self.skel.output.as_mut() {
+            rx.set_wait(mode);
+        }
+    }
+
+    /// Accelerator threads currently parked on stream doorbells (a racy
+    /// snapshot; nonzero only when the skeleton was built with an
+    /// `Adaptive`/`Park` [`WaitMode`]). Frozen threads sit in the
+    /// lifecycle condvar and are *not* counted — check
+    /// [`Accel::state`] for [`LifecycleState::Frozen`] instead.
+    pub fn parked_threads(&self) -> usize {
+        self.skel.park_gauge.parked_now()
     }
 
     /// Access the shared lifecycle (for advanced protocols).

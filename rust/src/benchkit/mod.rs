@@ -80,6 +80,25 @@ pub fn measure_ns_per_op(opts: BenchOpts, iters: u64, mut f: impl FnMut(u64)) ->
     Stats::from_samples(&samples)
 }
 
+/// True for the markers Rust's float formatting produces for non-finite
+/// values (`format!("{x:.1}")` on NaN/±∞) — cells a JSON/CSV consumer
+/// must not receive verbatim.
+pub(crate) fn is_non_finite_marker(cell: &str) -> bool {
+    matches!(cell, "NaN" | "-NaN" | "inf" | "-inf")
+}
+
+/// One table cell as a JSON value: non-finite float markers become
+/// `null` (bare `NaN`/`inf` is not valid JSON, and a quoted `"NaN"`
+/// string silently corrupts downstream numeric parsing); everything
+/// else stays a string exactly as rendered.
+fn json_cell(cell: &str) -> String {
+    if is_non_finite_marker(cell) {
+        "null".to_string()
+    } else {
+        format!("\"{}\"", json_escape(cell))
+    }
+}
+
 /// Escape a string for embedding in a JSON document.
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
@@ -122,7 +141,9 @@ impl Report {
 
     /// Serialize as a small JSON document (hand-rolled — the vendored
     /// registry has no serde): `{"name", "columns", "rows", "notes"}`,
-    /// rows as arrays of strings exactly as rendered in the table.
+    /// rows as arrays of strings exactly as rendered in the table —
+    /// except non-finite float cells (`NaN`/`inf`), which become `null`
+    /// so `BENCH_*.json` stays valid, machine-parseable JSON.
     pub fn to_json(&self) -> String {
         let cols: Vec<String> = self
             .table
@@ -135,8 +156,7 @@ impl Report {
             .rows
             .iter()
             .map(|r| {
-                let cells: Vec<String> =
-                    r.iter().map(|c| format!("\"{}\"", json_escape(c))).collect();
+                let cells: Vec<String> = r.iter().map(|c| json_cell(c)).collect();
                 format!("[{}]", cells.join(","))
             })
             .collect();
@@ -247,5 +267,33 @@ mod tests {
         assert_eq!(json_escape("a\tb"), "a\\tb");
         assert_eq!(json_escape("\u{1}"), "\\u0001");
         assert_eq!(json_escape("plain"), "plain");
+    }
+
+    #[test]
+    fn non_finite_cells_become_json_null() {
+        // Regression (bugfix): a bench computing a ratio against a zero
+        // or missing baseline used to write `"NaN"`/`"inf"` strings (or,
+        // worse, bare markers) into BENCH_*.json, corrupting downstream
+        // numeric parsing. They must serialize as JSON null.
+        let mut t = Table::new(&["metric", "value"]);
+        t.row(vec!["speedup".into(), format!("{:.1}", f64::NAN)]);
+        t.row(vec!["ratio".into(), format!("{:.1}", f64::INFINITY)]);
+        t.row(vec!["neg".into(), format!("{:.1}", f64::NEG_INFINITY)]);
+        t.row(vec!["ok".into(), "1.5".into()]);
+        let j = Report::new("nonfinite", t).to_json();
+        assert!(j.contains("[\"speedup\",null]"), "NaN must be null: {j}");
+        assert!(j.contains("[\"ratio\",null]"), "inf must be null: {j}");
+        assert!(j.contains("[\"neg\",null]"), "-inf must be null: {j}");
+        assert!(j.contains("[\"ok\",\"1.5\"]"));
+        assert!(!j.contains("NaN") && !j.contains("inf"));
+    }
+
+    #[test]
+    fn non_finite_marker_detection() {
+        assert!(is_non_finite_marker(&format!("{}", f64::NAN)));
+        assert!(is_non_finite_marker(&format!("{:.3}", f64::INFINITY)));
+        assert!(is_non_finite_marker(&format!("{}", f64::NEG_INFINITY)));
+        assert!(!is_non_finite_marker("1.0"));
+        assert!(!is_non_finite_marker("info")); // only exact markers
     }
 }

@@ -17,9 +17,12 @@
 //!   deadlock-free regardless of task count: the offloading thread can
 //!   never be blocked by its own undrained results.
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use crate::alloc::{BatchPool, BatchReturner, DEFAULT_BATCH_CAP};
 use crate::spsc::{self, Consumer, Full, Producer, UnboundedConsumer, UnboundedProducer};
-use crate::util::Backoff;
+use crate::util::{Backoff, Doorbell, ParkGauge, WaitMode};
 
 /// A frame on a stream: a task, a coalesced batch of tasks, or the
 /// end-of-stream mark.
@@ -210,9 +213,9 @@ impl<T: Send> Sender<T> {
         run
     }
 
-    /// Blocking send of any frame, with spin/yield backoff while full;
-    /// staged multipush frames are flushed first so FIFO order holds.
-    /// (Unbounded streams never block.)
+    /// Blocking send of any frame, with the shared spin→yield→park
+    /// escalation while full; staged multipush frames are flushed first
+    /// so FIFO order holds. (Unbounded streams never block.)
     #[inline]
     pub fn send_msg(&mut self, msg: Msg<T>) -> Result<(), Disconnected<T>> {
         match &mut self.tx {
@@ -230,7 +233,7 @@ impl<T: Send> Sender<T> {
                         return Err(Disconnected(msg));
                     }
                     self.push_retries += 1;
-                    backoff.snooze();
+                    prod.snooze_full(&mut backoff);
                 }
             }
             TxFlavor::Unbounded(prod) => {
@@ -275,10 +278,11 @@ impl<T: Send> Sender<T> {
     /// [`Sender::burst`] frames — one synchronization per burst instead
     /// of per frame. [`Sender::flush`] and any ordinary send (including
     /// [`Sender::send_eos`]) publish the stage first, so no frame is
-    /// ever lost or reordered; drop publishes it best-effort (bounded
-    /// retries — dropping must not hang on a wedged consumer). Unbounded
-    /// streams send directly (their push is already a producer-owned
-    /// tail write).
+    /// ever lost or reordered; drop waits out a live (even slow)
+    /// consumer (bounded by a generous deadline, so unwinding can never
+    /// hang) and counts any frames it must abandon into
+    /// [`crate::spsc::bounded::lost_frames`]. Unbounded streams send
+    /// directly (their push is already a producer-owned tail write).
     #[inline]
     pub fn send_buffered(&mut self, task: T) -> Result<(), Disconnected<T>> {
         if let TxFlavor::Bounded(prod) = &mut self.tx {
@@ -290,13 +294,55 @@ impl<T: Send> Sender<T> {
         self.send(task)
     }
 
-    /// Set the multipush burst width (bounded streams only; clamped to
-    /// the queue capacity, `1` disables buffering). Returns the
-    /// effective width — always `1` on unbounded streams.
+    /// Set the multipush burst width (bounded streams only; clamped
+    /// strictly *below* the queue capacity — see
+    /// [`spsc::Producer::set_burst`] — and `1` disables buffering).
+    /// Returns the effective width — always `1` on unbounded streams.
     pub fn set_burst(&mut self, burst: usize) -> usize {
         match &mut self.tx {
             TxFlavor::Bounded(prod) => prod.set_burst(burst),
             TxFlavor::Unbounded(_) => 1,
+        }
+    }
+
+    /// How this sender's blocking waits (full bounded queue) behave once
+    /// the spin budget runs out — see [`WaitMode`]. No-op on unbounded
+    /// streams, whose sends never block.
+    pub fn set_wait(&mut self, mode: WaitMode) {
+        if let TxFlavor::Bounded(prod) = &mut self.tx {
+            prod.set_wait(mode);
+        }
+    }
+
+    /// Idle time required before the first park of a wait episode.
+    pub fn set_park_grace(&mut self, grace: Duration) {
+        if let TxFlavor::Bounded(prod) = &mut self.tx {
+            prod.set_park_grace(grace);
+        }
+    }
+
+    /// Attach a parked-thread gauge (per launched skeleton).
+    pub fn set_park_gauge(&mut self, gauge: Arc<ParkGauge>) {
+        if let TxFlavor::Bounded(prod) = &mut self.tx {
+            prod.set_park_gauge(gauge);
+        }
+    }
+
+    /// Cumulative parks of this sender on the space doorbell (0 on
+    /// unbounded streams).
+    pub fn parks(&self) -> u64 {
+        match &self.tx {
+            TxFlavor::Bounded(prod) => prod.parks(),
+            TxFlavor::Unbounded(_) => 0,
+        }
+    }
+
+    /// The doorbell a full-queue wait parks on (bounded streams only) —
+    /// for multi-queue waits such as skip-if-full routing.
+    pub(crate) fn space_bell(&self) -> Option<&Doorbell> {
+        match &self.tx {
+            TxFlavor::Bounded(prod) => Some(prod.space_bell()),
+            TxFlavor::Unbounded(_) => None,
         }
     }
 
@@ -375,9 +421,9 @@ impl<T: Send> Receiver<T> {
         m
     }
 
-    /// Blocking receive with backoff. If the sender disconnected without
-    /// sending EOS, a synthetic `Eos` is returned so downstream nodes
-    /// still terminate cleanly.
+    /// Blocking receive with the shared spin→yield→park escalation. If
+    /// the sender disconnected without sending EOS, a synthetic `Eos` is
+    /// returned so downstream nodes still terminate cleanly.
     #[inline]
     pub fn recv(&mut self) -> Msg<T> {
         let mut backoff = Backoff::new();
@@ -398,7 +444,54 @@ impl<T: Send> Receiver<T> {
                 return last.unwrap_or(Msg::Eos);
             }
             self.pop_retries += 1;
-            backoff.snooze();
+            match &mut self.rx {
+                RxFlavor::Bounded(cons) => cons.snooze_empty(&mut backoff),
+                RxFlavor::Unbounded(cons) => cons.snooze_empty(&mut backoff),
+            }
+        }
+    }
+
+    /// How this receiver's blocking waits behave once the spin budget
+    /// runs out — see [`WaitMode`]. Parking engages on the stream's data
+    /// doorbell, rung by every send (and by sender disconnect).
+    pub fn set_wait(&mut self, mode: WaitMode) {
+        match &mut self.rx {
+            RxFlavor::Bounded(cons) => cons.set_wait(mode),
+            RxFlavor::Unbounded(cons) => cons.set_wait(mode),
+        }
+    }
+
+    /// Idle time required before the first park of a wait episode (the
+    /// elasticity grace of `AccelPool`'s idle shards).
+    pub fn set_park_grace(&mut self, grace: Duration) {
+        match &mut self.rx {
+            RxFlavor::Bounded(cons) => cons.set_park_grace(grace),
+            RxFlavor::Unbounded(cons) => cons.set_park_grace(grace),
+        }
+    }
+
+    /// Attach a parked-thread gauge (per launched skeleton).
+    pub fn set_park_gauge(&mut self, gauge: Arc<ParkGauge>) {
+        match &mut self.rx {
+            RxFlavor::Bounded(cons) => cons.set_park_gauge(gauge),
+            RxFlavor::Unbounded(cons) => cons.set_park_gauge(gauge),
+        }
+    }
+
+    /// Cumulative parks of this receiver on the data doorbell.
+    pub fn parks(&self) -> u64 {
+        match &self.rx {
+            RxFlavor::Bounded(cons) => cons.parks(),
+            RxFlavor::Unbounded(cons) => cons.parks(),
+        }
+    }
+
+    /// The doorbell an empty-stream wait parks on — for multi-queue
+    /// waits (collector, pool arbiter, feedback master).
+    pub(crate) fn data_bell(&self) -> &Doorbell {
+        match &self.rx {
+            RxFlavor::Bounded(cons) => cons.data_bell(),
+            RxFlavor::Unbounded(cons) => cons.data_bell(),
         }
     }
 

@@ -12,7 +12,7 @@ use crate::channel::{Msg, Receiver};
 use crate::farm::Seq;
 use crate::node::{Lifecycle, OutTarget};
 use crate::trace::NodeTrace;
-use crate::util::Backoff;
+use crate::util::{Backoff, Doorbell, WaitCfg};
 
 /// Result-ordering policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -81,6 +81,10 @@ fn deliver<O: Send>(
     }
 }
 
+/// Spawn the collector thread. Idle waits (all worker lanes empty) ride
+/// the shared spin→yield→park escalation, parking on *any* worker
+/// output's data doorbell — rung by every worker publish and by worker
+/// disconnects.
 pub(super) fn spawn_collector<O: Send + 'static>(
     mut workers: Vec<Receiver<Seq<O>>>,
     mut out: OutTarget<O>,
@@ -88,6 +92,7 @@ pub(super) fn spawn_collector<O: Send + 'static>(
     lifecycle: Arc<Lifecycle>,
     trace: Arc<NodeTrace>,
     pin_to: Option<usize>,
+    wait: WaitCfg,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("ff-collector".into())
@@ -158,6 +163,14 @@ pub(super) fn spawn_collector<O: Send + 'static>(
                     }
                     if progressed {
                         backoff.reset();
+                    } else if wait.wants_park(&mut backoff) {
+                        let bells: Vec<&Doorbell> =
+                            workers.iter().map(|rx| rx.data_bell()).collect();
+                        wait.park_any(&bells, || {
+                            !workers.iter().enumerate().any(|(w, rx)| {
+                                !eos_seen[w] && (rx.has_next() || !rx.peer_alive())
+                            })
+                        });
                     } else {
                         backoff.snooze();
                     }

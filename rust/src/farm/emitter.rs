@@ -9,7 +9,7 @@ use crate::channel::{Msg, Receiver, Sender};
 use crate::farm::{SchedPolicy, Seq};
 use crate::node::Lifecycle;
 use crate::trace::NodeTrace;
-use crate::util::Backoff;
+use crate::util::{Backoff, Doorbell, WaitCfg};
 
 /// Spawn the emitter thread.
 ///
@@ -18,6 +18,11 @@ use crate::util::Backoff;
 /// slow workers don't accumulate a backlog; this approximates FastFlow's
 /// on-demand scheduling and is what makes irregular workloads
 /// (Mandelbrot rows) balance.
+///
+/// Idle waits ride the shared spin→yield→park escalation: the input
+/// `recv` parks on the input stream's doorbell, and the on-demand
+/// all-queues-full wait parks on *any* worker's space doorbell (rung by
+/// every worker pop).
 pub(super) fn spawn_emitter<I: Send + 'static>(
     mut input: Receiver<I>,
     mut workers: Vec<Sender<Seq<I>>>,
@@ -25,6 +30,7 @@ pub(super) fn spawn_emitter<I: Send + 'static>(
     lifecycle: Arc<Lifecycle>,
     trace: Arc<NodeTrace>,
     pin_to: Option<usize>,
+    wait: WaitCfg,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("ff-emitter".into())
@@ -41,7 +47,7 @@ pub(super) fn spawn_emitter<I: Send + 'static>(
                     match input.recv() {
                         Msg::Task(task) => {
                             let t0 = Instant::now();
-                            route(&mut workers, &mut next, policy, (seq, task));
+                            route(&mut workers, &mut next, policy, (seq, task), &wait);
                             seq += 1;
                             trace.on_task(t0.elapsed().as_nanos() as u64);
                             trace.on_emit(1);
@@ -59,7 +65,7 @@ pub(super) fn spawn_emitter<I: Send + 'static>(
                             let k = tasks.len() as u64;
                             input.recycle_after(tasks, |ts| {
                                 for task in ts.drain(..) {
-                                    route(&mut workers, &mut next, policy, (seq, task));
+                                    route(&mut workers, &mut next, policy, (seq, task), &wait);
                                     seq += 1;
                                 }
                             });
@@ -99,11 +105,13 @@ fn route<I: Send>(
     next: &mut usize,
     policy: SchedPolicy,
     mut frame: Seq<I>,
+    wait: &WaitCfg,
 ) {
     let n = workers.len();
     match policy {
         SchedPolicy::RoundRobin => {
-            // Strict rotation; block on the selected queue.
+            // Strict rotation; block on the selected queue (the send's
+            // own wait parks on that worker's space doorbell).
             for _attempt in 0..n {
                 let w = *next;
                 *next = (*next + 1) % n;
@@ -136,7 +144,18 @@ fn route<I: Send>(
                 if !any_alive {
                     return; // drop
                 }
-                backoff.snooze();
+                if wait.wants_park(&mut backoff) {
+                    // Every live worker is full: park until any worker
+                    // pop rings its space doorbell (or a worker dies —
+                    // the bounded park re-checks liveness anyway).
+                    let bells: Vec<&Doorbell> =
+                        workers.iter().filter_map(|w| w.space_bell()).collect();
+                    wait.park_any(&bells, || {
+                        workers.iter().all(|w| !w.peer_alive() || w.is_full())
+                    });
+                } else {
+                    backoff.snooze();
+                }
             }
         }
     }

@@ -33,7 +33,7 @@ use crate::node::{Node, OutTarget, RunMode, Svc};
 use crate::skeleton::builder::{seq, Skeleton, WireCtx};
 use crate::skeleton::LaunchedSkeleton;
 use crate::trace::NodeTrace;
-use crate::util::Backoff;
+use crate::util::{Backoff, Doorbell};
 
 /// User logic run on the master (CE) thread.
 pub trait MasterLogic: Send {
@@ -243,14 +243,25 @@ where
 {
     let nworkers = workers.len();
 
+    // Waiting discipline: config meets context, more patient wins
+    // (restored before returning).
+    let saved_wait = (ctx.wait, ctx.park_grace);
+    ctx.wait = ctx.wait.max(cfg.wait);
+    if !cfg.park_grace.is_zero() {
+        ctx.park_grace = cfg.park_grace;
+    }
+    let wait = ctx.wait_cfg();
+
     // External input: unbounded by default (accelerator-grade) unless an
     // enclosing worker slot hinted a short queue.
     let in_cap = ctx.take_in_cap(usize::MAX);
-    let (input_tx, mut input_rx) = if in_cap == usize::MAX {
+    let (mut input_tx, mut input_rx) = if in_cap == usize::MAX {
         stream_unbounded::<M::In>()
     } else {
         stream::<M::In>(in_cap)
     };
+    ctx.apply_wait_tx(&mut input_tx);
+    ctx.apply_wait_rx(&mut input_rx);
 
     // Master thread id first: pinning stays master-then-workers.
     let master_tid = ctx.alloc_thread();
@@ -261,7 +272,9 @@ where
     let mut worker_txs: Vec<Sender<M::Task>> = Vec::with_capacity(nworkers);
     let mut fb_rxs: Vec<Receiver<M::Result>> = Vec::with_capacity(nworkers);
     for (wi, skel) in workers.into_iter().enumerate() {
-        let (fb_tx, fb_rx) = stream::<M::Result>(cfg.out_cap);
+        let (mut fb_tx, mut fb_rx) = stream::<M::Result>(cfg.out_cap);
+        ctx.apply_wait_tx(&mut fb_tx);
+        ctx.apply_wait_rx(&mut fb_rx);
         fb_rxs.push(fb_rx);
         ctx.set_in_cap(wcap);
         worker_txs.push(skel.wire_named(&format!("worker-{wi}"), OutTarget::Chan(fb_tx), ctx));
@@ -393,6 +406,17 @@ where
                         }
                         if progressed {
                             backoff.reset();
+                        } else if wait.wants_park(&mut backoff) {
+                            // Nothing on the input or any feedback lane:
+                            // park until an offload or a worker result
+                            // rings one of the doorbells.
+                            let mut bells: Vec<&Doorbell> = Vec::with_capacity(fb.len() + 1);
+                            bells.push(input_rx.data_bell());
+                            bells.extend(fb.iter().map(|rx| rx.data_bell()));
+                            wait.park_any(&bells, || {
+                                !input_rx.has_next()
+                                    && !fb.iter().any(|rx| rx.has_next())
+                            });
                         } else {
                             backoff.snooze();
                         }
@@ -428,6 +452,14 @@ where
                         }
                         if progressed {
                             backoff.reset();
+                        } else if wait.wants_park(&mut backoff) {
+                            let bells: Vec<&Doorbell> =
+                                fb.iter().map(|rx| rx.data_bell()).collect();
+                            wait.park_any(&bells, || {
+                                !fb.iter().enumerate().any(|(w, rx)| {
+                                    !seen[w] && (rx.has_next() || !rx.peer_alive())
+                                })
+                            });
                         } else {
                             backoff.snooze();
                         }
@@ -442,6 +474,7 @@ where
             .expect("spawn master"),
     );
 
+    (ctx.wait, ctx.park_grace) = saved_wait;
     input_tx
 }
 

@@ -50,6 +50,7 @@ use crate::node::{Node, OutTarget, RunMode, Svc};
 use crate::skeleton::builder::{launch_with_ctx, seq, Skeleton, WireCtx};
 use crate::skeleton::LaunchedSkeleton;
 use crate::trace::NodeTrace;
+use crate::util::WaitMode;
 use crate::DEFAULT_QUEUE_CAP;
 
 /// Task-scheduling policy applied by the emitter (paper §3.2:
@@ -80,6 +81,14 @@ pub struct FarmConfig {
     pub out_cap: usize,
     pub mapping: crate::sched::MappingPolicy,
     pub explicit_cores: Vec<usize>,
+    /// Waiting discipline for every thread of this farm (see
+    /// [`WaitMode`]): `Spin` (default) is the paper's non-blocking
+    /// runtime; `Adaptive`/`Park` let idle emitter/worker/collector
+    /// threads release their CPUs by parking on the stream doorbells.
+    pub wait: WaitMode,
+    /// Idle time a wait must persist before the first park (elasticity
+    /// grace; zero = park as soon as the spin budget runs out).
+    pub park_grace: std::time::Duration,
 }
 
 impl Default for FarmConfig {
@@ -93,6 +102,8 @@ impl Default for FarmConfig {
             out_cap: DEFAULT_QUEUE_CAP,
             mapping: crate::sched::MappingPolicy::None,
             explicit_cores: vec![],
+            wait: WaitMode::Spin,
+            park_grace: std::time::Duration::ZERO,
         }
     }
 }
@@ -130,6 +141,19 @@ impl FarmConfig {
     #[must_use]
     pub fn mapping(mut self, m: crate::sched::MappingPolicy) -> Self {
         self.mapping = m;
+        self
+    }
+    /// Waiting discipline for the farm's threads (see [`WaitMode`]).
+    #[must_use]
+    pub fn wait(mut self, mode: WaitMode) -> Self {
+        self.wait = mode;
+        self
+    }
+    /// Idle time before the first park of a wait episode (only
+    /// meaningful with [`WaitMode::Adaptive`] / [`WaitMode::Park`]).
+    #[must_use]
+    pub fn park_grace(mut self, grace: std::time::Duration) -> Self {
+        self.park_grace = grace;
         self
     }
 
@@ -356,17 +380,29 @@ where
     let has_collector = out_target.is_some();
     let ordered = cfg.ordering == CollectorOrdering::Ordered && has_collector;
 
+    // Waiting discipline for this farm's subtree: the config meets the
+    // enclosing context and the more patient mode wins (restored at the
+    // end so sibling stages keep their own).
+    let saved_wait = (ctx.wait, ctx.park_grace);
+    ctx.wait = ctx.wait.max(cfg.wait);
+    if !cfg.park_grace.is_zero() {
+        ctx.park_grace = cfg.park_grace;
+    }
+    let wait = ctx.wait_cfg();
+
     // --- farm input stream (caller → emitter) --------------------------
     // Unbounded by default (FastFlow's accelerator input buffer):
     // `offload` never blocks the caller, removing the offload/drain
     // deadlock cycle. An enclosing worker slot may hint a short bounded
     // queue instead (on-demand dispatch).
     let in_cap = ctx.take_in_cap(cfg.in_cap);
-    let (input_tx, input_rx) = if in_cap == usize::MAX {
+    let (mut input_tx, mut input_rx) = if in_cap == usize::MAX {
         stream_unbounded::<I>()
     } else {
         stream::<I>(in_cap)
     };
+    ctx.apply_wait_tx(&mut input_tx);
+    ctx.apply_wait_rx(&mut input_rx);
 
     // --- emitter (thread id first: pinning stays front-to-back) --------
     let emitter_tid = ctx.alloc_thread();
@@ -380,7 +416,9 @@ where
     let mut collector_rxs: Vec<Receiver<Seq<O>>> = Vec::with_capacity(nworkers);
     for (wi, skel) in workers.into_iter().enumerate() {
         let wout = if has_collector {
-            let (tx, rx) = stream::<Seq<O>>(cfg.out_cap);
+            let (mut tx, mut rx) = stream::<Seq<O>>(cfg.out_cap);
+            ctx.apply_wait_tx(&mut tx);
+            ctx.apply_wait_rx(&mut rx);
             collector_rxs.push(rx);
             OutTarget::Chan(tx)
         } else {
@@ -402,6 +440,7 @@ where
             ctx.lifecycle.clone(),
             trace,
             ctx.cpu_map.core_for(tid),
+            wait.clone(),
         ));
     }
 
@@ -412,8 +451,10 @@ where
         ctx.lifecycle.clone(),
         emitter_trace,
         ctx.cpu_map.core_for(emitter_tid),
+        wait,
     ));
 
+    (ctx.wait, ctx.park_grace) = saved_wait;
     input_tx
 }
 

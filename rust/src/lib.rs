@@ -96,8 +96,9 @@ pub mod prelude {
     };
     pub use crate::node::{node_fn, Node, Outbox, RunMode, Svc};
     pub use crate::skeleton::{
-        seq, seq_fn, LaunchedSkeleton, SeqNode, Skeleton, SkeletonHandle, Then,
+        seq, seq_fn, LaunchedSkeleton, SeqNode, Skeleton, SkeletonHandle, Then, WithWait,
     };
+    pub use crate::util::WaitMode;
 }
 
 /// Library version (mirrors `Cargo.toml`).

@@ -124,13 +124,30 @@ impl Table {
         out
     }
 
-    /// Render as CSV (for plotting).
+    /// Render as CSV (for plotting). Cells are RFC-4180-escaped (quoted
+    /// when they contain a comma, quote or newline); non-finite float
+    /// markers (`NaN`/`inf` as rendered by Rust's formatter) become
+    /// empty cells, the conventional CSV null — plotting tools otherwise
+    /// read them as strings and poison whole numeric columns.
     pub fn to_csv(&self) -> String {
+        fn csv_cell(cell: &str) -> String {
+            if crate::benchkit::is_non_finite_marker(cell) {
+                return String::new();
+            }
+            if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+                format!("\"{}\"", cell.replace('"', "\"\""))
+            } else {
+                cell.to_string()
+            }
+        }
         let mut out = String::new();
-        out.push_str(&self.header.join(","));
+        let fmt = |cells: &[String]| -> String {
+            cells.iter().map(|c| csv_cell(c)).collect::<Vec<_>>().join(",")
+        };
+        out.push_str(&fmt(&self.header));
         out.push('\n');
         for row in &self.rows {
-            out.push_str(&row.join(","));
+            out.push_str(&fmt(row));
             out.push('\n');
         }
         out
@@ -189,5 +206,18 @@ mod tests {
     fn table_rejects_bad_rows() {
         let mut t = Table::new(&["a"]);
         t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn csv_escapes_and_blanks_non_finite() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["with,comma".into(), format!("{:.1}", f64::NAN)]);
+        t.row(vec!["with\"quote".into(), format!("{:.1}", f64::INFINITY)]);
+        t.row(vec!["plain".into(), "2.5".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"with,comma\","), "comma cell quoted");
+        assert!(csv.contains("\"with\"\"quote\","), "quote cell doubled");
+        assert!(csv.contains("plain,2.5"));
+        assert!(!csv.contains("NaN") && !csv.contains("inf"));
     }
 }

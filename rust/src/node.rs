@@ -1,10 +1,16 @@
 //! Skeleton nodes and their lifecycle — the FastFlow `ff_node` analogue.
 //!
 //! A [`Node`] is a sequential filter with `svc_init` / `svc` / `svc_end`
-//! hooks, executed by a dedicated thread that spins (never blocks in the
-//! OS while *running* — the paper: non-blocking threads "fully load the
-//! cores in which they are placed") and parks only when the skeleton is
-//! *frozen*.
+//! hooks, executed by a dedicated thread that, by default, spins (never
+//! blocks in the OS while *running* — the paper: non-blocking threads
+//! "fully load the cores in which they are placed") and parks only when
+//! the skeleton is *frozen*. Under
+//! [`WaitMode::Adaptive`](crate::util::WaitMode) /
+//! [`WaitMode::Park`](crate::util::WaitMode) (configured on the
+//! skeleton/farm/pool that wires the node), the node's blocking `recv`
+//! and backpressured sends additionally escalate to doorbell parks once
+//! their spin budget runs out, so an *idle* (not just frozen) node
+//! releases its CPU — the tutorial's blocking concurrency control.
 //!
 //! The accelerator lifecycle (§3) is implemented by [`Lifecycle`]:
 //!

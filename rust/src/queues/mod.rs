@@ -12,7 +12,7 @@
 use std::thread::JoinHandle;
 
 use crate::channel::{stream, Msg, Receiver, Sender};
-use crate::util::Backoff;
+use crate::util::{Backoff, Doorbell, WaitCfg, WaitMode};
 use crate::DEFAULT_QUEUE_CAP;
 
 /// Round-robin with skip-if-full routing of one frame to some consumer
@@ -26,11 +26,14 @@ use crate::DEFAULT_QUEUE_CAP;
 /// regression `spmc_all_consumers_gone_poisons_producer` covers it).
 /// When **no** live consumer remains the frame is handed back via
 /// `Err`, and the calling arbiter exits — poisoning the producer-side
-/// stream, whose sends then report `Disconnected`.
+/// stream, whose sends then report `Disconnected`. The all-full wait
+/// rides the spin→yield→park escalation, parking on *any* consumer's
+/// space doorbell.
 fn route_skip_full<T: Send>(
     outs: &mut [Sender<T>],
     next: &mut usize,
     mut frame: T,
+    wait: &WaitCfg,
 ) -> Result<(), T> {
     let n = outs.len();
     let mut backoff = Backoff::new();
@@ -53,7 +56,14 @@ fn route_skip_full<T: Send>(
         if !any_alive {
             return Err(frame);
         }
-        backoff.snooze();
+        if wait.wants_park(&mut backoff) {
+            let bells: Vec<&Doorbell> = outs.iter().filter_map(|o| o.space_bell()).collect();
+            wait.park_any(&bells, || {
+                outs.iter().all(|o| !o.peer_alive() || o.is_full())
+            });
+        } else {
+            backoff.snooze();
+        }
     }
 }
 
@@ -66,12 +76,31 @@ pub fn spmc<T: Send + 'static>(
     consumers: usize,
     cap: usize,
 ) -> (Sender<T>, Vec<Receiver<T>>, JoinHandle<()>) {
+    spmc_with(consumers, cap, WaitMode::Spin)
+}
+
+/// [`spmc`] with an explicit [`WaitMode`]: the arbiter (and the handed-
+/// out endpoints) escalate idle waits to doorbell parks instead of
+/// spinning forever.
+pub fn spmc_with<T: Send + 'static>(
+    consumers: usize,
+    cap: usize,
+    mode: WaitMode,
+) -> (Sender<T>, Vec<Receiver<T>>, JoinHandle<()>) {
     assert!(consumers >= 1);
-    let (tx_in, mut rx_in) = stream::<T>(cap);
+    let wait = WaitCfg {
+        mode,
+        ..WaitCfg::spin()
+    };
+    let (mut tx_in, mut rx_in) = stream::<T>(cap);
+    tx_in.set_wait(mode);
+    rx_in.set_wait(mode);
     let mut outs = Vec::with_capacity(consumers);
     let mut rxs = Vec::with_capacity(consumers);
     for _ in 0..consumers {
-        let (tx, rx) = stream::<T>(cap);
+        let (mut tx, mut rx) = stream::<T>(cap);
+        tx.set_wait(mode);
+        rx.set_wait(mode);
         outs.push(tx);
         rxs.push(rx);
     }
@@ -82,14 +111,14 @@ pub fn spmc<T: Send + 'static>(
             loop {
                 match rx_in.recv() {
                     Msg::Task(t) => {
-                        if route_skip_full(&mut outs, &mut next, t).is_err() {
+                        if route_skip_full(&mut outs, &mut next, t, &wait).is_err() {
                             break; // every consumer gone: poison the producer
                         }
                     }
                     Msg::Batch(ts) => {
                         let dead = rx_in.recycle_after(ts, |ts| {
                             for t in ts.drain(..) {
-                                if route_skip_full(&mut outs, &mut next, t).is_err() {
+                                if route_skip_full(&mut outs, &mut next, t, &wait).is_err() {
                                     return true;
                                 }
                             }
@@ -116,15 +145,33 @@ pub fn mpsc<T: Send + 'static>(
     producers: usize,
     cap: usize,
 ) -> (Vec<Sender<T>>, Receiver<T>, JoinHandle<()>) {
+    mpsc_with(producers, cap, WaitMode::Spin)
+}
+
+/// [`mpsc`] with an explicit [`WaitMode`]: the merge arbiter parks on
+/// any producer lane's data doorbell when every lane is empty.
+pub fn mpsc_with<T: Send + 'static>(
+    producers: usize,
+    cap: usize,
+    mode: WaitMode,
+) -> (Vec<Sender<T>>, Receiver<T>, JoinHandle<()>) {
     assert!(producers >= 1);
+    let wait = WaitCfg {
+        mode,
+        ..WaitCfg::spin()
+    };
     let mut ins = Vec::with_capacity(producers);
     let mut rxs = Vec::with_capacity(producers);
     for _ in 0..producers {
-        let (tx, rx) = stream::<T>(cap);
+        let (mut tx, mut rx) = stream::<T>(cap);
+        tx.set_wait(mode);
+        rx.set_wait(mode);
         ins.push(tx);
         rxs.push(rx);
     }
-    let (mut tx_out, rx_out) = stream::<T>(cap);
+    let (mut tx_out, mut rx_out) = stream::<T>(cap);
+    tx_out.set_wait(mode);
+    rx_out.set_wait(mode);
     let arbiter = std::thread::Builder::new()
         .name("ff-mpsc-arbiter".into())
         .spawn(move || {
@@ -175,6 +222,13 @@ pub fn mpsc<T: Send + 'static>(
                 }
                 if progressed {
                     backoff.reset();
+                } else if wait.wants_park(&mut backoff) {
+                    let bells: Vec<&Doorbell> = rxs.iter().map(|rx| rx.data_bell()).collect();
+                    wait.park_any(&bells, || {
+                        !rxs.iter().enumerate().any(|(i, rx)| {
+                            !eos[i] && (rx.has_next() || !rx.peer_alive())
+                        })
+                    });
                 } else {
                     backoff.snooze();
                 }
@@ -192,18 +246,37 @@ pub fn mpmc<T: Send + 'static>(
     consumers: usize,
     cap: usize,
 ) -> (Vec<Sender<T>>, Vec<Receiver<T>>, JoinHandle<()>) {
+    mpmc_with(producers, consumers, cap, WaitMode::Spin)
+}
+
+/// [`mpmc`] with an explicit [`WaitMode`] for the CE arbiter and the
+/// handed-out endpoints.
+pub fn mpmc_with<T: Send + 'static>(
+    producers: usize,
+    consumers: usize,
+    cap: usize,
+    mode: WaitMode,
+) -> (Vec<Sender<T>>, Vec<Receiver<T>>, JoinHandle<()>) {
     assert!(producers >= 1 && consumers >= 1);
+    let wait = WaitCfg {
+        mode,
+        ..WaitCfg::spin()
+    };
     let mut ins = Vec::with_capacity(producers);
     let mut in_rxs = Vec::with_capacity(producers);
     for _ in 0..producers {
-        let (tx, rx) = stream::<T>(cap);
+        let (mut tx, mut rx) = stream::<T>(cap);
+        tx.set_wait(mode);
+        rx.set_wait(mode);
         ins.push(tx);
         in_rxs.push(rx);
     }
     let mut outs = Vec::with_capacity(consumers);
     let mut out_rxs = Vec::with_capacity(consumers);
     for _ in 0..consumers {
-        let (tx, rx) = stream::<T>(cap);
+        let (mut tx, mut rx) = stream::<T>(cap);
+        tx.set_wait(mode);
+        rx.set_wait(mode);
         outs.push(tx);
         out_rxs.push(rx);
     }
@@ -224,7 +297,7 @@ pub fn mpmc<T: Send + 'static>(
                     match in_rxs[i].try_recv() {
                         Some(Msg::Task(t)) => {
                             progressed = true;
-                            if route_skip_full(&mut outs, &mut next, t).is_err() {
+                            if route_skip_full(&mut outs, &mut next, t, &wait).is_err() {
                                 break 'cycle; // all consumers gone
                             }
                         }
@@ -232,7 +305,7 @@ pub fn mpmc<T: Send + 'static>(
                             progressed = true;
                             let dead = in_rxs[i].recycle_after(ts, |ts| {
                                 for t in ts.drain(..) {
-                                    if route_skip_full(&mut outs, &mut next, t).is_err() {
+                                    if route_skip_full(&mut outs, &mut next, t, &wait).is_err() {
                                         return true;
                                     }
                                 }
@@ -259,6 +332,14 @@ pub fn mpmc<T: Send + 'static>(
                 }
                 if progressed {
                     backoff.reset();
+                } else if wait.wants_park(&mut backoff) {
+                    let bells: Vec<&Doorbell> =
+                        in_rxs.iter().map(|rx| rx.data_bell()).collect();
+                    wait.park_any(&bells, || {
+                        !in_rxs.iter().enumerate().any(|(i, rx)| {
+                            !eos[i] && (rx.has_next() || !rx.peer_alive())
+                        })
+                    });
                 } else {
                     backoff.snooze();
                 }
@@ -397,6 +478,57 @@ mod tests {
         assert_eq!(all.len(), 800);
         all.dedup();
         assert_eq!(all.len(), 800);
+    }
+
+    #[test]
+    fn park_mode_arbiters_conserve_messages() {
+        // The doorbell-parking arbiters must behave exactly like the
+        // spinning ones: nothing lost, nothing duplicated, EOS fans out.
+        let (mut tx, rxs, arbiter) = spmc_with::<u64>(3, 8, crate::util::WaitMode::Park);
+        let consumers: Vec<_> = rxs
+            .into_iter()
+            .map(|mut rx| {
+                std::thread::spawn(move || {
+                    // Slow consumers force the producer + arbiter to park.
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    drain_all(&mut rx)
+                })
+            })
+            .collect();
+        for i in 0..900u64 {
+            tx.send(i).unwrap();
+        }
+        tx.send_eos().unwrap();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        arbiter.join().unwrap();
+        all.sort_unstable();
+        assert_eq!(all, (0..900).collect::<Vec<_>>());
+
+        let (txs, mut rx, arbiter) = mpsc_with::<u64>(2, 8, crate::util::WaitMode::Park);
+        let producers: Vec<_> = txs
+            .into_iter()
+            .enumerate()
+            .map(|(p, mut tx)| {
+                std::thread::spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    for i in 0..400u64 {
+                        tx.send(p as u64 * 1000 + i).unwrap();
+                    }
+                    tx.send_eos().unwrap();
+                })
+            })
+            .collect();
+        let mut got = drain_all(&mut rx);
+        for h in producers {
+            h.join().unwrap();
+        }
+        arbiter.join().unwrap();
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), 800);
     }
 
     #[test]

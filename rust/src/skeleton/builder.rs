@@ -43,6 +43,8 @@ use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use std::time::Duration;
+
 use crate::accel::Accel;
 use crate::channel::{stream, stream_unbounded, Receiver, Sender};
 use crate::node::{node_fn, FnNode, Lifecycle, Node, NodeRunner, OutTarget, Outbox, RunMode, Svc};
@@ -50,6 +52,7 @@ use crate::sched::{CpuMap, MappingPolicy};
 use crate::skeleton::LaunchedSkeleton;
 use crate::spsc::{unbounded_spsc, UnboundedConsumer, UnboundedProducer};
 use crate::trace::NodeTrace;
+use crate::util::{ParkGauge, WaitCfg, WaitMode};
 use crate::DEFAULT_QUEUE_CAP;
 
 /// Wiring context threaded through skeleton construction: the shared
@@ -75,6 +78,15 @@ pub struct WireCtx<'a> {
     /// farm/feedback input) creates — how enclosing combinators impose
     /// short queues on worker slots (on-demand scheduling).
     pub(crate) in_cap_hint: Option<usize>,
+    /// Waiting discipline for the subtree being wired (combinators
+    /// save/override/restore; the more patient mode wins — see
+    /// [`WaitMode`]).
+    pub(crate) wait: WaitMode,
+    /// Idle time before the first park of a wait episode (elasticity
+    /// grace).
+    pub(crate) park_grace: Duration,
+    /// Gauge of threads currently parked on this launch's doorbells.
+    pub(crate) park_gauge: &'a Arc<ParkGauge>,
 }
 
 impl<'a> WireCtx<'a> {
@@ -105,6 +117,41 @@ impl<'a> WireCtx<'a> {
     pub(crate) fn set_in_cap(&mut self, cap: usize) {
         self.in_cap_hint = Some(cap);
     }
+
+    /// Apply the subtree's waiting discipline to a receiving endpoint
+    /// (no-op under [`WaitMode::Spin`], keeping the default bit-identical
+    /// to the pre-parking runtime).
+    pub(crate) fn apply_wait_rx<T: Send + 'static>(&self, rx: &mut Receiver<T>) {
+        if self.wait != WaitMode::Spin {
+            rx.set_wait(self.wait);
+            rx.set_park_grace(self.park_grace);
+            rx.set_park_gauge(self.park_gauge.clone());
+        }
+    }
+
+    /// Apply the subtree's waiting discipline to a sending endpoint
+    /// (parks on full bounded queues).
+    pub(crate) fn apply_wait_tx<T: Send + 'static>(&self, tx: &mut Sender<T>) {
+        if self.wait != WaitMode::Spin {
+            tx.set_wait(self.wait);
+            tx.set_park_grace(self.park_grace);
+            tx.set_park_gauge(self.park_gauge.clone());
+        }
+    }
+
+    /// The subtree's waiting discipline as a [`WaitCfg`] — for arbiter
+    /// threads whose waits span multiple queues.
+    pub(crate) fn wait_cfg(&self) -> WaitCfg {
+        WaitCfg {
+            mode: self.wait,
+            grace: self.park_grace,
+            gauge: if self.wait == WaitMode::Spin {
+                None
+            } else {
+                Some(self.park_gauge.clone())
+            },
+        }
+    }
 }
 
 /// Run `f` with a fresh wiring context for a `total`-thread skeleton and
@@ -124,6 +171,7 @@ where
     let lifecycle = Lifecycle::new(total, mode);
     let cpu_map = CpuMap::build(mapping, total, cores);
     let poison = Arc::new(AtomicBool::new(false));
+    let park_gauge = Arc::new(ParkGauge::new());
     let mut joins = Vec::with_capacity(total);
     let mut traces = Vec::with_capacity(total);
     let (input, output) = {
@@ -137,6 +185,9 @@ where
             stage_idx: 0,
             prefix: String::new(),
             in_cap_hint: None,
+            wait: WaitMode::Spin,
+            park_grace: Duration::ZERO,
+            park_gauge: &park_gauge,
         };
         f(&mut ctx)
     };
@@ -147,6 +198,7 @@ where
         joins,
         traces,
         poison,
+        park_gauge,
     }
 }
 
@@ -229,7 +281,9 @@ where
         let after_slot = ctx.next_thread;
 
         // Egress: O → (tag, O), reattaching tags in FIFO order.
-        let (egress_tx, egress_rx) = stream::<O>(out_cap.max(1));
+        let (mut egress_tx, mut egress_rx) = stream::<O>(out_cap.max(1));
+        ctx.apply_wait_tx(&mut egress_tx);
+        ctx.apply_wait_rx(&mut egress_rx);
         let egress_trace = NodeTrace::new();
         ctx.traces.push((format!("{worker_name}/out"), egress_trace.clone()));
         ctx.joins.push(
@@ -259,7 +313,9 @@ where
         ctx.next_thread = after_slot;
 
         // Ingress: (tag, I) → I, banking tags for the egress.
-        let (in_tx, in_rx) = stream::<(u64, I)>(in_cap.max(1));
+        let (mut in_tx, mut in_rx) = stream::<(u64, I)>(in_cap.max(1));
+        ctx.apply_wait_tx(&mut in_tx);
+        ctx.apply_wait_rx(&mut in_rx);
         let ingress_trace = NodeTrace::new();
         ctx.traces.push((format!("{worker_name}/in"), ingress_trace.clone()));
         ctx.joins.push(
@@ -291,6 +347,20 @@ where
             first: self,
             second: next,
             _pd: PhantomData,
+        }
+    }
+
+    /// Set the waiting discipline for this subtree (see [`WaitMode`]):
+    /// every stream wired beneath gets the spin→yield→park escalation.
+    /// When the subtree is nested inside an enclosing skeleton with its
+    /// own mode, the more patient one wins. Chain
+    /// [`WithWait::park_grace`] for an idle-grace period.
+    #[must_use = "skeletons are blueprints: nothing runs until launch"]
+    fn wait_mode(self, mode: WaitMode) -> WithWait<Self> {
+        WithWait {
+            inner: self,
+            mode,
+            grace: Duration::ZERO,
         }
     }
 
@@ -344,6 +414,83 @@ where
     }
 }
 
+/// A skeleton wrapped with a waiting discipline — build with
+/// [`Skeleton::wait_mode`]. Transparent for threads/topology; it only
+/// overrides the [`WaitMode`] (and optionally the park grace) the
+/// subtree's streams are wired with.
+#[must_use = "skeletons are blueprints: nothing runs until launch"]
+pub struct WithWait<S> {
+    inner: S,
+    mode: WaitMode,
+    grace: Duration,
+}
+
+impl<S> WithWait<S> {
+    /// Idle time a wait must persist before the first park (the
+    /// elasticity grace; zero = park as soon as the budget runs out).
+    pub fn park_grace(mut self, grace: Duration) -> Self {
+        self.grace = grace;
+        self
+    }
+}
+
+impl<S> WithWait<S> {
+    fn apply(&self, ctx: &mut WireCtx<'_>) -> (WaitMode, Duration) {
+        let saved = (ctx.wait, ctx.park_grace);
+        ctx.wait = ctx.wait.max(self.mode);
+        if !self.grace.is_zero() {
+            ctx.park_grace = self.grace;
+        }
+        saved
+    }
+}
+
+impl<I, O, S> Skeleton<I, O> for WithWait<S>
+where
+    I: Send + 'static,
+    O: Send + 'static,
+    S: Skeleton<I, O>,
+{
+    fn thread_count(&self) -> usize {
+        self.inner.thread_count()
+    }
+
+    fn wire(self, out: OutTarget<O>, ctx: &mut WireCtx<'_>) -> Sender<I> {
+        let saved = self.apply(ctx);
+        let tx = self.inner.wire(out, ctx);
+        (ctx.wait, ctx.park_grace) = saved;
+        tx
+    }
+
+    fn wire_named(self, name: &str, out: OutTarget<O>, ctx: &mut WireCtx<'_>) -> Sender<I> {
+        let saved = self.apply(ctx);
+        let tx = self.inner.wire_named(name, out, ctx);
+        (ctx.wait, ctx.park_grace) = saved;
+        tx
+    }
+
+    fn worker_threads(&self) -> usize {
+        self.inner.worker_threads()
+    }
+
+    fn wire_worker(
+        self,
+        out: OutTarget<(u64, O)>,
+        ordered: bool,
+        in_cap: usize,
+        out_cap: usize,
+        slot: usize,
+        ctx: &mut WireCtx<'_>,
+    ) -> Sender<(u64, I)> {
+        let saved = self.apply(ctx);
+        let tx = self
+            .inner
+            .wire_worker(out, ordered, in_cap, out_cap, slot, ctx);
+        (ctx.wait, ctx.park_grace) = saved;
+        tx
+    }
+}
+
 /// A single [`Node`] as a skeleton leaf. Build with [`seq`] / [`seq_fn`].
 #[must_use = "skeletons are blueprints: nothing runs until launch"]
 pub struct SeqNode<N> {
@@ -391,7 +538,9 @@ impl<N> SeqNode<N> {
         N: Node<In = I, Out = O> + 'static,
     {
         let cap = ctx.take_in_cap(self.cap);
-        let (tx, rx) = stream::<I>(cap);
+        let (mut tx, mut rx) = stream::<I>(cap);
+        ctx.apply_wait_tx(&mut tx);
+        ctx.apply_wait_rx(&mut rx);
         let trace = NodeTrace::new();
         ctx.traces.push((name.clone(), trace.clone()));
         let tid = ctx.alloc_thread();
@@ -447,7 +596,9 @@ impl<N: Node + 'static> Skeleton<N::In, N::Out> for SeqNode<N> {
         slot: usize,
         ctx: &mut WireCtx<'_>,
     ) -> Sender<(u64, N::In)> {
-        let (tx, rx) = stream::<(u64, N::In)>(in_cap.max(1));
+        let (mut tx, mut rx) = stream::<(u64, N::In)>(in_cap.max(1));
+        ctx.apply_wait_tx(&mut tx);
+        ctx.apply_wait_rx(&mut rx);
         let trace = NodeTrace::new();
         let name = ctx.name(&format!("worker-{slot}"));
         ctx.traces.push((name.clone(), trace.clone()));
@@ -693,6 +844,46 @@ mod tests {
         acc.offload_eos();
         while acc.load_result().is_some() {}
         assert!(acc.poisoned(), "arity violation must poison");
+        acc.wait();
+    }
+
+    #[test]
+    fn with_wait_wrapper_is_transparent() {
+        // `.wait_mode(..)` changes only the waiting discipline: thread
+        // counts, worker-slot costs and results are untouched.
+        let skel = seq_fn(|x: u64| x + 1)
+            .then(seq_fn(|x: u64| x * 2))
+            .wait_mode(WaitMode::Park);
+        assert_eq!(skel.thread_count(), 2);
+        let mut acc = skel.into_accel();
+        for i in 0..100u64 {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = acc.load_result() {
+            got.push(v);
+        }
+        assert_eq!(got, (0..100u64).map(|x| (x + 1) * 2).collect::<Vec<_>>());
+        acc.wait();
+
+        // A wrapped leaf keeps the zero-adapter worker slot.
+        let wrapped_leaf = seq_fn(|x: u64| x).wait_mode(WaitMode::Park);
+        assert_eq!(wrapped_leaf.worker_threads(), 1);
+        let f = farm(FarmConfig::default().workers(2).ordered(), |_| {
+            seq_fn(|x: u64| x * 5).wait_mode(WaitMode::Park)
+        });
+        assert_eq!(f.thread_count(), 4, "emitter + 2 leaf workers + collector");
+        let mut acc = f.into_accel();
+        for i in 0..50u64 {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = acc.load_result() {
+            got.push(v);
+        }
+        assert_eq!(got, (0..50u64).map(|x| x * 5).collect::<Vec<_>>());
         acc.wait();
     }
 

@@ -19,7 +19,7 @@
 
 pub mod builder;
 
-pub use builder::{seq, seq_fn, SeqNode, Skeleton, Then, WireCtx};
+pub use builder::{seq, seq_fn, SeqNode, Skeleton, Then, WireCtx, WithWait};
 // The farm-shaped combinators live next to their wiring but belong to
 // the same algebra; re-export them so `skeleton::{farm, feedback}` is
 // the one-stop composition surface.
@@ -33,6 +33,7 @@ use std::thread::JoinHandle;
 use crate::channel::{Receiver, Sender};
 use crate::node::Lifecycle;
 use crate::trace::{NodeTrace, TraceReport};
+use crate::util::ParkGauge;
 
 /// A running skeleton: the concurrent counterpart of a FastFlow
 /// `ff_farm`/`ff_pipeline` object after `run()`.
@@ -50,6 +51,11 @@ pub struct LaunchedSkeleton<I: Send + 'static, O: Send + 'static> {
     /// still drains cleanly; the offload side surfaces the flag as
     /// [`crate::accel::AccelError::Disconnected`].
     pub poison: Arc<AtomicBool>,
+    /// Gauge of this skeleton's threads currently parked on stream
+    /// doorbells (nonzero only under `WaitMode::{Adaptive,Park}` — see
+    /// [`crate::util::WaitMode`]). Frozen threads sit in the lifecycle
+    /// condvar instead and are *not* counted here.
+    pub park_gauge: Arc<ParkGauge>,
 }
 
 /// The non-stream remainder of a skeleton after [`LaunchedSkeleton::split`]:
@@ -57,6 +63,8 @@ pub struct LaunchedSkeleton<I: Send + 'static, O: Send + 'static> {
 pub struct SkeletonHandle {
     pub lifecycle: Arc<Lifecycle>,
     pub poison: Arc<AtomicBool>,
+    /// See [`LaunchedSkeleton::park_gauge`].
+    pub park_gauge: Arc<ParkGauge>,
     joins: Vec<JoinHandle<()>>,
     traces: Vec<(String, Arc<NodeTrace>)>,
 }
@@ -91,6 +99,12 @@ impl SkeletonHandle {
     pub fn poisoned(&self) -> bool {
         self.poison.load(Ordering::Acquire)
     }
+
+    /// Threads of this skeleton currently parked on stream doorbells
+    /// (a racy snapshot; see [`LaunchedSkeleton::park_gauge`]).
+    pub fn parked_now(&self) -> usize {
+        self.park_gauge.parked_now()
+    }
 }
 
 impl<I: Send + 'static, O: Send + 'static> LaunchedSkeleton<I, O> {
@@ -103,6 +117,7 @@ impl<I: Send + 'static, O: Send + 'static> LaunchedSkeleton<I, O> {
             SkeletonHandle {
                 lifecycle: self.lifecycle,
                 poison: self.poison,
+                park_gauge: self.park_gauge,
                 joins: self.joins,
                 traces: self.traces,
             },
@@ -112,6 +127,12 @@ impl<I: Send + 'static, O: Send + 'static> LaunchedSkeleton<I, O> {
     /// True if some node raised the poison flag (see [`Self::poison`]).
     pub fn poisoned(&self) -> bool {
         self.poison.load(Ordering::Acquire)
+    }
+
+    /// Threads of this skeleton currently parked on stream doorbells
+    /// (a racy snapshot; see [`Self::park_gauge`]).
+    pub fn parked_now(&self) -> usize {
+        self.park_gauge.parked_now()
     }
 
     /// Join all threads, returning the final trace report.

@@ -14,11 +14,24 @@
 
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::Full;
-use crate::util::{Backoff, CachePadded};
+use crate::util::{Backoff, CachePadded, Doorbell, ParkGauge, WaitMode};
+
+/// Process-wide count of multipush frames a dropping producer had to
+/// abandon because its consumer was *gone* (a live consumer is waited
+/// out — see [`Producer::drop`]). Surfaced so lost work is observable
+/// in allocation/trace audits instead of silently vanishing.
+static LOST_FRAMES: AtomicU64 = AtomicU64::new(0);
+
+/// Multipush frames abandoned at producer drop, process-wide (see
+/// [`LOST_FRAMES`]). Monotonic; sample before/after to attribute.
+pub fn lost_frames() -> u64 {
+    LOST_FRAMES.load(Ordering::Relaxed)
+}
 
 /// One ring slot: occupancy flag + storage.
 struct Slot<T> {
@@ -43,6 +56,13 @@ struct Ring<T> {
     /// the other side can detect disconnection.
     producer_alive: CachePadded<AtomicBool>,
     consumer_alive: CachePadded<AtomicBool>,
+    /// Rung by the producer (push / burst flush / disconnect); the
+    /// consumer parks here under `WaitMode::{Adaptive,Park}`. Inert (one
+    /// relaxed load per ring) until a waiter arms it.
+    data_bell: CachePadded<Doorbell>,
+    /// Rung by the consumer (pop / disconnect); the producer parks here
+    /// when the ring is full.
+    space_bell: CachePadded<Doorbell>,
 }
 
 // SAFETY: Slot values are transferred with Release/Acquire handshakes on
@@ -63,6 +83,12 @@ pub struct Producer<T> {
     mbuf: Vec<T>,
     /// Burst width; `1` disables buffering (every push is immediate).
     mburst: usize,
+    /// How this side's blocking waits behave past the spin budget.
+    wait: WaitMode,
+    /// Idle time required before the first park of a wait episode.
+    park_grace: Duration,
+    /// Optional parked-thread gauge (per launched skeleton).
+    gauge: Option<Arc<ParkGauge>>,
 }
 
 /// Consumer half. `!Sync`: exactly one thread may pop.
@@ -71,6 +97,12 @@ pub struct Consumer<T> {
     /// Local read index — never shared.
     pread: usize,
     cap: usize,
+    /// How this side's blocking waits behave past the spin budget.
+    wait: WaitMode,
+    /// Idle time required before the first park of a wait episode.
+    park_grace: Duration,
+    /// Optional parked-thread gauge (per launched skeleton).
+    gauge: Option<Arc<ParkGauge>>,
 }
 
 /// Create a bounded SPSC queue with room for `cap` elements (`cap >= 1`).
@@ -81,6 +113,8 @@ pub fn spsc<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
         slots,
         producer_alive: CachePadded::new(AtomicBool::new(true)),
         consumer_alive: CachePadded::new(AtomicBool::new(true)),
+        data_bell: CachePadded::new(Doorbell::new()),
+        space_bell: CachePadded::new(Doorbell::new()),
     });
     (
         Producer {
@@ -89,11 +123,17 @@ pub fn spsc<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
             cap,
             mbuf: Vec::new(),
             mburst: 1,
+            wait: WaitMode::Spin,
+            park_grace: Duration::ZERO,
+            gauge: None,
         },
         Consumer {
             ring,
             pread: 0,
             cap,
+            wait: WaitMode::Spin,
+            park_grace: Duration::ZERO,
+            gauge: None,
         },
     )
 }
@@ -124,12 +164,14 @@ impl<T: Send> Producer<T> {
         } else {
             self.pwrite + 1
         };
+        self.ring.data_bell.ring();
         Ok(())
     }
 
-    /// Blocking push with spin/yield backoff. Returns `Err(Full(v))` only
-    /// if the consumer disconnected (otherwise loops until room). Flushes
-    /// any staged multipush frames first so FIFO order holds.
+    /// Blocking push with the shared spin→yield→park escalation. Returns
+    /// `Err(Full(v))` only if the consumer disconnected (otherwise loops
+    /// until room). Flushes any staged multipush frames first so FIFO
+    /// order holds.
     #[inline]
     pub fn push(&mut self, mut value: T) -> Result<(), Full<T>> {
         if !self.mbuf.is_empty() && !self.flush() {
@@ -146,9 +188,23 @@ impl<T: Send> Producer<T> {
                         return Err(Full(v));
                     }
                     value = v;
-                    backoff.snooze();
+                    self.snooze_full(&mut backoff);
                 }
             }
+        }
+    }
+
+    /// One unit of waiting for ring space: snooze, or — once the
+    /// [`WaitMode`] budget is exhausted — park on the space doorbell
+    /// until the consumer frees a slot or disconnects.
+    #[inline]
+    pub fn snooze_full(&mut self, backoff: &mut Backoff) {
+        if backoff.should_park(self.wait, self.park_grace) {
+            self.ring.space_bell.park_while(self.gauge.as_deref(), || {
+                self.is_full() && self.ring.consumer_alive.load(Ordering::Acquire)
+            });
+        } else {
+            backoff.snooze();
         }
     }
 
@@ -160,8 +216,9 @@ impl<T: Send> Producer<T> {
     ///
     /// With `burst <= 1` this is exactly [`push`]. Errors with
     /// `Full(value)` only when the consumer is gone (the value is not
-    /// staged; previously staged values stay buffered and are dropped
-    /// with the producer).
+    /// staged; previously staged values stay buffered — if still
+    /// undeliverable when the producer drops they are counted into
+    /// [`lost_frames`]).
     ///
     /// [`flush`]: Producer::flush
     /// [`push`]: Producer::push
@@ -232,16 +289,78 @@ impl<T: Send> Producer<T> {
 // through `spsc<T: Send>`, so the transfer is still `Send`-checked.
 impl<T> Producer<T> {
     /// Set the multipush burst width for [`Producer::push_buffered`]
-    /// (clamped to `1..=capacity`; `1` disables buffering). Flushes any
+    /// (clamped to `1..capacity`; `1` disables buffering). Flushes any
     /// staged frames first so reconfiguration preserves order. Returns
     /// the effective width.
+    ///
+    /// The clamp stops strictly **below** the ring capacity: a burst of
+    /// exactly `cap` would make [`Producer::is_full`]'s staged arm
+    /// (`staged >= cap`) report permanently-full once the stage fills —
+    /// `cap` staged frames can never leave room for one more — and its
+    /// flush would need the ring *completely* empty, stalling behind any
+    /// in-flight slot. `cap - 1` is the widest burst that can always
+    /// make progress.
     pub fn set_burst(&mut self, burst: usize) -> usize {
         self.flush();
-        self.mburst = burst.clamp(1, self.cap);
+        let max = self.cap.saturating_sub(1).max(1);
+        self.mburst = burst.clamp(1, max);
         if self.mburst > 1 {
             self.mbuf.reserve(self.mburst);
         }
         self.mburst
+    }
+
+    /// How this producer's blocking waits behave once the spin budget
+    /// runs out (see [`WaitMode`]). Parking engages on the ring's space
+    /// doorbell, rung by every consumer pop.
+    pub fn set_wait(&mut self, mode: WaitMode) {
+        self.wait = mode;
+    }
+
+    /// Idle time required before the first park of a wait episode
+    /// (elasticity grace — see `AccelPool`'s idle-shard parking).
+    pub fn set_park_grace(&mut self, grace: Duration) {
+        self.park_grace = grace;
+    }
+
+    /// Attach a parked-thread gauge (per launched skeleton).
+    pub fn set_park_gauge(&mut self, gauge: Arc<ParkGauge>) {
+        self.gauge = Some(gauge);
+    }
+
+    /// Cumulative parks of this producer on the space doorbell.
+    pub fn parks(&self) -> u64 {
+        self.ring.space_bell.parks()
+    }
+
+    /// The doorbell a full-ring wait parks on (rung by consumer pops) —
+    /// for multi-queue waits such as the on-demand emitter.
+    pub fn space_bell(&self) -> &Doorbell {
+        &self.ring.space_bell
+    }
+
+    /// True while the staged burst cannot be written: the *last* slot of
+    /// the run is still occupied (the FastForward contiguity argument —
+    /// see [`Producer::try_flush`]). `T`-unbounded so drop-time waits can
+    /// use it.
+    fn flush_blocked(&self) -> bool {
+        let n = self.mbuf.len();
+        n > 0
+            && self.ring.slots[(self.pwrite + n - 1) % self.cap]
+                .full
+                .load(Ordering::Acquire)
+    }
+
+    /// Snooze-or-park while `still_blocked` holds, on the space
+    /// doorbell. Shared by the flush loop and the drop-time flush.
+    fn park_or_snooze(&self, backoff: &mut Backoff, still_blocked: impl Fn() -> bool) {
+        if backoff.should_park(self.wait, self.park_grace) {
+            self.ring
+                .space_bell
+                .park_while(self.gauge.as_deref(), still_blocked);
+        } else {
+            backoff.snooze();
+        }
     }
 
     /// Configured multipush burst width (`1` = disabled).
@@ -292,13 +411,15 @@ impl<T> Producer<T> {
             }
         }
         self.pwrite = (base + len) % cap;
+        self.ring.data_bell.ring();
         true
     }
 
-    /// Flush the staged multipush buffer, blocking with backoff until
-    /// the ring has room. Returns `false` if the consumer disconnected
-    /// first (the staged values stay buffered and are dropped with the
-    /// producer); `true` once the buffer is empty.
+    /// Flush the staged multipush buffer, blocking (spin → yield → park
+    /// per the configured [`WaitMode`]) until the ring has room. Returns
+    /// `false` if the consumer disconnected first (the staged values
+    /// stay buffered; a later drop counts them into [`lost_frames`] if
+    /// still undeliverable); `true` once the buffer is empty.
     pub fn flush(&mut self) -> bool {
         if self.mbuf.is_empty() {
             return true;
@@ -311,7 +432,9 @@ impl<T> Producer<T> {
             if !self.ring.consumer_alive.load(Ordering::Acquire) {
                 return false;
             }
-            backoff.snooze();
+            self.park_or_snooze(&mut backoff, || {
+                self.flush_blocked() && self.ring.consumer_alive.load(Ordering::Acquire)
+            });
         }
     }
 }
@@ -334,11 +457,12 @@ impl<T: Send> Consumer<T> {
         } else {
             self.pread + 1
         };
+        self.ring.space_bell.ring();
         Some(value)
     }
 
-    /// Blocking pop with backoff. `None` only if the producer disconnected
-    /// *and* the queue is drained.
+    /// Blocking pop with the shared spin→yield→park escalation. `None`
+    /// only if the producer disconnected *and* the queue is drained.
     #[inline]
     pub fn pop(&mut self) -> Option<T> {
         let mut backoff = Backoff::new();
@@ -350,8 +474,50 @@ impl<T: Send> Consumer<T> {
                 // Producer is gone; drain whatever it published first.
                 return self.try_pop();
             }
+            self.snooze_empty(&mut backoff);
+        }
+    }
+
+    /// One unit of waiting for data: snooze, or — once the [`WaitMode`]
+    /// budget is exhausted — park on the data doorbell until the
+    /// producer publishes a frame or disconnects.
+    #[inline]
+    pub fn snooze_empty(&mut self, backoff: &mut Backoff) {
+        if backoff.should_park(self.wait, self.park_grace) {
+            self.ring.data_bell.park_while(self.gauge.as_deref(), || {
+                !self.has_next() && self.ring.producer_alive.load(Ordering::Acquire)
+            });
+        } else {
             backoff.snooze();
         }
+    }
+
+    /// How this consumer's blocking waits behave once the spin budget
+    /// runs out (see [`WaitMode`]). Parking engages on the ring's data
+    /// doorbell, rung by every producer publish.
+    pub fn set_wait(&mut self, mode: WaitMode) {
+        self.wait = mode;
+    }
+
+    /// Idle time required before the first park of a wait episode.
+    pub fn set_park_grace(&mut self, grace: Duration) {
+        self.park_grace = grace;
+    }
+
+    /// Attach a parked-thread gauge (per launched skeleton).
+    pub fn set_park_gauge(&mut self, gauge: Arc<ParkGauge>) {
+        self.gauge = Some(gauge);
+    }
+
+    /// Cumulative parks of this consumer on the data doorbell.
+    pub fn parks(&self) -> u64 {
+        self.ring.data_bell.parks()
+    }
+
+    /// The doorbell an empty-queue wait parks on (rung by producer
+    /// publishes) — for multi-queue waits such as the farm collector.
+    pub fn data_bell(&self) -> &Doorbell {
+        &self.ring.data_bell
     }
 
     /// Peek whether something is ready without consuming it.
@@ -382,33 +548,52 @@ impl<T: Send> Consumer<T> {
     }
 }
 
-/// Failed flush attempts a dropping producer tolerates before
-/// abandoning its staged frames. Drop must never block unwinding
-/// forever on a consumer that is alive but permanently not popping
-/// (e.g. stalled on state the panicking thread holds), so the drop-time
-/// flush is best-effort and bounded — ordinary sends and EOS still
-/// flush unconditionally.
-const DROP_FLUSH_ATTEMPTS: usize = 256;
+/// How long a dropping producer waits for a *live* consumer to make
+/// room for its staged multipush frames. A merely-slow consumer is
+/// waited out (the old 256-retry budget silently discarded frames
+/// after microseconds); but drop can run during unwinding, and a
+/// consumer that is alive yet *permanently* not popping — e.g. stalled
+/// on state the panicking thread holds — must not deadlock the unwind,
+/// so the wait is bounded by this deadline and anything still staged is
+/// counted into [`lost_frames`].
+const DROP_FLUSH_DEADLINE: std::time::Duration = std::time::Duration::from_secs(2);
 
 impl<T> Drop for Producer<T> {
     fn drop(&mut self) {
-        // Best-effort publication of staged multipush frames: retry a
-        // bounded number of times (plenty for a consumer that is merely
-        // behind), then give up — leaving them to drop with `mbuf`.
-        let mut backoff = Backoff::new();
-        for _ in 0..DROP_FLUSH_ATTEMPTS {
-            if self.try_flush() || !self.ring.consumer_alive.load(Ordering::Acquire) {
-                break;
+        // Publish staged multipush frames (see [`DROP_FLUSH_DEADLINE`]
+        // for the liveness/loss trade-off). Frames abandoned — consumer
+        // gone, or deadline hit — are counted, never dropped silently.
+        if !self.mbuf.is_empty() {
+            let deadline = std::time::Instant::now() + DROP_FLUSH_DEADLINE;
+            let mut backoff = Backoff::new();
+            while !self.mbuf.is_empty() {
+                if self.try_flush() {
+                    break;
+                }
+                if !self.ring.consumer_alive.load(Ordering::Acquire)
+                    || std::time::Instant::now() >= deadline
+                {
+                    break;
+                }
+                self.park_or_snooze(&mut backoff, || {
+                    self.flush_blocked() && self.ring.consumer_alive.load(Ordering::Acquire)
+                });
             }
-            backoff.snooze();
+            if !self.mbuf.is_empty() {
+                LOST_FRAMES.fetch_add(self.mbuf.len() as u64, Ordering::Relaxed);
+            }
         }
         self.ring.producer_alive.store(false, Ordering::Release);
+        // Wake a parked consumer so it observes the disconnect.
+        self.ring.data_bell.ring();
     }
 }
 
 impl<T> Drop for Consumer<T> {
     fn drop(&mut self) {
         self.ring.consumer_alive.store(false, Ordering::Release);
+        // Wake a parked producer so it observes the disconnect.
+        self.ring.space_bell.ring();
     }
 }
 
@@ -584,18 +769,112 @@ mod tests {
     }
 
     #[test]
-    fn multipush_burst_clamped_to_capacity() {
+    fn multipush_burst_clamped_below_capacity() {
+        // Regression (bugfix): burst used to clamp to `cap`, making
+        // `is_full()`'s staged arm permanently true once the stage
+        // filled and a flush dependent on a completely empty ring. The
+        // widest burst is now `cap - 1`.
         let (mut p, mut c) = spsc::<u32>(4);
-        assert_eq!(p.set_burst(1000), 4);
-        for i in 0..4 {
+        assert_eq!(p.set_burst(1000), 3);
+        assert_eq!(p.set_burst(4), 3, "burst == cap clamps to cap - 1");
+        for i in 0..3 {
             p.push_buffered(i).unwrap();
         }
-        // A full-capacity burst flushes into the empty ring in one go.
+        // A full-burst flush fits while one ring slot is still free.
         assert_eq!(p.staged(), 0);
+        assert!(!p.is_full(), "cap - 1 burst leaves room for one more");
+        p.push_buffered(3).unwrap();
+        p.flush();
         assert!(p.is_full());
         for i in 0..4 {
             assert_eq!(c.try_pop(), Some(i));
         }
+    }
+
+    #[test]
+    fn set_burst_boundary_on_tiny_rings() {
+        let (mut p, _c) = spsc::<u32>(1);
+        assert_eq!(p.set_burst(8), 1, "cap 1 cannot stage at all");
+        let (mut p, _c) = spsc::<u32>(2);
+        assert_eq!(p.set_burst(2), 1);
+        let (mut p, mut c) = spsc::<u32>(3);
+        assert_eq!(p.set_burst(3), 2);
+        p.push_buffered(1).unwrap();
+        p.push_buffered(2).unwrap(); // burst reached: auto-flush
+        assert_eq!(p.staged(), 0);
+        assert_eq!(c.try_pop(), Some(1));
+        assert_eq!(c.try_pop(), Some(2));
+    }
+
+    #[test]
+    fn drop_flush_waits_out_a_slow_live_consumer() {
+        // Regression (bugfix): the drop-time flush used to give up after
+        // a bounded retry budget and silently discard staged frames even
+        // though the consumer was alive — merely slow. It now waits the
+        // consumer out (up to DROP_FLUSH_DEADLINE); only a *gone*
+        // consumer loses frames. (No LOST_FRAMES assertion here: the
+        // counter is process-wide and other tests in this binary lose
+        // frames on purpose — receiving every value already proves
+        // nothing was lost.)
+        let (mut p, mut c) = spsc::<u32>(4);
+        for i in 0..4 {
+            p.push(i).unwrap(); // ring full
+        }
+        p.set_burst(3);
+        p.push_buffered(4).unwrap();
+        p.push_buffered(5).unwrap();
+        assert_eq!(p.staged(), 2, "no room: frames stay staged");
+        let slow = std::thread::spawn(move || {
+            // Alive but slow: drains only after a pause far longer than
+            // the old bounded retry budget tolerated.
+            std::thread::sleep(std::time::Duration::from_millis(60));
+            let mut got = vec![];
+            while let Some(v) = c.pop() {
+                got.push(v);
+            }
+            got
+        });
+        drop(p); // must block until the slow consumer makes room
+        let got = slow.join().unwrap();
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5], "no staged frame may be lost");
+    }
+
+    #[test]
+    fn drop_flush_counts_frames_lost_to_a_dead_consumer() {
+        let before = lost_frames();
+        let (mut p, c) = spsc::<u32>(4);
+        for i in 0..4 {
+            p.push(i).unwrap(); // ring full
+        }
+        p.set_burst(3);
+        p.push_buffered(9).unwrap();
+        p.push_buffered(10).unwrap();
+        drop(c); // consumer gone: the 2 staged frames are undeliverable
+        drop(p);
+        assert!(
+            lost_frames() >= before + 2,
+            "abandoned frames must be counted, not silently dropped"
+        );
+    }
+
+    #[test]
+    fn park_mode_fifo_across_threads() {
+        // The bounded handshake end to end under WaitMode::Park: both
+        // sides park when idle/full and every doorbell ring is heard.
+        const N: usize = 20_000;
+        let (mut p, mut c) = spsc::<usize>(8);
+        p.set_wait(WaitMode::Park);
+        c.set_wait(WaitMode::Park);
+        let producer = std::thread::spawn(move || {
+            for i in 0..N {
+                p.push(i).unwrap();
+            }
+        });
+        for expect in 0..N {
+            assert_eq!(c.pop(), Some(expect));
+        }
+        producer.join().unwrap();
+        assert_eq!(c.try_pop(), None);
     }
 
     #[test]

@@ -25,6 +25,14 @@
 //! loads and stores — the queue is *fence-free* exactly as the paper
 //! claims for x86/TSO, while remaining correct on weaker models (where
 //! the compiler emits the store fence the paper notes is needed).
+//!
+//! Each queue direction also carries an (inert by default) **doorbell**
+//! ([`crate::util::Doorbell`]): endpoints configured with
+//! `WaitMode::{Adaptive,Park}` escalate their blocking waits from
+//! spin → yield → park, and every publish/pop/disconnect rings the
+//! other side awake. Under the default `WaitMode::Spin` the only cost
+//! is one relaxed load of a never-written flag per operation, keeping
+//! the lock-free hot path (and the paper's non-blocking claims) intact.
 
 pub mod bounded;
 pub mod ptr;

@@ -16,9 +16,10 @@ use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU8, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::spsc::bounded::{spsc, Consumer as PoolCons, Producer as PoolProd};
-use crate::util::{Backoff, CachePadded};
+use crate::util::{Backoff, CachePadded, Doorbell, ParkGauge, WaitMode};
 
 /// Slots per segment. A power of two keeps the wrap test cheap; 1024
 /// words ≈ one 4 KB page of payload per segment.
@@ -96,6 +97,11 @@ struct Inner<T> {
     /// chain starting at `orphan_head`.
     live: AtomicU8,
     orphan_head: AtomicPtr<Seg<T>>,
+    /// Rung by the producer after every publish (and on disconnect); the
+    /// consumer parks here under `WaitMode::{Adaptive,Park}`. The
+    /// producer side never waits — an unbounded push always succeeds —
+    /// so there is no space doorbell.
+    data_bell: CachePadded<Doorbell>,
 }
 
 /// Producer half of the unbounded queue.
@@ -114,6 +120,12 @@ pub struct UnboundedConsumer<T> {
     inner: Arc<Inner<T>>,
     /// Segments freed because the pool was full (stat for traces).
     pub frees: u64,
+    /// How blocking pops behave once the spin budget runs out.
+    wait: WaitMode,
+    /// Idle time required before the first park of a wait episode.
+    park_grace: Duration,
+    /// Optional parked-thread gauge (per launched skeleton).
+    gauge: Option<Arc<ParkGauge>>,
 }
 
 unsafe impl<T: Send> Send for UnboundedProducer<T> {}
@@ -126,6 +138,7 @@ pub fn unbounded_spsc<T: Send>() -> (UnboundedProducer<T>, UnboundedConsumer<T>)
     let inner = Arc::new(Inner {
         live: AtomicU8::new(2),
         orphan_head: AtomicPtr::new(std::ptr::null_mut()),
+        data_bell: CachePadded::new(Doorbell::new()),
     });
     (
         UnboundedProducer {
@@ -139,6 +152,9 @@ pub fn unbounded_spsc<T: Send>() -> (UnboundedProducer<T>, UnboundedConsumer<T>)
             pool: pool_tx,
             inner,
             frees: 0,
+            wait: WaitMode::Spin,
+            park_grace: Duration::ZERO,
+            gauge: None,
         },
     )
 }
@@ -162,6 +178,7 @@ impl<T: Send> UnboundedProducer<T> {
             unsafe { (*slot.value.get()).write(value) };
             slot.full.store(true, Ordering::Release);
             *w = if *w + 1 == SEG_CAP { 0 } else { *w + 1 };
+            self.inner.data_bell.ring();
             return;
         }
         // Tail full at the write position: grab a new segment.
@@ -186,6 +203,7 @@ impl<T: Send> UnboundedProducer<T> {
         // Publish: after this store the old tail is consumer territory.
         seg.next.store(new_seg, Ordering::Release);
         self.tail = new_seg;
+        self.inner.data_bell.ring();
     }
 }
 
@@ -223,8 +241,8 @@ impl<T: Send> UnboundedConsumer<T> {
         }
     }
 
-    /// Blocking pop with backoff; `None` once the producer disconnected
-    /// and the queue is fully drained.
+    /// Blocking pop with the shared spin→yield→park escalation; `None`
+    /// once the producer disconnected and the queue is fully drained.
     pub fn pop(&mut self) -> Option<T> {
         let mut backoff = Backoff::new();
         loop {
@@ -234,8 +252,50 @@ impl<T: Send> UnboundedConsumer<T> {
             if self.inner.live.load(Ordering::Acquire) < 2 {
                 return self.try_pop();
             }
+            self.snooze_empty(&mut backoff);
+        }
+    }
+
+    /// One unit of waiting for data: snooze, or — once the [`WaitMode`]
+    /// budget is exhausted — park on the data doorbell until the
+    /// producer publishes or disconnects.
+    #[inline]
+    pub fn snooze_empty(&mut self, backoff: &mut Backoff) {
+        if backoff.should_park(self.wait, self.park_grace) {
+            self.inner.data_bell.park_while(self.gauge.as_deref(), || {
+                !self.has_next() && self.producer_alive()
+            });
+        } else {
             backoff.snooze();
         }
+    }
+
+    /// How blocking pops behave once the spin budget runs out (see
+    /// [`WaitMode`]).
+    pub fn set_wait(&mut self, mode: WaitMode) {
+        self.wait = mode;
+    }
+
+    /// Idle time required before the first park of a wait episode.
+    pub fn set_park_grace(&mut self, grace: Duration) {
+        self.park_grace = grace;
+    }
+
+    /// Attach a parked-thread gauge (per launched skeleton).
+    pub fn set_park_gauge(&mut self, gauge: Arc<ParkGauge>) {
+        self.gauge = Some(gauge);
+    }
+
+    /// Cumulative parks of this consumer on the data doorbell.
+    pub fn parks(&self) -> u64 {
+        self.inner.data_bell.parks()
+    }
+
+    /// The doorbell an empty-queue wait parks on (rung by every
+    /// producer publish) — for multi-queue waits such as the pool
+    /// arbiter over its client lanes.
+    pub fn data_bell(&self) -> &Doorbell {
+        &self.inner.data_bell
     }
 
     /// Whether the producer half still exists.
@@ -267,6 +327,9 @@ impl<T> Drop for UnboundedProducer<T> {
             // Consumer already gone; it published its head for us.
             let head = self.inner.orphan_head.load(Ordering::Acquire);
             unsafe { free_chain(head) };
+        } else {
+            // Wake a parked consumer so it observes the disconnect.
+            self.inner.data_bell.ring();
         }
     }
 }
@@ -347,6 +410,29 @@ mod tests {
         }
         t.join().unwrap();
         assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn park_mode_fifo_and_disconnect_wake() {
+        // Park-mode consumer: every publish (fast path and segment
+        // link) and the producer's disconnect must ring the doorbell.
+        const N: usize = SEG_CAP * 2 + 37; // crosses segment boundaries
+        let (mut p, mut c) = unbounded_spsc::<usize>();
+        c.set_wait(WaitMode::Park);
+        let t = std::thread::spawn(move || {
+            for i in 0..N {
+                p.push(i);
+                if i % 512 == 0 {
+                    // Let the consumer catch up and park.
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+            }
+        });
+        for expect in 0..N {
+            assert_eq!(c.pop(), Some(expect));
+        }
+        t.join().unwrap();
+        assert_eq!(c.pop(), None, "disconnect must wake the parked pop");
     }
 
     #[test]

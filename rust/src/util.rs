@@ -1,7 +1,10 @@
-//! Small shared utilities: cache-line padding, spin backoff, a seeded
-//! PRNG (no `rand` crate offline), and time helpers.
+//! Small shared utilities: cache-line padding, spin backoff, the
+//! doorbell-based spin-then-park waiting layer, a seeded PRNG (no
+//! `rand` crate offline), and time helpers.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::Thread;
 use std::time::{Duration, Instant};
 
 /// Size of a destructive-interference-free region. 64 bytes on x86-64;
@@ -40,15 +43,54 @@ impl<T> std::ops::DerefMut for CachePadded<T> {
     }
 }
 
+/// How a blocking wait behaves once the spin budget runs out (the
+/// FastFlow tutorial's *blocking concurrency control*, TR-12-04).
+///
+/// The paper's accelerator runs on **unused** CPUs — but a non-blocking
+/// runtime fully loads every core it waits on. `WaitMode` picks the
+/// trade-off per skeleton / farm / pool:
+///
+/// * [`WaitMode::Spin`] — never block in the OS: spin, then `yield_now`
+///   forever. Bit-identical to the pre-parking runtime; lowest latency,
+///   one busy core per idle thread.
+/// * [`WaitMode::Adaptive`] — spin and yield through a long budget
+///   (peak latency unchanged for short waits), then park on the
+///   queue's [`Doorbell`]. The right default for mostly-busy services.
+/// * [`WaitMode::Park`] — park after a couple of yields. Idle threads
+///   release their CPUs almost immediately; wake latency is one
+///   `unpark` (plus the doorbell handshake).
+///
+/// Modes are ordered by patience (`Spin < Adaptive < Park`); when a
+/// config meets an enclosing context (e.g. a farm inside a `Park`
+/// pool), the **more patient mode wins** (`max`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum WaitMode {
+    /// Spin → yield, never block (pre-parking behavior, the default).
+    #[default]
+    Spin,
+    /// Spin → yield for a long budget, then park on the doorbell.
+    Adaptive,
+    /// Spin → yield briefly, then park on the doorbell.
+    Park,
+}
+
 /// Escalating spin backoff used by every blocking loop in the runtime.
 ///
-/// FastFlow threads are *non-blocking*: while running they never sleep in
-/// the OS, they spin (the paper: "they will, if not frozen, fully load the
-/// cores"). We spin with `hint::spin_loop` for a while and then escalate
-/// to `yield_now` so over-subscribed configurations still make progress.
+/// FastFlow threads are *non-blocking* by default: while running they
+/// never sleep in the OS, they spin (the paper: "they will, if not
+/// frozen, fully load the cores"). We spin with `hint::spin_loop` for a
+/// while and then escalate to `yield_now` so over-subscribed
+/// configurations still make progress. Under [`WaitMode::Adaptive`] /
+/// [`WaitMode::Park`] a third stage exists: once [`Backoff::should_park`]
+/// reports true, the caller parks on the queue's [`Doorbell`] and is
+/// woken by the next producer/consumer (lock-free queues stay the hot
+/// path — parking only engages after the spin budget is exhausted).
 #[derive(Debug)]
 pub struct Backoff {
     step: u32,
+    /// Set when the park threshold is first crossed; parking honours a
+    /// configured grace period measured from this instant.
+    idle_since: Option<Instant>,
 }
 
 impl Backoff {
@@ -60,9 +102,20 @@ impl Backoff {
     /// cutting 1-cpu ping-pong latency ~3×.
     const SPIN_LIMIT: u32 = 1;
 
+    /// [`WaitMode::Park`]: park after this many snoozes (a couple of
+    /// spins plus two yields — the partner had its chance to run).
+    const PARK_STEP: u32 = Self::SPIN_LIMIT + 3;
+
+    /// [`WaitMode::Adaptive`]: park only after a long yield budget, so
+    /// short stalls never pay a park/unpark round trip.
+    const ADAPTIVE_PARK_STEP: u32 = Self::SPIN_LIMIT + 65;
+
     #[inline]
     pub fn new() -> Self {
-        Backoff { step: 0 }
+        Backoff {
+            step: 0,
+            idle_since: None,
+        }
     }
 
     /// One unit of waiting; escalates geometrically.
@@ -72,16 +125,17 @@ impl Backoff {
             for _ in 0..(1u32 << self.step) {
                 std::hint::spin_loop();
             }
-            self.step += 1;
         } else {
             std::thread::yield_now();
         }
+        self.step = self.step.saturating_add(1);
     }
 
     /// Back to tight spinning (call after successful progress).
     #[inline]
     pub fn reset(&mut self) {
         self.step = 0;
+        self.idle_since = None;
     }
 
     /// True once the backoff has escalated past pure spinning.
@@ -89,11 +143,225 @@ impl Backoff {
     pub fn is_yielding(&self) -> bool {
         self.step > Self::SPIN_LIMIT
     }
+
+    /// True once this wait should fall through to the doorbell park:
+    /// the mode's spin budget is exhausted *and* the wait has been idle
+    /// past `grace` (zero grace = park as soon as the budget runs out).
+    /// Always false under [`WaitMode::Spin`].
+    #[inline]
+    pub fn should_park(&mut self, mode: WaitMode, grace: Duration) -> bool {
+        let threshold = match mode {
+            WaitMode::Spin => return false,
+            WaitMode::Park => Self::PARK_STEP,
+            WaitMode::Adaptive => Self::ADAPTIVE_PARK_STEP,
+        };
+        if self.step < threshold {
+            return false;
+        }
+        if grace.is_zero() {
+            return true;
+        }
+        self.idle_since.get_or_insert_with(Instant::now).elapsed() >= grace
+    }
 }
 
 impl Default for Backoff {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Upper bound on one doorbell park. The handshake below is designed to
+/// never lose a wakeup; the timeout is defense-in-depth (a missed
+/// arm/ring transition degrades to this much extra latency, never to a
+/// hang) and is what lets frozen/idle threads re-check liveness.
+pub const PARK_TIMEOUT: Duration = Duration::from_millis(25);
+
+/// Gauge of threads currently parked on doorbells — one per launched
+/// skeleton (threaded through the wiring context), so tests and
+/// monitors can assert that an idle `Park`-mode accelerator has
+/// actually released its CPUs.
+#[derive(Debug, Default)]
+pub struct ParkGauge {
+    now: AtomicUsize,
+    total: AtomicU64,
+}
+
+impl ParkGauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn enter(&self) {
+        self.now.fetch_add(1, Ordering::SeqCst);
+        self.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn exit(&self) {
+        self.now.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Threads parked right now (a racy snapshot).
+    pub fn parked_now(&self) -> usize {
+        self.now.load(Ordering::SeqCst)
+    }
+
+    /// Cumulative parks.
+    pub fn total_parks(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+}
+
+/// The park/wake rendezvous attached to each SPSC queue direction: an
+/// atomic waiter flag plus `thread::park`/`unpark`.
+///
+/// # Handshake (why a wake between "register" and "park" is never lost)
+///
+/// The waiter registers (`slot = current thread`, `waiting = true`),
+/// issues a `SeqCst` fence, **re-checks the queue**, and only then
+/// parks. The ringer publishes its queue update, issues a `SeqCst`
+/// fence, and loads `waiting`. By the store-buffering argument the two
+/// fences forbid *both* sides missing each other: either the waiter's
+/// re-check sees the data (it skips the park), or the ringer sees the
+/// waiter (it takes the registered handle and `unpark`s — and an
+/// `unpark` delivered before the `park` leaves a token that makes the
+/// park return immediately). Parks are additionally bounded by
+/// [`PARK_TIMEOUT`], so even an unarmed-doorbell race degrades to
+/// latency, not deadlock.
+///
+/// `ring()` costs one `Relaxed` load of a never-written flag until a
+/// waiter arms the doorbell, which is why [`WaitMode::Spin`] streams
+/// stay bit-identical to the pre-parking runtime.
+#[derive(Debug, Default)]
+pub struct Doorbell {
+    /// Lazily set by the first waiter; gates the ringer's fence+load.
+    armed: AtomicBool,
+    /// True while a waiter is registered (about to park, or parked).
+    waiting: AtomicBool,
+    /// Cumulative parks on this doorbell (observability/tests).
+    parks: AtomicU64,
+    /// The registered waiter. SPSC discipline means at most one thread
+    /// ever waits per doorbell; the mutex is touched only on the park
+    /// path and by a ringer that actually observed a waiter.
+    slot: Mutex<Option<Thread>>,
+}
+
+impl Doorbell {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Wake the registered waiter, if any. Cheap when nobody ever
+    /// parked (one `Relaxed` load); call after every publish that could
+    /// unblock the other side (push, pop, burst flush, disconnect).
+    #[inline]
+    pub fn ring(&self) {
+        if !self.armed.load(Ordering::Relaxed) {
+            return;
+        }
+        fence(Ordering::SeqCst);
+        if self.waiting.load(Ordering::Relaxed) {
+            self.wake();
+        }
+    }
+
+    #[cold]
+    fn wake(&self) {
+        let t = self.slot.lock().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some(t) = t {
+            t.unpark();
+        }
+    }
+
+    fn register(&self) {
+        if !self.armed.load(Ordering::Relaxed) {
+            self.armed.store(true, Ordering::Release);
+        }
+        *self.slot.lock().unwrap_or_else(|e| e.into_inner()) = Some(std::thread::current());
+        self.waiting.store(true, Ordering::Relaxed);
+    }
+
+    fn deregister(&self) {
+        self.waiting.store(false, Ordering::Relaxed);
+        // Any stale slot/unpark token is absorbed by the next park.
+    }
+
+    /// Park the calling thread (bounded by [`PARK_TIMEOUT`]) unless
+    /// `still_idle` — re-checked after registering, per the handshake —
+    /// reports there is work. Returns after a ring, a timeout, or a
+    /// spurious wakeup; the caller loops on its own condition.
+    pub fn park_while(&self, gauge: Option<&ParkGauge>, still_idle: impl Fn() -> bool) {
+        self.register();
+        fence(Ordering::SeqCst);
+        if still_idle() {
+            self.parks.fetch_add(1, Ordering::Relaxed);
+            if let Some(g) = gauge {
+                g.enter();
+            }
+            std::thread::park_timeout(PARK_TIMEOUT);
+            if let Some(g) = gauge {
+                g.exit();
+            }
+        }
+        self.deregister();
+    }
+
+    /// Cumulative parks on this doorbell.
+    pub fn parks(&self) -> u64 {
+        self.parks.load(Ordering::Relaxed)
+    }
+}
+
+/// Park the calling thread until **any** of `bells` rings — the
+/// multi-queue wait used by merge arbiters (collector, pool arbiter,
+/// feedback master) whose idle condition spans several lanes. Registers
+/// on every bell, re-checks `still_idle` under the same fence
+/// discipline as [`Doorbell::park_while`], parks once, deregisters.
+pub fn park_any(bells: &[&Doorbell], gauge: Option<&ParkGauge>, still_idle: impl Fn() -> bool) {
+    for b in bells {
+        b.register();
+    }
+    fence(Ordering::SeqCst);
+    if still_idle() {
+        if let Some(g) = gauge {
+            g.enter();
+        }
+        std::thread::park_timeout(PARK_TIMEOUT);
+        if let Some(g) = gauge {
+            g.exit();
+        }
+    }
+    for b in bells {
+        b.deregister();
+    }
+}
+
+/// The (mode, grace, gauge) triple a wiring context hands to arbiter
+/// threads whose waits span multiple queues — the multi-lane
+/// counterpart of the per-endpoint `set_wait` configuration.
+#[derive(Debug, Clone, Default)]
+pub struct WaitCfg {
+    pub mode: WaitMode,
+    pub grace: Duration,
+    pub gauge: Option<Arc<ParkGauge>>,
+}
+
+impl WaitCfg {
+    /// A never-parking config (the classic non-blocking runtime).
+    pub fn spin() -> Self {
+        Self::default()
+    }
+
+    /// Should this wait fall through to a park? (See
+    /// [`Backoff::should_park`].)
+    #[inline]
+    pub fn wants_park(&self, backoff: &mut Backoff) -> bool {
+        backoff.should_park(self.mode, self.grace)
+    }
+
+    /// Park on any of `bells` (see [`park_any`]).
+    pub fn park_any(&self, bells: &[&Doorbell], still_idle: impl Fn() -> bool) {
+        park_any(bells, self.gauge.as_deref(), still_idle);
     }
 }
 
@@ -290,6 +558,96 @@ mod tests {
         assert!(b.is_yielding());
         b.reset();
         assert!(!b.is_yielding());
+    }
+
+    #[test]
+    fn wait_modes_order_by_patience() {
+        assert!(WaitMode::Spin < WaitMode::Adaptive);
+        assert!(WaitMode::Adaptive < WaitMode::Park);
+        assert_eq!(WaitMode::Spin.max(WaitMode::Park), WaitMode::Park);
+        assert_eq!(WaitMode::default(), WaitMode::Spin);
+    }
+
+    #[test]
+    fn should_park_respects_mode_and_budget() {
+        let mut b = Backoff::new();
+        assert!(!b.should_park(WaitMode::Park, Duration::ZERO));
+        for _ in 0..Backoff::PARK_STEP {
+            b.snooze();
+        }
+        assert!(!b.should_park(WaitMode::Spin, Duration::ZERO), "Spin never parks");
+        assert!(b.should_park(WaitMode::Park, Duration::ZERO));
+        assert!(
+            !b.should_park(WaitMode::Adaptive, Duration::ZERO),
+            "Adaptive's budget is longer than Park's"
+        );
+        for _ in 0..Backoff::ADAPTIVE_PARK_STEP {
+            b.snooze();
+        }
+        assert!(b.should_park(WaitMode::Adaptive, Duration::ZERO));
+        b.reset();
+        assert!(!b.should_park(WaitMode::Park, Duration::ZERO));
+    }
+
+    #[test]
+    fn should_park_honours_grace() {
+        let mut b = Backoff::new();
+        for _ in 0..Backoff::PARK_STEP {
+            b.snooze();
+        }
+        let grace = Duration::from_millis(40);
+        assert!(!b.should_park(WaitMode::Park, grace), "grace not yet elapsed");
+        std::thread::sleep(grace + Duration::from_millis(5));
+        assert!(b.should_park(WaitMode::Park, grace));
+    }
+
+    #[test]
+    fn doorbell_ring_wakes_parked_waiter() {
+        let bell = Arc::new(Doorbell::new());
+        let gauge = Arc::new(ParkGauge::new());
+        let flag = Arc::new(AtomicBool::new(false));
+        let (b2, g2, f2) = (bell.clone(), gauge.clone(), flag.clone());
+        let waiter = std::thread::spawn(move || {
+            while !f2.load(Ordering::Acquire) {
+                b2.park_while(Some(&g2), || !f2.load(Ordering::Acquire));
+            }
+        });
+        // Let the waiter reach the park at least once.
+        while gauge.total_parks() == 0 {
+            std::thread::yield_now();
+        }
+        flag.store(true, Ordering::Release);
+        bell.ring();
+        waiter.join().unwrap();
+        assert_eq!(gauge.parked_now(), 0, "gauge must balance");
+        assert!(bell.parks() >= 1);
+    }
+
+    #[test]
+    fn doorbell_skips_park_when_work_arrived() {
+        let bell = Doorbell::new();
+        // still_idle reports work: the park must be skipped entirely.
+        let t0 = Instant::now();
+        bell.park_while(None, || false);
+        assert!(t0.elapsed() < PARK_TIMEOUT, "no park when work is ready");
+        assert_eq!(bell.parks(), 0);
+    }
+
+    #[test]
+    fn park_any_wakes_on_any_bell() {
+        let bells: Vec<Arc<Doorbell>> = (0..3).map(|_| Arc::new(Doorbell::new())).collect();
+        let flag = Arc::new(AtomicBool::new(false));
+        let (bs, f2) = (bells.clone(), flag.clone());
+        let waiter = std::thread::spawn(move || {
+            let refs: Vec<&Doorbell> = bs.iter().map(|b| &**b).collect();
+            while !f2.load(Ordering::Acquire) {
+                park_any(&refs, None, || !f2.load(Ordering::Acquire));
+            }
+        });
+        std::thread::sleep(Duration::from_millis(2));
+        flag.store(true, Ordering::Release);
+        bells[2].ring(); // any one bell suffices
+        waiter.join().unwrap();
     }
 
     #[test]

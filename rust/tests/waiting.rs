@@ -1,0 +1,411 @@
+//! The spin-then-park waiting layer, end to end:
+//!
+//! 1. **Observational equivalence** — `Spin ≡ Adaptive ≡ Park` for the
+//!    same workload across SchedPolicy × ordering × freeze/thaw (the
+//!    doorbell layer is a scheduling change, never a semantic one);
+//! 2. **lost-wakeup stress** — a ping-pong through capacity-1 streams
+//!    with the tiny `Park` spin budget, where every handoff crosses the
+//!    register/re-check/park handshake;
+//! 3. **idle-CPU assertions** — an idle `Park`-mode accelerator (and an
+//!    idle pool with shard elasticity) reaches *all runtime threads
+//!    parked*, and a frozen accelerator holds zero doorbell parks (its
+//!    threads sit in the lifecycle condvar);
+//! 4. **leaked-handle recovery** — a `mem::forget`-ed client handle no
+//!    longer wedges `AccelPool::wait`: the parking-mode drain
+//!    force-closes the abandoned lane and `wait_checked` surfaces
+//!    `AccelError::Disconnected`;
+//! 5. an `#[ignore]`d **over-subscription suite** (workers ≫ cores, all
+//!    of it in `Park` mode) that CI runs with `--include-ignored`.
+
+use std::time::{Duration, Instant};
+
+use fastflow::channel::{stream, Msg};
+use fastflow::node::LifecycleState;
+use fastflow::prelude::*;
+use fastflow::testing::{Cases, Gen};
+
+/// Run one farm-accelerator workload and return its outputs.
+fn run_farm(cfg: FarmConfig, n: u64, frozen_bursts: usize) -> Vec<u64> {
+    if frozen_bursts == 0 {
+        let mut acc: FarmAccel<u64, u64> =
+            farm(cfg, |_| seq_fn(|x: u64| x * 3 + 1)).into_accel();
+        for i in 0..n {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = acc.load_result() {
+            got.push(v);
+        }
+        acc.wait();
+        got
+    } else {
+        let mut acc: FarmAccel<u64, u64> =
+            farm(cfg, |_| seq_fn(|x: u64| x * 3 + 1)).into_accel_frozen();
+        let mut got = vec![];
+        for b in 0..frozen_bursts {
+            if b > 0 {
+                acc.thaw();
+            }
+            for i in 0..n {
+                acc.offload(b as u64 * 10_000 + i).unwrap();
+            }
+            acc.offload_eos();
+            while let Some(v) = acc.load_result() {
+                got.push(v);
+            }
+            acc.wait_freezing();
+        }
+        acc.thaw();
+        acc.offload_eos();
+        acc.wait();
+        got
+    }
+}
+
+#[test]
+fn prop_wait_modes_equivalent() {
+    // Parking is a waiting-strategy change, not a semantic one: the
+    // same workload through the same farm produces the same outputs
+    // (same order when ordered) under every WaitMode, for every
+    // SchedPolicy × ordering × one-shot/freeze-thaw shape.
+    Cases::new("wait_mode_equiv", 6).run(|g: &mut Gen| {
+        let workers = g.usize_in(1, 5);
+        let n = g.usize_in(1, 1_500) as u64;
+        let ordered = g.bool();
+        let bursts = if g.bool() { 0 } else { g.usize_in(1, 3) };
+        for sched in [SchedPolicy::RoundRobin, SchedPolicy::OnDemand] {
+            let mk = |mode: WaitMode| {
+                let mut cfg = FarmConfig::default().workers(workers).sched(sched).wait(mode);
+                if ordered {
+                    cfg = cfg.ordered();
+                }
+                cfg
+            };
+            let mut spin = run_farm(mk(WaitMode::Spin), n, bursts);
+            let mut adaptive = run_farm(mk(WaitMode::Adaptive), n, bursts);
+            let mut park = run_farm(mk(WaitMode::Park), n, bursts);
+            if !ordered {
+                spin.sort_unstable();
+                adaptive.sort_unstable();
+                park.sort_unstable();
+            }
+            assert_eq!(spin, adaptive, "sched {sched:?} ordered {ordered}");
+            assert_eq!(spin, park, "sched {sched:?} ordered {ordered}");
+        }
+    });
+}
+
+#[test]
+fn lost_wakeup_pingpong_stress() {
+    // Capacity-1 streams, Park mode on all four endpoints: every single
+    // handoff sits right at the full/empty boundary, so the
+    // register → fence → re-check → park handshake runs constantly on
+    // both doorbells of both rings. A lost wakeup would stall a round
+    // at the 25 ms park timeout; thousands of rounds plus the explicit
+    // stalls below make parking engage for real, and the asserted
+    // wall-clock bound catches systematic wakeup loss.
+    const ROUNDS: u64 = 8_000;
+    let (mut ptx, mut prx) = stream::<u64>(1);
+    let (mut qtx, mut qrx) = stream::<u64>(1);
+    for s in [&mut ptx, &mut qtx] {
+        s.set_wait(WaitMode::Park);
+    }
+    prx.set_wait(WaitMode::Park);
+    qrx.set_wait(WaitMode::Park);
+    let echo = std::thread::spawn(move || {
+        let mut parks_forced = 0u32;
+        loop {
+            match prx.recv() {
+                Msg::Task(v) => {
+                    if v == u64::MAX {
+                        break;
+                    }
+                    // A few deliberate stalls guarantee the partner
+                    // escalates all the way to the park.
+                    if v % 2_000 == 0 {
+                        std::thread::sleep(Duration::from_millis(2));
+                        parks_forced += 1;
+                    }
+                    qtx.send(v).unwrap();
+                }
+                Msg::Batch(_) => unreachable!("no batches sent"),
+                Msg::Eos => break,
+            }
+        }
+        parks_forced
+    });
+    let t0 = Instant::now();
+    for i in 0..ROUNDS {
+        ptx.send(i).unwrap();
+        match qrx.recv() {
+            Msg::Task(v) => assert_eq!(v, i, "round-trip corrupted"),
+            other => panic!("expected task, got {other:?}"),
+        }
+    }
+    let elapsed = t0.elapsed();
+    ptx.send(u64::MAX).unwrap();
+    assert!(echo.join().unwrap() >= 1);
+    assert!(
+        qrx.parks() + ptx.parks() >= 1,
+        "the stress must actually exercise the park path"
+    );
+    // Generous bound: ~8k rounds at doorbell-wake latency plus a few
+    // forced 2 ms stalls. Systematic lost wakeups would cost 25 ms per
+    // round (> 3 minutes total) — orders of magnitude past this.
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "ping-pong took {elapsed:?}: wakeups are being lost"
+    );
+}
+
+/// Poll `probe` until it returns true or the deadline passes.
+fn eventually(deadline: Duration, mut probe: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if probe() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    false
+}
+
+#[test]
+fn idle_park_accel_parks_all_threads() {
+    // The paper's pitch is an accelerator on **unused** CPUs; under
+    // WaitMode::Park an idle (running, not frozen) accelerator must
+    // actually release them: emitter, every worker and the collector
+    // all parked on their stream doorbells.
+    let mut acc: FarmAccel<u64, u64> = farm(
+        FarmConfig::default().workers(3).wait(WaitMode::Park),
+        |_| seq_fn(|x: u64| x + 1),
+    )
+    .into_accel();
+    let threads = acc.threads();
+    assert_eq!(threads, 5); // emitter + 3 workers + collector
+    assert!(
+        eventually(Duration::from_secs(10), || acc.parked_threads() == threads),
+        "idle Park accelerator must reach all {threads} threads parked \
+         (saw {})",
+        acc.parked_threads()
+    );
+    // The doorbells must wake everything back up for real work.
+    for i in 0..500 {
+        acc.offload(i).unwrap();
+    }
+    acc.offload_eos();
+    let mut got = vec![];
+    while let Some(v) = acc.load_result() {
+        got.push(v);
+    }
+    got.sort_unstable();
+    assert_eq!(got, (1..=500).collect::<Vec<u64>>());
+    acc.wait();
+}
+
+#[test]
+fn frozen_park_accel_is_fully_suspended() {
+    // Freeze under Park mode: every runtime thread ends the cycle and
+    // parks in the lifecycle condvar (LifecycleState::Frozen), with no
+    // thread left on a stream doorbell — CPU use is ~0 either way, but
+    // the two suspension mechanisms must hand over cleanly.
+    let mut acc: FarmAccel<u64, u64> = farm(
+        FarmConfig::default().workers(2).wait(WaitMode::Park),
+        |_| seq_fn(|x: u64| x),
+    )
+    .into_accel_frozen();
+    for i in 0..100 {
+        acc.offload(i).unwrap();
+    }
+    acc.offload_eos();
+    while acc.load_result().is_some() {}
+    acc.wait_freezing();
+    assert_eq!(acc.state(), LifecycleState::Frozen);
+    assert_eq!(
+        acc.parked_threads(),
+        0,
+        "frozen threads sit in the condvar, not on doorbells"
+    );
+    // Thaw must resume doorbell-driven work.
+    acc.thaw();
+    acc.offload(7).unwrap();
+    acc.offload_eos();
+    assert_eq!(acc.load_result(), Some(7));
+    acc.wait_freezing();
+    acc.wait();
+}
+
+#[test]
+fn pool_idle_shards_park_and_wake_on_dispatch() {
+    // Idle-shard elasticity: a Park-mode pool whose lanes stay empty
+    // past the grace period parks wholesale — arbiter and every shard
+    // thread — and the next dispatch (one client offload ringing the
+    // arbiter, which dispatches into a shard) wakes exactly what it
+    // needs.
+    let (mut pool, mut h) = AccelPool::run(
+        PoolConfig::default()
+            .shards(2)
+            .workers_per_shard(2)
+            .wait(WaitMode::Park)
+            .idle_grace(Duration::from_millis(20)),
+        |_s, _w| node_fn(|x: u64| x * 2),
+    );
+    let threads = pool.threads();
+    assert!(
+        eventually(Duration::from_secs(10), || pool.parked_threads() == threads),
+        "idle Park pool must reach all {threads} threads parked (saw {})",
+        pool.parked_threads()
+    );
+    for i in 0..200u64 {
+        h.offload(i).unwrap();
+    }
+    h.finish().unwrap();
+    pool.offload_eos();
+    let mut got = vec![];
+    while let Some(v) = pool.load_result() {
+        got.push(v);
+    }
+    got.sort_unstable();
+    assert_eq!(got, (0..200u64).map(|i| i * 2).collect::<Vec<_>>());
+    pool.wait();
+}
+
+#[test]
+fn leaked_handle_surfaces_disconnected() {
+    // Regression (bugfix): a leaked AccelHandle (mem::forget — or a
+    // handle stranded in a poisoned mutex) never runs its close path,
+    // its lane never sends EOS, and `AccelPool::wait` used to spin
+    // forever. In Park mode the drain now detects the
+    // registration-epoch gap after the disconnect grace, force-closes
+    // the abandoned lane (forwarding what it buffered first) and
+    // `wait_checked` reports Disconnected.
+    let (mut pool, mut root) = AccelPool::run(
+        PoolConfig::default()
+            .shards(1)
+            .workers_per_shard(2)
+            .wait(WaitMode::Park)
+            .disconnect_grace(Duration::from_millis(100)),
+        |_s, _w| node_fn(|x: u64| x),
+    );
+    for i in 0..10u64 {
+        root.offload(i).unwrap();
+    }
+    let mut leaked = root.clone();
+    leaked.offload(99).unwrap(); // buffered work must still arrive
+    std::mem::forget(leaked); // Drop never runs: the lane stays open
+    root.finish().unwrap();
+    pool.offload_eos();
+    let mut got = vec![];
+    while let Some(v) = pool.load_result() {
+        got.push(v);
+    }
+    got.sort_unstable();
+    let mut expect: Vec<u64> = (0..10).collect();
+    expect.push(99);
+    assert_eq!(got, expect, "nothing offloaded may be lost to recovery");
+    assert_eq!(pool.abandoned_lanes(), 1);
+    match pool.wait_checked() {
+        Err(AccelError::Disconnected) => {}
+        other => panic!("leaked handle must surface Disconnected, got {other:?}"),
+    }
+}
+
+#[test]
+fn spin_pool_is_unaffected_by_recovery_machinery() {
+    // The default (Spin) pool keeps the non-blocking discipline: no
+    // parking, no force-close timers — and a well-behaved cycle never
+    // reports abandoned lanes.
+    let (mut pool, mut h) = AccelPool::run(
+        PoolConfig::default().shards(2).workers_per_shard(1),
+        |_s, _w| node_fn(|x: u64| x + 1),
+    );
+    for i in 0..300u64 {
+        h.offload(i).unwrap();
+    }
+    h.finish().unwrap();
+    pool.offload_eos();
+    let mut count = 0u64;
+    while pool.load_result().is_some() {
+        count += 1;
+    }
+    assert_eq!(count, 300);
+    assert_eq!(pool.parked_threads(), 0, "Spin pools never park");
+    assert_eq!(pool.abandoned_lanes(), 0);
+    pool.wait_checked().expect("clean cycle: no Disconnected");
+}
+
+/// The over-subscription lane (workers ≫ cores, everything in Park
+/// mode): with far more runtime threads than CPUs, spinning starves the
+/// partner threads and parking is what keeps the schedule healthy.
+/// Heavy, so `#[ignore]`d by default — CI runs it via
+/// `cargo test --test waiting -- --include-ignored` (see `make
+/// test-oversub`).
+#[test]
+#[ignore = "over-subscription smoke lane: run with --include-ignored"]
+fn oversubscribed_park_suite() {
+    let cores = fastflow::util::num_cpus();
+    let workers = (cores * 4).max(8);
+
+    // 1. Farm exactly-once + ordered, workers ≫ cores.
+    for sched in [SchedPolicy::RoundRobin, SchedPolicy::OnDemand] {
+        let mut acc: FarmAccel<u64, u64> = farm(
+            FarmConfig::default()
+                .workers(workers)
+                .sched(sched)
+                .ordered()
+                .wait(WaitMode::Park),
+            |_| seq_fn(|x: u64| x.wrapping_mul(31)),
+        )
+        .into_accel();
+        let n = 20_000u64;
+        for i in 0..n {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut expect = 0u64;
+        while let Some(v) = acc.load_result() {
+            assert_eq!(v, expect.wrapping_mul(31), "sched {sched:?}");
+            expect += 1;
+        }
+        assert_eq!(expect, n);
+        acc.wait();
+    }
+
+    // 2. Pool exactly-once: clients × shards, each shard oversubscribed.
+    let (mut pool, root) = AccelPool::run(
+        PoolConfig::default()
+            .shards(4)
+            .workers_per_shard(cores.max(2))
+            .batch(16)
+            .wait(WaitMode::Park)
+            .idle_grace(Duration::from_millis(5)),
+        |_s, _w| node_fn(|x: u64| x),
+    );
+    let clients = 4u64;
+    let per_client = 5_000u64;
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            let mut h = root.clone();
+            std::thread::spawn(move || {
+                for i in 0..per_client {
+                    h.offload(c * per_client + i).unwrap();
+                }
+                h.finish().unwrap();
+            })
+        })
+        .collect();
+    drop(root);
+    pool.offload_eos();
+    let total = clients * per_client;
+    let mut seen = vec![false; total as usize];
+    while let Some(v) = pool.load_result() {
+        assert!(!seen[v as usize], "duplicate {v}");
+        seen[v as usize] = true;
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    assert!(seen.iter().all(|&s| s), "lost tasks under oversubscription");
+    pool.wait_checked().expect("no lanes abandoned");
+}
