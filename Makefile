@@ -9,7 +9,7 @@ CARGO  ?= cargo
 PYTHON ?= python
 ARTIFACT_DIR ?= artifacts
 
-.PHONY: all build test test-fallback test-oversub bench bench-smoke doc artifacts fmt clippy pytest clean
+.PHONY: all build test test-fallback test-oversub bench bench-smoke doc artifacts fmt clippy lint loom miri tsan pytest clean
 
 all: build
 
@@ -74,6 +74,37 @@ fmt:
 
 clippy:
 	cd rust && $(CARGO) clippy --all-targets -- -D warnings
+
+# The blocking static-analysis gate CI runs: format + clippy wall.
+lint: fmt clippy
+
+# Model-check the lock-free core (bounded/unbounded SPSC, multipush,
+# doorbell handshake, batch pool, stream framing) under loom: the
+# `sync` facade swaps std atomics/threads/cells for loom's doubles, and
+# every model in rust/tests/loom/ is explored with a preemption bound
+# of 3 (see EXPERIMENTS.md §Verification for why that bound).
+loom:
+	cd rust && RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 \
+		$(CARGO) test --release --test loom
+
+# Run the concurrency-bearing unit tests under Miri (nightly). Strict
+# provenance covers the raw-pointer queues (spsc::ptr, uSWSR segment
+# chain); -Zmiri-disable-isolation lets Instant::now()-based grace
+# logic run. Heavy cross-thread volumes shrink via cfg(miri); wall-
+# clock tests are #[cfg_attr(miri, ignore)]d.
+miri:
+	cd rust && MIRIFLAGS="-Zmiri-strict-provenance -Zmiri-disable-isolation" \
+		$(CARGO) +nightly miri test --lib -q -- \
+		spsc:: channel:: alloc:: util:: baseline::
+
+# ThreadSanitizer lane (nightly + rust-src): rebuilds std with TSan and
+# runs the library tests. Advisory — TSan models SeqCst fences
+# imprecisely, so findings are triaged, not auto-blocking (the loom
+# lane is the authoritative fence check).
+tsan:
+	cd rust && RUSTFLAGS="-Zsanitizer=thread" \
+		$(CARGO) +nightly test -q --lib \
+		-Zbuild-std --target x86_64-unknown-linux-gnu
 
 pytest:
 	$(PYTHON) -m pytest python/tests -q

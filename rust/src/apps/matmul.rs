@@ -88,7 +88,10 @@ pub struct SharedResult {
     cells: UnsafeCell<Vec<i64>>,
 }
 
+// SAFETY: see the type-level SAFETY ARGUMENT — row writes are disjoint
+// per the emitter's partition, reads happen only after the EOS barrier.
 unsafe impl Sync for SharedResult {}
+// SAFETY: `Vec<i64>` owns plain data; moving the struct moves ownership.
 unsafe impl Send for SharedResult {}
 
 impl SharedResult {
@@ -106,7 +109,10 @@ impl SharedResult {
     /// `i` must be written by at most one live task.
     #[allow(clippy::mut_from_ref)]
     unsafe fn row_mut(&self, i: usize) -> &mut [i64] {
-        let v = &mut *self.cells.get();
+        // SAFETY: per the function contract, callers hold disjoint row
+        // indices, so the returned `&mut` slices never overlap and no
+        // other reference to row `i` exists while this one lives.
+        let v = unsafe { &mut *self.cells.get() };
         &mut v[i * self.n..(i + 1) * self.n]
     }
 

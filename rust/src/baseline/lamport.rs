@@ -9,12 +9,12 @@
 //! sequential consistency); the *sharing pattern* — the thing being
 //! measured — is faithful.
 
-use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::spsc::Full;
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::UnsafeCell;
 use crate::util::Backoff;
 
 struct Ring<T> {
@@ -29,7 +29,13 @@ struct Ring<T> {
     consumer_alive: AtomicBool,
 }
 
+// SAFETY: slot `i` is written by the producer only while in the
+// producer-owned region [tail, head) (mod size) and read by the consumer
+// only after the Release store of `tail` advanced past it — classic
+// Lamport ownership, enforced with Acquire/Release on `head`/`tail`.
 unsafe impl<T: Send> Send for Ring<T> {}
+// SAFETY: see `Send`; all cross-thread access is mediated by the
+// index handshakes above.
 unsafe impl<T: Send> Sync for Ring<T> {}
 
 pub struct LamportProducer<T> {
@@ -74,7 +80,11 @@ impl<T: Send> LamportProducer<T> {
         if next == self.ring.head.load(Ordering::Acquire) {
             return Err(Full(value));
         }
-        unsafe { (*self.ring.buf[tail].get()).write(value) };
+        // SAFETY: `next != head` (Acquire) means slot `tail` is outside
+        // the consumer-visible region; the consumer reads it only after
+        // the Release store of the advanced `tail` below. Model-checked
+        // in `tests/loom/lamport.rs`.
+        self.ring.buf[tail].with_mut(|p| unsafe { (*p).write(value) });
         self.ring.tail.store(next, Ordering::Release);
         Ok(())
     }
@@ -104,7 +114,12 @@ impl<T: Send> LamportConsumer<T> {
         if head == self.ring.tail.load(Ordering::Acquire) {
             return None;
         }
-        let value = unsafe { (*self.ring.buf[head].get()).assume_init_read() };
+        // SAFETY: `head != tail` with the Acquire load of `tail`
+        // happens-after the producer's write of slot `head`, so it is
+        // initialized; the producer reuses the slot only after the
+        // Release store of the advanced `head` below (its full-test
+        // Acquire-reads `head`). Ownership transfers uniquely to us.
+        let value = self.ring.buf[head].with(|p| unsafe { (*p).assume_init_read() });
         let next = if head + 1 == self.cap { 0 } else { head + 1 };
         self.ring.head.store(next, Ordering::Release);
         Some(value)
@@ -142,7 +157,11 @@ impl<T> Drop for Ring<T> {
         let tail = self.tail.load(Ordering::Relaxed);
         let cap = self.buf.len();
         while head != tail {
-            unsafe { (*self.buf[head].get()).assume_init_drop() };
+            // SAFETY: `[head, tail)` is exactly the initialized,
+            // unconsumed region; `&mut self` (both handles gone, Arc
+            // refcount ordering) makes this the only access and each
+            // slot is dropped at most once.
+            self.buf[head].with_mut(|p| unsafe { (*p).assume_init_drop() });
             head = if head + 1 == cap { 0 } else { head + 1 };
         }
     }
@@ -174,7 +193,8 @@ mod tests {
 
     #[test]
     fn fifo_across_threads() {
-        const N: usize = 20_000;
+        // Miri executes ~1000x slower; shrink cross-thread volumes.
+        const N: usize = if cfg!(miri) { 400 } else { 20_000 };
         let (mut p, mut c) = lamport::<usize>(64);
         let t = std::thread::spawn(move || {
             for i in 0..N {

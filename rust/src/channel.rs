@@ -362,6 +362,16 @@ impl<T: Send> Sender<T> {
         }
     }
 
+    /// Multipush frames abandoned at drop **on this stream's ring** (0
+    /// on unbounded streams, whose sends never stage) — the per-queue
+    /// counterpart of [`crate::spsc::bounded::lost_frames`].
+    pub fn lost_frames(&self) -> u64 {
+        match &self.tx {
+            TxFlavor::Bounded(prod) => prod.lost_frames(),
+            TxFlavor::Unbounded(_) => 0,
+        }
+    }
+
     /// Publish any staged multipush frames, blocking until the queue
     /// has room. `false` if the receiver disconnected first.
     pub fn flush(&mut self) -> bool {
@@ -483,6 +493,16 @@ impl<T: Send> Receiver<T> {
         match &self.rx {
             RxFlavor::Bounded(cons) => cons.parks(),
             RxFlavor::Unbounded(cons) => cons.parks(),
+        }
+    }
+
+    /// Multipush frames the (dropped) sender abandoned on this stream's
+    /// ring (0 on unbounded streams) — readable from the surviving side
+    /// after a producer drop, unlike the process-global aggregate.
+    pub fn lost_frames(&self) -> u64 {
+        match &self.rx {
+            RxFlavor::Bounded(cons) => cons.lost_frames(),
+            RxFlavor::Unbounded(_) => 0,
         }
     }
 

@@ -57,6 +57,18 @@
 //! acc.offload_eos();
 //! acc.wait();
 //! ```
+//!
+//! ## Correctness & verification
+//!
+//! The lock-free core routes all atomics, cells and thread parking
+//! through the [`sync`] facade, so the identical code paths run under
+//! the loom model checker (`make loom`), Miri (`make miri`) and
+//! ThreadSanitizer — see `tests/loom/` and the repository README's
+//! "Correctness & verification" section. Every `unsafe` block carries a
+//! `// SAFETY:` comment naming the invariant it relies on, and
+//! `unsafe_op_in_unsafe_fn` is denied crate-wide.
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod accel;
 pub mod alloc;
@@ -76,6 +88,7 @@ pub mod runtime;
 pub mod sched;
 pub mod skeleton;
 pub mod spsc;
+pub mod sync;
 pub mod testing;
 pub mod trace;
 pub mod util;

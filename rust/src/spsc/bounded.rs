@@ -12,23 +12,31 @@
 //! Lamport's queue ([`crate::baseline::lamport`]) where every operation
 //! reads both indices.
 
-use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use super::Full;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::UnsafeCell;
 use crate::util::{Backoff, CachePadded, Doorbell, ParkGauge, WaitMode};
 
 /// Process-wide count of multipush frames a dropping producer had to
 /// abandon because its consumer was *gone* (a live consumer is waited
 /// out — see [`Producer::drop`]). Surfaced so lost work is observable
 /// in allocation/trace audits instead of silently vanishing.
-static LOST_FRAMES: AtomicU64 = AtomicU64::new(0);
+///
+/// Deliberately a `std` atomic even under `--cfg loom`: a process-global
+/// monotonic statistics counter, not a synchronization edge (loom
+/// statics would leak state between model iterations anyway). The
+/// authoritative per-queue counter is [`Producer::lost_frames`] /
+/// [`Consumer::lost_frames`].
+static LOST_FRAMES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
 /// Multipush frames abandoned at producer drop, process-wide (see
-/// [`LOST_FRAMES`]). Monotonic; sample before/after to attribute.
+/// [`LOST_FRAMES`]). Monotonic; sample before/after to attribute —
+/// though parallel tests cross-talk through it, so prefer the per-ring
+/// [`Producer::lost_frames`] / [`Consumer::lost_frames`] accessors.
 pub fn lost_frames() -> u64 {
     LOST_FRAMES.load(Ordering::Relaxed)
 }
@@ -63,11 +71,19 @@ struct Ring<T> {
     /// Rung by the consumer (pop / disconnect); the producer parks here
     /// when the ring is full.
     space_bell: CachePadded<Doorbell>,
+    /// Multipush frames this ring's producer abandoned at drop (see
+    /// [`Producer::lost_frames`]). Per-ring so parallel tests (and
+    /// co-hosted pipelines) don't cross-talk through the process-global
+    /// [`lost_frames`] aggregate.
+    lost: AtomicU64,
 }
 
 // SAFETY: Slot values are transferred with Release/Acquire handshakes on
-// `full`; only one side reads or writes a given slot at a time.
+// `full`; only one side reads or writes a given slot at a time. Values
+// of `T` cross threads, hence `T: Send`.
 unsafe impl<T: Send> Send for Ring<T> {}
+// SAFETY: see `Send` — all shared mutable state (the slots) is mediated
+// by the per-slot `full` handshake; the indices are never shared.
 unsafe impl<T: Send> Sync for Ring<T> {}
 
 /// Producer half. `!Sync`: exactly one thread may push.
@@ -89,6 +105,9 @@ pub struct Producer<T> {
     park_grace: Duration,
     /// Optional parked-thread gauge (per launched skeleton).
     gauge: Option<Arc<ParkGauge>>,
+    /// How long drop waits for a live-but-slow consumer before counting
+    /// staged frames as lost (see [`DROP_FLUSH_DEADLINE`]).
+    drop_deadline: Duration,
 }
 
 /// Consumer half. `!Sync`: exactly one thread may pop.
@@ -115,6 +134,7 @@ pub fn spsc<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
         consumer_alive: CachePadded::new(AtomicBool::new(true)),
         data_bell: CachePadded::new(Doorbell::new()),
         space_bell: CachePadded::new(Doorbell::new()),
+        lost: AtomicU64::new(0),
     });
     (
         Producer {
@@ -126,6 +146,7 @@ pub fn spsc<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
             wait: WaitMode::Spin,
             park_grace: Duration::ZERO,
             gauge: None,
+            drop_deadline: DROP_FLUSH_DEADLINE,
         },
         Consumer {
             ring,
@@ -155,9 +176,15 @@ impl<T: Send> Producer<T> {
         if slot.full.load(Ordering::Acquire) {
             return Err(Full(value));
         }
-        // SAFETY: the slot is empty and the consumer will not touch
-        // `value` until it observes `full == true` (Release below).
-        unsafe { (*slot.value.get()).write(value) };
+        // SAFETY: `full == false` means the producer owns this slot —
+        // the consumer last cleared it with a Release store our Acquire
+        // load above synchronized with, so its read of any prior value
+        // happens-before this write; it will not touch the slot again
+        // until it observes the `full == true` Release below. Writing
+        // through the raw pointer is a plain `MaybeUninit::write` (no
+        // drop of the uninit contents). Model-checked in
+        // `tests/loom/bounded.rs`.
+        slot.value.with_mut(|p| unsafe { (*p).write(value) });
         slot.full.store(true, Ordering::Release);
         self.pwrite = if self.pwrite + 1 == self.cap {
             0
@@ -333,6 +360,22 @@ impl<T> Producer<T> {
         self.ring.space_bell.parks()
     }
 
+    /// Multipush frames abandoned at drop **on this ring** (unlike the
+    /// process-global [`lost_frames`] aggregate, immune to cross-talk
+    /// from other queues in the process). Normally read from the
+    /// [`Consumer`] side — a producer that lost frames is usually gone.
+    pub fn lost_frames(&self) -> u64 {
+        self.ring.lost.load(Ordering::Relaxed)
+    }
+
+    /// Bound how long a dropping producer waits for a live-but-slow
+    /// consumer to make room for staged multipush frames before counting
+    /// them into [`Producer::lost_frames`] (default 2 s — see
+    /// [`DROP_FLUSH_DEADLINE`]).
+    pub fn set_drop_flush_deadline(&mut self, deadline: Duration) {
+        self.drop_deadline = deadline;
+    }
+
     /// The doorbell a full-ring wait parks on (rung by consumer pops) —
     /// for multi-queue waits such as the on-demand emitter.
     pub fn space_bell(&self) -> &Doorbell {
@@ -404,9 +447,15 @@ impl<T> Producer<T> {
             let ring = &*self.ring;
             for (i, v) in self.mbuf.drain(..).enumerate().rev() {
                 let slot = &ring.slots[(base + i) % cap];
-                // SAFETY: empty by the contiguity argument above; the
-                // consumer reads `v` only after the Release store.
-                unsafe { (*slot.value.get()).write(v) };
+                // SAFETY: slot `base + i` is empty by the contiguity
+                // argument above (`i <= len - 1` and the *last* slot's
+                // Acquire load returned false; the consumer clears in
+                // ring order, and that single Acquire happens-after its
+                // reads of every earlier slot in the run). The consumer
+                // reads `v` only after the per-slot Release store.
+                // Model-checked in `tests/loom/bounded.rs`
+                // (multipush_publish_vs_pop).
+                slot.value.with_mut(|p| unsafe { (*p).write(v) });
                 slot.full.store(true, Ordering::Release);
             }
         }
@@ -447,10 +496,15 @@ impl<T: Send> Consumer<T> {
         if !slot.full.load(Ordering::Acquire) {
             return None;
         }
-        // SAFETY: `full == true` (Acquire) happens-after the producer's
-        // write of the value; the producer will not rewrite this slot
-        // until it observes `full == false`.
-        let value = unsafe { (*slot.value.get()).assume_init_read() };
+        // SAFETY: the Acquire load of `full == true` synchronizes with
+        // the producer's Release store, so the producer's write of the
+        // value happens-before this read and the slot is initialized.
+        // The producer will not rewrite the slot until it observes the
+        // `full == false` Release below, which happens-after this read —
+        // so ownership of `value` transfers uniquely to us (the bits
+        // left behind are treated as uninitialized, never dropped).
+        // Model-checked in `tests/loom/bounded.rs`.
+        let value = slot.value.with(|p| unsafe { (*p).assume_init_read() });
         slot.full.store(false, Ordering::Release);
         self.pread = if self.pread + 1 == self.cap {
             0
@@ -514,6 +568,13 @@ impl<T: Send> Consumer<T> {
         self.ring.data_bell.parks()
     }
 
+    /// Multipush frames the (dropped) producer abandoned **on this
+    /// ring** — the per-ring counterpart of the process-global
+    /// [`lost_frames`] aggregate.
+    pub fn lost_frames(&self) -> u64 {
+        self.ring.lost.load(Ordering::Relaxed)
+    }
+
     /// The doorbell an empty-queue wait parks on (rung by producer
     /// publishes) — for multi-queue waits such as the farm collector.
     pub fn data_bell(&self) -> &Doorbell {
@@ -564,7 +625,7 @@ impl<T> Drop for Producer<T> {
         // for the liveness/loss trade-off). Frames abandoned — consumer
         // gone, or deadline hit — are counted, never dropped silently.
         if !self.mbuf.is_empty() {
-            let deadline = std::time::Instant::now() + DROP_FLUSH_DEADLINE;
+            let deadline = std::time::Instant::now() + self.drop_deadline;
             let mut backoff = Backoff::new();
             while !self.mbuf.is_empty() {
                 if self.try_flush() {
@@ -580,7 +641,9 @@ impl<T> Drop for Producer<T> {
                 });
             }
             if !self.mbuf.is_empty() {
-                LOST_FRAMES.fetch_add(self.mbuf.len() as u64, Ordering::Relaxed);
+                let n = self.mbuf.len() as u64;
+                self.ring.lost.fetch_add(n, Ordering::Relaxed);
+                LOST_FRAMES.fetch_add(n, Ordering::Relaxed);
             }
         }
         self.ring.producer_alive.store(false, Ordering::Release);
@@ -600,10 +663,16 @@ impl<T> Drop for Consumer<T> {
 impl<T> Drop for Ring<T> {
     fn drop(&mut self) {
         // Drop any values still in flight. Single-threaded here: both
-        // handles are gone (Arc refcount reached zero).
+        // handles are gone (Arc refcount reached zero), and the Arc
+        // release/acquire on the refcount ordered every queue operation
+        // before this destructor.
         for slot in self.slots.iter() {
             if slot.full.load(Ordering::Relaxed) {
-                unsafe { (*slot.value.get()).assume_init_drop() };
+                // SAFETY: `full == true` means the producer initialized
+                // the slot and the consumer never read it; we have
+                // `&mut self`, so this is the only access and each slot
+                // is dropped at most once.
+                slot.value.with_mut(|p| unsafe { (*p).assume_init_drop() });
             }
         }
     }
@@ -658,7 +727,8 @@ mod tests {
 
     #[test]
     fn fifo_across_threads() {
-        const N: usize = 30_000;
+        // Miri executes ~1000x slower; shrink cross-thread volumes.
+        const N: usize = if cfg!(miri) { 400 } else { 30_000 };
         let (mut p, mut c) = spsc::<usize>(64);
         let producer = std::thread::spawn(move || {
             for i in 0..N {
@@ -807,6 +877,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // wall-clock sleeps; pointless under Miri
     fn drop_flush_waits_out_a_slow_live_consumer() {
         // Regression (bugfix): the drop-time flush used to give up after
         // a bounded retry budget and silently discard staged frames even
@@ -858,10 +929,46 @@ mod tests {
     }
 
     #[test]
+    fn lost_frames_is_per_ring_and_isolated() {
+        // Satellite regression: tests running in parallel used to
+        // cross-talk through the process-global counter; the per-ring
+        // counter must attribute a loss to exactly the ring that
+        // incurred it (the global aggregate stays monotonic for the
+        // existing API).
+        let (mut p1, c1) = spsc::<u32>(4);
+        let (mut p2, c2) = spsc::<u32>(4);
+        assert_eq!(c1.lost_frames(), 0);
+        assert_eq!(p1.lost_frames(), 0);
+        // Short deadline: the consumer is alive but wedged, and waiting
+        // the full 2 s default would slow the suite for nothing.
+        p1.set_drop_flush_deadline(Duration::from_millis(25));
+        for i in 0..4 {
+            p1.push(i).unwrap(); // ring full
+        }
+        p1.set_burst(3);
+        p1.push_buffered(8).unwrap();
+        p1.push_buffered(9).unwrap();
+        assert_eq!(p1.staged(), 2);
+        let global_before = lost_frames();
+        drop(p1); // deadline expires against the live-but-wedged consumer
+        assert_eq!(c1.lost_frames(), 2, "loss attributed to its own ring");
+        assert_eq!(c2.lost_frames(), 0, "unrelated ring must not see it");
+        assert!(
+            lost_frames() >= global_before + 2,
+            "process-global aggregate still accumulates"
+        );
+        p2.push(1).unwrap();
+        drop(p2);
+        assert_eq!(c2.lost_frames(), 0, "clean drop loses nothing");
+        drop(c1);
+        drop(c2);
+    }
+
+    #[test]
     fn park_mode_fifo_across_threads() {
         // The bounded handshake end to end under WaitMode::Park: both
         // sides park when idle/full and every doorbell ring is heard.
-        const N: usize = 20_000;
+        const N: usize = if cfg!(miri) { 300 } else { 20_000 };
         let (mut p, mut c) = spsc::<usize>(8);
         p.set_wait(WaitMode::Park);
         c.set_wait(WaitMode::Park);
@@ -943,7 +1050,7 @@ mod tests {
 
     #[test]
     fn multipush_cross_thread_fifo() {
-        const N: usize = 30_000;
+        const N: usize = if cfg!(miri) { 400 } else { 30_000 };
         let (mut p, mut c) = spsc::<usize>(64);
         p.set_burst(16);
         let producer = std::thread::spawn(move || {
@@ -962,7 +1069,7 @@ mod tests {
     #[test]
     fn boxed_payloads_cross_threads() {
         // The paper's queues carry pointers; verify heap payloads survive.
-        const N: usize = 10_000;
+        const N: usize = if cfg!(miri) { 300 } else { 10_000 };
         let (mut p, mut c) = spsc::<Box<usize>>(128);
         let producer = std::thread::spawn(move || {
             for i in 0..N {

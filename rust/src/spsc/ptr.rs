@@ -23,9 +23,9 @@
 //! reused after the *same* consumer emptied it (single-producer /
 //! single-consumer discipline), and no compare-and-swap is involved.
 
-use std::sync::atomic::{AtomicBool, AtomicPtr, Ordering};
 use std::sync::Arc;
 
+use crate::sync::atomic::{AtomicBool, AtomicPtr, Ordering};
 use crate::util::CachePadded;
 
 struct PtrRing {
@@ -165,8 +165,11 @@ mod tests {
         Box::into_raw(Box::new(v)) as *mut u8
     }
 
+    /// # Safety
+    /// `p` must come from [`leak`] and be reclaimed exactly once.
     unsafe fn reclaim(p: *mut u8) -> u64 {
-        *Box::from_raw(p as *mut u64)
+        // SAFETY: per the function contract — a unique Box<u64> pointer.
+        unsafe { *Box::from_raw(p as *mut u64) }
     }
 
     #[test]
@@ -183,6 +186,7 @@ mod tests {
         let b = leak(22);
         assert!(p.push(a));
         assert!(p.push(b));
+        // SAFETY: each pointer was leaked once above and popped once.
         unsafe {
             assert_eq!(reclaim(c.pop()), 11);
             assert_eq!(reclaim(c.pop()), 22);
@@ -199,6 +203,8 @@ mod tests {
         assert!(p.push(a));
         assert!(p.push(b));
         assert!(!p.push(x)); // full
+        // SAFETY: a and b were queued and are popped once each; x was
+        // rejected by the full queue, so ownership stayed with us.
         unsafe {
             reclaim(c.pop());
             reclaim(c.pop());
@@ -208,7 +214,9 @@ mod tests {
 
     #[test]
     fn fifo_across_threads() {
-        const N: u64 = 20_000;
+        // Miri executes ~1000x slower; shrink cross-thread volumes (this
+        // raw-pointer ring is the prime Miri strict-provenance target).
+        const N: u64 = if cfg!(miri) { 400 } else { 20_000 };
         let (mut p, mut c) = ptr_spsc(64);
         let t = std::thread::spawn(move || {
             for i in 1..=N {
@@ -225,6 +233,9 @@ mod tests {
                 std::thread::yield_now();
                 continue;
             }
+            // SAFETY: a non-null pop is a pointer the producer leaked
+            // exactly once; the ring's Acquire/Release handshake
+            // transferred ownership to us.
             unsafe {
                 assert_eq!(reclaim(ptr), expect);
             }
@@ -239,6 +250,7 @@ mod tests {
         for round in 0..50u64 {
             let v = leak(round);
             assert!(p.push(v));
+            // SAFETY: leaked once, popped once.
             unsafe {
                 assert_eq!(reclaim(c.pop()), round);
             }

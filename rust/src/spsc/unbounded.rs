@@ -12,18 +12,26 @@
 //! Both directions (data and recycling) are plain SPSC flows, so the whole
 //! structure stays lock-free and RMW-free, like everything in this tier.
 
-use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU8, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::spsc::bounded::{spsc, Consumer as PoolCons, Producer as PoolProd};
+use crate::sync::atomic::{AtomicBool, AtomicPtr, AtomicU8, Ordering};
+use crate::sync::UnsafeCell;
 use crate::util::{Backoff, CachePadded, Doorbell, ParkGauge, WaitMode};
 
 /// Slots per segment. A power of two keeps the wrap test cheap; 1024
 /// words ≈ one 4 KB page of payload per segment.
+#[cfg(not(loom))]
 pub const SEG_CAP: usize = 1024;
+
+/// Under loom the segment shrinks to 2 slots so the segment-link and
+/// recycling interleavings are reachable within a tractable state space
+/// (`tests/loom/unbounded.rs`); the linking/recycling code paths are
+/// identical at any capacity.
+#[cfg(loom)]
+pub const SEG_CAP: usize = 2;
 
 /// Segments kept in the recycling pool before excess segments are freed.
 const POOL_CAP: usize = 8;
@@ -44,7 +52,15 @@ struct Seg<T> {
     pread: CachePadded<UnsafeCell<usize>>,
 }
 
+// SAFETY: a segment is shared between exactly two threads with disjoint
+// roles — the producer touches `pwrite` and empty slots (only while the
+// segment is the unlinked tail), the consumer touches `pread` and full
+// slots (only while it is the head); handoffs go through Release/Acquire
+// on each slot's `full` flag and on `next`. Values of `T` cross threads,
+// hence `T: Send`.
 unsafe impl<T: Send> Send for Seg<T> {}
+// SAFETY: see `Send` — all shared mutable state is transferred through
+// atomic handshakes; no `&T`-based sharing beyond those protocols.
 unsafe impl<T: Send> Sync for Seg<T> {}
 
 impl<T> Seg<T> {
@@ -65,9 +81,14 @@ impl<T> Seg<T> {
     /// Reset for reuse. Caller must have exclusive access (a drained,
     /// unlinked segment).
     fn reset(&mut self) {
-        *self.pwrite.get_mut() = 0;
-        *self.pread.get_mut() = 0;
-        self.next = AtomicPtr::new(std::ptr::null_mut());
+        // SAFETY: `&mut self` — no other reference to this segment
+        // exists (drained and unlinked), so the index cells are ours.
+        self.pwrite.with_mut(|p| unsafe { *p = 0 });
+        self.pread.with_mut(|p| unsafe { *p = 0 });
+        // Relaxed: the segment is thread-private here; its next transfer
+        // to another thread goes through the pool's Release/Acquire (or
+        // the tail link), which orders this store for the receiver.
+        self.next.store(std::ptr::null_mut(), Ordering::Relaxed);
         debug_assert!(self.slots.iter().all(|s| !s.full.load(Ordering::Relaxed)));
     }
 }
@@ -76,7 +97,10 @@ impl<T> Drop for Seg<T> {
     fn drop(&mut self) {
         for s in self.slots.iter() {
             if s.full.load(Ordering::Relaxed) {
-                unsafe { (*s.value.get()).assume_init_drop() };
+                // SAFETY: `full == true` means the slot holds an
+                // initialized value nobody consumed; `&mut self` makes
+                // this the only access, each slot dropped at most once.
+                s.value.with_mut(|p| unsafe { (*p).assume_init_drop() });
             }
         }
     }
@@ -84,10 +108,16 @@ impl<T> Drop for Seg<T> {
 
 /// A recycled segment travelling through the pool queue.
 struct SegBox<T>(*mut Seg<T>);
+// SAFETY: a `SegBox` is a uniquely-owned drained segment in transit
+// between consumer and producer; ownership (not sharing) moves across
+// threads, and the pool queue's own handshake orders the transfer.
 unsafe impl<T: Send> Send for SegBox<T> {}
 impl<T> Drop for SegBox<T> {
     fn drop(&mut self) {
-        // Pool teardown: reclaim the boxed segment.
+        // SAFETY: the pointer came from `Box::into_raw` and the pool
+        // holds the sole reference once a SegBox is queued — dropping it
+        // (pool teardown / pool-full overflow) reclaims the segment
+        // exactly once.
         unsafe { drop(Box::from_raw(self.0)) };
     }
 }
@@ -128,7 +158,11 @@ pub struct UnboundedConsumer<T> {
     gauge: Option<Arc<ParkGauge>>,
 }
 
+// SAFETY: the raw `tail` pointer is producer-private state (the
+// consumer reaches the same segment only through `next` links); moving
+// the half to another thread moves that exclusive role with it.
 unsafe impl<T: Send> Send for UnboundedProducer<T> {}
+// SAFETY: symmetric — `head` is consumer-private state.
 unsafe impl<T: Send> Send for UnboundedConsumer<T> {}
 
 /// Create an unbounded SPSC queue.
@@ -170,14 +204,26 @@ impl<T: Send> UnboundedProducer<T> {
     /// is full and the pool is empty).
     #[inline]
     pub fn push(&mut self, value: T) {
-        // SAFETY: `tail` is exclusively ours until we link a successor.
+        // SAFETY: `tail` points to a live segment (allocated by us or
+        // reclaimed through the pool) that only the producer dereferences
+        // until a successor is linked — and segments are freed only at
+        // teardown or after the consumer drained them past a link.
         let seg = unsafe { &*self.tail };
-        let w = unsafe { &mut *seg.pwrite.get() };
-        let slot = &seg.slots[*w];
+        // SAFETY (both accesses): `pwrite` is producer-private while the
+        // segment is the tail; the consumer touches it only in `reset`,
+        // ordered before us by the pool's Acquire pop.
+        let w = seg.pwrite.with(|p| unsafe { *p });
+        let slot = &seg.slots[w];
         if !slot.full.load(Ordering::Acquire) {
-            unsafe { (*slot.value.get()).write(value) };
+            // SAFETY: `full == false` (Acquire) — the slot is empty and
+            // ours; the consumer reads the value only after the Release
+            // store of `full == true`. Model-checked in
+            // `tests/loom/unbounded.rs`.
+            slot.value.with_mut(|p| unsafe { (*p).write(value) });
             slot.full.store(true, Ordering::Release);
-            *w = if *w + 1 == SEG_CAP { 0 } else { *w + 1 };
+            let next_w = if w + 1 == SEG_CAP { 0 } else { w + 1 };
+            // SAFETY: see `pwrite` access above.
+            seg.pwrite.with_mut(|p| unsafe { *p = next_w });
             self.inner.data_bell.ring();
             return;
         }
@@ -186,6 +232,9 @@ impl<T: Send> UnboundedProducer<T> {
             Some(sb) => {
                 let raw = sb.0;
                 std::mem::forget(sb); // we take ownership back from the pool
+                // SAFETY: the pool's Acquire pop synchronized with the
+                // consumer's Release push of this drained, unlinked
+                // segment — it is exclusively ours now.
                 unsafe { (*raw).reset() };
                 raw
             }
@@ -194,12 +243,16 @@ impl<T: Send> UnboundedProducer<T> {
                 Box::into_raw(Seg::<T>::new())
             }
         };
-        unsafe {
-            let s = &*new_seg;
-            (*s.slots[0].value.get()).write(value);
-            s.slots[0].full.store(true, Ordering::Release);
-            *s.pwrite.get() = 1;
-        }
+        // SAFETY: `new_seg` is exclusively ours (fresh allocation, or
+        // reclaimed + reset above); no other thread can reach it until
+        // the Release link below publishes it.
+        let s = unsafe { &*new_seg };
+        // SAFETY: exclusive access, see above; slot 0 of a reset/fresh
+        // segment is empty.
+        s.slots[0].value.with_mut(|p| unsafe { (*p).write(value) });
+        s.slots[0].full.store(true, Ordering::Release);
+        // SAFETY: exclusive access, see above.
+        s.pwrite.with_mut(|p| unsafe { *p = 1 });
         // Publish: after this store the old tail is consumer territory.
         seg.next.store(new_seg, Ordering::Release);
         self.tail = new_seg;
@@ -212,14 +265,29 @@ impl<T: Send> UnboundedConsumer<T> {
     #[inline]
     pub fn try_pop(&mut self) -> Option<T> {
         loop {
-            // SAFETY: `head` is exclusively ours until we advance past it.
+            // SAFETY: `head` points to a live segment only the consumer
+            // dereferences as head; it is unlinked from producer use
+            // (the producer moved on before the consumer can reach it
+            // via `next`, or it is the shared tail whose slots we touch
+            // only through the `full` handshake).
             let seg = unsafe { &*self.head };
-            let r = unsafe { &mut *seg.pread.get() };
-            let slot = &seg.slots[*r];
+            // SAFETY: `pread` is consumer-private while the segment is
+            // the head; the producer touches it only in `reset`, on a
+            // segment we released through the pool's Release push.
+            let r = seg.pread.with(|p| unsafe { *p });
+            let slot = &seg.slots[r];
             if slot.full.load(Ordering::Acquire) {
-                let value = unsafe { (*slot.value.get()).assume_init_read() };
+                // SAFETY: the Acquire load of `full == true`
+                // happens-after the producer's write, so the slot is
+                // initialized; the producer will not rewrite it until it
+                // observes the `full == false` Release below. Ownership
+                // transfers uniquely to us. Model-checked in
+                // `tests/loom/unbounded.rs`.
+                let value = slot.value.with(|p| unsafe { (*p).assume_init_read() });
                 slot.full.store(false, Ordering::Release);
-                *r = if *r + 1 == SEG_CAP { 0 } else { *r + 1 };
+                let next_r = if r + 1 == SEG_CAP { 0 } else { r + 1 };
+                // SAFETY: see `pread` access above.
+                seg.pread.with_mut(|p| unsafe { *p = next_r });
                 return Some(value);
             }
             // Head empty. Advance iff a successor was linked; the producer
@@ -232,8 +300,11 @@ impl<T: Send> UnboundedConsumer<T> {
             }
             let old = self.head;
             self.head = next;
-            // Recycle the drained segment (or free it if the pool is full).
+            // SAFETY: `old` is drained (empty + linked, see above) and
+            // the producer abandoned it when it linked the successor —
+            // we hold the only reference.
             unsafe { (*old).reset() };
+            // Recycle the drained segment (or free it if the pool is full).
             if let Err(full) = self.pool.try_push(SegBox(old)) {
                 self.frees += 1;
                 drop(full.0); // SegBox drop frees the segment
@@ -306,16 +377,27 @@ impl<T: Send> UnboundedConsumer<T> {
 
     /// True if a pop would currently yield a value.
     pub fn has_next(&self) -> bool {
+        // SAFETY: same head-segment / consumer-private `pread` contract
+        // as [`UnboundedConsumer::try_pop`].
         let seg = unsafe { &*self.head };
-        let r = unsafe { *seg.pread.get() };
+        let r = seg.pread.with(|p| unsafe { *p });
         seg.slots[r].full.load(Ordering::Acquire)
             || !seg.next.load(Ordering::Acquire).is_null()
     }
 }
 
+/// Free a linked segment chain starting at `head` (teardown path).
+///
+/// # Safety
+/// The caller must hold exclusive ownership of every segment in the
+/// chain: both queue halves have dropped (the `live` AcqRel handoff
+/// ordered all prior operations before this call) and each segment was
+/// created by `Box::into_raw`.
 unsafe fn free_chain<T>(mut head: *mut Seg<T>) {
     while !head.is_null() {
-        let seg = Box::from_raw(head);
+        // SAFETY: per the function contract — sole owner, Box-allocated,
+        // each segment reachable exactly once via `next`.
+        let seg = unsafe { Box::from_raw(head) };
         head = seg.next.load(Ordering::Acquire);
         drop(seg);
     }
@@ -326,6 +408,10 @@ impl<T> Drop for UnboundedProducer<T> {
         if self.inner.live.fetch_sub(1, Ordering::AcqRel) == 1 {
             // Consumer already gone; it published its head for us.
             let head = self.inner.orphan_head.load(Ordering::Acquire);
+            // SAFETY: we are the last half (fetch_sub returned 1, and
+            // the AcqRel RMW ordered the consumer's final operations —
+            // including the orphan_head Release store — before us); the
+            // chain is exclusively ours.
             unsafe { free_chain(head) };
         } else {
             // Wake a parked consumer so it observes the disconnect.
@@ -338,6 +424,10 @@ impl<T> Drop for UnboundedConsumer<T> {
     fn drop(&mut self) {
         self.inner.orphan_head.store(self.head, Ordering::Release);
         if self.inner.live.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // SAFETY: we are the last half — the producer already
+            // dropped, so every segment from `head` onward (including
+            // any it linked after we stopped popping) is exclusively
+            // ours via the AcqRel handoff on `live`.
             unsafe { free_chain(self.head) };
         }
         // The pool halves drop after this, freeing pooled segments via
@@ -380,7 +470,8 @@ mod tests {
     fn recycles_segments_in_steady_state() {
         let (mut p, mut c) = unbounded_spsc::<usize>();
         // Interleave so the consumer keeps returning segments to the pool.
-        for round in 0..10 {
+        let rounds = if cfg!(miri) { 3 } else { 10 };
+        for round in 0..rounds {
             for i in 0..SEG_CAP {
                 p.push(round * SEG_CAP + i);
             }
@@ -398,7 +489,8 @@ mod tests {
 
     #[test]
     fn fifo_across_threads() {
-        const N: usize = 50_000;
+        // Miri executes ~1000x slower; shrink cross-thread volumes.
+        const N: usize = if cfg!(miri) { 500 } else { 50_000 };
         let (mut p, mut c) = unbounded_spsc::<usize>();
         let t = std::thread::spawn(move || {
             for i in 0..N {
@@ -413,6 +505,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // wall-clock sleeps; pointless under Miri
     fn park_mode_fifo_and_disconnect_wake() {
         // Park-mode consumer: every publish (fast path and segment
         // link) and the producer's disconnect must ring the doorbell.

@@ -1,0 +1,126 @@
+//! Concurrency facade for the lock-free core: `std` primitives in real
+//! builds, [loom](https://docs.rs/loom)'s model-checked doubles under
+//! `--cfg loom`.
+//!
+//! The paper's correctness story ("lock-free (fence-free) synchronization
+//! mechanisms", §2.2) rests on memory-ordering arguments — FastForward's
+//! in-order-clear property, the multipush single-Acquire publish
+//! (TR-09-12), the doorbell's SeqCst-fence handshake. This module is what
+//! makes those arguments *machine-checked* instead of comment-checked:
+//! every concurrency-bearing module of the core (`spsc::bounded`,
+//! `spsc::unbounded`, `spsc::ptr`, `baseline::lamport`, `util`'s
+//! `Doorbell`/`Backoff`/`ParkGauge`) imports its atomics, cells and
+//! thread-parking through here, so the exact production code paths run
+//! under loom's permutation-exploring scheduler in `tests/loom/`
+//! (`make loom`, the `loom` CI lane).
+//!
+//! # Zero cost outside loom
+//!
+//! Under `cfg(not(loom))` every item is a re-export of (or an
+//! `#[inline(always)]` transparent wrapper over) the `std` original, so
+//! the facade compiles to **identical atomics** — the `Spin` hot path is
+//! bit-for-bit the pre-facade runtime (guarded by `BENCH_queue_latency`
+//! in the bench-smoke lane).
+//!
+//! # Deliberate divergences under loom
+//!
+//! * [`thread::park_timeout`] maps to `loom::thread::park()` — no
+//!   timeout. In production the 25 ms [`crate::util::PARK_TIMEOUT`] is
+//!   defense-in-depth; removing it in the model makes the check
+//!   *stronger*: a wakeup lost by the doorbell handshake becomes a model
+//!   deadlock loom reports, instead of latency a timeout would paper
+//!   over.
+//! * [`hint::spin_loop`] maps to `loom::thread::yield_now()` so every
+//!   spin iteration is a scheduling point the model explores.
+//! * `Arc` is intentionally **not** part of the facade: refcount
+//!   lifetimes are not what the models check, and loom's `Arc` would
+//!   force the (unmodeled) upper layers through the facade too. Models
+//!   establish teardown ordering with `join` instead.
+//! * The process-global [`crate::spsc::bounded::lost_frames`] aggregate
+//!   stays a `std` atomic even under loom: it is a monotonic statistics
+//!   counter, not a synchronization edge.
+
+#[cfg(not(loom))]
+mod imp {
+    /// Atomic types and fences (`std::sync::atomic`).
+    pub mod atomic {
+        pub use std::sync::atomic::{
+            fence, AtomicBool, AtomicPtr, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+        };
+    }
+
+    /// Thread parking/yielding (`std::thread`).
+    pub mod thread {
+        pub use std::thread::{current, park_timeout, yield_now, Thread};
+    }
+
+    /// Spin hints (`std::hint`).
+    pub mod hint {
+        pub use std::hint::spin_loop;
+    }
+
+    pub use std::sync::Mutex;
+
+    /// `std::cell::UnsafeCell` behind loom's closure-based API
+    /// (`with` / `with_mut`), so the same call sites compile against
+    /// either implementation. The closures are `#[inline(always)]`
+    /// pass-throughs of `UnsafeCell::get` — zero overhead.
+    #[repr(transparent)]
+    pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+    impl<T> UnsafeCell<T> {
+        #[inline(always)]
+        pub const fn new(data: T) -> UnsafeCell<T> {
+            UnsafeCell(std::cell::UnsafeCell::new(data))
+        }
+
+        /// Immutable access to the cell's contents. The `*const T` is
+        /// valid for the duration of the closure; the caller upholds
+        /// the aliasing discipline (loom verifies it in model builds).
+        #[inline(always)]
+        pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        /// Mutable access to the cell's contents (same contract as
+        /// [`UnsafeCell::with`], exclusive).
+        #[inline(always)]
+        pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+            f(self.0.get())
+        }
+    }
+}
+
+#[cfg(loom)]
+mod imp {
+    /// Atomic types and fences (loom doubles).
+    pub mod atomic {
+        pub use loom::sync::atomic::{
+            fence, AtomicBool, AtomicPtr, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+        };
+    }
+
+    /// Thread parking/yielding (loom doubles). `park_timeout` drops the
+    /// timeout on purpose — see the module docs: a lost wakeup must
+    /// surface as a model deadlock, not hide behind the 25 ms bound.
+    pub mod thread {
+        pub use loom::thread::{current, yield_now, Thread};
+
+        pub fn park_timeout(_timeout: std::time::Duration) {
+            loom::thread::park();
+        }
+    }
+
+    /// Spin hints: under loom every spin is a yield so the scheduler
+    /// treats it as a preemption point.
+    pub mod hint {
+        pub fn spin_loop() {
+            loom::thread::yield_now();
+        }
+    }
+
+    pub use loom::cell::UnsafeCell;
+    pub use loom::sync::Mutex;
+}
+
+pub use imp::*;

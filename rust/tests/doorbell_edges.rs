@@ -1,0 +1,194 @@
+//! API-level edge tests for the [`Doorbell`]/[`Backoff`] wait plumbing:
+//! the wake-before-park race, concurrent unparks from two ringers, the
+//! park-grace escalation contract, and stale-token absorption. These run
+//! under the normal test harness (and the TSan lane); the same handshake
+//! is exhaustively model-checked in `tests/loom/doorbell.rs` — here we
+//! hammer the real `std::thread` park/unpark with wall-clock scheduling.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastflow::util::{park_any, Backoff, Doorbell, WaitMode};
+
+/// A watchdog that fails the test loudly instead of letting a lost
+/// wakeup hang the whole suite: the doorbell handshake's production
+/// backstop is PARK_TIMEOUT (25 ms), so multi-second stalls mean a bug.
+fn with_deadline<T: Send + 'static>(
+    secs: u64,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    let out = rx
+        .recv_timeout(Duration::from_secs(secs))
+        .expect("doorbell wait exceeded the watchdog deadline");
+    t.join().unwrap();
+    out
+}
+
+#[test]
+fn wake_just_before_park_is_not_lost() {
+    // Race the ringer into the window between the waiter's decision to
+    // park and the park itself, many times over. The register→fence→
+    // recheck protocol (plus the unpark token) must win every race; the
+    // watchdog converts a loss into a failure instead of a hang.
+    with_deadline(30, || {
+        for _ in 0..200 {
+            let bell = Arc::new(Doorbell::new());
+            let flag = Arc::new(AtomicBool::new(false));
+            let (wb, wf) = (bell.clone(), flag.clone());
+            let waiter = std::thread::spawn(move || {
+                while !wf.load(Ordering::Acquire) {
+                    wb.park_while(None, || !wf.load(Ordering::Acquire));
+                }
+            });
+            // No sleep: publish + ring immediately so the ring lands
+            // anywhere in the waiter's register/recheck/park window.
+            flag.store(true, Ordering::Release);
+            bell.ring();
+            waiter.join().unwrap();
+        }
+    });
+}
+
+#[test]
+fn concurrent_double_unpark_wakes_the_waiter() {
+    // Two producers ringing the same bell back to back: both may pass
+    // the `waiting` check and race into `wake()`; the slot mutex hands
+    // the thread to one of them and the second unpark (or stale token)
+    // must be harmless. The waiter needs *both* publications.
+    with_deadline(30, || {
+        for _ in 0..200 {
+            let bell = Arc::new(Doorbell::new());
+            let a = Arc::new(AtomicBool::new(false));
+            let b = Arc::new(AtomicBool::new(false));
+            let ringers: Vec<_> = [a.clone(), b.clone()]
+                .into_iter()
+                .map(|f| {
+                    let bell = bell.clone();
+                    std::thread::spawn(move || {
+                        f.store(true, Ordering::Release);
+                        bell.ring();
+                    })
+                })
+                .collect();
+            let done = || a.load(Ordering::Acquire) && b.load(Ordering::Acquire);
+            while !done() {
+                bell.park_while(None, || !done());
+            }
+            for r in ringers {
+                r.join().unwrap();
+            }
+        }
+    });
+}
+
+#[test]
+fn park_any_woken_by_any_single_lane() {
+    // The merge-arbiter wait: registered on two lanes, rung on one —
+    // alternating which lane publishes, so a registration that skipped
+    // either bell shows up as a watchdog failure.
+    with_deadline(30, || {
+        for round in 0..200 {
+            let bells = [Arc::new(Doorbell::new()), Arc::new(Doorbell::new())];
+            let flag = Arc::new(AtomicBool::new(false));
+            let (b0, b1, wf) = (bells[0].clone(), bells[1].clone(), flag.clone());
+            let waiter = std::thread::spawn(move || {
+                while !wf.load(Ordering::Acquire) {
+                    park_any(&[&b0, &b1], None, || !wf.load(Ordering::Acquire));
+                }
+            });
+            flag.store(true, Ordering::Release);
+            bells[round % 2].ring();
+            waiter.join().unwrap();
+        }
+    });
+}
+
+#[test]
+fn backoff_escalates_to_park_only_past_the_threshold() {
+    // WaitMode contract: Spin never parks; Park requires the spin/yield
+    // budget to drain first (so a single failed pop never pays a park).
+    let mut b = Backoff::new();
+    for _ in 0..100 {
+        assert!(!b.should_park(WaitMode::Spin, Duration::ZERO));
+        b.snooze();
+    }
+    let mut b = Backoff::new();
+    let mut snoozes = 0;
+    while !b.should_park(WaitMode::Park, Duration::ZERO) {
+        b.snooze();
+        snoozes += 1;
+        assert!(snoozes < 100, "Park mode must eventually allow parking");
+    }
+    assert!(
+        snoozes >= 4,
+        "parked after only {snoozes} snoozes — the spin/yield budget was skipped"
+    );
+    // Adaptive holds out longer than Park: short stalls stay on-CPU.
+    let mut adaptive = Backoff::new();
+    for _ in 0..snoozes {
+        adaptive.snooze();
+    }
+    assert!(!adaptive.should_park(WaitMode::Adaptive, Duration::ZERO));
+    // Progress resets the escalation.
+    b.reset();
+    assert!(!b.should_park(WaitMode::Park, Duration::ZERO));
+}
+
+#[test]
+#[cfg_attr(miri, ignore)] // wall-clock timing; meaningless under Miri
+fn park_grace_defers_the_first_park() {
+    // Elasticity contract: with a grace period, should_park stays false
+    // until the wait has been idle that long — measured from the first
+    // post-threshold query, so a shard burst-idling for less than the
+    // grace never releases its CPU.
+    let grace = Duration::from_millis(40);
+    let mut b = Backoff::new();
+    let start = Instant::now();
+    while !b.should_park(WaitMode::Park, grace) {
+        b.snooze();
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "grace of 40ms never elapsed"
+        );
+    }
+    assert!(
+        start.elapsed() >= grace,
+        "parked after {:?}, before the {grace:?} grace",
+        start.elapsed()
+    );
+}
+
+#[test]
+fn stale_unpark_token_is_absorbed() {
+    // A ring with nobody registered must not wake (or corrupt) a later
+    // wait: ring on an unarmed bell, then a normal park episode — the
+    // park must still end via its own ring, and the parks counter only
+    // counts real parks.
+    with_deadline(30, || {
+        let bell = Arc::new(Doorbell::new());
+        bell.ring(); // unarmed: no waiter has ever registered
+        assert_eq!(bell.parks(), 0);
+        let flag = Arc::new(AtomicBool::new(false));
+        let (wb, wf) = (bell.clone(), flag.clone());
+        let waiter = std::thread::spawn(move || {
+            while !wf.load(Ordering::Acquire) {
+                wb.park_while(None, || !wf.load(Ordering::Acquire));
+            }
+        });
+        // Wait until the waiter has really parked at least once (the
+        // parks counter increments just before the park); the outer
+        // watchdog bounds this loop.
+        while bell.parks() == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        flag.store(true, Ordering::Release);
+        bell.ring();
+        waiter.join().unwrap();
+        assert!(bell.parks() >= 1, "the waiter should have really parked");
+    });
+}

@@ -1,0 +1,36 @@
+//! Model for the [`fastflow::alloc::BatchPool`] free lane: batch
+//! buffers recycled from the receiver thread back to the sender thread
+//! ride an SPSC ring, so the take/give handshake inherits the bounded
+//! queue's Release/Acquire transfer — this model checks the composition
+//! (clear-before-return, unique ownership of the recycled `Vec`).
+
+use fastflow::alloc::BatchPool;
+use loom::thread;
+
+/// The sender draws a frame, fills it, and ships it to another thread,
+/// which returns it through the `BatchReturner` while the sender
+/// concurrently draws again. Whatever the interleaving, a drawn frame
+/// is empty (recycled frames are cleared by `give`) and never shared.
+#[test]
+fn take_give_take_across_threads() {
+    loom::model(|| {
+        let (mut pool, mut ret) = BatchPool::<u32>::with_cap(2);
+        let mut frame = pool.take();
+        frame.push(41);
+        frame.push(42);
+        let t = thread::spawn(move || {
+            ret.give(frame); // clears + pushes onto the free lane
+            ret
+        });
+        // Concurrent with the give: either the recycled (cleared)
+        // buffer or a fresh one — both must be empty.
+        let drawn = pool.take();
+        assert!(drawn.is_empty(), "drawn frames must always be empty");
+        let ret = t.join().unwrap();
+        // After the join the returned frame is visible: this take may
+        // reuse it, and reuse must hand back a cleared buffer.
+        let drawn2 = pool.take();
+        assert!(drawn2.is_empty());
+        drop((drawn, drawn2, ret));
+    });
+}

@@ -1,0 +1,33 @@
+//! Model for the typed stream layer ([`fastflow::channel`]): one task
+//! frame followed by EOS through a bounded stream. The channel adds
+//! framing (`Msg`), the multipush stage, and the batch pool on top of
+//! the raw ring — this model checks that the composed send path
+//! (flush-then-push) still delivers frames exactly once and in order.
+
+use fastflow::channel::{stream, Msg};
+use loom::thread;
+
+#[test]
+fn task_then_eos_in_order() {
+    loom::model(|| {
+        let (mut tx, mut rx) = stream::<u32>(2);
+        let t = thread::spawn(move || {
+            assert!(tx.send(5).is_ok());
+            assert!(tx.send_eos().is_ok());
+        });
+        let mut tasks = 0;
+        loop {
+            match rx.try_recv() {
+                Some(Msg::Task(v)) => {
+                    assert_eq!(v, 5);
+                    tasks += 1;
+                }
+                Some(Msg::Eos) => break,
+                Some(Msg::Batch(_)) => panic!("no batch was sent"),
+                None => thread::yield_now(),
+            }
+        }
+        assert_eq!(tasks, 1, "exactly one task before EOS");
+        t.join().unwrap();
+    });
+}

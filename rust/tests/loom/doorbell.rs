@@ -1,0 +1,88 @@
+//! Models for the [`fastflow::util::Doorbell`] register→fence→recheck→
+//! park handshake. Under loom `park_timeout` is a real `park()` with no
+//! timeout (see `fastflow::sync`), so **any** lost wakeup manifests as a
+//! loom-detected deadlock instead of hiding behind the production
+//! 25 ms backstop — these models prove the SeqCst fence pair (the
+//! store-buffering argument) actually carries the handshake.
+
+use fastflow::util::{park_any, Doorbell};
+use loom::sync::atomic::{AtomicBool, Ordering};
+use loom::sync::Arc;
+use loom::thread;
+
+/// One waiter, one ringer: the ringer publishes a flag (Release), then
+/// rings. The waiter loops `park_while` until it sees the flag. Either
+/// the waiter's post-fence recheck sees the flag, or the ringer's
+/// post-fence load sees `waiting` and unparks — both sides missing each
+/// other would deadlock the model.
+#[test]
+fn ring_never_lost() {
+    loom::model(|| {
+        let bell = Arc::new(Doorbell::new());
+        let flag = Arc::new(AtomicBool::new(false));
+        let (wb, wf) = (bell.clone(), flag.clone());
+        let waiter = thread::spawn(move || {
+            while !wf.load(Ordering::Acquire) {
+                wb.park_while(None, || !wf.load(Ordering::Acquire));
+            }
+        });
+        flag.store(true, Ordering::Release);
+        bell.ring();
+        waiter.join().unwrap();
+    });
+}
+
+/// The multi-lane wait used by merge arbiters: the waiter registers on
+/// two bells, but only the *second* lane's bell is rung. The `park_any`
+/// registration must cover every lane for the fence argument to hold.
+#[test]
+fn park_any_hears_either_lane() {
+    loom::model(|| {
+        let bell_a = Arc::new(Doorbell::new());
+        let bell_b = Arc::new(Doorbell::new());
+        let flag = Arc::new(AtomicBool::new(false));
+        let (wa, wbell, wf) = (bell_a.clone(), bell_b.clone(), flag.clone());
+        let waiter = thread::spawn(move || {
+            while !wf.load(Ordering::Acquire) {
+                park_any(&[&wa, &wbell], None, || !wf.load(Ordering::Acquire));
+            }
+        });
+        flag.store(true, Ordering::Release);
+        bell_b.ring(); // only lane B publishes
+        waiter.join().unwrap();
+    });
+}
+
+/// Two concurrent ringers against one waiter: both may observe
+/// `waiting` and race into `wake()`, where the `slot` mutex hands the
+/// parked thread to exactly one of them (the other finds the slot
+/// empty). The waiter must terminate once both flags are up, across
+/// every interleaving of the two ring/fence sequences.
+#[test]
+fn concurrent_ringers_single_waiter() {
+    loom::model(|| {
+        let bell = Arc::new(Doorbell::new());
+        let flag_a = Arc::new(AtomicBool::new(false));
+        let flag_b = Arc::new(AtomicBool::new(false));
+        let ringer_a = {
+            let (b, f) = (bell.clone(), flag_a.clone());
+            thread::spawn(move || {
+                f.store(true, Ordering::Release);
+                b.ring();
+            })
+        };
+        let ringer_b = {
+            let (b, f) = (bell.clone(), flag_b.clone());
+            thread::spawn(move || {
+                f.store(true, Ordering::Release);
+                b.ring();
+            })
+        };
+        let done = || flag_a.load(Ordering::Acquire) && flag_b.load(Ordering::Acquire);
+        while !done() {
+            bell.park_while(None, || !done());
+        }
+        ringer_a.join().unwrap();
+        ringer_b.join().unwrap();
+    });
+}

@@ -1,0 +1,39 @@
+//! Model for the Lamport baseline ring
+//! ([`fastflow::baseline::lamport`]) — the shared-index queue the paper
+//! argues against. It is the *comparison* implementation, so its
+//! head/tail Release/Acquire protocol gets the same model-checking bar
+//! as the FastForward ring it is benchmarked versus.
+
+use fastflow::baseline::lamport::lamport;
+use fastflow::spsc::Full;
+use loom::thread;
+
+/// Three items through a cap-2 ring: wraps the (cap + 1)-sized internal
+/// buffer and crosses the full/empty boundary both ways, under every
+/// interleaving of the shared head/tail loads.
+#[test]
+fn shared_index_fifo_with_wrap() {
+    loom::model(|| {
+        let (mut p, mut c) = lamport::<u32>(2);
+        let t = thread::spawn(move || {
+            for i in 0..3u32 {
+                let mut v = i;
+                while let Err(Full(back)) = p.try_push(v) {
+                    v = back;
+                    thread::yield_now();
+                }
+            }
+        });
+        for expect in 0..3u32 {
+            loop {
+                if let Some(v) = c.try_pop() {
+                    assert_eq!(v, expect);
+                    break;
+                }
+                thread::yield_now();
+            }
+        }
+        t.join().unwrap();
+        assert_eq!(c.try_pop(), None);
+    });
+}

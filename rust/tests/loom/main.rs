@@ -1,0 +1,29 @@
+//! Loom models for the lock-free core — run with:
+//!
+//! ```sh
+//! RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 \
+//!     cargo test --release --test loom
+//! ```
+//!
+//! (or `make loom` from the repository root; the `loom` CI lane runs the
+//! same command). Under `--cfg loom` the crate's `sync` facade swaps
+//! `std::sync::atomic` / `std::thread` / `UnsafeCell` for loom's
+//! model-checked doubles, so these models execute the *production* queue
+//! and doorbell code paths — not test replicas — under a scheduler that
+//! explores thread interleavings and weak-memory outcomes (bounded to 3
+//! preemptions per execution, which catches every known bug class for
+//! code of this size; see EXPERIMENTS.md §Verification).
+//!
+//! Model discipline: 2–3 threads, tiny capacities (`SEG_CAP == 2` under
+//! loom), retry loops always `loom::thread::yield_now()` so every spin
+//! is a scheduling point, and every spawned thread is joined before the
+//! model ends (join is the loom-visible happens-before edge that orders
+//! teardown — the facade deliberately does not model `Arc`).
+#![cfg(loom)]
+
+mod batch_pool;
+mod bounded;
+mod channel_model;
+mod doorbell;
+mod lamport;
+mod unbounded;

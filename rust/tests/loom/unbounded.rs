@@ -1,0 +1,61 @@
+//! Models for the unbounded uSWSR queue
+//! ([`fastflow::spsc::unbounded`]): segment linking (Release publish of
+//! `next` after filling the tail), consumer advance + recycling through
+//! the pool lane, and the `live` AcqRel teardown handoff that decides
+//! which half frees the chain. `SEG_CAP` is 2 under loom so the link
+//! and recycle paths are reachable within a tractable state space.
+
+use fastflow::spsc::unbounded::{unbounded_spsc, SEG_CAP};
+use loom::thread;
+
+/// Five items through 2-slot segments: the producer links two new
+/// segments (exercising both the pool-recycle and fresh-allocation
+/// arms) while the consumer concurrently drains, advances heads, and
+/// pushes drained segments back through the pool. FIFO must hold across
+/// every link boundary.
+#[test]
+fn links_segments_and_recycles_fifo() {
+    loom::model(|| {
+        assert_eq!(SEG_CAP, 2, "loom build must use the tiny segment");
+        const N: usize = 5;
+        let (mut p, mut c) = unbounded_spsc::<usize>();
+        let t = thread::spawn(move || {
+            for i in 0..N {
+                p.push(i);
+            }
+        });
+        for expect in 0..N {
+            loop {
+                if let Some(v) = c.try_pop() {
+                    assert_eq!(v, expect);
+                    break;
+                }
+                thread::yield_now();
+            }
+        }
+        t.join().unwrap();
+        assert_eq!(c.try_pop(), None);
+    });
+}
+
+/// Concurrent teardown: the consumer drops (publishing its head via the
+/// `orphan_head` Release store) *while* the producer is still pushing —
+/// possibly linking fresh segments into the now-orphaned chain — and
+/// then drops too. Whichever half decrements `live` to zero must see
+/// the complete chain through the AcqRel handoff and free every
+/// segment exactly once (loom's cell bookkeeping flags any access to a
+/// freed segment).
+#[test]
+fn concurrent_teardown_frees_chain_once() {
+    loom::model(|| {
+        let (mut p, c) = unbounded_spsc::<usize>();
+        let t = thread::spawn(move || {
+            for i in 0..3 {
+                p.push(i); // crosses a segment link at SEG_CAP == 2
+            }
+            drop(p);
+        });
+        drop(c); // races the pushes and the producer's drop
+        t.join().unwrap();
+    });
+}
