@@ -9,7 +9,10 @@ CARGO  ?= cargo
 PYTHON ?= python
 ARTIFACT_DIR ?= artifacts
 
-.PHONY: all build test test-fallback test-oversub bench bench-smoke doc artifacts fmt clippy lint loom miri tsan pytest clean
+.PHONY: all build test test-fallback test-oversub bench bench-smoke bench-diff bench-baseline doc artifacts fmt clippy lint loom miri tsan pytest clean
+
+# The quick-mode benches that feed the committed perf wall (bench/).
+BENCH_SMOKE_SET = accel_multiclient nested_topologies allocator queue_latency placement
 
 all: build
 
@@ -36,28 +39,41 @@ bench:
 	cd rust && $(CARGO) bench --bench fig4_mandelbrot -- --quick
 	cd rust && $(CARGO) bench --bench table2_nqueens -- --quick
 
-# CI smoke lane: compile every bench, then run short sweeps that write
-# $(ARTIFACT_DIR)/BENCH_accel.json (multi-client service),
-# $(ARTIFACT_DIR)/BENCH_accel_nesting.json (composition overhead),
-# $(ARTIFACT_DIR)/BENCH_alloc.json (allocator plateau study),
-# $(ARTIFACT_DIR)/BENCH_queue_latency_multipush.json (multipush on/off
-# sweep) and $(ARTIFACT_DIR)/BENCH_queue_latency_waitmode.json
-# (Spin/Adaptive/Park hot-path cost) — the machine-readable perf
-# trajectory benchkit emits via FF_BENCH_JSON.
+# CI smoke lane: compile every bench, then run the quick sweeps in
+# $(BENCH_SMOKE_SET), writing $(ARTIFACT_DIR)/BENCH_*.json (the
+# machine-readable perf trajectory benchkit emits via FF_BENCH_JSON)
+# and diffing each report against the committed wall in bench/
+# (FF_BENCH_BASELINE — advisory here: regressions print `bench-diff:`
+# lines but never fail; see bench-diff for the blocking form).
 bench-smoke:
 	cd rust && $(CARGO) bench --no-run
-	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
+	cd rust && for b in $(BENCH_SMOKE_SET); do \
+		FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
 		FF_BENCH_JSON=$(abspath $(ARTIFACT_DIR)) \
-		$(CARGO) bench --bench accel_multiclient -- --quick
-	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
-		FF_BENCH_JSON=$(abspath $(ARTIFACT_DIR)) \
-		$(CARGO) bench --bench nested_topologies -- --quick
-	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
-		FF_BENCH_JSON=$(abspath $(ARTIFACT_DIR)) \
-		$(CARGO) bench --bench allocator -- --quick
-	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
-		FF_BENCH_JSON=$(abspath $(ARTIFACT_DIR)) \
-		$(CARGO) bench --bench queue_latency -- --quick
+		FF_BENCH_BASELINE=$(abspath bench) \
+		$(CARGO) bench --bench $$b -- --quick || exit 1; \
+	done
+
+# The blocking perf gate (self-hosted perf runners, or local checks on
+# a quiet machine): same quick sweeps, but any regression beyond
+# FF_BENCH_TOLERANCE (default ±30%) vs the committed bench/ baselines
+# fails the target.
+bench-diff:
+	cd rust && for b in $(BENCH_SMOKE_SET); do \
+		FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
+		FF_BENCH_BASELINE=$(abspath bench) FF_BENCH_STRICT=1 \
+		$(CARGO) bench --bench $$b -- --quick || exit 1; \
+	done
+
+# Move the wall: regenerate the committed baselines in bench/ (run on a
+# quiet machine, then commit the changed JSONs with the PR that
+# justifies them — see bench/README.md).
+bench-baseline:
+	cd rust && for b in $(BENCH_SMOKE_SET); do \
+		FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
+		FF_BENCH_JSON=$(abspath bench) \
+		$(CARGO) bench --bench $$b -- --quick || exit 1; \
+	done
 
 # API docs with rustdoc warnings denied (deprecation shims must stay
 # documented; broken intra-doc links fail the build).

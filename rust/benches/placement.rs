@@ -1,0 +1,243 @@
+//! Placement sweep: does topology-aware thread→core mapping pay?
+//!
+//! Two workloads, each swept over `mapping` ∈ {none, rr, topo}:
+//!
+//! * **queue ping-pong** — the §2.2 latency probe (two cap-4 SPSC
+//!   queues, one token round trip at a time), with the two endpoint
+//!   threads placed by [`CpuMap`]. `topo` puts the pair on cache-near
+//!   cores (same LLC group, distinct physical cores); `rr` walks the
+//!   allowed list blindly; `none` leaves the OS scheduler alone.
+//! * **pool shards × clients** — the `accel_multiclient` service shape.
+//!   `topo` uses [`Placement::Topology`] (each shard's farm packed into
+//!   its own LLC group); `rr` pins every shard's farm threads
+//!   round-robin from core 0 (deliberately ignoring cache groups);
+//!   `none` is unpinned round-robin dispatch.
+//!
+//! With the `perf-counters` feature the table grows LLC-miss/op and
+//! instr/op columns (else `n/a`). Pinning only changes *where* threads
+//! run, never results: the Spin-mode bit-identity property is enforced
+//! by `tests/placement.rs`, this bench measures the perf delta.
+//!
+//! `cargo bench --bench placement [-- --quick]`
+//! `FF_BENCH_JSON=dir` emits `BENCH_placement.json`;
+//! `FF_BENCH_BASELINE=bench` diffs against the committed wall.
+
+use std::time::Instant;
+
+use fastflow::accel::{AccelHandle, AccelPool, Placement, PoolConfig};
+use fastflow::benchkit::{measure, perf, BenchOpts, Report};
+use fastflow::farm::FarmConfig;
+use fastflow::metrics::{Stats, Table};
+use fastflow::node::node_fn;
+use fastflow::sched::{pin_current_thread, pins_attempted, pins_failed, CpuMap, MappingPolicy};
+use fastflow::spsc::spsc;
+use fastflow::topo::Topology;
+use fastflow::util::num_cpus;
+
+/// Busy-work calibrated in iterations (~1ns each; matches granularity.rs).
+#[inline]
+fn spin_work(iters: u64) -> u64 {
+    let mut acc = 0u64;
+    for i in 0..iters {
+        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+    }
+    std::hint::black_box(acc)
+}
+
+/// The three placement lanes under test.
+const MAPPINGS: &[(&str, MappingPolicy)] = &[
+    ("none", MappingPolicy::None),
+    ("rr", MappingPolicy::RoundRobin { start: 0 }),
+    ("topo", MappingPolicy::Topology { group: 0 }),
+];
+
+/// Ping-pong entirely inside two spawned threads (the main thread stays
+/// unpinned); returns mean ns/round-trip and the counter deltas for the
+/// whole run.
+fn pingpong(opts: BenchOpts, rounds: u64, mapping: MappingPolicy) -> (f64, Option<perf::Sample>) {
+    let map = CpuMap::build(mapping, 2, &[]);
+    let (cpu_a, cpu_b) = (map.core_for(0), map.core_for(1));
+    let counters = perf::Counters::start();
+    let (mut ptx, mut prx) = spsc::<u64>(4);
+    let (mut qtx, mut qrx) = spsc::<u64>(4);
+    let echo = std::thread::spawn(move || {
+        if let Some(cpu) = cpu_b {
+            pin_current_thread(cpu);
+        }
+        while let Some(v) = prx.pop() {
+            if v == u64::MAX {
+                break;
+            }
+            qtx.push(v).unwrap();
+        }
+    });
+    let pinger = std::thread::spawn(move || {
+        if let Some(cpu) = cpu_a {
+            pin_current_thread(cpu);
+        }
+        let mut samples = vec![];
+        for _ in 0..opts.warmup.max(1) {
+            for i in 0..rounds.min(1000) {
+                ptx.push(i).unwrap();
+                std::hint::black_box(qrx.pop().unwrap());
+            }
+        }
+        for _ in 0..opts.samples.max(1) {
+            let t0 = Instant::now();
+            for i in 0..rounds {
+                ptx.push(i).unwrap();
+                std::hint::black_box(qrx.pop().unwrap());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / rounds as f64);
+        }
+        ptx.push(u64::MAX).unwrap();
+        Stats::from_samples(&samples).mean
+    });
+    let ns = pinger.join().unwrap();
+    echo.join().unwrap();
+    (ns, counters.stop())
+}
+
+/// One full pooled run in the `accel_multiclient` shape, with the
+/// shard farms placed per `mapping` (see module docs).
+fn run_pool(
+    mapping: MappingPolicy,
+    clients: usize,
+    shards: usize,
+    per_client: u64,
+    grain: u64,
+    workers: usize,
+) {
+    let placement = match mapping {
+        MappingPolicy::Topology { .. } => Placement::Topology,
+        _ => Placement::RoundRobin,
+    };
+    let mut fc = FarmConfig::default().workers(workers);
+    if let MappingPolicy::RoundRobin { start } = mapping {
+        fc = fc.mapping(MappingPolicy::RoundRobin { start });
+    }
+    let (mut pool, root) = AccelPool::run(
+        PoolConfig::default()
+            .shards(shards)
+            .placement(placement)
+            .batch(32)
+            .farm(fc),
+        |_s, _w| node_fn(move |i: u64| spin_work(grain + (i & 1))),
+    );
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            let mut h: AccelHandle<u64> = root.clone();
+            std::thread::spawn(move || {
+                for i in 0..per_client {
+                    h.offload(c as u64 * per_client + i).unwrap();
+                }
+                h.finish().unwrap();
+            })
+        })
+        .collect();
+    drop(root);
+    pool.offload_eos();
+    let mut n = 0u64;
+    while pool.load_result().is_some() {
+        n += 1;
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    pool.wait();
+    assert_eq!(n, clients as u64 * per_client, "lost or duplicated results");
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let rounds: u64 = if quick { 20_000 } else { 100_000 };
+    let per_client: u64 = if quick { 5_000 } else { 20_000 };
+    let grain: u64 = 100;
+    let shards_sweep: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let clients_sweep: &[usize] = if quick { &[1, 4] } else { &[1, 4, 8] };
+
+    let topo = Topology::global();
+    let mut table = Table::new(&[
+        "workload",
+        "mapping",
+        "shards",
+        "clients",
+        "ns/op",
+        "instr/op",
+        "llc-miss/op",
+    ]);
+
+    for (label, mapping) in MAPPINGS {
+        let (ns, sample) = pingpong(opts, rounds, *mapping);
+        let ops = opts.samples.max(1) as u64 * rounds;
+        table.row(vec![
+            "pingpong".into(),
+            (*label).into(),
+            "-".into(),
+            "-".into(),
+            format!("{ns:.1}"),
+            perf::per_op(sample, |s| s.instructions, ops),
+            perf::per_op(sample, |s| s.llc_misses, ops),
+        ]);
+    }
+
+    for &shards in shards_sweep {
+        for &clients in clients_sweep {
+            let workers = ((num_cpus().max(2) - 1) / shards).max(1);
+            for (label, mapping) in MAPPINGS {
+                let total = clients as u64 * per_client;
+                let (stats, _) = measure(opts, || {
+                    run_pool(*mapping, clients, shards, per_client, grain, workers)
+                });
+                // One extra instrumented run for the counter columns
+                // (kept outside `measure` so fd setup never skews time).
+                let counters = perf::Counters::start();
+                run_pool(*mapping, clients, shards, per_client, grain, workers);
+                let sample = counters.stop();
+                table.row(vec![
+                    "pool".into(),
+                    (*label).into(),
+                    shards.to_string(),
+                    clients.to_string(),
+                    format!("{:.0}", stats.mean * 1e9 / total as f64),
+                    perf::per_op(sample, |s| s.instructions, total),
+                    perf::per_op(sample, |s| s.llc_misses, total),
+                ]);
+            }
+        }
+    }
+
+    let mut report = Report::new("placement", table);
+    report.note(format!(
+        "topology: {} allowed cpu(s), {} core(s), {} LLC group(s) [{:?}]",
+        topo.allowed_cpus().len(),
+        topo.smt_groups().len(),
+        topo.llc_groups().len(),
+        topo.source()
+    ));
+    report.note(format!(
+        "affinity feature {}: {} of {} pin attempts refused",
+        if cfg!(feature = "affinity") {
+            "on"
+        } else {
+            "off (mapping computed, pinning a no-op)"
+        },
+        pins_failed(),
+        pins_attempted()
+    ));
+    report.note(format!(
+        "perf counters {}",
+        if perf::Counters::available() {
+            "on"
+        } else {
+            "unavailable (columns show n/a)"
+        }
+    ));
+    report.note(
+        "lanes: none = unpinned; rr = blind round-robin from cpu 0; topo = SPSC pair on \
+         cache-near cores / one LLC group per pool shard. Results are placement-invariant \
+         (tests/placement.rs proves bit-identity); only the timing may move.",
+    );
+    report.emit();
+}

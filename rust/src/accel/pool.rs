@@ -36,6 +36,7 @@ use super::AccelError;
 use crate::channel::{stream_unbounded, Msg, Receiver, Sender};
 use crate::farm::{farm, FarmConfig};
 use crate::node::{Lifecycle, Node, RunMode};
+use crate::sched::MappingPolicy;
 use crate::skeleton::builder::{seq, Skeleton};
 use crate::skeleton::SkeletonHandle;
 use crate::trace::{NodeTrace, TraceReport, TraceRow};
@@ -58,6 +59,17 @@ pub enum Placement {
     RoundRobin,
     /// Send to the shard with the fewest in-flight tasks.
     LeastLoaded,
+    /// Topology-aware packing: dispatch rotates like
+    /// [`Placement::RoundRobin`], but each farm shard's threads are
+    /// pinned into their **own LLC group**
+    /// ([`MappingPolicy::Topology`]` { group: shard }`, spilling
+    /// gracefully when shards > groups), so shards stop stealing each
+    /// other's cache. Applies to the farm-shard constructors
+    /// ([`AccelPool::run`] / [`AccelPool::run_then_freeze`]) when
+    /// [`field@FarmConfig::mapping`] was left at `None`; `run_skeleton`
+    /// shards own their topology — set a mapping inside the factory.
+    /// Placement is perf-only: results stay bit-identical.
+    Topology,
 }
 
 /// Pool configuration: how many shards, how each shard's farm is built,
@@ -255,8 +267,10 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
         F: FnMut(usize, usize) -> W,
     {
         let farm_cfg = Self::shard_farm_cfg(&cfg);
+        let placement = cfg.placement;
         Self::launch(cfg, RunMode::RunToEnd, move |si| {
-            farm(farm_cfg.clone(), |wi| seq(factory(si, wi)))
+            let fc = Self::place_shard(farm_cfg.clone(), placement, si);
+            farm(fc, |wi| seq(factory(si, wi)))
         })
     }
 
@@ -268,9 +282,20 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
         F: FnMut(usize, usize) -> W,
     {
         let farm_cfg = Self::shard_farm_cfg(&cfg);
+        let placement = cfg.placement;
         Self::launch(cfg, RunMode::RunThenFreeze, move |si| {
-            farm(farm_cfg.clone(), |wi| seq(factory(si, wi)))
+            let fc = Self::place_shard(farm_cfg.clone(), placement, si);
+            farm(fc, |wi| seq(factory(si, wi)))
         })
+    }
+
+    /// [`Placement::Topology`]: pack farm shard `si` into its own LLC
+    /// group unless the caller already chose a mapping explicitly.
+    fn place_shard(mut fc: FarmConfig, placement: Placement, si: usize) -> FarmConfig {
+        if placement == Placement::Topology && fc.mapping == MappingPolicy::None {
+            fc.mapping = MappingPolicy::Topology { group: si };
+        }
+        fc
     }
 
     /// The per-shard farm config with the pool's waiting discipline
@@ -695,7 +720,9 @@ fn pick_shard(
 ) -> usize {
     let n = dispatched.len();
     match placement {
-        Placement::RoundRobin => {
+        // Topology placement affects where shard *threads* live, not
+        // where tasks go — dispatch rotates exactly like RoundRobin.
+        Placement::RoundRobin | Placement::Topology => {
             let s = *rr;
             *rr = (*rr + 1) % n;
             s

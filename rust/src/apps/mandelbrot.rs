@@ -26,8 +26,8 @@ use std::sync::Arc;
 use crate::accel::{AccelHandle, AccelPool, FarmAccel, Placement, PoolConfig};
 use crate::farm::{farm, FarmConfig, SchedPolicy};
 use crate::node::{node_fn, Node, Outbox, Svc};
-use crate::skeleton::{seq, Skeleton};
 use crate::runtime::{MandelTileKernel, MANDEL_TILE};
+use crate::skeleton::{seq, Skeleton};
 use crate::trace::TraceReport;
 use crate::util::{AbortFlag, SendCell};
 
@@ -414,11 +414,37 @@ pub fn render_multiclient(
     batch: usize,
     max_iter: u32,
 ) -> (Frame, TraceReport) {
+    render_multiclient_placed(
+        params,
+        clients,
+        shards,
+        workers_per_shard,
+        batch,
+        max_iter,
+        Placement::LeastLoaded,
+    )
+}
+
+/// [`render_multiclient`] with an explicit shard [`Placement`] — the
+/// `ffctl mandel --mapping topo` path uses [`Placement::Topology`] to
+/// pack each shard's farm into its own LLC group. Output is
+/// placement-invariant (bit-identical to [`render_sequential`]); only
+/// the timing may move.
+#[allow(clippy::too_many_arguments)]
+pub fn render_multiclient_placed(
+    params: RenderParams,
+    clients: usize,
+    shards: usize,
+    workers_per_shard: usize,
+    batch: usize,
+    max_iter: u32,
+    placement: Placement,
+) -> (Frame, TraceReport) {
     let clients = clients.max(1);
     let params = Arc::new(params);
     let cfg = PoolConfig::default()
         .shards(shards)
-        .placement(Placement::LeastLoaded)
+        .placement(placement)
         .batch(batch)
         .farm(
             FarmConfig::default()

@@ -1,0 +1,567 @@
+//! The perf regression wall: read a **committed** `BENCH_<name>.json`
+//! baseline back in and diff a freshly-measured [`Report`] against it
+//! with a tolerance gate.
+//!
+//! The repo commits per-PR bench summaries under `bench/` (seeded in the
+//! PR that introduced this module); `FF_BENCH_BASELINE=<dir>` makes
+//! every [`Report::emit`] diff itself against `<dir>/BENCH_<name>.json`.
+//! The diff is advisory by default (shared CI runners are noisy);
+//! `FF_BENCH_STRICT=1` turns regressions beyond the tolerance
+//! (`FF_BENCH_TOLERANCE`, default 0.30 = ±30%) into a process failure —
+//! the blocking mode for self-hosted perf boxes and `make bench-diff`.
+//!
+//! The JSON reader is hand-rolled (the vendored registry has no serde)
+//! and only needs to understand what [`Report::to_json`] emits: one
+//! object of strings, arrays of strings, and `null` cells.
+
+use super::Report;
+
+/// Which way a metric column improves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    LowerIsBetter,
+    HigherIsBetter,
+}
+
+/// Metric direction by column name, `None` for key/config columns
+/// (`clients`, `queue`, `mode`, …). The heuristic covers every column
+/// benchkit tables use: latencies (`ns/op`, `ns/task`, `ns/rt`, wall
+/// `time`), counter rates (`…/s`, `speedup`, `throughput`), and the
+/// perf-counter columns (`…miss…`, `instr…`).
+pub fn direction(column: &str) -> Option<Direction> {
+    let c = column.to_ascii_lowercase();
+    if c.contains("ns/")
+        || c.contains("latency")
+        || c.contains("time")
+        || c.contains("secs")
+        || c.contains("miss")
+        || c.contains("instr")
+    {
+        Some(Direction::LowerIsBetter)
+    } else if c.contains("/s") || c.contains("speedup") || c.contains("throughput") {
+        Some(Direction::HigherIsBetter)
+    } else {
+        None
+    }
+}
+
+/// A parsed committed `BENCH_<name>.json` (see [`Report::to_json`] for
+/// the format). `None` cells were JSON `null` (non-finite markers).
+#[derive(Debug, Clone)]
+pub struct BaselineReport {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Option<String>>>,
+}
+
+/// One compared metric cell.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    /// Row key: the direction-less (config) cells joined with `/`.
+    pub row: String,
+    pub column: String,
+    pub base: f64,
+    pub current: f64,
+    pub verdict: Verdict,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Regressed,
+    Improved,
+    Within,
+}
+
+impl Delta {
+    /// Signed percentage change, current vs base.
+    pub fn pct(&self) -> f64 {
+        if self.base == 0.0 {
+            0.0
+        } else {
+            (self.current - self.base) / self.base * 100.0
+        }
+    }
+}
+
+/// The outcome of diffing a report against a committed baseline.
+#[derive(Debug, Clone, Default)]
+pub struct Comparison {
+    pub deltas: Vec<Delta>,
+    /// Rows measured now with no counterpart in the baseline.
+    pub new_rows: usize,
+    /// Baseline rows the current run did not produce.
+    pub missing_rows: usize,
+}
+
+impl Comparison {
+    pub fn regressions(&self) -> usize {
+        self.deltas
+            .iter()
+            .filter(|d| d.verdict == Verdict::Regressed)
+            .count()
+    }
+
+    pub fn improvements(&self) -> usize {
+        self.deltas
+            .iter()
+            .filter(|d| d.verdict == Verdict::Improved)
+            .count()
+    }
+
+    /// Render the diff as `bench-diff:` lines (summary first, then one
+    /// line per out-of-tolerance cell).
+    pub fn render(&self, name: &str, tolerance: f64) -> String {
+        let mut out = format!(
+            "bench-diff({name}): {} cells, {} regressed, {} improved, {} new rows, \
+             {} missing rows (tolerance +-{:.0}%)\n",
+            self.deltas.len(),
+            self.regressions(),
+            self.improvements(),
+            self.new_rows,
+            self.missing_rows,
+            tolerance * 100.0,
+        );
+        for d in &self.deltas {
+            let tag = match d.verdict {
+                Verdict::Regressed => "REGRESSED",
+                Verdict::Improved => "improved ",
+                Verdict::Within => continue,
+            };
+            out.push_str(&format!(
+                "bench-diff:   {tag} [{}] {}: {:.2} -> {:.2} ({:+.1}%)\n",
+                d.row,
+                d.column,
+                d.base,
+                d.current,
+                d.pct()
+            ));
+        }
+        out
+    }
+}
+
+/// Diff `current` against a committed baseline: rows are matched by
+/// their config cells (columns with no [`direction`]), and each metric
+/// column present in both reports is compared — a change beyond
+/// `tolerance` (fractional, e.g. `0.30`) in the *worse* direction is a
+/// regression. Cells that aren't finite numbers on both sides are
+/// skipped (e.g. the `n/a` perf-counter fallback).
+pub fn compare(current: &Report, baseline: &BaselineReport, tolerance: f64) -> Comparison {
+    let cur_cols = &current.table.header;
+    let key_of = |cols: &[String], row: &[Option<String>]| -> String {
+        cols.iter()
+            .zip(row.iter())
+            .filter(|(c, _)| direction(c).is_none())
+            .map(|(_, v)| v.clone().unwrap_or_default())
+            .collect::<Vec<_>>()
+            .join("/")
+    };
+    let cur_rows: Vec<Vec<Option<String>>> = current
+        .table
+        .rows
+        .iter()
+        .map(|r| r.iter().map(|c| Some(c.clone())).collect())
+        .collect();
+    let mut cmp = Comparison::default();
+    let mut base_used = vec![false; baseline.rows.len()];
+    for crow in &cur_rows {
+        let key = key_of(cur_cols, crow);
+        let hit = baseline
+            .rows
+            .iter()
+            .position(|brow| key_of(&baseline.columns, brow) == key);
+        let Some(bi) = hit else {
+            cmp.new_rows += 1;
+            continue;
+        };
+        base_used[bi] = true;
+        let brow = &baseline.rows[bi];
+        for (ci, col) in cur_cols.iter().enumerate() {
+            let Some(dir) = direction(col) else { continue };
+            let Some(bj) = baseline.columns.iter().position(|b| b == col) else {
+                continue;
+            };
+            let num = |cell: Option<&String>| -> Option<f64> {
+                cell.and_then(|s| s.trim().parse::<f64>().ok())
+                    .filter(|v| v.is_finite())
+            };
+            let (Some(cur), Some(base)) = (
+                num(crow.get(ci).and_then(|c| c.as_ref())),
+                num(brow.get(bj).and_then(|c| c.as_ref())),
+            ) else {
+                continue;
+            };
+            let verdict = if base <= 0.0 {
+                Verdict::Within
+            } else {
+                let worse = match dir {
+                    Direction::LowerIsBetter => cur > base * (1.0 + tolerance),
+                    Direction::HigherIsBetter => cur < base * (1.0 - tolerance),
+                };
+                let better = match dir {
+                    Direction::LowerIsBetter => cur < base * (1.0 - tolerance),
+                    Direction::HigherIsBetter => cur > base * (1.0 + tolerance),
+                };
+                if worse {
+                    Verdict::Regressed
+                } else if better {
+                    Verdict::Improved
+                } else {
+                    Verdict::Within
+                }
+            };
+            cmp.deltas.push(Delta {
+                row: key.clone(),
+                column: col.clone(),
+                base,
+                current: cur,
+                verdict,
+            });
+        }
+    }
+    cmp.missing_rows = base_used.iter().filter(|u| !**u).count();
+    cmp
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON reader for Report::to_json output.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8, String> {
+        self.ws();
+        self.s
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| "unexpected end of JSON".to_string())
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), String> {
+        if self.peek()? == b {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", b as char, self.i))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek()? {
+            b'n' => self.lit("null", Json::Null),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'"' => self.string().map(Json::Str),
+            b'[' => {
+                self.eat(b'[')?;
+                let mut items = Vec::new();
+                if self.peek()? == b']' {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    match self.peek()? {
+                        b',' => self.i += 1,
+                        b']' => {
+                            self.i += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        c => return Err(format!("expected , or ] got '{}'", c as char)),
+                    }
+                }
+            }
+            b'{' => {
+                self.eat(b'{')?;
+                let mut fields = Vec::new();
+                if self.peek()? == b'}' {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                loop {
+                    self.ws();
+                    let k = self.string()?;
+                    self.eat(b':')?;
+                    let v = self.value()?;
+                    fields.push((k, v));
+                    match self.peek()? {
+                        b',' => self.i += 1,
+                        b'}' => {
+                            self.i += 1;
+                            return Ok(Json::Obj(fields));
+                        }
+                        c => return Err(format!("expected , or }} got '{}'", c as char)),
+                    }
+                }
+            }
+            _ => self.number(),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = *self
+                .s
+                .get(self.i)
+                .ok_or_else(|| "unterminated string".to_string())?;
+            self.i += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self
+                        .s
+                        .get(self.i)
+                        .ok_or_else(|| "unterminated escape".to_string())?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .s
+                                .get(self.i..self.i + 4)
+                                .ok_or_else(|| "short \\u escape".to_string())?;
+                            let hex = std::str::from_utf8(hex)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| format!("bad \\u escape '{hex}'"))?;
+                            self.i += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => return Err(format!("bad escape '\\{}'", other as char)),
+                    }
+                }
+                _ => {
+                    // Re-walk UTF-8: back up and take the full char.
+                    self.i -= 1;
+                    let rest = std::str::from_utf8(&self.s[self.i..])
+                        .map_err(|_| "invalid utf-8 in string".to_string())?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        self.ws();
+        let start = self.i;
+        while self
+            .s
+            .get(self.i)
+            .is_some_and(|b| b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.s[start..self.i]).map_err(|_| "bad number")?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|e| format!("bad number '{text}': {e}"))
+    }
+}
+
+/// Parse one `BENCH_<name>.json` document (the exact shape
+/// [`Report::to_json`] writes).
+pub fn parse_report_json(text: &str) -> Result<BaselineReport, String> {
+    let mut p = Parser {
+        s: text.as_bytes(),
+        i: 0,
+    };
+    let Json::Obj(fields) = p.value()? else {
+        return Err("top level is not an object".into());
+    };
+    let get = |key: &str| fields.iter().find(|(k, _)| k == key).map(|(_, v)| v);
+    let name = match get("name") {
+        Some(Json::Str(s)) => s.clone(),
+        _ => return Err("missing \"name\"".into()),
+    };
+    let str_cell = |j: &Json| -> Option<String> {
+        match j {
+            Json::Str(s) => Some(s.clone()),
+            Json::Num(n) => Some(format!("{n}")),
+            _ => None,
+        }
+    };
+    let columns = match get("columns") {
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|j| str_cell(j).ok_or_else(|| "non-string column".to_string()))
+            .collect::<Result<Vec<_>, _>>()?,
+        _ => return Err("missing \"columns\"".into()),
+    };
+    let rows = match get("rows") {
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|row| match row {
+                Json::Arr(cells) => Ok(cells
+                    .iter()
+                    .map(|c| if *c == Json::Null { None } else { str_cell(c) })
+                    .collect::<Vec<Option<String>>>()),
+                _ => Err("row is not an array".to_string()),
+            })
+            .collect::<Result<Vec<_>, _>>()?,
+        _ => return Err("missing \"rows\"".into()),
+    };
+    Ok(BaselineReport {
+        name,
+        columns,
+        rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Table;
+
+    fn report(cols: &[&str], rows: Vec<Vec<&str>>) -> Report {
+        let mut t = Table::new(cols);
+        for r in rows {
+            t.row(r.into_iter().map(String::from).collect());
+        }
+        Report::new("unit", t)
+    }
+
+    #[test]
+    fn roundtrip_own_emitter_output() {
+        let mut r = report(
+            &["queue", "ns/op"],
+            vec![vec!["ff-spsc", "12.5"], vec!["mutex", "120.0"]],
+        );
+        r.note("a \"note\"\nsecond line");
+        let parsed = parse_report_json(&r.to_json()).unwrap();
+        assert_eq!(parsed.name, "unit");
+        assert_eq!(parsed.columns, vec!["queue", "ns/op"]);
+        assert_eq!(parsed.rows.len(), 2);
+        assert_eq!(parsed.rows[0][0].as_deref(), Some("ff-spsc"));
+        assert_eq!(parsed.rows[1][1].as_deref(), Some("120.0"));
+    }
+
+    #[test]
+    fn null_cells_parse_to_none() {
+        let parsed = parse_report_json(
+            "{\"name\":\"x\",\"columns\":[\"a\",\"ns/op\"],\"rows\":[[\"k\",null]],\"notes\":[]}",
+        )
+        .unwrap();
+        assert_eq!(parsed.rows[0][1], None);
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(parse_report_json("").is_err());
+        assert!(parse_report_json("[1,2]").is_err());
+        assert!(parse_report_json("{\"name\":12}").is_err());
+        assert!(parse_report_json("{\"name\":\"x\"").is_err());
+    }
+
+    #[test]
+    fn direction_heuristic() {
+        assert_eq!(direction("stream ns/op"), Some(Direction::LowerIsBetter));
+        assert_eq!(direction("ns/task"), Some(Direction::LowerIsBetter));
+        assert_eq!(direction("llc-miss/op"), Some(Direction::LowerIsBetter));
+        assert_eq!(direction("instr/op"), Some(Direction::LowerIsBetter));
+        assert_eq!(direction("Mtask/s"), Some(Direction::HigherIsBetter));
+        assert_eq!(
+            direction("speedup vs batch=1"),
+            Some(Direction::HigherIsBetter)
+        );
+        assert_eq!(direction("clients"), None);
+        assert_eq!(direction("queue"), None);
+        assert_eq!(direction("mapping"), None);
+    }
+
+    #[test]
+    fn compare_flags_regression_and_improvement() {
+        let base = parse_report_json(
+            &report(
+                &["queue", "ns/op", "Mtask/s"],
+                vec![vec!["a", "100", "10"], vec!["b", "100", "10"]],
+            )
+            .to_json(),
+        )
+        .unwrap();
+        // Row a: latency doubled (regression) and throughput halved
+        // (regression); row b: latency halved (improvement), rate flat.
+        let cur = report(
+            &["queue", "ns/op", "Mtask/s"],
+            vec![vec!["a", "200", "5"], vec!["b", "50", "10.1"]],
+        );
+        let cmp = compare(&cur, &base, 0.25);
+        assert_eq!(cmp.deltas.len(), 4);
+        assert_eq!(cmp.regressions(), 2);
+        assert_eq!(cmp.improvements(), 1);
+        assert_eq!(cmp.new_rows, 0);
+        assert_eq!(cmp.missing_rows, 0);
+        let rendered = cmp.render("unit", 0.25);
+        assert!(rendered.contains("REGRESSED [a] ns/op"), "{rendered}");
+        assert!(rendered.contains("improved  [b] ns/op"), "{rendered}");
+    }
+
+    #[test]
+    fn compare_skips_unparsable_and_counts_row_churn() {
+        let base = parse_report_json(
+            &report(
+                &["workload", "ns/op", "llc-miss/op"],
+                vec![vec!["gone", "10", "1"], vec!["kept", "10", "n/a"]],
+            )
+            .to_json(),
+        )
+        .unwrap();
+        let cur = report(
+            &["workload", "ns/op", "llc-miss/op"],
+            vec![vec!["kept", "11", "2.0"], vec!["fresh", "10", "1"]],
+        );
+        let cmp = compare(&cur, &base, 0.25);
+        // "kept": ns/op compared (within); llc-miss skipped (n/a base).
+        assert_eq!(cmp.deltas.len(), 1);
+        assert_eq!(cmp.regressions(), 0);
+        assert_eq!(cmp.new_rows, 1);
+        assert_eq!(cmp.missing_rows, 1);
+    }
+
+    #[test]
+    fn tolerance_is_inclusive_of_noise() {
+        let base =
+            parse_report_json(&report(&["k", "ns/op"], vec![vec!["x", "100"]]).to_json()).unwrap();
+        let cur = report(&["k", "ns/op"], vec![vec!["x", "124"]]);
+        assert_eq!(compare(&cur, &base, 0.25).regressions(), 0);
+        let cur = report(&["k", "ns/op"], vec![vec!["x", "126"]]);
+        assert_eq!(compare(&cur, &base, 0.25).regressions(), 1);
+    }
+}

@@ -4,6 +4,22 @@
 //! samples, mean/median/stddev, aligned tables and optional CSV output.
 //! The protocol matches the paper's §4 ("average of 5 runs exhibiting
 //! very low variance").
+//!
+//! Two optional layers ride on top:
+//!
+//! - [`baseline`] — the committed perf regression wall. Point
+//!   `FF_BENCH_BASELINE` at the repo's `bench/` directory and every
+//!   emitted report diffs itself against the committed
+//!   `BENCH_<name>.json`, printing `bench-diff:` lines; set
+//!   `FF_BENCH_STRICT=1` to fail the process on regressions beyond
+//!   `FF_BENCH_TOLERANCE` (default 0.30).
+//! - [`perf`] — optional hardware counters (`perf-counters` feature):
+//!   instructions and LLC misses per measured region via
+//!   `perf_event_open(2)`, with a graceful `n/a` fallback everywhere
+//!   the syscall is unavailable.
+
+pub mod baseline;
+pub mod perf;
 
 use std::time::{Duration, Instant};
 
@@ -174,6 +190,13 @@ impl Report {
         )
     }
 
+    /// Diff this report against a committed baseline with a fractional
+    /// tolerance (the programmatic face of the `FF_BENCH_BASELINE` env
+    /// hook — see [`baseline::compare`] for the matching rules).
+    pub fn compare(&self, base: &baseline::BaselineReport, tolerance: f64) -> baseline::Comparison {
+        baseline::compare(self, base, tolerance)
+    }
+
     /// Print to stdout and optionally write CSV / JSON artifacts.
     pub fn emit(&self) {
         println!("\n## {}\n", self.name);
@@ -193,6 +216,50 @@ impl Report {
             if std::fs::create_dir_all(&dir).is_ok() {
                 let _ = std::fs::write(&path, self.to_json());
                 println!("json: {path}");
+            }
+        }
+        if let Ok(dir) = std::env::var("FF_BENCH_BASELINE") {
+            self.diff_against(&dir);
+        }
+    }
+
+    /// The `FF_BENCH_BASELINE` hook: diff against `<dir>/BENCH_<name>.json`.
+    /// Missing or unparsable baselines are advisory notes (a new bench has
+    /// no committed history yet); regressions only fail the process when
+    /// `FF_BENCH_STRICT` is truthy — shared CI runners are too noisy for a
+    /// blocking gate, self-hosted perf boxes opt in.
+    fn diff_against(&self, dir: &str) {
+        let path = format!("{dir}/BENCH_{}.json", self.name);
+        let tolerance = std::env::var("FF_BENCH_TOLERANCE")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .filter(|t| t.is_finite() && *t >= 0.0)
+            .unwrap_or(0.30);
+        let strict = matches!(
+            std::env::var("FF_BENCH_STRICT").as_deref(),
+            Ok("1") | Ok("true") | Ok("yes") | Ok("on")
+        );
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(_) => {
+                println!("bench-diff({}): no baseline at {path} (skipped)", self.name);
+                return;
+            }
+        };
+        match baseline::parse_report_json(&text) {
+            Err(e) => println!("bench-diff({}): unparsable baseline {path}: {e}", self.name),
+            Ok(base) => {
+                let cmp = self.compare(&base, tolerance);
+                print!("{}", cmp.render(self.name, tolerance));
+                if strict && cmp.regressions() > 0 {
+                    eprintln!(
+                        "bench-diff({}): FAIL — {} regression(s) beyond +-{:.0}% vs {path}",
+                        self.name,
+                        cmp.regressions(),
+                        tolerance * 100.0
+                    );
+                    std::process::exit(1);
+                }
             }
         }
     }

@@ -1,0 +1,222 @@
+//! Optional hardware perf counters for benches (`perf-counters` feature).
+//!
+//! Wraps `perf_event_open(2)` directly — the attr struct is hand-rolled
+//! (the vendored registry has no perf-event crate) at the `VER1` ABI
+//! size (72 bytes), which every kernel since 3.x accepts. Two counters
+//! are opened per measured region: retired instructions and LLC misses,
+//! with `inherit` set so worker threads spawned *after* [`Counters::start`]
+//! are counted too — exactly the shape of a skeleton `launch()`.
+//!
+//! Everything degrades gracefully: without the feature, off-Linux, or
+//! when the syscall is denied (seccomp'd containers,
+//! `perf_event_paranoid`, missing PMU on shared runners) the API
+//! returns `None` and benches print `n/a` columns instead of failing.
+
+/// One measured region's counter deltas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sample {
+    pub instructions: u64,
+    pub llc_misses: u64,
+}
+
+#[cfg(all(feature = "perf-counters", target_os = "linux"))]
+mod imp {
+    use super::Sample;
+
+    // perf_event_attr, ABI version PERF_ATTR_SIZE_VER1 (72 bytes): the
+    // prefix of the modern struct, zero-extended by the kernel.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PerfEventAttr {
+        type_: u32,
+        size: u32,
+        config: u64,
+        sample_period: u64,
+        sample_type: u64,
+        read_format: u64,
+        flags: u64,
+        wakeup_events: u32,
+        bp_type: u32,
+        bp_addr: u64,
+        bp_len: u64,
+    }
+
+    const ATTR_SIZE_VER1: u32 = 72;
+    const PERF_TYPE_HARDWARE: u32 = 0;
+    const PERF_COUNT_HW_INSTRUCTIONS: u64 = 1;
+    const PERF_COUNT_HW_CACHE_MISSES: u64 = 3; // "LLC misses" per perf_event.h
+    // flags bitfield: inherit(bit1) | exclude_kernel(bit5) | exclude_hv(bit6).
+    // No `disabled` bit: counters run from the moment open() returns.
+    const FLAGS: u64 = 2 | 32 | 64;
+    const PERF_FLAG_FD_CLOEXEC: libc::c_ulong = 8;
+
+    fn open(config: u64) -> Option<libc::c_int> {
+        let attr = PerfEventAttr {
+            type_: PERF_TYPE_HARDWARE,
+            size: ATTR_SIZE_VER1,
+            config,
+            sample_period: 0,
+            sample_type: 0,
+            read_format: 0,
+            flags: FLAGS,
+            wakeup_events: 0,
+            bp_type: 0,
+            bp_addr: 0,
+            bp_len: 0,
+        };
+        // SAFETY: perf_event_open takes a pointer to a perf_event_attr
+        // whose `size` field tells the kernel how many bytes to read;
+        // `attr` is a valid 72-byte VER1 struct that outlives the call.
+        // pid=0/cpu=-1 = this thread (plus inheritors) on any CPU.
+        let fd = unsafe {
+            libc::syscall(
+                libc::SYS_perf_event_open,
+                &attr as *const PerfEventAttr,
+                0 as libc::pid_t,
+                -1 as libc::c_int,
+                -1 as libc::c_int,
+                PERF_FLAG_FD_CLOEXEC,
+            )
+        };
+        if fd < 0 {
+            None
+        } else {
+            Some(fd as libc::c_int)
+        }
+    }
+
+    fn read_count(fd: libc::c_int) -> Option<u64> {
+        let mut buf = [0u8; 8];
+        // SAFETY: `buf` is 8 writable bytes; with read_format == 0 a
+        // counter fd yields exactly one u64 per read(2).
+        let n = unsafe { libc::read(fd, buf.as_mut_ptr() as *mut libc::c_void, 8) };
+        if n == 8 {
+            Some(u64::from_ne_bytes(buf))
+        } else {
+            None
+        }
+    }
+
+    fn close(fd: libc::c_int) {
+        // SAFETY: fd came from a successful perf_event_open and is
+        // closed exactly once (Counters consumes itself in stop()).
+        unsafe {
+            libc::close(fd);
+        }
+    }
+
+    pub struct Counters {
+        instr: Option<(libc::c_int, u64)>,
+        llc: Option<(libc::c_int, u64)>,
+    }
+
+    impl Counters {
+        pub fn start() -> Counters {
+            let arm = |config| {
+                let fd = open(config)?;
+                match read_count(fd) {
+                    Some(base) => Some((fd, base)),
+                    None => {
+                        close(fd);
+                        None
+                    }
+                }
+            };
+            Counters {
+                instr: arm(PERF_COUNT_HW_INSTRUCTIONS),
+                llc: arm(PERF_COUNT_HW_CACHE_MISSES),
+            }
+        }
+
+        pub fn stop(self) -> Option<Sample> {
+            let drain = |slot: Option<(libc::c_int, u64)>| {
+                slot.and_then(|(fd, base)| {
+                    let now = read_count(fd);
+                    close(fd);
+                    now.map(|n| n.saturating_sub(base))
+                })
+            };
+            let instructions = drain(self.instr);
+            let llc_misses = drain(self.llc);
+            match (instructions, llc_misses) {
+                (Some(instructions), Some(llc_misses)) => Some(Sample {
+                    instructions,
+                    llc_misses,
+                }),
+                _ => None,
+            }
+        }
+
+        pub fn available() -> bool {
+            match open(PERF_COUNT_HW_INSTRUCTIONS) {
+                Some(fd) => {
+                    close(fd);
+                    true
+                }
+                None => false,
+            }
+        }
+    }
+}
+
+#[cfg(not(all(feature = "perf-counters", target_os = "linux")))]
+mod imp {
+    use super::Sample;
+
+    /// Stub when the `perf-counters` feature is off (or off-Linux):
+    /// `start()` costs nothing, `stop()` always reports `None`.
+    pub struct Counters;
+
+    impl Counters {
+        pub fn start() -> Counters {
+            Counters
+        }
+
+        pub fn stop(self) -> Option<Sample> {
+            None
+        }
+
+        pub fn available() -> bool {
+            false
+        }
+    }
+}
+
+pub use imp::Counters;
+
+/// Render a per-op counter column: `count / ops` to two decimals, or
+/// `n/a` when counters were unavailable.
+pub fn per_op(sample: Option<Sample>, pick: impl Fn(&Sample) -> u64, ops: u64) -> String {
+    match sample {
+        Some(ref s) if ops > 0 => format!("{:.2}", pick(s) as f64 / ops as f64),
+        _ => "n/a".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_stop_never_panics() {
+        // Counters may or may not be available (seccomp, paranoid level,
+        // feature off) — either way the API must degrade, not fail.
+        let c = Counters::start();
+        let s = c.stop();
+        if !Counters::available() {
+            assert_eq!(s, None);
+        }
+    }
+
+    #[test]
+    fn per_op_formats_and_falls_back() {
+        let s = Sample {
+            instructions: 1000,
+            llc_misses: 25,
+        };
+        assert_eq!(per_op(Some(s), |s| s.instructions, 100), "10.00");
+        assert_eq!(per_op(Some(s), |s| s.llc_misses, 100), "0.25");
+        assert_eq!(per_op(None, |s| s.instructions, 100), "n/a");
+        assert_eq!(per_op(Some(s), |s| s.instructions, 0), "n/a");
+    }
+}

@@ -123,6 +123,22 @@ impl Config {
             .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
     }
 
+    /// Thread→core mapping from the `mapping` / `cores` keys (or
+    /// `FF_MAPPING` / `FF_CORES`): `mapping = none|rr[:start]|
+    /// topo[:group]|explicit`, `cores = 0,2,4` (consulted only by
+    /// `explicit`). Missing keys default to `(MappingPolicy::None, [])`.
+    pub fn get_mapping(&self) -> Result<(crate::sched::MappingPolicy, Vec<usize>), ConfigError> {
+        let policy = match self.get("mapping") {
+            Some(s) => crate::sched::parse_policy(&s).map_err(ConfigError::new)?,
+            None => crate::sched::MappingPolicy::None,
+        };
+        let cores = match self.get("cores") {
+            Some(s) => crate::sched::parse_mapping(&s).map_err(ConfigError::new)?,
+            None => vec![],
+        };
+        Ok((policy, cores))
+    }
+
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.map.keys()
     }
@@ -188,5 +204,21 @@ mod tests {
     #[test]
     fn bad_line_is_error() {
         assert!(Config::from_str_contents("nonsense line\n").is_err());
+    }
+
+    #[test]
+    fn mapping_accessor() {
+        use crate::sched::MappingPolicy;
+        let c = Config::from_str_contents("mapping = topo:1\ncores = 0,2\n").unwrap();
+        assert_eq!(
+            c.get_mapping().unwrap(),
+            (MappingPolicy::Topology { group: 1 }, vec![0, 2])
+        );
+        assert_eq!(
+            Config::new().get_mapping().unwrap(),
+            (MappingPolicy::None, vec![])
+        );
+        let bad = Config::from_str_contents("mapping = warp9\n").unwrap();
+        assert!(bad.get_mapping().is_err());
     }
 }

@@ -79,7 +79,12 @@ pub struct FarmConfig {
     pub worker_cap: usize,
     /// Capacity of each worker→collector queue and of the output queue.
     pub out_cap: usize,
+    /// Thread→core mapping for the whole farm (emitter, workers,
+    /// collector — in that thread-id order, which is what
+    /// [`crate::sched::MappingPolicy::Topology`] exploits to keep the
+    /// farm inside one LLC group). Perf-only: never changes results.
     pub mapping: crate::sched::MappingPolicy,
+    /// Core list for [`crate::sched::MappingPolicy::Explicit`].
     pub explicit_cores: Vec<usize>,
     /// Waiting discipline for every thread of this farm (see
     /// [`WaitMode`]): `Spin` (default) is the paper's non-blocking
@@ -138,6 +143,7 @@ impl FarmConfig {
         self.out_cap = out_cap.max(1);
         self
     }
+    /// Thread→core mapping policy (see [`field@FarmConfig::mapping`]).
     #[must_use]
     pub fn mapping(mut self, m: crate::sched::MappingPolicy) -> Self {
         self.mapping = m;

@@ -90,6 +90,7 @@ pub mod skeleton;
 pub mod spsc;
 pub mod sync;
 pub mod testing;
+pub mod topo;
 pub mod trace;
 pub mod util;
 
@@ -108,9 +109,11 @@ pub mod prelude {
         SchedPolicy,
     };
     pub use crate::node::{node_fn, Node, Outbox, RunMode, Svc};
+    pub use crate::sched::MappingPolicy;
     pub use crate::skeleton::{
         seq, seq_fn, LaunchedSkeleton, SeqNode, Skeleton, SkeletonHandle, Then, WithWait,
     };
+    pub use crate::topo::Topology;
     pub use crate::util::WaitMode;
 }
 

@@ -9,14 +9,15 @@
 //!                 [--shards S] [--batch B] [--out img.pgm] …
 //! ffctl nqueens   [--n 13] [--depth 4] [--workers N]
 //! ffctl matmul    [--n 256] [--workers N]
+//! ffctl topo      [--threads N] [--shards S] [--mapping topo]
 //! ffctl info
 //! ```
 //!
 //! Global options: `--config file` (key=value), `--trace`, `--csv dir`.
 
 use fastflow::apps::mandelbrot::{
-    max_iter_for_pass, render_multiclient, render_sequential, AcceleratedRenderer, Engine, Region,
-    RenderParams,
+    max_iter_for_pass, render_multiclient_placed, render_sequential, AcceleratedRenderer, Engine,
+    Region, RenderParams,
 };
 use fastflow::apps::matmul::{matmul_accelerated, matmul_sequential, Matrix};
 use fastflow::apps::nqueens;
@@ -60,6 +61,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("mandel") => cmd_mandel(args),
         Some("nqueens") => cmd_nqueens(args),
         Some("matmul") => cmd_matmul(args),
+        Some("topo") => cmd_topo(args),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -81,6 +83,7 @@ SUBCOMMANDS
   mandel    render one Mandelbrot frame (demo / end-to-end driver)
   nqueens   count N-queens solutions once
   matmul    Fig. 3 running example (matrix multiply offload)
+  topo      print the discovered machine topology + planned layout
   info      platform + configuration report
 
 COMMON OPTIONS
@@ -91,6 +94,9 @@ COMMON OPTIONS
   --clients <m>      mandel: offloading client threads sharing one pool
   --shards <s>       mandel: independent farm accelerators in the pool
   --batch <b>        mandel: tasks coalesced per offload frame
+  --mapping <p>      thread->core policy: none | rr[:start] | topo[:group]
+                     | explicit (with --cores 0,2,...); topo packs each
+                     pool shard into its own last-level-cache group
   --trace            print per-node trace report
   --csv <dir>        also write tables as CSV
 ",
@@ -217,14 +223,24 @@ fn cmd_mandel(args: &Args) -> Result<()> {
     let pooled = clients > 1 || shards > 1 || batch > 1;
     let (frame, report, par_d, label) = if pooled {
         // Multi-client service path: M offloading threads share one
-        // sharded AccelPool.
+        // sharded AccelPool. `--mapping topo` packs each shard's farm
+        // into its own LLC group (perf-only: output is bit-identical).
         if engine != Engine::Scalar {
             return fail("--clients/--shards/--batch require --engine scalar".to_string());
         }
-        let ((frame, report), par_d) =
-            timed(|| render_multiclient(params, clients, shards, workers, batch, max_iter));
+        let (policy, _) = cfg.get_mapping()?;
+        let placement = match policy {
+            fastflow::sched::MappingPolicy::Topology { .. } => {
+                fastflow::accel::Placement::Topology
+            }
+            _ => fastflow::accel::Placement::LeastLoaded,
+        };
+        let ((frame, report), par_d) = timed(|| {
+            render_multiclient_placed(params, clients, shards, workers, batch, max_iter, placement)
+        });
         let label = format!(
-            "pool({clients} clients, {shards} shards, batch {batch}, {workers} workers/shard)"
+            "pool({clients} clients, {shards} shards, batch {batch}, {workers} workers/shard, \
+             {placement:?})"
         );
         (frame, report, par_d, label)
     } else {
@@ -306,6 +322,63 @@ fn cmd_matmul(args: &Args) -> Result<()> {
         workers,
         fmt_duration(par_d),
         speedup(seq_d.as_secs_f64(), par_d.as_secs_f64()),
+    );
+    Ok(())
+}
+
+/// `ffctl topo`: show the discovered machine shape and the layout a
+/// given mapping policy would produce — the dry-run face of
+/// `MappingPolicy::Topology`, so placement decisions are inspectable
+/// without launching anything. Honours `FF_FAKE_TOPO` like every other
+/// consumer.
+fn cmd_topo(args: &Args) -> Result<()> {
+    use fastflow::sched::{CpuMap, MappingPolicy};
+    use fastflow::topo::Topology;
+
+    let cfg = load_config(args)?;
+    let topo = Topology::discover();
+    print!("{}", topo.render());
+    println!(
+        "pinning: {}",
+        if cfg!(feature = "affinity") {
+            "affinity feature on (sched_setaffinity)"
+        } else {
+            "affinity feature off — mappings are computed but pinning is a no-op"
+        }
+    );
+
+    let threads = cfg.get_usize("threads", num_cpus());
+    let shards = cfg.get_usize("shards", 1);
+    let (policy, cores) = cfg.get_mapping()?;
+    let policy = match policy {
+        // A dry run of `topo` should show the topology plan by default.
+        MappingPolicy::None if cfg.get("mapping").is_none() => MappingPolicy::Topology { group: 0 },
+        p => p,
+    };
+    println!("\nplanned layout ({threads} threads x {shards} shard(s), {policy:?}):");
+    for shard in 0..shards.max(1) {
+        let shard_policy = match policy {
+            MappingPolicy::Topology { group } => MappingPolicy::Topology {
+                group: group + shard,
+            },
+            p => p,
+        };
+        let map = CpuMap::build(shard_policy, threads, &cores);
+        // Thread order matters (thread i runs on the i-th cpu), so print
+        // the assignment sequence, not a compressed set.
+        let assigned: Vec<String> = (0..threads)
+            .map(|i| map.core_for(i).map_or("-".to_string(), |c| c.to_string()))
+            .collect();
+        if assigned.iter().all(|c| c == "-") {
+            println!("  shard {shard}: unpinned (policy None)");
+        } else {
+            println!("  shard {shard}: cpus [{}]", assigned.join(","));
+        }
+    }
+    println!(
+        "pin attempts so far: {} ({} refused)",
+        fastflow::sched::pins_attempted(),
+        fastflow::sched::pins_failed()
     );
     Ok(())
 }

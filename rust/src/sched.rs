@@ -5,8 +5,22 @@
 //!
 //! FastFlow leaves mapping decisions to the programmer; we expose the same
 //! control as a [`MappingPolicy`] plus a raw [`pin_current_thread`].
+//!
+//! All policies are restricted to [`Topology::allowed_cpus`] — the
+//! affinity/cpuset mask a container grants the process. A mapping that
+//! handed out CPU ids the container doesn't own would silently land
+//! every pin on the failure path; pins the OS still refuses are counted
+//! in [`pins_failed`] instead of being swallowed.
 
-use crate::util::num_cpus;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::topo::Topology;
+
+/// Pin attempts the OS refused (see [`pins_failed`]).
+static PINS_FAILED: AtomicU64 = AtomicU64::new(0);
+/// Real pin attempts made (`affinity` builds only; the no-op fallback
+/// attempts nothing).
+static PINS_ATTEMPTED: AtomicU64 = AtomicU64::new(0);
 
 /// How skeleton threads are laid out over cores.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -16,13 +30,27 @@ pub enum MappingPolicy {
     /// over-provisioned.
     #[default]
     None,
-    /// Threads pinned round-robin starting from core `start`: thread *i*
-    /// on core `(start + i) mod ncpu`. This reproduces the paper's
-    /// "accelerator configured to use spare cores".
+    /// Threads pinned round-robin over the **allowed** CPU list starting
+    /// at its `start`-th entry: thread *i* on `allowed[(start + i) mod
+    /// n_allowed]`. This reproduces the paper's "accelerator configured
+    /// to use spare cores" — topology-blind, but never outside the mask.
     RoundRobin { start: usize },
     /// Explicit per-thread core list (wraps if shorter than the thread
-    /// count) — FastFlow's manual mapping string.
+    /// count) — FastFlow's manual mapping string. Ids outside the
+    /// allowed mask are remapped to `allowed[id mod n_allowed]` (the
+    /// requested CPU does not exist for this process; wrapping inside
+    /// the mask keeps the *spread* the list asked for).
     Explicit,
+    /// Topology-aware layout (see [`Topology::plan`]): consecutive
+    /// thread ids — which the skeleton builder allocates front-to-back
+    /// along the dataflow — land on cache-near cores, one CPU per
+    /// physical core before any SMT sibling, packed into the LLC group
+    /// `group` (mod the group count) and spilling into neighbouring
+    /// groups only when one LLC cannot hold the topology. `group` is the
+    /// knob [`crate::accel::Placement::Topology`] uses to give each pool
+    /// shard its own LLC group. Placement is perf-only: results are
+    /// bit-identical to [`MappingPolicy::None`].
+    Topology { group: usize },
 }
 
 /// A resolved mapping: thread index → optional core.
@@ -32,23 +60,55 @@ pub struct CpuMap {
 }
 
 impl CpuMap {
-    /// Build a map for `nthreads` threads under `policy`. `explicit` is
+    /// Build a map for `nthreads` threads under `policy` against the
+    /// process-wide discovered [`Topology::global`]. `explicit` is
     /// consulted only for [`MappingPolicy::Explicit`].
     pub fn build(policy: MappingPolicy, nthreads: usize, explicit: &[usize]) -> Self {
-        let ncpu = num_cpus();
+        Self::build_with(policy, nthreads, explicit, Topology::global())
+    }
+
+    /// [`CpuMap::build`] against an injected topology — the unit-test
+    /// entry point for layout decisions (pair with canned
+    /// [`Topology::from_spec`] / [`Topology::from_sysfs`] shapes).
+    pub fn build_with(
+        policy: MappingPolicy,
+        nthreads: usize,
+        explicit: &[usize],
+        topo: &Topology,
+    ) -> Self {
+        let allowed = topo.allowed_cpus();
+        debug_assert!(!allowed.is_empty(), "Topology guarantees a non-empty mask");
         let cores = match policy {
             MappingPolicy::None => vec![None; nthreads],
             MappingPolicy::RoundRobin { start } => (0..nthreads)
-                .map(|i| Some((start + i) % ncpu))
+                .map(|i| Some(allowed[(start + i) % allowed.len()]))
                 .collect(),
             MappingPolicy::Explicit => {
+                // An empty list is a config bug (the caller asked for
+                // manual mapping and provided none) — loud in debug
+                // builds, documented fallback to unpinned in release.
+                debug_assert!(
+                    !explicit.is_empty(),
+                    "MappingPolicy::Explicit with an empty core list \
+                     (set explicit_cores, or use MappingPolicy::None)"
+                );
                 if explicit.is_empty() {
                     vec![None; nthreads]
                 } else {
                     (0..nthreads)
-                        .map(|i| Some(explicit[i % explicit.len()] % ncpu))
+                        .map(|i| {
+                            let id = explicit[i % explicit.len()];
+                            Some(if allowed.binary_search(&id).is_ok() {
+                                id
+                            } else {
+                                allowed[id % allowed.len()]
+                            })
+                        })
                         .collect()
                 }
+            }
+            MappingPolicy::Topology { group } => {
+                topo.plan(nthreads, group).into_iter().map(Some).collect()
             }
         };
         CpuMap { cores }
@@ -68,27 +128,56 @@ impl CpuMap {
     }
 }
 
-/// Pin the calling thread to `cpu`. Best-effort: failures (e.g. cpuset
-/// restrictions in containers) are ignored, matching FastFlow's
-/// "mapping is a hint" behaviour.
+/// Pin attempts the OS refused since process start (e.g. a CPU
+/// hot-unplugged after discovery, or a cpuset tightened under us).
+/// Mapping policies only hand out allowed CPUs, so a nonzero value is
+/// the observable for "placement silently isn't happening" — `ffctl
+/// topo` prints it. Always compiled; only `affinity` builds can move it.
+pub fn pins_failed() -> u64 {
+    PINS_FAILED.load(Ordering::Relaxed)
+}
+
+/// Real `sched_setaffinity` attempts made (zero in non-`affinity`
+/// builds, where pinning is a documented no-op hint).
+pub fn pins_attempted() -> u64 {
+    PINS_ATTEMPTED.load(Ordering::Relaxed)
+}
+
+/// Pin the calling thread to `cpu`; returns whether the pin took
+/// effect. Best-effort — a refusal (e.g. cpuset tightened after
+/// discovery) is recorded in [`pins_failed`] and execution continues
+/// unpinned, matching FastFlow's "mapping is a hint" behaviour.
 ///
 /// Stable Rust has no affinity API, so the real `sched_setaffinity`
 /// call lives behind the `affinity` feature (pulling `libc`); the
-/// dependency-free default build compiles this to a no-op hint.
+/// dependency-free default build compiles this to a no-op hint that
+/// returns `false` without counting a failure (nothing was attempted).
 #[cfg(feature = "affinity")]
-pub fn pin_current_thread(cpu: usize) {
-    // SAFETY: CPU_SET/sched_setaffinity with a properly zeroed set.
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_SET(cpu % (8 * std::mem::size_of::<libc::cpu_set_t>()), &mut set);
-        let _ = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+pub fn pin_current_thread(cpu: usize) -> bool {
+    PINS_ATTEMPTED.fetch_add(1, Ordering::Relaxed);
+    let nbits = 8 * std::mem::size_of::<libc::cpu_set_t>();
+    if cpu >= nbits {
+        PINS_FAILED.fetch_add(1, Ordering::Relaxed);
+        return false;
     }
+    // SAFETY: CPU_SET/sched_setaffinity with a properly zeroed set and
+    // an in-range bit index (checked against the set width above).
+    let ok = unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(cpu, &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+    };
+    if !ok {
+        PINS_FAILED.fetch_add(1, Ordering::Relaxed);
+    }
+    ok
 }
 
 /// No-op fallback (build without the `affinity` feature).
 #[cfg(not(feature = "affinity"))]
-pub fn pin_current_thread(cpu: usize) {
+pub fn pin_current_thread(cpu: usize) -> bool {
     let _ = cpu;
+    false
 }
 
 /// Parse an explicit mapping string like `"0,2,4,6"`.
@@ -102,9 +191,40 @@ pub fn parse_mapping(s: &str) -> Result<Vec<usize>, String> {
         .collect()
 }
 
+/// Parse a mapping-policy string — the `mapping =` config key and the
+/// `--mapping` ffctl flag: `none`, `rr[:start]`, `topo[:group]`,
+/// `explicit` (pair with a core list).
+pub fn parse_policy(s: &str) -> Result<MappingPolicy, String> {
+    let (head, arg) = match s.trim().split_once(':') {
+        Some((h, a)) => (h.trim(), Some(a.trim())),
+        None => (s.trim(), None),
+    };
+    let num = |what: &str| -> Result<usize, String> {
+        match arg {
+            None => Ok(0),
+            Some(a) => a.parse().map_err(|e| format!("bad {what} '{a}': {e}")),
+        }
+    };
+    match head {
+        "none" => Ok(MappingPolicy::None),
+        "rr" | "roundrobin" => Ok(MappingPolicy::RoundRobin { start: num("start")? }),
+        "topo" | "topology" => Ok(MappingPolicy::Topology { group: num("group")? }),
+        "explicit" => Ok(MappingPolicy::Explicit),
+        other => Err(format!(
+            "unknown mapping '{other}' (none|rr[:start]|topo[:group]|explicit)"
+        )),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn two_llc() -> Topology {
+        // Two physical cores per LLC domain, SMT siblings adjacent
+        // (cores (0,1) (2,3) share one L3; (4,5) (6,7) the other).
+        Topology::from_spec("allowed=0-7;smt=0,1/2,3/4,5/6,7;llc=0-3/4-7").unwrap()
+    }
 
     #[test]
     fn none_policy_leaves_unpinned() {
@@ -114,12 +234,24 @@ mod tests {
     }
 
     #[test]
-    fn round_robin_wraps_over_cpus() {
+    fn round_robin_wraps_over_allowed_cpus() {
         let m = CpuMap::build(MappingPolicy::RoundRobin { start: 0 }, 64, &[]);
-        let ncpu = num_cpus();
+        let allowed = Topology::global().allowed_cpus();
         for i in 0..64 {
-            assert_eq!(m.core_for(i), Some(i % ncpu));
+            assert_eq!(m.core_for(i), Some(allowed[i % allowed.len()]));
         }
+    }
+
+    #[test]
+    fn round_robin_respects_cpuset_mask() {
+        // Regression (bugfix): a container owning only cpus 4-7 used to
+        // get threads pinned to 0..n — every pin refused, silently.
+        let t = Topology::from_spec("allowed=4-7").unwrap();
+        let m = CpuMap::build_with(MappingPolicy::RoundRobin { start: 1 }, 6, &[], &t);
+        assert_eq!(
+            (0..6).map(|i| m.core_for(i).unwrap()).collect::<Vec<_>>(),
+            vec![5, 6, 7, 4, 5, 6]
+        );
     }
 
     #[test]
@@ -130,9 +262,43 @@ mod tests {
     }
 
     #[test]
-    fn explicit_empty_falls_back_to_unpinned() {
-        let m = CpuMap::build(MappingPolicy::Explicit, 3, &[]);
-        assert!(m.core_for(0).is_none());
+    fn explicit_empty_is_debug_error_release_fallback() {
+        // The silent `Explicit + [] == None` degradation is now a
+        // debug-assert; release builds keep the documented fallback.
+        let r = std::panic::catch_unwind(|| CpuMap::build(MappingPolicy::Explicit, 3, &[]));
+        if cfg!(debug_assertions) {
+            assert!(r.is_err(), "empty explicit list must assert in debug");
+        } else {
+            let m = r.unwrap();
+            assert!(m.core_for(0).is_none());
+        }
+    }
+
+    #[test]
+    fn explicit_out_of_mask_wraps_inside_mask() {
+        // Ids outside the allowed mask wrap over the mask, not raw ncpu.
+        let t = Topology::from_spec("allowed=2,3,6,7").unwrap();
+        let m = CpuMap::build_with(MappingPolicy::Explicit, 3, &[6, 1, 100_000], &t);
+        assert_eq!(m.core_for(0), Some(6)); // already allowed: kept
+        assert_eq!(m.core_for(1), Some(3)); // allowed[1 % 4]
+        assert_eq!(m.core_for(2), Some(2)); // allowed[100_000 % 4]
+    }
+
+    #[test]
+    fn topology_policy_packs_llc_groups() {
+        let t = two_llc();
+        let m = CpuMap::build_with(MappingPolicy::Topology { group: 0 }, 3, &[], &t);
+        // Emitter/worker/collector of a tiny farm: one LLC group,
+        // distinct physical cores (0, 2) before the SMT sibling (1).
+        assert_eq!(
+            (0..3).map(|i| m.core_for(i).unwrap()).collect::<Vec<_>>(),
+            vec![0, 2, 1]
+        );
+        let m1 = CpuMap::build_with(MappingPolicy::Topology { group: 1 }, 3, &[], &t);
+        assert_eq!(
+            (0..3).map(|i| m1.core_for(i).unwrap()).collect::<Vec<_>>(),
+            vec![4, 6, 5]
+        );
     }
 
     #[test]
@@ -142,15 +308,30 @@ mod tests {
     }
 
     #[test]
-    fn pin_current_thread_does_not_crash() {
-        pin_current_thread(0);
-        pin_current_thread(99999); // wrapped, best-effort
+    fn parse_policy_forms() {
+        assert_eq!(parse_policy("none").unwrap(), MappingPolicy::None);
+        assert_eq!(
+            parse_policy("rr:2").unwrap(),
+            MappingPolicy::RoundRobin { start: 2 }
+        );
+        assert_eq!(
+            parse_policy("topo").unwrap(),
+            MappingPolicy::Topology { group: 0 }
+        );
+        assert_eq!(
+            parse_policy("topology:3").unwrap(),
+            MappingPolicy::Topology { group: 3 }
+        );
+        assert_eq!(parse_policy("explicit").unwrap(), MappingPolicy::Explicit);
+        assert!(parse_policy("bogus").is_err());
+        assert!(parse_policy("rr:x").is_err());
     }
 
     #[test]
-    fn out_of_range_core_ignored() {
-        let m = CpuMap::build(MappingPolicy::Explicit, 1, &[100000]);
-        // wrapped into range
-        assert!(m.core_for(0).unwrap() < num_cpus());
+    fn pin_current_thread_does_not_crash() {
+        // Counters are process-global; just exercise both paths.
+        let _ = pin_current_thread(0);
+        let _ = pin_current_thread(usize::MAX); // out of range: refused
+        assert!(pins_failed() <= pins_attempted() || pins_attempted() == 0);
     }
 }

@@ -373,6 +373,15 @@ where
     }
 
     /// [`Skeleton::launch`] with a thread→core mapping policy.
+    ///
+    /// Thread ids are allocated front-to-back along the dataflow (a
+    /// pipeline's stages are consecutive; a farm is emitter, workers,
+    /// collector), so under [`MappingPolicy::Topology`] the resolved
+    /// [`CpuMap`] puts every SPSC producer/consumer pair on cache-near
+    /// cores and keeps a farm inside one LLC group — see
+    /// [`crate::topo::Topology::plan`]. All policies are restricted to
+    /// the cpuset-allowed mask. Placement is perf-only: in Spin mode the
+    /// output is bit-identical to [`MappingPolicy::None`].
     #[must_use = "a launched skeleton must be driven and joined"]
     fn launch_pinned(
         self,

@@ -1,0 +1,542 @@
+//! Machine-topology discovery for placement decisions (paper §2.3: the
+//! programmer controls "load-balancing and memory alignment and
+//! hot-spots"; §3: accelerator threads are "bound into one or more
+//! cores").
+//!
+//! [`Topology`] captures the shape that matters for SPSC traffic: SMT
+//! sibling sets (shared L1/L2), LLC sharing groups (the cache-coherence
+//! distance TR-09-12 shows governs ring throughput), NUMA nodes, and the
+//! cgroup/cpuset-**allowed** CPU mask. Discovery is pure `std` — it
+//! parses `/sys/devices/system/cpu` and `/proc/self/status`; only the
+//! actual pinning syscall (in [`crate::sched`]) needs libc.
+//!
+//! Every layout decision is unit-testable on any container: the parser
+//! takes an injectable sysfs root ([`Topology::from_sysfs`]), a compact
+//! fake spec ([`Topology::from_spec`]), and the `FF_FAKE_TOPO` env var
+//! overrides discovery wholesale (a path = fake sysfs tree, anything
+//! else = a spec string).
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+/// Where a [`Topology`] came from (shown by `ffctl topo`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopoSource {
+    /// Parsed from a real (or canned) sysfs tree.
+    Sysfs,
+    /// Built from an `FF_FAKE_TOPO` spec string or [`Topology::from_spec`].
+    Fake,
+    /// Fallback: no sysfs available — every CPU its own core, one LLC.
+    Flat,
+}
+
+/// The machine shape placement decisions consult. All CPU-id lists are
+/// sorted, deduplicated, and filtered to the allowed mask; every level's
+/// groups partition [`Topology::allowed_cpus`].
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// CPUs this process may run on (affinity/cpuset mask ∩ present).
+    allowed: Vec<usize>,
+    /// Physical cores: each inner list is one core's SMT siblings.
+    cores: Vec<Vec<usize>>,
+    /// Last-level-cache sharing groups (`cache/index3/shared_cpu_list`,
+    /// falling back to `index2` when no L3 is reported).
+    llc: Vec<Vec<usize>>,
+    /// NUMA nodes (`/sys/devices/system/node/node*/cpulist`).
+    numa: Vec<Vec<usize>>,
+    source: TopoSource,
+}
+
+/// Parse a kernel cpulist string like `"0-3,8,10-11"` (empty → empty).
+pub fn parse_cpu_list(s: &str) -> Result<Vec<usize>, String> {
+    let mut out = Vec::new();
+    for tok in s.trim().split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        match tok.split_once('-') {
+            Some((a, b)) => {
+                let lo: usize = a.trim().parse().map_err(|e| format!("bad cpu '{a}': {e}"))?;
+                let hi: usize = b.trim().parse().map_err(|e| format!("bad cpu '{b}': {e}"))?;
+                if hi < lo {
+                    return Err(format!("bad cpu range '{tok}'"));
+                }
+                out.extend(lo..=hi);
+            }
+            None => out.push(tok.parse().map_err(|e| format!("bad cpu '{tok}': {e}"))?),
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
+}
+
+/// Render a sorted CPU-id list back into kernel cpulist form
+/// (`[0,1,2,5]` → `"0-2,5"`).
+pub fn format_cpu_list(cpus: &[usize]) -> String {
+    let mut out = String::new();
+    let mut i = 0;
+    while i < cpus.len() {
+        let start = cpus[i];
+        let mut end = start;
+        while i + 1 < cpus.len() && cpus[i + 1] == end + 1 {
+            end = cpus[i + 1];
+            i += 1;
+        }
+        if !out.is_empty() {
+            out.push(',');
+        }
+        if end > start {
+            out.push_str(&format!("{start}-{end}"));
+        } else {
+            out.push_str(&start.to_string());
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Intersection of two sorted CPU lists.
+fn intersect(a: &[usize], b: &[usize]) -> Vec<usize> {
+    a.iter()
+        .copied()
+        .filter(|x| b.binary_search(x).is_ok())
+        .collect()
+}
+
+/// Normalise a group list: filter to `allowed`, drop empties, sort each
+/// group and the list (by first member), then append any allowed CPU the
+/// groups missed as a singleton so the result partitions `allowed`.
+fn normalise(mut groups: Vec<Vec<usize>>, allowed: &[usize]) -> Vec<Vec<usize>> {
+    for g in groups.iter_mut() {
+        g.retain(|c| allowed.binary_search(c).is_ok());
+        g.sort_unstable();
+        g.dedup();
+    }
+    groups.retain(|g| !g.is_empty());
+    // Dedup identical groups (each cpu's sysfs file names the whole set).
+    groups.sort();
+    groups.dedup();
+    let mut covered: Vec<usize> = groups.iter().flatten().copied().collect();
+    covered.sort_unstable();
+    for &c in allowed {
+        if covered.binary_search(&c).is_err() {
+            groups.push(vec![c]);
+        }
+    }
+    groups.sort_by_key(|g| g[0]);
+    groups
+}
+
+/// First line value for `key` in `/proc/self/status`-style text.
+fn status_field<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            return Some(rest.trim_start_matches(':').trim());
+        }
+    }
+    None
+}
+
+impl Topology {
+    /// Trivial topology: every CPU its own core, one LLC group, one NUMA
+    /// node. The fallback when sysfs is unreadable.
+    pub fn flat(mut allowed: Vec<usize>) -> Self {
+        if allowed.is_empty() {
+            allowed.push(0);
+        }
+        allowed.sort_unstable();
+        allowed.dedup();
+        Topology {
+            cores: allowed.iter().map(|&c| vec![c]).collect(),
+            llc: vec![allowed.clone()],
+            numa: vec![allowed.clone()],
+            allowed,
+            source: TopoSource::Flat,
+        }
+    }
+
+    /// Discover the real machine shape. Order of authority:
+    ///
+    /// 1. `FF_FAKE_TOPO` — a path (fake sysfs cpu-root) or a spec string
+    ///    (see [`Topology::from_spec`]); unparsable values fall through.
+    /// 2. `/sys/devices/system/cpu` ∩ `Cpus_allowed_list` from
+    ///    `/proc/self/status` (the cgroup/cpuset-constrained affinity
+    ///    mask — the satellite bugfix: mappings must never hand out CPUs
+    ///    the container doesn't own).
+    /// 3. [`Topology::flat`] over `0..num_cpus()`.
+    pub fn discover() -> Self {
+        if let Ok(spec) = std::env::var("FF_FAKE_TOPO") {
+            let fake = if spec.starts_with('/') {
+                Self::from_sysfs(Path::new(&spec), None)
+            } else {
+                Self::from_spec(&spec).ok()
+            };
+            if let Some(t) = fake {
+                return t;
+            }
+        }
+        let mask = std::fs::read_to_string("/proc/self/status")
+            .ok()
+            .and_then(|s| status_field(&s, "Cpus_allowed_list").map(str::to_string))
+            .and_then(|v| parse_cpu_list(&v).ok())
+            .filter(|v| !v.is_empty());
+        let root = Path::new("/sys/devices/system/cpu");
+        if let Some(t) = Self::from_sysfs(root, mask.as_deref()) {
+            return t;
+        }
+        // No sysfs (exotic container): trust available_parallelism, which
+        // already accounts for the affinity mask, but CPU *ids* are
+        // unknowable — take the first N of the mask if we have one.
+        let n = crate::util::num_cpus();
+        let allowed = match mask {
+            Some(m) => m.into_iter().take(n.max(1)).collect(),
+            None => (0..n.max(1)).collect(),
+        };
+        Self::flat(allowed)
+    }
+
+    /// The process-wide topology, discovered once (first use) and cached.
+    /// `FF_FAKE_TOPO` is honoured only at that first call; tests wanting
+    /// per-case shapes should build one and use
+    /// [`crate::sched::CpuMap::build_with`].
+    pub fn global() -> &'static Topology {
+        static TOPO: OnceLock<Topology> = OnceLock::new();
+        TOPO.get_or_init(Topology::discover)
+    }
+
+    /// Parse a sysfs cpu tree rooted at `root` (normally
+    /// `/sys/devices/system/cpu`; tests pass a canned directory). `mask`
+    /// restricts to the affinity/cpuset-allowed CPUs; `None` = all CPUs
+    /// found. Returns `None` when the tree yields no CPUs at all.
+    ///
+    /// Per cpu N it reads, each merely optional:
+    /// `cpuN/topology/thread_siblings_list` (fallback
+    /// `cpuN/topology/core_cpus_list`, the newer name) for SMT sets, and
+    /// `cpuN/cache/index3/shared_cpu_list` (fallback `index2`) for LLC
+    /// groups. NUMA nodes come from the sibling `../node/node*/cpulist`
+    /// tree when present.
+    pub fn from_sysfs(root: &Path, mask: Option<&[usize]>) -> Option<Self> {
+        let mut present: Vec<usize> = Vec::new();
+        for entry in std::fs::read_dir(root).ok()? {
+            let entry = entry.ok()?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(id) = name.strip_prefix("cpu").and_then(|s| s.parse::<usize>().ok()) {
+                present.push(id);
+            }
+        }
+        present.sort_unstable();
+        if present.is_empty() {
+            return None;
+        }
+        let allowed = match mask {
+            Some(m) => {
+                let inter = intersect(m, &present);
+                if inter.is_empty() {
+                    present.clone()
+                } else {
+                    inter
+                }
+            }
+            None => present.clone(),
+        };
+        let read_list = |cpu: usize, rel: &str| -> Option<Vec<usize>> {
+            let path = root.join(format!("cpu{cpu}")).join(rel);
+            let text = std::fs::read_to_string(path).ok()?;
+            parse_cpu_list(&text).ok().filter(|v| !v.is_empty())
+        };
+        let mut cores = Vec::new();
+        let mut llc = Vec::new();
+        for &cpu in &allowed {
+            if let Some(sib) = read_list(cpu, "topology/thread_siblings_list")
+                .or_else(|| read_list(cpu, "topology/core_cpus_list"))
+            {
+                cores.push(sib);
+            }
+            if let Some(share) = read_list(cpu, "cache/index3/shared_cpu_list")
+                .or_else(|| read_list(cpu, "cache/index2/shared_cpu_list"))
+            {
+                llc.push(share);
+            }
+        }
+        if llc.is_empty() {
+            // No cacheinfo at all: treat the machine as one LLC domain.
+            llc.push(allowed.clone());
+        }
+        let mut numa = Vec::new();
+        if let Some(parent) = root.parent() {
+            if let Ok(entries) = std::fs::read_dir(parent.join("node")) {
+                for entry in entries.flatten() {
+                    let name = entry.file_name();
+                    let name = name.to_string_lossy();
+                    let is_node = name
+                        .strip_prefix("node")
+                        .is_some_and(|s| s.parse::<usize>().is_ok());
+                    if is_node {
+                        if let Ok(text) = std::fs::read_to_string(entry.path().join("cpulist")) {
+                            if let Ok(v) = parse_cpu_list(&text) {
+                                numa.push(v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if numa.is_empty() {
+            numa.push(allowed.clone());
+        }
+        Some(Topology {
+            cores: normalise(cores, &allowed),
+            llc: normalise(llc, &allowed),
+            numa: normalise(numa, &allowed),
+            allowed,
+            source: TopoSource::Sysfs,
+        })
+    }
+
+    /// Build a fake topology from a compact spec — the non-path form of
+    /// `FF_FAKE_TOPO`. `;`-separated `key=value` segments; group lists
+    /// use `/` between groups and kernel cpulist syntax inside each:
+    ///
+    /// ```text
+    /// allowed=0-7;smt=0,4/1,5/2,6/3,7;llc=0-3/4-7;numa=0-7
+    /// ```
+    ///
+    /// Any key may be omitted: `allowed` defaults to the union of the
+    /// given groups, `smt` to one-cpu cores, `llc`/`numa` to one group of
+    /// everything.
+    pub fn from_spec(spec: &str) -> Result<Self, String> {
+        let parse_groups = |v: &str| -> Result<Vec<Vec<usize>>, String> {
+            v.split('/')
+                .filter(|g| !g.trim().is_empty())
+                .map(parse_cpu_list)
+                .collect()
+        };
+        let mut allowed: Option<Vec<usize>> = None;
+        let mut smt: Option<Vec<Vec<usize>>> = None;
+        let mut llc: Option<Vec<Vec<usize>>> = None;
+        let mut numa: Option<Vec<Vec<usize>>> = None;
+        for seg in spec.split(';') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                continue;
+            }
+            let (k, v) = seg
+                .split_once('=')
+                .ok_or_else(|| format!("FF_FAKE_TOPO segment '{seg}': expected key=value"))?;
+            match k.trim() {
+                "allowed" => allowed = Some(parse_cpu_list(v)?),
+                "smt" => smt = Some(parse_groups(v)?),
+                "llc" => llc = Some(parse_groups(v)?),
+                "numa" => numa = Some(parse_groups(v)?),
+                other => return Err(format!("FF_FAKE_TOPO: unknown key '{other}'")),
+            }
+        }
+        let allowed = match allowed {
+            Some(a) if !a.is_empty() => a,
+            _ => {
+                let mut union: Vec<usize> = smt
+                    .iter()
+                    .chain(llc.iter())
+                    .chain(numa.iter())
+                    .flatten()
+                    .flatten()
+                    .copied()
+                    .collect();
+                union.sort_unstable();
+                union.dedup();
+                if union.is_empty() {
+                    return Err("FF_FAKE_TOPO: no cpus (set allowed= or a group key)".into());
+                }
+                union
+            }
+        };
+        let smt = smt.unwrap_or_else(|| allowed.iter().map(|&c| vec![c]).collect());
+        let llc = llc.unwrap_or_else(|| vec![allowed.clone()]);
+        let numa = numa.unwrap_or_else(|| vec![allowed.clone()]);
+        Ok(Topology {
+            cores: normalise(smt, &allowed),
+            llc: normalise(llc, &allowed),
+            numa: normalise(numa, &allowed),
+            allowed,
+            source: TopoSource::Fake,
+        })
+    }
+
+    /// CPUs this process may run on (sorted). Never empty.
+    pub fn allowed_cpus(&self) -> &[usize] {
+        &self.allowed
+    }
+
+    /// SMT sibling sets (physical cores), partitioning the allowed CPUs.
+    pub fn smt_groups(&self) -> &[Vec<usize>] {
+        &self.cores
+    }
+
+    /// LLC sharing groups, partitioning the allowed CPUs.
+    pub fn llc_groups(&self) -> &[Vec<usize>] {
+        &self.llc
+    }
+
+    /// NUMA nodes, partitioning the allowed CPUs.
+    pub fn numa_nodes(&self) -> &[Vec<usize>] {
+        &self.numa
+    }
+
+    pub fn source(&self) -> TopoSource {
+        self.source
+    }
+
+    /// The placement order behind `MappingPolicy::Topology`: CPUs of the
+    /// LLC group `group % n_groups` first — **one CPU per physical core
+    /// before any SMT sibling** (two workers doubled onto one core halve
+    /// each other) — then the remaining siblings, then the next LLC
+    /// groups in rotation. Consecutive positions therefore share the
+    /// LLC, so thread ids allocated front-to-back along the dataflow
+    /// (the builder's order) put every SPSC producer/consumer pair on
+    /// cache-near cores, and a farm's emitter/workers/collector stay
+    /// inside one LLC group until it genuinely overflows.
+    ///
+    /// `nthreads` beyond the allowed-CPU count wrap (reuse CPUs) —
+    /// oversubscription spills gracefully rather than failing.
+    pub fn plan(&self, nthreads: usize, group: usize) -> Vec<usize> {
+        let order = self.placement_order(group);
+        (0..nthreads).map(|i| order[i % order.len()]).collect()
+    }
+
+    /// The full CPU ordering [`Topology::plan`] indexes into: every
+    /// allowed CPU exactly once, LLC groups rotated to start at
+    /// `group % n_groups`, distinct physical cores before SMT siblings
+    /// within each group.
+    pub fn placement_order(&self, group: usize) -> Vec<usize> {
+        let ngroups = self.llc.len().max(1);
+        let mut order = Vec::with_capacity(self.allowed.len());
+        for k in 0..ngroups {
+            let g = &self.llc[(group + k) % ngroups];
+            // This LLC group's physical cores, in id order.
+            let cores: Vec<&Vec<usize>> = self
+                .cores
+                .iter()
+                .filter(|c| g.binary_search(&c[0]).is_ok())
+                .collect();
+            let max_way = cores.iter().map(|c| c.len()).max().unwrap_or(1);
+            for way in 0..max_way {
+                for core in &cores {
+                    if let Some(&cpu) = core.get(way) {
+                        order.push(cpu);
+                    }
+                }
+            }
+        }
+        if order.is_empty() {
+            order.extend_from_slice(&self.allowed);
+        }
+        if order.is_empty() {
+            order.push(0);
+        }
+        order
+    }
+
+    /// Human-readable shape summary (`ffctl topo`).
+    pub fn render(&self) -> String {
+        let groups = |gs: &[Vec<usize>]| -> String {
+            gs.iter()
+                .map(|g| format_cpu_list(g))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        };
+        format!(
+            "source:  {:?}\nallowed: {} ({} cpus)\ncores:   {}\nllc:     {}\nnuma:    {}\n",
+            self.source,
+            format_cpu_list(&self.allowed),
+            self.allowed.len(),
+            groups(&self.cores),
+            groups(&self.llc),
+            groups(&self.numa),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_list_roundtrip() {
+        assert_eq!(parse_cpu_list("0-3,8,10-11").unwrap(), vec![0, 1, 2, 3, 8, 10, 11]);
+        assert_eq!(parse_cpu_list("").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_cpu_list(" 5 ").unwrap(), vec![5]);
+        assert!(parse_cpu_list("3-1").is_err());
+        assert!(parse_cpu_list("x").is_err());
+        assert_eq!(format_cpu_list(&[0, 1, 2, 5]), "0-2,5");
+        assert_eq!(format_cpu_list(&[7]), "7");
+        assert_eq!(format_cpu_list(&[]), "");
+    }
+
+    #[test]
+    fn flat_topology_shape() {
+        let t = Topology::flat(vec![0, 1, 2, 3]);
+        assert_eq!(t.allowed_cpus(), &[0, 1, 2, 3]);
+        assert_eq!(t.llc_groups().len(), 1);
+        assert_eq!(t.smt_groups().len(), 4);
+        assert_eq!(t.plan(6, 0), vec![0, 1, 2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn spec_smt_machine_places_distinct_cores_first() {
+        // 8 logical / 4 physical, SMT pairs (i, i+4), one LLC.
+        let t = Topology::from_spec("allowed=0-7;smt=0,4/1,5/2,6/3,7;llc=0-7").unwrap();
+        assert_eq!(t.source(), TopoSource::Fake);
+        // Distinct physical cores first, SMT siblings only afterwards.
+        assert_eq!(t.plan(8, 0), vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(t.plan(2, 0), vec![0, 1]);
+    }
+
+    #[test]
+    fn spec_multi_llc_packs_groups_and_spills() {
+        let t = Topology::from_spec("llc=0-3/4-7").unwrap();
+        assert_eq!(t.allowed_cpus().len(), 8);
+        assert_eq!(t.llc_groups().len(), 2);
+        // Group hints select distinct LLC groups; hints wrap.
+        assert_eq!(t.plan(2, 0), vec![0, 1]);
+        assert_eq!(t.plan(2, 1), vec![4, 5]);
+        assert_eq!(t.plan(2, 2), vec![0, 1]);
+        // More threads than one group: spill into the next group.
+        assert_eq!(t.plan(6, 1), vec![4, 5, 6, 7, 0, 1]);
+    }
+
+    #[test]
+    fn spec_defaults_and_errors() {
+        let t = Topology::from_spec("allowed=0-3").unwrap();
+        assert_eq!(t.llc_groups(), &[vec![0, 1, 2, 3]]);
+        assert_eq!(t.numa_nodes().len(), 1);
+        assert!(Topology::from_spec("").is_err());
+        assert!(Topology::from_spec("bogus=1").is_err());
+        assert!(Topology::from_spec("allowed").is_err());
+    }
+
+    #[test]
+    fn normalise_filters_and_covers() {
+        let g = normalise(vec![vec![0, 1, 9], vec![1, 0, 9]], &[0, 1, 2]);
+        // Filtered to allowed, deduped, and cpu 2 (uncovered) appended.
+        assert_eq!(g, vec![vec![0, 1], vec![2]]);
+    }
+
+    #[test]
+    fn placement_order_is_a_permutation_of_allowed() {
+        let spec = "allowed=0-15;smt=0,8/1,9/2,10/3,11/4,12/5,13/6,14/7,15;llc=0-3,8-11/4-7,12-15";
+        let t = Topology::from_spec(spec).unwrap();
+        for hint in 0..3 {
+            let mut order = t.placement_order(hint);
+            assert_eq!(order.len(), 16);
+            order.sort_unstable();
+            assert_eq!(order, (0..16).collect::<Vec<_>>());
+        }
+        // Hint 0 starts in the first LLC group, on distinct cores.
+        assert_eq!(t.plan(4, 0), vec![0, 1, 2, 3]);
+        // Hint 1 starts in the second group.
+        assert_eq!(t.plan(4, 1), vec![4, 5, 6, 7]);
+    }
+}

@@ -1,0 +1,298 @@
+//! Topology-aware placement: parsing and placement-invariance tests.
+//!
+//! Part 1 — **canned sysfs fixtures**: [`Topology::from_sysfs`] over
+//! temp-dir trees shaped like the machines that matter (SMT on, SMT off
+//! with two LLC domains, a single-LLC laptop reporting only L2, and a
+//! cpuset-restricted container). No test reads the real `/sys`.
+//!
+//! Part 2 — **bit-identity**: placement is a perf knob, never a
+//! semantic one. In Spin mode the same workload produces bit-identical
+//! output under `MappingPolicy::{None, RoundRobin, Topology}` for an
+//! ordered farm and a pipeline (exact sequence) and an `AccelPool`
+//! (multiset — the merged drain interleaving is inherently racy).
+
+use std::fs;
+use std::path::PathBuf;
+
+use fastflow::accel::{AccelPool, Placement, PoolConfig};
+use fastflow::prelude::*;
+use fastflow::topo::TopoSource;
+
+/// A canned sysfs tree under a unique temp dir, deleted on drop.
+/// Layout mirrors the real thing: `<base>/cpu/cpuN/...` plus the
+/// sibling `<base>/node/nodeK/cpulist` NUMA tree.
+struct FakeSysfs {
+    base: PathBuf,
+}
+
+impl FakeSysfs {
+    fn new(name: &str) -> Self {
+        let base = std::env::temp_dir().join(format!("ff-topo-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&base);
+        fs::create_dir_all(base.join("cpu")).unwrap();
+        FakeSysfs { base }
+    }
+
+    fn cpu_root(&self) -> PathBuf {
+        self.base.join("cpu")
+    }
+
+    fn write(&self, rel: &str, text: &str) {
+        let p = self.base.join(rel);
+        fs::create_dir_all(p.parent().unwrap()).unwrap();
+        fs::write(p, text).unwrap();
+    }
+}
+
+impl Drop for FakeSysfs {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.base);
+    }
+}
+
+/// Fixture: 8 logical / 4 physical CPUs, SMT pairs `(i, i+4)`, one LLC
+/// (a desktop with hyperthreading on).
+fn smt_on_tree(name: &str) -> FakeSysfs {
+    let fx = FakeSysfs::new(name);
+    for cpu in 0..8usize {
+        let core = cpu % 4;
+        fx.write(
+            &format!("cpu/cpu{cpu}/topology/thread_siblings_list"),
+            &format!("{},{}\n", core, core + 4),
+        );
+        fx.write(&format!("cpu/cpu{cpu}/cache/index3/shared_cpu_list"), "0-7\n");
+    }
+    fx
+}
+
+#[test]
+fn sysfs_smt_on_single_llc() {
+    let fx = smt_on_tree("smt-on");
+    let t = Topology::from_sysfs(&fx.cpu_root(), None).unwrap();
+    assert_eq!(t.source(), TopoSource::Sysfs);
+    assert_eq!(t.allowed_cpus(), &[0, 1, 2, 3, 4, 5, 6, 7]);
+    assert_eq!(
+        t.smt_groups(),
+        &[vec![0, 4], vec![1, 5], vec![2, 6], vec![3, 7]]
+    );
+    assert_eq!(t.llc_groups(), &[vec![0, 1, 2, 3, 4, 5, 6, 7]]);
+    // Distinct physical cores before SMT siblings.
+    assert_eq!(t.plan(4, 0), vec![0, 1, 2, 3]);
+    assert_eq!(t.plan(8, 0), vec![0, 1, 2, 3, 4, 5, 6, 7]);
+}
+
+#[test]
+fn sysfs_smt_off_two_llc_domains() {
+    // 8 single-thread cores split across two L3 domains (a small EPYC /
+    // dual-CCX shape), with matching NUMA nodes.
+    let fx = FakeSysfs::new("two-llc");
+    for cpu in 0..8usize {
+        fx.write(
+            &format!("cpu/cpu{cpu}/topology/thread_siblings_list"),
+            &format!("{cpu}\n"),
+        );
+        let share = if cpu < 4 { "0-3" } else { "4-7" };
+        fx.write(
+            &format!("cpu/cpu{cpu}/cache/index3/shared_cpu_list"),
+            &format!("{share}\n"),
+        );
+    }
+    fx.write("node/node0/cpulist", "0-3\n");
+    fx.write("node/node1/cpulist", "4-7\n");
+    let t = Topology::from_sysfs(&fx.cpu_root(), None).unwrap();
+    assert_eq!(t.llc_groups(), &[vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+    assert_eq!(t.numa_nodes(), &[vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+    assert_eq!(t.smt_groups().len(), 8);
+    // Group hints pack into distinct LLC domains, spilling gracefully.
+    assert_eq!(t.plan(2, 0), vec![0, 1]);
+    assert_eq!(t.plan(2, 1), vec![4, 5]);
+    assert_eq!(t.plan(6, 1), vec![4, 5, 6, 7, 0, 1]);
+}
+
+#[test]
+fn sysfs_laptop_index2_fallback_and_new_names() {
+    // A small laptop: cacheinfo reports no L3 (index2 is the last
+    // level), and topology uses the newer `core_cpus_list` file name.
+    let fx = FakeSysfs::new("laptop");
+    for cpu in 0..4usize {
+        fx.write(
+            &format!("cpu/cpu{cpu}/topology/core_cpus_list"),
+            &format!("{cpu}\n"),
+        );
+        fx.write(&format!("cpu/cpu{cpu}/cache/index2/shared_cpu_list"), "0-3\n");
+    }
+    let t = Topology::from_sysfs(&fx.cpu_root(), None).unwrap();
+    assert_eq!(t.allowed_cpus(), &[0, 1, 2, 3]);
+    assert_eq!(t.smt_groups(), &[vec![0], vec![1], vec![2], vec![3]]);
+    assert_eq!(t.llc_groups(), &[vec![0, 1, 2, 3]]);
+    assert_eq!(t.numa_nodes().len(), 1); // no node tree -> one node
+}
+
+#[test]
+fn sysfs_cpuset_restricted_container() {
+    // The same SMT-on machine seen from a container whose cpuset grants
+    // only CPUs {2,3,6,7}: every level is filtered to the mask, and
+    // plans never hand out a forbidden CPU.
+    let fx = smt_on_tree("cpuset");
+    let mask = [2usize, 3, 6, 7];
+    let t = Topology::from_sysfs(&fx.cpu_root(), Some(&mask)).unwrap();
+    assert_eq!(t.allowed_cpus(), &mask);
+    assert_eq!(t.smt_groups(), &[vec![2, 6], vec![3, 7]]);
+    assert_eq!(t.llc_groups(), &[vec![2, 3, 6, 7]]);
+    assert_eq!(t.plan(2, 0), vec![2, 3]); // distinct cores first
+    assert_eq!(t.plan(6, 0), vec![2, 3, 6, 7, 2, 3]); // wrap inside mask
+}
+
+#[test]
+fn sysfs_mask_wider_than_machine_intersects_to_present() {
+    // /proc/self/status can report an all-ones Cpus_allowed_list far
+    // wider than the actual machine; a disjoint mask (affinity info
+    // that's plain wrong) must not zero the topology out.
+    let fx = smt_on_tree("wide-mask");
+    let wide: Vec<usize> = (0..256).collect();
+    let t = Topology::from_sysfs(&fx.cpu_root(), Some(&wide)).unwrap();
+    assert_eq!(t.allowed_cpus(), &[0, 1, 2, 3, 4, 5, 6, 7]);
+    let disjoint = [100usize, 101];
+    let t = Topology::from_sysfs(&fx.cpu_root(), Some(&disjoint)).unwrap();
+    assert_eq!(t.allowed_cpus(), &[0, 1, 2, 3, 4, 5, 6, 7]);
+}
+
+#[test]
+fn sysfs_empty_tree_is_none() {
+    let fx = FakeSysfs::new("empty");
+    assert!(Topology::from_sysfs(&fx.cpu_root(), None).is_none());
+    assert!(Topology::from_sysfs(&fx.base.join("missing"), None).is_none());
+}
+
+// --------------------------------------------------------------------
+// Part 2: Spin-mode output is bit-identical across mapping policies.
+// --------------------------------------------------------------------
+
+const POLICIES: &[MappingPolicy] = &[
+    MappingPolicy::None,
+    MappingPolicy::RoundRobin { start: 0 },
+    MappingPolicy::Topology { group: 0 },
+];
+
+#[test]
+fn spin_identity_ordered_farm() {
+    let n = 5_000u64;
+    let run = |mapping: MappingPolicy| -> Vec<u64> {
+        let mut acc: FarmAccel<u64, u64> = farm(
+            FarmConfig::default().workers(4).ordered().mapping(mapping),
+            |wi| {
+                seq_fn(move |x: u64| {
+                    if wi % 2 == 0 {
+                        std::thread::yield_now(); // skew completion order
+                    }
+                    x.wrapping_mul(2654435761).rotate_left(7)
+                })
+            },
+        )
+        .into_accel();
+        for i in 0..n {
+            acc.offload(i).unwrap();
+        }
+        acc.offload_eos();
+        let mut got = Vec::with_capacity(n as usize);
+        while let Some(v) = acc.load_result() {
+            got.push(v);
+        }
+        acc.wait();
+        got
+    };
+    let baseline = run(POLICIES[0]);
+    assert_eq!(baseline.len(), n as usize);
+    for &policy in &POLICIES[1..] {
+        assert_eq!(run(policy), baseline, "farm output differs under {policy:?}");
+    }
+}
+
+#[test]
+fn spin_identity_pipeline() {
+    let n = 5_000u64;
+    let run = |mapping: MappingPolicy| -> Vec<u64> {
+        let launched = seq_fn(|x: u64| x.wrapping_mul(31).wrapping_add(7))
+            .then(seq_fn(|x: u64| x ^ (x >> 3)))
+            .then(seq_fn(|x: u64| x.wrapping_mul(0x9e3779b97f4a7c15)))
+            .launch_pinned(RunMode::RunToEnd, mapping, &[]);
+        let (mut input, output, handle) = launched.split();
+        let mut output = output.expect("pipeline has an output");
+        let pusher = std::thread::spawn(move || {
+            for i in 0..n {
+                input.send(i).unwrap();
+            }
+            input.send_eos().unwrap();
+        });
+        let mut got = Vec::with_capacity(n as usize);
+        loop {
+            match output.recv() {
+                fastflow::channel::Msg::Task(v) => got.push(v),
+                fastflow::channel::Msg::Batch(vs) => got.extend(vs),
+                fastflow::channel::Msg::Eos => break,
+            }
+        }
+        pusher.join().unwrap();
+        handle.join();
+        got
+    };
+    let baseline = run(POLICIES[0]);
+    assert_eq!(baseline.len(), n as usize);
+    for &policy in &POLICIES[1..] {
+        assert_eq!(
+            run(policy),
+            baseline,
+            "pipeline output differs under {policy:?}"
+        );
+    }
+}
+
+#[test]
+fn spin_identity_pool_multiset() {
+    let clients = 3u64;
+    let per_client = 1_000u64;
+    let run = |mapping: MappingPolicy| -> Vec<u64> {
+        let placement = match mapping {
+            MappingPolicy::Topology { .. } => Placement::Topology,
+            _ => Placement::RoundRobin,
+        };
+        let mut fc = FarmConfig::default().workers(2);
+        if let MappingPolicy::RoundRobin { start } = mapping {
+            fc = fc.mapping(MappingPolicy::RoundRobin { start });
+        }
+        let (mut pool, root) = AccelPool::run(
+            PoolConfig::default().shards(2).placement(placement).batch(16).farm(fc),
+            |_s, _w| node_fn(|x: u64| x.wrapping_mul(3).wrapping_add(1)),
+        );
+        let joins: Vec<_> = (0..clients)
+            .map(|c| {
+                let mut h = root.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_client {
+                        h.offload(c * per_client + i).unwrap();
+                    }
+                    h.finish().unwrap();
+                })
+            })
+            .collect();
+        drop(root);
+        pool.offload_eos();
+        let mut got = Vec::with_capacity((clients * per_client) as usize);
+        while let Some(v) = pool.load_result() {
+            got.push(v);
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        pool.wait();
+        // The merged drain interleaving is inherently nondeterministic;
+        // compare as a multiset.
+        got.sort_unstable();
+        got
+    };
+    let baseline = run(POLICIES[0]);
+    assert_eq!(baseline.len(), (clients * per_client) as usize);
+    for &policy in &POLICIES[1..] {
+        assert_eq!(run(policy), baseline, "pool multiset differs under {policy:?}");
+    }
+}
