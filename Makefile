@@ -9,7 +9,7 @@ CARGO  ?= cargo
 PYTHON ?= python
 ARTIFACT_DIR ?= artifacts
 
-.PHONY: all build test test-fallback test-oversub bench bench-smoke bench-diff bench-baseline doc artifacts fmt clippy lint loom miri tsan pytest clean
+.PHONY: all build test test-fallback test-oversub bench bench-smoke bench-diff bench-baseline serve net-smoke doc artifacts fmt clippy lint loom miri tsan pytest clean
 
 # The quick-mode benches that feed the committed perf wall (bench/).
 BENCH_SMOKE_SET = accel_multiclient nested_topologies allocator queue_latency placement
@@ -53,6 +53,10 @@ bench-smoke:
 		FF_BENCH_BASELINE=$(abspath bench) \
 		$(CARGO) bench --bench $$b -- --quick || exit 1; \
 	done
+	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
+		FF_BENCH_JSON=$(abspath $(ARTIFACT_DIR)) \
+		FF_BENCH_BASELINE=$(abspath bench) \
+		$(CARGO) run --release --bin ffctl -- netbench --quick
 
 # The blocking perf gate (self-hosted perf runners, or local checks on
 # a quiet machine): same quick sweeps, but any regression beyond
@@ -64,6 +68,9 @@ bench-diff:
 		FF_BENCH_BASELINE=$(abspath bench) FF_BENCH_STRICT=1 \
 		$(CARGO) bench --bench $$b -- --quick || exit 1; \
 	done
+	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
+		FF_BENCH_BASELINE=$(abspath bench) FF_BENCH_STRICT=1 \
+		$(CARGO) run --release --bin ffctl -- netbench --quick
 
 # Move the wall: regenerate the committed baselines in bench/ (run on a
 # quiet machine, then commit the changed JSONs with the PR that
@@ -74,6 +81,25 @@ bench-baseline:
 		FF_BENCH_JSON=$(abspath bench) \
 		$(CARGO) bench --bench $$b -- --quick || exit 1; \
 	done
+	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
+		FF_BENCH_JSON=$(abspath bench) \
+		$(CARGO) run --release --bin ffctl -- netbench --quick
+
+# Run the accelerator as a TCP service (ffnet/1). Override knobs with
+# SERVE_ARGS, e.g. `make serve SERVE_ARGS="--payload 512 --window 256"`.
+SERVE_ARGS ?= --addr 127.0.0.1:7143 --payload 64
+serve:
+	cd rust && $(CARGO) run --release --bin ffctl -- serve $(SERVE_ARGS)
+
+# Loopback net lane: the self-hosted netbench quick sweep (each payload
+# size gets its own in-process server on port 0), emitting
+# $(ARTIFACT_DIR)/BENCH_net.json and diffing it (advisory) against the
+# committed bench/BENCH_net.json wall.
+net-smoke:
+	cd rust && FF_BENCH_SAMPLES=2 FF_BENCH_WARMUP=0 \
+		FF_BENCH_JSON=$(abspath $(ARTIFACT_DIR)) \
+		FF_BENCH_BASELINE=$(abspath bench) \
+		$(CARGO) run --release --bin ffctl -- netbench --quick
 
 # API docs with rustdoc warnings denied (deprecation shims must stay
 # documented; broken intra-doc links fail the build).

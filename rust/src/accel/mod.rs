@@ -59,6 +59,13 @@ pub enum AccelError {
     /// [`Accel::offload_eos`] (or the handle was finished);
     /// [`Accel::thaw`] opens the next cycle.
     Closed,
+    /// Transport failure in the network layer ([`crate::net`]): the
+    /// socket died mid-conversation for a reason other than an orderly
+    /// peer hang-up (those surface as [`AccelError::Disconnected`]).
+    Io(std::io::ErrorKind),
+    /// Wire-protocol violation in the network layer ([`crate::net`]):
+    /// the peer sent bytes that are not valid `ffnet/1`.
+    Protocol(crate::net::frame::ProtocolError),
 }
 
 impl std::fmt::Display for AccelError {
@@ -69,8 +76,58 @@ impl std::fmt::Display for AccelError {
             AccelError::Closed => {
                 write!(f, "accelerator input stream closed (offload after offload_eos)")
             }
+            AccelError::Io(kind) => write!(f, "network transport error: {kind:?}"),
+            AccelError::Protocol(e) => write!(f, "wire-protocol violation: {e}"),
         }
     }
 }
 
 impl std::error::Error for AccelError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The enum is #[non_exhaustive], so every pre-net caller already
+    // carries a wildcard arm — this is the shape such callers use, and
+    // it must keep compiling (and keep classifying correctly) with the
+    // Io/Protocol variants present.
+    fn legacy_classify(e: &AccelError) -> &'static str {
+        match e {
+            AccelError::Disconnected => "disconnected",
+            AccelError::WouldBlock => "retry",
+            AccelError::Closed => "closed",
+            _ => "other",
+        }
+    }
+
+    #[test]
+    fn existing_callers_see_new_variants_as_other() {
+        assert_eq!(legacy_classify(&AccelError::Disconnected), "disconnected");
+        assert_eq!(legacy_classify(&AccelError::WouldBlock), "retry");
+        assert_eq!(legacy_classify(&AccelError::Closed), "closed");
+        assert_eq!(
+            legacy_classify(&AccelError::Io(std::io::ErrorKind::TimedOut)),
+            "other"
+        );
+        assert_eq!(
+            legacy_classify(&AccelError::Protocol(
+                crate::net::frame::ProtocolError::BadMagic
+            )),
+            "other"
+        );
+    }
+
+    #[test]
+    fn net_variants_display_and_compare() {
+        let io = AccelError::Io(std::io::ErrorKind::ConnectionReset);
+        assert!(io.to_string().contains("transport"));
+        assert_eq!(io, AccelError::Io(std::io::ErrorKind::ConnectionReset));
+        let proto = AccelError::Protocol(crate::net::frame::ProtocolError::Oversize {
+            len: 99,
+            max: 8,
+        });
+        assert!(proto.to_string().contains("99"));
+        assert_ne!(proto, AccelError::Disconnected);
+    }
+}

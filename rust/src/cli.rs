@@ -117,6 +117,34 @@ mod tests {
     }
 
     #[test]
+    fn net_service_knobs_parse() {
+        // The network-service knobs: `ffctl serve` / `ffctl netbench`.
+        let a = Args::parse(&toks(&[
+            "serve",
+            "--addr",
+            "127.0.0.1:7143",
+            "--payload=512",
+            "--window",
+            "256",
+            "--wait",
+            "park",
+            "--for-secs",
+            "120",
+        ]));
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.get("addr"), Some("127.0.0.1:7143"));
+        assert_eq!(a.get_usize("payload", 64), 512);
+        assert_eq!(a.get_u32("window", 1024), 256);
+        assert_eq!(a.get("wait"), Some("park"));
+        assert_eq!(a.get_u32("for-secs", 0), 120);
+        // netbench self-hosted quick mode is flag-only.
+        let b = Args::parse(&toks(&["netbench", "--quick"]));
+        assert_eq!(b.subcommand(), Some("netbench"));
+        assert!(b.has_flag("quick"));
+        assert_eq!(b.get("addr"), None);
+    }
+
+    #[test]
     fn trailing_flag_without_value() {
         let a = Args::parse(&toks(&["x", "--quick"]));
         assert!(a.has_flag("quick"));

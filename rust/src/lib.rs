@@ -30,6 +30,11 @@
 //!    ([`accel::AccelHandle`], one private SPSC lane per client), and
 //!    the sharded [`accel::AccelPool`] with batched offload
 //!    ([`channel::Msg::Batch`]) and merged result drain.
+//! 5. **The service** — [`net`]: the accelerator behind a TCP wire
+//!    protocol (`ffnet/1`): length-prefixed framed codec decoding into
+//!    recycled batch buffers, an admission-controlled [`net::NetServer`]
+//!    whose connections are just more pool clients, and the thin
+//!    blocking [`net::Client`] with the `AccelHandle` surface.
 //!
 //! On top of the stack sit the paper's workloads ([`apps`]): the QT
 //! Mandelbrot explorer (Fig. 4), Somers' N-queens solver (Table 2) and the
@@ -81,6 +86,7 @@ pub mod config;
 pub mod coordinator;
 pub mod farm;
 pub mod metrics;
+pub mod net;
 pub mod node;
 pub mod pipeline;
 pub mod queues;
@@ -108,6 +114,7 @@ pub mod prelude {
         farm, feedback, CollectorOrdering, Farm, FarmConfig, Feedback, MasterCtx, MasterLogic,
         SchedPolicy,
     };
+    pub use crate::net::{serve, Client as NetClient, NetServer, ServerConfig};
     pub use crate::node::{node_fn, Node, Outbox, RunMode, Svc};
     pub use crate::sched::MappingPolicy;
     pub use crate::skeleton::{

@@ -62,6 +62,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("nqueens") => cmd_nqueens(args),
         Some("matmul") => cmd_matmul(args),
         Some("topo") => cmd_topo(args),
+        Some("serve") => cmd_serve(args),
+        Some("netbench") => cmd_netbench(args),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -84,6 +86,8 @@ SUBCOMMANDS
   nqueens   count N-queens solutions once
   matmul    Fig. 3 running example (matrix multiply offload)
   topo      print the discovered machine topology + planned layout
+  serve     run the accelerator as a TCP service (ffnet/1 protocol)
+  netbench  loopback saturation sweep: conns x batch x payload -> BENCH_net.json
   info      platform + configuration report
 
 COMMON OPTIONS
@@ -99,6 +103,17 @@ COMMON OPTIONS
                      pool shard into its own last-level-cache group
   --trace            print per-node trace report
   --csv <dir>        also write tables as CSV
+
+SERVE / NETBENCH OPTIONS
+  --addr <host:port> serve: bind address (default 127.0.0.1:7143)
+                     netbench: benchmark an already-running server
+                     (default: self-hosted loopback servers on port 0)
+  --payload <n>      wire task size in bytes: 8 | 64 | 512 (serve default 64)
+  --spin <n>         serve: busy-work iterations per task (default 0)
+  --window <n>       serve: per-connection in-flight admission window
+  --wait <m>         serve: pool waiting mode (spin|adaptive|park;
+                     floored to adaptive so an idle service parks)
+  --for-secs <t>     serve: run t seconds then shut down cleanly (0 = forever)
 ",
         fastflow::VERSION
     );
@@ -381,6 +396,247 @@ fn cmd_topo(args: &Args) -> Result<()> {
         fastflow::sched::pins_failed()
     );
     Ok(())
+}
+
+/// Payload sizes `serve`/`netbench` can monomorphize (the wire type is
+/// `[u8; N]`, so each size is its own instantiation).
+const PAYLOAD_SIZES: [usize; 3] = [8, 64, 512];
+
+fn parse_wait(cfg: &Config) -> Result<fastflow::util::WaitMode> {
+    use fastflow::util::WaitMode;
+    match cfg.get("wait").as_deref() {
+        None | Some("adaptive") => Ok(WaitMode::Adaptive),
+        Some("spin") => Ok(WaitMode::Spin),
+        Some("park") => Ok(WaitMode::Park),
+        Some(w) => fail(format!("unknown wait mode '{w}' (spin|adaptive|park)")),
+    }
+}
+
+/// Build the [`fastflow::net::ServerConfig`] from CLI knobs (shared by
+/// `serve` and the self-hosted `netbench` servers).
+fn server_config(cfg: &Config) -> Result<fastflow::net::ServerConfig> {
+    use fastflow::accel::PoolConfig;
+    let mut pool = PoolConfig::default().wait(parse_wait(cfg)?);
+    pool = pool.shards(cfg.get_usize("shards", pool.shards));
+    if let Some(w) = cfg.get("workers") {
+        let w: usize = w
+            .parse()
+            .map_err(|_| format!("bad --workers '{w}' (want a count)"))?;
+        pool = pool.workers_per_shard(w);
+    }
+    pool = pool.batch(cfg.get_usize("batch", 1));
+    let scfg = fastflow::net::ServerConfig::default()
+        .pool(pool)
+        .window(cfg.get_u32("window", 1024));
+    Ok(scfg)
+}
+
+/// The deterministic per-task busy work `serve` runs before
+/// checksumming — lets `netbench` shift the bottleneck from the wire to
+/// the workers without changing the protocol.
+fn spin_work(iters: u64) {
+    for i in 0..iters {
+        std::hint::black_box(i);
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let addr = cfg
+        .get("addr")
+        .unwrap_or_else(|| "127.0.0.1:7143".to_string());
+    let payload = cfg.get_usize("payload", 64);
+    let spin = u64::from(cfg.get_u32("spin", 0));
+    let for_secs = u64::from(cfg.get_u32("for-secs", 0));
+    let scfg = server_config(&cfg)?;
+    match payload {
+        8 => run_serve::<8>(&addr, scfg, spin, for_secs),
+        64 => run_serve::<64>(&addr, scfg, spin, for_secs),
+        512 => run_serve::<512>(&addr, scfg, spin, for_secs),
+        other => fail(format!("unsupported --payload {other} (8|64|512)")),
+    }
+}
+
+/// Serve `[u8; N] -> u64` (FNV-1a checksum after `spin` busy-work
+/// iterations) — the workload `netbench` and the net tests verify
+/// bit-identically against in-process offload.
+fn run_serve<const N: usize>(
+    addr: &str,
+    scfg: fastflow::net::ServerConfig,
+    spin: u64,
+    for_secs: u64,
+) -> Result<()> {
+    let window = scfg.window;
+    let server = fastflow::net::serve::<[u8; N], u64, _, _>(addr, scfg, move |_shard, _worker| {
+        move |b: [u8; N]| {
+            spin_work(spin);
+            fastflow::net::checksum(&b)
+        }
+    })?;
+    println!(
+        "ffserve: listening on {} (payload {N} B -> u64 checksum, spin {spin}, window {window})",
+        server.local_addr()
+    );
+    if for_secs == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(for_secs));
+    let report = server.shutdown();
+    let s = report.stats;
+    println!(
+        "ffserve: done — {} conns ({} rejected, {} stalled, {} disconnected), \
+         {} items admitted, {} shed in {} frames",
+        s.accepted,
+        s.rejected,
+        s.stalled,
+        s.disconnected,
+        s.admitted_items,
+        s.shed_items,
+        s.shed_frames
+    );
+    match report.error {
+        None => Ok(()),
+        Some(e) => fail(format!("pool terminated unhealthily: {e}")),
+    }
+}
+
+/// One netbench combination: `conns` clients, each offloading
+/// `tasks` patterned `[u8; N]` payloads at coalescing threshold
+/// `batch`, draining continuously, then `finish` + drain to Eos. The
+/// self-throttle means a cooperating client must see zero sheds.
+fn netbench_combo<const N: usize>(
+    addr: std::net::SocketAddr,
+    conns: usize,
+    batch: usize,
+    tasks: usize,
+) {
+    std::thread::scope(|s| {
+        for c in 0..conns {
+            s.spawn(move || {
+                let mut cl = fastflow::net::Client::<[u8; N], u64>::connect(addr)
+                    .expect("netbench connect");
+                cl.set_batch(batch).expect("set_batch");
+                let mut got = 0u64;
+                for i in 0..tasks {
+                    let mut item = [0u8; N];
+                    item[0] = i as u8;
+                    item[N - 1] = c as u8;
+                    cl.offload(item).expect("offload");
+                    while cl.load_result_nb().is_some() {
+                        got += 1;
+                    }
+                }
+                cl.finish().expect("finish");
+                while cl.load_result().expect("load_result").is_some() {
+                    got += 1;
+                }
+                assert_eq!(got, tasks as u64, "every task returns exactly one result");
+                assert_eq!(cl.shed_items(), 0, "self-throttled client never sheds");
+            });
+        }
+    });
+}
+
+/// Run the sweep for one payload size against `addr`, appending rows.
+fn netbench_payload<const N: usize>(
+    addr: std::net::SocketAddr,
+    table: &mut fastflow::metrics::Table,
+    quick: bool,
+) {
+    use fastflow::benchkit::{measure, BenchOpts};
+    let conns_sweep: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let batch_sweep: &[usize] = if quick { &[1, 64] } else { &[1, 32, 256] };
+    let tasks = if quick { 2000 } else { 10000 };
+    for &conns in conns_sweep {
+        for &batch in batch_sweep {
+            let (stats, _) = measure(BenchOpts::from_env(), || {
+                netbench_combo::<N>(addr, conns, batch, tasks)
+            });
+            let total = (conns * tasks) as f64;
+            // Round trip moves N payload bytes up + 8 result bytes down.
+            let mbytes = total * (N + 8) as f64 / 1e6;
+            table.row(vec![
+                N.to_string(),
+                conns.to_string(),
+                batch.to_string(),
+                tasks.to_string(),
+                format!("{:.2}", stats.mean * 1e3),
+                format!("{:.0}", stats.mean * 1e9 / total),
+                format!("{:.3}", total / stats.mean / 1e6),
+                format!("{:.1}", mbytes / stats.mean),
+            ]);
+        }
+    }
+}
+
+fn cmd_netbench(args: &Args) -> Result<()> {
+    use std::net::ToSocketAddrs;
+    let cfg = load_config(args)?;
+    let quick = cfg.get_bool("quick", false) || args.has_flag("quick");
+    let mut table = fastflow::metrics::Table::new(&[
+        "payload", "conns", "batch", "tasks/conn", "time ms", "ns/task", "Mtask/s", "MB/s",
+    ]);
+
+    if let Some(addr) = cfg.get("addr") {
+        // External mode: saturate an already-running `ffctl serve`.
+        let payload = cfg.get_usize("payload", 64);
+        let addr = addr
+            .to_socket_addrs()
+            .map_err(|e| format!("bad --addr '{addr}': {e}"))?
+            .next()
+            .ok_or_else(|| format!("--addr '{addr}' resolved to nothing"))?;
+        match payload {
+            8 => netbench_payload::<8>(addr, &mut table, quick),
+            64 => netbench_payload::<64>(addr, &mut table, quick),
+            512 => netbench_payload::<512>(addr, &mut table, quick),
+            other => return fail(format!("unsupported --payload {other} (8|64|512)")),
+        }
+    } else {
+        // Self-hosted loopback: one in-process server per payload size,
+        // bound to port 0 so parallel CI lanes never collide.
+        let scfg = server_config(&cfg)?;
+        let payloads: &[usize] = if quick { &[8, 512] } else { &PAYLOAD_SIZES };
+        for &p in payloads {
+            let server = match p {
+                8 => run_loopback_server::<8>(scfg.clone())?,
+                64 => run_loopback_server::<64>(scfg.clone())?,
+                512 => run_loopback_server::<512>(scfg.clone())?,
+                _ => unreachable!("PAYLOAD_SIZES is fixed"),
+            };
+            let addr = server.local_addr();
+            match p {
+                8 => netbench_payload::<8>(addr, &mut table, quick),
+                64 => netbench_payload::<64>(addr, &mut table, quick),
+                512 => netbench_payload::<512>(addr, &mut table, quick),
+                _ => unreachable!("PAYLOAD_SIZES is fixed"),
+            }
+            let report = server.shutdown();
+            if let Some(e) = report.error {
+                return fail(format!("loopback server unhealthy after sweep: {e}"));
+            }
+        }
+    }
+
+    let mut report = fastflow::benchkit::Report::new("net", table);
+    report.note(
+        "loopback saturation sweep: connections x coalescing batch x payload size; \
+         MB/s counts payload up + 8-byte result down; self-throttled clients, zero shed",
+    );
+    report.emit();
+    Ok(())
+}
+
+/// A self-hosted netbench server: checksum workload, no spin.
+fn run_loopback_server<const N: usize>(
+    scfg: fastflow::net::ServerConfig,
+) -> Result<fastflow::net::NetServer> {
+    let server =
+        fastflow::net::serve::<[u8; N], u64, _, _>("127.0.0.1:0", scfg, |_shard, _worker| {
+            |b: [u8; N]| fastflow::net::checksum(&b)
+        })?;
+    Ok(server)
 }
 
 fn cmd_info() -> Result<()> {

@@ -1,0 +1,298 @@
+//! The thin blocking client: [`Client`] speaks `ffnet/1` to a
+//! [`crate::net::server::NetServer`] and exposes the same
+//! `offload` / `offload_batch` / `load_result` surface as an
+//! in-process [`crate::accel::AccelHandle`] — swap the transport, keep
+//! the calling code.
+//!
+//! Differences from `AccelHandle`, all consequences of the wire:
+//!
+//! * `load_result` lives on the client (results come back down the
+//!   same socket), where in-process it lives on the pool.
+//! * [`Client::finish`] takes `&mut self`, not `self`: after sending
+//!   `Eos` the caller keeps draining results until `load_result`
+//!   returns `Ok(None)` (the server's answering `Eos`).
+//! * Every call can fail with [`AccelError::Io`] /
+//!   [`AccelError::Protocol`] / [`AccelError::Disconnected`].
+//!
+//! The client **self-throttles** to the server's advertised admission
+//! window: `flush` chunks runs to at most `window` items per frame and
+//! blocks pumping results once `in_flight + chunk` would overflow it —
+//! so a cooperating client is never shed. Buffers recycle on both
+//! directions (send-side `Vec<I>` stack, result-side `Vec<O>` stack),
+//! keeping the steady state allocation-free end to end.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::accel::AccelError;
+use crate::net::frame::{self, Frame, FrameDecoder, Kind, Wire, WELCOME_LEN};
+
+/// Map transport errors: orderly peer-gone kinds become
+/// [`AccelError::Disconnected`] (matching what an in-process caller
+/// sees when the accelerator dies), anything else keeps its kind.
+fn io_err(e: std::io::Error) -> AccelError {
+    use std::io::ErrorKind as K;
+    match e.kind() {
+        K::BrokenPipe | K::ConnectionReset | K::ConnectionAborted | K::UnexpectedEof => {
+            AccelError::Disconnected
+        }
+        kind => AccelError::Io(kind),
+    }
+}
+
+/// Blocking `ffnet/1` client (module docs).
+#[derive(Debug)]
+pub struct Client<I: Wire, O: Wire> {
+    stream: TcpStream,
+    dec: FrameDecoder,
+    /// Server's admission window (items), learned in the welcome.
+    window: u32,
+    seq: u32,
+    /// Auto-coalescing threshold, as on `AccelHandle` (1 = send each
+    /// task as its own frame).
+    batch: usize,
+    buf: Vec<I>,
+    spare: Vec<Vec<I>>,
+    ospare: Vec<Vec<O>>,
+    pending: VecDeque<O>,
+    wbuf: Vec<u8>,
+    rbuf: Vec<u8>,
+    /// Items sent (admitted or not — sheds are subtracted via `shed`).
+    sent: u64,
+    received: u64,
+    shed: u64,
+    shed_frames: u64,
+    finished: bool,
+    eos_seen: bool,
+}
+
+impl<I: Wire, O: Wire> Client<I, O> {
+    /// Connect and handshake. The hello pins the task/result encodings
+    /// (`I::SIZE`/`O::SIZE`); a server running a different workload
+    /// rejects by hanging up, surfacing [`AccelError::Disconnected`].
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self, AccelError> {
+        let mut stream = TcpStream::connect(addr).map_err(io_err)?;
+        stream.set_nodelay(true).map_err(io_err)?;
+        stream
+            .write_all(&frame::encode_hello(I::SIZE as u16, O::SIZE as u16))
+            .map_err(io_err)?;
+        let mut welcome = [0u8; WELCOME_LEN];
+        stream.read_exact(&mut welcome).map_err(io_err)?;
+        let (window, max_frame) = frame::decode_welcome(&welcome).map_err(AccelError::Protocol)?;
+        Ok(Client {
+            stream,
+            dec: FrameDecoder::new(max_frame),
+            window: window.max(1),
+            seq: 0,
+            batch: 1,
+            buf: Vec::new(),
+            spare: Vec::new(),
+            ospare: Vec::new(),
+            pending: VecDeque::new(),
+            wbuf: Vec::new(),
+            rbuf: vec![0u8; 16 * 1024],
+            sent: 0,
+            received: 0,
+            shed: 0,
+            shed_frames: 0,
+            finished: false,
+            eos_seen: false,
+        })
+    }
+
+    /// The server's advertised per-connection in-flight window.
+    pub fn window(&self) -> u32 {
+        self.window
+    }
+
+    /// Items currently in flight (sent − delivered − shed).
+    pub fn in_flight(&self) -> u64 {
+        self.sent - (self.received + self.pending.len() as u64) - self.shed
+    }
+
+    /// Items the server shed (admission control). Zero for clients that
+    /// only offload through this type — the self-throttle keeps the
+    /// window; nonzero only after out-of-band traffic on the same conn.
+    pub fn shed_items(&self) -> u64 {
+        self.shed
+    }
+
+    /// Shed frames observed.
+    pub fn shed_frames(&self) -> u64 {
+        self.shed_frames
+    }
+
+    /// Tasks offloaded so far (mirrors `AccelHandle::offloaded`).
+    pub fn offloaded(&self) -> u64 {
+        self.sent + self.buf.len() as u64
+    }
+
+    /// Set the auto-coalescing threshold (tasks per frame), as on
+    /// [`crate::accel::AccelHandle::set_batch`].
+    pub fn set_batch(&mut self, batch: usize) -> Result<(), AccelError> {
+        let want = batch.max(1);
+        if want < self.batch && self.buf.len() >= want {
+            self.flush()?;
+        }
+        self.batch = want;
+        Ok(())
+    }
+
+    /// Current coalescing threshold.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Take an empty recycled task buffer (pair with
+    /// [`Client::offload_batch`] for the allocation-free cycle).
+    #[must_use]
+    pub fn take_batch_buf(&mut self) -> Vec<I> {
+        self.spare.pop().unwrap_or_default()
+    }
+
+    /// Offload one task; ships a frame when the coalescing threshold
+    /// fills. Blocks only when the admission window is full (pumping
+    /// results while it waits).
+    pub fn offload(&mut self, task: I) -> Result<(), AccelError> {
+        if self.finished {
+            return Err(AccelError::Closed);
+        }
+        self.buf.push(task);
+        if self.buf.len() >= self.batch {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Offload a pre-built batch. The frame ships immediately (after
+    /// any coalescing remainder) and `tasks`' buffer is recycled.
+    pub fn offload_batch(&mut self, tasks: Vec<I>) -> Result<(), AccelError> {
+        if self.finished {
+            return Err(AccelError::Closed);
+        }
+        if tasks.is_empty() {
+            self.spare.push(tasks);
+            return Ok(());
+        }
+        self.flush()?;
+        self.send_run(tasks)
+    }
+
+    /// Ship any coalesced tasks now.
+    pub fn flush(&mut self) -> Result<(), AccelError> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        let run = std::mem::replace(&mut self.buf, self.spare.pop().unwrap_or_default());
+        self.send_run(run)
+    }
+
+    /// Send `run` as one or more Batch frames of at most `window` items
+    /// each, pumping results whenever the next chunk would overflow the
+    /// admission window.
+    fn send_run(&mut self, run: Vec<I>) -> Result<(), AccelError> {
+        for at in (0..run.len()).step_by(self.window as usize) {
+            let chunk = &run[at..run.len().min(at + self.window as usize)];
+            while self.in_flight() + chunk.len() as u64 > self.window as u64 {
+                self.pump()?;
+            }
+            self.wbuf.clear();
+            frame::encode_items(Kind::Batch, self.seq, chunk, &mut self.wbuf);
+            self.stream.write_all(&self.wbuf).map_err(io_err)?;
+            self.seq = self.seq.wrapping_add(1);
+            self.sent += chunk.len() as u64;
+        }
+        let mut buf = run;
+        buf.clear();
+        self.spare.push(buf);
+        Ok(())
+    }
+
+    /// Send `Eos` (no more offloads). Unlike
+    /// [`crate::accel::AccelHandle::finish`] this does **not** consume
+    /// the client: keep calling [`Client::load_result`] until it
+    /// returns `Ok(None)` — the server answers `Eos` once the last
+    /// in-flight result is delivered.
+    pub fn finish(&mut self) -> Result<(), AccelError> {
+        if self.finished {
+            return Ok(());
+        }
+        self.flush()?;
+        self.finished = true;
+        self.stream
+            .write_all(&frame::encode_ctl(Kind::Eos, 0, 0))
+            .map_err(io_err)
+    }
+
+    /// Pop the next result, blocking on the socket when none is
+    /// buffered. `Ok(None)` only after [`Client::finish`]'s handshake
+    /// completes (server `Eos`).
+    pub fn load_result(&mut self) -> Result<Option<O>, AccelError> {
+        loop {
+            if let Some(v) = self.pending.pop_front() {
+                self.received += 1;
+                return Ok(Some(v));
+            }
+            if self.eos_seen {
+                return Ok(None);
+            }
+            self.pump()?;
+        }
+    }
+
+    /// Pop a buffered result without touching the socket.
+    #[must_use]
+    pub fn load_result_nb(&mut self) -> Option<O> {
+        let v = self.pending.pop_front();
+        if v.is_some() {
+            self.received += 1;
+        }
+        v
+    }
+
+    /// One blocking socket read + frame drain.
+    fn pump(&mut self) -> Result<(), AccelError> {
+        let n = self.stream.read(&mut self.rbuf).map_err(io_err)?;
+        if n == 0 {
+            // Peer hung up; only orderly after the Eos handshake.
+            return if self.eos_seen {
+                Ok(())
+            } else {
+                Err(AccelError::Disconnected)
+            };
+        }
+        self.dec.extend(&self.rbuf[..n]);
+        // Split borrows: the decoder and the recycle stack are distinct
+        // fields, but a `self.`-qualified closure would alias `self`.
+        let (dec, ospare) = (&mut self.dec, &mut self.ospare);
+        loop {
+            let next = dec
+                .next::<O, O>(|| ospare.pop().unwrap_or_default(), |v| v)
+                .map_err(AccelError::Protocol)?;
+            match next {
+                None => return Ok(()),
+                Some(Frame::Items {
+                    kind: Kind::Result,
+                    items,
+                    ..
+                }) => {
+                    let mut buf = items;
+                    self.pending.extend(buf.drain(..));
+                    ospare.push(buf);
+                }
+                Some(Frame::Shed { count, .. }) => {
+                    self.shed += count as u64;
+                    self.shed_frames += 1;
+                }
+                Some(Frame::Eos) => {
+                    self.eos_seen = true;
+                }
+                // Batch frames flow client→server only.
+                Some(Frame::Items { kind, .. }) => {
+                    return Err(AccelError::Protocol(frame::ProtocolError::Unexpected(kind as u8)));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,661 @@
+//! The `ffnet/1` **length-prefixed framed codec**: fixed-size items,
+//! little-endian, zero interpretation ambiguity, and a decoder that
+//! deserializes request batches **straight into recycled
+//! [`crate::alloc::BatchPool`]-style buffers** (the caller lends the
+//! destination `Vec` via a closure — typically
+//! [`crate::accel::AccelHandle::take_batch_buf`]), so the PR-4
+//! zero-alloc steady state survives the socket hop.
+//!
+//! ## Wire format
+//!
+//! Every connection starts with a handshake, then carries frames:
+//!
+//! ```text
+//! hello   (client→server, 12 B): magic "ffnet/1\n" | in_size u16 | out_size u16
+//! welcome (server→client, 16 B): magic "ffnet/1\n" | window u32  | max_frame u32
+//!
+//! frame header (16 B):  kind u8 | pad [3]B | seq u32 | count u32 | len u32
+//! frame payload (len B): count items of exactly `Wire::SIZE` bytes each
+//!
+//! kinds: 1=Batch (client→server request run)   payload = count items
+//!        2=Result (server→client results)      payload = count items
+//!        3=Eos (either direction, stream end)  len = 0
+//!        4=Shed (server→client, admission ctl) len = 0, seq echoes the
+//!          rejected Batch, count = items shed
+//! ```
+//!
+//! All integers are little-endian. `len` must equal `count * SIZE` for
+//! payload frames (and `0` for control frames) and may never exceed the
+//! negotiated `max_frame` — an oversized or inconsistent length prefix
+//! is rejected as a [`ProtocolError`] *before* any allocation, so a
+//! hostile peer cannot make the decoder reserve unbounded memory.
+
+/// Protocol magic, first bytes of both handshake messages.
+pub const MAGIC: [u8; 8] = *b"ffnet/1\n";
+
+/// Byte length of the client hello (magic + two item sizes).
+pub const HELLO_LEN: usize = 12;
+
+/// Byte length of the server welcome (magic + window + max frame).
+pub const WELCOME_LEN: usize = 16;
+
+/// Byte length of every frame header.
+pub const HEADER_LEN: usize = 16;
+
+/// Default cap on one frame's payload bytes (16 MiB) — the upper bound
+/// a decoder will buffer for a single frame.
+pub const DEFAULT_MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+/// Frame kind tags (see the module docs for the wire format).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Kind {
+    /// Client→server request run (payload = `count` items).
+    Batch = 1,
+    /// Server→client result run (payload = `count` items).
+    Result = 2,
+    /// End of stream in either direction (no payload).
+    Eos = 3,
+    /// Admission control: the server shed a whole request batch
+    /// (`seq` echoes the rejected batch, `count` = items shed).
+    Shed = 4,
+}
+
+impl Kind {
+    fn from_u8(b: u8) -> Result<Kind, ProtocolError> {
+        match b {
+            1 => Ok(Kind::Batch),
+            2 => Ok(Kind::Result),
+            3 => Ok(Kind::Eos),
+            4 => Ok(Kind::Shed),
+            other => Err(ProtocolError::BadKind(other)),
+        }
+    }
+}
+
+/// A wire-protocol violation. Every variant is a *rejection before
+/// harm*: malformed input surfaces as an `Err`, never as a panic or an
+/// unbounded allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ProtocolError {
+    /// Handshake did not start with [`MAGIC`].
+    BadMagic,
+    /// Unknown frame kind tag.
+    BadKind(u8),
+    /// A frame kind that is valid on the wire but not in this
+    /// direction/state (e.g. a server receiving `Result`).
+    Unexpected(u8),
+    /// Frame length prefix beyond the negotiated cap.
+    Oversize { len: u32, max: u32 },
+    /// Payload length inconsistent with `count * item_size` (payload
+    /// frames) or nonzero (control frames).
+    BadLength { kind: u8, count: u32, len: u32 },
+    /// Handshake item sizes differ from the serving workload's types.
+    ItemSize { got: (u16, u16), want: (u16, u16) },
+}
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtocolError::BadMagic => write!(f, "bad protocol magic (not ffnet/1)"),
+            ProtocolError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            ProtocolError::Unexpected(k) => write!(f, "frame kind {k} unexpected here"),
+            ProtocolError::Oversize { len, max } => {
+                write!(f, "frame length {len} exceeds max_frame {max}")
+            }
+            ProtocolError::BadLength { kind, count, len } => {
+                write!(f, "frame kind {kind}: length {len} inconsistent with count {count}")
+            }
+            ProtocolError::ItemSize { got, want } => write!(
+                f,
+                "item sizes {}/{} do not match the server's workload ({}/{})",
+                got.0, got.1, want.0, want.1
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+/// Fixed-size wire encoding for task/result item types.
+///
+/// Implementations must read/write exactly [`Wire::SIZE`] little-endian
+/// bytes; `get`'s slice is guaranteed to be exactly that long by the
+/// decoder. Provided for the unsigned/signed/float scalars and for
+/// `[u8; N]` payload blobs (the netbench payload sweep).
+pub trait Wire: Send + Sized + 'static {
+    /// Exact encoded size in bytes.
+    const SIZE: usize;
+    /// Write `self` into `out` (`out.len() == SIZE`).
+    fn put(&self, out: &mut [u8]);
+    /// Read one item from `src` (`src.len() == SIZE`).
+    fn get(src: &[u8]) -> Self;
+}
+
+macro_rules! wire_scalar {
+    ($($t:ty),*) => {$(
+        impl Wire for $t {
+            const SIZE: usize = std::mem::size_of::<$t>();
+            #[inline]
+            fn put(&self, out: &mut [u8]) {
+                out.copy_from_slice(&self.to_le_bytes());
+            }
+            #[inline]
+            fn get(src: &[u8]) -> Self {
+                <$t>::from_le_bytes(src.try_into().expect("decoder sized the slice"))
+            }
+        }
+    )*};
+}
+
+wire_scalar!(u32, u64, i32, i64, f32, f64);
+
+impl<const N: usize> Wire for [u8; N] {
+    const SIZE: usize = N;
+    #[inline]
+    fn put(&self, out: &mut [u8]) {
+        out.copy_from_slice(self);
+    }
+    #[inline]
+    fn get(src: &[u8]) -> Self {
+        src.try_into().expect("decoder sized the slice")
+    }
+}
+
+/// A decoded frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub kind: Kind,
+    pub seq: u32,
+    pub count: u32,
+    pub len: u32,
+}
+
+impl Header {
+    /// Serialize (see the module docs for the layout).
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut b = [0u8; HEADER_LEN];
+        b[0] = self.kind as u8;
+        b[4..8].copy_from_slice(&self.seq.to_le_bytes());
+        b[8..12].copy_from_slice(&self.count.to_le_bytes());
+        b[12..16].copy_from_slice(&self.len.to_le_bytes());
+        b
+    }
+
+    /// Parse a header from the first [`HEADER_LEN`] bytes of `b`.
+    pub fn decode(b: &[u8]) -> Result<Header, ProtocolError> {
+        let kind = Kind::from_u8(b[0])?;
+        Ok(Header {
+            kind,
+            seq: u32::from_le_bytes(b[4..8].try_into().expect("sized")),
+            count: u32::from_le_bytes(b[8..12].try_into().expect("sized")),
+            len: u32::from_le_bytes(b[12..16].try_into().expect("sized")),
+        })
+    }
+
+    /// Reject inconsistent or oversized length prefixes — checked
+    /// before any payload allocation.
+    fn validate(&self, item_size: usize, max_frame: u32) -> Result<(), ProtocolError> {
+        if self.len > max_frame {
+            return Err(ProtocolError::Oversize {
+                len: self.len,
+                max: max_frame,
+            });
+        }
+        let bad = ProtocolError::BadLength {
+            kind: self.kind as u8,
+            count: self.count,
+            len: self.len,
+        };
+        match self.kind {
+            Kind::Batch | Kind::Result => {
+                let expect = (self.count as u64) * (item_size as u64);
+                if expect != self.len as u64 {
+                    return Err(bad);
+                }
+            }
+            Kind::Eos | Kind::Shed => {
+                if self.len != 0 {
+                    return Err(bad);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Append one payload frame (header + encoded items) to `out`.
+///
+/// Panics if `items.len()` exceeds `u32::MAX` — frames that large are
+/// rejected by every decoder anyway (`max_frame`).
+pub fn encode_items<T: Wire>(kind: Kind, seq: u32, items: &[T], out: &mut Vec<u8>) {
+    let count = u32::try_from(items.len()).expect("frame item count fits u32");
+    let len = count * u32::try_from(T::SIZE).expect("item size fits u32");
+    let hdr = Header {
+        kind,
+        seq,
+        count,
+        len,
+    };
+    out.extend_from_slice(&hdr.encode());
+    let base = out.len();
+    out.resize(base + len as usize, 0);
+    for (i, item) in items.iter().enumerate() {
+        item.put(&mut out[base + i * T::SIZE..base + (i + 1) * T::SIZE]);
+    }
+}
+
+/// Encode a control frame (`Eos` / `Shed`) — header only.
+pub fn encode_ctl(kind: Kind, seq: u32, count: u32) -> [u8; HEADER_LEN] {
+    Header {
+        kind,
+        seq,
+        count,
+        len: 0,
+    }
+    .encode()
+}
+
+/// Encode the client hello (item sizes are the negotiated task/result
+/// encodings; the server rejects mismatches with
+/// [`ProtocolError::ItemSize`]).
+pub fn encode_hello(in_size: u16, out_size: u16) -> [u8; HELLO_LEN] {
+    let mut b = [0u8; HELLO_LEN];
+    b[..8].copy_from_slice(&MAGIC);
+    b[8..10].copy_from_slice(&in_size.to_le_bytes());
+    b[10..12].copy_from_slice(&out_size.to_le_bytes());
+    b
+}
+
+/// Parse a client hello: `(in_size, out_size)`.
+pub fn decode_hello(b: &[u8; HELLO_LEN]) -> Result<(u16, u16), ProtocolError> {
+    if b[..8] != MAGIC {
+        return Err(ProtocolError::BadMagic);
+    }
+    Ok((
+        u16::from_le_bytes(b[8..10].try_into().expect("sized")),
+        u16::from_le_bytes(b[10..12].try_into().expect("sized")),
+    ))
+}
+
+/// Encode the server welcome advertising the admission window (max
+/// in-flight items per connection) and the frame size cap.
+pub fn encode_welcome(window: u32, max_frame: u32) -> [u8; WELCOME_LEN] {
+    let mut b = [0u8; WELCOME_LEN];
+    b[..8].copy_from_slice(&MAGIC);
+    b[8..12].copy_from_slice(&window.to_le_bytes());
+    b[12..16].copy_from_slice(&max_frame.to_le_bytes());
+    b
+}
+
+/// Parse a server welcome: `(window, max_frame)`.
+pub fn decode_welcome(b: &[u8; WELCOME_LEN]) -> Result<(u32, u32), ProtocolError> {
+    if b[..8] != MAGIC {
+        return Err(ProtocolError::BadMagic);
+    }
+    Ok((
+        u32::from_le_bytes(b[8..12].try_into().expect("sized")),
+        u32::from_le_bytes(b[12..16].try_into().expect("sized")),
+    ))
+}
+
+/// One decoded frame. Payload items are delivered in the caller-lent
+/// `Vec` (see [`FrameDecoder::next`]), mapped through the caller's
+/// tagging closure.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Frame<U> {
+    /// `Batch` or `Result` payload run.
+    Items { kind: Kind, seq: u32, items: Vec<U> },
+    /// Stream end.
+    Eos,
+    /// Admission-control shed notice.
+    Shed { seq: u32, count: u32 },
+}
+
+/// Incremental frame decoder: feed it raw socket bytes in **arbitrary**
+/// chunks ([`FrameDecoder::extend`]) and pop complete frames
+/// ([`FrameDecoder::next`]); partial frames simply wait for more bytes.
+///
+/// The decoder never allocates per frame: payload items are decoded
+/// into a `Vec` drawn from the caller's `take_buf` closure (a recycled
+/// batch buffer in the steady state) and the internal byte buffer is
+/// reused across frames, bounded by `max_frame` + one read chunk.
+#[derive(Debug)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (compacted lazily).
+    start: usize,
+    max_frame: u32,
+}
+
+/// Compact the accumulation buffer once the dead prefix crosses this
+/// many bytes (lazy: a memmove per ~64 KiB consumed, not per frame).
+const COMPACT_AT: usize = 64 * 1024;
+
+impl FrameDecoder {
+    pub fn new(max_frame: u32) -> Self {
+        FrameDecoder {
+            buf: Vec::new(),
+            start: 0,
+            max_frame,
+        }
+    }
+
+    /// Append raw bytes read from the socket.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes received but not yet consumed as a complete frame —
+    /// nonzero while a frame is partially buffered (the slowloris
+    /// observable: pending bytes that stop growing).
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Decode the next complete frame, or `Ok(None)` if more bytes are
+    /// needed. Payload items of type `T` are mapped through `map` into
+    /// a buffer drawn from `take_buf` (lend a recycled `Vec` to keep
+    /// the steady state allocation-free; `map` is where a server tags
+    /// items with their connection id).
+    ///
+    /// After an `Err` the decoder is poisoned in place (the byte stream
+    /// has no recovery point); callers drop the connection.
+    pub fn next<T: Wire, U>(
+        &mut self,
+        take_buf: impl FnOnce() -> Vec<U>,
+        mut map: impl FnMut(T) -> U,
+    ) -> Result<Option<Frame<U>>, ProtocolError> {
+        let avail = self.buf.len() - self.start;
+        if avail < HEADER_LEN {
+            return Ok(None);
+        }
+        let hdr = Header::decode(&self.buf[self.start..self.start + HEADER_LEN])?;
+        hdr.validate(T::SIZE, self.max_frame)?;
+        if avail < HEADER_LEN + hdr.len as usize {
+            return Ok(None);
+        }
+        let payload_at = self.start + HEADER_LEN;
+        let frame = match hdr.kind {
+            Kind::Eos => Frame::Eos,
+            Kind::Shed => Frame::Shed {
+                seq: hdr.seq,
+                count: hdr.count,
+            },
+            Kind::Batch | Kind::Result => {
+                let mut items = take_buf();
+                items.clear();
+                items.reserve(hdr.count as usize);
+                for i in 0..hdr.count as usize {
+                    let at = payload_at + i * T::SIZE;
+                    items.push(map(T::get(&self.buf[at..at + T::SIZE])));
+                }
+                Frame::Items {
+                    kind: hdr.kind,
+                    seq: hdr.seq,
+                    items,
+                }
+            }
+        };
+        self.start = payload_at + hdr.len as usize;
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start >= COMPACT_AT {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        Ok(Some(frame))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    fn identity_next(dec: &mut FrameDecoder) -> Result<Option<Frame<u64>>, ProtocolError> {
+        dec.next::<u64, u64>(Vec::new, |v| v)
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = Header {
+            kind: Kind::Batch,
+            seq: 7,
+            count: 3,
+            len: 24,
+        };
+        assert_eq!(Header::decode(&h.encode()).unwrap(), h);
+    }
+
+    #[test]
+    fn bad_kind_rejected() {
+        let mut b = Header {
+            kind: Kind::Eos,
+            seq: 0,
+            count: 0,
+            len: 0,
+        }
+        .encode();
+        b[0] = 99;
+        assert_eq!(Header::decode(&b), Err(ProtocolError::BadKind(99)));
+    }
+
+    #[test]
+    fn wire_scalars_roundtrip() {
+        let mut buf = [0u8; 8];
+        42u64.put(&mut buf);
+        assert_eq!(u64::get(&buf), 42);
+        let mut buf = [0u8; 8];
+        (-1.5f64).put(&mut buf);
+        assert_eq!(f64::get(&buf), -1.5);
+        let mut buf = [0u8; 4];
+        (-7i32).put(&mut buf);
+        assert_eq!(i32::get(&buf), -7);
+        let mut buf = [0u8; 3];
+        let blob: [u8; 3] = [1, 2, 3];
+        blob.put(&mut buf);
+        assert_eq!(<[u8; 3]>::get(&buf), blob);
+    }
+
+    #[test]
+    fn encode_decode_batch() {
+        let mut bytes = Vec::new();
+        encode_items(Kind::Batch, 5, &[10u64, 20, 30], &mut bytes);
+        let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        dec.extend(&bytes);
+        match identity_next(&mut dec).unwrap().unwrap() {
+            Frame::Items { kind, seq, items } => {
+                assert_eq!(kind, Kind::Batch);
+                assert_eq!(seq, 5);
+                assert_eq!(items, vec![10, 20, 30]);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        assert_eq!(dec.pending(), 0);
+        assert!(identity_next(&mut dec).unwrap().is_none());
+    }
+
+    #[test]
+    fn ctl_frames_roundtrip() {
+        let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        dec.extend(&encode_ctl(Kind::Shed, 9, 128));
+        dec.extend(&encode_ctl(Kind::Eos, 0, 0));
+        assert_eq!(
+            identity_next(&mut dec).unwrap(),
+            Some(Frame::Shed { seq: 9, count: 128 })
+        );
+        assert_eq!(identity_next(&mut dec).unwrap(), Some(Frame::Eos));
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_payload() {
+        // A hostile length prefix must be rejected from the header
+        // alone — no payload bytes present, no allocation attempted.
+        let hdr = Header {
+            kind: Kind::Batch,
+            seq: 0,
+            count: u32::MAX / 8,
+            len: u32::MAX - 7,
+        };
+        let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        dec.extend(&hdr.encode());
+        assert!(matches!(
+            identity_next(&mut dec),
+            Err(ProtocolError::Oversize { .. })
+        ));
+    }
+
+    #[test]
+    fn inconsistent_length_rejected() {
+        // count*SIZE != len.
+        let hdr = Header {
+            kind: Kind::Batch,
+            seq: 0,
+            count: 3,
+            len: 23,
+        };
+        let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        dec.extend(&hdr.encode());
+        assert!(matches!(
+            identity_next(&mut dec),
+            Err(ProtocolError::BadLength { .. })
+        ));
+        // Control frames must carry no payload.
+        let hdr = Header {
+            kind: Kind::Eos,
+            seq: 0,
+            count: 0,
+            len: 8,
+        };
+        let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        dec.extend(&hdr.encode());
+        assert!(matches!(
+            identity_next(&mut dec),
+            Err(ProtocolError::BadLength { .. })
+        ));
+    }
+
+    #[test]
+    fn truncated_payload_waits_not_panics() {
+        let mut bytes = Vec::new();
+        encode_items(Kind::Result, 1, &[1u64, 2, 3, 4], &mut bytes);
+        let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        dec.extend(&bytes[..bytes.len() - 5]);
+        assert!(identity_next(&mut dec).unwrap().is_none());
+        assert!(dec.pending() > 0);
+        dec.extend(&bytes[bytes.len() - 5..]);
+        assert!(matches!(
+            identity_next(&mut dec).unwrap(),
+            Some(Frame::Items { .. })
+        ));
+    }
+
+    #[test]
+    fn hello_welcome_roundtrip_and_bad_magic() {
+        assert_eq!(decode_hello(&encode_hello(8, 64)).unwrap(), (8, 64));
+        assert_eq!(
+            decode_welcome(&encode_welcome(1024, DEFAULT_MAX_FRAME)).unwrap(),
+            (1024, DEFAULT_MAX_FRAME)
+        );
+        let mut h = encode_hello(8, 8);
+        h[0] = b'X';
+        assert_eq!(decode_hello(&h), Err(ProtocolError::BadMagic));
+        let mut w = encode_welcome(1, 1);
+        w[7] = 0;
+        assert_eq!(decode_welcome(&w), Err(ProtocolError::BadMagic));
+    }
+
+    #[test]
+    fn decoder_reuses_lent_buffers() {
+        // take_buf's Vec comes back as Frame::Items, cleared and
+        // refilled — the recycling seam the server threads rely on.
+        let mut bytes = Vec::new();
+        encode_items(Kind::Batch, 0, &[7u64], &mut bytes);
+        let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        dec.extend(&bytes);
+        let lent = vec![99u64, 98, 97];
+        let cap = lent.capacity();
+        let ptr = lent.as_ptr();
+        match dec.next::<u64, u64>(|| lent, |v| v).unwrap().unwrap() {
+            Frame::Items { items, .. } => {
+                assert_eq!(items, vec![7]);
+                assert_eq!(items.capacity(), cap);
+                assert_eq!(items.as_ptr(), ptr, "same allocation reused");
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn byte_boundary_splits_are_identity() {
+        // The core codec property, deterministic corner: split the
+        // stream at EVERY byte boundary (the randomized sweep lives in
+        // tests/net_props.rs).
+        let mut bytes = Vec::new();
+        encode_items(Kind::Batch, 1, &[0xAAu64, 0xBB], &mut bytes);
+        bytes.extend_from_slice(&encode_ctl(Kind::Eos, 0, 0));
+        for split in 0..=bytes.len() {
+            let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME);
+            dec.extend(&bytes[..split]);
+            let mut got = Vec::new();
+            while let Some(f) = identity_next(&mut dec).unwrap() {
+                got.push(f);
+            }
+            dec.extend(&bytes[split..]);
+            while let Some(f) = identity_next(&mut dec).unwrap() {
+                got.push(f);
+            }
+            assert_eq!(got.len(), 2, "split at {split}");
+            assert!(matches!(&got[0], Frame::Items { items, .. } if items == &[0xAA, 0xBB]));
+            assert!(matches!(got[1], Frame::Eos));
+        }
+    }
+
+    #[test]
+    fn random_garbage_never_panics() {
+        let mut rng = XorShift64::new(0xFEED);
+        for _ in 0..200 {
+            let mut dec = FrameDecoder::new(4096);
+            let n = rng.range(1, 200) as usize;
+            let garbage: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            dec.extend(&garbage);
+            // Decode until it errors or wants more bytes; must not panic.
+            loop {
+                match identity_next(&mut dec) {
+                    Ok(Some(_)) => continue,
+                    Ok(None) | Err(_) => break,
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compaction_preserves_stream() {
+        // Push many frames through one decoder so `start` crosses the
+        // lazy-compaction threshold mid-stream.
+        let mut bytes = Vec::new();
+        let items: Vec<u64> = (0..512).collect();
+        for seq in 0..64 {
+            encode_items(Kind::Batch, seq, &items, &mut bytes);
+        }
+        let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        let mut seen = 0u32;
+        for chunk in bytes.chunks(4096) {
+            dec.extend(chunk);
+            while let Some(f) = identity_next(&mut dec).unwrap() {
+                match f {
+                    Frame::Items { seq, items: got, .. } => {
+                        assert_eq!(seq, seen);
+                        assert_eq!(got, items);
+                        seen += 1;
+                    }
+                    other => panic!("wrong frame {other:?}"),
+                }
+            }
+        }
+        assert_eq!(seen, 64);
+    }
+}

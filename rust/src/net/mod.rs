@@ -1,0 +1,77 @@
+//! `ffserve` — the accelerator as a **network service**.
+//!
+//! The paper's self-offloading accelerator is a library bound to one
+//! process; this module puts [`crate::accel::AccelPool`] behind a TCP
+//! wire protocol so the accelerator becomes a shared, rack-level
+//! resource (the FastFlow-in-datacenter direction): any number of
+//! remote clients offload over sockets and the pool serves them all.
+//!
+//! Three layers, mirroring the in-process stack:
+//!
+//! * [`frame`] — the `ffnet/1` length-prefixed framed codec. Fixed-size
+//!   little-endian items ([`Wire`]), incremental decoding at arbitrary
+//!   byte boundaries, strict validation (length prefixes checked
+//!   *before* allocation), and decode-into-recycled-buffers so the
+//!   zero-alloc steady state survives the socket hop.
+//! * [`server`] — [`NetServer`]: per-connection reader threads are
+//!   ordinary cloned [`crate::accel::AccelHandle`] clients of one
+//!   shared pool; admission control sheds load past a per-connection
+//!   window; writer threads stream tagged results back.
+//! * [`client`] — [`Client`]: the same `offload`/`offload_batch`/
+//!   `load_result` surface as `AccelHandle`, over a blocking socket,
+//!   self-throttled to the server's window.
+//!
+//! ```text
+//!          hello(sizes) ─────▶        ┌────────────────────────────┐
+//!  Client  ◀──── welcome(window,max)  │ NetServer                  │
+//!    │                                │  reader ─┐                 │
+//!    ├── Batch(seq,count,items) ────▶ │  (admit/ ├▶ AccelPool ─┐   │
+//!    │                                │   shed)  │  (shards)   │   │
+//!    ◀──────── Result(count,items) ── │  writer ◀┴─── drain ◀──┘   │
+//!    ◀──────── Shed(seq,count) ────── │                            │
+//!    ├── Eos ───────────────────────▶ │                            │
+//!    ◀──────── Eos (all drained) ──── └────────────────────────────┘
+//! ```
+//!
+//! End-to-end identity: a task offloaded through `Client` returns the
+//! **bit-identical** result the same worker closure produces in
+//! process — the wire adds transport, never semantics
+//! (`rust/tests/net_props.rs` proves it across batch sizes ×
+//! connections).
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::Client;
+pub use frame::{ProtocolError, Wire};
+pub use server::{NetServer, NetStats, ServerConfig, ServerReport, Tagged};
+
+/// Re-export under the server's own name: `serve` is to [`NetServer`]
+/// what [`crate::accel::AccelPool::run`] is to the pool.
+pub use server::serve;
+
+/// FNV-1a over a byte payload — the deterministic "work" `ffctl serve`
+/// / `netbench` and the net tests agree on, so bit-identity across the
+/// wire is checkable without shipping closures.
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_is_fnv1a() {
+        // Known FNV-1a vectors.
+        assert_eq!(checksum(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(checksum(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(checksum(b"ab"), checksum(b"ba"));
+    }
+}

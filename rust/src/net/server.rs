@@ -1,0 +1,739 @@
+//! `ffserve` — [`crate::accel::AccelPool`] behind a TCP wire protocol.
+//!
+//! Each accepted connection gets a **reader thread** that is an
+//! ordinary cloned [`AccelHandle`] client of the shared pool: it
+//! decodes `ffnet/1` batch frames straight into recycled batch buffers
+//! ([`crate::net::frame::FrameDecoder::next`] with
+//! [`AccelHandle::take_batch_buf`] as the lender), tags every task with
+//! its connection id, and offloads. A **writer thread** per connection
+//! drains that connection's tagged results (routed by the pool-wide
+//! drain thread) back down the socket, coalescing whatever is ready
+//! into one `Result` frame per wakeup. Results cross the pool in
+//! completion order and are returned to each client in that order —
+//! the same contract as in-process [`crate::accel::AccelPool`].
+//!
+//! ```text
+//!  conn₀ ─TCP─▶ reader₀ ─AccelHandle─┐                ┌─▶ writer₀ ─TCP─▶ conn₀
+//!  conn₁ ─TCP─▶ reader₁ ─AccelHandle─┼─▶ AccelPool ──▶│ drain (routes by
+//!      ⋮                             │   (shards)     │  Tagged::conn)
+//!  connₙ ─TCP─▶ readerₙ ─AccelHandle─┘                └─▶ writerₙ ─TCP─▶ connₙ
+//! ```
+//!
+//! ## Admission control
+//!
+//! Every connection carries a bounded in-flight window (handshake-
+//! advertised, [`ServerConfig::window`] items): the reader admits a
+//! batch only while `in_flight + batch ≤ window`, otherwise it **sheds
+//! the whole frame** — items are dropped before touching the pool and
+//! the client is told with a `Shed` frame echoing the batch's sequence
+//! number. A cooperating client ([`crate::net::Client`]) self-throttles
+//! below the window and never sheds; a firehosing one degrades itself,
+//! not its neighbours.
+//!
+//! ## Hostile-client containment (the PR 5 machinery)
+//!
+//! * **Mid-stream disconnect** — the reader observes EOF/reset, drops
+//!   its handle (closing its lane like any in-process client), and the
+//!   pool keeps serving everyone else. Should a lane nevertheless be
+//!   leaked, the drain's blocking [`AccelPool::load_result`] fires
+//!   `ForceClose` after [`crate::accel::PoolConfig::disconnect_grace`]
+//!   and [`AccelPool::wait_checked`] reports
+//!   [`AccelError::Disconnected`] — `shutdown` never wedges.
+//! * **Slowloris** — a connection holding a *partial frame* that makes
+//!   no byte progress for [`ServerConfig::stall_timeout`] is killed
+//!   (an idle connection with no pending bytes is never touched).
+//! * **Idle service** — the pool is forced to at least
+//!   [`WaitMode::Adaptive`], so a server with no traffic parks its
+//!   shard threads ([`crate::util::ParkGauge`] observable) instead of
+//!   spinning on its CPUs.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::accel::{AccelError, AccelHandle, AccelPool, PoolConfig};
+use crate::net::frame::{self, Frame, FrameDecoder, Kind, Wire, DEFAULT_MAX_FRAME, HELLO_LEN};
+use crate::node::node_fn;
+use crate::trace::TraceReport;
+use crate::util::{Backoff, WaitMode};
+
+/// A task or result labelled with the connection it belongs to — what
+/// actually flows through the pool, so the drain can route each result
+/// back to its socket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tagged<T> {
+    /// Server-assigned connection id.
+    pub conn: u32,
+    pub val: T,
+}
+
+/// Server tuning knobs. `Default` serves from a
+/// [`PoolConfig::default`] pool with a 1024-item window.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// The shared pool the connections offload into. `wait` is raised
+    /// to at least [`WaitMode::Adaptive`] at bind time: the shed-lane
+    /// recovery (`disconnect_grace`) needs a parking-capable drain, and
+    /// an idle *service* must release its CPUs.
+    pub pool: PoolConfig,
+    /// Per-connection in-flight item window (admission control);
+    /// advertised in the welcome. Also the largest admissible batch
+    /// frame — a single frame with more items than the window is always
+    /// shed, so clients chunk to `window`.
+    pub window: u32,
+    /// Frame payload cap enforced by the decoder (and advertised to
+    /// clients).
+    pub max_frame: u32,
+    /// Poll period of the (nonblocking) accept loop.
+    pub accept_tick: Duration,
+    /// Socket read timeout — the granularity at which readers notice
+    /// shutdown and stalls.
+    pub read_tick: Duration,
+    /// Kill a connection whose partially-received frame makes no byte
+    /// progress for this long (slowloris containment). Also the
+    /// handshake deadline.
+    pub stall_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            pool: PoolConfig::default(),
+            window: 1024,
+            max_frame: DEFAULT_MAX_FRAME,
+            accept_tick: Duration::from_millis(20),
+            read_tick: Duration::from_millis(50),
+            stall_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn pool(mut self, pool: PoolConfig) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    pub fn window(mut self, items: u32) -> Self {
+        self.window = items;
+        self
+    }
+
+    pub fn max_frame(mut self, bytes: u32) -> Self {
+        self.max_frame = bytes;
+        self
+    }
+
+    pub fn stall_timeout(mut self, d: Duration) -> Self {
+        self.stall_timeout = d;
+        self
+    }
+
+    pub fn read_tick(mut self, d: Duration) -> Self {
+        self.read_tick = d;
+        self
+    }
+}
+
+/// Lifetime counters, kept on relaxed atomics (observability only).
+#[derive(Debug, Default)]
+struct Counters {
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    stalled: AtomicU64,
+    disconnected: AtomicU64,
+    shed_frames: AtomicU64,
+    shed_items: AtomicU64,
+    admitted_items: AtomicU64,
+}
+
+/// Point-in-time snapshot of the server's connection/admission
+/// counters ([`NetServer::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[non_exhaustive]
+pub struct NetStats {
+    /// Connections accepted (post-handshake).
+    pub accepted: u64,
+    /// Connections dropped at handshake (bad magic, wrong item sizes,
+    /// handshake timeout).
+    pub rejected: u64,
+    /// Connections killed by the slowloris stall timeout.
+    pub stalled: u64,
+    /// Connections that vanished mid-stream (EOF/reset before `Eos`).
+    pub disconnected: u64,
+    /// Whole batch frames shed by admission control.
+    pub shed_frames: u64,
+    /// Items inside those shed frames.
+    pub shed_items: u64,
+    /// Items admitted into the pool.
+    pub admitted_items: u64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> NetStats {
+        NetStats {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            stalled: self.stalled.load(Ordering::Relaxed),
+            disconnected: self.disconnected.load(Ordering::Relaxed),
+            shed_frames: self.shed_frames.load(Ordering::Relaxed),
+            shed_items: self.shed_items.load(Ordering::Relaxed),
+            admitted_items: self.admitted_items.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// What [`NetServer::shutdown`] returns: the pool's trace, the pool's
+/// terminal health, and the connection counters.
+#[derive(Debug)]
+pub struct ServerReport {
+    /// Per-stage trace rows from [`AccelPool::wait_checked`].
+    pub trace: TraceReport,
+    /// `Some` if the pool terminated unhealthily (e.g.
+    /// [`AccelError::Disconnected`] after a force-closed leaked lane).
+    pub error: Option<AccelError>,
+    pub stats: NetStats,
+}
+
+/// Messages into a connection's writer thread. `Result` comes from the
+/// pool-wide drain; the rest from the connection's own reader.
+enum WriterMsg<O> {
+    Result(O),
+    Shed { seq: u32, count: u32 },
+    ClientEos,
+    ReaderGone,
+}
+
+/// What a reader sends the drain to register its connection's writer:
+/// the connection id and the writer's inbox.
+type WriterReg<O> = (u32, mpsc::Sender<WriterMsg<Tagged<O>>>);
+
+/// A running accelerator service (see the module docs). Obtained from
+/// [`serve`]; untyped — the workload generics live only in the threads.
+///
+/// Dropping a `NetServer` without calling [`NetServer::shutdown`]
+/// performs the same orderly teardown, discarding the report.
+#[derive(Debug)]
+pub struct NetServer {
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    /// One clone per live-or-dead connection, so shutdown can unblock
+    /// every reader with `Shutdown::Both`. Grows monotonically — a
+    /// long-lived server with millions of short connections would want
+    /// pruning; the entries are just fds + a sockaddr each.
+    socks: Arc<Mutex<Vec<TcpStream>>>,
+    accept_join: Option<thread::JoinHandle<()>>,
+    drain_join: Option<thread::JoinHandle<(TraceReport, Option<AccelError>)>>,
+    counters: Arc<Counters>,
+}
+
+impl NetServer {
+    /// The bound address — useful with port 0 (tests, loopback benches).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Snapshot the connection/admission counters.
+    pub fn stats(&self) -> NetStats {
+        self.counters.snapshot()
+    }
+
+    /// Orderly teardown: stop accepting, unblock and join every
+    /// connection, send the pool its EOS, and wait for it. Total time
+    /// is bounded by the socket ticks plus the pool's
+    /// `disconnect_grace` — a wedged client cannot wedge shutdown.
+    pub fn shutdown(mut self) -> ServerReport {
+        let (trace, error) = self.teardown().expect("first shutdown");
+        ServerReport {
+            trace,
+            error,
+            stats: self.counters.snapshot(),
+        }
+    }
+
+    fn teardown(&mut self) -> Option<(TraceReport, Option<AccelError>)> {
+        self.drain_join.as_ref()?;
+        self.shutdown.store(true, Ordering::SeqCst);
+        for s in self.socks.lock().expect("socks lock").iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+        let out = self
+            .drain_join
+            .take()
+            .expect("checked above")
+            .join()
+            .unwrap_or((TraceReport::default(), Some(AccelError::Disconnected)));
+        Some(out)
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        let _ = self.teardown();
+    }
+}
+
+/// Bind `addr` and serve the workload built by `factory` (one worker
+/// closure per pool `(shard, worker)` slot, exactly like
+/// [`AccelPool::run`]). Every worker must emit **exactly one result per
+/// task** — the per-connection in-flight accounting (and therefore
+/// admission control and `Eos` completion) depends on the 1:1 contract.
+///
+/// `I`/`O` are the wire task/result types; their encoded sizes are
+/// checked against each client's hello.
+pub fn serve<I, O, F, G>(
+    addr: impl ToSocketAddrs,
+    cfg: ServerConfig,
+    mut factory: F,
+) -> std::io::Result<NetServer>
+where
+    I: Wire,
+    O: Wire,
+    F: FnMut(usize, usize) -> G,
+    G: FnMut(I) -> O + Send + 'static,
+{
+    assert!(
+        I::SIZE <= u16::MAX as usize && O::SIZE <= u16::MAX as usize,
+        "ffnet/1 item encodings are u16-sized"
+    );
+    let mut pool_cfg = cfg.pool.clone();
+    // The service floor: disconnect_grace recovery needs a non-Spin
+    // drain, and an idle service must park, not spin.
+    pool_cfg.wait = pool_cfg.wait.max(WaitMode::Adaptive);
+    let (pool, root) = AccelPool::run(pool_cfg, move |s, w| {
+        let mut f = factory(s, w);
+        node_fn(move |t: Tagged<I>| Tagged {
+            conn: t.conn,
+            val: f(t.val),
+        })
+    });
+
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let local_addr = listener.local_addr()?;
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let socks: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+    let counters = Arc::new(Counters::default());
+    let (reg_tx, reg_rx) = mpsc::channel::<WriterReg<O>>();
+
+    let accept_join = {
+        let shutdown = Arc::clone(&shutdown);
+        let socks = Arc::clone(&socks);
+        let counters = Arc::clone(&counters);
+        let cfg = cfg.clone();
+        thread::Builder::new()
+            .name("ffnet-accept".into())
+            .spawn(move || {
+                accept_loop::<I, O>(listener, cfg, root, shutdown, socks, counters, reg_tx)
+            })
+            .expect("spawn accept thread")
+    };
+
+    let drain_join = {
+        let shutdown = Arc::clone(&shutdown);
+        thread::Builder::new()
+            .name("ffnet-drain".into())
+            .spawn(move || drain_loop(pool, reg_rx, shutdown))
+            .expect("spawn drain thread")
+    };
+
+    Ok(NetServer {
+        local_addr,
+        shutdown,
+        socks,
+        accept_join: Some(accept_join),
+        drain_join: Some(drain_join),
+        counters,
+    })
+}
+
+/// Accept loop: poll the nonblocking listener, spawn one reader per
+/// connection, and on shutdown join them all (readers join their
+/// writers), then drop the root handle so the pool's client count can
+/// reach zero.
+#[allow(clippy::too_many_arguments)]
+fn accept_loop<I: Wire, O: Wire>(
+    listener: TcpListener,
+    cfg: ServerConfig,
+    root: AccelHandle<Tagged<I>>,
+    shutdown: Arc<AtomicBool>,
+    socks: Arc<Mutex<Vec<TcpStream>>>,
+    counters: Arc<Counters>,
+    reg_tx: mpsc::Sender<WriterReg<O>>,
+) {
+    let mut readers = Vec::new();
+    let mut next_conn: u32 = 0;
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let conn = next_conn;
+                next_conn += 1;
+                if let Ok(clone) = stream.try_clone() {
+                    socks.lock().expect("socks lock").push(clone);
+                } else {
+                    continue;
+                }
+                let handle = root.clone();
+                let shutdown = Arc::clone(&shutdown);
+                let counters = Arc::clone(&counters);
+                let reg_tx = reg_tx.clone();
+                let cfg = cfg.clone();
+                let j = thread::Builder::new()
+                    .name(format!("ffnet-conn-{conn}"))
+                    .spawn(move || {
+                        reader_thread::<I, O>(stream, conn, cfg, handle, shutdown, counters, reg_tx)
+                    })
+                    .expect("spawn reader thread");
+                readers.push(j);
+            }
+            // WouldBlock (no pending connection) or a transient accept
+            // error — tick and re-check the shutdown flag.
+            Err(_) => thread::sleep(cfg.accept_tick),
+        }
+    }
+    for j in readers {
+        let _ = j.join();
+    }
+    drop(root);
+}
+
+/// Read exactly `buf.len()` handshake bytes, tolerating the read
+/// timeout, until `deadline` or shutdown. `Ok(true)` = filled.
+fn read_exact_by(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: Instant,
+    shutdown: &AtomicBool,
+) -> std::io::Result<bool> {
+    let mut at = 0;
+    while at < buf.len() {
+        if shutdown.load(Ordering::SeqCst) || Instant::now() >= deadline {
+            return Ok(false);
+        }
+        match stream.read(&mut buf[at..]) {
+            Ok(0) => return Ok(false),
+            Ok(n) => at += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Per-connection reader: handshake, then decode batch frames into
+/// recycled buffers and offload through this connection's own
+/// [`AccelHandle`] lane, shedding past the admission window.
+fn reader_thread<I: Wire, O: Wire>(
+    mut stream: TcpStream,
+    conn: u32,
+    cfg: ServerConfig,
+    mut handle: AccelHandle<Tagged<I>>,
+    shutdown: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+    reg_tx: mpsc::Sender<WriterReg<O>>,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(cfg.read_tick));
+
+    // Handshake: each reader does its own, so a client stalling its
+    // hello ties up only this thread, never the accept loop.
+    let mut hello = [0u8; HELLO_LEN];
+    let deadline = Instant::now() + cfg.stall_timeout;
+    match read_exact_by(&mut stream, &mut hello, deadline, &shutdown) {
+        Ok(true) => {}
+        _ => {
+            counters.rejected.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    }
+    let want = (I::SIZE as u16, O::SIZE as u16);
+    match frame::decode_hello(&hello) {
+        Ok(got) if got == want => {}
+        _ => {
+            counters.rejected.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    }
+    if stream
+        .write_all(&frame::encode_welcome(cfg.window, cfg.max_frame))
+        .is_err()
+    {
+        counters.rejected.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    counters.accepted.fetch_add(1, Ordering::Relaxed);
+
+    // Register with the drain BEFORE the first offload, so every result
+    // finds its writer. The writer gets its own socket clone.
+    let (wtx, wrx) = mpsc::channel::<WriterMsg<Tagged<O>>>();
+    let _ = reg_tx.send((conn, wtx.clone()));
+    let in_flight = Arc::new(AtomicU64::new(0));
+    let writer_join = match stream.try_clone() {
+        Ok(wstream) => {
+            let in_flight = Arc::clone(&in_flight);
+            thread::Builder::new()
+                .name(format!("ffnet-write-{conn}"))
+                .spawn(move || writer_thread::<O>(wstream, wrx, in_flight))
+                .expect("spawn writer thread")
+        }
+        Err(_) => {
+            counters.disconnected.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    };
+
+    let window = cfg.window as u64;
+    let mut dec = FrameDecoder::new(cfg.max_frame);
+    // Local recycle stack: shed frames give their buffers straight
+    // back; admitted ones come back through the handle's BatchPool lane
+    // (`take_batch_buf`). Steady state allocates nothing per frame.
+    let mut spare: Vec<Vec<Tagged<I>>> = Vec::new();
+    let mut rbuf = [0u8; 16 * 1024];
+    let mut last_progress = Instant::now();
+    let mut clean = false;
+
+    'conn: while !shutdown.load(Ordering::SeqCst) {
+        // Drain every complete frame before reading more bytes.
+        loop {
+            let next = dec.next::<I, Tagged<I>>(
+                || spare.pop().unwrap_or_else(|| handle.take_batch_buf()),
+                |val| Tagged { conn, val },
+            );
+            match next {
+                Ok(None) => break,
+                Ok(Some(Frame::Items {
+                    kind: Kind::Batch,
+                    seq,
+                    items,
+                })) => {
+                    let n = items.len() as u64;
+                    if in_flight.load(Ordering::Acquire) + n > window {
+                        counters.shed_frames.fetch_add(1, Ordering::Relaxed);
+                        counters.shed_items.fetch_add(n, Ordering::Relaxed);
+                        let mut buf = items;
+                        buf.clear();
+                        spare.push(buf);
+                        if wtx
+                            .send(WriterMsg::Shed {
+                                seq,
+                                count: n as u32,
+                            })
+                            .is_err()
+                        {
+                            break 'conn;
+                        }
+                    } else {
+                        in_flight.fetch_add(n, Ordering::AcqRel);
+                        counters.admitted_items.fetch_add(n, Ordering::Relaxed);
+                        if handle.offload_batch(items).is_err() {
+                            // Pool gone (poisoned); nothing to serve.
+                            break 'conn;
+                        }
+                    }
+                }
+                Ok(Some(Frame::Eos)) => {
+                    clean = true;
+                    let _ = wtx.send(WriterMsg::ClientEos);
+                    break 'conn;
+                }
+                // Result/Shed flow server→client only; treat them (and
+                // any codec error) as a protocol violation and hang up.
+                Ok(Some(Frame::Items { .. })) | Ok(Some(Frame::Shed { .. })) | Err(_) => {
+                    break 'conn;
+                }
+            }
+        }
+
+        match stream.read(&mut rbuf) {
+            Ok(0) => {
+                counters.disconnected.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            Ok(n) => {
+                dec.extend(&rbuf[..n]);
+                last_progress = Instant::now();
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Slowloris: a *partial frame* making no progress. An
+                // idle connection (no pending bytes) is left alone.
+                if dec.pending() > 0 && last_progress.elapsed() >= cfg.stall_timeout {
+                    counters.stalled.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+            }
+            Err(_) => {
+                counters.disconnected.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+    }
+
+    if !clean {
+        let _ = wtx.send(WriterMsg::ReaderGone);
+    }
+    // Drop our sender before joining: once the drain also lets go of
+    // its clone, the writer's `recv` errors out — so even a writer
+    // waiting on results that will never come (poisoned pool) unblocks
+    // and this join stays bounded.
+    drop(wtx);
+    // Close this connection's lane; already-offloaded tasks still
+    // complete (their results route to the writer, or are discarded by
+    // the drain once the writer is gone).
+    drop(handle);
+    // Join BEFORE shutting the socket: writer and reader share the
+    // underlying socket (`try_clone`), so an early shutdown would cut
+    // off the writer's final Shed/Eos frames mid-handshake.
+    let _ = writer_join.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Per-connection writer: coalesce whatever results are ready into one
+/// `Result` frame per wakeup, answer sheds, and close the stream with a
+/// wire `Eos` once the client's `Eos` arrived and the last in-flight
+/// result went out.
+fn writer_thread<O: Wire>(
+    mut stream: TcpStream,
+    wrx: mpsc::Receiver<WriterMsg<Tagged<O>>>,
+    in_flight: Arc<AtomicU64>,
+) {
+    let mut eos = false;
+    let mut results: Vec<O> = Vec::new();
+    let mut sheds: Vec<(u32, u32)> = Vec::new();
+    let mut gone = false;
+    let mut scratch: Vec<u8> = Vec::new();
+    'outer: loop {
+        match wrx.recv() {
+            Ok(m) => sort_msg(m, &mut results, &mut sheds, &mut eos, &mut gone),
+            Err(_) => break, // all senders gone (teardown)
+        }
+        // Greedily coalesce everything already queued.
+        while let Ok(m) = wrx.try_recv() {
+            sort_msg(m, &mut results, &mut sheds, &mut eos, &mut gone);
+        }
+        if gone {
+            break;
+        }
+        if !results.is_empty() {
+            scratch.clear();
+            frame::encode_items(Kind::Result, 0, &results, &mut scratch);
+            if stream.write_all(&scratch).is_err() {
+                break;
+            }
+            in_flight.fetch_sub(results.len() as u64, Ordering::AcqRel);
+            results.clear();
+        }
+        for (seq, count) in sheds.drain(..) {
+            if stream
+                .write_all(&frame::encode_ctl(Kind::Shed, seq, count))
+                .is_err()
+            {
+                break 'outer;
+            }
+        }
+        if eos && in_flight.load(Ordering::Acquire) == 0 {
+            let _ = stream.write_all(&frame::encode_ctl(Kind::Eos, 0, 0));
+            break;
+        }
+    }
+}
+
+fn sort_msg<T>(
+    m: WriterMsg<Tagged<T>>,
+    results: &mut Vec<T>,
+    sheds: &mut Vec<(u32, u32)>,
+    eos: &mut bool,
+    gone: &mut bool,
+) {
+    match m {
+        WriterMsg::Result(t) => results.push(t.val),
+        WriterMsg::Shed { seq, count } => sheds.push((seq, count)),
+        WriterMsg::ClientEos => *eos = true,
+        WriterMsg::ReaderGone => *gone = true,
+    }
+}
+
+/// Pool-wide drain: route every tagged result to its connection's
+/// writer. Polls nonblockingly while the server runs (it must watch the
+/// shutdown flag — the pool's own threads still park per their
+/// `WaitMode`); after shutdown it switches to the blocking
+/// [`AccelPool::load_result`], whose `disconnect_grace` machinery
+/// guarantees termination even if a lane leaked.
+fn drain_loop<I: Send + 'static, O: Send + 'static>(
+    mut pool: AccelPool<Tagged<I>, Tagged<O>>,
+    reg_rx: mpsc::Receiver<WriterReg<O>>,
+    shutdown: Arc<AtomicBool>,
+) -> (TraceReport, Option<AccelError>) {
+    let mut writers: HashMap<u32, mpsc::Sender<WriterMsg<Tagged<O>>>> = HashMap::new();
+    let mut backoff = Backoff::new();
+    let mut eos_sent = false;
+    loop {
+        while let Ok((id, tx)) = reg_rx.try_recv() {
+            writers.insert(id, tx);
+        }
+        if !eos_sent && shutdown.load(Ordering::SeqCst) {
+            pool.offload_eos();
+            eos_sent = true;
+        }
+        if eos_sent {
+            match pool.load_result() {
+                Some(t) => route(&mut writers, &reg_rx, t),
+                None => break,
+            }
+        } else {
+            match pool.load_result_nb() {
+                Some(t) => {
+                    backoff.reset();
+                    route(&mut writers, &reg_rx, t);
+                }
+                None => {
+                    // Escalate spin → yield → sleep: results gone
+                    // quiet, but keep shutdown latency ≪ read_tick.
+                    if backoff.should_park(WaitMode::Adaptive, Duration::ZERO) {
+                        thread::sleep(Duration::from_micros(500));
+                    } else {
+                        backoff.snooze();
+                    }
+                }
+            }
+        }
+    }
+    match pool.wait_checked() {
+        Ok(trace) => (trace, None),
+        Err(e) => (TraceReport::default(), Some(e)),
+    }
+}
+
+fn route<O>(
+    writers: &mut HashMap<u32, mpsc::Sender<WriterMsg<Tagged<O>>>>,
+    reg_rx: &mpsc::Receiver<WriterReg<O>>,
+    t: Tagged<O>,
+) {
+    // Registrations are sent before a connection's first offload, so a
+    // miss here only means the reg is still queued.
+    if !writers.contains_key(&t.conn) {
+        while let Ok((id, tx)) = reg_rx.try_recv() {
+            writers.insert(id, tx);
+        }
+    }
+    let conn = t.conn;
+    if let Some(tx) = writers.get(&conn) {
+        // A dead writer (connection torn down) just discards results.
+        if tx.send(WriterMsg::Result(t)).is_err() {
+            writers.remove(&conn);
+        }
+    }
+}

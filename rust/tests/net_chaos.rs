@@ -1,0 +1,203 @@
+//! Chaos suite for the network service: hostile clients must degrade
+//! only themselves. Rides the PR 5 `ForceClose`/`disconnect_grace`
+//! machinery — whatever a client does, [`fastflow::net::NetServer`]'s
+//! shutdown (and the pool's `wait` under it) terminates.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use fastflow::accel::{AccelError, PoolConfig};
+use fastflow::net::frame::{self, Kind, HEADER_LEN, WELCOME_LEN};
+use fastflow::net::{serve, Client, NetServer, ServerConfig};
+
+fn work(x: u64) -> u64 {
+    x.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ x
+}
+
+/// A loopback server with test-friendly timeouts: fast stall detection,
+/// fast leaked-lane recovery.
+fn test_server(window: u32) -> NetServer {
+    let scfg = ServerConfig::default()
+        .pool(
+            PoolConfig::default()
+                .shards(2)
+                .workers_per_shard(2)
+                .disconnect_grace(Duration::from_millis(250)),
+        )
+        .window(window)
+        .read_tick(Duration::from_millis(25))
+        .stall_timeout(Duration::from_millis(200));
+    serve::<u64, u64, _, _>("127.0.0.1:0", scfg, |_, _| work).expect("bind test server")
+}
+
+/// Raw-socket handshake: returns the connected stream post-welcome.
+fn raw_handshake(addr: std::net::SocketAddr) -> TcpStream {
+    let mut s = TcpStream::connect(addr).expect("raw connect");
+    s.write_all(&frame::encode_hello(8, 8)).expect("hello");
+    let mut welcome = [0u8; WELCOME_LEN];
+    s.read_exact(&mut welcome).expect("welcome");
+    frame::decode_welcome(&welcome).expect("valid welcome");
+    s
+}
+
+/// Mid-stream disconnect: a client that offloads and vanishes (no Eos)
+/// must not wedge anything — a healthy client on the same server keeps
+/// working, and shutdown completes cleanly.
+#[test]
+fn mid_stream_disconnect_is_contained() {
+    let server = test_server(1024);
+    let addr = server.local_addr();
+
+    {
+        let mut cl = Client::<u64, u64>::connect(addr).expect("connect");
+        for x in 0..100u64 {
+            cl.offload(x).expect("offload");
+        }
+        // Drop without finish: socket closes mid-stream, results for the
+        // 100 in-flight tasks are discarded server-side.
+    }
+
+    // A second, well-behaved client must be completely unaffected.
+    let mut cl = Client::<u64, u64>::connect(addr).expect("connect 2");
+    for x in 0..500u64 {
+        cl.offload(x).expect("offload");
+    }
+    cl.finish().expect("finish");
+    let mut got = Vec::new();
+    while let Some(v) = cl.load_result().expect("load_result") {
+        got.push(v);
+    }
+    let mut want: Vec<u64> = (0..500u64).map(work).collect();
+    got.sort_unstable();
+    want.sort_unstable();
+    assert_eq!(got, want);
+
+    let t0 = Instant::now();
+    let report = server.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "shutdown must stay bounded after a disconnect"
+    );
+    assert!(report.error.is_none(), "reader closed its lane: {:?}", report.error);
+    assert!(report.stats.disconnected >= 1, "stats: {:?}", report.stats);
+    assert_eq!(report.stats.stalled, 0, "stats: {:?}", report.stats);
+}
+
+/// Slowloris: a connection that sends part of a frame header and then
+/// stalls must be killed after `stall_timeout`, while a concurrent
+/// healthy client is unaffected. An *idle* connection (no partial
+/// frame) must NOT be killed.
+#[test]
+fn slowloris_is_killed_idle_is_not() {
+    let server = test_server(1024);
+    let addr = server.local_addr();
+
+    // The slowloris: real handshake, half a header, then silence.
+    let mut slow = raw_handshake(addr);
+    let hdr = frame::encode_ctl(Kind::Eos, 0, 0);
+    slow.write_all(&hdr[..HEADER_LEN / 2]).expect("partial header");
+
+    // The idler: handshake, then nothing at all — no pending bytes.
+    let idle = raw_handshake(addr);
+
+    // Meanwhile a healthy client round-trips continuously.
+    let mut cl = Client::<u64, u64>::connect(addr).expect("healthy connect");
+    for x in 0..200u64 {
+        cl.offload(x).expect("offload");
+    }
+    cl.finish().expect("finish");
+    let mut n = 0;
+    while cl.load_result().expect("healthy client unaffected").is_some() {
+        n += 1;
+    }
+    assert_eq!(n, 200);
+
+    // Give the stall detector time to fire (stall_timeout 200ms).
+    std::thread::sleep(Duration::from_millis(600));
+
+    // The slowloris socket is dead: writes eventually fail or the read
+    // side returns EOF.
+    let mut probe = [0u8; 1];
+    let _ = slow.set_read_timeout(Some(Duration::from_millis(500)));
+    match slow.read(&mut probe) {
+        Ok(0) => {}
+        Ok(_) => panic!("server sent data to a slowloris"),
+        Err(e) => panic!("expected EOF from killed connection, got {e}"),
+    }
+
+    let report = server.shutdown();
+    assert_eq!(report.stats.stalled, 1, "exactly the slowloris: {:?}", report.stats);
+    assert!(report.error.is_none(), "pool healthy: {:?}", report.error);
+    drop(idle);
+}
+
+/// Admission control: a raw client firing a batch larger than the
+/// window gets the whole frame shed (echoing its seq), and its Eos
+/// still completes the stream — items never reach the pool.
+#[test]
+fn oversized_batch_is_shed() {
+    let server = test_server(8);
+    let addr = server.local_addr();
+    let mut s = raw_handshake(addr);
+
+    let items: Vec<u64> = (0..100).collect();
+    let mut bytes = Vec::new();
+    frame::encode_items(Kind::Batch, 7, &items, &mut bytes);
+    s.write_all(&bytes).expect("oversized batch");
+    s.write_all(&frame::encode_ctl(Kind::Eos, 0, 0)).expect("eos");
+
+    // Expect exactly: Shed{seq: 7, count: 100}, then Eos.
+    let mut dec = frame::FrameDecoder::new(frame::DEFAULT_MAX_FRAME);
+    let mut frames = Vec::new();
+    let mut buf = [0u8; 1024];
+    while frames.len() < 2 {
+        let n = s.read(&mut buf).expect("read response");
+        assert!(n > 0, "server hung up before completing the shed handshake");
+        dec.extend(&buf[..n]);
+        while let Some(f) = dec.next::<u64, u64>(Vec::new, |v| v).expect("valid frames") {
+            frames.push(f);
+        }
+    }
+    assert_eq!(
+        frames[0],
+        frame::Frame::Shed { seq: 7, count: 100 },
+        "whole frame shed with its seq echoed"
+    );
+    assert_eq!(frames[1], frame::Frame::Eos);
+
+    let report = server.shutdown();
+    assert_eq!(report.stats.shed_frames, 1, "stats: {:?}", report.stats);
+    assert_eq!(report.stats.shed_items, 100, "stats: {:?}", report.stats);
+    assert_eq!(report.stats.admitted_items, 0, "stats: {:?}", report.stats);
+}
+
+/// Server death surfaces as [`AccelError::Disconnected`] on the client
+/// — a blocked `load_result` returns an error, it does not hang.
+#[test]
+fn server_shutdown_surfaces_disconnected() {
+    let server = test_server(1024);
+    let addr = server.local_addr();
+
+    let cl_join = std::thread::spawn(move || {
+        let mut cl = Client::<u64, u64>::connect(addr).expect("connect");
+        cl.offload(1).expect("offload");
+        // Drain the one result, then block waiting for more (no finish):
+        // the next pump must observe the server-side hangup.
+        loop {
+            match cl.load_result() {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("no Eos was sent by this client"),
+                Err(e) => return e,
+            }
+        }
+    });
+
+    // Let the client get in and block, then tear the server down.
+    std::thread::sleep(Duration::from_millis(300));
+    let report = server.shutdown();
+    assert!(report.error.is_none(), "orderly pool exit: {:?}", report.error);
+
+    let err = cl_join.join().expect("client thread");
+    assert_eq!(err, AccelError::Disconnected);
+}

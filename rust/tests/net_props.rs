@@ -1,0 +1,241 @@
+//! Property suite for the `ffnet/1` subsystem.
+//!
+//! Two layers:
+//!
+//! 1. **Codec identity** — encode a random multi-frame stream, split it
+//!    at arbitrary (seeded-random) byte boundaries, decode, and require
+//!    the original frame sequence back; plus malformed-input rejection
+//!    (corrupted headers, random garbage) without panics.
+//! 2. **End-to-end bit-identity** (ISSUE 8 acceptance) — the same
+//!    inputs offloaded through a loopback [`fastflow::net::NetServer`]
+//!    and through an in-process [`fastflow::accel::AccelPool`] must
+//!    produce identical result multisets, across batch sizes ×
+//!    connection counts. The wire adds transport, never semantics.
+
+use fastflow::accel::{AccelPool, PoolConfig};
+use fastflow::net::frame::{self, Frame, FrameDecoder, Kind, ProtocolError, DEFAULT_MAX_FRAME};
+use fastflow::net::{serve, Client, ServerConfig};
+use fastflow::node::node_fn;
+use fastflow::util::XorShift64;
+
+/// The deterministic workload both transports run.
+fn work(x: u64) -> u64 {
+    x.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ x
+}
+
+/// Reference stream element for the codec identity check.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Ref {
+    Items(Kind, u32, Vec<u64>),
+    Eos,
+    Shed(u32, u32),
+}
+
+fn random_stream(rng: &mut XorShift64) -> (Vec<u8>, Vec<Ref>) {
+    let mut bytes = Vec::new();
+    let mut expect = Vec::new();
+    for seq in 0..rng.range(1, 9) as u32 {
+        match rng.next_below(4) {
+            0 | 1 => {
+                let kind = if rng.next_below(2) == 0 {
+                    Kind::Batch
+                } else {
+                    Kind::Result
+                };
+                let n = rng.next_below(40) as usize;
+                let items: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+                frame::encode_items(kind, seq, &items, &mut bytes);
+                expect.push(Ref::Items(kind, seq, items));
+            }
+            2 => {
+                let count = rng.next_below(10_000) as u32;
+                bytes.extend_from_slice(&frame::encode_ctl(Kind::Shed, seq, count));
+                expect.push(Ref::Shed(seq, count));
+            }
+            _ => {
+                bytes.extend_from_slice(&frame::encode_ctl(Kind::Eos, 0, 0));
+                expect.push(Ref::Eos);
+            }
+        }
+    }
+    (bytes, expect)
+}
+
+fn decode_all(dec: &mut FrameDecoder, got: &mut Vec<Ref>) {
+    while let Some(f) = dec
+        .next::<u64, u64>(Vec::new, |v| v)
+        .expect("valid stream decodes")
+    {
+        got.push(match f {
+            Frame::Items { kind, seq, items } => Ref::Items(kind, seq, items),
+            Frame::Eos => Ref::Eos,
+            Frame::Shed { seq, count } => Ref::Shed(seq, count),
+        });
+    }
+}
+
+#[test]
+fn codec_roundtrip_at_arbitrary_byte_boundaries() {
+    let mut rng = XorShift64::new(0xC0DEC);
+    for _ in 0..60 {
+        let (bytes, expect) = random_stream(&mut rng);
+        let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        let mut got = Vec::new();
+        // Feed in random-size chunks, decoding eagerly after each.
+        let mut at = 0;
+        while at < bytes.len() {
+            let n = rng.range(1, 64).min((bytes.len() - at) as u64) as usize;
+            dec.extend(&bytes[at..at + n]);
+            at += n;
+            decode_all(&mut dec, &mut got);
+        }
+        assert_eq!(got, expect, "split sequence must not change the stream");
+        assert_eq!(dec.pending(), 0);
+    }
+}
+
+#[test]
+fn corrupted_headers_reject_without_panic() {
+    let mut rng = XorShift64::new(0xBAD_F00D);
+    for _ in 0..200 {
+        let (mut bytes, _) = random_stream(&mut rng);
+        if bytes.is_empty() {
+            continue;
+        }
+        // Flip a few random bytes — often a header (kind/len corruption),
+        // sometimes payload (which decodes to different-but-valid items).
+        for _ in 0..rng.range(1, 4) {
+            let at = rng.next_below(bytes.len() as u64) as usize;
+            bytes[at] ^= 1 << rng.next_below(8);
+        }
+        let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME);
+        dec.extend(&bytes);
+        // Must terminate with Ok(None) (exhausted/partial) or Err —
+        // never panic, never loop forever.
+        for _ in 0..1000 {
+            match dec.next::<u64, u64>(Vec::new, |v| v) {
+                Ok(Some(_)) => continue,
+                Ok(None) | Err(_) => break,
+            }
+        }
+    }
+}
+
+#[test]
+fn oversize_and_truncation_are_rejected_or_deferred() {
+    // Oversized length prefix: rejected from the header alone.
+    let hdr = frame::Header {
+        kind: Kind::Batch,
+        seq: 0,
+        count: 1 << 20,
+        len: 8 << 20,
+    };
+    let mut dec = FrameDecoder::new(1024);
+    dec.extend(&hdr.encode());
+    assert!(matches!(
+        dec.next::<u64, u64>(Vec::new, |v| v),
+        Err(ProtocolError::Oversize { .. })
+    ));
+
+    // Truncated payload: waits for bytes forever, never fabricates.
+    let mut bytes = Vec::new();
+    frame::encode_items(Kind::Batch, 0, &[1u64, 2, 3], &mut bytes);
+    let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME);
+    dec.extend(&bytes[..bytes.len() - 1]);
+    for _ in 0..3 {
+        assert!(matches!(dec.next::<u64, u64>(Vec::new, |v| v), Ok(None)));
+    }
+    assert!(dec.pending() > 0);
+}
+
+/// Offload each input set through its own in-process handle; return the
+/// pool's merged result multiset.
+fn run_in_process(inputs: &[Vec<u64>], batch: usize) -> Vec<u64> {
+    let cfg = PoolConfig::default()
+        .shards(2)
+        .workers_per_shard(2)
+        .batch(batch);
+    let (mut pool, root) = AccelPool::run(cfg, |_, _| node_fn(work));
+    for set in inputs {
+        let mut h = root.clone();
+        for &x in set {
+            h.offload(x).expect("in-process offload");
+        }
+        h.finish().expect("in-process finish");
+    }
+    drop(root);
+    pool.offload_eos();
+    let mut out = Vec::new();
+    while let Some(v) = pool.load_result() {
+        out.push(v);
+    }
+    pool.wait();
+    out
+}
+
+/// Offload each input set through its own [`Client`] connection into a
+/// loopback server; return per-connection result sets.
+fn run_over_wire(inputs: &[Vec<u64>], batch: usize) -> Vec<Vec<u64>> {
+    let scfg = ServerConfig::default().pool(PoolConfig::default().shards(2).workers_per_shard(2));
+    let server = serve::<u64, u64, _, _>("127.0.0.1:0", scfg, |_, _| work).expect("bind");
+    let addr = server.local_addr();
+    let per_conn: Vec<Vec<u64>> = std::thread::scope(|s| {
+        let joins: Vec<_> = inputs
+            .iter()
+            .map(|set| {
+                s.spawn(move || {
+                    let mut cl = Client::<u64, u64>::connect(addr).expect("connect");
+                    cl.set_batch(batch).expect("set_batch");
+                    let mut got = Vec::new();
+                    for &x in set {
+                        cl.offload(x).expect("offload");
+                        while let Some(v) = cl.load_result_nb() {
+                            got.push(v);
+                        }
+                    }
+                    cl.finish().expect("finish");
+                    while let Some(v) = cl.load_result().expect("load_result") {
+                        got.push(v);
+                    }
+                    assert_eq!(cl.shed_items(), 0, "self-throttled client never sheds");
+                    got
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().expect("client")).collect()
+    });
+    let report = server.shutdown();
+    assert!(report.error.is_none(), "pool healthy: {:?}", report.error);
+    per_conn
+}
+
+#[test]
+fn wire_results_bit_identical_to_in_process() {
+    let mut rng = XorShift64::new(0x1DE17);
+    for &batch in &[1usize, 7, 64] {
+        for &conns in &[1usize, 3] {
+            let inputs: Vec<Vec<u64>> = (0..conns)
+                .map(|_| (0..rng.range(200, 500)).map(|_| rng.next_u64()).collect())
+                .collect();
+
+            let per_conn = run_over_wire(&inputs, batch);
+
+            // Per connection: exactly its own tasks' results (the drain
+            // never cross-routes), as a multiset.
+            for (set, got) in inputs.iter().zip(&per_conn) {
+                let mut want: Vec<u64> = set.iter().map(|&x| work(x)).collect();
+                let mut got = got.clone();
+                want.sort_unstable();
+                got.sort_unstable();
+                assert_eq!(got, want, "batch {batch}: per-connection identity");
+            }
+
+            // Globally: bit-identical to the in-process pool's multiset.
+            let mut in_proc = run_in_process(&inputs, batch);
+            let mut wired: Vec<u64> = per_conn.into_iter().flatten().collect();
+            in_proc.sort_unstable();
+            wired.sort_unstable();
+            assert_eq!(wired, in_proc, "batch {batch} conns {conns}");
+        }
+    }
+}
