@@ -12,7 +12,7 @@ ARTIFACT_DIR ?= artifacts
 .PHONY: all build test test-fallback test-oversub bench bench-smoke bench-diff bench-baseline serve net-smoke doc artifacts fmt clippy lint loom miri tsan pytest clean
 
 # The quick-mode benches that feed the committed perf wall (bench/).
-BENCH_SMOKE_SET = accel_multiclient nested_topologies allocator queue_latency placement
+BENCH_SMOKE_SET = accel_multiclient nested_topologies allocator queue_latency placement steal
 
 all: build
 
@@ -30,10 +30,12 @@ test:
 test-fallback:
 	cd rust && $(CARGO) test -q --no-default-features --lib --test fallback_kernel
 
-# Over-subscription smoke lane: the Park-mode waiting suite with
-# workers ≫ cores (includes the #[ignore]d heavy case CI also runs).
+# Over-subscription smoke lane: the Park-mode waiting suite plus the
+# elastic-pool suite, both with workers ≫ cores (includes the
+# #[ignore]d heavy cases CI also runs).
 test-oversub:
 	cd rust && $(CARGO) test -q --test waiting -- --include-ignored
+	cd rust && $(CARGO) test -q --test elastic -- --include-ignored
 
 bench:
 	cd rust && $(CARGO) bench --bench fig4_mandelbrot -- --quick

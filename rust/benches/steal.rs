@@ -1,0 +1,172 @@
+//! Elastic-pool steal sweep: does work stealing heal skewed client
+//! load? (ISSUE 9 satellite.)
+//!
+//! The workload is the pathological shape for lane-sticky placement: a
+//! **Zipf** client mix — client `c` offloads a `1/(c+1)` share of the
+//! total task count, so client 0 (the head) carries roughly half the
+//! work — through an elastic pool with one worker per shard. Elastic
+//! admission is lane-sticky (lane `c` homes on shard `c % shards`), so
+//! with stealing **off** the head client's backlog serializes on its
+//! home shard while the tail shards go idle; with stealing **on** the
+//! idle shards pull whole frames from the overloaded sibling's backlog
+//! tail and the pool approaches the balanced wall clock.
+//!
+//! Sweep: shards ∈ {2, 4} × steal ∈ {off, on}, `clients == shards`,
+//! autoscale off (deterministic live set), Spin waits, window 2. The
+//! headline claim (enforced offline against `bench/BENCH_steal.json`):
+//! ≥ 1.5× pooled throughput with stealing on at 4 shards. Uniform-load
+//! benches (`accel_multiclient`, `placement`) are untouched by this
+//! machinery — legacy pools never defer frames.
+//!
+//! `cargo bench --bench steal [-- --quick]`
+//! `FF_BENCH_JSON=dir` emits `BENCH_steal.json`;
+//! `FF_BENCH_BASELINE=bench` diffs against the committed wall.
+
+use fastflow::accel::{AccelPool, ElasticConfig, PoolConfig};
+use fastflow::benchkit::{measure, BenchOpts, Report};
+use fastflow::farm::FarmConfig;
+use fastflow::metrics::Table;
+use fastflow::node::node_fn;
+use fastflow::util::XorShift64;
+
+/// Busy-work calibrated in iterations (~1ns each; matches granularity.rs).
+#[inline]
+fn spin_work(iters: u64) -> u64 {
+    let mut acc = 0u64;
+    for i in 0..iters {
+        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+    }
+    std::hint::black_box(acc)
+}
+
+/// Zipf(s=1) task shares: client `c` gets a `1/(c+1)` weight; the head
+/// client absorbs the rounding remainder.
+fn zipf_counts(total: u64, clients: usize) -> Vec<u64> {
+    let h: f64 = (1..=clients).map(|c| 1.0 / c as f64).sum();
+    let mut counts: Vec<u64> = (1..=clients)
+        .map(|c| (total as f64 / (h * c as f64)) as u64)
+        .collect();
+    let assigned: u64 = counts.iter().sum();
+    counts[0] += total - assigned;
+    counts
+}
+
+/// One full skewed pooled run; returns the frames stolen (from the
+/// pool's own elasticity counters).
+fn run_skewed(shards: usize, steal: bool, counts: &[u64], grain: u64) -> u64 {
+    let (mut pool, root) = AccelPool::run(
+        PoolConfig::default()
+            .shards(shards)
+            .farm(FarmConfig::default().workers(1))
+            .batch(1)
+            .elastic(
+                ElasticConfig::default()
+                    .steal(steal)
+                    .autoscale(false)
+                    .window(2),
+            ),
+        |_s, _w| node_fn(spin_work),
+    );
+    // Handles are created sequentially on this thread, so lane order —
+    // and therefore the lane-sticky homes (lane c → shard c % shards) —
+    // is deterministic: the Zipf head always lands on shard 0.
+    let mut handles = vec![root];
+    for _ in 1..counts.len() {
+        handles.push(handles[0].clone());
+    }
+    let joins: Vec<_> = handles
+        .into_iter()
+        .zip(counts.iter().copied())
+        .enumerate()
+        .map(|(c, (mut h, n))| {
+            std::thread::spawn(move || {
+                let mut rng = XorShift64::new(0x5eed_0001 + c as u64);
+                for _ in 0..n {
+                    // ±25% jitter keeps per-task cost irregular without
+                    // changing the total work per client.
+                    h.offload(grain * 3 / 4 + rng.next_u64() % (grain / 2 + 1))
+                        .unwrap();
+                }
+                h.finish().unwrap();
+            })
+        })
+        .collect();
+    pool.offload_eos();
+    let total: u64 = counts.iter().sum();
+    let mut got = 0u64;
+    while pool.load_result().is_some() {
+        got += 1;
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    assert_eq!(got, total, "lost or duplicated results");
+    let steals = pool.stats().steals;
+    pool.wait();
+    steals
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let total: u64 = if quick { 4_000 } else { 20_000 };
+    let grain: u64 = 2_000;
+    let shards_sweep: &[usize] = &[2, 4];
+
+    let mut table = Table::new(&[
+        "workload",
+        "shards",
+        "steal",
+        "clients",
+        "tasks",
+        "Mtask/s",
+        "speedup vs steal-off",
+    ]);
+    let mut notes = vec![];
+    for &shards in shards_sweep {
+        let clients = shards;
+        let counts = zipf_counts(total, clients);
+        let mut thr_off = 0.0f64;
+        for steal in [false, true] {
+            let (stats, _) = measure(opts, || {
+                run_skewed(shards, steal, &counts, grain);
+            });
+            let thr = total as f64 / stats.mean / 1e6;
+            // One extra instrumented run for the steal counter (outside
+            // `measure`, so the counter read never skews timing).
+            let stolen = run_skewed(shards, steal, &counts, grain);
+            let speedup = if steal {
+                thr / thr_off
+            } else {
+                thr_off = thr;
+                1.0
+            };
+            table.row(vec![
+                "zipf".into(),
+                shards.to_string(),
+                if steal { "on" } else { "off" }.into(),
+                clients.to_string(),
+                total.to_string(),
+                format!("{thr:.2}"),
+                format!("{speedup:.2}"),
+            ]);
+            notes.push(format!(
+                "shards={shards} steal={}: {stolen} frames stolen (instrumented run)",
+                if steal { "on" } else { "off" }
+            ));
+        }
+    }
+
+    let mut report = Report::new("steal", table);
+    for n in notes {
+        report.note(n);
+    }
+    report.note(format!(
+        "zipf head: client 0 offloads ~{}% of {} tasks onto its sticky home shard; \
+         steal-off serializes that share on one worker, steal-on spreads whole frames \
+         across idle shards (results stay a bit-identical multiset — tests/elastic.rs)",
+        (100.0 / (1..=4).map(|c| 1.0 / c as f64).sum::<f64>()).round(),
+        total
+    ));
+    report.emit();
+}

@@ -34,12 +34,23 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use super::job::{Job, JobBody, JobCtl, JobToken, Priority};
 use super::AccelError;
+use crate::alloc::{BatchPool, BatchReturner, DEFAULT_BATCH_CAP};
 use crate::channel::{stream_unbounded, Receiver, Sender};
 
 /// A freshly-registered client lane, travelling from the registry to
-/// the input arbiter.
-pub(crate) struct NewLane<T: Send + 'static>(pub(crate) Receiver<T>);
+/// the input arbiter: the receiving half of the lane (frames are
+/// [`Job`] envelopes — body + priority + optional cancel handle) plus
+/// the give side of the handle's batch-buffer free lane. The arbiter
+/// copies each `Many` body into shard-owned buffers and returns the
+/// client's `Vec` through `ret`, so every buffer cycles producer→arbiter
+/// →producer over SPSC paths and the handle's steady-state offload path
+/// allocates nothing.
+pub(crate) struct NewLane<T: Send + 'static> {
+    pub(crate) rx: Receiver<Job<T>>,
+    pub(crate) ret: BatchReturner<T>,
+}
 
 /// Shared registry of client lanes. Registration is the cold path: it
 /// takes a short mutex to serialize concurrent `clone()`s onto the
@@ -75,18 +86,21 @@ impl<T: Send + 'static> LaneRegistry<T> {
         )
     }
 
-    /// Open a fresh private lane and announce it to the arbiter. If the
-    /// arbiter is gone, the lane's receiving half is dropped and every
-    /// send on the returned sender reports disconnection.
-    pub(crate) fn open_lane(&self) -> Sender<T> {
-        let (lane_tx, lane_rx) = stream_unbounded::<T>();
+    /// Open a fresh private lane and announce it to the arbiter,
+    /// returning the sending half plus the take side of the lane's
+    /// batch-buffer free lane. If the arbiter is gone, the lane's
+    /// receiving half is dropped and every send on the returned sender
+    /// reports disconnection.
+    pub(crate) fn open_lane(&self) -> (Sender<Job<T>>, BatchPool<T>) {
+        let (lane_tx, lane_rx) = stream_unbounded::<Job<T>>();
+        let (batch_pool, ret) = BatchPool::with_cap(DEFAULT_BATCH_CAP);
         self.opened.fetch_add(1, Ordering::SeqCst);
         let _ = self
             .reg_tx
             .lock()
             .expect("lane registry lock")
-            .send(NewLane(lane_rx));
-        lane_tx
+            .send(NewLane { rx: lane_rx, ret });
+        (lane_tx, batch_pool)
     }
 
     pub(crate) fn note_finished(&self) {
@@ -119,14 +133,20 @@ impl<T: Send + 'static> LaneRegistry<T> {
 /// acc.load_result()  →  pool.load_result()
 /// ```
 pub struct AccelHandle<T: Send + 'static> {
-    lane: Sender<T>,
+    lane: Sender<Job<T>>,
     registry: Arc<LaneRegistry<T>>,
     /// Local coalescing buffer (flushed at `batch` items). Replenished
-    /// from the lane's batch free lane: the pool arbiter returns every
+    /// from the handle's batch free lane: the pool arbiter returns every
     /// unpacked frame, so a draining client re-uses the same few `Vec`s
     /// forever — the steady-state offload path allocates nothing.
     buf: Vec<T>,
     batch: usize,
+    /// Batch-buffer free lane (take side); the arbiter holds the give
+    /// side (it travelled in this lane's [`NewLane`]).
+    batch_pool: BatchPool<T>,
+    /// Priority class stamped on every subsequent frame
+    /// ([`AccelHandle::set_priority`]).
+    prio: Priority,
     /// Tasks offloaded through this handle (including still-buffered).
     pub offloaded: u64,
     closed: bool,
@@ -134,15 +154,30 @@ pub struct AccelHandle<T: Send + 'static> {
 
 impl<T: Send + 'static> AccelHandle<T> {
     pub(crate) fn new(registry: Arc<LaneRegistry<T>>, batch: usize) -> Self {
-        let lane = registry.open_lane();
+        let (lane, batch_pool) = registry.open_lane();
         AccelHandle {
             lane,
             registry,
             buf: Vec::new(),
             batch: batch.max(1),
+            batch_pool,
+            prio: Priority::default(),
             offloaded: 0,
             closed: false,
         }
+    }
+
+    /// Ship one frame down the lane, stamped with the handle's current
+    /// priority class.
+    #[inline]
+    fn send_job(&mut self, ctl: Option<Arc<JobCtl>>, body: JobBody<T>) -> Result<(), AccelError> {
+        self.lane
+            .send(Job {
+                prio: self.prio,
+                ctl,
+                body,
+            })
+            .map_err(|_| AccelError::Disconnected)
     }
 
     /// Auto-coalescing threshold: tasks per shipped batch frame. `1`
@@ -171,7 +206,7 @@ impl<T: Send + 'static> AccelHandle<T> {
             return Err(AccelError::Closed);
         }
         if self.batch <= 1 {
-            self.lane.send(task).map_err(|_| AccelError::Disconnected)?;
+            self.send_job(None, JobBody::One(task))?;
         } else {
             self.buf.push(task);
             if self.buf.len() >= self.batch {
@@ -182,12 +217,30 @@ impl<T: Send + 'static> AccelHandle<T> {
         Ok(())
     }
 
+    /// Offload one **tracked** task: like [`AccelHandle::offload`]
+    /// (minus coalescing — the frame ships immediately, after flushing
+    /// any buffered tasks so per-handle FIFO holds) but returns a
+    /// [`JobToken`] that can revoke the task as long as the pool has not
+    /// started it. A cancelled job contributes zero results — exactly as
+    /// if it was never offloaded. Costs one `Arc` allocation and one CAS
+    /// at dispatch; the untracked calls stay atomics-free.
+    pub fn offload_job(&mut self, task: T) -> Result<JobToken, AccelError> {
+        if self.closed {
+            return Err(AccelError::Closed);
+        }
+        self.flush()?;
+        let ctl = JobCtl::new();
+        self.send_job(Some(ctl.clone()), JobBody::One(task))?;
+        self.offloaded += 1;
+        Ok(JobToken::new(ctl))
+    }
+
     /// Draw a recycled batch buffer for [`AccelHandle::offload_batch`]
     /// (the pool arbiter returns every unpacked frame through this
-    /// lane's free lane).
+    /// handle's free lane).
     #[must_use = "the drawn buffer is the batch frame — fill and offload it"]
     pub fn take_batch_buf(&mut self) -> Vec<T> {
-        self.lane.take_buf()
+        self.batch_pool.take()
     }
 
     /// Offload a pre-built run of tasks as one frame (after flushing any
@@ -200,36 +253,91 @@ impl<T: Send + 'static> AccelHandle<T> {
         }
         self.flush()?;
         let n = tasks.len() as u64;
-        self.lane
-            .send_batch(tasks)
-            .map_err(|_| AccelError::Disconnected)?;
+        self.ship_run(None, tasks)?;
         self.offloaded += n;
         Ok(())
     }
 
+    /// Offload a pre-built run as one **tracked** frame: the whole batch
+    /// is one job — one [`JobToken`], cancelled (or started) atomically
+    /// as a unit, so a revoked run contributes none of its items.
+    pub fn offload_batch_job(&mut self, tasks: Vec<T>) -> Result<JobToken, AccelError> {
+        if self.closed {
+            return Err(AccelError::Closed);
+        }
+        self.flush()?;
+        let ctl = JobCtl::new();
+        if tasks.is_empty() {
+            // Nothing to revoke: settle the token as started (zero items
+            // "ran") rather than shipping an empty frame that could pin
+            // the token in `Queued` forever.
+            self.batch_pool.put_back(tasks);
+            let started = ctl.try_start();
+            debug_assert!(started);
+            return Ok(JobToken::new(ctl));
+        }
+        let n = tasks.len() as u64;
+        self.ship_run(Some(ctl.clone()), tasks)?;
+        self.offloaded += n;
+        Ok(JobToken::new(ctl))
+    }
+
+    /// Canonical run framing: empty runs send nothing, single-task runs
+    /// degrade to a `One` body (their buffer returns to the free lane
+    /// either way), longer runs ship as `Many`.
+    fn ship_run(&mut self, ctl: Option<Arc<JobCtl>>, mut tasks: Vec<T>) -> Result<(), AccelError> {
+        match tasks.len() {
+            0 => {
+                self.batch_pool.put_back(tasks);
+                Ok(())
+            }
+            1 => {
+                let t = tasks.pop().expect("len checked");
+                self.batch_pool.put_back(tasks);
+                self.send_job(ctl, JobBody::One(t))
+            }
+            _ => self.send_job(ctl, JobBody::Many(tasks)),
+        }
+    }
+
     /// Ship any buffered tasks now. The next coalescing buffer is drawn
-    /// from the lane's free lane (recycled frames returned by the pool
+    /// from the handle's free lane (recycled frames returned by the pool
     /// arbiter) — fresh allocation happens only during warmup.
     pub fn flush(&mut self) -> Result<(), AccelError> {
         if self.buf.is_empty() {
             return Ok(());
         }
-        let run = std::mem::replace(&mut self.buf, self.lane.take_buf());
-        self.lane
-            .send_batch(run)
-            .map_err(|_| AccelError::Disconnected)
+        let run = std::mem::replace(&mut self.buf, self.batch_pool.take());
+        self.ship_run(None, run)
+    }
+
+    /// Priority class for subsequent offloads through this handle
+    /// (buffered tasks are flushed first, so already-offloaded tasks
+    /// keep the class they were offloaded under). Priorities order
+    /// *deferred* work inside an elastic pool
+    /// ([`super::PoolConfig::elastic`]); legacy eager pools dispatch
+    /// every frame immediately and never consult them.
+    pub fn set_priority(&mut self, prio: Priority) -> Result<(), AccelError> {
+        self.flush()?;
+        self.prio = prio;
+        Ok(())
+    }
+
+    /// The current priority class ([`AccelHandle::set_priority`]).
+    pub fn priority(&self) -> Priority {
+        self.prio
     }
 
     /// Batch buffers this handle allocated fresh (its free lane was
     /// empty). Plateaus after warmup when the arbiter keeps up — the
     /// §3.2 "parallel allocator" observable for the offload side.
     pub fn batch_fresh(&self) -> u64 {
-        self.lane.batch_fresh()
+        self.batch_pool.fresh
     }
 
     /// Batch buffers this handle drew recycled from the arbiter.
     pub fn batch_reused(&self) -> u64 {
-        self.lane.batch_reused()
+        self.batch_pool.reused
     }
 
     /// Close this handle's lane: flushes buffered tasks and tells the

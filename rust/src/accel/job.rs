@@ -1,0 +1,282 @@
+//! Job-level control for the elastic pool: **priorities** and
+//! **cancellation** (ISSUE 9, tentpole c).
+//!
+//! Every frame a client lane ships to the pool arbiter is a [`Job`]: the
+//! task body (one item or a coalesced batch) plus an optional shared
+//! [`JobCtl`] and a [`Priority`] class. The tracked offload calls
+//! ([`crate::accel::AccelHandle::offload_job`] /
+//! [`crate::accel::AccelHandle::offload_batch_job`]) mint one `JobCtl`
+//! per frame and hand the caller a [`JobToken`]; the untracked calls
+//! (`offload` / `offload_batch`) ship `ctl: None` and stay exactly as
+//! cheap as before — zero atomics on the default path.
+//!
+//! ## The cancel-vs-start race
+//!
+//! A job is a three-state machine, advanced only by compare-and-swap:
+//!
+//! ```text
+//!            token.cancel()            arbiter try_start()
+//!   Queued ────────────────▶ Cancelled        │
+//!     └────────────────────────────────▶ Started
+//! ```
+//!
+//! Both edges race on the same `AtomicU8`, so exactly one wins:
+//! either the arbiter claims the job (it will run exactly once and the
+//! late `cancel()` returns `false`), or the token claims it first (the
+//! arbiter drops the frame without dispatching — **cancel ≡
+//! never-submitted**). There is no third outcome; the loom model
+//! `tests/loom/elastic.rs::cancel_vs_start_exactly_one_winner` explores
+//! every interleaving of the two CAS edges.
+//!
+//! This is the one deliberate exception to the crate's "no atomic RMW
+//! on the data path" discipline (paper §2.2): untracked jobs pay
+//! nothing, and a tracked job pays exactly one uncontended CAS at
+//! dispatch — a *control* edge between two specific threads, not a
+//! per-item hot-path operation.
+
+use std::sync::Arc;
+
+use crate::sync::atomic::{AtomicU8, Ordering};
+
+/// Per-offload priority class (tentpole c): the pool arbiter keeps one
+/// backlog lane per class and serves `High` before `Normal` before
+/// `Low` — except for the aging rule (see
+/// [`crate::accel::ElasticConfig::age_every`]), which bounds how long
+/// any job can be overtaken and so guarantees starvation freedom.
+///
+/// Priorities order *deferred* work: a pool whose shards keep up never
+/// queues, so priorities only bite once the elastic dispatch window
+/// ([`crate::accel::ElasticConfig::window`]) starts holding frames
+/// back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Served first (interactive / progressive-rendering lanes).
+    High,
+    /// The default class; every untracked offload ships here.
+    #[default]
+    Normal,
+    /// Served last (bulk / background work).
+    Low,
+}
+
+/// Number of priority classes (backlog lanes per shard).
+pub(crate) const PRIORITY_LANES: usize = 3;
+
+impl Priority {
+    /// Backlog lane index: 0 (High) is drained before 2 (Low).
+    #[inline]
+    pub(crate) fn lane(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+}
+
+/// Observable lifecycle of a tracked job ([`JobToken::state`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Published to the pool but not yet claimed by the arbiter —
+    /// still cancellable.
+    Queued,
+    /// Claimed for dispatch: the job runs (exactly once); a late
+    /// `cancel()` is a no-op returning `false`.
+    Started,
+    /// Revoked before dispatch: the job never reaches a shard and
+    /// produces no results (cancel ≡ never-submitted).
+    Cancelled,
+}
+
+const QUEUED: u8 = 0;
+const STARTED: u8 = 1;
+const CANCELLED: u8 = 2;
+
+/// The shared cancel-vs-start cell of one tracked job. One side is held
+/// by the [`JobToken`] (any thread), the other rides inside the frame
+/// to the pool arbiter; both race their edge with a single CAS.
+#[derive(Debug)]
+pub struct JobCtl {
+    state: AtomicU8,
+}
+
+impl JobCtl {
+    /// A fresh, still-`Queued` control cell. Public so the loom models
+    /// (and any out-of-tree scheduler built on the pool internals) can
+    /// exercise the cancel-vs-start race in isolation; inside the crate
+    /// only the tracked offload calls mint one.
+    pub fn new() -> Arc<JobCtl> {
+        Arc::new(JobCtl {
+            state: AtomicU8::new(QUEUED),
+        })
+    }
+
+    /// Arbiter edge: claim the job for dispatch. `true` means the job
+    /// is now [`JobState::Started`] and must run exactly once; `false`
+    /// means a cancel won the race and the frame must be dropped.
+    ///
+    /// AcqRel: the winner's claim orders after the offloader's publish
+    /// (Release on the lane) and before the dispatch it gates.
+    #[inline]
+    pub fn try_start(&self) -> bool {
+        self.state
+            .compare_exchange(QUEUED, STARTED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Token edge: revoke the job. `true` iff this call won the race
+    /// (the job was still queued and will never run).
+    #[inline]
+    pub fn cancel(&self) -> bool {
+        self.state
+            .compare_exchange(QUEUED, CANCELLED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Current state (Acquire, so a `Started`/`Cancelled` answer is
+    /// ordered after the edge that produced it).
+    #[inline]
+    pub fn state(&self) -> JobState {
+        match self.state.load(Ordering::Acquire) {
+            QUEUED => JobState::Queued,
+            STARTED => JobState::Started,
+            _ => JobState::Cancelled,
+        }
+    }
+}
+
+/// Cancellation capability for one tracked offload frame, returned by
+/// [`crate::accel::AccelHandle::offload_job`] /
+/// [`crate::accel::AccelHandle::offload_batch_job`].
+///
+/// Clone-able and `Send`: any thread may cancel (the net server cancels
+/// a whole connection's queued work on disconnect). Dropping the token
+/// does **not** cancel — untracked completion is the common case.
+#[derive(Debug, Clone)]
+pub struct JobToken {
+    ctl: Arc<JobCtl>,
+}
+
+impl JobToken {
+    pub(crate) fn new(ctl: Arc<JobCtl>) -> JobToken {
+        JobToken { ctl }
+    }
+
+    /// Revoke the job if it has not started. `true` iff the job was
+    /// still queued: it will never dispatch and contributes **zero**
+    /// results to the pool output (cancel ≡ never-submitted). `false`
+    /// means the arbiter already claimed it (it runs exactly once) or
+    /// another clone of this token cancelled first.
+    #[inline]
+    pub fn cancel(&self) -> bool {
+        self.ctl.cancel()
+    }
+
+    /// Observe the job's lifecycle state.
+    #[inline]
+    pub fn state(&self) -> JobState {
+        self.ctl.state()
+    }
+
+    /// `true` once the race is decided either way (started or
+    /// cancelled) — the token can be dropped without losing anything.
+    #[inline]
+    pub fn is_settled(&self) -> bool {
+        self.ctl.state() != JobState::Queued
+    }
+}
+
+/// The task payload of one lane frame.
+pub(crate) enum JobBody<I> {
+    /// A single task (`offload` / `offload_job`).
+    One(I),
+    /// A coalesced batch (`flush` / `offload_batch`); the `Vec` is
+    /// drawn from the handle's `BatchPool` and returned to it by the
+    /// arbiter through the lane's `BatchReturner`.
+    Many(Vec<I>),
+}
+
+impl<I> JobBody<I> {
+    /// Items this frame carries.
+    #[inline]
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            JobBody::One(_) => 1,
+            JobBody::Many(v) => v.len(),
+        }
+    }
+}
+
+/// One client-lane frame: body + control plane. Untracked frames carry
+/// `ctl: None` and cost nothing beyond the enum tag.
+pub(crate) struct Job<I> {
+    pub(crate) prio: Priority,
+    pub(crate) ctl: Option<Arc<JobCtl>>,
+    pub(crate) body: JobBody<I>,
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_then_cancel_loses() {
+        let ctl = JobCtl::new();
+        let token = JobToken::new(ctl.clone());
+        assert_eq!(token.state(), JobState::Queued);
+        assert!(!token.is_settled());
+        assert!(ctl.try_start());
+        assert!(!token.cancel(), "late cancel must lose");
+        assert_eq!(token.state(), JobState::Started);
+        assert!(token.is_settled());
+    }
+
+    #[test]
+    fn cancel_then_start_loses() {
+        let ctl = JobCtl::new();
+        let token = JobToken::new(ctl.clone());
+        assert!(token.cancel());
+        assert!(!ctl.try_start(), "arbiter must drop a cancelled frame");
+        assert_eq!(token.state(), JobState::Cancelled);
+    }
+
+    #[test]
+    fn double_cancel_single_winner() {
+        let token = JobToken::new(JobCtl::new());
+        let clone = token.clone();
+        assert!(token.cancel());
+        assert!(!clone.cancel(), "only one cancel may claim the job");
+        assert_eq!(clone.state(), JobState::Cancelled);
+    }
+
+    #[test]
+    fn racing_cancel_and_start_resolve_to_one_outcome() {
+        // Std smoke of the race the loom model checks exhaustively.
+        for _ in 0..200 {
+            let ctl = JobCtl::new();
+            let token = JobToken::new(ctl.clone());
+            let t = std::thread::spawn(move || token.cancel());
+            let started = ctl.try_start();
+            let cancelled = t.join().unwrap();
+            assert!(
+                started ^ cancelled,
+                "exactly one edge wins (started={started}, cancelled={cancelled})"
+            );
+        }
+    }
+
+    #[test]
+    fn priority_lane_order() {
+        assert!(Priority::High.lane() < Priority::Normal.lane());
+        assert!(Priority::Normal.lane() < Priority::Low.lane());
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert!(Priority::High < Priority::Low, "Ord matches urgency");
+    }
+
+    #[test]
+    fn body_len() {
+        assert_eq!(JobBody::One(7u32).len(), 1);
+        assert_eq!(JobBody::Many(vec![1u32, 2, 3]).len(), 3);
+        assert_eq!(JobBody::Many(Vec::<u32>::new()).len(), 0);
+    }
+}

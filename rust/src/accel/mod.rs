@@ -34,11 +34,13 @@
 //! ```
 
 pub mod client;
+pub mod job;
 pub mod pool;
 pub mod session;
 
 pub use client::AccelHandle;
-pub use pool::{AccelPool, Placement, PoolConfig};
+pub use job::{JobCtl, JobState, JobToken, Priority};
+pub use pool::{AccelPool, ElasticConfig, Placement, PoolConfig, PoolStats};
 pub use session::{Accel, FarmAccel};
 
 /// Errors surfaced by the offload interface.

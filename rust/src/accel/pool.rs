@@ -32,7 +32,9 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::client::{AccelHandle, LaneRegistry, NewLane};
+use super::job::{Job, JobBody, JobCtl, PRIORITY_LANES};
 use super::AccelError;
+use crate::alloc::BatchReturner;
 use crate::channel::{stream_unbounded, Msg, Receiver, Sender};
 use crate::farm::{farm, FarmConfig};
 use crate::node::{Lifecycle, Node, RunMode};
@@ -101,6 +103,180 @@ pub struct PoolConfig {
     /// abandoned lanes and surfacing [`AccelError::Disconnected`]
     /// through [`AccelPool::wait_checked`].
     pub disconnect_grace: Duration,
+    /// Elastic dispatch (ISSUE 9): `Some` switches the input arbiter
+    /// from eager forwarding to windowed dispatch with per-shard
+    /// priority backlogs, work stealing, cancellation-at-dispatch and
+    /// (optionally) shard autoscaling — see [`ElasticConfig`]. `None`
+    /// (the default) keeps the legacy eager arbiter byte-for-byte.
+    pub elastic: Option<ElasticConfig>,
+}
+
+/// Configuration of the **elastic** pool arbiter
+/// ([`PoolConfig::elastic`]).
+///
+/// The elastic arbiter holds every admitted frame in a per-shard
+/// backlog (one FIFO per [`super::Priority`] class) and dispatches into
+/// a shard only while its in-flight window has room. That deferral is
+/// what the rest of the machinery feeds on: idle shards **steal** from
+/// the tail of overloaded siblings' backlogs, cancellation revokes
+/// backlogged jobs before they ever reach a shard, priorities order the
+/// deferred work (with an aging rule bounding how long any frame can be
+/// overtaken), and the autoscaler grows/shrinks the set of shards that
+/// receive work at all — parked shards (under `Adaptive`/`Park` pools)
+/// are the warm standby tier of PR 5's `ParkGauge` elasticity.
+///
+/// Frames never split: a batch steals, cancels, and dispatches whole,
+/// so per-handle runs stay intact and Spin-mode farm results remain
+/// bit-identical to the steal-off pool (`tests/elastic.rs`).
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Let idle live shards pull whole frames from the *tail* of the
+    /// most-backlogged sibling's lowest-priority lane.
+    pub steal: bool,
+    /// Grow/shrink the live shard count with offered load (see
+    /// `grow_dwell` / `shrink_dwell` hysteresis). When `false` every
+    /// shard is live from the start — the deterministic setting used by
+    /// `benches/steal.rs`.
+    pub autoscale: bool,
+    /// Floor for the live shard count under autoscale (clamped to
+    /// `1..=shards`).
+    pub min_live: usize,
+    /// Per-shard in-flight low-water mark, in items: a shard receives
+    /// its next frame while `dispatched - completed < window`. A frame
+    /// larger than the window still dispatches whole (the window gates
+    /// *when*, never *whether*).
+    pub window: u64,
+    /// Starvation-freedom aging: every `age_every`-th dispatch of a
+    /// shard serves its **oldest** backlogged frame regardless of
+    /// priority class, so a `Low` frame is overtaken by at most
+    /// `age_every - 1` dispatches per round. `0` disables aging.
+    pub age_every: u64,
+    /// Sustained-backlog time required before each grow step (and
+    /// re-armed after it) — the anti-flap hysteresis on the way up.
+    pub grow_dwell: Duration,
+    /// Sustained-idle (no backlog, nothing in flight) time required
+    /// before each shrink step — longer than `grow_dwell`, so the pool
+    /// sheds capacity far more reluctantly than it adds it.
+    pub shrink_dwell: Duration,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            steal: true,
+            autoscale: true,
+            min_live: 1,
+            window: 4,
+            age_every: 8,
+            grow_dwell: Duration::from_micros(200),
+            shrink_dwell: Duration::from_millis(2),
+        }
+    }
+}
+
+impl ElasticConfig {
+    #[must_use]
+    pub fn steal(mut self, on: bool) -> Self {
+        self.steal = on;
+        self
+    }
+    #[must_use]
+    pub fn autoscale(mut self, on: bool) -> Self {
+        self.autoscale = on;
+        self
+    }
+    #[must_use]
+    pub fn min_live(mut self, n: usize) -> Self {
+        self.min_live = n.max(1);
+        self
+    }
+    #[must_use]
+    pub fn window(mut self, items: u64) -> Self {
+        self.window = items.max(1);
+        self
+    }
+    #[must_use]
+    pub fn age_every(mut self, n: u64) -> Self {
+        self.age_every = n;
+        self
+    }
+    #[must_use]
+    pub fn grow_dwell(mut self, d: Duration) -> Self {
+        self.grow_dwell = d;
+        self
+    }
+    #[must_use]
+    pub fn shrink_dwell(mut self, d: Duration) -> Self {
+        self.shrink_dwell = d;
+        self
+    }
+}
+
+/// A point-in-time snapshot of the pool's elasticity counters
+/// ([`AccelPool::stats`]). All counters are cumulative over the pool's
+/// lifetime and written single-writer by the arbiter (plain
+/// load+store, no RMW); the snapshot is racy but internally cheap.
+///
+/// `#[non_exhaustive]`: more observables will be added.
+#[derive(Debug, Clone, Copy)]
+#[non_exhaustive]
+pub struct PoolStats {
+    /// Configured shard count.
+    pub shards: usize,
+    /// Shards currently receiving admissions (== `shards` on legacy
+    /// eager pools and elastic pools without autoscale).
+    pub live_shards: usize,
+    /// Frames pulled by an idle shard from a sibling's backlog.
+    pub steals: u64,
+    /// Items those stolen frames carried.
+    pub stolen_items: u64,
+    /// Tracked jobs revoked before dispatch (cancel ≡ never-submitted).
+    pub cancelled_jobs: u64,
+    /// Items those cancelled jobs carried.
+    pub cancelled_items: u64,
+    /// Autoscaler grow steps.
+    pub scale_ups: u64,
+    /// Autoscaler shrink steps.
+    pub scale_downs: u64,
+    /// Jobs currently held back in the arbiter's backlogs (gauge,
+    /// refreshed once per arbiter round).
+    pub backlog: u64,
+}
+
+/// The arbiter-written cells behind [`PoolStats`]. Single writer (the
+/// arbiter thread); the pool only loads. `bump`/`put` keep the crate's
+/// no-RMW discipline: plain load + store.
+#[derive(Debug, Default)]
+struct StatsCells {
+    live: AtomicU64,
+    steals: AtomicU64,
+    stolen_items: AtomicU64,
+    cancelled_jobs: AtomicU64,
+    cancelled_items: AtomicU64,
+    scale_ups: AtomicU64,
+    scale_downs: AtomicU64,
+    backlog: AtomicU64,
+}
+
+impl StatsCells {
+    #[inline]
+    fn bump(cell: &AtomicU64, by: u64) {
+        cell.store(cell.load(Ordering::Relaxed) + by, Ordering::Relaxed);
+    }
+    #[inline]
+    fn put(cell: &AtomicU64, value: u64) {
+        cell.store(value, Ordering::Relaxed);
+    }
+    /// Account a job whose cancel won the dispatch race: count it and
+    /// return its batch buffer (items dropped — the job contributes
+    /// nothing) through the owning lane's free lane.
+    fn note_cancel<I>(&self, body: JobBody<I>, ret: &mut BatchReturner<I>) {
+        Self::bump(&self.cancelled_jobs, 1);
+        Self::bump(&self.cancelled_items, body.len() as u64);
+        if let JobBody::Many(v) = body {
+            ret.give(v);
+        }
+    }
 }
 
 /// Default per-shard worker budget: the machine's single-farm default
@@ -121,6 +297,7 @@ impl Default for PoolConfig {
             wait: WaitMode::Spin,
             idle_grace: Duration::ZERO,
             disconnect_grace: Duration::from_millis(500),
+            elastic: None,
         }
     }
 }
@@ -177,6 +354,14 @@ impl PoolConfig {
     #[must_use]
     pub fn disconnect_grace(mut self, grace: Duration) -> Self {
         self.disconnect_grace = grace;
+        self
+    }
+    /// Switch the input arbiter to **elastic** dispatch (windowed
+    /// backlogs, stealing, priorities, cancellation-at-dispatch,
+    /// autoscale) — see [`ElasticConfig`].
+    #[must_use]
+    pub fn elastic(mut self, cfg: ElasticConfig) -> Self {
+        self.elastic = Some(cfg);
         self
     }
 
@@ -254,6 +439,8 @@ pub struct AccelPool<I: Send + 'static, O: Send + 'static> {
     abandoned_seen: u64,
     /// Parked-thread gauge for the arbiter thread.
     arbiter_gauge: Arc<ParkGauge>,
+    /// Elasticity counters (arbiter-written, see [`PoolStats`]).
+    stats: Arc<StatsCells>,
 }
 
 impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
@@ -378,6 +565,10 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
         let completed: Arc<Vec<AtomicU64>> =
             Arc::new((0..nshards).map(|_| AtomicU64::new(0)).collect::<Vec<_>>());
         let abandoned = Arc::new(AtomicU64::new(0));
+        let stats = Arc::new(StatsCells::default());
+        // Until (and unless) the elastic autoscaler says otherwise,
+        // every shard is live.
+        StatsCells::put(&stats.live, nshards as u64);
         let (registry, reg_rx) = LaneRegistry::create();
         let (ctl_tx, ctl_rx) = stream_unbounded::<Ctl>();
         let arbiter_lc = Lifecycle::new(1, mode);
@@ -387,12 +578,14 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
             reg_rx,
             ctl_rx,
             cfg.placement,
+            cfg.elastic.clone(),
             ArbiterShared {
                 completed: completed.clone(),
                 abandoned: abandoned.clone(),
                 lifecycle: arbiter_lc.clone(),
                 trace: arbiter_trace.clone(),
                 wait: arbiter_wait.clone(),
+                stats: stats.clone(),
             },
         );
         let pool = AccelPool {
@@ -421,6 +614,7 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
             abandoned,
             abandoned_seen: 0,
             arbiter_gauge,
+            stats,
         };
         let handle = pool.handle();
         (pool, handle)
@@ -440,6 +634,30 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
     /// Number of shards.
     pub fn shards(&self) -> usize {
         self.outputs.len()
+    }
+
+    /// Shards currently receiving admissions: `shards()` on eager and
+    /// non-autoscaled pools, the autoscaler's live count otherwise.
+    pub fn live_shards(&self) -> usize {
+        self.stats.live.load(Ordering::Relaxed) as usize
+    }
+
+    /// Snapshot the pool's elasticity counters — steal/cancel/scale
+    /// activity and the current backlog gauge. Cheap (a handful of
+    /// relaxed loads) and callable at any time.
+    pub fn stats(&self) -> PoolStats {
+        let s = &self.stats;
+        PoolStats {
+            shards: self.outputs.len(),
+            live_shards: s.live.load(Ordering::Relaxed) as usize,
+            steals: s.steals.load(Ordering::Relaxed),
+            stolen_items: s.stolen_items.load(Ordering::Relaxed),
+            cancelled_jobs: s.cancelled_jobs.load(Ordering::Relaxed),
+            cancelled_items: s.cancelled_items.load(Ordering::Relaxed),
+            scale_ups: s.scale_ups.load(Ordering::Relaxed),
+            scale_downs: s.scale_downs.load(Ordering::Relaxed),
+            backlog: s.backlog.load(Ordering::Relaxed),
+        }
     }
 
     /// Pool-wide end-of-stream: after this, the cycle closes as soon as
@@ -755,14 +973,173 @@ struct ArbiterShared {
     lifecycle: Arc<Lifecycle>,
     trace: Arc<NodeTrace>,
     wait: WaitCfg,
+    stats: Arc<StatsCells>,
+}
+
+/// One registered client lane, as the arbiter sees it: the frame
+/// stream, the give side of the client's batch-buffer free lane, and
+/// the lane's sticky home shard (elastic admission).
+struct Lane<I: Send + 'static> {
+    rx: Receiver<Job<I>>,
+    ret: BatchReturner<I>,
+    open: bool,
+    home: usize,
+}
+
+/// A frame admitted into a shard's elastic backlog, waiting for window
+/// room: admission sequence (for the aging rule), owning lane (for
+/// buffer return), cancel handle, and the task body.
+struct Backlogged<I> {
+    seq: u64,
+    lane: usize,
+    ctl: Option<Arc<JobCtl>>,
+    body: JobBody<I>,
+}
+
+/// One shard's backlog: a FIFO per priority class.
+type ShardBacklog<I> = [VecDeque<Backlogged<I>>; PRIORITY_LANES];
+
+fn backlog_jobs<I>(b: &ShardBacklog<I>) -> u64 {
+    b.iter().map(|q| q.len() as u64).sum()
+}
+
+/// Serve a shard's own backlog: priority order (High → Low), except
+/// that an aging pop takes the globally oldest front so no class
+/// starves.
+fn pop_backlog<I>(b: &mut ShardBacklog<I>, aging: bool) -> Option<Backlogged<I>> {
+    if aging {
+        let lane = (0..PRIORITY_LANES)
+            .filter(|&l| !b[l].is_empty())
+            .min_by_key(|&l| b[l].front().map_or(u64::MAX, |e| e.seq))?;
+        return b[lane].pop_front();
+    }
+    b.iter_mut().find_map(|q| q.pop_front())
+}
+
+/// Steal from a sibling: the **tail** of its **lowest**-priority
+/// non-empty lane — the frame the victim would serve last, so stealing
+/// never reorders what the victim's own clients observe next.
+fn steal_tail<I>(b: &mut ShardBacklog<I>) -> Option<Backlogged<I>> {
+    b.iter_mut().rev().find_map(|q| q.pop_back())
+}
+
+/// Items dispatched to shard `s` and not yet seen back by the pool.
+/// `completed` counts *results* while `dispatched` counts *tasks*;
+/// workers may emit 0 or ≥2 results per task, so this is a load
+/// heuristic, not an invariant — saturate it.
+#[inline]
+fn inflight(s: usize, dispatched: &[u64], completed: &[AtomicU64]) -> u64 {
+    dispatched[s].saturating_sub(completed[s].load(Ordering::Relaxed))
+}
+
+/// Send one dispatch-ready frame into shard `s`. Returns `false` if the
+/// job's cancel won the race (the frame is dropped and accounted,
+/// nothing reaches the shard).
+fn dispatch_frame<I: Send + 'static>(
+    frame: Backlogged<I>,
+    s: usize,
+    lanes: &mut [Lane<I>],
+    shard_inputs: &mut [Sender<I>],
+    dispatched: &mut [u64],
+    trace: &NodeTrace,
+    stats: &StatsCells,
+) -> bool {
+    let Backlogged { lane, ctl, body, .. } = frame;
+    if let Some(ctl) = ctl {
+        if !ctl.try_start() {
+            stats.note_cancel(body, &mut lanes[lane].ret);
+            return false;
+        }
+    }
+    let t0 = Instant::now();
+    match body {
+        JobBody::One(t) => {
+            let _ = shard_inputs[s].send(t);
+            dispatched[s] += 1;
+            trace.on_task(t0.elapsed().as_nanos() as u64);
+            trace.on_emit(1);
+        }
+        JobBody::Many(mut ts) => {
+            // Re-frame instead of forwarding the client's Vec: the run
+            // moves into a buffer recycled on the shard link (returned
+            // by that shard's emitter) and the client's buffer goes
+            // back through its own lane's free lane — both return paths
+            // stay SPSC and the arbiter allocates nothing after warmup.
+            let k = ts.len() as u64;
+            let mut run = shard_inputs[s].take_buf();
+            run.append(&mut ts);
+            lanes[lane].ret.give(ts);
+            let _ = shard_inputs[s].send_batch(run);
+            dispatched[s] += k;
+            trace.on_tasks(k, t0.elapsed().as_nanos() as u64);
+            trace.on_emit(k);
+        }
+    }
+    true
+}
+
+/// Relief valve for the elastic window (`dispatched - completed` is a
+/// heuristic): if the backlog is non-empty but no dispatch and no
+/// completion happened for this long, bypass the window once so a
+/// workload whose workers emit ≠ 1 result per task can never wedge the
+/// pool.
+const STALL_BYPASS: Duration = Duration::from_millis(25);
+
+/// Register a freshly-announced client lane. The home shard is
+/// lane-sticky: `lane index % live` — under skew this is what makes a
+/// hot client's overload *visible on one shard* so stealing (not
+/// placement averaging) heals it; eager pools ignore it.
+fn admit_lane<I: Send + 'static>(
+    nl: NewLane<I>,
+    lanes: &mut Vec<Lane<I>>,
+    open: &mut usize,
+    live: usize,
+) {
+    let home = lanes.len() % live.max(1);
+    lanes.push(Lane {
+        rx: nl.rx,
+        ret: nl.ret,
+        open: true,
+        home,
+    });
+    *open += 1;
+}
+
+/// Drain pending registrations — polled AFTER the lanes: popping a
+/// lane's Eos happens-after that client enqueued any clone
+/// registration, so a close can never outrun the clone it spawned.
+fn drain_registrations<I: Send + 'static>(
+    reg_rx: &mut Receiver<NewLane<I>>,
+    lanes: &mut Vec<Lane<I>>,
+    open: &mut usize,
+    live: usize,
+    progressed: &mut bool,
+) {
+    while let Some(m) = reg_rx.try_recv() {
+        match m {
+            Msg::Task(nl) => {
+                *progressed = true;
+                admit_lane(nl, lanes, open, live);
+            }
+            Msg::Batch(ls) => {
+                *progressed = true;
+                for nl in ls {
+                    admit_lane(nl, lanes, open, live);
+                }
+            }
+            Msg::Eos => {}
+        }
+    }
 }
 
 /// The pool's input arbiter: merges every client lane into the shard
 /// inputs (SPMC over SPSC lanes, §2.3 — no locks, no RMW on the data
-/// path) and applies the placement policy per task or per batch frame
-/// (a batch stays whole so its single-synchronization economy survives
-/// into the shard, whose emitter unpacks it for scheduling). Idle waits
-/// — every lane empty, no control, no registrations — ride the shared
+/// path) and applies the placement policy per frame (a batch stays
+/// whole so its single-synchronization economy survives into the shard,
+/// whose emitter unpacks it for scheduling). Two dispatch disciplines:
+/// the legacy **eager** cycle (forward immediately — `elastic: None`)
+/// and the **elastic** cycle (windowed per-shard priority backlogs with
+/// stealing, cancellation and autoscale). Idle waits ride the shared
 /// spin→yield→park escalation, parking on any lane/control doorbell;
 /// any client offload rings the arbiter awake, which is what wakes a
 /// wholesale-parked idle pool on the next dispatch.
@@ -771,182 +1148,40 @@ fn spawn_arbiter<I: Send + 'static>(
     mut reg_rx: Receiver<NewLane<I>>,
     mut ctl_rx: Receiver<Ctl>,
     placement: Placement,
+    elastic: Option<ElasticConfig>,
     shared: ArbiterShared,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("ff-pool-arbiter".into())
         .spawn(move || {
-            let ArbiterShared {
-                completed,
-                abandoned,
-                lifecycle,
-                trace,
-                wait,
-            } = shared;
             let nshards = shard_inputs.len();
             let mut rr = 0usize;
             // Cumulative per-shard dispatch counts: arbiter-local plain
             // integers (single writer — this thread), paired with the
             // pool-side `completed` atomics for in-flight load.
             let mut dispatched = vec![0u64; nshards];
-            let mut exit_after_cycle = false;
             loop {
                 // ---- one run cycle -----------------------------------
-                let mut lanes: Vec<Receiver<I>> = Vec::new();
-                let mut lane_open: Vec<bool> = Vec::new();
-                let mut open = 0usize;
-                let mut closing = false;
-                let mut force_close = false;
-                let mut backoff = Backoff::new();
-                loop {
-                    let mut progressed = false;
-                    // 1. pool control
-                    while let Some(m) = ctl_rx.try_recv() {
-                        match m {
-                            Msg::Task(Ctl::CloseCycle) | Msg::Eos => {
-                                progressed = true;
-                                closing = true;
-                            }
-                            Msg::Task(Ctl::ForceClose) => {
-                                progressed = true;
-                                closing = true;
-                                force_close = true;
-                            }
-                            Msg::Batch(_) => unreachable!("control is never batched"),
-                        }
-                    }
-                    if !ctl_rx.peer_alive() && !ctl_rx.has_next() {
-                        // Pool dropped without wait(): finish the cycle
-                        // with what we have and exit.
-                        closing = true;
-                        exit_after_cycle = true;
-                    }
-                    // 2. client lanes: burst-drain each open lane
-                    for (li, lane) in lanes.iter_mut().enumerate() {
-                        if !lane_open[li] {
-                            continue;
-                        }
-                        for _ in 0..LANE_BURST {
-                            match lane.try_recv() {
-                                Some(Msg::Task(t)) => {
-                                    progressed = true;
-                                    let t0 = Instant::now();
-                                    let s =
-                                        pick_shard(placement, &mut rr, &dispatched, &completed);
-                                    let _ = shard_inputs[s].send(t);
-                                    dispatched[s] += 1;
-                                    trace.on_task(t0.elapsed().as_nanos() as u64);
-                                    trace.on_emit(1);
-                                }
-                                Some(Msg::Batch(ts)) => {
-                                    progressed = true;
-                                    let t0 = Instant::now();
-                                    let k = ts.len() as u64;
-                                    let s =
-                                        pick_shard(placement, &mut rr, &dispatched, &completed);
-                                    // Re-frame instead of forwarding the
-                                    // client's Vec: the run moves into a
-                                    // buffer recycled on the shard link
-                                    // (returned by that shard's emitter)
-                                    // and the client's buffer goes back
-                                    // through its own lane — both return
-                                    // paths stay SPSC and the arbiter
-                                    // allocates nothing after warmup.
-                                    let run = shard_inputs[s].reframe(lane, ts);
-                                    let _ = shard_inputs[s].send_batch(run);
-                                    dispatched[s] += k;
-                                    trace.on_tasks(k, t0.elapsed().as_nanos() as u64);
-                                    trace.on_emit(k);
-                                }
-                                Some(Msg::Eos) => {
-                                    progressed = true;
-                                    lane_open[li] = false;
-                                    open -= 1;
-                                    break;
-                                }
-                                None => {
-                                    // A client thread that died without
-                                    // closing (e.g. mem::forget) must not
-                                    // wedge the cycle.
-                                    if !lane.peer_alive() && !lane.has_next() {
-                                        progressed = true;
-                                        lane_open[li] = false;
-                                        open -= 1;
-                                    }
-                                    break;
-                                }
-                            }
-                        }
-                    }
-                    // 3. registrations — polled AFTER the lanes: popping
-                    // a lane's Eos happens-after that client enqueued any
-                    // clone registration, so a close can never outrun the
-                    // clone it spawned.
-                    while let Some(m) = reg_rx.try_recv() {
-                        match m {
-                            Msg::Task(NewLane(rx)) => {
-                                progressed = true;
-                                lanes.push(rx);
-                                lane_open.push(true);
-                                open += 1;
-                            }
-                            Msg::Batch(ls) => {
-                                progressed = true;
-                                for NewLane(rx) in ls {
-                                    lanes.push(rx);
-                                    lane_open.push(true);
-                                    open += 1;
-                                }
-                            }
-                            Msg::Eos => {}
-                        }
-                    }
-                    // 4. leaked-handle recovery: after a ForceClose,
-                    // close every drained lane unconditionally (frames
-                    // still buffered were forwarded by step 2 above;
-                    // the lane's handle will never send EOS).
-                    if force_close {
-                        for li in 0..lanes.len() {
-                            if lane_open[li] && !lanes[li].has_next() {
-                                lane_open[li] = false;
-                                open -= 1;
-                                abandoned.fetch_add(1, Ordering::SeqCst);
-                                progressed = true;
-                            }
-                        }
-                    }
-                    // 5. cycle completion: pool closed + all lanes done.
-                    if closing && open == 0 {
-                        break;
-                    }
-                    if progressed {
-                        backoff.reset();
-                    } else if wait.wants_park(&mut backoff) {
-                        // Everything idle: park until a client offload,
-                        // a registration, or pool control rings.
-                        let mut bells: Vec<&Doorbell> =
-                            Vec::with_capacity(lanes.len() + 2);
-                        bells.push(ctl_rx.data_bell());
-                        bells.push(reg_rx.data_bell());
-                        bells.extend(
-                            lanes
-                                .iter()
-                                .enumerate()
-                                .filter(|(li, _)| lane_open[*li])
-                                .map(|(_, l)| l.data_bell()),
-                        );
-                        wait.park_any(&bells, || {
-                            ctl_rx.peer_alive()
-                                && !ctl_rx.has_next()
-                                && !reg_rx.has_next()
-                                && !lanes.iter().enumerate().any(|(li, l)| {
-                                    lane_open[li] && (l.has_next() || !l.peer_alive())
-                                })
-                        });
-                    } else {
-                        backoff.snooze();
-                    }
-                }
+                let exit_after_cycle = match &elastic {
+                    None => eager_cycle(
+                        &mut shard_inputs,
+                        &mut reg_rx,
+                        &mut ctl_rx,
+                        placement,
+                        &mut rr,
+                        &mut dispatched,
+                        &shared,
+                    ),
+                    Some(ecfg) => elastic_cycle(
+                        ecfg,
+                        &mut shard_inputs,
+                        &mut reg_rx,
+                        &mut ctl_rx,
+                        placement,
+                        &mut dispatched,
+                        &shared,
+                    ),
+                };
                 // Propagate EOS into every shard.
                 for s in shard_inputs.iter_mut() {
                     let _ = s.send_eos();
@@ -959,14 +1194,481 @@ fn spawn_arbiter<I: Send + 'static>(
                     fresh += f;
                     reused += r;
                 }
-                trace.on_alloc(fresh, reused);
-                trace.on_cycle();
-                if exit_after_cycle || !lifecycle.cycle_end() {
+                shared.trace.on_alloc(fresh, reused);
+                shared.trace.on_cycle();
+                if exit_after_cycle || !shared.lifecycle.cycle_end() {
                     break;
                 }
             }
         })
         .expect("spawn pool arbiter")
+}
+
+/// One run cycle of the legacy **eager** arbiter: every admitted frame
+/// forwards to a shard the moment it is drained from its lane — the
+/// exact pre-elastic pool behavior, with [`Job`] envelopes unpacked
+/// (and tracked jobs claimed, so `JobToken::cancel` still means
+/// never-submitted when it wins) at the moment of forwarding. Returns
+/// `true` if the pool was dropped and the arbiter must exit.
+fn eager_cycle<I: Send + 'static>(
+    shard_inputs: &mut [Sender<I>],
+    reg_rx: &mut Receiver<NewLane<I>>,
+    ctl_rx: &mut Receiver<Ctl>,
+    placement: Placement,
+    rr: &mut usize,
+    dispatched: &mut [u64],
+    shared: &ArbiterShared,
+) -> bool {
+    let completed = &*shared.completed;
+    let mut lanes: Vec<Lane<I>> = Vec::new();
+    let mut open = 0usize;
+    let mut closing = false;
+    let mut force_close = false;
+    let mut exit_after_cycle = false;
+    let mut backoff = Backoff::new();
+    loop {
+        let mut progressed = false;
+        // 1. pool control
+        while let Some(m) = ctl_rx.try_recv() {
+            match m {
+                Msg::Task(Ctl::CloseCycle) | Msg::Eos => {
+                    progressed = true;
+                    closing = true;
+                }
+                Msg::Task(Ctl::ForceClose) => {
+                    progressed = true;
+                    closing = true;
+                    force_close = true;
+                }
+                Msg::Batch(_) => unreachable!("control is never batched"),
+            }
+        }
+        if !ctl_rx.peer_alive() && !ctl_rx.has_next() {
+            // Pool dropped without wait(): finish the cycle with what
+            // we have and exit.
+            closing = true;
+            exit_after_cycle = true;
+        }
+        // 2. client lanes: burst-drain each open lane
+        for li in 0..lanes.len() {
+            if !lanes[li].open {
+                continue;
+            }
+            for _ in 0..LANE_BURST {
+                match lanes[li].rx.try_recv() {
+                    Some(Msg::Task(job)) => {
+                        progressed = true;
+                        // Eager pools dispatch immediately — there is no
+                        // deferred work for `prio` to order.
+                        let Job { ctl, body, .. } = job;
+                        if let Some(ctl) = ctl {
+                            if !ctl.try_start() {
+                                shared.stats.note_cancel(body, &mut lanes[li].ret);
+                                continue;
+                            }
+                        }
+                        let t0 = Instant::now();
+                        match body {
+                            JobBody::One(t) => {
+                                let s = pick_shard(placement, rr, dispatched, completed);
+                                let _ = shard_inputs[s].send(t);
+                                dispatched[s] += 1;
+                                shared.trace.on_task(t0.elapsed().as_nanos() as u64);
+                                shared.trace.on_emit(1);
+                            }
+                            JobBody::Many(mut ts) => {
+                                let k = ts.len() as u64;
+                                let s = pick_shard(placement, rr, dispatched, completed);
+                                // Re-frame instead of forwarding the
+                                // client's Vec: the run moves into a
+                                // buffer recycled on the shard link
+                                // (returned by that shard's emitter)
+                                // and the client's buffer goes back
+                                // through its own lane — both return
+                                // paths stay SPSC and the arbiter
+                                // allocates nothing after warmup.
+                                let mut run = shard_inputs[s].take_buf();
+                                run.append(&mut ts);
+                                lanes[li].ret.give(ts);
+                                let _ = shard_inputs[s].send_batch(run);
+                                dispatched[s] += k;
+                                shared.trace.on_tasks(k, t0.elapsed().as_nanos() as u64);
+                                shared.trace.on_emit(k);
+                            }
+                        }
+                    }
+                    Some(Msg::Batch(_)) => unreachable!("lanes carry Job frames, never Batch"),
+                    Some(Msg::Eos) => {
+                        progressed = true;
+                        lanes[li].open = false;
+                        open -= 1;
+                        break;
+                    }
+                    None => {
+                        // A client thread that died without closing
+                        // (e.g. mem::forget) must not wedge the cycle.
+                        if !lanes[li].rx.peer_alive() && !lanes[li].rx.has_next() {
+                            progressed = true;
+                            lanes[li].open = false;
+                            open -= 1;
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        // 3. registrations
+        drain_registrations(reg_rx, &mut lanes, &mut open, shard_inputs.len(), &mut progressed);
+        // 4. leaked-handle recovery: after a ForceClose, close every
+        // drained lane unconditionally (frames still buffered were
+        // forwarded by step 2 above; the lane's handle will never send
+        // EOS).
+        if force_close {
+            for l in lanes.iter_mut() {
+                if l.open && !l.rx.has_next() {
+                    l.open = false;
+                    open -= 1;
+                    shared.abandoned.fetch_add(1, Ordering::SeqCst);
+                    progressed = true;
+                }
+            }
+        }
+        // 5. cycle completion: pool closed + all lanes done.
+        if closing && open == 0 {
+            return exit_after_cycle;
+        }
+        if progressed {
+            backoff.reset();
+        } else if shared.wait.wants_park(&mut backoff) {
+            // Everything idle: park until a client offload, a
+            // registration, or pool control rings.
+            let mut bells: Vec<&Doorbell> = Vec::with_capacity(lanes.len() + 2);
+            bells.push(ctl_rx.data_bell());
+            bells.push(reg_rx.data_bell());
+            bells.extend(
+                lanes
+                    .iter()
+                    .filter(|l| l.open)
+                    .map(|l| l.rx.data_bell()),
+            );
+            shared.wait.park_any(&bells, || {
+                ctl_rx.peer_alive()
+                    && !ctl_rx.has_next()
+                    && !reg_rx.has_next()
+                    && !lanes
+                        .iter()
+                        .any(|l| l.open && (l.rx.has_next() || !l.rx.peer_alive()))
+            });
+        } else {
+            backoff.snooze();
+        }
+    }
+}
+
+/// One run cycle of the **elastic** arbiter (ISSUE 9 tentpole). Every
+/// admitted frame lands in its shard's backlog (one FIFO per priority
+/// class); dispatch is *windowed* — a shard receives its next frame
+/// only while its in-flight items sit under [`ElasticConfig::window`].
+/// The deferral enables everything else:
+///
+/// * **steal** — a live shard with window room and an empty backlog
+///   pulls the tail of the most-backlogged sibling's lowest-priority
+///   lane, whole frames only;
+/// * **cancel** — a tracked job is claimed (`try_start`) at dispatch;
+///   if its token's cancel won, the frame is dropped and accounted
+///   (cancel ≡ never-submitted);
+/// * **priorities + aging** — High before Normal before Low, except
+///   every `age_every`-th dispatch serves the shard's oldest frame, so
+///   no class starves;
+/// * **autoscale** — sustained backlog grows the live set (dwell
+///   hysteresis both ways; shrink requires a fully idle pool and a
+///   longer dwell, so the pool never flaps).
+///
+/// Returns `true` if the pool was dropped and the arbiter must exit.
+fn elastic_cycle<I: Send + 'static>(
+    ecfg: &ElasticConfig,
+    shard_inputs: &mut [Sender<I>],
+    reg_rx: &mut Receiver<NewLane<I>>,
+    ctl_rx: &mut Receiver<Ctl>,
+    placement: Placement,
+    dispatched: &mut [u64],
+    shared: &ArbiterShared,
+) -> bool {
+    let completed = &*shared.completed;
+    let stats = &*shared.stats;
+    let nshards = shard_inputs.len();
+    let min_live = ecfg.min_live.clamp(1, nshards);
+    let mut live = if ecfg.autoscale { min_live } else { nshards };
+    StatsCells::put(&stats.live, live as u64);
+    let mut lanes: Vec<Lane<I>> = Vec::new();
+    let mut open = 0usize;
+    let mut closing = false;
+    let mut force_close = false;
+    let mut exit_after_cycle = false;
+    let mut backlog: Vec<ShardBacklog<I>> = (0..nshards)
+        .map(|_| std::array::from_fn(|_| VecDeque::new()))
+        .collect();
+    let mut total_backlog = 0u64; // jobs across all shard backlogs
+    let mut seq = 0u64; // admission order, drives the aging rule
+    let mut served = vec![0u64; nshards]; // dispatches per shard (aging)
+    let mut grow_since: Option<Instant> = None;
+    let mut shrink_since: Option<Instant> = None;
+    let mut stall: Option<(Instant, u64)> = None;
+    let mut backoff = Backoff::new();
+    loop {
+        let mut progressed = false;
+        // 1. pool control
+        while let Some(m) = ctl_rx.try_recv() {
+            match m {
+                Msg::Task(Ctl::CloseCycle) | Msg::Eos => {
+                    progressed = true;
+                    closing = true;
+                }
+                Msg::Task(Ctl::ForceClose) => {
+                    progressed = true;
+                    closing = true;
+                    force_close = true;
+                }
+                Msg::Batch(_) => unreachable!("control is never batched"),
+            }
+        }
+        if !ctl_rx.peer_alive() && !ctl_rx.has_next() {
+            closing = true;
+            exit_after_cycle = true;
+        }
+        // 2. admission: burst-drain each open lane into its shard's
+        // backlog. RoundRobin/Topology admit lane-sticky (the lane's
+        // home shard — skew stays visible, stealing heals it);
+        // LeastLoaded keeps per-frame load-based admission over the
+        // live set.
+        for li in 0..lanes.len() {
+            if !lanes[li].open {
+                continue;
+            }
+            for _ in 0..LANE_BURST {
+                match lanes[li].rx.try_recv() {
+                    Some(Msg::Task(job)) => {
+                        progressed = true;
+                        let s = match placement {
+                            Placement::RoundRobin | Placement::Topology => {
+                                if lanes[li].home >= live {
+                                    lanes[li].home %= live;
+                                }
+                                lanes[li].home
+                            }
+                            Placement::LeastLoaded => (0..live)
+                                .min_by_key(|&s| {
+                                    inflight(s, dispatched, completed) + backlog_jobs(&backlog[s])
+                                })
+                                .unwrap_or(0),
+                        };
+                        backlog[s][job.prio.lane()].push_back(Backlogged {
+                            seq,
+                            lane: li,
+                            ctl: job.ctl,
+                            body: job.body,
+                        });
+                        seq += 1;
+                        total_backlog += 1;
+                    }
+                    Some(Msg::Batch(_)) => unreachable!("lanes carry Job frames, never Batch"),
+                    Some(Msg::Eos) => {
+                        progressed = true;
+                        lanes[li].open = false;
+                        open -= 1;
+                        break;
+                    }
+                    None => {
+                        if !lanes[li].rx.peer_alive() && !lanes[li].rx.has_next() {
+                            progressed = true;
+                            lanes[li].open = false;
+                            open -= 1;
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        // 3. registrations
+        drain_registrations(reg_rx, &mut lanes, &mut open, live, &mut progressed);
+        // 4. windowed dispatch: serve each live shard from its own
+        // backlog while its in-flight window has room.
+        let mut dispatched_this_round = false;
+        for s in 0..live {
+            while total_backlog > 0 && inflight(s, dispatched, completed) < ecfg.window {
+                let aging = ecfg.age_every > 0 && (served[s] + 1) % ecfg.age_every == 0;
+                let Some(frame) = pop_backlog(&mut backlog[s], aging) else {
+                    break;
+                };
+                total_backlog -= 1;
+                progressed = true;
+                if dispatch_frame(
+                    frame,
+                    s,
+                    &mut lanes,
+                    shard_inputs,
+                    dispatched,
+                    &shared.trace,
+                    stats,
+                ) {
+                    served[s] += 1;
+                    dispatched_this_round = true;
+                }
+            }
+        }
+        // 5. steal: an idle live shard (window room, empty backlog)
+        // pulls whole frames from the tail of the most-backlogged
+        // sibling's lowest-priority lane and runs them immediately.
+        if ecfg.steal && total_backlog > 0 {
+            for s in 0..live {
+                if backlog_jobs(&backlog[s]) > 0 {
+                    continue;
+                }
+                while total_backlog > 0 && inflight(s, dispatched, completed) < ecfg.window {
+                    let victim = (0..live)
+                        .filter(|&v| v != s)
+                        .max_by_key(|&v| backlog_jobs(&backlog[v]))
+                        .filter(|&v| backlog_jobs(&backlog[v]) > 0);
+                    let Some(v) = victim else { break };
+                    let Some(frame) = steal_tail(&mut backlog[v]) else {
+                        break;
+                    };
+                    total_backlog -= 1;
+                    progressed = true;
+                    StatsCells::bump(&stats.steals, 1);
+                    StatsCells::bump(&stats.stolen_items, frame.body.len() as u64);
+                    if dispatch_frame(
+                        frame,
+                        s,
+                        &mut lanes,
+                        shard_inputs,
+                        dispatched,
+                        &shared.trace,
+                        stats,
+                    ) {
+                        served[s] += 1;
+                        dispatched_this_round = true;
+                    }
+                }
+            }
+        }
+        // 6. stall relief: the window rests on `dispatched - completed`,
+        // which assumes roughly one result per task. A workload whose
+        // workers emit 0 results can pin every window "full" forever —
+        // if the backlog is non-empty and neither a dispatch nor a
+        // completion happened for STALL_BYPASS, push one frame through
+        // regardless of the window.
+        if total_backlog > 0 && !dispatched_this_round {
+            let done: u64 = completed.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+            match stall {
+                Some((t0, seen)) if seen == done => {
+                    if t0.elapsed() >= STALL_BYPASS {
+                        'bypass: for s in 0..live {
+                            if let Some(frame) = pop_backlog(&mut backlog[s], false) {
+                                total_backlog -= 1;
+                                progressed = true;
+                                if dispatch_frame(
+                                    frame,
+                                    s,
+                                    &mut lanes,
+                                    shard_inputs,
+                                    dispatched,
+                                    &shared.trace,
+                                    stats,
+                                ) {
+                                    served[s] += 1;
+                                }
+                                break 'bypass;
+                            }
+                        }
+                        stall = None;
+                    }
+                }
+                _ => stall = Some((Instant::now(), done)),
+            }
+        } else {
+            stall = None;
+        }
+        // 7. autoscale with dwell hysteresis both ways.
+        if ecfg.autoscale {
+            if total_backlog > 0 && live < nshards {
+                let since = *grow_since.get_or_insert_with(Instant::now);
+                if since.elapsed() >= ecfg.grow_dwell {
+                    live += 1;
+                    StatsCells::bump(&stats.scale_ups, 1);
+                    StatsCells::put(&stats.live, live as u64);
+                    grow_since = None; // re-arm: each step earns its own dwell
+                    progressed = true;
+                }
+            } else {
+                grow_since = None;
+            }
+            let idle = total_backlog == 0
+                && (0..live).all(|s| inflight(s, dispatched, completed) == 0);
+            if idle && live > min_live {
+                let since = *shrink_since.get_or_insert_with(Instant::now);
+                if since.elapsed() >= ecfg.shrink_dwell {
+                    live -= 1;
+                    StatsCells::bump(&stats.scale_downs, 1);
+                    StatsCells::put(&stats.live, live as u64);
+                    // Re-home lanes stranded on the retired shard.
+                    for l in lanes.iter_mut() {
+                        if l.home >= live {
+                            l.home %= live;
+                        }
+                    }
+                    shrink_since = None;
+                    progressed = true;
+                }
+            } else {
+                shrink_since = None;
+            }
+        }
+        // 8. leaked-handle recovery (as in the eager cycle).
+        if force_close {
+            for l in lanes.iter_mut() {
+                if l.open && !l.rx.has_next() {
+                    l.open = false;
+                    open -= 1;
+                    shared.abandoned.fetch_add(1, Ordering::SeqCst);
+                    progressed = true;
+                }
+            }
+        }
+        StatsCells::put(&stats.backlog, total_backlog);
+        // 9. cycle completion: pool closed, all lanes done, nothing
+        // still held back.
+        if closing && open == 0 && total_backlog == 0 {
+            return exit_after_cycle;
+        }
+        if progressed {
+            backoff.reset();
+        } else if total_backlog == 0 && shared.wait.wants_park(&mut backoff) {
+            // Park only with an empty backlog: with frames held back,
+            // progress comes from shard *completions* (no doorbell), so
+            // the arbiter stays on the spin→yield escalation — which is
+            // also what keeps the STALL_BYPASS clock honest.
+            let mut bells: Vec<&Doorbell> = Vec::with_capacity(lanes.len() + 2);
+            bells.push(ctl_rx.data_bell());
+            bells.push(reg_rx.data_bell());
+            bells.extend(
+                lanes
+                    .iter()
+                    .filter(|l| l.open)
+                    .map(|l| l.rx.data_bell()),
+            );
+            shared.wait.park_any(&bells, || {
+                ctl_rx.peer_alive()
+                    && !ctl_rx.has_next()
+                    && !reg_rx.has_next()
+                    && !lanes
+                        .iter()
+                        .any(|l| l.open && (l.rx.has_next() || !l.rx.peer_alive()))
+            });
+        } else {
+            backoff.snooze();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1224,6 +1926,164 @@ mod tests {
         }
         got.sort_unstable();
         assert_eq!(got, (0..100u64).map(|i| i * 2).collect::<Vec<_>>());
+        pool.wait();
+    }
+
+    #[test]
+    fn elastic_pool_conserves_tasks_with_cancel() {
+        use crate::accel::JobState;
+        let (mut pool, mut h) = AccelPool::run(
+            PoolConfig::default()
+                .shards(2)
+                .workers_per_shard(1)
+                .elastic(ElasticConfig::default().autoscale(false).window(2)),
+            |_s, _w| node_fn(|x: u64| x + 1),
+        );
+        let mut tokens = vec![];
+        for i in 0..500u64 {
+            if i % 10 == 0 {
+                tokens.push(h.offload_job(i).unwrap());
+            } else {
+                h.offload(i).unwrap();
+            }
+        }
+        // Revoke half the tracked jobs. Each cancel either wins (the
+        // job never reaches a shard and is accounted cancelled) or
+        // loses (already claimed at dispatch) — exactly one outcome.
+        for t in tokens.iter().step_by(2) {
+            t.cancel();
+        }
+        h.finish().unwrap();
+        pool.offload_eos();
+        let mut got = 0u64;
+        while pool.load_result().is_some() {
+            got += 1;
+        }
+        let stats = pool.stats();
+        assert_eq!(
+            got + stats.cancelled_items,
+            500,
+            "cancel must be never-submitted, not lost: {stats:?}"
+        );
+        // Every tracked job was single-task, so jobs == items.
+        assert_eq!(stats.cancelled_jobs, stats.cancelled_items);
+        // Every token is settled one way or the other.
+        for t in &tokens {
+            assert_ne!(t.state(), JobState::Queued);
+        }
+        assert_eq!(stats.live_shards, 2);
+        pool.wait();
+    }
+
+    #[test]
+    fn elastic_steal_heals_single_hot_lane() {
+        // One client lane, sticky home shard 0, slow workers: shard 1
+        // has nothing of its own and must steal or idle.
+        let (mut pool, mut h) = AccelPool::run(
+            PoolConfig::default()
+                .shards(2)
+                .workers_per_shard(1)
+                .elastic(ElasticConfig::default().autoscale(false).window(1)),
+            |_s, _w| {
+                node_fn(|x: u64| {
+                    std::thread::sleep(Duration::from_micros(50));
+                    x * 2
+                })
+            },
+        );
+        for i in 0..200u64 {
+            h.offload(i).unwrap();
+        }
+        h.finish().unwrap();
+        pool.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = pool.load_result() {
+            got.push(v);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..200u64).map(|i| i * 2).collect::<Vec<_>>());
+        let stats = pool.stats();
+        assert!(stats.steals > 0, "idle shard never stole: {stats:?}");
+        assert_eq!(stats.stolen_items, stats.steals); // per-item frames
+        pool.wait();
+    }
+
+    #[test]
+    fn autoscale_grows_under_sustained_backlog() {
+        let (mut pool, mut h) = AccelPool::run(
+            PoolConfig::default()
+                .shards(3)
+                .workers_per_shard(1)
+                .elastic(
+                    ElasticConfig::default()
+                        .min_live(1)
+                        .window(1)
+                        .grow_dwell(Duration::from_micros(50))
+                        // Effectively never shrink within the test.
+                        .shrink_dwell(Duration::from_secs(3600)),
+                ),
+            |_s, _w| {
+                node_fn(|x: u64| {
+                    std::thread::sleep(Duration::from_micros(200));
+                    x
+                })
+            },
+        );
+        for i in 0..300u64 {
+            h.offload(i).unwrap();
+        }
+        h.finish().unwrap();
+        pool.offload_eos();
+        let mut n = 0u64;
+        while pool.load_result().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 300);
+        let stats = pool.stats();
+        assert!(
+            stats.scale_ups > 0,
+            "sustained backlog never grew the live set: {stats:?}"
+        );
+        pool.wait();
+    }
+
+    #[test]
+    fn priority_and_token_api_smoke() {
+        use crate::accel::{JobState, Priority};
+        let (mut pool, mut h) = AccelPool::run(
+            PoolConfig::default()
+                .shards(1)
+                .workers_per_shard(1)
+                .elastic(ElasticConfig::default().autoscale(false)),
+            |_s, _w| node_fn(|x: u64| x),
+        );
+        h.set_priority(Priority::High);
+        assert_eq!(h.priority(), Priority::High);
+        let t = h.offload_job(7).unwrap();
+        h.set_priority(Priority::Low);
+        h.offload(9).unwrap();
+        h.finish().unwrap();
+        pool.offload_eos();
+        let mut got = vec![];
+        while let Some(v) = pool.load_result() {
+            got.push(v);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![7, 9]);
+        assert_eq!(t.state(), JobState::Started);
+        pool.wait();
+    }
+
+    #[test]
+    fn legacy_pool_stats_report_all_shards_live() {
+        let (mut pool, h) = square_pool(3, 1);
+        let s = pool.stats();
+        assert_eq!(s.shards, 3);
+        assert_eq!(s.live_shards, 3);
+        assert_eq!(s.steals + s.cancelled_jobs + s.scale_ups + s.scale_downs, 0);
+        drop(h);
+        pool.offload_eos();
+        while pool.load_result().is_some() {}
         pool.wait();
     }
 

@@ -119,6 +119,31 @@ pub fn stream<T: Send>(cap: usize) -> (Sender<T>, Receiver<T>) {
     )
 }
 
+/// Create a bounded stream on a **stealable** ring
+/// ([`spsc::spsc_stealable`]): the sender additionally supports
+/// [`Sender::try_unsend`], revoking the most recently sent,
+/// not-yet-consumed frame. This is the steal window of the elastic pool
+/// (ISSUE 9): an overloaded client lane's tail frames can be pulled back
+/// by their *producer-side owner* and re-routed, while the consumer keeps
+/// the plain FIFO view. Slot claims upgrade to one CAS per frame on this
+/// flavor — default streams keep the load/store-only FastForward path.
+pub fn stream_stealable<T: Send>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let (p, c) = spsc::spsc_stealable(cap);
+    let (batch_pool, batch_return) = BatchPool::with_cap(DEFAULT_BATCH_CAP);
+    (
+        Sender {
+            tx: TxFlavor::Bounded(p),
+            push_retries: 0,
+            batch_pool,
+        },
+        Receiver {
+            rx: RxFlavor::Bounded(c),
+            pop_retries: 0,
+            batch_return,
+        },
+    )
+}
+
 /// Create an unbounded stream (accelerator offload/result channels).
 pub fn stream_unbounded<T: Send>() -> (Sender<T>, Receiver<T>) {
     let (p, c) = spsc::unbounded_spsc();
@@ -292,6 +317,22 @@ impl<T: Send> Sender<T> {
             };
         }
         self.send(task)
+    }
+
+    /// Revoke the most recently sent frame that the receiver has not yet
+    /// consumed (staged multipush frames first, then — on streams built
+    /// with [`stream_stealable`] — the newest published queue slot, via
+    /// an exactly-once CAS claim against the consumer). `None` when
+    /// nothing is revocable: the stream is empty, the receiver already
+    /// claimed the tail frame, or this is a plain/unbounded stream with
+    /// an empty stage. Frames come back newest-first (LIFO), so FIFO
+    /// order of the surviving frames is untouched.
+    #[inline]
+    pub fn try_unsend(&mut self) -> Option<Msg<T>> {
+        match &mut self.tx {
+            TxFlavor::Bounded(prod) => prod.try_unpush(),
+            TxFlavor::Unbounded(_) => None,
+        }
     }
 
     /// Set the multipush burst width (bounded streams only; clamped
@@ -799,6 +840,42 @@ mod tests {
         assert_eq!(rx.recv(), Msg::Task(7));
         let _ = tx.take_buf();
         assert_eq!(tx.batch_reused(), 1, "stash served the next take");
+    }
+
+    #[test]
+    fn stealable_stream_unsend_lifo() {
+        let (mut tx, mut rx) = stream_stealable::<u32>(8);
+        tx.send(1).unwrap();
+        tx.send_batch(vec![2, 3]).unwrap();
+        assert_eq!(tx.try_unsend(), Some(Msg::Batch(vec![2, 3])));
+        assert_eq!(tx.try_unsend(), Some(Msg::Task(1)));
+        assert_eq!(tx.try_unsend(), None);
+        tx.send(4).unwrap();
+        assert_eq!(rx.recv(), Msg::Task(4), "revoked frames never surface");
+    }
+
+    #[test]
+    fn stealable_stream_unsend_staged_first() {
+        let (mut tx, mut rx) = stream_stealable::<u32>(8);
+        tx.set_burst(4);
+        tx.send(1).unwrap(); // published
+        tx.send_buffered(2).unwrap(); // staged
+        assert_eq!(tx.staged(), 1);
+        assert_eq!(tx.try_unsend(), Some(Msg::Task(2)), "stage drains first");
+        assert_eq!(tx.try_unsend(), Some(Msg::Task(1)), "then the queue tail");
+        drop(tx);
+        assert_eq!(rx.recv(), Msg::Eos);
+    }
+
+    #[test]
+    fn plain_streams_never_unsend_published_frames() {
+        let (mut tx, mut rx) = stream::<u32>(4);
+        tx.send(1).unwrap();
+        assert_eq!(tx.try_unsend(), None);
+        assert_eq!(rx.recv(), Msg::Task(1));
+        let (mut utx, _urx) = stream_unbounded::<u32>();
+        utx.send(1).unwrap();
+        assert_eq!(utx.try_unsend(), None);
     }
 
     #[test]

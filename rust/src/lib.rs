@@ -108,7 +108,8 @@ pub mod util;
 /// the accelerator service tiers, and the node vocabulary.
 pub mod prelude {
     pub use crate::accel::{
-        Accel, AccelError, AccelHandle, AccelPool, FarmAccel, Placement, PoolConfig,
+        Accel, AccelError, AccelHandle, AccelPool, ElasticConfig, FarmAccel, JobState, JobToken,
+        Placement, PoolConfig, PoolStats, Priority,
     };
     pub use crate::farm::{
         farm, feedback, CollectorOrdering, Farm, FarmConfig, Feedback, MasterCtx, MasterLogic,

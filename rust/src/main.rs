@@ -10,6 +10,7 @@
 //! ffctl nqueens   [--n 13] [--depth 4] [--workers N]
 //! ffctl matmul    [--n 256] [--workers N]
 //! ffctl topo      [--threads N] [--shards S] [--mapping topo]
+//! ffctl pool      [--shards S] [--clients M] [--watch K] [--steal off]
 //! ffctl info
 //! ```
 //!
@@ -62,6 +63,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("nqueens") => cmd_nqueens(args),
         Some("matmul") => cmd_matmul(args),
         Some("topo") => cmd_topo(args),
+        Some("pool") => cmd_pool(args),
         Some("serve") => cmd_serve(args),
         Some("netbench") => cmd_netbench(args),
         Some("info") => cmd_info(),
@@ -86,6 +88,7 @@ SUBCOMMANDS
   nqueens   count N-queens solutions once
   matmul    Fig. 3 running example (matrix multiply offload)
   topo      print the discovered machine topology + planned layout
+  pool      elastic-pool dry run: skewed load, live/steal/cancel counters per tick
   serve     run the accelerator as a TCP service (ffnet/1 protocol)
   netbench  loopback saturation sweep: conns x batch x payload -> BENCH_net.json
   info      platform + configuration report
@@ -103,6 +106,13 @@ COMMON OPTIONS
                      pool shard into its own last-level-cache group
   --trace            print per-node trace report
   --csv <dir>        also write tables as CSV
+
+POOL OPTIONS
+  --watch <k>        dry-run ticks: each offloads one skewed (zipf) burst and
+                     prints live/parked shards + steal/cancel/scale counters
+  --tasks <n>        tasks per tick across all clients (default 4000)
+  --grain <g>        busy-work iterations per task (default 2000)
+  --steal off        disable work stealing (on by default)
 
 SERVE / NETBENCH OPTIONS
   --addr <host:port> serve: bind address (default 127.0.0.1:7143)
@@ -395,6 +405,137 @@ fn cmd_topo(args: &Args) -> Result<()> {
         fastflow::sched::pins_attempted(),
         fastflow::sched::pins_failed()
     );
+    Ok(())
+}
+
+/// `ffctl pool`: a watchable dry run of the elastic pool (ISSUE 9) —
+/// the `ffctl topo` of autoscaling. Each `--watch` tick pushes one
+/// Zipf-skewed burst (client `c` carries a `1/(c+1)` share, priorities
+/// rotating High/Normal/Low, a sprinkle of tracked jobs cancelled
+/// in-flight) through a persistent elastic pool, then prints the live
+/// shard count against the configured total, parked threads, and the
+/// steal/cancel/scale counters — so elasticity decisions are
+/// inspectable without writing a benchmark.
+fn cmd_pool(args: &Args) -> Result<()> {
+    use fastflow::accel::{AccelPool, ElasticConfig, PoolConfig, Priority};
+    use fastflow::node::node_fn;
+    use std::time::Duration;
+
+    let cfg = load_config(args)?;
+    let shards = cfg.get_usize("shards", 4);
+    let clients = cfg.get_usize("clients", shards).max(1);
+    let tasks = cfg.get_usize("tasks", 4_000);
+    let grain = u64::from(cfg.get_u32("grain", 2_000));
+    let ticks = cfg.get_usize("watch", 3).max(1);
+    let steal = cfg.get("steal").as_deref() != Some("off");
+    // Spin by default: the arbiter keeps cycling while idle, so the
+    // shrink dwell is observable between ticks (override with --wait).
+    let wait = match cfg.get("wait") {
+        None => fastflow::util::WaitMode::Spin,
+        Some(_) => parse_wait(&cfg)?,
+    };
+    let (mut pool, root) = AccelPool::run(
+        PoolConfig::default()
+            .shards(shards)
+            .batch(cfg.get_usize("batch", 8))
+            .wait(wait)
+            .elastic(
+                ElasticConfig::default()
+                    .steal(steal)
+                    .min_live(1)
+                    .grow_dwell(Duration::from_micros(100))
+                    .shrink_dwell(Duration::from_millis(50)),
+            ),
+        |_s, _w| {
+            node_fn(move |x: u64| {
+                spin_work(grain + (x & 63));
+                x
+            })
+        },
+    );
+    println!(
+        "pool: {shards} shards (min_live 1), steal {}, {clients} zipf client(s) x {tasks} \
+         tasks/tick, grain {grain}",
+        if steal { "on" } else { "off" }
+    );
+    // Zipf(s=1) shares; the head client absorbs the remainder.
+    let h: f64 = (1..=clients).map(|c| 1.0 / c as f64).sum();
+    let mut counts: Vec<u64> = (1..=clients)
+        .map(|c| (tasks as f64 / (h * c as f64)) as u64)
+        .collect();
+    let assigned: u64 = counts.iter().sum();
+    counts[0] += tasks as u64 - assigned;
+    for tick in 0..ticks {
+        let joins: Vec<_> = counts
+            .iter()
+            .copied()
+            .enumerate()
+            .map(|(c, n)| {
+                let mut h = root.clone();
+                std::thread::spawn(move || {
+                    h.set_priority(match c % 3 {
+                        0 => Priority::High,
+                        1 => Priority::Normal,
+                        _ => Priority::Low,
+                    })
+                    .unwrap();
+                    let mut cancelled = 0u64;
+                    for i in 0..n {
+                        let v = ((c as u64) << 32) | i;
+                        if i % 97 == 0 {
+                            let t = h.offload_job(v).unwrap();
+                            if i % 194 == 0 && t.cancel() {
+                                cancelled += 1;
+                            }
+                        } else {
+                            h.offload(v).unwrap();
+                        }
+                    }
+                    h.finish().unwrap();
+                    cancelled
+                })
+            })
+            .collect();
+        let cancelled: u64 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        let expect = counts.iter().sum::<u64>() - cancelled;
+        for _ in 0..expect {
+            pool.load_result()
+                .ok_or("pool closed mid-tick (lost results)")?;
+        }
+        let s = pool.stats();
+        println!(
+            "  tick {tick}: live {}/{} | backlog {} | steals {} ({} items) | cancelled {} \
+             job(s), {} item(s) | scale +{}/-{} | parked threads {}",
+            s.live_shards,
+            s.shards,
+            s.backlog,
+            s.steals,
+            s.stolen_items,
+            s.cancelled_jobs,
+            s.cancelled_items,
+            s.scale_ups,
+            s.scale_downs,
+            pool.parked_threads()
+        );
+        // Let the shrink dwell elapse so the next tick starts from the
+        // scaled-down live set (warm-standby shards, PR 5).
+        std::thread::sleep(Duration::from_millis(120));
+    }
+    let s = pool.stats();
+    println!(
+        "  idle: live {}/{} | scale +{}/-{} | parked threads {}",
+        s.live_shards,
+        s.shards,
+        s.scale_ups,
+        s.scale_downs,
+        pool.parked_threads()
+    );
+    drop(root);
+    pool.offload_eos();
+    if pool.load_result().is_some() {
+        return fail("unexpected trailing result after drain".to_string());
+    }
+    pool.wait();
     Ok(())
 }
 

@@ -32,8 +32,13 @@
 //!
 //! ## Hostile-client containment (the PR 5 machinery)
 //!
-//! * **Mid-stream disconnect** — the reader observes EOF/reset, drops
-//!   its handle (closing its lane like any in-process client), and the
+//! * **Mid-stream disconnect** — the reader **cancels** the
+//!   connection's queued-but-unstarted work first: every admitted frame
+//!   is a tracked job ([`crate::accel::JobToken`]), so frames the
+//!   arbiter has not yet claimed are revoked (cancel ≡ never-submitted
+//!   — the pool never burns shard time for a client that is gone;
+//!   counted in [`NetStats::cancelled_jobs`]). Then it drops its handle
+//!   (closing its lane like any in-process client), and the
 //!   pool keeps serving everyone else. Should a lane nevertheless be
 //!   leaked, the drain's blocking [`AccelPool::load_result`] fires
 //!   `ForceClose` after [`crate::accel::PoolConfig::disconnect_grace`]
@@ -56,7 +61,7 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::accel::{AccelError, AccelHandle, AccelPool, PoolConfig};
+use crate::accel::{AccelError, AccelHandle, AccelPool, JobToken, PoolConfig, Priority};
 use crate::net::frame::{self, Frame, FrameDecoder, Kind, Wire, DEFAULT_MAX_FRAME, HELLO_LEN};
 use crate::node::node_fn;
 use crate::trace::TraceReport;
@@ -98,6 +103,13 @@ pub struct ServerConfig {
     /// progress for this long (slowloris containment). Also the
     /// handshake deadline.
     pub stall_timeout: Duration,
+    /// Priority class stamped on every connection's offloads (bites
+    /// under an elastic pool, [`PoolConfig::elastic`]): run a bulk
+    /// ingest service at [`Priority::Low`] next to an interactive pool
+    /// without a wire change. Per-connection negotiation would need a
+    /// `ffnet/2` hello field — until then the whole server shares one
+    /// class.
+    pub priority: Priority,
 }
 
 impl Default for ServerConfig {
@@ -109,6 +121,7 @@ impl Default for ServerConfig {
             accept_tick: Duration::from_millis(20),
             read_tick: Duration::from_millis(50),
             stall_timeout: Duration::from_secs(2),
+            priority: Priority::Normal,
         }
     }
 }
@@ -138,6 +151,13 @@ impl ServerConfig {
         self.read_tick = d;
         self
     }
+
+    /// Priority class for every connection's offloads (see
+    /// [`field@ServerConfig::priority`]).
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
 }
 
 /// Lifetime counters, kept on relaxed atomics (observability only).
@@ -150,6 +170,8 @@ struct Counters {
     shed_frames: AtomicU64,
     shed_items: AtomicU64,
     admitted_items: AtomicU64,
+    cancelled_jobs: AtomicU64,
+    cancelled_items: AtomicU64,
 }
 
 /// Point-in-time snapshot of the server's connection/admission
@@ -172,6 +194,12 @@ pub struct NetStats {
     pub shed_items: u64,
     /// Items admitted into the pool.
     pub admitted_items: u64,
+    /// Admitted-but-unstarted jobs revoked when their connection died
+    /// (the cancel won, so the pool never dispatched them — cancel ≡
+    /// never-submitted).
+    pub cancelled_jobs: u64,
+    /// Items inside those cancelled jobs.
+    pub cancelled_items: u64,
 }
 
 impl Counters {
@@ -184,6 +212,8 @@ impl Counters {
             shed_frames: self.shed_frames.load(Ordering::Relaxed),
             shed_items: self.shed_items.load(Ordering::Relaxed),
             admitted_items: self.admitted_items.load(Ordering::Relaxed),
+            cancelled_jobs: self.cancelled_jobs.load(Ordering::Relaxed),
+            cancelled_items: self.cancelled_items.load(Ordering::Relaxed),
         }
     }
 }
@@ -493,12 +523,19 @@ fn reader_thread<I: Wire, O: Wire>(
         }
     };
 
+    // Every offload from this connection carries the server's priority
+    // class (bites under an elastic pool; free otherwise).
+    handle.set_priority(cfg.priority);
     let window = cfg.window as u64;
     let mut dec = FrameDecoder::new(cfg.max_frame);
     // Local recycle stack: shed frames give their buffers straight
     // back; admitted ones come back through the handle's BatchPool lane
     // (`take_batch_buf`). Steady state allocates nothing per frame.
     let mut spare: Vec<Vec<Tagged<I>>> = Vec::new();
+    // One JobToken per admitted frame, so a dead connection's
+    // queued-but-unstarted work can be revoked instead of drained.
+    // Settled tokens (dispatched already) are pruned as we go.
+    let mut tokens: Vec<(JobToken, u64)> = Vec::new();
     let mut rbuf = [0u8; 16 * 1024];
     let mut last_progress = Instant::now();
     let mut clean = false;
@@ -536,9 +573,13 @@ fn reader_thread<I: Wire, O: Wire>(
                     } else {
                         in_flight.fetch_add(n, Ordering::AcqRel);
                         counters.admitted_items.fetch_add(n, Ordering::Relaxed);
-                        if handle.offload_batch(items).is_err() {
-                            // Pool gone (poisoned); nothing to serve.
-                            break 'conn;
+                        tokens.retain(|(t, _)| !t.is_settled());
+                        match handle.offload_batch_job(items) {
+                            Ok(token) => tokens.push((token, n)),
+                            Err(_) => {
+                                // Pool gone (poisoned); nothing to serve.
+                                break 'conn;
+                            }
                         }
                     }
                 }
@@ -583,6 +624,22 @@ fn reader_thread<I: Wire, O: Wire>(
     }
 
     if !clean {
+        // The connection died mid-stream: revoke whatever the arbiter
+        // has not claimed yet. Each cancel either wins (the frame never
+        // reaches a shard — cancel ≡ never-submitted) or loses (already
+        // dispatched; its results are discarded by the drain once the
+        // writer is gone). Exactly one outcome per job.
+        let (mut cj, mut ci) = (0u64, 0u64);
+        for (t, n) in tokens.drain(..) {
+            if t.cancel() {
+                cj += 1;
+                ci += n;
+            }
+        }
+        if cj > 0 {
+            counters.cancelled_jobs.fetch_add(cj, Ordering::Relaxed);
+            counters.cancelled_items.fetch_add(ci, Ordering::Relaxed);
+        }
         let _ = wtx.send(WriterMsg::ReaderGone);
     }
     // Drop our sender before joining: once the drain also lets go of

@@ -359,6 +359,52 @@ pub fn spmc_default<T: Send + 'static>(
     spmc(consumers, DEFAULT_QUEUE_CAP)
 }
 
+/// Rebalance the **tails** of two lanes owned by the same producer
+/// thread — the elastic pool's steal handle in standalone arbiter form:
+/// revoke up to `max` published-but-undispatched frames from the back
+/// of `from` (newest first, i.e. work its consumer has *not* yet
+/// observed) and re-publish them on `to`.
+///
+/// Both lanes stay strictly SPSC: the caller holds `&mut` on both
+/// senders, so the single-producer discipline is enforced at compile
+/// time, and the only consumer-side cooperation needed is the stealable
+/// ring's per-slot claim protocol ([`crate::spsc::spsc_stealable`] /
+/// [`crate::channel::stream_stealable`]). Frames move whole (a batch is
+/// never split, keeping its single-synchronization economy) and EOS is
+/// never moved: a revoked close marker is pushed straight back and the
+/// rebalance stops. Lanes over plain rings or unbounded streams refuse
+/// to unsend *published* frames, so only their staged (multipush) tail
+/// can move. A `to` lane that dies mid-move behaves like any send to a
+/// dead lane: the frame is dropped with the send error.
+///
+/// Returns the number of frames moved.
+pub fn rebalance_tail<T: Send>(from: &mut Sender<T>, to: &mut Sender<T>, max: usize) -> usize {
+    let mut moved = 0usize;
+    while moved < max && to.peer_alive() && !to.is_full() {
+        match from.try_unsend() {
+            None => break,
+            Some(Msg::Eos) => {
+                // Never move a close marker between lanes.
+                let _ = from.send_eos();
+                break;
+            }
+            Some(Msg::Task(t)) => {
+                if to.send(t).is_err() {
+                    break;
+                }
+                moved += 1;
+            }
+            Some(Msg::Batch(ts)) => {
+                if to.send_batch(ts).is_err() {
+                    break;
+                }
+                moved += 1;
+            }
+        }
+    }
+    moved
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -566,6 +612,55 @@ mod tests {
         }
         drop(txs);
         arbiter.join().unwrap(); // must not hang
+    }
+
+    #[test]
+    fn rebalance_tail_moves_published_frames() {
+        use crate::channel::stream_stealable;
+        let (mut a_tx, mut a_rx) = stream_stealable::<u64>(16);
+        let (mut b_tx, mut b_rx) = stream_stealable::<u64>(16);
+        for i in 0..6u64 {
+            a_tx.send(i).unwrap();
+        }
+        // Tail steal is newest-first: 5 then 4 move, 0..=3 stay put.
+        let moved = rebalance_tail(&mut a_tx, &mut b_tx, 2);
+        assert_eq!(moved, 2);
+        a_tx.send_eos().unwrap();
+        b_tx.send_eos().unwrap();
+        assert_eq!(drain_all(&mut a_rx), vec![0, 1, 2, 3]);
+        assert_eq!(drain_all(&mut b_rx), vec![5, 4]);
+    }
+
+    #[test]
+    fn rebalance_tail_never_moves_eos() {
+        use crate::channel::stream_stealable;
+        let (mut a_tx, mut a_rx) = stream_stealable::<u64>(8);
+        let (mut b_tx, mut b_rx) = stream_stealable::<u64>(8);
+        a_tx.send(1).unwrap();
+        a_tx.send_eos().unwrap();
+        // The newest frame is the close marker: it must bounce back,
+        // terminating the rebalance with nothing moved.
+        let moved = rebalance_tail(&mut a_tx, &mut b_tx, 4);
+        assert_eq!(moved, 0);
+        b_tx.send_eos().unwrap();
+        assert_eq!(drain_all(&mut a_rx), vec![1]);
+        assert_eq!(drain_all(&mut b_rx), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn rebalance_tail_respects_plain_rings() {
+        // Published frames on a non-stealable ring are out of reach —
+        // the helper must move nothing rather than corrupt the queue.
+        let (mut a_tx, mut a_rx) = stream::<u64>(8);
+        let (mut b_tx, mut b_rx) = stream_stealable::<u64>(8);
+        for i in 0..4u64 {
+            a_tx.send(i).unwrap();
+        }
+        assert_eq!(rebalance_tail(&mut a_tx, &mut b_tx, 4), 0);
+        a_tx.send_eos().unwrap();
+        b_tx.send_eos().unwrap();
+        assert_eq!(drain_all(&mut a_rx), vec![0, 1, 2, 3]);
+        assert_eq!(drain_all(&mut b_rx), Vec::<u64>::new());
     }
 
     #[test]

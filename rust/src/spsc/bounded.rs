@@ -11,13 +11,32 @@
 //! holding the indices are never invalidated by the partner — unlike
 //! Lamport's queue ([`crate::baseline::lamport`]) where every operation
 //! reads both indices.
+//!
+//! ## The steal window (`spsc_stealable`)
+//!
+//! A *stealable* ring ([`spsc_stealable`]) additionally lets the
+//! **producer** revoke its own newest published-but-unconsumed frame
+//! ([`Producer::try_unpush`]) — the primitive behind the elastic pool's
+//! work stealing (ISSUE 9): an arbiter that already forwarded frames to
+//! an overloaded lane can pull them back from the *tail* and re-route
+//! them, while the consumer keeps draining the head. Single-producer
+//! discipline is preserved — no third thread ever touches the ring; the
+//! producer itself is the steal handle.
+//!
+//! The occupancy flag becomes a three-state cell (`EMPTY`/`FULL`/`BUSY`)
+//! and the two racing claims — consumer pop at `pread`, producer unpush
+//! at `pwrite - 1` — each take a slot with one `FULL → BUSY` CAS, so a
+//! frame is delivered **exactly once**: popped or revoked, never both,
+//! never neither (model-checked in `tests/loom/elastic.rs`). Default
+//! rings never take the CAS path (a per-ring flag gates it) and keep
+//! the original plain load/store handshake.
 
 use std::mem::MaybeUninit;
 use std::sync::Arc;
 use std::time::Duration;
 
 use super::Full;
-use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use crate::sync::UnsafeCell;
 use crate::util::{Backoff, CachePadded, Doorbell, ParkGauge, WaitMode};
 
@@ -41,16 +60,24 @@ pub fn lost_frames() -> u64 {
     LOST_FRAMES.load(Ordering::Relaxed)
 }
 
+/// Slot occupancy states. Default rings only ever use `EMPTY`/`FULL`
+/// (plain load/store, exactly the original two-state handshake);
+/// stealable rings transition through `BUSY` while a claimant (consumer
+/// pop or producer unpush) is mid-read.
+const EMPTY: u8 = 0;
+const FULL: u8 = 1;
+const BUSY: u8 = 2;
+
 /// One ring slot: occupancy flag + storage.
 struct Slot<T> {
-    full: AtomicBool,
+    flag: AtomicU8,
     value: UnsafeCell<MaybeUninit<T>>,
 }
 
 impl<T> Slot<T> {
     fn empty() -> Self {
         Slot {
-            full: AtomicBool::new(false),
+            flag: AtomicU8::new(EMPTY),
             value: UnsafeCell::new(MaybeUninit::uninit()),
         }
     }
@@ -76,6 +103,10 @@ struct Ring<T> {
     /// co-hosted pipelines) don't cross-talk through the process-global
     /// [`lost_frames`] aggregate.
     lost: AtomicU64,
+    /// Set at construction ([`spsc_stealable`]): gates the `FULL → BUSY`
+    /// CAS claims. Plain (non-atomic) — written once before the handles
+    /// exist, read-only afterwards.
+    stealable: bool,
 }
 
 // SAFETY: Slot values are transferred with Release/Acquire handshakes on
@@ -126,6 +157,19 @@ pub struct Consumer<T> {
 
 /// Create a bounded SPSC queue with room for `cap` elements (`cap >= 1`).
 pub fn spsc<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
+    make(cap, false)
+}
+
+/// Create a bounded SPSC queue with a **steal window**: the producer
+/// may additionally revoke its newest published-but-unconsumed frame
+/// with [`Producer::try_unpush`] (tail steal). Costs one CAS per pop
+/// instead of a plain load/store pair — use only where revocation is
+/// actually needed (default rings via [`spsc`] are unchanged).
+pub fn spsc_stealable<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
+    make(cap, true)
+}
+
+fn make<T: Send>(cap: usize, stealable: bool) -> (Producer<T>, Consumer<T>) {
     assert!(cap >= 1, "spsc capacity must be >= 1");
     let slots: Box<[Slot<T>]> = (0..cap).map(|_| Slot::empty()).collect();
     let ring = Arc::new(Ring {
@@ -135,6 +179,7 @@ pub fn spsc<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
         data_bell: CachePadded::new(Doorbell::new()),
         space_bell: CachePadded::new(Doorbell::new()),
         lost: AtomicU64::new(0),
+        stealable,
     });
     (
         Producer {
@@ -173,19 +218,22 @@ impl<T: Send> Producer<T> {
             "try_push with staged multipush frames — flush() first"
         );
         let slot = &self.ring.slots[self.pwrite];
-        if slot.full.load(Ordering::Acquire) {
+        if slot.flag.load(Ordering::Acquire) != EMPTY {
+            // FULL, or (stealable rings) BUSY — a claimant mid-read
+            // still owns the slot either way.
             return Err(Full(value));
         }
-        // SAFETY: `full == false` means the producer owns this slot —
-        // the consumer last cleared it with a Release store our Acquire
-        // load above synchronized with, so its read of any prior value
+        // SAFETY: `flag == EMPTY` means the producer owns this slot —
+        // the claimant (consumer pop, or our own earlier unpush) last
+        // cleared it with a Release store our Acquire load above
+        // synchronized with, so its read of any prior value
         // happens-before this write; it will not touch the slot again
-        // until it observes the `full == true` Release below. Writing
+        // until it observes the `flag == FULL` Release below. Writing
         // through the raw pointer is a plain `MaybeUninit::write` (no
         // drop of the uninit contents). Model-checked in
         // `tests/loom/bounded.rs`.
         slot.value.with_mut(|p| unsafe { (*p).write(value) });
-        slot.full.store(true, Ordering::Release);
+        slot.flag.store(FULL, Ordering::Release);
         self.pwrite = if self.pwrite + 1 == self.cap {
             0
         } else {
@@ -286,8 +334,9 @@ impl<T: Send> Producer<T> {
             return true;
         }
         self.ring.slots[(self.pwrite + staged) % self.cap]
-            .full
+            .flag
             .load(Ordering::Acquire)
+            != EMPTY
     }
 
     /// Whether the consumer half still exists.
@@ -306,8 +355,61 @@ impl<T: Send> Producer<T> {
         self.ring
             .slots
             .iter()
-            .filter(|s| s.full.load(Ordering::Relaxed))
+            .filter(|s| s.flag.load(Ordering::Relaxed) == FULL)
             .count()
+    }
+
+    /// **Tail steal** (stealable rings only — see [`spsc_stealable`]):
+    /// revoke the newest frame this producer published that the
+    /// consumer has not consumed yet, returning it. Staged multipush
+    /// frames are revoked first (newest first — they are the tail of
+    /// the logical stream); then the slot at `pwrite - 1` is claimed
+    /// with a `FULL → BUSY` CAS racing the consumer's pop of that same
+    /// slot, so the frame is delivered exactly once: here or there,
+    /// never both. `None` when there is nothing revocable (ring empty,
+    /// consumer already claimed the last frame, or the ring is not
+    /// stealable).
+    ///
+    /// Still single-producer: only this handle may call it, so `pwrite`
+    /// stays producer-owned and the FastForward no-shared-index
+    /// property holds.
+    pub fn try_unpush(&mut self) -> Option<T> {
+        if let Some(v) = self.mbuf.pop() {
+            return Some(v);
+        }
+        if !self.ring.stealable {
+            return None;
+        }
+        let prev = if self.pwrite == 0 {
+            self.cap - 1
+        } else {
+            self.pwrite - 1
+        };
+        let slot = &self.ring.slots[prev];
+        if slot
+            .flag
+            .compare_exchange(FULL, BUSY, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            // EMPTY (nothing published / consumer drained past it) or
+            // BUSY (consumer mid-pop of the very frame we wanted — it
+            // wins; the tail moves on).
+            return None;
+        }
+        // SAFETY: the successful `FULL -> BUSY` CAS claimed the slot
+        // exclusively: the consumer's pop claims slots with the same
+        // CAS, so at most one side ever reads a given published value
+        // (model-checked in `tests/loom/elastic.rs`). We wrote the
+        // value ourselves, and the AcqRel CAS orders this read after
+        // that write on every path. The bits left behind are treated
+        // as uninitialized, never dropped.
+        let value = slot.value.with(|p| unsafe { (*p).assume_init_read() });
+        slot.flag.store(EMPTY, Ordering::Release);
+        self.pwrite = prev;
+        // The slot freed is *behind* the consumer's view, not ahead of
+        // it — no space_bell ring needed (nothing a full-ring waiter
+        // could use opened up that `try_push` at pwrite won't see).
+        Some(value)
     }
 }
 
@@ -390,8 +492,9 @@ impl<T> Producer<T> {
         let n = self.mbuf.len();
         n > 0
             && self.ring.slots[(self.pwrite + n - 1) % self.cap]
-                .full
+                .flag
                 .load(Ordering::Acquire)
+                != EMPTY
     }
 
     /// Snooze-or-park while `still_blocked` holds, on the space
@@ -440,7 +543,7 @@ impl<T> Producer<T> {
         let base = self.pwrite;
         let cap = self.cap;
         let last = (base + len - 1) % cap;
-        if self.ring.slots[last].full.load(Ordering::Acquire) {
+        if self.ring.slots[last].flag.load(Ordering::Acquire) != EMPTY {
             return false;
         }
         {
@@ -449,14 +552,16 @@ impl<T> Producer<T> {
                 let slot = &ring.slots[(base + i) % cap];
                 // SAFETY: slot `base + i` is empty by the contiguity
                 // argument above (`i <= len - 1` and the *last* slot's
-                // Acquire load returned false; the consumer clears in
+                // Acquire load returned EMPTY; the consumer clears in
                 // ring order, and that single Acquire happens-after its
-                // reads of every earlier slot in the run). The consumer
-                // reads `v` only after the per-slot Release store.
-                // Model-checked in `tests/loom/bounded.rs`
-                // (multipush_publish_vs_pop).
+                // reads of every earlier slot in the run — on stealable
+                // rings a claimant holds a slot as BUSY until its
+                // Release to EMPTY, so EMPTY still implies the read
+                // finished). The consumer reads `v` only after the
+                // per-slot Release store. Model-checked in
+                // `tests/loom/bounded.rs` (multipush_publish_vs_pop).
                 slot.value.with_mut(|p| unsafe { (*p).write(v) });
-                slot.full.store(true, Ordering::Release);
+                slot.flag.store(FULL, Ordering::Release);
             }
         }
         self.pwrite = (base + len) % cap;
@@ -493,19 +598,35 @@ impl<T: Send> Consumer<T> {
     #[inline]
     pub fn try_pop(&mut self) -> Option<T> {
         let slot = &self.ring.slots[self.pread];
-        if !slot.full.load(Ordering::Acquire) {
+        if self.ring.stealable {
+            // Stealable ring: claim the slot with the same FULL -> BUSY
+            // CAS the producer's `try_unpush` uses, so a pop racing an
+            // unpush of the same frame resolves to exactly one owner.
+            // A failed CAS saw EMPTY (nothing published) or BUSY (the
+            // producer mid-revoke — the frame is leaving, not ours).
+            if slot
+                .flag
+                .compare_exchange(FULL, BUSY, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                return None;
+            }
+        } else if slot.flag.load(Ordering::Acquire) != FULL {
             return None;
         }
-        // SAFETY: the Acquire load of `full == true` synchronizes with
-        // the producer's Release store, so the producer's write of the
-        // value happens-before this read and the slot is initialized.
-        // The producer will not rewrite the slot until it observes the
-        // `full == false` Release below, which happens-after this read —
-        // so ownership of `value` transfers uniquely to us (the bits
-        // left behind are treated as uninitialized, never dropped).
-        // Model-checked in `tests/loom/bounded.rs`.
+        // SAFETY: the Acquire of `flag == FULL` (plain load, or the
+        // successful exclusive CAS claim on stealable rings)
+        // synchronizes with the producer's Release store, so the
+        // producer's write of the value happens-before this read and
+        // the slot is initialized. The producer will not rewrite the
+        // slot until it observes the `flag == EMPTY` Release below,
+        // which happens-after this read — so ownership of `value`
+        // transfers uniquely to us (the bits left behind are treated as
+        // uninitialized, never dropped). Model-checked in
+        // `tests/loom/bounded.rs` and (CAS path)
+        // `tests/loom/elastic.rs`.
         let value = slot.value.with(|p| unsafe { (*p).assume_init_read() });
-        slot.full.store(false, Ordering::Release);
+        slot.flag.store(EMPTY, Ordering::Release);
         self.pread = if self.pread + 1 == self.cap {
             0
         } else {
@@ -581,10 +702,13 @@ impl<T: Send> Consumer<T> {
         &self.ring.data_bell
     }
 
-    /// Peek whether something is ready without consuming it.
+    /// Peek whether something is ready without consuming it. (On a
+    /// stealable ring a `true` answer can be invalidated by a
+    /// concurrent [`Producer::try_unpush`] of that same frame — like
+    /// any peek it is advisory, `try_pop` is the claim.)
     #[inline]
     pub fn has_next(&self) -> bool {
-        self.ring.slots[self.pread].full.load(Ordering::Acquire)
+        self.ring.slots[self.pread].flag.load(Ordering::Acquire) == FULL
     }
 
     #[inline]
@@ -604,7 +728,7 @@ impl<T: Send> Consumer<T> {
         self.ring
             .slots
             .iter()
-            .filter(|s| s.full.load(Ordering::Relaxed))
+            .filter(|s| s.flag.load(Ordering::Relaxed) == FULL)
             .count()
     }
 }
@@ -667,9 +791,10 @@ impl<T> Drop for Ring<T> {
         // release/acquire on the refcount ordered every queue operation
         // before this destructor.
         for slot in self.slots.iter() {
-            if slot.full.load(Ordering::Relaxed) {
-                // SAFETY: `full == true` means the producer initialized
-                // the slot and the consumer never read it; we have
+            if slot.flag.load(Ordering::Relaxed) == FULL {
+                // SAFETY: `flag == FULL` means the producer initialized
+                // the slot and no claimant read it (a BUSY claim always
+                // completes to EMPTY before its handle drops); we have
                 // `&mut self`, so this is the only access and each slot
                 // is dropped at most once.
                 slot.value.with_mut(|p| unsafe { (*p).assume_init_drop() });
@@ -1082,5 +1207,109 @@ mod tests {
         }
         producer.join().unwrap();
         assert_eq!(sum, N * (N - 1) / 2);
+    }
+
+    // ---- steal window (`spsc_stealable` / `try_unpush`) ----
+
+    #[test]
+    fn unpush_revokes_newest_first() {
+        let (mut p, mut c) = spsc_stealable::<u32>(8);
+        p.try_push(1).unwrap();
+        p.try_push(2).unwrap();
+        p.try_push(3).unwrap();
+        assert_eq!(p.try_unpush(), Some(3), "LIFO from the tail");
+        assert_eq!(p.try_unpush(), Some(2));
+        // Ring keeps working after revocations: slot 1 is free again.
+        p.try_push(4).unwrap();
+        assert_eq!(c.try_pop(), Some(1), "FIFO intact for survivors");
+        assert_eq!(c.try_pop(), Some(4));
+        assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn unpush_empty_ring_is_none() {
+        let (mut p, mut c) = spsc_stealable::<u32>(4);
+        assert_eq!(p.try_unpush(), None);
+        p.try_push(5).unwrap();
+        assert_eq!(c.try_pop(), Some(5));
+        assert_eq!(p.try_unpush(), None, "consumed frames cannot be revoked");
+    }
+
+    #[test]
+    fn unpush_prefers_staged_frames() {
+        let (mut p, mut c) = spsc_stealable::<u32>(8);
+        p.set_burst(4);
+        p.push_buffered(1).unwrap();
+        p.push_buffered(2).unwrap();
+        assert_eq!(p.staged(), 2);
+        assert_eq!(p.try_unpush(), Some(2), "staged mbuf drains first, LIFO");
+        assert_eq!(p.staged(), 1);
+        assert!(p.flush());
+        assert_eq!(p.try_unpush(), Some(1), "then published slots");
+        assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn unpush_disabled_on_default_rings() {
+        let (mut p, mut c) = spsc::<u32>(4);
+        p.try_push(1).unwrap();
+        assert_eq!(p.try_unpush(), None, "plain rings never revoke slots");
+        // Staged frames are producer-local, so those still revoke.
+        p.set_burst(3);
+        p.push_buffered(2).unwrap();
+        assert_eq!(p.try_unpush(), Some(2));
+        assert_eq!(c.try_pop(), Some(1));
+    }
+
+    #[test]
+    fn unpush_wraps_backwards_at_slot_zero() {
+        let (mut p, mut c) = spsc_stealable::<u32>(4);
+        // Advance pwrite to 0 by a full lap.
+        for i in 0..4 {
+            p.try_push(i).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(c.try_pop(), Some(i));
+        }
+        p.try_push(42).unwrap(); // lives in slot 0; pwrite back to 0 on unpush
+        assert_eq!(p.try_unpush(), Some(42));
+        assert_eq!(p.try_unpush(), None);
+        p.try_push(43).unwrap();
+        assert_eq!(c.try_pop(), Some(43));
+    }
+
+    #[test]
+    fn pop_vs_unpush_exactly_once() {
+        // Std smoke of the claim race the loom model checks
+        // exhaustively: every frame is observed by exactly one side.
+        const ROUNDS: usize = if cfg!(miri) { 50 } else { 2_000 };
+        for _ in 0..ROUNDS {
+            let (mut p, mut c) = spsc_stealable::<u32>(2);
+            p.try_push(7).unwrap();
+            let thief = std::thread::spawn(move || (p.try_unpush().is_some(), p));
+            let popped = c.try_pop().is_some();
+            let (unpushed, _p) = thief.join().unwrap();
+            assert!(
+                popped ^ unpushed,
+                "exactly one claimant (popped={popped}, unpushed={unpushed})"
+            );
+        }
+    }
+
+    #[test]
+    fn stealable_ring_full_fifo_across_threads() {
+        // The tri-state flag must not perturb the ordinary handshake.
+        const N: usize = if cfg!(miri) { 400 } else { 30_000 };
+        let (mut p, mut c) = spsc_stealable::<usize>(64);
+        let producer = std::thread::spawn(move || {
+            for i in 0..N {
+                p.push(i).unwrap();
+            }
+        });
+        for expect in 0..N {
+            assert_eq!(c.pop(), Some(expect));
+        }
+        producer.join().unwrap();
+        assert_eq!(c.try_pop(), None);
     }
 }

@@ -38,7 +38,7 @@ pub mod bounded;
 pub mod ptr;
 pub mod unbounded;
 
-pub use bounded::{spsc, Consumer, Producer};
+pub use bounded::{spsc, spsc_stealable, Consumer, Producer};
 pub use unbounded::{unbounded_spsc, UnboundedConsumer, UnboundedProducer};
 
 /// Error returned by `try_push` when the queue is full: hands the value

@@ -1,0 +1,147 @@
+//! Models for the elastic pool's two cross-thread race surfaces
+//! (ISSUE 9): the **cancel-vs-start** CAS on a tracked job's
+//! [`JobCtl`], and the **steal window** of the stealable FastForward
+//! ring — a producer revoking its newest published slot
+//! (`try_unpush`, the primitive behind `queues::rebalance_tail`)
+//! against a consumer concurrently draining.
+//!
+//! Everything else in the elastic arbiter (backlogs, priority lanes,
+//! aging, autoscale) is single-threaded state owned by the arbiter
+//! thread, so these two primitives are the *entire* new concurrent
+//! surface: if each value/job is claimed exactly once here, the pool
+//! can neither double-execute nor drop a frame.
+
+use fastflow::accel::JobCtl;
+use fastflow::spsc::spsc_stealable;
+use loom::thread;
+
+/// The §job.rs state machine: the arbiter's `try_start` and the token's
+/// `cancel` race their CAS edges on the same cell. Exactly one wins in
+/// every interleaving, and the settled state agrees with the winner.
+#[test]
+fn cancel_vs_start_exactly_one_winner() {
+    loom::model(|| {
+        let ctl = JobCtl::new();
+        let token = ctl.clone();
+        let t = thread::spawn(move || token.cancel());
+        let started = ctl.try_start();
+        let cancelled = t.join().unwrap();
+        assert!(
+            started ^ cancelled,
+            "both or neither edge claimed the job (started={started}, cancelled={cancelled})"
+        );
+        use fastflow::accel::JobState;
+        let settled = ctl.state();
+        assert_eq!(
+            settled,
+            if started {
+                JobState::Started
+            } else {
+                JobState::Cancelled
+            },
+            "settled state disagrees with the CAS winner"
+        );
+    });
+}
+
+/// Two token clones cancel from different threads while the arbiter
+/// tries to start: still exactly one winner among the three edges.
+#[test]
+fn double_cancel_vs_start_single_winner() {
+    loom::model(|| {
+        let ctl = JobCtl::new();
+        let (c1, c2) = (ctl.clone(), ctl.clone());
+        let t1 = thread::spawn(move || c1.cancel());
+        let t2 = thread::spawn(move || c2.cancel());
+        let started = ctl.try_start();
+        let wins = [started, t1.join().unwrap(), t2.join().unwrap()]
+            .iter()
+            .filter(|&&w| w)
+            .count();
+        assert_eq!(wins, 1, "the three racing edges must produce one winner");
+    });
+}
+
+/// The steal window's exactly-once claim: with two values published,
+/// the producer revokes from the tail (`try_unpush` CASes the newest
+/// FULL slot to BUSY) while the consumer drains from the head (its own
+/// FULL→BUSY claim). Every value ends up with exactly one owner —
+/// consumer, producer, or still in the ring — and the consumer's view
+/// stays FIFO.
+#[test]
+fn unpush_vs_pop_claims_each_value_once() {
+    loom::model(|| {
+        let (mut p, mut c) = spsc_stealable::<u32>(4);
+        p.try_push(1).unwrap();
+        p.try_push(2).unwrap();
+        let t = thread::spawn(move || {
+            let mut taken = Vec::with_capacity(2);
+            for _ in 0..2 {
+                if let Some(v) = c.try_pop() {
+                    taken.push(v);
+                }
+            }
+            (taken, c)
+        });
+        let revoked = p.try_unpush();
+        let (taken, mut c) = t.join().unwrap();
+        // FIFO: the consumer can only ever see [], [1] or [1, 2].
+        assert!(taken.windows(2).all(|w| w[0] < w[1]), "pop order broke FIFO");
+        let mut seen = taken;
+        if let Some(v) = revoked {
+            seen.push(v);
+        }
+        while let Some(v) = c.try_pop() {
+            seen.push(v);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![1, 2], "a value was dropped or double-claimed");
+    });
+}
+
+/// Wrap-around variant at the tightest stealable capacity: revoke and
+/// re-publish while the consumer races, covering slot-flag reuse
+/// (EMPTY→FULL→BUSY→EMPTY) across the ring boundary.
+#[test]
+fn unpush_republish_wraparound() {
+    loom::model(|| {
+        let (mut p, mut c) = spsc_stealable::<u32>(2);
+        p.try_push(1).unwrap();
+        p.try_push(2).unwrap();
+        let t = thread::spawn(move || {
+            let mut taken = Vec::with_capacity(3);
+            for _ in 0..3 {
+                if let Some(v) = c.try_pop() {
+                    taken.push(v);
+                }
+                thread::yield_now();
+            }
+            (taken, c)
+        });
+        // Revoke the newest slot (if the consumer hasn't raced past it)
+        // and publish a replacement, reusing the freed slot.
+        let revoked = p.try_unpush();
+        let republished = p.try_push(3).is_ok();
+        let (taken, mut c) = t.join().unwrap();
+        let mut seen = taken;
+        if let Some(v) = revoked {
+            seen.push(v);
+        }
+        while let Some(v) = c.try_pop() {
+            seen.push(v);
+        }
+        if !republished {
+            // The ring was full at the re-publish instant; 3 never
+            // entered, so it must not be observable anywhere.
+            assert!(!seen.contains(&3));
+        }
+        seen.sort_unstable();
+        let mut expect = vec![1, 2];
+        if republished {
+            expect.push(3);
+        }
+        // Multiset equality: a double-claim lengthens `seen`, a dropped
+        // value shortens it — either way the compare fails.
+        assert_eq!(seen, expect, "published values not claimed exactly once");
+    });
+}

@@ -25,5 +25,6 @@ mod batch_pool;
 mod bounded;
 mod channel_model;
 mod doorbell;
+mod elastic;
 mod lamport;
 mod unbounded;

@@ -14,7 +14,7 @@
 use std::fs;
 use std::path::PathBuf;
 
-use fastflow::accel::{AccelPool, Placement, PoolConfig};
+use fastflow::accel::{AccelPool, ElasticConfig, Placement, PoolConfig};
 use fastflow::prelude::*;
 use fastflow::topo::TopoSource;
 
@@ -295,4 +295,62 @@ fn spin_identity_pool_multiset() {
     for &policy in &POLICIES[1..] {
         assert_eq!(run(policy), baseline, "pool multiset differs under {policy:?}");
     }
+}
+
+/// Elasticity is a perf knob, never a semantic one: with autoscaling
+/// AND work stealing both enabled, the Spin-mode pool still produces
+/// the exact multiset a plain pool does — stolen frames run on a
+/// different shard, but every result value is bit-identical to the
+/// sequential map.
+#[test]
+fn spin_identity_pool_multiset_elastic() {
+    let clients = 3u64;
+    let per_client = 1_000u64;
+    let run = |elastic: Option<ElasticConfig>| -> Vec<u64> {
+        let mut cfg = PoolConfig::default()
+            .shards(2)
+            .batch(16)
+            .farm(FarmConfig::default().workers(2));
+        if let Some(e) = elastic {
+            cfg = cfg.elastic(e);
+        }
+        let (mut pool, root) = AccelPool::run(cfg, |_s, _w| {
+            node_fn(|x: u64| x.wrapping_mul(3).wrapping_add(1))
+        });
+        let joins: Vec<_> = (0..clients)
+            .map(|c| {
+                let mut h = root.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_client {
+                        h.offload(c * per_client + i).unwrap();
+                    }
+                    h.finish().unwrap();
+                })
+            })
+            .collect();
+        drop(root);
+        pool.offload_eos();
+        let mut got = Vec::with_capacity((clients * per_client) as usize);
+        while let Some(v) = pool.load_result() {
+            got.push(v);
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        pool.wait();
+        got.sort_unstable();
+        got
+    };
+    let baseline = run(None);
+    assert_eq!(baseline.len(), (clients * per_client) as usize);
+    // Defaults enable both steal and autoscale; a tight window plus
+    // min_live(1) forces deferral, stealing and scale-ups to actually
+    // happen on the way to the identical multiset.
+    let elastic = run(Some(
+        ElasticConfig::default()
+            .min_live(1)
+            .window(2)
+            .grow_dwell(std::time::Duration::from_micros(50)),
+    ));
+    assert_eq!(elastic, baseline, "elastic pool multiset differs");
 }
