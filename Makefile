@@ -9,7 +9,7 @@ CARGO  ?= cargo
 PYTHON ?= python
 ARTIFACT_DIR ?= artifacts
 
-.PHONY: all build test test-fallback test-oversub bench bench-smoke bench-diff bench-baseline serve net-smoke doc artifacts fmt clippy lint loom miri tsan pytest clean
+.PHONY: all build test test-fallback test-oversub bench bench-smoke bench-diff bench-baseline serve net-smoke doc artifacts fmt clippy audit lint loom miri tsan pytest clean
 
 # The quick-mode benches that feed the committed perf wall (bench/).
 BENCH_SMOKE_SET = accel_multiclient nested_topologies allocator queue_latency placement steal
@@ -119,8 +119,17 @@ fmt:
 clippy:
 	cd rust && $(CARGO) clippy --all-targets -- -D warnings
 
-# The blocking static-analysis gate CI runs: format + clippy wall.
-lint: fmt clippy
+# The enforced domain-invariant pass (rust/tools/ffaudit): R1 facade,
+# R2 SAFETY, R3 ordering tags, R4 loom coverage, R5 recycling, R6
+# endpoint uniqueness — scanned statically over rust/src. Exits
+# non-zero on any finding (the committed allowlist target is empty)
+# and writes the machine-readable report to $(ARTIFACT_DIR)/audit.json.
+audit:
+	$(CARGO) run --release -p ffaudit -- --json $(ARTIFACT_DIR)/audit.json
+
+# The blocking static-analysis gate CI runs: format + clippy wall +
+# the ffaudit invariant pass.
+lint: fmt clippy audit
 
 # Model-check the lock-free core (bounded/unbounded SPSC, multipush,
 # doorbell handshake, batch pool, stream framing) under loom: the

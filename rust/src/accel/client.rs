@@ -31,6 +31,9 @@
 //! application level (e.g. cap `offloaded` minus observed results per
 //! burst) — a bounded-lane variant is future work.
 
+// ffaudit: allow(facade) — cold-path registration epochs, SeqCst-only
+// and bumped once per handle open/finish; no hot-path or weak-ordering
+// surface for loom to check.
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 

@@ -119,6 +119,8 @@ impl JobCtl {
     /// (Release on the lane) and before the dispatch it gates.
     #[inline]
     pub fn try_start(&self) -> bool {
+        // ordering: elastic — the cancel-vs-start CAS edge; exactly one
+        // winner in every interleaving (model-checked).
         self.state
             .compare_exchange(QUEUED, STARTED, Ordering::AcqRel, Ordering::Acquire)
             .is_ok()
@@ -128,6 +130,7 @@ impl JobCtl {
     /// (the job was still queued and will never run).
     #[inline]
     pub fn cancel(&self) -> bool {
+        // ordering: elastic — the racing revoke edge of the same CAS.
         self.state
             .compare_exchange(QUEUED, CANCELLED, Ordering::AcqRel, Ordering::Acquire)
             .is_ok()
@@ -137,6 +140,8 @@ impl JobCtl {
     /// ordered after the edge that produced it).
     #[inline]
     pub fn state(&self) -> JobState {
+        // ordering: elastic — Acquire so the answer is ordered after the
+        // winning edge.
         match self.state.load(Ordering::Acquire) {
             QUEUED => JobState::Queued,
             STARTED => JobState::Started,

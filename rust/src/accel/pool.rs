@@ -26,6 +26,10 @@
 //! everything and returns the merged trace report.
 
 use std::collections::VecDeque;
+// ffaudit: allow(facade) — pool stat cells only (single-writer gauges
+// and counters); every cross-thread edge in the pool rides the
+// channels, not these atomics, so loom doubles would add model states
+// without checking anything.
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -261,10 +265,12 @@ struct StatsCells {
 impl StatsCells {
     #[inline]
     fn bump(cell: &AtomicU64, by: u64) {
+        // ordering: stat — single-writer (arbiter) counter, no RMW needed.
         cell.store(cell.load(Ordering::Relaxed) + by, Ordering::Relaxed);
     }
     #[inline]
     fn put(cell: &AtomicU64, value: u64) {
+        // ordering: stat — single-writer gauge overwrite.
         cell.store(value, Ordering::Relaxed);
     }
     /// Account a job whose cancel won the dispatch race: count it and
@@ -639,6 +645,7 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
     /// Shards currently receiving admissions: `shards()` on eager and
     /// non-autoscaled pools, the autoscaler's live count otherwise.
     pub fn live_shards(&self) -> usize {
+        // ordering: stat — racy gauge read.
         self.stats.live.load(Ordering::Relaxed) as usize
     }
 
@@ -649,6 +656,8 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
         let s = &self.stats;
         PoolStats {
             shards: self.outputs.len(),
+            // ordering: stat — report-time reads of arbiter-written
+            // cells; staleness is acceptable by design.
             live_shards: s.live.load(Ordering::Relaxed) as usize,
             steals: s.steals.load(Ordering::Relaxed),
             stolen_items: s.stolen_items.load(Ordering::Relaxed),
@@ -674,6 +683,7 @@ impl<I: Send + 'static, O: Send + 'static> AccelPool<I, O> {
     /// only writer, the arbiter only reads).
     fn note_completed(&self, shard: usize) {
         let c = &self.completed[shard];
+        // ordering: stat — single-writer counter feeding a load heuristic.
         c.store(c.load(Ordering::Relaxed) + 1, Ordering::Relaxed);
     }
 
@@ -953,6 +963,8 @@ fn pick_shard(
                 // *tasks*; workers are allowed to emit 0 or ≥2 results
                 // per task (arrival-ordered farms), so the delta is a
                 // load heuristic, not an invariant — saturate it.
+                // ordering: stat — racy heuristic read; a stale count
+                // only skews placement, never correctness.
                 let load = d.saturating_sub(completed[i].load(Ordering::Relaxed));
                 if load < best_load {
                     best_load = load;
@@ -1029,6 +1041,7 @@ fn steal_tail<I>(b: &mut ShardBacklog<I>) -> Option<Backlogged<I>> {
 /// heuristic, not an invariant — saturate it.
 #[inline]
 fn inflight(s: usize, dispatched: &[u64], completed: &[AtomicU64]) -> u64 {
+    // ordering: stat — racy heuristic read (see doc comment).
     dispatched[s].saturating_sub(completed[s].load(Ordering::Relaxed))
 }
 
@@ -1559,6 +1572,8 @@ fn elastic_cycle<I: Send + 'static>(
         // completion happened for STALL_BYPASS, push one frame through
         // regardless of the window.
         if total_backlog > 0 && !dispatched_this_round {
+            // ordering: stat — stall detection over racy counters; the
+            // bypass only needs eventual progress, not precision.
             let done: u64 = completed.iter().map(|c| c.load(Ordering::Relaxed)).sum();
             match stall {
                 Some((t0, seen)) if seen == done => {

@@ -14,6 +14,9 @@
 //! each worker accumulates its solution count locally and publishes at
 //! `svc_end` (shared-memory result, §3.1's single-assignment discipline).
 
+// ffaudit: allow(facade) — one shared reduction counter; the only
+// cross-thread edge is `wait()`'s thread join, which already orders the
+// final read after every `svc_end` bump.
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -202,6 +205,8 @@ impl Node for QueensWorker {
     }
 
     fn svc_end(&mut self) {
+        // ordering: stat — relaxed reduction bump; `wait()`'s join
+        // publishes it before the read below.
         self.total.fetch_add(self.local, Ordering::Relaxed);
         self.local = 0;
     }
@@ -241,6 +246,7 @@ pub fn count_parallel(n: u32, depth: u32, workers: usize) -> ParallelRun {
     acc.offload_eos();
     acc.wait();
     ParallelRun {
+        // ordering: stat — read after `wait()` joined every worker.
         solutions: total.load(Ordering::Relaxed),
         tasks: ntasks,
     }

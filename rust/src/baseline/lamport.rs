@@ -74,9 +74,12 @@ pub fn lamport<T: Send>(cap: usize) -> (LamportProducer<T>, LamportConsumer<T>) 
 impl<T: Send> LamportProducer<T> {
     #[inline]
     pub fn try_push(&mut self, value: T) -> Result<(), Full<T>> {
+        // ordering: lamport — `tail` is producer-owned (relaxed self-read).
         let tail = self.ring.tail.load(Ordering::Relaxed);
         let next = if tail + 1 == self.cap { 0 } else { tail + 1 };
         // The Lamport full-test: reads the consumer-owned head.
+        // ordering: lamport — Acquire pairs with the consumer's
+        // head-advance Release, fencing the slot handback.
         if next == self.ring.head.load(Ordering::Acquire) {
             return Err(Full(value));
         }
@@ -85,6 +88,7 @@ impl<T: Send> LamportProducer<T> {
         // the Release store of the advanced `tail` below. Model-checked
         // in `tests/loom/lamport.rs`.
         self.ring.buf[tail].with_mut(|p| unsafe { (*p).write(value) });
+        // ordering: lamport — Release publishes the slot write above.
         self.ring.tail.store(next, Ordering::Release);
         Ok(())
     }
@@ -95,6 +99,8 @@ impl<T: Send> LamportProducer<T> {
             match self.try_push(value) {
                 Ok(()) => return Ok(()),
                 Err(Full(v)) => {
+                    // ordering: lamport — liveness load pairs with the
+                    // consumer drop's Release.
                     if !self.ring.consumer_alive.load(Ordering::Acquire) {
                         return Err(Full(v));
                     }
@@ -109,8 +115,11 @@ impl<T: Send> LamportProducer<T> {
 impl<T: Send> LamportConsumer<T> {
     #[inline]
     pub fn try_pop(&mut self) -> Option<T> {
+        // ordering: lamport — `head` is consumer-owned (relaxed self-read).
         let head = self.ring.head.load(Ordering::Relaxed);
         // The Lamport empty-test: reads the producer-owned tail.
+        // ordering: lamport — Acquire pairs with the producer's
+        // tail-advance Release, carrying the slot's initialization.
         if head == self.ring.tail.load(Ordering::Acquire) {
             return None;
         }
@@ -121,6 +130,8 @@ impl<T: Send> LamportConsumer<T> {
         // Acquire-reads `head`). Ownership transfers uniquely to us.
         let value = self.ring.buf[head].with(|p| unsafe { (*p).assume_init_read() });
         let next = if head + 1 == self.cap { 0 } else { head + 1 };
+        // ordering: lamport — Release hands the freed slot back to the
+        // producer's full-test Acquire.
         self.ring.head.store(next, Ordering::Release);
         Some(value)
     }
@@ -131,6 +142,8 @@ impl<T: Send> LamportConsumer<T> {
             if let Some(v) = self.try_pop() {
                 return Some(v);
             }
+            // ordering: lamport — liveness load pairs with the producer
+            // drop's Release.
             if !self.ring.producer_alive.load(Ordering::Acquire) {
                 return self.try_pop();
             }
@@ -141,18 +154,23 @@ impl<T: Send> LamportConsumer<T> {
 
 impl<T> Drop for LamportProducer<T> {
     fn drop(&mut self) {
+        // ordering: lamport — Release so in-flight slot writes are
+        // visible before the peer observes the death.
         self.ring.producer_alive.store(false, Ordering::Release);
     }
 }
 
 impl<T> Drop for LamportConsumer<T> {
     fn drop(&mut self) {
+        // ordering: lamport — symmetric liveness publication.
         self.ring.consumer_alive.store(false, Ordering::Release);
     }
 }
 
 impl<T> Drop for Ring<T> {
     fn drop(&mut self) {
+        // ordering: lamport — sole surviving owner (both endpoints
+        // dropped); relaxed reads are exact here.
         let mut head = self.head.load(Ordering::Relaxed);
         let tail = self.tail.load(Ordering::Relaxed);
         let cap = self.buf.len();

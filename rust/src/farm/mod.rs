@@ -42,10 +42,10 @@ pub use feedback::launch_master_worker;
 pub use feedback::{feedback, Feedback, MasterCtx, MasterLogic};
 
 use std::marker::PhantomData;
-use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 use std::sync::Arc;
 
 use crate::channel::{stream, stream_unbounded, Receiver, Sender};
+use crate::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 use crate::node::{Node, OutTarget, RunMode, Svc};
 use crate::skeleton::builder::{launch_with_ctx, seq, Skeleton, WireCtx};
 use crate::skeleton::LaunchedSkeleton;
@@ -244,6 +244,8 @@ impl<W: Node> Node for SeqWrap<W> {
             // Poison, don't panic: the skeleton must keep draining so
             // the offloading thread sees a terminated stream plus an
             // `AccelError::Disconnected`, never a hang.
+            // ordering: poison — store-Release publishes the flag (and
+            // the state behind it) to `poisoned()`'s load-Acquire.
             self.poison.store(true, AtomicOrdering::Release);
             return Svc::Eos;
         }

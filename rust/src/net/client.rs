@@ -147,6 +147,9 @@ impl<I: Wire, O: Wire> Client<I, O> {
     /// Take an empty recycled task buffer (pair with
     /// [`Client::offload_batch`] for the allocation-free cycle).
     #[must_use]
+    // ffaudit: allow(recycle) — this *is* the lender: buffers come back
+    // through the local `spare` stack pushed by the result pump, so the
+    // return path is structural, not a recycle() call.
     pub fn take_batch_buf(&mut self) -> Vec<I> {
         self.spare.pop().unwrap_or_default()
     }

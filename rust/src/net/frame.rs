@@ -384,6 +384,10 @@ impl FrameDecoder {
                 count: hdr.count,
             },
             Kind::Batch | Kind::Result => {
+                // ffaudit: allow(recycle) — `take_buf` is the *caller's*
+                // lender closure; the decoded Vec returns to the caller
+                // inside `Frame::Items`, and the caller's free lane (not
+                // this decoder) recycles it.
                 let mut items = take_buf();
                 items.clear();
                 items.reserve(hdr.count as usize);

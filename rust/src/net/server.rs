@@ -55,7 +55,6 @@
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -64,6 +63,7 @@ use std::time::{Duration, Instant};
 use crate::accel::{AccelError, AccelHandle, AccelPool, JobToken, PoolConfig, Priority};
 use crate::net::frame::{self, Frame, FrameDecoder, Kind, Wire, DEFAULT_MAX_FRAME, HELLO_LEN};
 use crate::node::node_fn;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::trace::TraceReport;
 use crate::util::{Backoff, WaitMode};
 
@@ -205,6 +205,8 @@ pub struct NetStats {
 impl Counters {
     fn snapshot(&self) -> NetStats {
         NetStats {
+            // ordering: stat — lifetime observability counters; no
+            // inter-thread edge rides on them.
             accepted: self.accepted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             stalled: self.stalled.load(Ordering::Relaxed),
@@ -483,6 +485,7 @@ fn reader_thread<I: Wire, O: Wire>(
     match read_exact_by(&mut stream, &mut hello, deadline, &shutdown) {
         Ok(true) => {}
         _ => {
+            // ordering: stat — observability counter.
             counters.rejected.fetch_add(1, Ordering::Relaxed);
             return;
         }
@@ -491,6 +494,7 @@ fn reader_thread<I: Wire, O: Wire>(
     match frame::decode_hello(&hello) {
         Ok(got) if got == want => {}
         _ => {
+            // ordering: stat — observability counter.
             counters.rejected.fetch_add(1, Ordering::Relaxed);
             return;
         }
@@ -499,9 +503,11 @@ fn reader_thread<I: Wire, O: Wire>(
         .write_all(&frame::encode_welcome(cfg.window, cfg.max_frame))
         .is_err()
     {
+        // ordering: stat — observability counter.
         counters.rejected.fetch_add(1, Ordering::Relaxed);
         return;
     }
+    // ordering: stat — observability counter.
     counters.accepted.fetch_add(1, Ordering::Relaxed);
 
     // Register with the drain BEFORE the first offload, so every result
@@ -518,6 +524,7 @@ fn reader_thread<I: Wire, O: Wire>(
                 .expect("spawn writer thread")
         }
         Err(_) => {
+            // ordering: stat — observability counter.
             counters.disconnected.fetch_add(1, Ordering::Relaxed);
             return;
         }
@@ -544,6 +551,8 @@ fn reader_thread<I: Wire, O: Wire>(
         // Drain every complete frame before reading more bytes.
         loop {
             let next = dec.next::<I, Tagged<I>>(
+                // ffaudit: allow(recycle) — shed/cleared buffers return via
+                // the local `spare` stack pushed below, not a recycle() call.
                 || spare.pop().unwrap_or_else(|| handle.take_batch_buf()),
                 |val| Tagged { conn, val },
             );
@@ -555,7 +564,10 @@ fn reader_thread<I: Wire, O: Wire>(
                     items,
                 })) => {
                     let n = items.len() as u64;
+                    // ordering: net — admission check; pairs with the
+                    // writer's fetch_sub(AcqRel) release of window credit.
                     if in_flight.load(Ordering::Acquire) + n > window {
+                        // ordering: stat — observability counters.
                         counters.shed_frames.fetch_add(1, Ordering::Relaxed);
                         counters.shed_items.fetch_add(n, Ordering::Relaxed);
                         let mut buf = items;
@@ -571,7 +583,10 @@ fn reader_thread<I: Wire, O: Wire>(
                             break 'conn;
                         }
                     } else {
+                        // ordering: net — take window credit before the
+                        // offload publishes the items.
                         in_flight.fetch_add(n, Ordering::AcqRel);
+                        // ordering: stat — observability counter.
                         counters.admitted_items.fetch_add(n, Ordering::Relaxed);
                         tokens.retain(|(t, _)| !t.is_settled());
                         match handle.offload_batch_job(items) {
@@ -598,6 +613,7 @@ fn reader_thread<I: Wire, O: Wire>(
 
         match stream.read(&mut rbuf) {
             Ok(0) => {
+                // ordering: stat — observability counter.
                 counters.disconnected.fetch_add(1, Ordering::Relaxed);
                 break;
             }
@@ -612,11 +628,13 @@ fn reader_thread<I: Wire, O: Wire>(
                 // Slowloris: a *partial frame* making no progress. An
                 // idle connection (no pending bytes) is left alone.
                 if dec.pending() > 0 && last_progress.elapsed() >= cfg.stall_timeout {
+                    // ordering: stat — observability counter.
                     counters.stalled.fetch_add(1, Ordering::Relaxed);
                     break;
                 }
             }
             Err(_) => {
+                // ordering: stat — observability counter.
                 counters.disconnected.fetch_add(1, Ordering::Relaxed);
                 break;
             }
@@ -637,6 +655,7 @@ fn reader_thread<I: Wire, O: Wire>(
             }
         }
         if cj > 0 {
+            // ordering: stat — observability counters.
             counters.cancelled_jobs.fetch_add(cj, Ordering::Relaxed);
             counters.cancelled_items.fetch_add(ci, Ordering::Relaxed);
         }
@@ -690,6 +709,8 @@ fn writer_thread<O: Wire>(
             if stream.write_all(&scratch).is_err() {
                 break;
             }
+            // ordering: net — return window credit only after the results
+            // hit the socket; pairs with the reader's admission Acquire.
             in_flight.fetch_sub(results.len() as u64, Ordering::AcqRel);
             results.clear();
         }
@@ -701,6 +722,8 @@ fn writer_thread<O: Wire>(
                 break 'outer;
             }
         }
+        // ordering: net — the wire Eos gate: every admitted item's
+        // fetch_sub must be visible before we close the stream.
         if eos && in_flight.load(Ordering::Acquire) == 0 {
             let _ = stream.write_all(&frame::encode_ctl(Kind::Eos, 0, 0));
             break;

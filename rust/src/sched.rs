@@ -12,6 +12,9 @@
 //! every pin on the failure path; pins the OS still refuses are counted
 //! in [`pins_failed`] instead of being swallowed.
 
+// ffaudit: allow(facade) — process-wide statics: loom's atomics have
+// non-const constructors, so these monotonic stat counters stay on std
+// (they carry no synchronization; see the `stat` ordering tags).
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::topo::Topology;
@@ -134,12 +137,14 @@ impl CpuMap {
 /// the observable for "placement silently isn't happening" — `ffctl
 /// topo` prints it. Always compiled; only `affinity` builds can move it.
 pub fn pins_failed() -> u64 {
+    // ordering: stat — monotonic counter, reporting only.
     PINS_FAILED.load(Ordering::Relaxed)
 }
 
 /// Real `sched_setaffinity` attempts made (zero in non-`affinity`
 /// builds, where pinning is a documented no-op hint).
 pub fn pins_attempted() -> u64 {
+    // ordering: stat — monotonic counter, reporting only.
     PINS_ATTEMPTED.load(Ordering::Relaxed)
 }
 
@@ -154,9 +159,11 @@ pub fn pins_attempted() -> u64 {
 /// returns `false` without counting a failure (nothing was attempted).
 #[cfg(feature = "affinity")]
 pub fn pin_current_thread(cpu: usize) -> bool {
+    // ordering: stat — monotonic counters, reporting only.
     PINS_ATTEMPTED.fetch_add(1, Ordering::Relaxed);
     let nbits = 8 * std::mem::size_of::<libc::cpu_set_t>();
     if cpu >= nbits {
+        // ordering: stat — monotonic counter, reporting only.
         PINS_FAILED.fetch_add(1, Ordering::Relaxed);
         return false;
     }
@@ -168,6 +175,7 @@ pub fn pin_current_thread(cpu: usize) -> bool {
         libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
     };
     if !ok {
+        // ordering: stat — monotonic counter, reporting only.
         PINS_FAILED.fetch_add(1, Ordering::Relaxed);
     }
     ok

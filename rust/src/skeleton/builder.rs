@@ -39,7 +39,6 @@
 //! [`then`]: Skeleton::then
 
 use std::marker::PhantomData;
-use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -49,6 +48,7 @@ use crate::accel::Accel;
 use crate::channel::{stream, stream_unbounded, Receiver, Sender};
 use crate::node::{node_fn, FnNode, Lifecycle, Node, NodeRunner, OutTarget, Outbox, RunMode, Svc};
 use crate::sched::{CpuMap, MappingPolicy};
+use crate::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 use crate::skeleton::LaunchedSkeleton;
 use crate::spsc::{unbounded_spsc, UnboundedConsumer, UnboundedProducer};
 use crate::trace::NodeTrace;
@@ -738,6 +738,8 @@ impl<O: Send + 'static> Node for TagEgress<O> {
                     // More results than tasks: the one-emission contract
                     // is broken. Poison and terminate this slot's
                     // stream; the farm keeps draining.
+                    // ordering: poison — store-Release pairs with
+                    // `poisoned()`'s load-Acquire.
                     self.poison.store(true, AtomicOrdering::Release);
                     Svc::Eos
                 }
@@ -755,6 +757,8 @@ impl<O: Send + 'static> Node for TagEgress<O> {
                 leftover = true;
             }
             if leftover {
+                // ordering: poison — store-Release pairs with
+                // `poisoned()`'s load-Acquire.
                 self.poison.store(true, AtomicOrdering::Release);
             }
         }

@@ -26,11 +26,11 @@ pub use builder::{seq, seq_fn, SeqNode, Skeleton, Then, WireCtx, WithWait};
 pub use crate::farm::feedback::{feedback, Feedback};
 pub use crate::farm::{farm, Farm};
 
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::channel::{Receiver, Sender};
+use crate::sync::atomic::{AtomicBool, Ordering};
 use crate::node::Lifecycle;
 use crate::trace::{NodeTrace, TraceReport};
 use crate::util::ParkGauge;
@@ -97,6 +97,8 @@ impl SkeletonHandle {
 
     /// True if some node raised the poison flag.
     pub fn poisoned(&self) -> bool {
+        // ordering: poison — load-Acquire pairs with the nodes'
+        // store-Release of the flag.
         self.poison.load(Ordering::Acquire)
     }
 
@@ -126,6 +128,8 @@ impl<I: Send + 'static, O: Send + 'static> LaunchedSkeleton<I, O> {
 
     /// True if some node raised the poison flag (see [`Self::poison`]).
     pub fn poisoned(&self) -> bool {
+        // ordering: poison — load-Acquire pairs with the nodes'
+        // store-Release of the flag.
         self.poison.load(Ordering::Acquire)
     }
 

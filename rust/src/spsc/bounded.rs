@@ -50,6 +50,8 @@ use crate::util::{Backoff, CachePadded, Doorbell, ParkGauge, WaitMode};
 /// statics would leak state between model iterations anyway). The
 /// authoritative per-queue counter is [`Producer::lost_frames`] /
 /// [`Consumer::lost_frames`].
+// ffaudit: allow(facade) — see above: process-global stat aggregate,
+// deliberately outside the loom facade.
 static LOST_FRAMES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
 /// Multipush frames abandoned at producer drop, process-wide (see
@@ -57,6 +59,7 @@ static LOST_FRAMES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64:
 /// though parallel tests cross-talk through it, so prefer the per-ring
 /// [`Producer::lost_frames`] / [`Consumer::lost_frames`] accessors.
 pub fn lost_frames() -> u64 {
+    // ordering: stat — monotonic aggregate, sampling only.
     LOST_FRAMES.load(Ordering::Relaxed)
 }
 
@@ -218,6 +221,8 @@ impl<T: Send> Producer<T> {
             "try_push with staged multipush frames — flush() first"
         );
         let slot = &self.ring.slots[self.pwrite];
+        // ordering: bounded — Acquire pairs with the claimant's
+        // EMPTY-Release, handing the slot back initialized-free.
         if slot.flag.load(Ordering::Acquire) != EMPTY {
             // FULL, or (stealable rings) BUSY — a claimant mid-read
             // still owns the slot either way.
@@ -233,6 +238,7 @@ impl<T: Send> Producer<T> {
         // drop of the uninit contents). Model-checked in
         // `tests/loom/bounded.rs`.
         slot.value.with_mut(|p| unsafe { (*p).write(value) });
+        // ordering: bounded — Release publishes the slot write above.
         slot.flag.store(FULL, Ordering::Release);
         self.pwrite = if self.pwrite + 1 == self.cap {
             0
@@ -259,6 +265,8 @@ impl<T: Send> Producer<T> {
             match self.try_push(value) {
                 Ok(()) => return Ok(()),
                 Err(Full(v)) => {
+                    // ordering: bounded — liveness pairs with the
+                    // consumer drop's Release.
                     if !self.ring.consumer_alive.load(Ordering::Acquire) {
                         return Err(Full(v));
                     }
@@ -276,6 +284,8 @@ impl<T: Send> Producer<T> {
     pub fn snooze_full(&mut self, backoff: &mut Backoff) {
         if backoff.should_park(self.wait, self.park_grace) {
             self.ring.space_bell.park_while(self.gauge.as_deref(), || {
+                // ordering: bounded — park predicate; re-checked after
+                // the doorbell's fence.
                 self.is_full() && self.ring.consumer_alive.load(Ordering::Acquire)
             });
         } else {
@@ -333,6 +343,7 @@ impl<T: Send> Producer<T> {
         if staged >= self.cap {
             return true;
         }
+        // ordering: bounded — same slot-handback Acquire as `try_push`.
         self.ring.slots[(self.pwrite + staged) % self.cap]
             .flag
             .load(Ordering::Acquire)
@@ -342,6 +353,7 @@ impl<T: Send> Producer<T> {
     /// Whether the consumer half still exists.
     #[inline]
     pub fn consumer_alive(&self) -> bool {
+        // ordering: bounded — pairs with the consumer drop's Release.
         self.ring.consumer_alive.load(Ordering::Acquire)
     }
 
@@ -355,6 +367,8 @@ impl<T: Send> Producer<T> {
         self.ring
             .slots
             .iter()
+            // ordering: stat — racy occupancy snapshot, tracing only.
+            // ordering: stat — racy occupancy snapshot, tracing only.
             .filter(|s| s.flag.load(Ordering::Relaxed) == FULL)
             .count()
     }
@@ -386,6 +400,8 @@ impl<T: Send> Producer<T> {
             self.pwrite - 1
         };
         let slot = &self.ring.slots[prev];
+        // ordering: elastic — the unpush-vs-pop claim CAS; exactly one
+        // owner per frame (model-checked).
         if slot
             .flag
             .compare_exchange(FULL, BUSY, Ordering::AcqRel, Ordering::Acquire)
@@ -404,6 +420,8 @@ impl<T: Send> Producer<T> {
         // that write on every path. The bits left behind are treated
         // as uninitialized, never dropped.
         let value = slot.value.with(|p| unsafe { (*p).assume_init_read() });
+        // ordering: elastic — Release completes the claim; the slot is
+        // reusable only after our read above.
         slot.flag.store(EMPTY, Ordering::Release);
         self.pwrite = prev;
         // The slot freed is *behind* the consumer's view, not ahead of
@@ -467,6 +485,7 @@ impl<T> Producer<T> {
     /// from other queues in the process). Normally read from the
     /// [`Consumer`] side — a producer that lost frames is usually gone.
     pub fn lost_frames(&self) -> u64 {
+        // ordering: stat — per-ring loss counter, sampling only.
         self.ring.lost.load(Ordering::Relaxed)
     }
 
@@ -491,6 +510,8 @@ impl<T> Producer<T> {
     fn flush_blocked(&self) -> bool {
         let n = self.mbuf.len();
         n > 0
+            // ordering: bounded — the contiguity Acquire (last slot of
+            // the staged run; see `try_flush`'s SAFETY argument).
             && self.ring.slots[(self.pwrite + n - 1) % self.cap]
                 .flag
                 .load(Ordering::Acquire)
@@ -543,6 +564,8 @@ impl<T> Producer<T> {
         let base = self.pwrite;
         let cap = self.cap;
         let last = (base + len - 1) % cap;
+        // ordering: bounded — the multipush contiguity gate: one Acquire
+        // on the *last* slot covers the whole run (see SAFETY below).
         if self.ring.slots[last].flag.load(Ordering::Acquire) != EMPTY {
             return false;
         }
@@ -561,6 +584,7 @@ impl<T> Producer<T> {
                 // per-slot Release store. Model-checked in
                 // `tests/loom/bounded.rs` (multipush_publish_vs_pop).
                 slot.value.with_mut(|p| unsafe { (*p).write(v) });
+                // ordering: bounded — per-slot Release publish.
                 slot.flag.store(FULL, Ordering::Release);
             }
         }
@@ -583,10 +607,14 @@ impl<T> Producer<T> {
             if self.try_flush() {
                 return true;
             }
+            // ordering: bounded — liveness pairs with the consumer
+            // drop's Release (park predicate below likewise).
             if !self.ring.consumer_alive.load(Ordering::Acquire) {
                 return false;
             }
             self.park_or_snooze(&mut backoff, || {
+                // ordering: bounded — park predicate; re-checked after
+                // the doorbell's fence.
                 self.flush_blocked() && self.ring.consumer_alive.load(Ordering::Acquire)
             });
         }
@@ -604,6 +632,8 @@ impl<T: Send> Consumer<T> {
             // unpush of the same frame resolves to exactly one owner.
             // A failed CAS saw EMPTY (nothing published) or BUSY (the
             // producer mid-revoke — the frame is leaving, not ours).
+            // ordering: elastic — the pop side of the unpush-vs-pop
+            // claim CAS (model-checked).
             if slot
                 .flag
                 .compare_exchange(FULL, BUSY, Ordering::AcqRel, Ordering::Acquire)
@@ -611,6 +641,8 @@ impl<T: Send> Consumer<T> {
             {
                 return None;
             }
+        // ordering: bounded — Acquire pairs with the producer's
+        // FULL-Release, carrying the slot's initialization.
         } else if slot.flag.load(Ordering::Acquire) != FULL {
             return None;
         }
@@ -626,6 +658,8 @@ impl<T: Send> Consumer<T> {
         // `tests/loom/bounded.rs` and (CAS path)
         // `tests/loom/elastic.rs`.
         let value = slot.value.with(|p| unsafe { (*p).assume_init_read() });
+        // ordering: bounded — Release hands the freed slot back to the
+        // producer's empty-test Acquire.
         slot.flag.store(EMPTY, Ordering::Release);
         self.pread = if self.pread + 1 == self.cap {
             0
@@ -645,6 +679,8 @@ impl<T: Send> Consumer<T> {
             if let Some(v) = self.try_pop() {
                 return Some(v);
             }
+            // ordering: bounded — liveness pairs with the producer
+            // drop's Release; the post-check re-pop makes drain exact.
             if !self.ring.producer_alive.load(Ordering::Acquire) {
                 // Producer is gone; drain whatever it published first.
                 return self.try_pop();
@@ -660,6 +696,8 @@ impl<T: Send> Consumer<T> {
     pub fn snooze_empty(&mut self, backoff: &mut Backoff) {
         if backoff.should_park(self.wait, self.park_grace) {
             self.ring.data_bell.park_while(self.gauge.as_deref(), || {
+                // ordering: bounded — park predicate; re-checked after
+                // the doorbell's fence.
                 !self.has_next() && self.ring.producer_alive.load(Ordering::Acquire)
             });
         } else {
@@ -693,6 +731,7 @@ impl<T: Send> Consumer<T> {
     /// ring** — the per-ring counterpart of the process-global
     /// [`lost_frames`] aggregate.
     pub fn lost_frames(&self) -> u64 {
+        // ordering: stat — per-ring loss counter, sampling only.
         self.ring.lost.load(Ordering::Relaxed)
     }
 
@@ -708,6 +747,8 @@ impl<T: Send> Consumer<T> {
     /// any peek it is advisory, `try_pop` is the claim.)
     #[inline]
     pub fn has_next(&self) -> bool {
+        // ordering: bounded — advisory peek with the same publish
+        // Acquire as `try_pop`.
         self.ring.slots[self.pread].flag.load(Ordering::Acquire) == FULL
     }
 
@@ -719,6 +760,7 @@ impl<T: Send> Consumer<T> {
     /// Whether the producer half still exists.
     #[inline]
     pub fn producer_alive(&self) -> bool {
+        // ordering: bounded — pairs with the producer drop's Release.
         self.ring.producer_alive.load(Ordering::Acquire)
     }
 
@@ -728,6 +770,8 @@ impl<T: Send> Consumer<T> {
         self.ring
             .slots
             .iter()
+            // ordering: stat — racy occupancy snapshot, tracing only.
+            // ordering: stat — racy occupancy snapshot, tracing only.
             .filter(|s| s.flag.load(Ordering::Relaxed) == FULL)
             .count()
     }
@@ -755,21 +799,29 @@ impl<T> Drop for Producer<T> {
                 if self.try_flush() {
                     break;
                 }
+                // ordering: bounded — liveness pairs with the consumer
+                // drop's Release (park predicate below likewise).
                 if !self.ring.consumer_alive.load(Ordering::Acquire)
                     || std::time::Instant::now() >= deadline
                 {
                     break;
                 }
                 self.park_or_snooze(&mut backoff, || {
+                    // ordering: bounded — park predicate; re-checked
+                    // after the doorbell's fence.
                     self.flush_blocked() && self.ring.consumer_alive.load(Ordering::Acquire)
                 });
             }
             if !self.mbuf.is_empty() {
                 let n = self.mbuf.len() as u64;
+                // ordering: stat — loss accounting; the disconnect edge
+                // below is what the consumer synchronizes on.
                 self.ring.lost.fetch_add(n, Ordering::Relaxed);
                 LOST_FRAMES.fetch_add(n, Ordering::Relaxed);
             }
         }
+        // ordering: bounded — Release so published frames are visible
+        // before the consumer observes the death.
         self.ring.producer_alive.store(false, Ordering::Release);
         // Wake a parked consumer so it observes the disconnect.
         self.ring.data_bell.ring();
@@ -778,6 +830,7 @@ impl<T> Drop for Producer<T> {
 
 impl<T> Drop for Consumer<T> {
     fn drop(&mut self) {
+        // ordering: bounded — symmetric liveness publication.
         self.ring.consumer_alive.store(false, Ordering::Release);
         // Wake a parked producer so it observes the disconnect.
         self.ring.space_bell.ring();
@@ -791,6 +844,8 @@ impl<T> Drop for Ring<T> {
         // release/acquire on the refcount ordered every queue operation
         // before this destructor.
         for slot in self.slots.iter() {
+            // ordering: bounded — sole owner (Arc refcount ordered both
+            // handle drops before this); relaxed reads are exact.
             if slot.flag.load(Ordering::Relaxed) == FULL {
                 // SAFETY: `flag == FULL` means the producer initialized
                 // the slot and no claimant read it (a BUSY claim always

@@ -87,9 +87,13 @@ impl PtrProducer {
             return false;
         }
         let slot = &self.ring.slots[self.pwrite];
+        // ordering: ptr — Acquire pairs with the consumer's null-Release
+        // (slot handback); null is the empty sentinel.
         if slot.load(Ordering::Acquire).is_null() {
             // Release ≙ the paper's WriteFence on non-TSO machines; free
             // on x86.
+            // ordering: ptr — Release publishes the pointee before the
+            // consumer's Acquire load can observe the pointer.
             slot.store(data, Ordering::Release);
             self.pwrite = if self.pwrite + 1 >= self.cap {
                 0
@@ -108,6 +112,7 @@ impl PtrProducer {
 
     #[inline]
     pub fn consumer_alive(&self) -> bool {
+        // ordering: ptr — pairs with the consumer drop's Release.
         self.ring.consumer_alive.load(Ordering::Acquire)
     }
 }
@@ -117,10 +122,14 @@ impl PtrConsumer {
     #[inline]
     pub fn pop(&mut self) -> *mut u8 {
         let slot = &self.ring.slots[self.pread];
+        // ordering: ptr — Acquire synchronizes with the producer's
+        // Release, carrying the pointee's initialization.
         let data = slot.load(Ordering::Acquire);
         if data.is_null() {
             return std::ptr::null_mut();
         }
+        // ordering: ptr — null-Release hands the slot back; the producer
+        // reuses it only after its Acquire sees the null.
         slot.store(std::ptr::null_mut(), Ordering::Release);
         self.pread = if self.pread + 1 >= self.cap {
             0
@@ -137,18 +146,22 @@ impl PtrConsumer {
 
     #[inline]
     pub fn producer_alive(&self) -> bool {
+        // ordering: ptr — pairs with the producer drop's Release.
         self.ring.producer_alive.load(Ordering::Acquire)
     }
 }
 
 impl Drop for PtrProducer {
     fn drop(&mut self) {
+        // ordering: ptr — Release so in-flight publishes are visible
+        // before the consumer observes the death.
         self.ring.producer_alive.store(false, Ordering::Release);
     }
 }
 
 impl Drop for PtrConsumer {
     fn drop(&mut self) {
+        // ordering: ptr — symmetric liveness publication.
         self.ring.consumer_alive.store(false, Ordering::Release);
     }
 }

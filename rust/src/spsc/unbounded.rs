@@ -88,6 +88,8 @@ impl<T> Seg<T> {
         // Relaxed: the segment is thread-private here; its next transfer
         // to another thread goes through the pool's Release/Acquire (or
         // the tail link), which orders this store for the receiver.
+        // ordering: unbounded — thread-private here (see comment above);
+        // the pool's Release/Acquire orders the handoff.
         self.next.store(std::ptr::null_mut(), Ordering::Relaxed);
         debug_assert!(self.slots.iter().all(|s| !s.full.load(Ordering::Relaxed)));
     }
@@ -96,6 +98,8 @@ impl<T> Seg<T> {
 impl<T> Drop for Seg<T> {
     fn drop(&mut self) {
         for s in self.slots.iter() {
+            // ordering: unbounded — sole owner at teardown; relaxed
+            // reads are exact.
             if s.full.load(Ordering::Relaxed) {
                 // SAFETY: `full == true` means the slot holds an
                 // initialized value nobody consumed; `&mut self` makes
@@ -197,6 +201,7 @@ impl<T: Send> UnboundedProducer<T> {
     /// Whether the consumer half still exists.
     #[inline]
     pub fn consumer_alive(&self) -> bool {
+        // ordering: unbounded — pairs with the drop-side AcqRel on `live`.
         self.inner.live.load(Ordering::Acquire) == 2
     }
 
@@ -214,12 +219,15 @@ impl<T: Send> UnboundedProducer<T> {
         // ordered before us by the pool's Acquire pop.
         let w = seg.pwrite.with(|p| unsafe { *p });
         let slot = &seg.slots[w];
+        // ordering: unbounded — Acquire pairs with the consumer's
+        // false-Release, handing the slot back drained.
         if !slot.full.load(Ordering::Acquire) {
             // SAFETY: `full == false` (Acquire) — the slot is empty and
             // ours; the consumer reads the value only after the Release
             // store of `full == true`. Model-checked in
             // `tests/loom/unbounded.rs`.
             slot.value.with_mut(|p| unsafe { (*p).write(value) });
+            // ordering: unbounded — Release publishes the slot write.
             slot.full.store(true, Ordering::Release);
             let next_w = if w + 1 == SEG_CAP { 0 } else { w + 1 };
             // SAFETY: see `pwrite` access above.
@@ -250,10 +258,13 @@ impl<T: Send> UnboundedProducer<T> {
         // SAFETY: exclusive access, see above; slot 0 of a reset/fresh
         // segment is empty.
         s.slots[0].value.with_mut(|p| unsafe { (*p).write(value) });
+        // ordering: unbounded — publish slot 0 before the segment link.
         s.slots[0].full.store(true, Ordering::Release);
         // SAFETY: exclusive access, see above.
         s.pwrite.with_mut(|p| unsafe { *p = 1 });
         // Publish: after this store the old tail is consumer territory.
+        // ordering: unbounded — the link Release carries the whole new
+        // segment to the consumer's `next` Acquire.
         seg.next.store(new_seg, Ordering::Release);
         self.tail = new_seg;
         self.inner.data_bell.ring();
@@ -276,6 +287,8 @@ impl<T: Send> UnboundedConsumer<T> {
             // segment we released through the pool's Release push.
             let r = seg.pread.with(|p| unsafe { *p });
             let slot = &seg.slots[r];
+            // ordering: unbounded — Acquire pairs with the producer's
+            // true-Release, carrying the slot's initialization.
             if slot.full.load(Ordering::Acquire) {
                 // SAFETY: the Acquire load of `full == true`
                 // happens-after the producer's write, so the slot is
@@ -284,6 +297,8 @@ impl<T: Send> UnboundedConsumer<T> {
                 // transfers uniquely to us. Model-checked in
                 // `tests/loom/unbounded.rs`.
                 let value = slot.value.with(|p| unsafe { (*p).assume_init_read() });
+                // ordering: unbounded — Release hands the drained slot
+                // back to the producer's empty-test Acquire.
                 slot.full.store(false, Ordering::Release);
                 let next_r = if r + 1 == SEG_CAP { 0 } else { r + 1 };
                 // SAFETY: see `pread` access above.
@@ -294,6 +309,8 @@ impl<T: Send> UnboundedConsumer<T> {
             // never writes to a segment again once it links `next`, and it
             // links only after completely filling it, so empty + linked ⇒
             // fully drained.
+            // ordering: unbounded — the link Acquire pairs with the
+            // producer's Release, publishing the successor segment.
             let next = seg.next.load(Ordering::Acquire);
             if next.is_null() {
                 return None;
@@ -320,6 +337,8 @@ impl<T: Send> UnboundedConsumer<T> {
             if let Some(v) = self.try_pop() {
                 return Some(v);
             }
+            // ordering: unbounded — liveness pairs with the producer
+            // drop's AcqRel; the post-check re-pop makes drain exact.
             if self.inner.live.load(Ordering::Acquire) < 2 {
                 return self.try_pop();
             }
@@ -372,6 +391,7 @@ impl<T: Send> UnboundedConsumer<T> {
     /// Whether the producer half still exists.
     #[inline]
     pub fn producer_alive(&self) -> bool {
+        // ordering: unbounded — pairs with the drop-side AcqRel on `live`.
         self.inner.live.load(Ordering::Acquire) == 2
     }
 
@@ -381,6 +401,7 @@ impl<T: Send> UnboundedConsumer<T> {
         // as [`UnboundedConsumer::try_pop`].
         let seg = unsafe { &*self.head };
         let r = seg.pread.with(|p| unsafe { *p });
+        // ordering: unbounded — same publish/link Acquires as `try_pop`.
         seg.slots[r].full.load(Ordering::Acquire)
             || !seg.next.load(Ordering::Acquire).is_null()
     }
@@ -398,6 +419,8 @@ unsafe fn free_chain<T>(mut head: *mut Seg<T>) {
         // SAFETY: per the function contract — sole owner, Box-allocated,
         // each segment reachable exactly once via `next`.
         let seg = unsafe { Box::from_raw(head) };
+        // ordering: unbounded — sole owner per the contract; Acquire is
+        // belt-and-braces on the already-ordered chain.
         head = seg.next.load(Ordering::Acquire);
         drop(seg);
     }
@@ -405,8 +428,12 @@ unsafe fn free_chain<T>(mut head: *mut Seg<T>) {
 
 impl<T> Drop for UnboundedProducer<T> {
     fn drop(&mut self) {
+        // ordering: unbounded — the AcqRel handoff on `live`: loser
+        // publishes, winner (== 1) inherits the chain.
         if self.inner.live.fetch_sub(1, Ordering::AcqRel) == 1 {
             // Consumer already gone; it published its head for us.
+            // ordering: unbounded — pairs with the consumer drop's
+            // orphan_head Release.
             let head = self.inner.orphan_head.load(Ordering::Acquire);
             // SAFETY: we are the last half (fetch_sub returned 1, and
             // the AcqRel RMW ordered the consumer's final operations —
@@ -422,6 +449,8 @@ impl<T> Drop for UnboundedProducer<T> {
 
 impl<T> Drop for UnboundedConsumer<T> {
     fn drop(&mut self) {
+        // ordering: unbounded — Release our head for a surviving
+        // producer, then the same AcqRel last-one-frees handoff.
         self.inner.orphan_head.store(self.head, Ordering::Release);
         if self.inner.live.fetch_sub(1, Ordering::AcqRel) == 1 {
             // SAFETY: we are the last half — the producer already

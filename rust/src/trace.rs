@@ -6,6 +6,10 @@
 //! be compiled out of hot loops by not calling the hooks). Skeletons
 //! collect them into a [`TraceReport`] printed by `ffctl --trace`.
 
+// ffaudit: allow(facade) — single-writer relaxed stat counters bumped
+// on node hot paths; no inter-thread edge rides on them (loom coverage
+// would be vacuous, and the facade would put loom doubles on every
+// `svc` call under `--cfg loom`).
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -49,22 +53,26 @@ impl NodeTrace {
     /// items count as individual tasks, not one.
     #[inline]
     pub fn on_tasks(&self, n: u64, svc_ns: u64) {
+        // ordering: stat — single-writer trace counters.
         self.tasks.fetch_add(n, Ordering::Relaxed);
         self.svc_ns.fetch_add(svc_ns, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn on_emit(&self, n: u64) {
+        // ordering: stat — single-writer trace counter.
         self.emitted.fetch_add(n, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn on_cycle(&self) {
+        // ordering: stat — single-writer trace counter.
         self.cycles.fetch_add(1, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn add_retries(&self, push: u64, pop: u64) {
+        // ordering: stat — single-writer trace counters.
         self.push_retries.fetch_add(push, Ordering::Relaxed);
         self.pop_retries.fetch_add(pop, Ordering::Relaxed);
     }
@@ -74,6 +82,7 @@ impl NodeTrace {
     /// allocations vs `reused` recycled draws.
     #[inline]
     pub fn on_alloc(&self, fresh: u64, reused: u64) {
+        // ordering: stat — single-writer trace counters.
         self.alloc_fresh.fetch_add(fresh, Ordering::Relaxed);
         self.alloc_reused.fetch_add(reused, Ordering::Relaxed);
     }
@@ -81,6 +90,8 @@ impl NodeTrace {
     pub fn snapshot(&self, name: impl Into<String>) -> TraceRow {
         TraceRow {
             name: name.into(),
+            // ordering: stat — report-time reads of single-writer
+            // counters; staleness is acceptable by design.
             tasks: self.tasks.load(Ordering::Relaxed),
             emitted: self.emitted.load(Ordering::Relaxed),
             svc_time: Duration::from_nanos(self.svc_ns.load(Ordering::Relaxed)),

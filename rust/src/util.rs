@@ -219,6 +219,7 @@ impl ParkGauge {
 
     fn enter(&self) {
         self.now.fetch_add(1, Ordering::SeqCst);
+        // ordering: stat — cumulative park counter, reporting only.
         self.total.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -233,6 +234,7 @@ impl ParkGauge {
 
     /// Cumulative parks.
     pub fn total_parks(&self) -> u64 {
+        // ordering: stat — racy read of a reporting counter.
         self.total.load(Ordering::Relaxed)
     }
 }
@@ -286,6 +288,7 @@ impl Default for Doorbell {
 impl std::fmt::Debug for Doorbell {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Doorbell")
+            // ordering: stat — racy debug snapshot, no decision rides on it.
             .field("armed", &self.armed.load(Ordering::Relaxed))
             .field("waiting", &self.waiting.load(Ordering::Relaxed))
             .field("parks", &self.parks.load(Ordering::Relaxed))
@@ -314,11 +317,16 @@ impl Doorbell {
         // compiled out and the model verifies the load-bearing
         // fence/`waiting` handshake below. (Audit finding recorded in
         // EXPERIMENTS.md §Verification.)
+        // ordering: doorbell — the gate may go stale (production-only
+        // fast path; the timeout backstops it).
         #[cfg(not(loom))]
         if !self.armed.load(Ordering::Relaxed) {
             return;
         }
         fence(Ordering::SeqCst);
+        // ordering: doorbell — the SeqCst fence pair (here and in
+        // `park_while`) carries the handshake; the load itself can stay
+        // relaxed (store-buffering argument, model-checked).
         if self.waiting.load(Ordering::Relaxed) {
             self.wake();
         }
@@ -333,15 +341,21 @@ impl Doorbell {
     }
 
     fn register(&self) {
+        // ordering: doorbell — arming is sticky; one-time Release so
+        // ringers eventually observe it (staleness only costs latency).
         if !self.armed.load(Ordering::Relaxed) {
             self.armed.store(true, Ordering::Release);
         }
         *self.slot.lock().unwrap_or_else(|e| e.into_inner()) =
             Some(crate::sync::thread::current());
+        // ordering: doorbell — visibility is forced by the SeqCst fence
+        // in `park_while`, not by this store.
         self.waiting.store(true, Ordering::Relaxed);
     }
 
     fn deregister(&self) {
+        // ordering: doorbell — a stale `waiting` only causes a spurious
+        // unpark, absorbed by the next park.
         self.waiting.store(false, Ordering::Relaxed);
         // Any stale slot/unpark token is absorbed by the next park.
     }
@@ -354,6 +368,7 @@ impl Doorbell {
         self.register();
         fence(Ordering::SeqCst);
         if still_idle() {
+            // ordering: stat — cumulative park counter, reporting only.
             self.parks.fetch_add(1, Ordering::Relaxed);
             if let Some(g) = gauge {
                 g.enter();
@@ -368,6 +383,7 @@ impl Doorbell {
 
     /// Cumulative parks on this doorbell.
     pub fn parks(&self) -> u64 {
+        // ordering: stat — racy read of a reporting counter.
         self.parks.load(Ordering::Relaxed)
     }
 }
@@ -558,14 +574,18 @@ impl AbortFlag {
     }
     #[inline]
     pub fn raise(&self) {
+        // ordering: poison — store-Release publishes pre-abort writes
+        // to `is_raised()`'s load-Acquire (same shape as the poison flag).
         self.flag.store(true, Ordering::Release);
     }
     #[inline]
     pub fn clear(&self) {
+        // ordering: poison — symmetric Release on reset.
         self.flag.store(false, Ordering::Release);
     }
     #[inline]
     pub fn is_raised(&self) -> bool {
+        // ordering: poison — load-Acquire pairs with `raise`'s Release.
         self.flag.load(Ordering::Acquire)
     }
 }

@@ -10,6 +10,8 @@
 //! thread, so these two primitives are the *entire* new concurrent
 //! surface: if each value/job is claimed exactly once here, the pool
 //! can neither double-execute nor drop a frame.
+//!
+//! covers: accel::job
 
 use fastflow::accel::JobCtl;
 use fastflow::spsc::spsc_stealable;

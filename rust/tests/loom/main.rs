@@ -27,4 +27,7 @@ mod channel_model;
 mod doorbell;
 mod elastic;
 mod lamport;
+mod net;
+mod poison;
+mod ptr;
 mod unbounded;

@@ -1,0 +1,130 @@
+//! Models for the `fastflow::net::server` per-connection window-credit
+//! protocol (covers: net::server). The reader thread is the only
+//! `fetch_add`er of `in_flight` (admission) and the writer thread the
+//! only `fetch_sub`er (results flushed to the socket), so the counter
+//! is a two-party credit balance: admission's `load(Acquire)` pairs
+//! with the writer's `fetch_sub(AcqRel)`, and the wire-Eos gate's
+//! `load(Acquire) == 0` must observe every returned credit before the
+//! stream closes.
+//!
+//! The models drive the same orderings on the same protocol shape —
+//! the real code is welded to `TcpStream`, which loom cannot schedule,
+//! so the socket is replaced by a published-work counter.
+
+use loom::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use loom::sync::Arc;
+use loom::thread;
+
+const WINDOW: u64 = 1;
+const ITEMS: u64 = 2;
+
+/// Admission never over-commits the window, and the credit balance
+/// returns to zero: reader admits (load-Acquire check + fetch_add),
+/// writer completes (fetch_sub). Single-adder discipline means the
+/// check-then-add race with *itself* cannot happen; the model proves
+/// the writer's concurrent subs never let the balance go negative or
+/// past the window.
+#[test]
+fn in_flight_credit_balances() {
+    loom::model(|| {
+        let in_flight = Arc::new(AtomicU64::new(0));
+        let work = Arc::new(AtomicU64::new(0));
+
+        let (rif, rwork) = (in_flight.clone(), work.clone());
+        let reader = thread::spawn(move || {
+            let mut sent = 0u64;
+            while sent < ITEMS {
+                // Mirrors server.rs admission: Acquire load, then the
+                // sole fetch_add(AcqRel).
+                if rif.load(Ordering::Acquire) < WINDOW {
+                    let prev = rif.fetch_add(1, Ordering::AcqRel);
+                    assert!(prev < WINDOW, "admission overshot the window");
+                    rwork.fetch_add(1, Ordering::Release);
+                    sent += 1;
+                } else {
+                    thread::yield_now();
+                }
+            }
+        });
+
+        let (wif, wwork) = (in_flight.clone(), work.clone());
+        let writer = thread::spawn(move || {
+            let mut done = 0u64;
+            while done < ITEMS {
+                if wwork.load(Ordering::Acquire) > done {
+                    done += 1;
+                    wif.fetch_sub(1, Ordering::AcqRel);
+                } else {
+                    thread::yield_now();
+                }
+            }
+        });
+
+        reader.join().unwrap();
+        writer.join().unwrap();
+        assert_eq!(in_flight.load(Ordering::Acquire), 0, "credit leaked");
+    });
+}
+
+/// The wire-Eos gate: the writer may close the stream only once the
+/// client's Eos arrived *and* `in_flight` reads zero. Whatever the
+/// interleaving, the gate passing implies every admitted item's result
+/// was flushed (its fetch_sub happened-before the gate's Acquire load).
+#[test]
+fn eos_gate_waits_for_last_result() {
+    loom::model(|| {
+        let in_flight = Arc::new(AtomicU64::new(0));
+        let flushed = Arc::new(AtomicU64::new(0));
+        let eos = Arc::new(AtomicBool::new(false));
+
+        let (rif, reos) = (in_flight.clone(), eos.clone());
+        let reader = thread::spawn(move || {
+            rif.fetch_add(1, Ordering::AcqRel);
+            reos.store(true, Ordering::Release);
+        });
+
+        let (wif, wflushed, weos) = (in_flight.clone(), flushed.clone(), eos.clone());
+        let writer = thread::spawn(move || loop {
+            if wif.load(Ordering::Acquire) > 0 {
+                // "Result hit the socket" before the credit returns.
+                wflushed.fetch_add(1, Ordering::Relaxed);
+                wif.fetch_sub(1, Ordering::AcqRel);
+            }
+            if weos.load(Ordering::Acquire) && wif.load(Ordering::Acquire) == 0 {
+                // Closing now: the admitted item must already be out.
+                assert_eq!(wflushed.load(Ordering::Relaxed), 1);
+                return;
+            }
+            thread::yield_now();
+        });
+
+        reader.join().unwrap();
+        writer.join().unwrap();
+    });
+}
+
+/// The SeqCst shutdown flag: once raised, both loops observe it and
+/// exit — no interleaving lets a loop miss the store and spin forever
+/// (a lost store would deadlock the model).
+#[test]
+fn shutdown_flag_stops_reader_and_writer() {
+    loom::model(|| {
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let sd = shutdown.clone();
+                thread::spawn(move || {
+                    while !sd.load(Ordering::SeqCst) {
+                        thread::yield_now();
+                    }
+                })
+            })
+            .collect();
+
+        shutdown.store(true, Ordering::SeqCst);
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}

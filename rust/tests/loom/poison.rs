@@ -1,0 +1,96 @@
+//! Models for the skeleton poison flag (covers: farm, skeleton,
+//! skeleton::builder) and the same-shaped [`fastflow::util::AbortFlag`]:
+//! nodes that detect a broken contract (arity
+//! violation, leftover reorder tags) `store(true, Release)` a shared
+//! `AtomicBool`, and `SkeletonHandle::poisoned()` reads it with
+//! `load(Acquire)`. The Release/Acquire pair is what makes the flag a
+//! *publication*: any diagnostic state written before the store is
+//! visible to an observer that sees the flag up.
+
+use fastflow::util::AbortFlag;
+use loom::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use loom::sync::Arc;
+use loom::thread;
+
+/// A node records what went wrong (plain Relaxed cell), then raises the
+/// flag with Release. An observer that sees the flag via Acquire must
+/// also see the diagnostic — if either side of the pair were Relaxed,
+/// loom would find an interleaving where `poisoned()` is true but the
+/// diagnostic still reads zero.
+#[test]
+fn poison_publishes_prior_writes() {
+    loom::model(|| {
+        let poison = Arc::new(AtomicBool::new(false));
+        let detail = Arc::new(AtomicU64::new(0));
+
+        let (np, nd) = (poison.clone(), detail.clone());
+        let node = thread::spawn(move || {
+            nd.store(7, Ordering::Relaxed);
+            np.store(true, Ordering::Release);
+        });
+
+        let (op, od) = (poison.clone(), detail.clone());
+        let observer = thread::spawn(move || {
+            if op.load(Ordering::Acquire) {
+                assert_eq!(od.load(Ordering::Relaxed), 7, "flag up, diagnostic stale");
+            }
+        });
+
+        node.join().unwrap();
+        observer.join().unwrap();
+        // Join gives happens-before: the flag is now definitely up.
+        assert!(poison.load(Ordering::Acquire));
+    });
+}
+
+/// Two independent poisoners (a farm worker and the collector's
+/// `svc_end` both hit violations) race their Release stores. The flag
+/// is idempotent — both orders leave it up, and each store still
+/// publishes its own prior writes.
+#[test]
+fn poison_is_idempotent_across_racing_nodes() {
+    loom::model(|| {
+        let poison = Arc::new(AtomicBool::new(false));
+
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let p = poison.clone();
+                thread::spawn(move || {
+                    p.store(true, Ordering::Release);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(poison.load(Ordering::Acquire));
+    });
+}
+
+/// The production [`AbortFlag`] is the same publication idiom
+/// (store-Release in `raise`, load-Acquire in `is_raised`): work done
+/// before the raise must be visible to whoever observes the abort.
+#[test]
+fn abort_flag_publishes_prior_writes() {
+    loom::model(|| {
+        let abort = Arc::new(AbortFlag::new());
+        let progress = Arc::new(AtomicU64::new(0));
+
+        let (ra, rp) = (abort.clone(), progress.clone());
+        let raiser = thread::spawn(move || {
+            rp.store(3, Ordering::Relaxed);
+            ra.raise();
+        });
+
+        let (oa, op) = (abort.clone(), progress.clone());
+        let observer = thread::spawn(move || {
+            if oa.is_raised() {
+                assert_eq!(op.load(Ordering::Relaxed), 3, "abort up, progress stale");
+            }
+        });
+
+        raiser.join().unwrap();
+        observer.join().unwrap();
+        assert!(abort.is_raised());
+    });
+}

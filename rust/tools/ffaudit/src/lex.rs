@@ -1,0 +1,399 @@
+//! A deliberately small lexical pass over one Rust source file.
+//!
+//! `ffaudit` is not a parser: every rule it enforces is phrased over
+//! *lines* of code with comments and string/char-literal contents masked
+//! out, which is exactly the granularity the repo's disciplines are
+//! written at (`// SAFETY:` above an `unsafe`, `// ordering:` above a
+//! non-SeqCst access). The masking state machine below handles the Rust
+//! surface the crate actually uses: nested `/* */` block comments, `//`
+//! line comments, string/byte-string literals with escapes (including
+//! multi-line), raw strings `r#"…"#`, and char literals vs lifetimes.
+
+/// One source line, three views of it.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// The line exactly as read.
+    pub raw: String,
+    /// The line with comment text and string/char-literal *contents*
+    /// replaced by spaces — what code-level patterns match against.
+    pub code: String,
+    /// The comment text of the line (line-comment tail and/or the parts
+    /// of block comments crossing it) — what annotation tags match
+    /// against.
+    pub comment: String,
+}
+
+impl Line {
+    /// A line that is only comment (and whitespace).
+    pub fn is_comment_only(&self) -> bool {
+        !self.comment.trim().is_empty() && self.code.trim().is_empty()
+    }
+
+    /// A line that is only an attribute, e.g. `#[inline]`.
+    pub fn is_attr_only(&self) -> bool {
+        let c = self.code.trim();
+        c.starts_with("#[") || c.starts_with("#![")
+    }
+}
+
+/// Persistent masking state across lines of one file.
+struct MaskState {
+    /// Nesting depth of `/* */` block comments.
+    block_depth: usize,
+    /// Inside a string literal; `raw_hashes` is `Some(n)` for `r#…"` with
+    /// `n` hashes, `None` for an ordinary (escaped) string.
+    in_str: bool,
+    raw_hashes: Option<usize>,
+}
+
+/// Split `text` into masked [`Line`] views.
+pub fn mask(text: &str) -> Vec<Line> {
+    let mut st = MaskState {
+        block_depth: 0,
+        in_str: false,
+        raw_hashes: None,
+    };
+    text.split('\n').map(|l| mask_line(l, &mut st)).collect()
+}
+
+fn mask_line(raw: &str, st: &mut MaskState) -> Line {
+    let b = raw.as_bytes();
+    let n = b.len();
+    let mut code = Vec::with_capacity(n);
+    let mut comment = Vec::new();
+    let mut i = 0;
+    while i < n {
+        if st.block_depth > 0 {
+            if b[i..].starts_with(b"*/") {
+                st.block_depth -= 1;
+                code.extend_from_slice(b"  ");
+                i += 2;
+            } else if b[i..].starts_with(b"/*") {
+                st.block_depth += 1;
+                code.extend_from_slice(b"  ");
+                i += 2;
+            } else {
+                comment.push(b[i]);
+                code.push(b' ');
+                i += 1;
+            }
+            continue;
+        }
+        if st.in_str {
+            match st.raw_hashes {
+                None => {
+                    if b[i] == b'\\' {
+                        code.extend_from_slice(b"  ");
+                        i = (i + 2).min(n);
+                    } else if b[i] == b'"' {
+                        st.in_str = false;
+                        code.push(b'"');
+                        i += 1;
+                    } else {
+                        code.push(b' ');
+                        i += 1;
+                    }
+                }
+                Some(h) => {
+                    if b[i] == b'"' && b[i + 1..].iter().take_while(|&&c| c == b'#').count() >= h {
+                        st.in_str = false;
+                        st.raw_hashes = None;
+                        code.push(b'"');
+                        for _ in 0..h {
+                            code.push(b' ');
+                        }
+                        i += 1 + h;
+                    } else {
+                        code.push(b' ');
+                        i += 1;
+                    }
+                }
+            }
+            continue;
+        }
+        if b[i..].starts_with(b"//") {
+            comment.extend_from_slice(&b[i..]);
+            code.resize(code.len() + (n - i), b' ');
+            break;
+        }
+        if b[i..].starts_with(b"/*") {
+            st.block_depth += 1;
+            code.extend_from_slice(b"  ");
+            i += 2;
+            continue;
+        }
+        if let Some((skip, hashes)) = raw_string_open(&b[i..], i == 0 || !is_word_byte(b[i - 1])) {
+            st.in_str = true;
+            st.raw_hashes = Some(hashes);
+            code.resize(code.len() + skip, b' ');
+            i += skip;
+            continue;
+        }
+        if b[i] == b'"' {
+            st.in_str = true;
+            st.raw_hashes = None;
+            code.push(b'"');
+            i += 1;
+            continue;
+        }
+        if b[i] == b'\'' {
+            if let Some(end) = char_literal_end(&b[i..]) {
+                code.push(b'\'');
+                for _ in 0..end.saturating_sub(2) {
+                    code.push(b' ');
+                }
+                code.push(b'\'');
+                i += end;
+                continue;
+            }
+            code.push(b'\'');
+            i += 1;
+            continue;
+        }
+        code.push(b[i]);
+        i += 1;
+    }
+    Line {
+        raw: raw.to_string(),
+        code: String::from_utf8_lossy(&code).into_owned(),
+        comment: String::from_utf8_lossy(&comment).into_owned(),
+    }
+}
+
+/// If `b` opens a raw (or byte-raw) string literal at a word boundary,
+/// return `(opener_len, hash_count)` (`r##"` → `(4, 2)`). The opener
+/// must not be glued to a preceding identifier byte (`prev_boundary`).
+fn raw_string_open(b: &[u8], prev_boundary: bool) -> Option<(usize, usize)> {
+    if !prev_boundary {
+        return None;
+    }
+    let mut i = 0;
+    if b.first() == Some(&b'b') {
+        i += 1;
+    }
+    if b.get(i) != Some(&b'r') {
+        return None;
+    }
+    i += 1;
+    let hashes = b[i..].iter().take_while(|&&c| c == b'#').count();
+    i += hashes;
+    if b.get(i) == Some(&b'"') {
+        Some((i + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// Distinguish a char literal (`'x'`, `'\n'`) from a lifetime (`'a`).
+/// Returns the total byte length of the literal if it is one. Heuristic:
+/// scan ahead a few bytes; a closing quote before any
+/// delimiter/whitespace byte means char literal.
+fn char_literal_end(b: &[u8]) -> Option<usize> {
+    debug_assert_eq!(b.first(), Some(&b'\''));
+    if b.get(1) == Some(&b'\\') {
+        // Escaped char: the byte after the backslash is part of the
+        // escape (`'\''`!), so the closing quote starts at index 3.
+        for (j, &c) in b.iter().enumerate().skip(3).take(10) {
+            if c == b'\'' {
+                return Some(j + 1);
+            }
+        }
+        return None;
+    }
+    for (j, &c) in b.iter().enumerate().skip(1).take(8) {
+        match c {
+            b'\'' if j > 1 || !b.get(1).is_some_and(|&x| x == b'\'') => return Some(j + 1),
+            b' ' | b'\t' | b',' | b';' | b':' | b')' | b'>' | b'(' | b'<' | b'&' | b'=' => {
+                return None
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+pub fn is_word_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Find `needle` in `hay` at identifier-word boundaries (the byte before
+/// and after the match must not be `[A-Za-z0-9_]`).
+pub fn find_word(hay: &str, needle: &str) -> Option<usize> {
+    let h = hay.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(needle).map(|p| p + from) {
+        let before_ok = pos == 0 || !is_word_byte(h[pos - 1]);
+        let end = pos + needle.len();
+        let after_ok = end >= h.len() || !is_word_byte(h[end]);
+        if before_ok && after_ok {
+            return Some(pos);
+        }
+        from = pos + 1;
+    }
+    None
+}
+
+/// The identifier starting at byte `at` (empty if none).
+pub fn ident_at(s: &str, at: usize) -> &str {
+    let b = s.as_bytes();
+    let mut end = at;
+    while end < b.len() && is_word_byte(b[end]) {
+        end += 1;
+    }
+    &s[at..end]
+}
+
+/// Skip ASCII whitespace from `at`.
+pub fn skip_ws(s: &str, mut at: usize) -> usize {
+    let b = s.as_bytes();
+    while at < b.len() && (b[at] == b' ' || b[at] == b'\t') {
+        at += 1;
+    }
+    at
+}
+
+/// 0-based indices of lines inside `#[cfg(test)]`-style `mod` blocks
+/// (including `#[cfg(all(test, not(loom)))]`); the repo's production
+/// disciplines do not extend into unit-test modules.
+pub fn test_regions(lines: &[Line]) -> Vec<bool> {
+    let mut skip = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending_attr = false;
+    let mut region_floor: Option<i64> = None;
+    for (i, l) in lines.iter().enumerate() {
+        let code = &l.code;
+        if let Some(floor) = region_floor {
+            skip[i] = true;
+            depth += brace_delta(code);
+            if depth <= floor {
+                region_floor = None;
+            }
+            continue;
+        }
+        if is_test_cfg_attr(code) {
+            pending_attr = true;
+        } else if pending_attr && find_word(code, "mod").is_some() {
+            skip[i] = true;
+            let floor = depth;
+            depth += brace_delta(code);
+            if code.contains('{') && depth > floor {
+                region_floor = Some(floor);
+            }
+            pending_attr = false;
+            continue;
+        } else if pending_attr && !code.trim().is_empty() && !l.is_attr_only() {
+            pending_attr = false;
+        }
+        depth += brace_delta(code);
+    }
+    skip
+}
+
+fn brace_delta(code: &str) -> i64 {
+    let opens = code.bytes().filter(|&c| c == b'{').count() as i64;
+    let closes = code.bytes().filter(|&c| c == b'}').count() as i64;
+    opens - closes
+}
+
+/// A `#[cfg(…)]` attribute that positively selects `test` builds.
+fn is_test_cfg_attr(code: &str) -> bool {
+    let c = code.trim();
+    if !(c.starts_with("#[cfg(") || c.starts_with("#![cfg(")) {
+        return false;
+    }
+    let squeezed: String = c.bytes().filter(|&b| b != b' ').map(|b| b as char).collect();
+    if squeezed.contains("not(test") {
+        return false;
+    }
+    find_word(&squeezed, "test").is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_line_comment_and_string() {
+        let ls = mask("let x = \"std::sync::atomic\"; // std::sync::atomic");
+        assert!(!ls[0].code.contains("std::sync::atomic"));
+        assert!(ls[0].comment.contains("std::sync::atomic"));
+    }
+
+    #[test]
+    fn masks_nested_block_comment() {
+        let ls = mask("a /* x /* y */ z */ b\nplain");
+        assert!(ls[0].code.contains('a') && ls[0].code.contains('b'));
+        assert!(!ls[0].code.contains('y'));
+        assert_eq!(ls[1].code, "plain");
+    }
+
+    #[test]
+    fn block_comment_spans_lines() {
+        let ls = mask("/* unsafe\nstill unsafe */ code");
+        assert!(!ls[0].code.contains("unsafe"));
+        assert!(!ls[1].code.contains("unsafe"));
+        assert!(ls[1].code.contains("code"));
+    }
+
+    #[test]
+    fn raw_string_masked() {
+        let ls = mask("let s = r#\"unsafe \" quote\"# + x;");
+        assert!(!ls[0].code.contains("unsafe"));
+        assert!(ls[0].code.contains("+ x"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let ls = mask("fn f<'a>(x: &'a str) -> char { 'u' }");
+        assert!(ls[0].code.contains("'a>"), "lifetime untouched");
+        assert!(!ls[0].code.contains('u') || !ls[0].code.contains("'u'"));
+        let ls = mask("let c = '\\n'; let l: &'static str = s;");
+        assert!(ls[0].code.contains("'static"));
+    }
+
+    #[test]
+    fn escaped_quote_char_literal() {
+        let ls = mask("if c == '\\'' { skip(); } // unsafe in comment");
+        assert!(ls[0].code.contains("skip();"), "code after the literal survives");
+        assert!(!ls[0].code.contains("unsafe"));
+        assert!(ls[0].comment.contains("unsafe"));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(find_word("unsafe {", "unsafe").is_some());
+        assert!(find_word("deny(unsafe_op_in_unsafe_fn)", "unsafe").is_none());
+        assert!(find_word("an unsafe_thing", "unsafe").is_none());
+    }
+
+    #[test]
+    fn test_region_detection() {
+        let src = "\
+fn prod() {}
+#[cfg(test)]
+mod tests {
+    fn t() { let _ = 1; }
+}
+fn prod2() {}
+";
+        let ls = mask(src);
+        let skip = test_regions(&ls);
+        assert!(!skip[0]);
+        assert!(skip[2] && skip[3] && skip[4]);
+        assert!(!skip[5]);
+    }
+
+    #[test]
+    fn cfg_all_test_is_a_test_region() {
+        let ls = mask("#[cfg(all(test, not(loom)))]\nmod tests {\n  x\n}\n");
+        let skip = test_regions(&ls);
+        assert!(skip[1] && skip[2]);
+    }
+
+    #[test]
+    fn not_test_is_not_a_test_region() {
+        let ls = mask("#[cfg(not(test))]\nmod prod {\n  x\n}\n");
+        let skip = test_regions(&ls);
+        assert!(!skip[1] && !skip[2]);
+    }
+}

@@ -1,0 +1,446 @@
+//! # ffaudit — enforced domain-invariant static analysis
+//!
+//! The fastflow crate's correctness story rests on disciplines that
+//! `rustc` cannot see: every atomic goes through the `crate::sync` loom
+//! facade, every `unsafe` carries a SAFETY argument, every relaxed
+//! memory ordering names the loom model that exercises it, pooled
+//! buffers flow back to their pools, and SPSC endpoints are never
+//! cloned. PR 6 established those disciplines by hand; `ffaudit` makes
+//! them *enforced*: a zero-dependency line/token scanner over
+//! `rust/src/` that fails CI on drift.
+//!
+//! See [`rules::Rule`] for the catalog (R1–R6). Escape hatches — an
+//! inline `// ffaudit: allow(<rule>)` and the committed
+//! `allowlist.txt` — exist for documented divergences; the allowlist
+//! target is empty.
+
+pub mod lex;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use rules::{check_file, FileCtx, LoomInfo, RawFinding, Rule, ALL_RULES};
+
+/// Scanner configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Repo root: the directory containing `rust/src` and
+    /// `rust/tests/loom`.
+    pub root: PathBuf,
+    /// Enabled rules (default: all six).
+    pub rules: Vec<Rule>,
+    /// Allowlist file; `None` means no allowlist.
+    pub allowlist: Option<PathBuf>,
+}
+
+impl Config {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        Config {
+            root: root.into(),
+            rules: ALL_RULES.to_vec(),
+            allowlist: None,
+        }
+    }
+}
+
+/// A confirmed (post-suppression) violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub msg: String,
+}
+
+/// One `<rule> <path>[:<line>]` allowlist entry.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: Rule,
+    pub path: String,
+    pub line: Option<usize>,
+    /// 1-based line in the allowlist file, for stale reporting.
+    pub src_line: usize,
+}
+
+impl AllowEntry {
+    fn matches(&self, f: &Finding) -> bool {
+        self.rule == f.rule && self.path == f.file && self.line.map_or(true, |n| n == f.line)
+    }
+}
+
+/// Parse an allowlist: `#` comments, blank lines, and
+/// `<rule> <path>[:<line>]` entries.
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(rule_tok), Some(path_tok)) = (it.next(), it.next()) else {
+            return Err(format!("allowlist line {}: expected `<rule> <path>[:<line>]`", i + 1));
+        };
+        let rule = Rule::parse(rule_tok)
+            .ok_or_else(|| format!("allowlist line {}: unknown rule `{rule_tok}`", i + 1))?;
+        let (path, line_no) = match path_tok.rsplit_once(':') {
+            Some((p, n)) if n.bytes().all(|b| b.is_ascii_digit()) && !n.is_empty() => {
+                let n: usize = n
+                    .parse()
+                    .map_err(|_| format!("allowlist line {}: bad line number", i + 1))?;
+                (p.to_string(), Some(n))
+            }
+            _ => (path_tok.to_string(), None),
+        };
+        out.push(AllowEntry {
+            rule,
+            path,
+            line: line_no,
+            src_line: i + 1,
+        });
+    }
+    Ok(out)
+}
+
+/// The result of one audit run.
+#[derive(Debug)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub suppressed_inline: usize,
+    pub suppressed_allowlist: usize,
+    /// Allowlist entries that matched nothing — the allowlist must
+    /// shrink with the code, so these fail the run too.
+    pub stale_allowlist: Vec<AllowEntry>,
+    pub files_scanned: usize,
+    pub rules: Vec<Rule>,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty() && self.stale_allowlist.is_empty()
+    }
+
+    /// Human-readable report.
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&format!(
+                "{} {:<9} {}:{}  {}\n",
+                f.rule.id(),
+                f.rule.name(),
+                f.file,
+                f.line,
+                f.msg
+            ));
+        }
+        for e in &self.stale_allowlist {
+            s.push_str(&format!(
+                "stale allowlist entry (line {}): {} {}{} matches nothing — remove it\n",
+                e.src_line,
+                e.rule.name(),
+                e.path,
+                e.line.map(|n| format!(":{n}")).unwrap_or_default()
+            ));
+        }
+        s.push_str(&format!(
+            "ffaudit: {} finding(s) across {} file(s), {} rule(s); {} suppressed inline, {} \
+             via allowlist{}\n",
+            self.findings.len(),
+            self.files_scanned,
+            self.rules.len(),
+            self.suppressed_inline,
+            self.suppressed_allowlist,
+            if self.stale_allowlist.is_empty() {
+                String::new()
+            } else {
+                format!("; {} stale allowlist entr(ies)", self.stale_allowlist.len())
+            }
+        ));
+        s
+    }
+
+    /// Machine-readable report (`artifacts/audit.json`), hand-rolled.
+    pub fn render_json(&self) -> String {
+        let mut s = String::from("{\n  \"schema\": \"ffaudit/1\",\n");
+        s.push_str(&format!("  \"clean\": {},\n", self.clean()));
+        s.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        s.push_str("  \"rules\": [");
+        for (i, r) in self.rules.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{}\"", r.id()));
+        }
+        s.push_str("],\n  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            s.push_str(if i > 0 { ",\n    " } else { "\n    " });
+            s.push_str(&format!(
+                "{{\"rule\": \"{}\", \"name\": \"{}\", \"file\": \"{}\", \"line\": {}, \
+                 \"msg\": \"{}\"}}",
+                f.rule.id(),
+                f.rule.name(),
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.msg)
+            ));
+        }
+        if !self.findings.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("],\n");
+        s.push_str(&format!(
+            "  \"suppressed\": {{\"inline\": {}, \"allowlist\": {}}},\n",
+            self.suppressed_inline, self.suppressed_allowlist
+        ));
+        s.push_str("  \"stale_allowlist\": [");
+        for (i, e) in self.stale_allowlist.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"rule\": \"{}\", \"path\": \"{}\", \"line\": {}}}",
+                e.rule.id(),
+                json_escape(&e.path),
+                e.line.map(|n| n.to_string()).unwrap_or_else(|| "null".into())
+            ));
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Walk upward from `start` to the first directory containing
+/// `rust/src` — lets the binary run from anywhere in the tree.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut cur = Some(start);
+    while let Some(d) = cur {
+        if d.join("rust").join("src").is_dir() {
+            return Some(d.to_path_buf());
+        }
+        cur = d.parent();
+    }
+    None
+}
+
+/// Rule keys named by `// ffaudit: allow(...)` in this comment.
+fn inline_allows(comment: &str) -> Vec<Rule> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = comment[from..].find("ffaudit:").map(|p| p + from) {
+        let rest = comment[pos + "ffaudit:".len()..].trim_start();
+        if let Some(inner) = rest.strip_prefix("allow(") {
+            if let Some(close) = inner.find(')') {
+                for tok in inner[..close].split(',') {
+                    if let Some(r) = Rule::parse(tok) {
+                        out.push(r);
+                    }
+                }
+            }
+        }
+        from = pos + "ffaudit:".len();
+    }
+    out
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = rd
+        .map(|e| e.map(|e| e.path()))
+        .collect::<Result<_, _>>()
+        .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    let rel = p.strip_prefix(root).unwrap_or(p);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn load_loom(root: &Path) -> Result<LoomInfo, String> {
+    let dir = root.join("rust").join("tests").join("loom");
+    let mut info = LoomInfo::default();
+    if !dir.is_dir() {
+        return Ok(info);
+    }
+    let mut files = Vec::new();
+    walk(&dir, &mut files)?;
+    for f in files {
+        let stem = f
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let text =
+            fs::read_to_string(&f).map_err(|e| format!("read {}: {e}", f.display()))?;
+        if stem != "main" {
+            info.stems.push(stem);
+        }
+        info.text.push_str(&text);
+        info.text.push('\n');
+    }
+    info.stems.sort();
+    Ok(info)
+}
+
+/// Run the audit under `cfg.root`.
+pub fn scan(cfg: &Config) -> Result<Report, String> {
+    let src = cfg.root.join("rust").join("src");
+    if !src.is_dir() {
+        return Err(format!("no rust/src under {}", cfg.root.display()));
+    }
+    let loom = load_loom(&cfg.root)?;
+    let mut files = Vec::new();
+    walk(&src, &mut files)?;
+
+    let mut findings = Vec::new();
+    let mut suppressed_inline = 0usize;
+    for path in &files {
+        let rel = rel_path(&cfg.root, path);
+        let text =
+            fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let lines = lex::mask(&text);
+        let skip = lex::test_regions(&lines);
+        let ctx = FileCtx {
+            rel: &rel,
+            lines: &lines,
+            skip: &skip,
+            loom: &loom,
+        };
+        let mut raw: Vec<RawFinding> = Vec::new();
+        check_file(&ctx, &cfg.rules, &mut raw);
+        for r in raw {
+            // An allow applies on the finding's own line or anywhere in
+            // the contiguous comment block directly above it, so a
+            // multi-line justification can end (or start) with the tag.
+            let mut allowed = inline_allows(&lines[r.line].comment).contains(&r.rule);
+            let mut j = r.line;
+            let mut hops = 0;
+            while !allowed && j > 0 && hops < 32 {
+                j -= 1;
+                hops += 1;
+                allowed = inline_allows(&lines[j].comment).contains(&r.rule);
+                if !lines[j].is_comment_only() {
+                    break;
+                }
+            }
+            if allowed {
+                suppressed_inline += 1;
+                continue;
+            }
+            findings.push(Finding {
+                rule: r.rule,
+                file: rel.clone(),
+                line: r.line + 1,
+                msg: r.msg,
+            });
+        }
+    }
+    findings.sort_by(|a, b| (a.rule, &a.file, a.line).cmp(&(b.rule, &b.file, b.line)));
+
+    // Allowlist pass: matched entries suppress findings; unmatched
+    // entries are stale and fail the run.
+    let mut suppressed_allowlist = 0usize;
+    let mut stale_allowlist = Vec::new();
+    if let Some(alp) = &cfg.allowlist {
+        let text = fs::read_to_string(alp)
+            .map_err(|e| format!("read allowlist {}: {e}", alp.display()))?;
+        let entries = parse_allowlist(&text)?;
+        let mut used = vec![false; entries.len()];
+        findings.retain(|f| {
+            let hit = entries.iter().position(|e| e.matches(f));
+            if let Some(k) = hit {
+                used[k] = true;
+                suppressed_allowlist += 1;
+                false
+            } else {
+                true
+            }
+        });
+        for (k, e) in entries.into_iter().enumerate() {
+            if !used[k] {
+                stale_allowlist.push(e);
+            }
+        }
+    }
+
+    Ok(Report {
+        findings,
+        suppressed_inline,
+        suppressed_allowlist,
+        stale_allowlist,
+        files_scanned: files.len(),
+        rules: cfg.rules.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowlist_grammar() {
+        let al = parse_allowlist(
+            "# comment\n\nfacade rust/src/a.rs\nR3 rust/src/b.rs:12\nordering rust/src/c.rs\n",
+        )
+        .unwrap();
+        assert_eq!(al.len(), 3);
+        assert_eq!(al[0].rule, Rule::Facade);
+        assert_eq!(al[1].rule, Rule::Ordering);
+        assert_eq!(al[1].line, Some(12));
+        assert!(al[2].line.is_none());
+        assert!(parse_allowlist("bogus rust/src/a.rs\n").is_err());
+    }
+
+    #[test]
+    fn inline_allow_grammar() {
+        assert_eq!(inline_allows("// ffaudit: allow(recycle)"), vec![Rule::Recycle]);
+        assert_eq!(
+            inline_allows("// ffaudit: allow(facade, R3) — reason"),
+            vec![Rule::Facade, Rule::Ordering]
+        );
+        assert!(inline_allows("// ffaudit: allow()").is_empty());
+        assert!(inline_allows("// plain comment").is_empty());
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn module_paths() {
+        assert_eq!(rules::module_path("rust/src/spsc/bounded.rs").as_deref(), Some("spsc::bounded"));
+        assert_eq!(rules::module_path("rust/src/farm/mod.rs").as_deref(), Some("farm"));
+        assert_eq!(rules::module_path("rust/src/lib.rs"), None);
+        assert_eq!(rules::module_path("rust/src/util.rs").as_deref(), Some("util"));
+    }
+}

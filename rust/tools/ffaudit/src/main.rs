@@ -1,0 +1,157 @@
+//! `ffaudit` CLI — run the audit, print the report, emit JSON.
+//!
+//! Exit codes: 0 clean, 1 findings or stale allowlist entries,
+//! 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use ffaudit::rules::{Rule, ALL_RULES};
+use ffaudit::{find_root, scan, Config};
+
+const USAGE: &str = "\
+ffaudit — enforced domain-invariant static analysis for the fastflow crate
+
+USAGE:
+    ffaudit [OPTIONS]
+
+OPTIONS:
+    --root <dir>        repo root (default: discovered upward from the cwd)
+    --json <path>       write the machine-readable report to <path>
+    --allowlist <path>  allowlist file (default: rust/tools/ffaudit/allowlist.txt
+                        under the root, when present; `none` disables)
+    --rules <list>      comma-separated rule subset, by id or name
+                        (e.g. `R1,safety,ordering`; default: all)
+    --list-rules        print the rule catalog and exit
+    --quiet             print only the summary line
+    -h, --help          this help
+";
+
+struct Args {
+    root: Option<PathBuf>,
+    json: Option<PathBuf>,
+    allowlist: Option<String>,
+    rules: Option<String>,
+    list_rules: bool,
+    quiet: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        root: None,
+        json: None,
+        allowlist: None,
+        rules: None,
+        list_rules: false,
+        quiet: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut need = |name: &str| {
+            it.next().ok_or_else(|| format!("{name} requires a value"))
+        };
+        match a.as_str() {
+            "--root" => args.root = Some(PathBuf::from(need("--root")?)),
+            "--json" => args.json = Some(PathBuf::from(need("--json")?)),
+            "--allowlist" => args.allowlist = Some(need("--allowlist")?),
+            "--rules" => args.rules = Some(need("--rules")?),
+            "--list-rules" => args.list_rules = true,
+            "--quiet" => args.quiet = true,
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(args)
+}
+
+fn run() -> Result<bool, String> {
+    let args = parse_args()?;
+    if args.list_rules {
+        for r in ALL_RULES {
+            println!("{} {:<9} {}", r.id(), r.name(), r.describe());
+        }
+        return Ok(true);
+    }
+
+    let root = match args.root {
+        Some(r) => r,
+        None => {
+            let cwd = std::env::current_dir().map_err(|e| format!("cwd: {e}"))?;
+            find_root(&cwd).ok_or_else(|| {
+                "no rust/src found here or above; pass --root".to_string()
+            })?
+        }
+    };
+
+    let mut cfg = Config::new(&root);
+    if let Some(list) = &args.rules {
+        let mut rules = Vec::new();
+        for tok in list.split(',') {
+            let r = Rule::parse(tok).ok_or_else(|| {
+                format!(
+                    "unknown rule `{}` (valid: {})",
+                    tok.trim(),
+                    ALL_RULES
+                        .iter()
+                        .map(|r| format!("{}/{}", r.id(), r.name()))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+            if !rules.contains(&r) {
+                rules.push(r);
+            }
+        }
+        if rules.is_empty() {
+            return Err("--rules selected nothing".to_string());
+        }
+        cfg.rules = rules;
+    }
+
+    cfg.allowlist = match args.allowlist.as_deref() {
+        Some("none") => None,
+        Some(p) => Some(PathBuf::from(p)),
+        None => {
+            let default = root.join("rust/tools/ffaudit/allowlist.txt");
+            default.is_file().then_some(default)
+        }
+    };
+
+    let report = scan(&cfg)?;
+
+    if let Some(jp) = &args.json {
+        if let Some(parent) = jp.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("mkdir {}: {e}", parent.display()))?;
+            }
+        }
+        std::fs::write(jp, report.render_json())
+            .map_err(|e| format!("write {}: {e}", jp.display()))?;
+    }
+
+    let text = report.render_text();
+    if args.quiet {
+        if let Some(last) = text.lines().last() {
+            println!("{last}");
+        }
+    } else {
+        print!("{text}");
+    }
+    Ok(report.clean())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("ffaudit: error: {e}");
+            eprintln!("run with --help for usage");
+            ExitCode::from(2)
+        }
+    }
+}

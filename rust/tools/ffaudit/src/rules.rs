@@ -1,0 +1,567 @@
+//! The rule catalog (R1–R6): the crate's concurrency disciplines,
+//! phrased as line-level checks over masked source (see [`crate::lex`]).
+//!
+//! Every rule is individually toggleable and has two escape hatches:
+//! an inline `// ffaudit: allow(<rule>)` on (or in the comment block
+//! directly above) the
+//! finding line, and the committed allowlist file (see
+//! [`crate::Allowlist`]). The allowlist target is **empty** — escapes
+//! are for documented, reviewed divergences only.
+
+use crate::lex::{find_word, ident_at, skip_ws, Line};
+
+/// One enforced discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// R1 — facade discipline: no `std::sync::atomic` /
+    /// `core::sync::atomic` / raw `std::thread` parking / `loom::`
+    /// outside `sync.rs`, so every atomic is loom-switchable.
+    Facade,
+    /// R2 — SAFETY discipline: every `unsafe` is adjacent to a
+    /// `// SAFETY:` comment (or a `# Safety` doc section).
+    Safety,
+    /// R3 — ordering justification: every non-SeqCst `Ordering::` use
+    /// carries an `// ordering:` tag naming a loom model present in
+    /// `rust/tests/loom/` (or the pseudo-model `stat`).
+    Ordering,
+    /// R4 — loom coverage map: every module importing `crate::sync`
+    /// atomics is named in at least one loom model.
+    Coverage,
+    /// R5 — recycling discipline: a module drawing pooled buffers
+    /// (`take_buf`/`take_batch_buf`) must have a `recycle*` /
+    /// `BatchReturner` return path.
+    Recycle,
+    /// R6 — endpoint discipline: SPSC endpoint types must not be
+    /// `Clone`, and `unsafe impl Send/Sync` requires adjacent SAFETY.
+    Endpoint,
+}
+
+pub const ALL_RULES: [Rule; 6] = [
+    Rule::Facade,
+    Rule::Safety,
+    Rule::Ordering,
+    Rule::Coverage,
+    Rule::Recycle,
+    Rule::Endpoint,
+];
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::Facade => "R1",
+            Rule::Safety => "R2",
+            Rule::Ordering => "R3",
+            Rule::Coverage => "R4",
+            Rule::Recycle => "R5",
+            Rule::Endpoint => "R6",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::Facade => "facade",
+            Rule::Safety => "safety",
+            Rule::Ordering => "ordering",
+            Rule::Coverage => "coverage",
+            Rule::Recycle => "recycle",
+            Rule::Endpoint => "endpoint",
+        }
+    }
+
+    pub fn describe(self) -> &'static str {
+        match self {
+            Rule::Facade => {
+                "no std::sync::atomic / raw thread parking / loom:: outside sync.rs \
+                 (every atomic must be loom-switchable)"
+            }
+            Rule::Safety => "every `unsafe` carries an adjacent SAFETY comment",
+            Rule::Ordering => {
+                "every non-SeqCst Ordering:: names a loom model (or `stat`) in an \
+                 `// ordering:` tag"
+            }
+            Rule::Coverage => {
+                "every module importing crate::sync atomics is named in a loom model \
+                 under rust/tests/loom/"
+            }
+            Rule::Recycle => {
+                "modules drawing pooled buffers (take_buf) keep a recycle/BatchReturner \
+                 return path"
+            }
+            Rule::Endpoint => {
+                "SPSC endpoint types are never Clone; unsafe impl Send/Sync requires \
+                 adjacent SAFETY"
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rule> {
+        let s = s.trim();
+        ALL_RULES
+            .iter()
+            .copied()
+            .find(|r| r.id().eq_ignore_ascii_case(s) || r.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// What the loom suite looks like, for R3/R4 cross-checks.
+#[derive(Debug, Default)]
+pub struct LoomInfo {
+    /// File stems under `rust/tests/loom/` (minus `main`), the valid
+    /// `// ordering:` model names.
+    pub stems: Vec<String>,
+    /// Concatenated loom-suite source, searched for module mentions.
+    pub text: String,
+}
+
+/// The `ordering:` pseudo-model for monotonic statistics counters and
+/// single-writer cells read only behind an external happens-before
+/// barrier — sites that rely on *no* inter-thread ordering.
+pub const STAT_MODEL: &str = "stat";
+
+/// A rule hit before suppression is applied.
+#[derive(Debug, Clone)]
+pub struct RawFinding {
+    pub rule: Rule,
+    /// 0-based line index.
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Per-file inputs shared by all rules.
+pub struct FileCtx<'a> {
+    /// Repo-relative path with forward slashes.
+    pub rel: &'a str,
+    pub lines: &'a [Line],
+    /// `test_regions` mask.
+    pub skip: &'a [bool],
+    pub loom: &'a LoomInfo,
+}
+
+impl FileCtx<'_> {
+    fn is_sync_facade(&self) -> bool {
+        self.rel == "rust/src/sync.rs"
+    }
+
+    /// Active (non-test-module) lines.
+    fn active(&self) -> impl Iterator<Item = (usize, &Line)> {
+        self.lines
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.skip[*i])
+    }
+}
+
+/// Run the enabled rules over one file.
+pub fn check_file(ctx: &FileCtx<'_>, enabled: &[Rule], out: &mut Vec<RawFinding>) {
+    for &rule in enabled {
+        match rule {
+            Rule::Facade => facade(ctx, out),
+            Rule::Safety => safety(ctx, out),
+            Rule::Ordering => ordering(ctx, out),
+            Rule::Coverage => coverage(ctx, out),
+            Rule::Recycle => recycle(ctx, out),
+            Rule::Endpoint => endpoint(ctx, out),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R1
+
+fn facade(ctx: &FileCtx<'_>, out: &mut Vec<RawFinding>) {
+    if ctx.is_sync_facade() {
+        return;
+    }
+    for (i, l) in ctx.active() {
+        let code = &l.code;
+        let hit = if code.contains("std::sync::atomic") {
+            Some("`std::sync::atomic`")
+        } else if code.contains("core::sync::atomic") {
+            Some("`core::sync::atomic`")
+        } else if code.contains("loom::") {
+            Some("`loom::`")
+        } else if code.contains("std::thread")
+            && (find_word(code, "park").is_some() || find_word(code, "park_timeout").is_some())
+        {
+            Some("raw `std::thread` parking")
+        } else {
+            None
+        };
+        if let Some(what) = hit {
+            out.push(RawFinding {
+                rule: Rule::Facade,
+                line: i,
+                msg: format!(
+                    "{what} bypasses the crate::sync loom facade — atomics here are \
+                     invisible to the model checker"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R2
+
+/// True if an annotation matching `needle` (case-insensitive) sits on
+/// line `idx` or in the contiguous comment/attribute block directly
+/// above it. Code lines for which `in_run` holds are walked through,
+/// so one comment can cover a contiguous run of annotated constructs
+/// (the crate's existing idiom for e.g. paired `with_mut` calls).
+fn adjacent_comment_has(
+    ctx: &FileCtx<'_>,
+    idx: usize,
+    needle: &str,
+    in_run: impl Fn(&str) -> bool,
+) -> bool {
+    let has = |l: &Line| l.comment.to_ascii_lowercase().contains(needle);
+    if has(&ctx.lines[idx]) {
+        return true;
+    }
+    let mut j = idx;
+    let mut hops = 0;
+    while j > 0 && hops < 32 {
+        j -= 1;
+        hops += 1;
+        let l = &ctx.lines[j];
+        let code_trim = l.code.trim();
+        let walkable = l.is_comment_only()
+            || l.is_attr_only()
+            || (!code_trim.is_empty() && in_run(&l.code))
+            || (!code_trim.is_empty()
+                && !code_trim.ends_with(';')
+                && !code_trim.ends_with('{')
+                && !code_trim.ends_with('}'));
+        if !walkable {
+            return false;
+        }
+        if has(l) {
+            return true;
+        }
+    }
+    false
+}
+
+fn has_unsafe(code: &str) -> bool {
+    find_word(code, "unsafe").is_some()
+}
+
+fn safety(ctx: &FileCtx<'_>, out: &mut Vec<RawFinding>) {
+    for (i, l) in ctx.active() {
+        if !has_unsafe(&l.code) {
+            continue;
+        }
+        if !adjacent_comment_has(ctx, i, "safety", has_unsafe) {
+            out.push(RawFinding {
+                rule: Rule::Safety,
+                line: i,
+                msg: "`unsafe` without an adjacent `// SAFETY:` comment (or `# Safety` doc)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R3
+
+const NON_SEQCST: [&str; 4] = [
+    "Ordering::Relaxed",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+];
+
+fn has_non_seqcst(code: &str) -> bool {
+    NON_SEQCST.iter().any(|p| code.contains(p))
+}
+
+/// Parse the model tokens of an `ordering:` tag out of comment text:
+/// everything after `ordering:` up to the first token that is not a
+/// bare model name (prose, em-dash, parenthetical…).
+fn tag_models(comment: &str) -> Option<Vec<String>> {
+    let at = comment.find("ordering:")?;
+    let rest = &comment[at + "ordering:".len()..];
+    let mut models = Vec::new();
+    for tok in rest
+        .split(|c: char| c == ' ' || c == '\t' || c == ',')
+        .filter(|t| !t.is_empty())
+    {
+        let tok = tok.trim_end_matches(|c: char| matches!(c, '.' | ',' | ';' | ':'));
+        if !tok.is_empty()
+            && tok
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+        {
+            models.push(tok.to_string());
+        } else {
+            break;
+        }
+    }
+    if models.is_empty() {
+        None
+    } else {
+        Some(models)
+    }
+}
+
+fn ordering(ctx: &FileCtx<'_>, out: &mut Vec<RawFinding>) {
+    for (i, l) in ctx.active() {
+        if !has_non_seqcst(&l.code) {
+            continue;
+        }
+        // Collect candidate tags: this line's comment, plus the
+        // comment block / annotated run / statement head above.
+        let mut candidates: Vec<Vec<String>> = Vec::new();
+        if let Some(m) = tag_models(&ctx.lines[i].comment) {
+            candidates.push(m);
+        }
+        let mut j = i;
+        let mut hops = 0;
+        while j > 0 && hops < 32 {
+            j -= 1;
+            hops += 1;
+            let lj = &ctx.lines[j];
+            let code_trim = lj.code.trim();
+            let walkable = lj.is_comment_only()
+                || lj.is_attr_only()
+                || (!code_trim.is_empty() && has_non_seqcst(&lj.code))
+                || (!code_trim.is_empty()
+                    && !code_trim.ends_with(';')
+                    && !code_trim.ends_with('{')
+                    && !code_trim.ends_with('}'));
+            if !walkable {
+                break;
+            }
+            if let Some(m) = tag_models(&lj.comment) {
+                candidates.push(m);
+            }
+        }
+        let known = |t: &str| t == STAT_MODEL || ctx.loom.stems.iter().any(|s| s == t);
+        if candidates.iter().any(|m| m.iter().all(|t| known(t))) {
+            continue;
+        }
+        let msg = match candidates.first() {
+            Some(m) => format!(
+                "`// ordering:` names unknown loom model(s) {:?} — files present under \
+                 rust/tests/loom/: {:?}",
+                m.iter()
+                    .filter(|t| !known(t))
+                    .cloned()
+                    .collect::<Vec<_>>(),
+                ctx.loom.stems,
+            ),
+            None => "non-SeqCst Ordering without an `// ordering: <loom-model|stat>` tag"
+                .to_string(),
+        };
+        out.push(RawFinding {
+            rule: Rule::Ordering,
+            line: i,
+            msg,
+        });
+    }
+}
+
+// ---------------------------------------------------------------- R4
+
+/// `rust/src/foo/bar.rs` → `foo::bar`; `foo/mod.rs` → `foo`;
+/// `lib.rs`/`main.rs` → None.
+pub fn module_path(rel: &str) -> Option<String> {
+    let tail = rel.strip_prefix("rust/src/")?;
+    let mut parts: Vec<&str> = tail.split('/').collect();
+    match parts.last().copied() {
+        Some("mod.rs") => {
+            parts.pop();
+        }
+        Some("lib.rs") | Some("main.rs") => return None,
+        Some(last) => {
+            let stem = last.strip_suffix(".rs")?;
+            *parts.last_mut().expect("non-empty") = stem;
+        }
+        None => return None,
+    }
+    if parts.is_empty() {
+        None
+    } else {
+        Some(parts.join("::"))
+    }
+}
+
+fn mentioned(text: &str, path: &str) -> bool {
+    let b = text.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = text[from..].find(path).map(|p| p + from) {
+        let before_ok = pos == 0 || !crate::lex::is_word_byte(b[pos - 1]);
+        let end = pos + path.len();
+        let after_ok = end >= b.len() || !crate::lex::is_word_byte(b[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = pos + 1;
+    }
+    false
+}
+
+fn coverage(ctx: &FileCtx<'_>, out: &mut Vec<RawFinding>) {
+    if ctx.is_sync_facade() {
+        return;
+    }
+    let import_line = ctx
+        .active()
+        .find(|(_, l)| l.code.contains("crate::sync::atomic"))
+        .map(|(i, _)| i);
+    let Some(i) = import_line else { return };
+    let Some(mp) = module_path(ctx.rel) else {
+        return;
+    };
+    if !mentioned(&ctx.loom.text, &mp) {
+        out.push(RawFinding {
+            rule: Rule::Coverage,
+            line: i,
+            msg: format!(
+                "module `{mp}` imports crate::sync atomics but is named in no loom \
+                 model under rust/tests/loom/ — add a model (or a `covers: {mp}` \
+                 line in an existing one that genuinely exercises it)"
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------- R5
+
+fn recycle(ctx: &FileCtx<'_>, out: &mut Vec<RawFinding>) {
+    let mut first_take: Option<usize> = None;
+    let mut has_return = false;
+    for (i, l) in ctx.active() {
+        let code = &l.code;
+        if first_take.is_none() {
+            for name in ["take_buf", "take_batch_buf"] {
+                if let Some(pos) = find_word(code, name) {
+                    let after = skip_ws(code, pos + name.len());
+                    if code.as_bytes().get(after) == Some(&b'(') {
+                        first_take = Some(i);
+                        break;
+                    }
+                }
+            }
+        }
+        if !has_return {
+            // `recycle` is a prefix match (recycle / recycle_after / …).
+            let b = code.as_bytes();
+            let mut from = 0;
+            while let Some(pos) = code[from..].find("recycle").map(|p| p + from) {
+                if pos == 0 || !crate::lex::is_word_byte(b[pos - 1]) {
+                    has_return = true;
+                    break;
+                }
+                from = pos + 1;
+            }
+            if find_word(code, "BatchReturner").is_some() {
+                has_return = true;
+            }
+        }
+    }
+    if let (Some(i), false) = (first_take, has_return) {
+        out.push(RawFinding {
+            rule: Rule::Recycle,
+            line: i,
+            msg: "module draws pooled buffers (take_buf) but has no recycle/BatchReturner \
+                  return path — allocation-free steady state needs buffers to flow back"
+                .to_string(),
+        });
+    }
+}
+
+// ---------------------------------------------------------------- R6
+
+const ENDPOINTS: [&str; 4] = ["Producer", "Consumer", "Sender", "Receiver"];
+
+fn endpoint_name(ident: &str) -> bool {
+    ENDPOINTS.iter().any(|e| ident.ends_with(e))
+}
+
+fn endpoint(ctx: &FileCtx<'_>, out: &mut Vec<RawFinding>) {
+    for (i, l) in ctx.active() {
+        let code = &l.code;
+        // (a) endpoint struct with #[derive(.. Clone ..)] above it.
+        if let Some(pos) = find_word(code, "struct") {
+            let name = ident_at(code, skip_ws(code, pos + "struct".len()));
+            if !name.is_empty() && endpoint_name(name) {
+                let mut j = i;
+                while j > 0 {
+                    j -= 1;
+                    let lj = &ctx.lines[j];
+                    if lj.is_attr_only() {
+                        if find_word(&lj.code, "derive").is_some()
+                            && find_word(&lj.code, "Clone").is_some()
+                        {
+                            out.push(RawFinding {
+                                rule: Rule::Endpoint,
+                                line: j,
+                                msg: format!(
+                                    "SPSC endpoint `{name}` derives Clone — a cloned \
+                                     endpoint breaks the single-producer/single-consumer \
+                                     discipline the ring's safety argument rests on"
+                                ),
+                            });
+                        }
+                        continue;
+                    }
+                    if lj.is_comment_only() {
+                        continue;
+                    }
+                    break;
+                }
+            }
+        }
+        // (b) `impl Clone for <Endpoint>`.
+        if find_word(code, "impl").is_some() && find_word(code, "Clone").is_some() {
+            if let Some(pos) = find_word(code, "for") {
+                let name = ident_at(code, skip_ws(code, pos + "for".len()));
+                if !name.is_empty() && endpoint_name(name) {
+                    out.push(RawFinding {
+                        rule: Rule::Endpoint,
+                        line: i,
+                        msg: format!(
+                            "SPSC endpoint `{name}` implements Clone — a cloned endpoint \
+                             breaks the single-producer/single-consumer discipline"
+                        ),
+                    });
+                }
+            }
+        }
+        // (c) `unsafe impl Send/Sync` requires adjacent SAFETY.
+        if let Some(upos) = find_word(code, "unsafe") {
+            if let Some(ipos) = find_word(&code[upos..], "impl") {
+                let mut at = skip_ws(code, upos + ipos + "impl".len());
+                if code.as_bytes().get(at) == Some(&b'<') {
+                    let mut depth = 0usize;
+                    for (k, c) in code[at..].char_indices() {
+                        match c {
+                            '<' => depth += 1,
+                            '>' => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    at += k + 1;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                    at = skip_ws(code, at);
+                }
+                let name = ident_at(code, at);
+                if (name == "Send" || name == "Sync")
+                    && !adjacent_comment_has(ctx, i, "safety", has_unsafe)
+                {
+                    out.push(RawFinding {
+                        rule: Rule::Endpoint,
+                        line: i,
+                        msg: format!(
+                            "`unsafe impl {name}` without an adjacent SAFETY comment \
+                             stating why the type may cross threads"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Fixture-driven end-to-end tests: every rule fires exactly where
+//! seeded, clean counterparts stay silent, and both escape hatches
+//! (inline allows, the allowlist file) suppress — with stale allowlist
+//! entries failing the run.
+
+use std::path::PathBuf;
+
+use ffaudit::rules::Rule;
+use ffaudit::{scan, Config};
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join(name)
+}
+
+fn locations(report: &ffaudit::Report) -> Vec<(Rule, String, usize)> {
+    report
+        .findings
+        .iter()
+        .map(|f| (f.rule, f.file.clone(), f.line))
+        .collect()
+}
+
+#[test]
+fn every_rule_fires_exactly_where_seeded() {
+    let report = scan(&Config::new(fixture("violations"))).unwrap();
+    let got = locations(&report);
+    let want: Vec<(Rule, String, usize)> = vec![
+        (Rule::Facade, "rust/src/facade_bad.rs".into(), 3),
+        (Rule::Safety, "rust/src/endpoint_bad.rs".into(), 18),
+        (Rule::Safety, "rust/src/safety_bad.rs".into(), 4),
+        (Rule::Ordering, "rust/src/ordering_bad.rs".into(), 6),
+        (Rule::Ordering, "rust/src/ordering_bad.rs".into(), 11),
+        (Rule::Coverage, "rust/src/coverage_bad.rs".into(), 3),
+        (Rule::Recycle, "rust/src/recycle_bad.rs".into(), 4),
+        (Rule::Endpoint, "rust/src/endpoint_bad.rs".into(), 3),
+        (Rule::Endpoint, "rust/src/endpoint_bad.rs".into(), 12),
+        (Rule::Endpoint, "rust/src/endpoint_bad.rs".into(), 18),
+    ];
+    assert_eq!(got, want, "full report:\n{}", report.render_text());
+    assert!(!report.clean());
+}
+
+#[test]
+fn clean_counterparts_stay_silent() {
+    let report = scan(&Config::new(fixture("clean"))).unwrap();
+    assert!(
+        report.clean(),
+        "clean fixture produced findings:\n{}",
+        report.render_text()
+    );
+    assert_eq!(report.suppressed_inline, 0);
+    assert_eq!(report.suppressed_allowlist, 0);
+}
+
+#[test]
+fn rule_subset_only_runs_selected_rules() {
+    let mut cfg = Config::new(fixture("violations"));
+    cfg.rules = vec![Rule::Facade];
+    let report = scan(&cfg).unwrap();
+    let got = locations(&report);
+    assert_eq!(got, vec![(Rule::Facade, "rust/src/facade_bad.rs".into(), 3)]);
+}
+
+#[test]
+fn inline_allows_and_allowlist_suppress() {
+    let mut cfg = Config::new(fixture("suppressed"));
+    cfg.allowlist = Some(fixture("suppressed").join("allow.txt"));
+    let report = scan(&cfg).unwrap();
+    assert!(
+        report.clean(),
+        "suppressed fixture still reports:\n{}",
+        report.render_text()
+    );
+    assert_eq!(report.suppressed_inline, 2, "facade + recycle inline allows");
+    assert_eq!(report.suppressed_allowlist, 1, "safety allowlist entry");
+}
+
+#[test]
+fn without_escapes_the_suppressed_fixture_fires() {
+    // Same tree, no allowlist: the safety finding (the one not covered
+    // by an inline allow) must surface.
+    let report = scan(&Config::new(fixture("suppressed"))).unwrap();
+    let got = locations(&report);
+    assert_eq!(got, vec![(Rule::Safety, "rust/src/worker.rs".into(), 19)]);
+}
+
+#[test]
+fn stale_allowlist_entries_fail_the_run() {
+    let mut cfg = Config::new(fixture("suppressed"));
+    cfg.allowlist = Some(fixture("suppressed").join("stale.txt"));
+    let report = scan(&cfg).unwrap();
+    assert!(report.findings.is_empty(), "line-less entry still matches");
+    assert_eq!(report.suppressed_allowlist, 1);
+    assert_eq!(report.stale_allowlist.len(), 1);
+    assert_eq!(report.stale_allowlist[0].rule, Rule::Ordering);
+    assert!(!report.clean(), "stale entries must fail the audit");
+}
+
+#[test]
+fn json_report_round_trips_the_essentials() {
+    let report = scan(&Config::new(fixture("violations"))).unwrap();
+    let json = report.render_json();
+    assert!(json.contains("\"schema\": \"ffaudit/1\""));
+    assert!(json.contains("\"clean\": false"));
+    assert!(json.contains("rust/src/facade_bad.rs"));
+    assert!(json.contains("\"rule\": \"R6\""));
+    let clean = scan(&Config::new(fixture("clean"))).unwrap();
+    assert!(clean.render_json().contains("\"clean\": true"));
+}

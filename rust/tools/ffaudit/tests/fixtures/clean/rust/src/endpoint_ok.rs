@@ -1,0 +1,9 @@
+//! Clean counterpart: endpoints stay single-owner.
+
+pub struct Producer {
+    slot: usize,
+}
+
+// SAFETY: Producer owns its slot exclusively; the ring transfers
+// ownership of published cells before they are read.
+unsafe impl Send for Producer {}

@@ -1,0 +1,7 @@
+//! Clean counterpart: atomics go through the crate::sync facade.
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn spin_count(c: &AtomicUsize) -> usize {
+    c.load(Ordering::SeqCst)
+}

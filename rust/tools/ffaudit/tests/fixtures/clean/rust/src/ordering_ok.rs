@@ -1,0 +1,13 @@
+//! Clean counterpart: every non-SeqCst ordering names its model.
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    // ordering: stat — monotonic counter, read only for reporting.
+    c.fetch_add(1, Ordering::Relaxed)
+}
+
+pub fn gate(c: &AtomicU64) -> u64 {
+    // ordering: ring — pairs with the publish store in the model.
+    c.load(Ordering::Acquire)
+}

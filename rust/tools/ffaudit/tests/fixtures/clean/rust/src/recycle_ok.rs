@@ -1,0 +1,9 @@
+//! Clean counterpart: pooled buffers flow back.
+
+pub fn fill(handle: &mut crate::alloc::Pool) -> Vec<u8> {
+    handle.take_buf()
+}
+
+pub fn recycle_spares(handle: &mut crate::alloc::Pool, buf: Vec<u8>) {
+    handle.put_back(buf);
+}

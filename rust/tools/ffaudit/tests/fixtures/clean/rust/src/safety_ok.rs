@@ -1,0 +1,8 @@
+//! Clean counterpart: every `unsafe` argues its safety.
+
+pub fn read_first(v: &[u8]) -> u8 {
+    debug_assert!(!v.is_empty());
+    // SAFETY: caller guarantees `v` is non-empty; asserted above in
+    // debug builds.
+    unsafe { *v.get_unchecked(0) }
+}

@@ -1,0 +1,7 @@
+//! Fixture loom model; the model name is this file's stem, `ring`.
+//! covers: facade_ok, ordering_ok
+
+#[test]
+fn ring_model() {
+    let _ = ("fastflow::facade_ok", "fastflow::ordering_ok");
+}

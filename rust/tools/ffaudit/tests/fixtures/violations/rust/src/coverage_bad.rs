@@ -1,0 +1,7 @@
+//! R4 seed: imports crate::sync atomics but is named in no loom model.
+
+use crate::sync::atomic::{AtomicBool, Ordering};
+
+pub fn set(b: &AtomicBool) {
+    b.store(true, Ordering::SeqCst);
+}

@@ -1,0 +1,18 @@
+//! R6 seeds: cloneable endpoints and an unannotated Send impl.
+
+#[derive(Clone)]
+pub struct Producer {
+    slot: usize,
+}
+
+pub struct Receiver {
+    slot: usize,
+}
+
+impl Clone for Receiver {
+    fn clone(&self) -> Self {
+        Receiver { slot: self.slot }
+    }
+}
+
+unsafe impl Send for Producer {}

@@ -1,0 +1,7 @@
+//! R1 seed: bypasses the crate::sync facade.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn spin_count(c: &AtomicUsize) -> usize {
+    c.load(Ordering::SeqCst)
+}

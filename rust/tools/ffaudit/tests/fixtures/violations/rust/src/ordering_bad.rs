@@ -1,0 +1,12 @@
+//! R3 seeds: untagged and wrongly-tagged non-SeqCst orderings.
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    c.fetch_add(1, Ordering::Relaxed)
+}
+
+pub fn gate(c: &AtomicU64) -> u64 {
+    // ordering: no_such_model — names a model that does not exist.
+    c.load(Ordering::Acquire)
+}

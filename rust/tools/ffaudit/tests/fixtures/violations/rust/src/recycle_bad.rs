@@ -1,0 +1,5 @@
+//! R5 seed: draws pooled buffers with no return path.
+
+pub fn fill(handle: &mut crate::alloc::Pool) -> Vec<u8> {
+    handle.take_buf()
+}

@@ -1,0 +1,5 @@
+//! R2 seed: `unsafe` without an adjacent SAFETY comment.
+
+pub fn read_first(v: &[u8]) -> u8 {
+    unsafe { *v.get_unchecked(0) }
+}

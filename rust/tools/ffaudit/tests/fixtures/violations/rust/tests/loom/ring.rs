@@ -1,0 +1,7 @@
+//! Fixture loom model; the model name is this file's stem, `ring`.
+//! covers: ordering_bad
+
+#[test]
+fn ring_model() {
+    let _ = "fastflow::ordering_bad";
+}

@@ -1,0 +1,27 @@
+//! The audit, applied to this repository itself: `cargo test` fails if
+//! `rust/src` drifts from the disciplines — the same gate CI's `audit`
+//! lane enforces, enforced again from tier-1 so it cannot be skipped.
+
+use std::path::PathBuf;
+
+use ffaudit::{scan, Config};
+
+#[test]
+fn repository_passes_its_own_audit() {
+    // rust/tools/ffaudit → tools → rust → repo root.
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(3)
+        .expect("repo root")
+        .to_path_buf();
+    let mut cfg = Config::new(&root);
+    let allowlist = root.join("rust/tools/ffaudit/allowlist.txt");
+    assert!(allowlist.is_file(), "committed allowlist missing");
+    cfg.allowlist = Some(allowlist);
+    let report = scan(&cfg).expect("scan");
+    assert!(
+        report.clean(),
+        "ffaudit found drift in rust/src:\n{}",
+        report.render_text()
+    );
+}
